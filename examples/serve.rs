@@ -1,0 +1,120 @@
+//! Serving scenario: the inference coordinator fronting the accelerator —
+//! batched requests routed over worker engines, each running the full
+//! host-PJRT → MVU-array → host-PJRT pipeline; reports latency percentiles,
+//! throughput and simulated accelerator cycles.
+//!
+//! Run: `make artifacts && cargo run --release --example serve [-- n_requests]`
+
+use std::time::{Duration, Instant};
+
+use barvinn::accel::{System, SystemConfig, SystemExit};
+use barvinn::codegen::{compile_pipelined, CompiledModel, EdgePolicy};
+use barvinn::coordinator::{BatcherConfig, Coordinator, Engine, EngineFactory};
+use barvinn::runtime::{ArtifactStore, HostModule, Runtime};
+use barvinn::sim::Tensor3;
+use barvinn::CLOCK_HZ;
+
+/// Full-stack engine: conv0 + fc on PJRT, conv1..8 on the simulated array.
+struct BarvinnEngine {
+    conv0: HostModule,
+    fc: HostModule,
+    compiled: CompiledModel,
+}
+
+impl BarvinnEngine {
+    fn new(store: &ArtifactStore) -> anyhow::Result<Self> {
+        let rt = Runtime::cpu()?;
+        Ok(BarvinnEngine {
+            conv0: rt.load_hlo_text(&store.hlo_path("conv0"))?,
+            fc: rt.load_hlo_text(&store.hlo_path("fc"))?,
+            compiled: store
+                .model()
+                .and_then(|m| {
+                    compile_pipelined(&m, EdgePolicy::PadInRam).map_err(|e| anyhow::anyhow!(e))
+                })?,
+        })
+    }
+}
+
+impl Engine for BarvinnEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+        images
+            .iter()
+            .map(|img| {
+                let q = self.conv0.run_f32_to_i32(img, &[1, 3, 32, 32]).expect("conv0");
+                let input = Tensor3 { c: 64, h: 32, w: 32, data: q };
+                let mut sys = System::new(SystemConfig::default());
+                self.compiled.load_into(&mut sys, &input);
+                let exit = sys.run();
+                assert_eq!(exit, SystemExit::AllExited, "{:?}", sys.launch_errors());
+                let acts = self.compiled.read_output(&sys, 512);
+                let logits =
+                    self.fc.run_i32_to_f32(&acts.data, &[1, 512, 4, 4]).expect("fc");
+                (logits, sys.total_mvu_busy_cycles())
+            })
+            .collect()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(16);
+    let store = ArtifactStore::open(None)?;
+    let workers = 2;
+    // Engines are built inside their worker threads (PJRT executables are
+    // thread-affine), so each factory re-opens the artifact store.
+    let dir = store.dir.clone();
+    let engines: Vec<EngineFactory> = (0..workers)
+        .map(|_| {
+            let dir = dir.clone();
+            Box::new(move || {
+                let store = ArtifactStore::open(Some(dir.as_path())).expect("artifacts");
+                Box::new(BarvinnEngine::new(&store).expect("engine")) as Box<dyn Engine>
+            }) as EngineFactory
+        })
+        .collect();
+    let mut coord = Coordinator::new(
+        engines,
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+
+    println!("serving {n} requests over {workers} workers...");
+    let mut rng = barvinn::model::zoo::Rng(99);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| {
+            let img: Vec<f32> =
+                (0..3 * 32 * 32).map(|_| rng.range_i32(-128, 127) as f32 / 64.0).collect();
+            coord.submit(img)
+        })
+        .collect();
+    coord.flush();
+    let mut sim_cycles = 0u64;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(300))?;
+        sim_cycles += resp.sim_cycles;
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!(
+        "done: {} completed in {:.2}s wall → {:.2} req/s host-side",
+        snap.completed,
+        wall.as_secs_f64(),
+        snap.completed as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms ({} batches)",
+        snap.p50_us as f64 / 1e3,
+        snap.p99_us as f64 / 1e3,
+        snap.mean_us / 1e3,
+        snap.batches
+    );
+    println!(
+        "simulated accelerator: {} MVU cycles total → {:.0} FPS at 250 MHz\n\
+         (work-conserving, {} cycles/frame)",
+        sim_cycles,
+        CLOCK_HZ as f64 / (sim_cycles as f64 / n as f64 / 8.0),
+        sim_cycles / n as u64 / 8
+    );
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Artifacts written to ``--out`` (default ../artifacts):
+
+* ``conv0.hlo.txt``   — host prologue: f32[1,3,32,32] → int32[1,64,32,32]
+* ``fc.hlo.txt``      — host epilogue: int32[1,512,4,4] → f32[1,10]
+* ``golden.hlo.txt``  — the whole network in one module (e2e oracle)
+* ``bitserial_tile.hlo.txt`` — the L1 Pallas kernel on one 64×64×576 tile
+  (interpret-mode lowering), so the Rust runtime exercises the kernel
+* ``model.json``      — ONNX-lite graph for the code generator
+* ``testvec.json``    — cross-language test vectors
+* ``lsq_accuracy.json`` — Table 1/2 substitution demo results
+
+Python runs ONCE at build time; nothing here is on the request path.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export, model, quantize
+from .kernels import bitserial_matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default elides big
+    # weight tensors as `constant({...})`, which the xla crate's HLO text
+    # parser silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, args, path):
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--lsq-steps", type=int, default=200)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    params = model.make_params()
+
+    img_spec = jax.ShapeDtypeStruct((1, 3, 32, 32), jnp.float32)
+    acts_spec = jax.ShapeDtypeStruct((1, 512, 4, 4), jnp.int32)
+
+    print("lowering artifacts...")
+    lower_and_write(
+        functools.partial(model.conv0_forward, params),
+        (img_spec,),
+        os.path.join(args.out, "conv0.hlo.txt"),
+    )
+    lower_and_write(
+        functools.partial(model.fc_forward, params),
+        (acts_spec,),
+        os.path.join(args.out, "fc.hlo.txt"),
+    )
+    lower_and_write(
+        functools.partial(model.golden_forward, params),
+        (img_spec,),
+        os.path.join(args.out, "golden.hlo.txt"),
+    )
+    # The L1 kernel as its own artifact: one output row of a 64-channel conv
+    # (64 pixels × 576 patch) — the tile shape the MVU consumes.
+    lower_and_write(
+        functools.partial(
+            bitserial_matmul, a_bits=2, w_bits=2, a_signed=False, w_signed=True
+        ),
+        (
+            jax.ShapeDtypeStruct((64, 576), jnp.int32),
+            jax.ShapeDtypeStruct((576, 64), jnp.int32),
+        ),
+        os.path.join(args.out, "bitserial_tile.hlo.txt"),
+    )
+
+    # Model graph for the Rust code generator.
+    export.write_json(export.model_to_json(params), os.path.join(args.out, "model.json"))
+    print("  wrote model.json")
+
+    # Cross-language test vectors.
+    rs = np.random.RandomState(777)
+    image = jnp.asarray(rs.randn(1, 3, 32, 32).astype(np.float32))
+    conv0_q = model.conv0_forward(params, image)
+    final_acts = model.middle_forward(params, conv0_q)
+    logits = model.golden_forward(params, image)
+    tv = export.testvec_to_json(image, conv0_q, final_acts, logits)
+    tv["act_step"] = float(params.act_step)
+    export.write_json(tv, os.path.join(args.out, "testvec.json"))
+    print("  wrote testvec.json")
+
+    # Table 1/2 substitution demo.
+    quantize.main(os.path.join(args.out, "lsq_accuracy.json"), steps=args.lsq_steps)
+    print("aot done.")
+
+
+if __name__ == "__main__":
+    main()

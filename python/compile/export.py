@@ -1,0 +1,65 @@
+"""Export the quantized model to the ONNX-lite JSON the Rust code generator
+ingests (§3.3: "The code generator exports weights to the bit-transposed
+format" — bit-transposition itself happens in rust `codegen::layout`, from
+the integer weights serialized here), plus cross-language test vectors.
+"""
+
+import json
+
+import numpy as np
+
+from .model import Resnet9Params
+
+
+def model_to_json(params: Resnet9Params) -> dict:
+    layers = []
+    for l in params.layers:
+        co, ci, fh, fw = l.weights.shape
+        oh = (l.in_h + 2 - 3) // l.stride + 1
+        layers.append(
+            {
+                "name": l.name,
+                "ci": ci,
+                "co": co,
+                "fh": fh,
+                "fw": fw,
+                "stride": l.stride,
+                "pad": 1,
+                "in_h": l.in_h,
+                "in_w": l.in_w,
+                "aprec": {"bits": l.a_bits, "signed": False},
+                "wprec": {"bits": l.w_bits, "signed": True},
+                "oprec": {"bits": l.o_bits, "signed": False},
+                "relu": True,
+                "weights": l.weights.flatten().tolist(),
+                "scale": l.scale.astype(np.int64).tolist(),
+                "bias": l.bias.tolist(),
+                "quant_msb": l.quant_msb,
+            }
+        )
+        del oh
+    return {
+        "name": "resnet9-cifar10-w2a2",
+        "host_prologue": "conv0",
+        "host_epilogue": "fc",
+        "layers": layers,
+    }
+
+
+def testvec_to_json(image, conv0_q, final_acts, logits) -> dict:
+    """Cross-language vectors: the Rust e2e path checks each seam."""
+    return {
+        "image": np.asarray(image, dtype=np.float64).flatten().tolist(),
+        "image_shape": list(np.asarray(image).shape),
+        "conv0_q": np.asarray(conv0_q).flatten().astype(int).tolist(),
+        "conv0_q_shape": list(np.asarray(conv0_q).shape),
+        "final_acts": np.asarray(final_acts).flatten().astype(int).tolist(),
+        "final_acts_shape": list(np.asarray(final_acts).shape),
+        "golden_logits": np.asarray(logits, dtype=np.float64).flatten().tolist(),
+        "act_step": None,  # filled by aot.py
+    }
+
+
+def write_json(obj: dict, path: str):
+    with open(path, "w") as f:
+        json.dump(obj, f, separators=(",", ":"))

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (Alg. 1) and the
+post-MVP requantization stage, plus their pure-jnp oracles."""
+
+from .bitserial import bitserial_matmul, vmem_bytes
+from .quantser import quantser
+from . import ref
+
+__all__ = ["bitserial_matmul", "vmem_bytes", "quantser", "ref"]

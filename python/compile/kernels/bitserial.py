@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: the bit-serial matrix multiply of Algorithm 1.
+
+The MVU's MVP computes `x · w` by decomposing both operands into bit planes
+and accumulating the partial popcount-products in descending order of
+magnitude through a shift-accumulator. This kernel is the same computation
+expressed for the MXU: each (j, k) bit-plane pair becomes a 1-bit × 1-bit
+matmul (lowered to the systolic array as an int32 matmul of 0/1 matrices),
+and the shift-accumulator becomes a doubling of the accumulator between
+magnitude levels — numerically *identical* to the FPGA datapath, which is
+what lets the pytest suite cross-validate the Rust simulator against the
+same oracle.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA tiles
+64 (lanes) × 64 (VVPs); here the BlockSpec tiles (bm × bn) output blocks
+with the full K dimension resident, sized so x-tile + w-tile + acc fit in
+VMEM. Pallas runs with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU efficiency is estimated statically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plane_sign(bits: int, signed: bool, j: int) -> int:
+    """Sign of bit-plane j: the two's-complement sign plane contributes
+    negatively (Alg. 1 extended to signed operands)."""
+    return -1 if (signed and j == bits - 1) else 1
+
+
+def _bitserial_kernel(x_ref, w_ref, o_ref, *, a_bits, w_bits, a_signed, w_signed):
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    m, _ = x.shape
+    _, n = w.shape
+    acc = jnp.zeros((m, n), jnp.int32)
+    top = (a_bits - 1) + (w_bits - 1)
+    # Descending order of magnitude; shift (double) between levels.
+    for i in range(top, -1, -1):
+        if i != top:
+            acc = acc * 2
+        for j in range(a_bits):
+            k = i - j
+            if k < 0 or k >= w_bits:
+                continue
+            # Bit j of two's complement survives arithmetic shift + mask.
+            xj = jnp.right_shift(x, j) & 1
+            wk = jnp.right_shift(w, k) & 1
+            sign = _plane_sign(a_bits, a_signed, j) * _plane_sign(w_bits, w_signed, k)
+            acc = acc + sign * jnp.dot(xj, wk, preferred_element_type=jnp.int32)
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "w_bits", "a_signed", "w_signed", "block")
+)
+def bitserial_matmul(x, w, *, a_bits, w_bits, a_signed=False, w_signed=True, block=None):
+    """Bit-serial `x @ w` on int32 operands holding `a_bits`/`w_bits`-bit
+    values. Exact: equals `ref.matmul_ref(x, w)` for in-range operands.
+
+    `block`: optional (bm, bn) output tile; defaults to the whole output
+    (single program) which is right for the 64-aligned tiles the MVU uses.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    kern = functools.partial(
+        _bitserial_kernel,
+        a_bits=a_bits,
+        w_bits=w_bits,
+        a_signed=a_signed,
+        w_signed=w_signed,
+    )
+    if block is None:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+            interpret=True,
+        )(x.astype(jnp.int32), w.astype(jnp.int32))
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0, "block must tile the output"
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def vmem_bytes(bm: int, bn: int, k: int) -> int:
+    """Static VMEM footprint estimate of one grid step (int32 operands):
+    x-tile + w-tile + acc. Used by the §Perf notes to pick block shapes
+    under the ~16 MiB VMEM budget of a TPU core."""
+    return 4 * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: the scaler → bias → ReLU → quantizer/serializer
+pipeline stage (§3.1.4), mirroring `rust/src/mvu/{scaler,quantser}`.
+
+Elementwise over the 64-lane output vectors: multiply by the per-channel
+16-bit scaler operand, add the 32-bit bias, ReLU through the comparator,
+then select `out_bits` bits below `msb` with saturation — the integer form
+into which LSQ requantization folds (quant::lsq on the Rust side).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantser_kernel(v_ref, s_ref, b_ref, o_ref, *, msb, out_bits, relu):
+    v = v_ref[...].astype(jnp.int32)
+    s = s_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    y = v * s + b
+    if relu:
+        y = jnp.maximum(y, 0)
+    shift = msb + 1 - out_bits
+    max_code = (1 << out_bits) - 1
+    sel = jnp.right_shift(y, shift) & max_code
+    if msb < 30:
+        # For msb >= 30 no int32 value can exceed the window: no clamp,
+        # matching quant::quantser on the Rust side.
+        sel = jnp.where(y >= jnp.int32(1 << (msb + 1)), max_code, sel)
+    sel = jnp.where(y < 0, 0, sel)
+    o_ref[...] = sel.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("msb", "out_bits", "relu"))
+def quantser(v, scale, bias, *, msb, out_bits, relu=True):
+    """Requantize accumulators `v` [..., C] with per-channel `scale`/`bias`
+    (broadcast over leading dims)."""
+    s = jnp.broadcast_to(scale.astype(jnp.int32), v.shape)
+    b = jnp.broadcast_to(bias.astype(jnp.int32), v.shape)
+    kern = functools.partial(_quantser_kernel, msb=msb, out_bits=out_bits, relu=relu)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(v.shape, jnp.int32),
+        interpret=True,
+    )(v.astype(jnp.int32), s, b)

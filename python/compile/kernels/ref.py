@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the simplest possible statements of the math the MVU datapath
+implements; every kernel (and, through the exported HLO artifacts, the Rust
+simulator) is validated against them.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain integer matmul: the value a bit-serial dot product must equal.
+
+    x: [M, K] int32, w: [K, N] int32 -> [M, N] int32.
+    """
+    return jnp.dot(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def quantser_ref(v, scale, bias, msb, out_bits, relu=True):
+    """The MVU's post-MVP pipeline (3.1.4), exactly as the Rust model:
+
+    y = v*scale + bias (int32, wrapping); optional ReLU;
+    QuantSer with saturation: select bits [msb : msb-out_bits+1],
+    clamping negatives to 0 and overflows to the max code.
+    """
+    v = v.astype(jnp.int32)
+    y = v * scale.astype(jnp.int32) + bias.astype(jnp.int32)
+    if relu:
+        y = jnp.maximum(y, 0)
+    shift = msb + 1 - out_bits
+    max_code = (1 << out_bits) - 1
+    sel = jnp.right_shift(y, shift) & max_code
+    if msb < 30:
+        sel = jnp.where(y >= jnp.int32(1 << (msb + 1)), max_code, sel)
+    sel = jnp.where(y < 0, 0, sel)
+    return sel.astype(jnp.int32)
+
+
+def conv2d_ref(x, w, stride=1, pad=1):
+    """Golden integer conv2d (NCHW x OIHW -> NCHW), int32 accumulation."""
+    import jax.lax as lax
+
+    return lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )

@@ -1,0 +1,231 @@
+"""L2: the quantized plain-CNN ResNet9 of §4.1 in JAX.
+
+The network is split exactly the way the paper deploys it:
+
+* ``conv0`` — first layer, kept in full precision and run on the host
+  (AOT artifact ``conv0.hlo.txt``): fp32 conv + bias + ReLU, then LSQ
+  quantization to the accelerator's activation precision.
+* ``conv1..conv8`` — the 2-bit middle of the network, executed on the MVU
+  array. Here they exist twice: an integer reference path (exact twin of
+  the Rust golden model) and a Pallas path where each conv lowers to the
+  bit-serial kernel via im2col — the two are asserted equal in pytest.
+* ``fc`` — last layer on the host (artifact ``fc.hlo.txt``): dequantize,
+  global average pool, fp32 linear head.
+
+All integer arithmetic is int32 with wrapping semantics, matching the MVU
+pipeline width, so the exported golden model is bit-identical to the Rust
+simulator's output.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bitserial_matmul
+from .kernels.ref import conv2d_ref, quantser_ref
+
+# The plain-CNN ResNet9 schedule reproducing Table 3 (name, ci, co, stride,
+# in_h); all convs are 3×3, pad 1. Mirrors rust model::zoo::RESNET9_SCHEDULE.
+RESNET9_SCHEDULE = [
+    ("conv1", 64, 64, 1, 32),
+    ("conv2", 64, 64, 1, 32),
+    ("conv3", 64, 128, 2, 32),
+    ("conv4", 128, 128, 1, 16),
+    ("conv5", 128, 256, 2, 16),
+    ("conv6", 256, 256, 1, 8),
+    ("conv7", 256, 512, 2, 8),
+    ("conv8", 512, 512, 1, 4),
+]
+
+
+@dataclasses.dataclass
+class QuantLayer:
+    """One accelerator conv layer (integer operands + folded requant)."""
+
+    name: str
+    weights: np.ndarray  # int32 [co, ci, 3, 3]
+    scale: np.ndarray  # uint16 [co]
+    bias: np.ndarray  # int32 [co]
+    stride: int
+    quant_msb: int
+    a_bits: int = 2
+    w_bits: int = 2
+    o_bits: int = 2
+    in_h: int = 32
+    in_w: int = 32
+
+
+@dataclasses.dataclass
+class Resnet9Params:
+    """Full model parameters."""
+
+    conv0_w: np.ndarray  # f32 [64, 3, 3, 3]
+    conv0_b: np.ndarray  # f32 [64]
+    conv0_step: float  # LSQ step for the first quantization
+    layers: List[QuantLayer]
+    fc_w: np.ndarray  # f32 [512, 10]
+    fc_b: np.ndarray  # f32 [10]
+    act_step: float  # dequantization step feeding the head
+
+
+def make_params(seed: int = 12345, a_bits: int = 2, w_bits: int = 2) -> Resnet9Params:
+    """Deterministic synthetic parameters (training happens in
+    ``quantize.train_lsq_demo``; the system-level artifacts need valid
+    operands and exact cross-language reproducibility, not accuracy).
+
+    The QuantSer window of each layer is *calibrated*: activations are
+    propagated through the stack once and `quant_msb` is chosen from the
+    99th percentile of the post-scaler values — the integer analogue of
+    fitting the LSQ step — so codes use the full 2-bit space end-to-end
+    instead of dying to zero under a worst-case bound."""
+    rs = np.random.RandomState(seed)
+    wmin, wmax = -(1 << (w_bits - 1)), (1 << (w_bits - 1)) - 1
+    amax = (1 << a_bits) - 1
+    layers = []
+    # Calibration activations (kept off the exported test-vector seed).
+    q = jnp.asarray(rs.randint(0, amax + 1, size=(1, 64, 32, 32)).astype(np.int32))
+    for name, ci, co, stride, in_h in RESNET9_SCHEDULE:
+        w = rs.randint(wmin, wmax + 1, size=(co, ci, 3, 3)).astype(np.int32)
+        scale = rs.randint(1, 5, size=(co,)).astype(np.uint16)
+        bias = rs.randint(-64, 65, size=(co,)).astype(np.int32)
+        # Calibrate the window on the live activation distribution.
+        acc = conv2d_ref(q, jnp.asarray(w), stride=stride, pad=1)
+        y = jnp.maximum(
+            acc * jnp.asarray(scale.astype(np.int32))[None, :, None, None]
+            + jnp.asarray(bias)[None, :, None, None],
+            0,
+        )
+        p99 = int(np.percentile(np.asarray(y), 99.0))
+        msb = max(p99.bit_length() - 1, a_bits - 1)
+        layer = QuantLayer(
+            name=name,
+            weights=w,
+            scale=scale,
+            bias=bias,
+            stride=stride,
+            quant_msb=msb,
+            a_bits=a_bits,
+            w_bits=w_bits,
+            o_bits=a_bits,
+            in_h=in_h,
+            in_w=in_h,
+        )
+        layers.append(layer)
+        q = quantser_ref(
+            acc,
+            jnp.asarray(scale.astype(np.int32))[None, :, None, None],
+            jnp.asarray(bias)[None, :, None, None],
+            msb,
+            a_bits,
+            relu=True,
+        )
+    return Resnet9Params(
+        conv0_w=(rs.randn(64, 3, 3, 3) * 0.2).astype(np.float32),
+        conv0_b=(rs.randn(64) * 0.1).astype(np.float32),
+        conv0_step=0.5,
+        layers=layers,
+        fc_w=(rs.randn(512, 10) * 0.05).astype(np.float32),
+        fc_b=np.zeros(10, dtype=np.float32),
+        act_step=0.25,
+    )
+
+
+# --- host prologue: conv0 ----------------------------------------------------
+
+
+def conv0_forward(params: Resnet9Params, image):
+    """fp32 first layer + LSQ quantization to a_bits codes.
+
+    image: f32 [1, 3, 32, 32] → int32 codes [1, 64, 32, 32].
+    """
+    y = jax.lax.conv_general_dilated(
+        image,
+        jnp.asarray(params.conv0_w),
+        window_strides=(1, 1),
+        padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    y = y + jnp.asarray(params.conv0_b)[None, :, None, None]
+    y = jnp.maximum(y, 0.0)
+    amax = (1 << params.layers[0].a_bits) - 1
+    q = jnp.clip(jnp.round(y / params.conv0_step), 0, amax)
+    return q.astype(jnp.int32)
+
+
+# --- accelerator middle: conv1..conv8 ---------------------------------------
+
+
+def middle_forward(params: Resnet9Params, q):
+    """Integer reference path: exact twin of the Rust golden model."""
+    for l in params.layers:
+        acc = conv2d_ref(q, jnp.asarray(l.weights), stride=l.stride, pad=1)
+        q = quantser_ref(
+            acc,
+            jnp.asarray(l.scale.astype(np.int32))[None, :, None, None],
+            jnp.asarray(l.bias)[None, :, None, None],
+            l.quant_msb,
+            l.o_bits,
+            relu=True,
+        )
+    return q
+
+
+def _conv_bitserial(q, layer: QuantLayer):
+    """One conv via im2col + the Pallas bit-serial kernel (Alg. 1)."""
+    n, ci, h, w = q.shape
+    assert n == 1
+    patches = jax.lax.conv_general_dilated_patches(
+        q.astype(jnp.int32),
+        filter_shape=(3, 3),
+        window_strides=(layer.stride, layer.stride),
+        padding=[(1, 1), (1, 1)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [1, ci*9, oh, ow]
+    _, ck, oh, ow = patches.shape
+    x = patches.reshape(ck, oh * ow).T  # [oh*ow, ci*9]
+    wmat = jnp.asarray(layer.weights).reshape(layer.weights.shape[0], ck).T
+    acc = bitserial_matmul(
+        x, wmat, a_bits=layer.a_bits, w_bits=layer.w_bits, a_signed=False, w_signed=True
+    )  # [oh*ow, co]
+    return acc.T.reshape(1, layer.weights.shape[0], oh, ow)
+
+
+def middle_forward_pallas(params: Resnet9Params, q):
+    """Same computation with every conv's accumulation running through the
+    L1 Pallas kernel — the path asserted equal to `middle_forward`."""
+    for l in params.layers:
+        acc = _conv_bitserial(q, l)
+        q = quantser_ref(
+            acc,
+            jnp.asarray(l.scale.astype(np.int32))[None, :, None, None],
+            jnp.asarray(l.bias)[None, :, None, None],
+            l.quant_msb,
+            l.o_bits,
+            relu=True,
+        )
+    return q
+
+
+# --- host epilogue: fc -------------------------------------------------------
+
+
+def fc_forward(params: Resnet9Params, q):
+    """Dequantize, global average pool, fp32 linear head.
+
+    q: int32 [1, 512, 4, 4] → logits f32 [1, 10].
+    """
+    x = q.astype(jnp.float32) * params.act_step
+    x = x.mean(axis=(2, 3))  # [1, 512]
+    return x @ jnp.asarray(params.fc_w) + jnp.asarray(params.fc_b)
+
+
+# --- full golden model -------------------------------------------------------
+
+
+def golden_forward(params: Resnet9Params, image):
+    """image f32 [1,3,32,32] → logits f32 [1,10]; the single-HLO golden
+    artifact the Rust e2e example checks against."""
+    return fc_forward(params, middle_forward(params, conv0_forward(params, image)))

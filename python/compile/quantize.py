@@ -1,0 +1,182 @@
+"""Learned Step Size Quantization (LSQ, Esser et al. 2020) in JAX, plus the
+integer folding that maps learned float parameters onto the MVU's
+scaler/bias/QuantSer pipeline — the Python twin of ``rust/src/quant/lsq``.
+
+Also hosts the Table 1/2 accuracy substitution experiment: the paper trains
+ResNet18/CIFAR100 and ResNet9/CIFAR10 for days; here a small CNN is LSQ-
+trained on a synthetic 10-class image problem for a few hundred steps to
+demonstrate the *trend* (quantized ≈ fp32 accuracy at a fraction of the
+size). See DESIGN.md §4 for the substitution rationale.
+"""
+
+import dataclasses
+import functools
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --- LSQ primitives ----------------------------------------------------------
+
+
+def lsq_quantize(x, step, bits, signed=False):
+    """LSQ fake-quantization with the straight-through gradient estimator.
+
+    v = clamp(round(x/step), qmin, qmax) * step, with d(round)≈identity and
+    the step gradient of the LSQ paper.
+    """
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    qmin = -(1 << (bits - 1)) if signed else 0
+
+    @jax.custom_vjp
+    def _q(x, step):
+        v = jnp.clip(jnp.round(x / step), qmin, qmax)
+        return v * step
+
+    def _fwd(x, step):
+        return _q(x, step), (x, step)
+
+    def _bwd(res, g):
+        x, step = res
+        v = x / step
+        inside = (v >= qmin) & (v <= qmax)
+        # STE for x; LSQ gradient for step.
+        gx = jnp.where(inside, g, 0.0)
+        gs = jnp.where(
+            inside,
+            (jnp.round(v) - v) * g,
+            jnp.where(v < qmin, qmin * g, qmax * g),
+        )
+        # Gradient scale 1/sqrt(N·qmax) per the paper.
+        gscale = 1.0 / jnp.sqrt(jnp.maximum(qmax, 1) * x.size)
+        return gx, jnp.sum(gs) * gscale
+
+    _q.defvjp(_fwd, _bwd)
+    return _q(x, step)
+
+
+def fold_lsq(multiplier: float, offset: float, out_bits: int):
+    """Fold a float requant multiplier/offset into the MVU integer pipeline:
+    `(scale u16, bias i32, msb)` with `scale/2^f ≈ multiplier` — the exact
+    algorithm of rust `quant::fold_lsq` (kept in sync by pytest).
+    """
+    assert multiplier > 0, "multiplier must be positive"
+    best = None
+    for f in range(0, 32 - out_bits):
+        s = round(multiplier * (1 << f))
+        if 1 <= s <= 0xFFFF:
+            best = (f, s)
+    if best is None:
+        raise ValueError(f"multiplier {multiplier} not representable as u16/2^f")
+    f, scale = best
+    round_half = (1 << (f - 1)) if f > 0 else 0
+    bias = int(round(offset * (1 << f))) + round_half
+    assert -(2**31) <= bias < 2**31, "folded bias overflows i32"
+    return scale, bias, f + out_bits - 1
+
+
+# --- Table 1/2 substitution experiment ---------------------------------------
+
+
+def _synthetic_images(rs: np.random.RandomState, n: int, classes: int = 10):
+    """10-class synthetic image problem: class-dependent frequency patterns
+    plus noise, 3×16×16 — small enough to train in seconds, hard enough
+    that quantization effects are visible."""
+    ys = rs.randint(0, classes, size=n)
+    xx, yy = np.meshgrid(np.arange(16), np.arange(16))
+    imgs = np.zeros((n, 3, 16, 16), np.float32)
+    for i, y in enumerate(ys):
+        fx, fy = 1 + y % 4, 1 + y // 4
+        base = np.sin(2 * np.pi * fx * xx / 16) * np.cos(2 * np.pi * fy * yy / 16)
+        for c in range(3):
+            imgs[i, c] = base * (0.5 + 0.3 * c) + rs.randn(16, 16) * 1.1
+    return imgs, ys
+
+
+@dataclasses.dataclass
+class LsqDemoResult:
+    accuracy: Dict[str, float]
+    size_bytes: Dict[str, int]
+
+
+def train_lsq_demo(steps: int = 300, seed: int = 0) -> LsqDemoResult:
+    """Train a small CNN at fp32 and LSQ 2/4/8-bit; report accuracy + size."""
+    rs = np.random.RandomState(seed)
+    xtr, ytr = _synthetic_images(rs, 2048)
+    xte, yte = _synthetic_images(rs, 512)
+
+    c1, c2, fc = 16, 32, 10
+
+    def init():
+        r = np.random.RandomState(seed + 1)
+        return {
+            "w1": jnp.asarray(r.randn(c1, 3, 3, 3).astype(np.float32) * 0.3),
+            "w2": jnp.asarray(r.randn(c2, c1, 3, 3).astype(np.float32) * 0.15),
+            "wf": jnp.asarray(r.randn(c2 * 4 * 4, fc).astype(np.float32) * 0.05),
+            "s_w1": jnp.float32(0.1),
+            "s_w2": jnp.float32(0.05),
+            "s_a1": jnp.float32(0.5),
+            "s_a2": jnp.float32(0.5),
+        }
+
+    def conv(x, w, stride):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(1, 1), (1, 1)],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+
+    def forward(p, x, bits):
+        w1, w2 = p["w1"], p["w2"]
+        if bits is not None:
+            w1 = lsq_quantize(w1, p["s_w1"], bits, signed=True)
+            w2 = lsq_quantize(w2, p["s_w2"], bits, signed=True)
+        h = jax.nn.relu(conv(x, w1, 2))  # 16→8
+        if bits is not None:
+            h = lsq_quantize(h, p["s_a1"], bits, signed=False)
+        h = jax.nn.relu(conv(h, w2, 2))  # 8→4
+        if bits is not None:
+            h = lsq_quantize(h, p["s_a2"], bits, signed=False)
+        return h.reshape(h.shape[0], -1) @ p["wf"]
+
+    def loss_fn(p, x, y, bits):
+        logits = forward(p, x, bits)
+        return -jnp.mean(
+            jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y]
+        )
+
+    @functools.partial(jax.jit, static_argnames=("bits_key",))
+    def accuracy(p, bits_key):
+        bits = {"fp32": None, "2": 2, "4": 4, "8": 8}[bits_key]
+        preds = jnp.argmax(forward(p, jnp.asarray(xte), bits), axis=1)
+        return jnp.mean(preds == jnp.asarray(yte))
+
+    results, sizes = {}, {}
+    n_params = int(c1 * 3 * 9 + c2 * c1 * 9 + c2 * 16 * fc)
+    for key, bits in [("fp32", None), ("2", 2), ("4", 4), ("8", 8)]:
+        p = init()
+        grad = jax.jit(jax.grad(lambda p, x, y: loss_fn(p, x, y, bits)))
+        lr = 0.05
+        for step in range(steps):
+            i = (step * 128) % (2048 - 128)
+            g = grad(p, jnp.asarray(xtr[i : i + 128]), jnp.asarray(ytr[i : i + 128]))
+            p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+        results[key] = float(accuracy(p, key))
+        wbits = 32 if bits is None else bits
+        # fc kept fp32 (the paper keeps first/last layers full precision).
+        sizes[key] = (c1 * 27 + c2 * c1 * 9) * wbits // 8 + c2 * 16 * fc * 4
+    _ = n_params
+    return LsqDemoResult(accuracy=results, size_bytes=sizes)
+
+
+def main(out_path: str = "../artifacts/lsq_accuracy.json", steps: int = 300):
+    r = train_lsq_demo(steps=steps)
+    with open(out_path, "w") as f:
+        json.dump({"accuracy": r.accuracy, "size_bytes": r.size_bytes}, f, indent=1)
+    print(f"lsq demo: {r.accuracy} → {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""L1 kernel correctness: the Pallas bit-serial matmul (Alg. 1) and the
+QuantSer kernel against their pure-jnp oracles, swept over shapes,
+precisions and signedness with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitserial_matmul, quantser
+from compile.kernels.ref import matmul_ref, quantser_ref
+
+
+def rand_operand(rs, shape, bits, signed):
+    if signed:
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    else:
+        lo, hi = 0, (1 << bits) - 1
+    return rs.randint(lo, hi + 1, size=shape).astype(np.int32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 48),
+    n=st.integers(1, 24),
+    a_bits=st.integers(1, 6),
+    w_bits=st.integers(1, 6),
+    a_signed=st.booleans(),
+    w_signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitserial_matches_ref(m, k, n, a_bits, w_bits, a_signed, w_signed, seed):
+    rs = np.random.RandomState(seed)
+    x = rand_operand(rs, (m, k), a_bits, a_signed)
+    w = rand_operand(rs, (k, n), w_bits, w_signed)
+    got = bitserial_matmul(
+        jnp.asarray(x),
+        jnp.asarray(w),
+        a_bits=a_bits,
+        w_bits=w_bits,
+        a_signed=a_signed,
+        w_signed=w_signed,
+    )
+    want = matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [(32, 32), (64, 16), (16, 64)])
+def test_bitserial_blocked_grid(block):
+    rs = np.random.RandomState(3)
+    x = rand_operand(rs, (64, 128), 2, False)
+    w = rand_operand(rs, (128, 64), 2, True)
+    got = bitserial_matmul(
+        jnp.asarray(x), jnp.asarray(w), a_bits=2, w_bits=2, block=block
+    )
+    want = matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitserial_mvu_tile_shape():
+    """The exact tile the MVU consumes: 64 outputs × (64ch·3·3) patch."""
+    rs = np.random.RandomState(9)
+    x = rand_operand(rs, (64, 576), 2, False)
+    w = rand_operand(rs, (576, 64), 2, True)
+    got = bitserial_matmul(jnp.asarray(x), jnp.asarray(w), a_bits=2, w_bits=2)
+    want = matmul_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitserial_extreme_precisions():
+    rs = np.random.RandomState(5)
+    for a_bits, w_bits in [(1, 8), (8, 1), (8, 8), (1, 1)]:
+        x = rand_operand(rs, (8, 32), a_bits, False)
+        w = rand_operand(rs, (32, 8), w_bits, True)
+        got = bitserial_matmul(
+            jnp.asarray(x), jnp.asarray(w), a_bits=a_bits, w_bits=w_bits
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    msb=st.integers(2, 29),
+    out_bits=st.integers(1, 8),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantser_matches_ref(n, msb, out_bits, relu, seed):
+    if msb + 1 < out_bits:
+        out_bits = msb + 1
+    rs = np.random.RandomState(seed)
+    v = rs.randint(-(1 << 20), 1 << 20, size=(n,)).astype(np.int32)
+    s = rs.randint(1, 16, size=(n,)).astype(np.int32)
+    b = rs.randint(-256, 256, size=(n,)).astype(np.int32)
+    got = quantser(
+        jnp.asarray(v), jnp.asarray(s), jnp.asarray(b),
+        msb=msb, out_bits=out_bits, relu=relu,
+    )
+    want = quantser_ref(
+        jnp.asarray(v), jnp.asarray(s), jnp.asarray(b), msb, out_bits, relu=relu
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantser_saturation_points():
+    v = jnp.asarray(np.array([-5, 0, 63, 64, 191, 192, 1 << 20], np.int32))
+    ones = jnp.ones(7, jnp.int32)
+    zeros = jnp.zeros(7, jnp.int32)
+    got = np.asarray(quantser(v, ones, zeros, msb=7, out_bits=2, relu=True))
+    # window [7:6]: -5→0, 0→0, 63→0, 64→1, 191→2, 192→3, big→sat 3.
+    np.testing.assert_array_equal(got, [0, 0, 0, 1, 2, 3, 3])

@@ -1,0 +1,107 @@
+"""L2 model correctness: Pallas path ≡ integer reference path, host/accel
+seams compose to the golden model, shapes and determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import (
+    Resnet9Params,
+    conv0_forward,
+    fc_forward,
+    golden_forward,
+    make_params,
+    middle_forward,
+    middle_forward_pallas,
+)
+
+
+@pytest.fixture(scope="module")
+def params() -> Resnet9Params:
+    return make_params()
+
+
+@pytest.fixture(scope="module")
+def image():
+    rs = np.random.RandomState(42)
+    return jnp.asarray(rs.randn(1, 3, 32, 32).astype(np.float32))
+
+
+def test_conv0_shape_and_range(params, image):
+    q = conv0_forward(params, image)
+    assert q.shape == (1, 64, 32, 32)
+    assert q.dtype == jnp.int32
+    qn = np.asarray(q)
+    assert qn.min() >= 0 and qn.max() <= 3
+
+
+def test_middle_shapes(params, image):
+    q = conv0_forward(params, image)
+    out = middle_forward(params, q)
+    assert out.shape == (1, 512, 4, 4)
+    on = np.asarray(out)
+    assert on.min() >= 0 and on.max() <= 3
+
+
+def test_composition_equals_golden(params, image):
+    """conv0 → middle → fc must equal the single golden module — the same
+    seam the Rust e2e example splits across PJRT + simulator."""
+    q = conv0_forward(params, image)
+    acts = middle_forward(params, q)
+    logits = fc_forward(params, acts)
+    golden = golden_forward(params, image)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(golden), rtol=1e-6)
+
+
+def test_pallas_path_equals_reference(params, image):
+    """Every conv through the L1 bit-serial kernel ≡ the integer reference.
+
+    Run on a spatially-reduced copy to keep interpret-mode runtime sane."""
+    small = make_params()
+    h = 8
+    for l in small.layers:
+        l.in_h = l.in_w = h
+        if l.stride == 2:
+            h //= 2
+    small.layers = small.layers[:4]
+    rs = np.random.RandomState(0)
+    q = jnp.asarray(rs.randint(0, 4, size=(1, 64, 8, 8)).astype(np.int32))
+    ref_out = middle_forward(small, q)
+    pallas_out = middle_forward_pallas(small, q)
+    np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(pallas_out))
+
+
+def test_params_deterministic():
+    a, b = make_params(), make_params()
+    for la, lb in zip(a.layers, b.layers):
+        np.testing.assert_array_equal(la.weights, lb.weights)
+        np.testing.assert_array_equal(la.scale, lb.scale)
+    np.testing.assert_array_equal(a.conv0_w, b.conv0_w)
+
+
+def test_weight_ranges(params):
+    for l in params.layers:
+        assert l.weights.min() >= -2 and l.weights.max() <= 1
+        assert l.scale.min() >= 1 and l.scale.max() <= 4
+
+
+def test_no_accumulator_overflow(params):
+    """The 32-bit pipeline must never overflow for any representable input:
+    max |acc·scale + bias| bound."""
+    for l in params.layers:
+        ci = l.weights.shape[1]
+        max_acc = ci * 9 * 3 * 2  # max act × max |weight|
+        bound = max_acc * int(l.scale.max()) + int(np.abs(l.bias).max())
+        assert bound < 2**31, l.name
+
+
+def test_schedule_matches_table3_geometry():
+    """The python schedule must be the Table 3 schedule."""
+    total = 0
+    for name, ci, co, stride, in_h in model.RESNET9_SCHEDULE:
+        full_rows = (in_h - 3) // stride + 1
+        out_w = (in_h + 2 - 3) // stride + 1
+        cycles = 4 * (ci // 64) * 9 * (co // 64) * out_w * full_rows
+        total += cycles
+    assert total == 194_688

@@ -1,0 +1,39 @@
+//! Figure 2: distribution of conv input-channel sizes across the model-zoo
+//! census (the design justification for the 64-lane VVP). Prints the
+//! histogram and the multiple-of-64 statistics (paper: 79%).
+
+use barvinn::model::zoo::census_stats;
+use barvinn::perf::benchkit::report_table;
+
+fn main() {
+    let s = census_stats();
+    let total: usize = s.histogram.iter().map(|(_, n)| n).sum();
+    let rows: Vec<Vec<String>> = s
+        .histogram
+        .iter()
+        .map(|(b, n)| {
+            let pct = *n as f64 / total as f64 * 100.0;
+            let bar = "#".repeat((pct / 2.0) as usize);
+            vec![b.to_string(), n.to_string(), format!("{pct:.1}%"), bar]
+        })
+        .collect();
+    report_table(
+        &format!(
+            "Fig. 2 — channel sizes over {} models / {} conv layers",
+            s.models, s.layers
+        ),
+        &["channels", "layers", "share", ""],
+        &rows,
+    );
+    println!(
+        "\nmultiples of 64: {:.1}% of layers, {:.1}% of models (paper: 79%)",
+        s.layer_frac_mult64 * 100.0,
+        s.model_frac_mult64 * 100.0
+    );
+    assert!(s.models >= 50);
+    assert!(
+        s.model_frac_mult64 > 0.55,
+        "the census must reproduce the majority-of-64 conclusion"
+    );
+    println!("census checks passed");
+}

@@ -1,0 +1,106 @@
+//! Figure 5: Pipelined vs Distributed execution — the throughput/latency
+//! trade measured on the cycle-accurate simulator (distributed) and with
+//! the analytic model (both), plus the §2/§3.1.1 architecture-comparison
+//! ablation (BitFusion / BitBlade / Loom).
+
+use barvinn::accel::{System, SystemConfig, SystemExit};
+use barvinn::codegen::{compile_distributed, EdgePolicy};
+use barvinn::model::zoo::{self, resnet9_cifar10, Rng};
+use barvinn::perf::benchkit::report_table;
+use barvinn::perf::bitfusion::{bit_ops_per_mac, shifter_adder_cost, Arch};
+use barvinn::perf::cycle_model::{
+    fps_distributed, fps_pipelined_streamed, latency_cycles_distributed,
+    latency_cycles_pipelined, Bits,
+};
+use barvinn::sim::Tensor3;
+use barvinn::CLOCK_HZ;
+
+fn main() {
+    // --- analytic: both modes on ResNet9 -------------------------------------
+    let net = zoo::NetShape {
+        name: "resnet9-mid",
+        convs: zoo::RESNET9_SCHEDULE
+            .iter()
+            .map(|&(_, ci, co, stride, in_h)| zoo::ConvShape {
+                ci,
+                co,
+                k: 3,
+                stride,
+                pad: 1,
+                in_h,
+            })
+            .collect(),
+        fcs: vec![],
+        quant_exempt: vec![],
+    };
+    let bits = Bits { w: 2, a: 2 };
+    let fp = fps_pipelined_streamed(&net, bits, CLOCK_HZ);
+    let fd = fps_distributed(&net, bits, CLOCK_HZ);
+    let lp = latency_cycles_pipelined(&net, bits);
+    let ld = latency_cycles_distributed(&net, bits);
+    report_table(
+        "Fig. 5 — execution modes on ResNet9 (2b/2b, analytic)",
+        &["mode", "FPS @250MHz", "latency (cycles)", "latency (µs)"],
+        &[
+            vec![
+                "Pipelined".into(),
+                format!("{fp:.0}"),
+                lp.to_string(),
+                format!("{:.1}", lp as f64 / 250.0),
+            ],
+            vec![
+                "Distributed".into(),
+                format!("{fd:.0}"),
+                ld.to_string(),
+                format!("{:.1}", ld as f64 / 250.0),
+            ],
+        ],
+    );
+    assert!(fp > fd, "pipelined maximises throughput");
+    assert!(ld < lp, "distributed minimises latency");
+
+    // --- measured: distributed mode on the simulator (conv6) -----------------
+    let m = resnet9_cifar10(2, 2);
+    let layer = &m.layers[5];
+    let plan = compile_distributed(layer, EdgePolicy::SkipEdges).expect("plan");
+    let mut sys = System::new(SystemConfig::default());
+    let mut rng = Rng(4);
+    let input =
+        Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| rng.range_i32(0, 3));
+    plan.load_into(&mut sys, layer, &input);
+    let exit = sys.run();
+    assert_eq!(exit, SystemExit::AllExited);
+    let slowest = (0..8).map(|i| sys.mvus[i].busy_cycles()).max().unwrap();
+    println!(
+        "\nmeasured distributed conv6: total {} MVU cycles over 8 MVUs, \
+         critical path {} (analytic latency {})",
+        sys.total_mvu_busy_cycles(),
+        slowest,
+        plan.latency_cycles()
+    );
+    assert_eq!(slowest, plan.latency_cycles());
+
+    // --- ablation: bit-flexible architecture comparison ----------------------
+    let mut rows = Vec::new();
+    for arch in [Arch::Barvinn, Arch::BitFusion, Arch::BitBlade, Arch::Loom] {
+        let (vs, fs, at) = shifter_adder_cost(arch);
+        rows.push(vec![
+            format!("{arch:?}"),
+            format!("{:.1}", bit_ops_per_mac(arch, Bits { w: 1, a: 1 })),
+            format!("{:.1}", bit_ops_per_mac(arch, Bits { w: 2, a: 2 })),
+            format!("{:.1}", bit_ops_per_mac(arch, Bits { w: 4, a: 4 })),
+            format!("{vs}v+{fs}f"),
+            at.to_string(),
+        ]);
+    }
+    report_table(
+        "Ablation — bit-flexible architectures (§2, §3.1.1)",
+        &["arch", "bit-ops/MAC 1/1", "2/2", "4/4", "shifters", "adder trees"],
+        &rows,
+    );
+    assert!(
+        bit_ops_per_mac(Arch::Barvinn, Bits { w: 1, a: 1 })
+            < bit_ops_per_mac(Arch::BitFusion, Bits { w: 1, a: 1 })
+    );
+    println!("mode + ablation checks passed");
+}

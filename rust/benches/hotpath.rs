@@ -1,0 +1,115 @@
+//! §Perf hot-path microbenchmarks: the MVU inner loop, the full pipelined
+//! system (Pito + 8 MVUs), the crossbar, the assembler and the JSON model
+//! load — the profile targets of EXPERIMENTS.md §Perf.
+
+use barvinn::accel::{System, SystemConfig, SystemExit};
+use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::model::zoo::{resnet9_cifar10, Rng};
+use barvinn::mvu::{Mvu, MvuConfig, XbarWrite};
+use barvinn::perf::benchkit::bench;
+use barvinn::sim::Tensor3;
+
+fn main() {
+    // --- MVU inner loop: one dense 512-input-channel conv row job ------------
+    let m = resnet9_cifar10(2, 2);
+    let l = &m.layers[7]; // conv8: 512→512
+    {
+        use barvinn::codegen::layout::{ActLayout, WeightLayout};
+        let in_l = ActLayout {
+            base: 0,
+            h: l.in_h,
+            w: l.in_w,
+            pad: 1,
+            pad_rows: false,
+            cb: l.ci_blocks(),
+            prec: l.aprec,
+        };
+        let out_l = ActLayout {
+            base: 16384,
+            h: l.out_h(),
+            w: l.out_w(),
+            pad: 0,
+            pad_rows: false,
+            cb: l.co_sets(),
+            prec: l.oprec,
+        };
+        let w_l = WeightLayout {
+            base: 0,
+            cos: l.co_sets(),
+            fh: 3,
+            fw: 3,
+            cb: l.ci_blocks(),
+            prec: l.wprec,
+        };
+        let mut sys = System::new(SystemConfig::default());
+        w_l.load(&mut sys.mvus[0].weights, &l.weights, l.ci, l.co);
+        let jobs =
+            barvinn::codegen::conv_jobs(l, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges);
+        let cycles: u64 = jobs.iter().map(|j| j.cycles()).sum();
+        let r = bench("mvu: conv8 layer (18,432 cycles)", 2000, || {
+            for j in &jobs {
+                sys.run_job(0, j.clone());
+            }
+        });
+        println!(
+            "  → {:.1} M MVU-cycles/s",
+            cycles as f64 / r.per_iter.as_secs_f64() / 1e6
+        );
+    }
+
+    // --- full system: pipelined ResNet9 under Pito ---------------------------
+    {
+        let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
+        let mut rng = Rng(2);
+        let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
+        let mut sys_cycles = 0;
+        let r = bench("system: pipelined ResNet9 e2e", 4000, || {
+            let mut sys = System::new(SystemConfig::default());
+            compiled.load_into(&mut sys, &input);
+            assert_eq!(sys.run(), SystemExit::AllExited);
+            sys_cycles = sys.cycles();
+        });
+        println!(
+            "  → {:.1} M system-cycles/s ({} cycles/frame, {:.1} sim-frames/s)",
+            sys_cycles as f64 / r.per_iter.as_secs_f64() / 1e6,
+            sys_cycles,
+            1.0 / r.per_iter.as_secs_f64()
+        );
+    }
+
+    // --- crossbar under full contention ---------------------------------------
+    {
+        let mut xb = barvinn::interconnect::Crossbar::new(8);
+        let r = bench("xbar: 8 sources → 1 dest, 1k words", 1000, || {
+            for s in 0..8 {
+                xb.push(s, (0..128).map(|i| XbarWrite { dest_mask: 1, addr: i, word: i as u64 }));
+            }
+            while xb.busy() {
+                xb.step();
+            }
+        });
+        let _ = r;
+    }
+
+    // --- assembler throughput --------------------------------------------------
+    {
+        let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
+        let asm = compiled.asm.clone();
+        let r = bench("assembler: full pipelined program", 1000, || {
+            let words = barvinn::pito::assemble(&asm).unwrap();
+            std::hint::black_box(words);
+        });
+        let _ = r;
+    }
+
+    // --- standalone MVU step cost (idle + busy) ---------------------------------
+    {
+        let mut mvu = Mvu::new(0, MvuConfig::default());
+        let r = bench("mvu: idle step x1e5", 500, || {
+            for _ in 0..100_000 {
+                std::hint::black_box(mvu.step());
+            }
+        });
+        let _ = r;
+    }
+}

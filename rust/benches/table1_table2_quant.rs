@@ -1,0 +1,91 @@
+//! Tables 1 & 2: effect of quantization on model size (analytic, exact for
+//! Table 2's Int2 row) and accuracy (substitution experiment: the LSQ demo
+//! results written by `make artifacts` into artifacts/lsq_accuracy.json).
+
+use barvinn::perf::benchkit::report_table;
+use barvinn::perf::model_size::{
+    fp32_bytes, fully_quantized_bytes, resnet9_original, resnet9_plain, table1_rows,
+};
+
+fn main() {
+    // --- Table 2: ResNet9 sizes ---------------------------------------------
+    let rows = vec![
+        vec![
+            "Original".into(),
+            "Fp32".into(),
+            fp32_bytes(&resnet9_original()).to_string(),
+            "19605141".into(),
+        ],
+        vec![
+            "Plain-CNN".into(),
+            "Fp32".into(),
+            fp32_bytes(&resnet9_plain()).to_string(),
+            "18912487".into(),
+        ],
+        vec![
+            "Quantized Plain-CNN".into(),
+            "Int2".into(),
+            fully_quantized_bytes(&resnet9_plain(), 2).to_string(),
+            "1181360".into(),
+        ],
+    ];
+    report_table(
+        "Table 2 — ResNet9 model size (bytes, ours vs paper)",
+        &["model", "precision", "ours", "paper"],
+        &rows,
+    );
+    assert_eq!(fully_quantized_bytes(&resnet9_plain(), 2), 1_181_360, "exact");
+
+    // --- Table 1: ResNet18 / SSD300 sizes ------------------------------------
+    let paper_mb = [2.889, 5.559, 10.87, 42.8, 10.34, 11.81, 14.77, 32.49];
+    let rows: Vec<Vec<String>> = table1_rows()
+        .iter()
+        .zip(&paper_mb)
+        .map(|((model, prec, bytes), paper)| {
+            vec![
+                model.to_string(),
+                prec.to_string(),
+                format!("{:.3}", *bytes as f64 / 1e6),
+                format!("{paper:.3}"),
+            ]
+        })
+        .collect();
+    report_table(
+        "Table 1 — model sizes (MB, ours vs paper)",
+        &["model", "precision", "ours", "paper"],
+        &rows,
+    );
+
+    // --- Accuracy trend (substitution, DESIGN.md §4) --------------------------
+    match std::fs::read_to_string("artifacts/lsq_accuracy.json") {
+        Ok(src) => {
+            let v = barvinn::model::json::parse(&src).expect("lsq json");
+            let acc = v.get("accuracy").expect("accuracy");
+            let rows: Vec<Vec<String>> = ["fp32", "8", "4", "2"]
+                .iter()
+                .map(|k| {
+                    vec![
+                        format!("LSQ({k})"),
+                        format!(
+                            "{:.3}",
+                            acc.get(k).and_then(|x| x.as_f64()).unwrap_or(f64::NAN)
+                        ),
+                    ]
+                })
+                .collect();
+            report_table(
+                "Tables 1/2 accuracy trend — LSQ demo on synthetic 10-class images",
+                &["precision", "accuracy"],
+                &rows,
+            );
+            let fp32 = acc.get("fp32").and_then(|x| x.as_f64()).unwrap();
+            let two = acc.get("2").and_then(|x| x.as_f64()).unwrap();
+            assert!(
+                two > fp32 - 0.10,
+                "2-bit LSQ must stay within 10 points of fp32 (paper: 1–3%)"
+            );
+            println!("accuracy-trend check passed (2-bit within 10 pts of fp32)");
+        }
+        Err(_) => println!("(artifacts/lsq_accuracy.json missing — run `make artifacts`)"),
+    }
+}

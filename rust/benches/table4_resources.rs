@@ -1,0 +1,61 @@
+//! Table 4: post-synthesis resource utilisation — regenerated from the
+//! calibrated analytic resource/power model, with paper values side by
+//! side and tolerance assertions.
+
+use barvinn::perf::benchkit::report_table;
+use barvinn::perf::resource_model::{
+    mvu_resources, overall_resources, pito_resources, u250_lut_utilisation,
+};
+
+fn main() {
+    let pito = pito_resources();
+    let one_mvu = mvu_resources(8 * 1024, 1024);
+    let array = (0..8).fold(
+        barvinn::perf::resource_model::Resources {
+            lut: 0,
+            bram36: 0,
+            dsp: 0,
+            dynamic_power_w: 0.0,
+            clock_mhz: 250,
+        },
+        |acc, _| acc.add(one_mvu),
+    );
+    let overall = overall_resources();
+
+    let row = |name: &str,
+               r: &barvinn::perf::resource_model::Resources,
+               paper: (u64, u64, u64, f64)| {
+        vec![
+            name.to_string(),
+            r.lut.to_string(),
+            paper.0.to_string(),
+            r.bram36.to_string(),
+            paper.1.to_string(),
+            r.dsp.to_string(),
+            paper.2.to_string(),
+            format!("{:.3}", r.dynamic_power_w),
+            format!("{:.3}", paper.3),
+        ]
+    };
+    report_table(
+        "Table 4 — resources (model vs paper), 250 MHz",
+        &["", "LUT", "paper", "BRAM", "paper", "DSP", "paper", "W", "paper"],
+        &[
+            row("Pito RISC-V", &pito, (10_454, 15, 0, 0.410)),
+            row("MVU array", &array, (190_625, 1_312, 512, 21.066)),
+            row("Overall", &overall, (201_079, 1_327, 512, 21.504)),
+        ],
+    );
+    println!(
+        "\nU250 utilisation: {:.1}% LUTs (paper Table 5: 15.0%)",
+        u250_lut_utilisation(&overall)
+    );
+
+    // Tolerances (constants are calibrated; structure does the scaling).
+    assert_eq!(pito.lut, 10_454);
+    assert!((array.lut as f64 / 190_625.0 - 1.0).abs() < 0.02);
+    assert!((array.bram36 as f64 / 1_312.0 - 1.0).abs() < 0.05);
+    assert_eq!(array.dsp, 512);
+    assert!((overall.dynamic_power_w / 21.504 - 1.0).abs() < 0.05);
+    println!("tolerance checks passed");
+}

@@ -1,0 +1,487 @@
+//! The 74 MVU-specific CSRs (§3.2: "In addition to the base CSRs, we have
+//! added 74 MVU-specific CSRs to allow software to control the processing
+//! element array.").
+//!
+//! Each hart sees *its own* MVU behind these addresses — hart `h`'s accesses
+//! are routed to MVU `h` by the system bridge, so one program controls all
+//! eight MVUs by running on all eight harts.
+//!
+//! Layout: 64 registers in the primary custom window `0x7C0..=0x7FF`
+//! (job configuration) and 10 in `0xBC0..=0xBC9` (command/status/identity).
+
+use crate::mvu::{AguCfg, AguLoop, JobConfig, OutputDest, AGU_LOOPS};
+use crate::quant::{Precision, QuantSerCfg};
+
+/// Total number of MVU CSRs.
+pub const MVU_CSR_COUNT: usize = 74;
+
+/// Primary window base (configuration registers).
+const CFG: u16 = 0x7C0;
+/// Secondary window base (command/status).
+const CMD: u16 = 0xBC0;
+
+/// Flag bits in `mvu_flags`.
+pub mod flags {
+    pub const SCALER_EN: u32 = 1 << 0;
+    pub const BIAS_EN: u32 = 1 << 1;
+    pub const RELU_EN: u32 = 1 << 2;
+    pub const QUANT_SAT: u32 = 1 << 3;
+    pub const USE_XBAR: u32 = 1 << 4;
+}
+
+/// Status bits in `mvu_status`.
+pub mod status {
+    pub const BUSY: u32 = 1 << 0;
+    pub const IRQ: u32 = 1 << 1;
+}
+
+/// Command codes for `mvu_command`.
+pub mod command {
+    pub const START: u32 = 1;
+    pub const CLEAR_IRQ: u32 = 2;
+}
+
+/// Precision register encoding: bits[4:0] = bit count, bit[8] = signed.
+fn decode_prec(v: u32) -> Precision {
+    Precision { bits: (v & 0x1f) as u8, signed: v & (1 << 8) != 0 }
+}
+
+pub fn encode_prec(p: Precision) -> u32 {
+    p.bits as u32 | ((p.signed as u32) << 8)
+}
+
+// Register index table (offsets within the primary window).
+const WPREC: u16 = 0;
+const APREC: u16 = 1;
+const OPREC: u16 = 2;
+const QUANT_MSB: u16 = 3;
+const FLAGS: u16 = 4;
+const POOL_COUNT: u16 = 5;
+const TILES: u16 = 6;
+const OUTPUTS: u16 = 7;
+const XBAR_DEST: u16 = 8;
+const WBASE: u16 = 9;
+const ABASE: u16 = 10;
+const SBASE: u16 = 11;
+const BBASE: u16 = 12;
+const OBASE: u16 = 13;
+const WJUMP0: u16 = 14; // ..=18
+const WCOUNT0: u16 = 19; // ..=23
+const AJUMP0: u16 = 24; // ..=28
+const ACOUNT0: u16 = 29; // ..=33
+const OJUMP0: u16 = 34; // ..=38
+const OCOUNT0: u16 = 39; // ..=43
+const SJUMP0: u16 = 44; // ..=48
+const SCOUNT0: u16 = 49; // ..=53
+const BJUMP0: u16 = 54; // ..=58
+const BCOUNT0: u16 = 59; // ..=63
+
+// Secondary window offsets.
+const COMMAND: u16 = 0;
+const STATUS: u16 = 1;
+const CYCLES_LO: u16 = 2;
+const CYCLES_HI: u16 = 3;
+const JOBS_DONE: u16 = 4;
+const ID: u16 = 5;
+const ACT_DEPTH: u16 = 6;
+const WGT_DEPTH: u16 = 7;
+const VERSION: u16 = 8;
+const SCRATCH: u16 = 9;
+
+/// Software-visible name for an MVU CSR address (assembler/disassembler).
+pub fn mvu_csr_name(csr: u16) -> Option<&'static str> {
+    const CFG_NAMES: [&str; 64] = [
+        "mvu_wprec",
+        "mvu_aprec",
+        "mvu_oprec",
+        "mvu_quant_msb",
+        "mvu_flags",
+        "mvu_pool_count",
+        "mvu_tiles",
+        "mvu_outputs",
+        "mvu_xbar_dest",
+        "mvu_wbase",
+        "mvu_abase",
+        "mvu_sbase",
+        "mvu_bbase",
+        "mvu_obase",
+        "mvu_wjump0",
+        "mvu_wjump1",
+        "mvu_wjump2",
+        "mvu_wjump3",
+        "mvu_wjump4",
+        "mvu_wcount0",
+        "mvu_wcount1",
+        "mvu_wcount2",
+        "mvu_wcount3",
+        "mvu_wcount4",
+        "mvu_ajump0",
+        "mvu_ajump1",
+        "mvu_ajump2",
+        "mvu_ajump3",
+        "mvu_ajump4",
+        "mvu_acount0",
+        "mvu_acount1",
+        "mvu_acount2",
+        "mvu_acount3",
+        "mvu_acount4",
+        "mvu_ojump0",
+        "mvu_ojump1",
+        "mvu_ojump2",
+        "mvu_ojump3",
+        "mvu_ojump4",
+        "mvu_ocount0",
+        "mvu_ocount1",
+        "mvu_ocount2",
+        "mvu_ocount3",
+        "mvu_ocount4",
+        "mvu_sjump0",
+        "mvu_sjump1",
+        "mvu_sjump2",
+        "mvu_sjump3",
+        "mvu_sjump4",
+        "mvu_scount0",
+        "mvu_scount1",
+        "mvu_scount2",
+        "mvu_scount3",
+        "mvu_scount4",
+        "mvu_bjump0",
+        "mvu_bjump1",
+        "mvu_bjump2",
+        "mvu_bjump3",
+        "mvu_bjump4",
+        "mvu_bcount0",
+        "mvu_bcount1",
+        "mvu_bcount2",
+        "mvu_bcount3",
+        "mvu_bcount4",
+    ];
+    const CMD_NAMES: [&str; 10] = [
+        "mvu_command",
+        "mvu_status",
+        "mvu_cycles_lo",
+        "mvu_cycles_hi",
+        "mvu_jobs_done",
+        "mvu_id",
+        "mvu_act_depth",
+        "mvu_wgt_depth",
+        "mvu_version",
+        "mvu_scratch",
+    ];
+    if (CFG..CFG + 64).contains(&csr) {
+        Some(CFG_NAMES[(csr - CFG) as usize])
+    } else if (CMD..CMD + 10).contains(&csr) {
+        Some(CMD_NAMES[(csr - CMD) as usize])
+    } else {
+        None
+    }
+}
+
+/// Inverse of [`mvu_csr_name`], used by the assembler.
+pub fn mvu_csr_by_name(name: &str) -> Option<u16> {
+    if !name.starts_with("mvu_") {
+        return None;
+    }
+    (CFG..CFG + 64)
+        .chain(CMD..CMD + 10)
+        .find(|&a| mvu_csr_name(a) == Some(name))
+}
+
+/// One hart's shadow configuration registers. Values are latched into a
+/// [`JobConfig`] when the START command is written, so software can prepare
+/// the next job while the MVU is busy (§3.1.3).
+#[derive(Debug, Clone, Default)]
+pub struct MvuCsrFile {
+    pub wprec: u32,
+    pub aprec: u32,
+    pub oprec: u32,
+    pub quant_msb: u32,
+    pub flags: u32,
+    pub pool_count: u32,
+    pub tiles: u32,
+    pub outputs: u32,
+    pub xbar_dest: u32,
+    pub wbase: u32,
+    pub abase: u32,
+    pub sbase: u32,
+    pub bbase: u32,
+    pub obase: u32,
+    pub wjump: [u32; AGU_LOOPS],
+    pub wcount: [u32; AGU_LOOPS],
+    pub ajump: [u32; AGU_LOOPS],
+    pub acount: [u32; AGU_LOOPS],
+    pub ojump: [u32; AGU_LOOPS],
+    pub ocount: [u32; AGU_LOOPS],
+    pub sjump: [u32; AGU_LOOPS],
+    pub scount: [u32; AGU_LOOPS],
+    pub bjump: [u32; AGU_LOOPS],
+    pub bcount: [u32; AGU_LOOPS],
+    pub scratch: u32,
+}
+
+impl MvuCsrFile {
+    /// Read a configuration register (primary window offset).
+    pub fn read_cfg(&self, off: u16) -> Option<u32> {
+        Some(match off {
+            WPREC => self.wprec,
+            APREC => self.aprec,
+            OPREC => self.oprec,
+            QUANT_MSB => self.quant_msb,
+            FLAGS => self.flags,
+            POOL_COUNT => self.pool_count,
+            TILES => self.tiles,
+            OUTPUTS => self.outputs,
+            XBAR_DEST => self.xbar_dest,
+            WBASE => self.wbase,
+            ABASE => self.abase,
+            SBASE => self.sbase,
+            BBASE => self.bbase,
+            OBASE => self.obase,
+            o if (WJUMP0..WJUMP0 + 5).contains(&o) => self.wjump[(o - WJUMP0) as usize],
+            o if (WCOUNT0..WCOUNT0 + 5).contains(&o) => self.wcount[(o - WCOUNT0) as usize],
+            o if (AJUMP0..AJUMP0 + 5).contains(&o) => self.ajump[(o - AJUMP0) as usize],
+            o if (ACOUNT0..ACOUNT0 + 5).contains(&o) => self.acount[(o - ACOUNT0) as usize],
+            o if (OJUMP0..OJUMP0 + 5).contains(&o) => self.ojump[(o - OJUMP0) as usize],
+            o if (OCOUNT0..OCOUNT0 + 5).contains(&o) => self.ocount[(o - OCOUNT0) as usize],
+            o if (SJUMP0..SJUMP0 + 5).contains(&o) => self.sjump[(o - SJUMP0) as usize],
+            o if (SCOUNT0..SCOUNT0 + 5).contains(&o) => self.scount[(o - SCOUNT0) as usize],
+            o if (BJUMP0..BJUMP0 + 5).contains(&o) => self.bjump[(o - BJUMP0) as usize],
+            o if (BCOUNT0..BCOUNT0 + 5).contains(&o) => self.bcount[(o - BCOUNT0) as usize],
+            _ => return None,
+        })
+    }
+
+    /// Write a configuration register.
+    pub fn write_cfg(&mut self, off: u16, v: u32) -> bool {
+        match off {
+            WPREC => self.wprec = v,
+            APREC => self.aprec = v,
+            OPREC => self.oprec = v,
+            QUANT_MSB => self.quant_msb = v,
+            FLAGS => self.flags = v,
+            POOL_COUNT => self.pool_count = v,
+            TILES => self.tiles = v,
+            OUTPUTS => self.outputs = v,
+            XBAR_DEST => self.xbar_dest = v,
+            WBASE => self.wbase = v,
+            ABASE => self.abase = v,
+            SBASE => self.sbase = v,
+            BBASE => self.bbase = v,
+            OBASE => self.obase = v,
+            o if (WJUMP0..WJUMP0 + 5).contains(&o) => self.wjump[(o - WJUMP0) as usize] = v,
+            o if (WCOUNT0..WCOUNT0 + 5).contains(&o) => self.wcount[(o - WCOUNT0) as usize] = v,
+            o if (AJUMP0..AJUMP0 + 5).contains(&o) => self.ajump[(o - AJUMP0) as usize] = v,
+            o if (ACOUNT0..ACOUNT0 + 5).contains(&o) => self.acount[(o - ACOUNT0) as usize] = v,
+            o if (OJUMP0..OJUMP0 + 5).contains(&o) => self.ojump[(o - OJUMP0) as usize] = v,
+            o if (OCOUNT0..OCOUNT0 + 5).contains(&o) => self.ocount[(o - OCOUNT0) as usize] = v,
+            o if (SJUMP0..SJUMP0 + 5).contains(&o) => self.sjump[(o - SJUMP0) as usize] = v,
+            o if (SCOUNT0..SCOUNT0 + 5).contains(&o) => self.scount[(o - SCOUNT0) as usize] = v,
+            o if (BJUMP0..BJUMP0 + 5).contains(&o) => self.bjump[(o - BJUMP0) as usize] = v,
+            o if (BCOUNT0..BCOUNT0 + 5).contains(&o) => self.bcount[(o - BCOUNT0) as usize] = v,
+            _ => return false,
+        }
+        true
+    }
+
+    fn agu(base: u32, jumps: &[u32; AGU_LOOPS], counts: &[u32; AGU_LOOPS]) -> AguCfg {
+        let mut loops = [AguLoop::default(); AGU_LOOPS];
+        for i in 0..AGU_LOOPS {
+            loops[i] = AguLoop { count: counts[i], jump: jumps[i] as i32 };
+        }
+        AguCfg { base, loops }
+    }
+
+    /// Latch the shadow registers into an executable job configuration.
+    pub fn to_job_config(&self) -> JobConfig {
+        JobConfig {
+            aprec: decode_prec(self.aprec),
+            wprec: decode_prec(self.wprec),
+            tiles: self.tiles,
+            outputs: self.outputs,
+            a_agu: Self::agu(self.abase, &self.ajump, &self.acount),
+            w_agu: Self::agu(self.wbase, &self.wjump, &self.wcount),
+            s_agu: Self::agu(self.sbase, &self.sjump, &self.scount),
+            b_agu: Self::agu(self.bbase, &self.bjump, &self.bcount),
+            o_agu: Self::agu(self.obase, &self.ojump, &self.ocount),
+            scaler_en: self.flags & flags::SCALER_EN != 0,
+            bias_en: self.flags & flags::BIAS_EN != 0,
+            relu_en: self.flags & flags::RELU_EN != 0,
+            pool_count: self.pool_count.max(1),
+            quant: QuantSerCfg {
+                msb_index: self.quant_msb as u8,
+                out_bits: self.oprec as u8,
+                saturate: self.flags & flags::QUANT_SAT != 0,
+            },
+            dest: if self.flags & flags::USE_XBAR != 0 {
+                OutputDest::Xbar { dest_mask: self.xbar_dest as u8 }
+            } else {
+                OutputDest::SelfRam
+            },
+        }
+    }
+
+    /// Inverse: program the shadow registers from a [`JobConfig`] (used by
+    /// the code generator to emit the CSR write sequence, and by tests).
+    pub fn from_job_config(job: &JobConfig) -> Self {
+        let mut f = MvuCsrFile {
+            wprec: encode_prec(job.wprec),
+            aprec: encode_prec(job.aprec),
+            oprec: job.quant.out_bits as u32,
+            quant_msb: job.quant.msb_index as u32,
+            pool_count: job.pool_count,
+            tiles: job.tiles,
+            outputs: job.outputs,
+            wbase: job.w_agu.base,
+            abase: job.a_agu.base,
+            sbase: job.s_agu.base,
+            bbase: job.b_agu.base,
+            obase: job.o_agu.base,
+            ..Default::default()
+        };
+        let mut fl = 0;
+        if job.scaler_en {
+            fl |= flags::SCALER_EN;
+        }
+        if job.bias_en {
+            fl |= flags::BIAS_EN;
+        }
+        if job.relu_en {
+            fl |= flags::RELU_EN;
+        }
+        if job.quant.saturate {
+            fl |= flags::QUANT_SAT;
+        }
+        if let OutputDest::Xbar { dest_mask } = job.dest {
+            fl |= flags::USE_XBAR;
+            f.xbar_dest = dest_mask as u32;
+        }
+        f.flags = fl;
+        for i in 0..AGU_LOOPS {
+            f.wjump[i] = job.w_agu.loops[i].jump as u32;
+            f.wcount[i] = job.w_agu.loops[i].count;
+            f.ajump[i] = job.a_agu.loops[i].jump as u32;
+            f.acount[i] = job.a_agu.loops[i].count;
+            f.ojump[i] = job.o_agu.loops[i].jump as u32;
+            f.ocount[i] = job.o_agu.loops[i].count;
+            f.sjump[i] = job.s_agu.loops[i].jump as u32;
+            f.scount[i] = job.s_agu.loops[i].count;
+            f.bjump[i] = job.b_agu.loops[i].jump as u32;
+            f.bcount[i] = job.b_agu.loops[i].count;
+        }
+        f
+    }
+
+    /// Enumerate `(csr_address, value)` pairs for the non-zero registers —
+    /// the write sequence the code generator must emit to reproduce this
+    /// configuration (zeroed registers are reset by a preamble).
+    pub fn write_sequence(&self) -> Vec<(u16, u32)> {
+        let mut out = Vec::new();
+        for off in 0..64u16 {
+            let v = self.read_cfg(off).unwrap();
+            if v != 0 {
+                out.push((CFG + off, v));
+            }
+        }
+        out
+    }
+}
+
+/// Offsets within the secondary window, exported for the system bridge.
+pub mod cmd_off {
+    pub const COMMAND: u16 = super::COMMAND;
+    pub const STATUS: u16 = super::STATUS;
+    pub const CYCLES_LO: u16 = super::CYCLES_LO;
+    pub const CYCLES_HI: u16 = super::CYCLES_HI;
+    pub const JOBS_DONE: u16 = super::JOBS_DONE;
+    pub const ID: u16 = super::ID;
+    pub const ACT_DEPTH: u16 = super::ACT_DEPTH;
+    pub const WGT_DEPTH: u16 = super::WGT_DEPTH;
+    pub const VERSION: u16 = super::VERSION;
+    pub const SCRATCH: u16 = super::SCRATCH;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvu::AguCfg;
+
+    #[test]
+    fn name_table_is_total_and_injective() {
+        let mut seen = std::collections::HashSet::new();
+        let mut n = 0;
+        for a in (0x7C0..=0x7FF).chain(0xBC0..=0xBC9) {
+            let name = mvu_csr_name(a).expect("every MVU CSR must be named");
+            assert!(seen.insert(name), "duplicate name {name}");
+            assert_eq!(mvu_csr_by_name(name), Some(a), "roundtrip for {name}");
+            n += 1;
+        }
+        assert_eq!(n, MVU_CSR_COUNT);
+        assert_eq!(mvu_csr_name(0x7BF), None);
+        assert_eq!(mvu_csr_by_name("mvu_bogus"), None);
+    }
+
+    #[test]
+    fn job_config_roundtrip() {
+        let job = JobConfig {
+            aprec: Precision::u(2),
+            wprec: Precision::s(3),
+            tiles: 18,
+            outputs: 32,
+            a_agu: AguCfg::from_strides(100, &[(1, 2), (2, 8), (5, 0), (31, 4)]),
+            w_agu: AguCfg::from_strides(7, &[(17, 3), (5, 0)]),
+            s_agu: AguCfg::from_strides(3, &[]),
+            b_agu: AguCfg::from_strides(4, &[]),
+            o_agu: AguCfg::from_strides(900, &[(31, 2)]),
+            scaler_en: true,
+            bias_en: false,
+            relu_en: true,
+            pool_count: 2,
+            quant: QuantSerCfg { msb_index: 9, out_bits: 2, saturate: true },
+            dest: OutputDest::Xbar { dest_mask: 0b10 },
+        };
+        let file = MvuCsrFile::from_job_config(&job);
+        assert_eq!(file.to_job_config(), job);
+    }
+
+    #[test]
+    fn cfg_rw_every_register() {
+        let mut f = MvuCsrFile::default();
+        for off in 0..64u16 {
+            assert!(f.write_cfg(off, off as u32 + 1), "offset {off}");
+            assert_eq!(f.read_cfg(off), Some(off as u32 + 1));
+        }
+        assert!(!f.write_cfg(64, 0));
+        assert_eq!(f.read_cfg(64), None);
+    }
+
+    #[test]
+    fn negative_jumps_survive_u32_encoding() {
+        let agu = AguCfg::from_strides(10, &[(2, 1), (3, 0)]);
+        assert!(agu.loops[1].jump < 0);
+        let job = JobConfig {
+            aprec: Precision::u(1),
+            wprec: Precision::u(1),
+            tiles: 3,
+            outputs: 4,
+            a_agu: agu,
+            w_agu: agu,
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::default(),
+            scaler_en: false,
+            bias_en: false,
+            relu_en: false,
+            pool_count: 1,
+            quant: QuantSerCfg { msb_index: 7, out_bits: 8, saturate: false },
+            dest: OutputDest::SelfRam,
+        };
+        let rt = MvuCsrFile::from_job_config(&job).to_job_config();
+        assert_eq!(rt.a_agu.loops[1].jump, agu.loops[1].jump);
+    }
+
+    #[test]
+    fn precision_encoding() {
+        assert_eq!(decode_prec(encode_prec(Precision::s(7))), Precision::s(7));
+        assert_eq!(decode_prec(encode_prec(Precision::u(16))), Precision::u(16));
+    }
+}

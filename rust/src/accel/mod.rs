@@ -1,0 +1,10 @@
+//! The whole accelerator (Fig. 1): Pito + 8 MVUs + crossbar interconnect,
+//! with the MVU configuration registers bridged into the CPU's CSR space.
+
+mod csr_map;
+mod system;
+
+pub use csr_map::{
+    mvu_csr_by_name, mvu_csr_name, MvuCsrFile, MVU_CSR_COUNT,
+};
+pub use system::{System, SystemConfig, SystemExit};

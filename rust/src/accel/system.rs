@@ -1,0 +1,395 @@
+//! Full-system wiring (Fig. 1): the Pito barrel CPU, eight MVUs and the
+//! crossbar, advanced in lock-step at the common 250 MHz clock.
+//!
+//! Per cycle:
+//! 1. crossbar writes land in destination activation RAMs (the interconnect
+//!    holds the highest priority at the write port, §3.1.5);
+//! 2. one barrel hart executes (the CPU's slot for this cycle);
+//! 3. every MVU advances one MVP cycle; produced output words enter the
+//!    crossbar FIFOs;
+//! 4. MVU completion interrupts are visible to the harts on the next cycle.
+
+use crate::interconnect::Crossbar;
+use crate::mvu::{JobConfig, Mvu, MvuConfig, MvuState};
+use crate::pito::{Barrel, BarrelConfig, CsrBridge, Trap, MVU_CSR_BASE, NUM_HARTS};
+use crate::NUM_MVUS;
+
+use super::csr_map::{cmd_off, command, status, MvuCsrFile};
+
+/// System-level configuration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SystemConfig {
+    pub mvu: MvuConfig,
+    pub barrel: BarrelConfig,
+}
+
+/// Why a system run stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SystemExit {
+    /// CPU halted (HALT MMIO) and all MVUs + interconnect drained.
+    Done,
+    /// All harts exited via `ecall` and the datapath drained.
+    AllExited,
+    /// CPU fault.
+    Fault { hart: usize, trap: Trap },
+    /// Fuel exhausted.
+    MaxCycles,
+    /// Every hart asleep with no interrupt possible.
+    Deadlock,
+}
+
+/// Bridge implementation routing hart `h`'s custom-CSR traffic to MVU `h`.
+struct SystemBridge<'a> {
+    mvus: &'a mut [Mvu],
+    csrs: &'a mut [MvuCsrFile],
+    launch_errors: &'a mut Vec<String>,
+}
+
+impl CsrBridge for SystemBridge<'_> {
+    fn csr_read(&mut self, hart: usize, csr: u16) -> Option<u32> {
+        let mvu = &self.mvus[hart];
+        if (0x7C0..=0x7FF).contains(&csr) {
+            return self.csrs[hart].read_cfg(csr - MVU_CSR_BASE);
+        }
+        match csr.checked_sub(0xBC0)? {
+            o if o == cmd_off::COMMAND => Some(0),
+            o if o == cmd_off::STATUS => {
+                let mut s = 0;
+                if mvu.state() == MvuState::Running {
+                    s |= status::BUSY;
+                }
+                if mvu.irq_pending() {
+                    s |= status::IRQ;
+                }
+                Some(s)
+            }
+            o if o == cmd_off::CYCLES_LO => Some(mvu.busy_cycles() as u32),
+            o if o == cmd_off::CYCLES_HI => Some((mvu.busy_cycles() >> 32) as u32),
+            o if o == cmd_off::JOBS_DONE => Some(mvu.jobs_done() as u32),
+            o if o == cmd_off::ID => Some(mvu.id as u32),
+            o if o == cmd_off::ACT_DEPTH => Some(mvu.act.depth() as u32),
+            o if o == cmd_off::WGT_DEPTH => Some(mvu.weights.depth() as u32),
+            o if o == cmd_off::VERSION => Some(0x0001_0000),
+            o if o == cmd_off::SCRATCH => Some(self.csrs[hart].scratch),
+            _ => None,
+        }
+    }
+
+    fn csr_write(&mut self, hart: usize, csr: u16, value: u32) -> bool {
+        if (0x7C0..=0x7FF).contains(&csr) {
+            return self.csrs[hart].write_cfg(csr - MVU_CSR_BASE, value);
+        }
+        let Some(off) = csr.checked_sub(0xBC0) else { return false };
+        match off {
+            o if o == cmd_off::COMMAND => {
+                if value & command::START != 0 {
+                    if self.mvus[hart].state() == MvuState::Running {
+                        self.launch_errors
+                            .push(format!("hart {hart}: START while MVU busy"));
+                        return false;
+                    }
+                    let job = self.csrs[hart].to_job_config();
+                    if let Err(e) = job.validate() {
+                        self.launch_errors.push(format!("hart {hart}: {e}"));
+                        return false;
+                    }
+                    self.mvus[hart].launch(job);
+                }
+                if value & command::CLEAR_IRQ != 0 {
+                    self.mvus[hart].clear_irq();
+                }
+                true
+            }
+            o if o == cmd_off::SCRATCH => {
+                self.csrs[hart].scratch = value;
+                true
+            }
+            // Status/counters are read-only.
+            _ => false,
+        }
+    }
+
+    fn irq_level(&mut self, hart: usize) -> bool {
+        self.mvus[hart].irq_pending()
+    }
+}
+
+/// The complete accelerator.
+pub struct System {
+    pub cpu: Barrel,
+    pub mvus: Vec<Mvu>,
+    pub xbar: Crossbar,
+    pub csrs: Vec<MvuCsrFile>,
+    launch_errors: Vec<String>,
+    cycles: u64,
+    max_cycles: u64,
+}
+
+impl System {
+    pub fn new(cfg: SystemConfig) -> Self {
+        assert_eq!(NUM_HARTS, NUM_MVUS, "one hart per MVU");
+        System {
+            cpu: Barrel::new(cfg.barrel),
+            mvus: (0..NUM_MVUS).map(|i| Mvu::new(i as u8, cfg.mvu)).collect(),
+            xbar: Crossbar::new(NUM_MVUS),
+            csrs: (0..NUM_MVUS).map(|_| MvuCsrFile::default()).collect(),
+            launch_errors: Vec::new(),
+            cycles: 0,
+            max_cycles: cfg.barrel.max_cycles,
+        }
+    }
+
+    /// Global clock.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Errors recorded by rejected job launches (surface for debugging).
+    pub fn launch_errors(&self) -> &[String] {
+        &self.launch_errors
+    }
+
+    /// Load a RISC-V program (already assembled) into Pito's IRAM.
+    pub fn load_program(&mut self, words: &[u32]) {
+        self.cpu.load_program(words);
+    }
+
+    /// Assemble and load a RISC-V program.
+    pub fn load_asm(&mut self, src: &str) -> Result<(), crate::pito::AsmError> {
+        let words = crate::pito::assemble(src)?;
+        self.load_program(&words);
+        Ok(())
+    }
+
+    /// Advance one clock cycle.
+    pub fn step(&mut self) -> Option<(usize, Trap)> {
+        // 1. Interconnect delivery (highest write-port priority).
+        for d in self.xbar.step() {
+            self.mvus[d.dest].act.write(d.addr, d.word);
+        }
+        // 2. CPU slot.
+        let fault = {
+            let mut bridge = SystemBridge {
+                mvus: &mut self.mvus,
+                csrs: &mut self.csrs,
+                launch_errors: &mut self.launch_errors,
+            };
+            self.cpu.step(&mut bridge)
+        };
+        // 3. MVU datapaths.
+        for m in 0..NUM_MVUS {
+            let writes = self.mvus[m].step();
+            if !writes.is_empty() {
+                self.xbar.push(m, writes);
+            }
+        }
+        self.cycles += 1;
+        fault
+    }
+
+    fn datapath_busy(&self) -> bool {
+        self.xbar.busy() || self.mvus.iter().any(|m| m.state() == MvuState::Running)
+    }
+
+    /// Run until the program finishes and the datapath drains.
+    pub fn run(&mut self) -> SystemExit {
+        loop {
+            if self.cycles >= self.max_cycles {
+                return SystemExit::MaxCycles;
+            }
+            if self.cpu.halted() && !self.datapath_busy() {
+                return SystemExit::Done;
+            }
+            if self.cpu.all_exited() && !self.datapath_busy() {
+                return SystemExit::AllExited;
+            }
+            if self.cpu.all_asleep()
+                && !self.datapath_busy()
+                && !self.mvus.iter().any(|m| m.irq_pending())
+            {
+                return SystemExit::Deadlock;
+            }
+            if let Some((hart, trap)) = self.step() {
+                if matches!(trap, Trap::MachineHalt) {
+                    continue;
+                }
+                return SystemExit::Fault { hart, trap };
+            }
+        }
+    }
+
+    /// Direct-drive API (no CPU): launch a job on one MVU and run the
+    /// datapath until idle. Returns MVP cycles the job consumed.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): only the launched MVU is stepped —
+    /// the other seven are architecturally idle, and stepping them cost 8×
+    /// in the original implementation. The crossbar is only stepped while
+    /// it holds traffic.
+    pub fn run_job(&mut self, mvu: usize, job: JobConfig) -> u64 {
+        let before = self.mvus[mvu].busy_cycles();
+        self.mvus[mvu].launch(job);
+        while self.mvus[mvu].state() == MvuState::Running || self.xbar.busy() {
+            if self.xbar.busy() {
+                for d in self.xbar.step() {
+                    self.mvus[d.dest].act.write(d.addr, d.word);
+                }
+            }
+            let writes = self.mvus[mvu].step();
+            if !writes.is_empty() {
+                self.xbar.push(mvu, writes);
+            }
+            self.cycles += 1;
+        }
+        self.mvus[mvu].clear_irq();
+        self.mvus[mvu].busy_cycles() - before
+    }
+
+    /// Sum of MVP busy cycles across the array (perf reporting).
+    pub fn total_mvu_busy_cycles(&self) -> u64 {
+        self.mvus.iter().map(|m| m.busy_cycles()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::csr_map::MvuCsrFile;
+    use crate::mvu::{AguCfg, OutputDest};
+    use crate::quant::{pack_block, Precision, QuantSerCfg};
+
+    fn identity_weights() -> Vec<[u64; 64]> {
+        // 1-bit weights: row r = lane r only → output = broadcast of x.
+        let mut w = [[0i32; 64]; 64];
+        for r in 0..64 {
+            w[r][r] = 1;
+        }
+        let rows: Vec<Vec<u64>> = w.iter().map(|r| pack_block(r, Precision::u(1))).collect();
+        vec![std::array::from_fn(|r| rows[r][0])]
+    }
+
+    fn simple_job(dest: OutputDest) -> JobConfig {
+        JobConfig {
+            aprec: Precision::u(4),
+            wprec: Precision::u(1),
+            tiles: 1,
+            outputs: 1,
+            a_agu: AguCfg::from_strides(0, &[]),
+            w_agu: AguCfg::from_strides(0, &[]),
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::from_strides(100, &[]),
+            scaler_en: false,
+            bias_en: false,
+            relu_en: false,
+            pool_count: 1,
+            quant: QuantSerCfg { msb_index: 3, out_bits: 4, saturate: false },
+            dest,
+        }
+    }
+
+    /// Program a job entirely through the CSR interface from RISC-V code.
+    #[test]
+    fn csr_programmed_job_via_pito() {
+        let mut sys = System::new(SystemConfig::default());
+        let x: [i32; 64] = std::array::from_fn(|i| (i % 16) as i32);
+        sys.mvus[0].act.load(0, &pack_block(&x, Precision::u(4)));
+        sys.mvus[0].weights.load(0, &identity_weights());
+
+        // Generate the CSR write sequence for the job and wrap it in asm.
+        let job = simple_job(OutputDest::SelfRam);
+        let file = MvuCsrFile::from_job_config(&job);
+        let mut asm = String::new();
+        asm.push_str("csrr t0, mhartid\nbnez t0, done\n");
+        for (csr, val) in file.write_sequence() {
+            asm.push_str(&format!("li t1, {val}\ncsrw {:#x}, t1\n", csr));
+        }
+        asm.push_str("li t1, 1\ncsrw mvu_command, t1\n"); // START
+        asm.push_str("wait:\ncsrr t2, mvu_status\nandi t2, t2, 2\nbeqz t2, wait\n");
+        asm.push_str("li t1, 2\ncsrw mvu_command, t1\n"); // CLEAR_IRQ
+        asm.push_str("done:\necall\n");
+
+        sys.load_asm(&asm).unwrap();
+        let exit = sys.run();
+        assert_eq!(exit, SystemExit::AllExited, "errors: {:?}", sys.launch_errors());
+
+        // Identity weights: output = x, written at 100 as 4 planes.
+        let words: Vec<u64> = (0..4).map(|p| sys.mvus[0].act.read(100 + p)).collect();
+        let got = crate::quant::unpack_block(&words, Precision::u(4));
+        assert_eq!(got.to_vec(), x.to_vec());
+        assert_eq!(sys.mvus[0].jobs_done(), 1);
+    }
+
+    /// MVU 0 forwards its output through the crossbar into MVU 1's RAM.
+    #[test]
+    fn xbar_forwarding_between_mvus() {
+        let mut sys = System::new(SystemConfig::default());
+        let x: [i32; 64] = std::array::from_fn(|i| ((i * 3) % 16) as i32);
+        sys.mvus[0].act.load(0, &pack_block(&x, Precision::u(4)));
+        sys.mvus[0].weights.load(0, &identity_weights());
+
+        let cycles = sys.run_job(0, simple_job(OutputDest::Xbar { dest_mask: 0b10 }));
+        assert_eq!(cycles, 4, "4b×1b single tile");
+        let words: Vec<u64> = (0..4).map(|p| sys.mvus[1].act.read(100 + p)).collect();
+        let got = crate::quant::unpack_block(&words, Precision::u(4));
+        assert_eq!(got.to_vec(), x.to_vec());
+        assert_eq!(sys.xbar.delivered(), 4);
+    }
+
+    /// Interrupt-driven completion: hart sleeps in wfi until the MVU IRQ.
+    #[test]
+    fn wfi_wakeup_on_mvu_irq() {
+        let mut sys = System::new(SystemConfig::default());
+        let x = [3i32; 64];
+        sys.mvus[0].act.load(0, &pack_block(&x, Precision::u(4)));
+        sys.mvus[0].weights.load(0, &identity_weights());
+
+        let job = simple_job(OutputDest::SelfRam);
+        let file = MvuCsrFile::from_job_config(&job);
+        let mut asm = String::new();
+        asm.push_str("csrr t0, mhartid\nbnez t0, done\n");
+        for (csr, val) in file.write_sequence() {
+            asm.push_str(&format!("li t1, {val}\ncsrw {:#x}, t1\n", csr));
+        }
+        // Start, then wfi until the IRQ line wakes us (interrupts globally
+        // disabled: wfi still wakes on pending, per the spec).
+        asm.push_str("li t1, 1\ncsrw mvu_command, t1\nwfi\n");
+        asm.push_str("csrr t2, mvu_status\nandi t2, t2, 2\nsw t2, 0(zero)\n");
+        asm.push_str("li t1, 2\ncsrw mvu_command, t1\ndone:\necall\n");
+
+        sys.load_asm(&asm).unwrap();
+        let exit = sys.run();
+        assert_eq!(exit, SystemExit::AllExited);
+        assert_eq!(sys.cpu.read_dram_word(0), 2, "IRQ bit was set at wakeup");
+    }
+
+    /// Launching while busy is rejected and recorded.
+    #[test]
+    fn double_start_rejected() {
+        let mut sys = System::new(SystemConfig::default());
+        sys.mvus[0].act.load(0, &pack_block(&[1; 64], Precision::u(4)));
+        sys.mvus[0].weights.load(0, &identity_weights());
+        // Long enough that the MVU is still busy when the hart's next slot
+        // comes around (a hart executes only once every 8 cycles).
+        let mut job = simple_job(OutputDest::SelfRam);
+        job.outputs = 64;
+        job.a_agu = AguCfg::from_strides(0, &[(3, 0), (63, 0)]);
+        job.o_agu = AguCfg::from_strides(100, &[(63, 4)]);
+        let file = MvuCsrFile::from_job_config(&job);
+        let mut asm = String::new();
+        asm.push_str("csrr t0, mhartid\nbnez t0, done\n");
+        for (csr, val) in file.write_sequence() {
+            asm.push_str(&format!("li t1, {val}\ncsrw {:#x}, t1\n", csr));
+        }
+        // Two immediate STARTs: the second must fault (illegal CSR write).
+        asm.push_str("li t1, 1\ncsrw mvu_command, t1\ncsrw mvu_command, t1\n");
+        asm.push_str("done:\necall\n");
+        sys.load_asm(&asm).unwrap();
+        let exit = sys.run();
+        assert!(
+            matches!(exit, SystemExit::Fault { hart: 0, .. }),
+            "expected fault, got {exit:?} ({:?})",
+            sys.launch_errors()
+        );
+        assert_eq!(sys.launch_errors().len(), 1);
+    }
+}

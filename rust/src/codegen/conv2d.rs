@@ -1,0 +1,375 @@
+//! Conv2D job generation (§3.1.3): "Conv2D operations are programmed to
+//! compute one row of the output activation map per job, requiring four
+//! nested loops" — plus the bit-combination replay level, which together
+//! fill exactly the five AGU loops:
+//!
+//! ```text
+//! act AGU  : L0 cb · L1 fx · L2 fy · L3 bit-combo replay · L4 ox
+//! wgt AGU  : L0 cb · L1 fx · L2 fy · L3 bit-combo replay · L4 ox (stride 0)
+//! ```
+//!
+//! One job computes one output row for one 64-channel output set.
+
+use crate::model::ConvLayer;
+use crate::mvu::{AguCfg, JobConfig, OutputDest};
+use crate::quant::QuantSerCfg;
+
+use super::layout::{ActLayout, WeightLayout};
+
+/// How row padding is handled (see DESIGN.md §1 and `layout`):
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgePolicy {
+    /// Materialise zero rows in RAM and compute every output row on the
+    /// MVU. Bit-exact full tensors, cycles = `b_a·b_w·C_b·F²·C_os·W·H`.
+    PadInRam,
+    /// Compute only rows whose receptive field needs no row padding — the
+    /// paper's Table-3 accounting. Edge rows are produced host-side.
+    SkipEdges,
+}
+
+/// Rows computed on the MVU under `policy`.
+pub fn rows_computed(layer: &ConvLayer, policy: EdgePolicy) -> usize {
+    match policy {
+        EdgePolicy::PadInRam => layer.out_h(),
+        EdgePolicy::SkipEdges => layer.full_rows(),
+    }
+}
+
+/// Global output-row index of local job row `r`.
+pub fn global_row(layer: &ConvLayer, policy: EdgePolicy, r: usize) -> usize {
+    match policy {
+        EdgePolicy::PadInRam => r,
+        EdgePolicy::SkipEdges => r + layer.pad.div_ceil(layer.stride),
+    }
+}
+
+/// Exact MVP cycles for one layer under `policy` — the analytic model that
+/// reproduces Table 3 (SkipEdges):
+/// `b_a·b_w · C_b · F_H·F_W · C_os · W_out · rows`.
+pub fn layer_cycles(layer: &ConvLayer, policy: EdgePolicy) -> u64 {
+    layer.aprec.bits as u64
+        * layer.wprec.bits as u64
+        * layer.ci_blocks() as u64
+        * (layer.fh * layer.fw) as u64
+        * layer.co_sets() as u64
+        * layer.out_w() as u64
+        * rows_computed(layer, policy) as u64
+}
+
+/// Generate the job sequence for one conv layer.
+///
+/// * `in_l` — input activation layout in this MVU's act RAM;
+/// * `out_l` — output layout in the *destination* RAM (next MVU via the
+///   crossbar when `dest_mask` is `Some`, else this MVU's own RAM);
+/// * `w_l` — weight layout in this MVU's weight RAM;
+/// * `sbase`/`bbase` — scaler/bias RAM base (one word per output set).
+///
+/// Jobs are ordered row-major, output-channel sets inner, so a full output
+/// row exists once `co_sets` consecutive jobs finish (the unit the pipeline
+/// synchronisation counts).
+pub fn conv_jobs(
+    layer: &ConvLayer,
+    in_l: &ActLayout,
+    out_l: &ActLayout,
+    w_l: &WeightLayout,
+    sbase: u32,
+    bbase: u32,
+    dest_mask: Option<u8>,
+    policy: EdgePolicy,
+) -> Vec<JobConfig> {
+    assert_eq!(in_l.cb, layer.ci_blocks());
+    assert_eq!(in_l.prec, layer.aprec);
+    assert_eq!(out_l.prec, layer.oprec);
+    assert_eq!(out_l.cb, layer.co_sets());
+    assert_eq!((out_l.h, out_l.w), (layer.out_h(), layer.out_w()));
+    assert_eq!((w_l.cos, w_l.cb), (layer.co_sets(), layer.ci_blocks()));
+    assert_eq!(in_l.pad, layer.pad, "column padding must match the conv");
+    if policy == EdgePolicy::PadInRam {
+        assert!(in_l.pad_rows, "PadInRam needs materialised row padding");
+    }
+
+    let combos = layer.aprec.bits as u32 * layer.wprec.bits as u32;
+    let tiles = (layer.ci_blocks() * layer.fh * layer.fw) as u32;
+    let w_out = layer.out_w() as u32;
+    let ab = layer.aprec.bits as i64;
+    let wb = layer.wprec.bits as i64;
+    let pix = in_l.pixel_words() as i64;
+    let row = in_l.row_words() as i64;
+
+    let quant = QuantSerCfg {
+        msb_index: layer.quant.quant_msb,
+        out_bits: layer.oprec.bits,
+        saturate: true,
+    };
+    let dest = match dest_mask {
+        Some(m) => OutputDest::Xbar { dest_mask: m },
+        None => OutputDest::SelfRam,
+    };
+
+    let mut jobs = Vec::new();
+    for r in 0..rows_computed(layer, policy) {
+        // Stored input row where this output row's window starts.
+        let oy = global_row(layer, policy, r);
+        let start_row = match policy {
+            EdgePolicy::PadInRam => oy * layer.stride, // stored incl. pad
+            EdgePolicy::SkipEdges => oy * layer.stride - layer.pad, // raw
+        };
+        let a_base = in_l.addr(start_row, 0, 0);
+        for cos in 0..layer.co_sets() {
+            let a_agu = AguCfg::from_strides(
+                a_base,
+                &[
+                    (layer.ci_blocks() as u32 - 1, ab),          // cb
+                    (layer.fw as u32 - 1, pix),                  // fx
+                    (layer.fh as u32 - 1, row),                  // fy
+                    (combos - 1, 0),                             // bit-combo replay
+                    (w_out - 1, layer.stride as i64 * pix),      // ox
+                ],
+            );
+            let w_agu = AguCfg::from_strides(
+                w_l.addr(cos, 0, 0, 0),
+                &[
+                    (layer.ci_blocks() as u32 - 1, wb),
+                    (layer.fw as u32 - 1, (layer.ci_blocks() as i64) * wb),
+                    (layer.fh as u32 - 1, (layer.fw * layer.ci_blocks()) as i64 * wb),
+                    (combos - 1, 0),
+                    (w_out - 1, 0), // weights reused across output columns
+                ],
+            );
+            let o_base = out_l.addr(out_l.stored_row(oy), out_l.stored_col(0), cos);
+            let o_agu = AguCfg::from_strides(
+                o_base,
+                &[(w_out - 1, out_l.pixel_words() as i64)],
+            );
+            jobs.push(JobConfig {
+                aprec: layer.aprec,
+                wprec: layer.wprec,
+                tiles,
+                outputs: w_out,
+                a_agu,
+                w_agu,
+                s_agu: AguCfg::from_strides(sbase + cos as u32, &[]),
+                b_agu: AguCfg::from_strides(bbase + cos as u32, &[]),
+                o_agu,
+                scaler_en: true,
+                bias_en: true,
+                relu_en: layer.relu,
+                pool_count: 1,
+                quant,
+                dest,
+            });
+        }
+    }
+    debug_assert_eq!(
+        jobs.iter().map(|j| j.cycles()).sum::<u64>(),
+        layer_cycles(layer, policy)
+    );
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{System, SystemConfig};
+    use crate::codegen::layout::load_scaler_bias;
+    use crate::model::zoo::{resnet9_cifar10, Rng};
+    use crate::model::{ConvLayer, QuantSpec};
+    use crate::quant::Precision;
+    use crate::sim::{conv2d_i32, requant_i32, Tensor3};
+
+    /// Build layouts for a layer: input at `abase`, output at `obase`.
+    fn layouts(
+        layer: &ConvLayer,
+        abase: u32,
+        obase: u32,
+        policy: EdgePolicy,
+        out_pad_rows: bool,
+    ) -> (ActLayout, ActLayout, WeightLayout) {
+        let in_l = ActLayout {
+            base: abase,
+            h: layer.in_h,
+            w: layer.in_w,
+            pad: layer.pad,
+            pad_rows: policy == EdgePolicy::PadInRam,
+            cb: layer.ci_blocks(),
+            prec: layer.aprec,
+        };
+        let out_l = ActLayout {
+            base: obase,
+            h: layer.out_h(),
+            w: layer.out_w(),
+            pad: layer.pad,
+            pad_rows: out_pad_rows,
+            cb: layer.co_sets(),
+            prec: layer.oprec,
+        };
+        let w_l = WeightLayout {
+            base: 0,
+            cos: layer.co_sets(),
+            fh: layer.fh,
+            fw: layer.fw,
+            cb: layer.ci_blocks(),
+            prec: layer.wprec,
+        };
+        (in_l, out_l, w_l)
+    }
+
+    /// Golden reference for the whole layer.
+    fn golden_layer(layer: &ConvLayer, input: &Tensor3) -> Tensor3 {
+        let acc = conv2d_i32(input, &layer.weights, layer.spec());
+        requant_i32(
+            &acc,
+            &layer.quant.scale,
+            &layer.quant.bias,
+            QuantSerCfg {
+                msb_index: layer.quant.quant_msb,
+                out_bits: layer.oprec.bits,
+                saturate: true,
+            },
+            layer.relu,
+        )
+    }
+
+    fn random_input(layer: &ConvLayer, seed: u64) -> Tensor3 {
+        let mut rng = Rng(seed);
+        Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| {
+            rng.range_i32(0, layer.aprec.max_value())
+        })
+    }
+
+    /// Run one layer on MVU 0 (self-RAM output) and compare with golden.
+    fn check_layer(layer: &ConvLayer, policy: EdgePolicy) {
+        let (in_l, out_l, w_l) = layouts(layer, 0, 16_384, policy, false);
+        let mut sys = System::new(SystemConfig::default());
+        let input = random_input(layer, 42 + layer.co as u64);
+        in_l.load(&mut sys.mvus[0].act, &input);
+        w_l.load(&mut sys.mvus[0].weights, &layer.weights, layer.ci, layer.co);
+        load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
+        let jobs = conv_jobs(layer, &in_l, &out_l, &w_l, 0, 0, None, policy);
+        let mut total = 0;
+        for job in jobs {
+            total += sys.run_job(0, job);
+        }
+        assert_eq!(total, layer_cycles(layer, policy), "cycle accounting");
+
+        let got = out_l.read(&sys.mvus[0].act, layer.co);
+        let want = golden_layer(layer, &input);
+        let r0 = global_row(layer, policy, 0);
+        let rows = rows_computed(layer, policy);
+        for c in 0..layer.co {
+            for y in r0..r0 + rows {
+                for x in 0..layer.out_w() {
+                    assert_eq!(
+                        got.get(c, y, x),
+                        want.get(c, y, x),
+                        "{} mismatch at c={c} y={y} x={x}",
+                        layer.name
+                    );
+                }
+            }
+        }
+    }
+
+    fn small_layer(ci: usize, co: usize, stride: usize, in_h: usize) -> ConvLayer {
+        let mut rng = Rng(7);
+        let wprec = Precision::s(2);
+        ConvLayer {
+            name: format!("t{ci}x{co}s{stride}"),
+            ci,
+            co,
+            fh: 3,
+            fw: 3,
+            stride,
+            pad: 1,
+            in_h,
+            in_w: in_h,
+            aprec: Precision::u(2),
+            wprec,
+            oprec: Precision::u(2),
+            relu: true,
+            weights: (0..co * ci * 9).map(|_| rng.range_i32(-2, 1)).collect(),
+            quant: QuantSpec {
+                scale: (0..co).map(|_| rng.range_i32(1, 3) as u16).collect(),
+                bias: (0..co).map(|_| rng.range_i32(-32, 32)).collect(),
+                quant_msb: 11,
+            },
+        }
+    }
+
+    #[test]
+    fn conv_padinram_matches_golden() {
+        check_layer(&small_layer(64, 64, 1, 8), EdgePolicy::PadInRam);
+    }
+
+    #[test]
+    fn conv_skipedges_matches_golden_interior() {
+        check_layer(&small_layer(64, 64, 1, 8), EdgePolicy::SkipEdges);
+    }
+
+    #[test]
+    fn conv_stride2() {
+        check_layer(&small_layer(64, 128, 2, 8), EdgePolicy::PadInRam);
+        check_layer(&small_layer(64, 128, 2, 8), EdgePolicy::SkipEdges);
+    }
+
+    #[test]
+    fn conv_multi_block_channels() {
+        check_layer(&small_layer(128, 128, 1, 6), EdgePolicy::PadInRam);
+        check_layer(&small_layer(192, 64, 2, 6), EdgePolicy::SkipEdges);
+    }
+
+    #[test]
+    fn conv_nonmultiple_channels_pad() {
+        // 80 in / 70 out channels: blocks are padded with zeros.
+        check_layer(&small_layer(80, 70, 1, 6), EdgePolicy::PadInRam);
+    }
+
+    /// Table 3: per-layer cycles of the 2b/2b ResNet9 — must be *exact*.
+    #[test]
+    fn table3_resnet9_cycles_exact() {
+        let m = resnet9_cifar10(2, 2);
+        let expected = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
+        let mut total = 0;
+        for (l, &want) in m.layers.iter().zip(&expected) {
+            let got = layer_cycles(l, EdgePolicy::SkipEdges);
+            assert_eq!(got, want, "{}", l.name);
+            total += got;
+        }
+        assert_eq!(total, 194_688, "Table 3 total");
+    }
+
+    /// The generated job streams themselves account for the same cycles
+    /// when executed (simulator-measured, layer by layer).
+    #[test]
+    fn table3_simulated_cycles_for_small_layers() {
+        // Running all of ResNet9 in this unit test is slow in debug builds;
+        // the full measured run lives in tests/e2e and the bench. Here we
+        // verify the measured = analytic identity on the two smallest
+        // layers.
+        let m = resnet9_cifar10(2, 2);
+        for l in [&m.layers[6], &m.layers[7]] {
+            let (in_l, out_l, w_l) = layouts(l, 0, 20_000, EdgePolicy::SkipEdges, false);
+            let mut sys = System::new(SystemConfig::default());
+            let input = random_input(l, 1);
+            in_l.load(&mut sys.mvus[0].act, &input);
+            w_l.load(&mut sys.mvus[0].weights, &l.weights, l.ci, l.co);
+            let jobs = conv_jobs(l, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges);
+            let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j)).sum();
+            assert_eq!(measured, layer_cycles(l, EdgePolicy::SkipEdges), "{}", l.name);
+        }
+    }
+
+    /// Mixed precision: 1-bit weights halve the cycles vs 2-bit.
+    #[test]
+    fn mixed_precision_cycle_scaling() {
+        let l2 = small_layer(64, 64, 1, 8);
+        let mut l1 = l2.clone();
+        l1.wprec = Precision::s(1);
+        l1.weights = l2.weights.iter().map(|&w| w.clamp(-1, 0)).collect();
+        assert_eq!(
+            layer_cycles(&l1, EdgePolicy::PadInRam) * 2,
+            layer_cycles(&l2, EdgePolicy::PadInRam)
+        );
+        check_layer(&l1, EdgePolicy::PadInRam);
+    }
+}

@@ -1,0 +1,258 @@
+//! GEMV job generation (§3.1.3): "For GEMV, two nested loops are required
+//! for both activations and weights" — the input-block loop and the
+//! bit-combination replay; a third level walks output row sets when the
+//! matrix has more than 64 rows.
+//!
+//! Weights are a set of 64×64 tiles: tile `(ros, cb)` covers output rows
+//! `ros·64..` and input columns `cb·64..`; the vector is a chain of
+//! 64-element blocks.
+
+use crate::mvu::{AguCfg, JobConfig, OutputDest};
+use crate::quant::{Precision, QuantSerCfg};
+
+/// GEMV geometry + quantization: `y[rows] = requant(W[rows×cols] · x[cols])`.
+#[derive(Debug, Clone)]
+pub struct GemvSpec {
+    pub rows: usize,
+    pub cols: usize,
+    pub aprec: Precision,
+    pub wprec: Precision,
+    pub oprec: Precision,
+    pub relu: bool,
+    pub quant_msb: u8,
+}
+
+impl GemvSpec {
+    pub fn row_sets(&self) -> usize {
+        self.rows.div_ceil(64)
+    }
+    pub fn col_blocks(&self) -> usize {
+        self.cols.div_ceil(64)
+    }
+    /// Analytic cycles: `b_a·b_w · C_b · R_os`.
+    pub fn cycles(&self) -> u64 {
+        self.aprec.bits as u64
+            * self.wprec.bits as u64
+            * self.col_blocks() as u64
+            * self.row_sets() as u64
+    }
+
+    /// Weight-RAM word address of tile `(ros, cb)`, plane 0.
+    pub fn w_addr(&self, base: u32, ros: usize, cb: usize) -> u32 {
+        base + ((ros * self.col_blocks() + cb) * self.wprec.bits as usize) as u32
+    }
+
+    /// Build the weight image from a row-major `rows×cols` matrix.
+    pub fn weight_image(&self, base_check: &[i32]) -> Vec<[u64; 64]> {
+        assert_eq!(base_check.len(), self.rows * self.cols);
+        let mut out =
+            vec![[0u64; 64]; self.row_sets() * self.col_blocks() * self.wprec.bits as usize];
+        for ros in 0..self.row_sets() {
+            for cb in 0..self.col_blocks() {
+                let mut rows_packed = Vec::with_capacity(64);
+                for r in 0..64 {
+                    let row = ros * 64 + r;
+                    let mut lane = [0i32; 64];
+                    if row < self.rows {
+                        for l in 0..64 {
+                            let c = cb * 64 + l;
+                            if c < self.cols {
+                                lane[l] = base_check[row * self.cols + c];
+                            }
+                        }
+                    }
+                    rows_packed.push(crate::quant::pack_block(&lane, self.wprec));
+                }
+                let at = (self.w_addr(0, ros, cb)) as usize;
+                for p in 0..self.wprec.bits as usize {
+                    out[at + p] = std::array::from_fn(|r| rows_packed[r][p]);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Generate the (single) GEMV job.
+///
+/// * activations: `col_blocks` bit-plane blocks at `abase`;
+/// * weights: tiles at `wbase`;
+/// * output: `row_sets` blocks of `oprec` planes at `obase`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_job(
+    spec: &GemvSpec,
+    abase: u32,
+    wbase: u32,
+    obase: u32,
+    sbase: u32,
+    bbase: u32,
+    dest_mask: Option<u8>,
+) -> JobConfig {
+    let combos = spec.aprec.bits as u32 * spec.wprec.bits as u32;
+    let cb = spec.col_blocks() as u32;
+    let ros = spec.row_sets() as u32;
+    let ab = spec.aprec.bits as i64;
+    let wb = spec.wprec.bits as i64;
+    JobConfig {
+        aprec: spec.aprec,
+        wprec: spec.wprec,
+        tiles: cb,
+        outputs: ros,
+        a_agu: AguCfg::from_strides(abase, &[(cb - 1, ab), (combos - 1, 0), (ros - 1, 0)]),
+        w_agu: AguCfg::from_strides(
+            wbase,
+            &[(cb - 1, wb), (combos - 1, 0), (ros - 1, cb as i64 * wb)],
+        ),
+        s_agu: AguCfg::from_strides(sbase, &[(ros - 1, 1)]),
+        b_agu: AguCfg::from_strides(bbase, &[(ros - 1, 1)]),
+        o_agu: AguCfg::from_strides(obase, &[(ros - 1, spec.oprec.bits as i64)]),
+        scaler_en: true,
+        bias_en: true,
+        relu_en: spec.relu,
+        pool_count: 1,
+        quant: QuantSerCfg {
+            msb_index: spec.quant_msb,
+            out_bits: spec.oprec.bits,
+            saturate: true,
+        },
+        dest: match dest_mask {
+            Some(m) => OutputDest::Xbar { dest_mask: m },
+            None => OutputDest::SelfRam,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{System, SystemConfig};
+    use crate::codegen::layout::load_scaler_bias;
+    use crate::model::zoo::Rng;
+    use crate::quant::{quantser, BitTensor, Fixed};
+    use crate::sim::gemv_i32;
+
+    fn golden(spec: &GemvSpec, w: &[i32], x: &[i32], scale: &[u16], bias: &[i32]) -> Vec<i32> {
+        let acc = gemv_i32(w, x, spec.rows, spec.cols);
+        acc.iter()
+            .enumerate()
+            .map(|(r, &v)| {
+                let mut f = Fixed(v).scale(scale[r]).bias(bias[r]);
+                if spec.relu {
+                    f = f.relu();
+                }
+                quantser(
+                    f.0,
+                    QuantSerCfg {
+                        msb_index: spec.quant_msb,
+                        out_bits: spec.oprec.bits,
+                        saturate: true,
+                    },
+                ) as i32
+            })
+            .collect()
+    }
+
+    fn run_spec(spec: GemvSpec, seed: u64) {
+        let mut rng = Rng(seed);
+        let w: Vec<i32> = (0..spec.rows * spec.cols)
+            .map(|_| rng.range_i32(spec.wprec.min_value(), spec.wprec.max_value()))
+            .collect();
+        let x_real: Vec<i32> =
+            (0..spec.cols).map(|_| rng.range_i32(0, spec.aprec.max_value())).collect();
+        let scale: Vec<u16> = (0..spec.rows.div_ceil(64) * 64)
+            .map(|_| rng.range_i32(1, 3) as u16)
+            .collect();
+        let bias: Vec<i32> =
+            (0..spec.rows.div_ceil(64) * 64).map(|_| rng.range_i32(-16, 16)).collect();
+
+        let mut sys = System::new(SystemConfig::default());
+        // Activations: pad to block multiple.
+        let mut x = x_real.clone();
+        x.resize(spec.col_blocks() * 64, 0);
+        let img = BitTensor::pack(&x, spec.aprec);
+        sys.mvus[0].act.load(0, &img.words);
+        sys.mvus[0].weights.load(0, &spec.weight_image(&w));
+        load_scaler_bias(&mut sys.mvus[0], 0, &scale, &bias);
+
+        let job = gemv_job(&spec, 0, 0, 8000, 0, 0, None);
+        let cycles = sys.run_job(0, job);
+        assert_eq!(cycles, spec.cycles());
+
+        let want = golden(&spec, &w, &x_real, &scale, &bias);
+        for ros in 0..spec.row_sets() {
+            let words: Vec<u64> = (0..spec.oprec.bits as u32)
+                .map(|p| sys.mvus[0].act.read(8000 + ros as u32 * spec.oprec.bits as u32 + p))
+                .collect();
+            let got = crate::quant::unpack_block(&words, spec.oprec);
+            for r in 0..64 {
+                let row = ros * 64 + r;
+                if row < spec.rows {
+                    assert_eq!(got[r], want[row], "row {row}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_single_tile() {
+        run_spec(
+            GemvSpec {
+                rows: 64,
+                cols: 64,
+                aprec: Precision::u(2),
+                wprec: Precision::s(2),
+                oprec: Precision::u(8),
+                relu: true,
+                quant_msb: 8,
+            },
+            11,
+        );
+    }
+
+    #[test]
+    fn gemv_multi_tile() {
+        run_spec(
+            GemvSpec {
+                rows: 192,
+                cols: 512,
+                aprec: Precision::u(2),
+                wprec: Precision::s(2),
+                oprec: Precision::u(4),
+                relu: true,
+                quant_msb: 10,
+            },
+            22,
+        );
+    }
+
+    #[test]
+    fn gemv_ragged_dims() {
+        run_spec(
+            GemvSpec {
+                rows: 10, // the ResNet9 classifier head shape
+                cols: 512,
+                aprec: Precision::u(2),
+                wprec: Precision::s(4),
+                oprec: Precision::u(8),
+                relu: false,
+                quant_msb: 12,
+            },
+            33,
+        );
+    }
+
+    #[test]
+    fn gemv_cycles_formula() {
+        let s = GemvSpec {
+            rows: 512,
+            cols: 512,
+            aprec: Precision::u(2),
+            wprec: Precision::s(2),
+            oprec: Precision::u(2),
+            relu: true,
+            quant_msb: 9,
+        };
+        // 8 row sets × 8 col blocks × 4 combos.
+        assert_eq!(s.cycles(), 256);
+    }
+}

@@ -1,0 +1,355 @@
+//! RAM address layouts (§3.1.2).
+//!
+//! **Activations** are NHWC with the channel dimension innermost, stored as
+//! 64-channel blocks of `aprec` bit-plane words. Column zero-padding is
+//! *materialised* in the RAM (writes never touch it, RAM resets to zero, so
+//! edge output columns read correct zeros at uniform cost — this is how the
+//! paper charges full `W_out` per row job while the AGU walk stays regular).
+//! Row padding is materialised only in `pad_rows` layouts (the full-chain
+//! on-accelerator mode); the Table-3-exact mode computes only the paddingless
+//! rows, like the paper.
+//!
+//! **Weights** use the `C_o,s · F_H · F_W · C_b` layout: one 4096-bit word
+//! per (output-channel set, kernel position, input-channel block, bit plane).
+
+use crate::mvu::{ActRam, WeightRam};
+use crate::quant::{pack_block, Precision, BLOCK};
+use crate::sim::Tensor3;
+
+/// Activation tensor layout within an activation RAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActLayout {
+    /// First word address of the region.
+    pub base: u32,
+    /// Raw tensor height (rows, without padding).
+    pub h: usize,
+    /// Raw tensor width (columns, without padding).
+    pub w: usize,
+    /// Materialised symmetric padding (columns always; rows iff `pad_rows`).
+    pub pad: usize,
+    /// Whether row padding is materialised.
+    pub pad_rows: bool,
+    /// Channel blocks (`ceil(C/64)`).
+    pub cb: usize,
+    /// Element precision.
+    pub prec: Precision,
+}
+
+impl ActLayout {
+    pub fn rows_stored(&self) -> usize {
+        self.h + if self.pad_rows { 2 * self.pad } else { 0 }
+    }
+    pub fn cols_stored(&self) -> usize {
+        self.w + 2 * self.pad
+    }
+    /// Words per pixel (all channel blocks, all planes).
+    pub fn pixel_words(&self) -> u32 {
+        (self.cb * self.prec.bits as usize) as u32
+    }
+    /// Words per stored row.
+    pub fn row_words(&self) -> u32 {
+        self.cols_stored() as u32 * self.pixel_words()
+    }
+    /// Region size in words.
+    pub fn size_words(&self) -> u32 {
+        self.rows_stored() as u32 * self.row_words()
+    }
+    /// Word address of plane 0 of `(stored_row, stored_col, channel_block)`.
+    pub fn addr(&self, row: usize, col: usize, cb: usize) -> u32 {
+        debug_assert!(row < self.rows_stored() && col < self.cols_stored() && cb < self.cb);
+        self.base
+            + (row as u32 * self.cols_stored() as u32 + col as u32) * self.pixel_words()
+            + (cb * self.prec.bits as usize) as u32
+    }
+    /// Stored coordinates of raw element row/col.
+    pub fn stored_row(&self, y: usize) -> usize {
+        y + if self.pad_rows { self.pad } else { 0 }
+    }
+    pub fn stored_col(&self, x: usize) -> usize {
+        x + self.pad
+    }
+
+    /// Build the RAM image (offset from `base`) for a CHW tensor; channels
+    /// beyond `t.c` and padding positions are zero.
+    pub fn image(&self, t: &Tensor3) -> Vec<u64> {
+        assert_eq!((t.h, t.w), (self.h, self.w), "tensor/layout shape mismatch");
+        assert!(t.c <= self.cb * BLOCK, "too many channels for layout");
+        let mut words = vec![0u64; self.size_words() as usize];
+        for y in 0..t.h {
+            for x in 0..t.w {
+                for cb in 0..self.cb {
+                    let mut block = [0i32; BLOCK];
+                    for l in 0..BLOCK {
+                        let c = cb * BLOCK + l;
+                        if c < t.c {
+                            block[l] = t.get(c, y, x);
+                        }
+                    }
+                    let planes = pack_block(&block, self.prec);
+                    let at =
+                        (self.addr(self.stored_row(y), self.stored_col(x), cb) - self.base) as usize;
+                    words[at..at + planes.len()].copy_from_slice(&planes);
+                }
+            }
+        }
+        words
+    }
+
+    /// Load the image into an activation RAM at `base`.
+    pub fn load(&self, ram: &mut ActRam, t: &Tensor3) {
+        let img = self.image(t);
+        ram.load(self.base, &img);
+    }
+
+    /// Read a CHW tensor of `c` channels back out of the RAM.
+    pub fn read(&self, ram: &ActRam, c: usize) -> Tensor3 {
+        assert!(c <= self.cb * BLOCK);
+        let mut t = Tensor3::zeros(c, self.h, self.w);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for cb in 0..self.cb {
+                    let at = self.addr(self.stored_row(y), self.stored_col(x), cb);
+                    let words: Vec<u64> =
+                        (0..self.prec.bits as u32).map(|p| ram.read(at + p)).collect();
+                    let vals = crate::quant::unpack_block(&words, self.prec);
+                    for l in 0..BLOCK {
+                        let ch = cb * BLOCK + l;
+                        if ch < c {
+                            t.set(ch, y, x, vals[l]);
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Conv weight layout within a weight RAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightLayout {
+    pub base: u32,
+    /// Output channel sets (`ceil(C_o/64)`).
+    pub cos: usize,
+    pub fh: usize,
+    pub fw: usize,
+    /// Input channel blocks.
+    pub cb: usize,
+    pub prec: Precision,
+}
+
+impl WeightLayout {
+    /// Word address of plane 0 for tile `(cos, fy, fx, cb)`.
+    pub fn addr(&self, cos: usize, fy: usize, fx: usize, cb: usize) -> u32 {
+        debug_assert!(cos < self.cos && fy < self.fh && fx < self.fw && cb < self.cb);
+        self.base
+            + ((((cos * self.fh + fy) * self.fw + fx) * self.cb + cb)
+                * self.prec.bits as usize) as u32
+    }
+    /// Words per output-channel set (the `wbase` stride between cos jobs).
+    pub fn cos_words(&self) -> u32 {
+        (self.fh * self.fw * self.cb * self.prec.bits as usize) as u32
+    }
+    pub fn size_words(&self) -> u32 {
+        self.cos as u32 * self.cos_words()
+    }
+
+    /// Build the bit-transposed weight image from flat `[co][ci][fh][fw]`
+    /// weights. Lanes beyond `co`/`ci` pad with zero.
+    pub fn image(&self, weights: &[i32], ci: usize, co: usize) -> Vec<[u64; 64]> {
+        assert_eq!(weights.len(), co * ci * self.fh * self.fw);
+        assert!(co <= self.cos * BLOCK && ci <= self.cb * BLOCK);
+        let mut out = vec![[0u64; 64]; self.size_words() as usize];
+        let widx = |o: usize, i: usize, fy: usize, fx: usize| {
+            ((o * ci + i) * self.fh + fy) * self.fw + fx
+        };
+        for cos in 0..self.cos {
+            for fy in 0..self.fh {
+                for fx in 0..self.fw {
+                    for cb in 0..self.cb {
+                        // Pack each VVP row (one output channel) and
+                        // transpose to plane-major words.
+                        let mut rows = Vec::with_capacity(BLOCK);
+                        for r in 0..BLOCK {
+                            let o = cos * BLOCK + r;
+                            let mut lane = [0i32; BLOCK];
+                            if o < co {
+                                for l in 0..BLOCK {
+                                    let i = cb * BLOCK + l;
+                                    if i < ci {
+                                        lane[l] = weights[widx(o, i, fy, fx)];
+                                    }
+                                }
+                            }
+                            rows.push(pack_block(&lane, self.prec));
+                        }
+                        let at = (self.addr(cos, fy, fx, cb) - self.base) as usize;
+                        for p in 0..self.prec.bits as usize {
+                            out[at + p] = std::array::from_fn(|r| rows[r][p]);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn load(&self, ram: &mut WeightRam, weights: &[i32], ci: usize, co: usize) {
+        let img = self.image(weights, ci, co);
+        ram.load(self.base, &img);
+    }
+}
+
+/// Load per-output-channel scaler/bias vectors into one MVU, one RAM word
+/// per output channel set starting at `base`.
+pub fn load_scaler_bias(mvu: &mut crate::mvu::Mvu, base: u32, scale: &[u16], bias: &[i32]) {
+    assert_eq!(scale.len(), bias.len());
+    for (cos, chunk) in scale.chunks(BLOCK).enumerate() {
+        let mut sw = [1u16; 64];
+        sw[..chunk.len()].copy_from_slice(chunk);
+        mvu.scalers.write(base + cos as u32, sw);
+    }
+    for (cos, chunk) in bias.chunks(BLOCK).enumerate() {
+        let mut bw = [0i32; 64];
+        bw[..chunk.len()].copy_from_slice(chunk);
+        mvu.biases.write(base + cos as u32, bw);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_layout_geometry() {
+        let l = ActLayout {
+            base: 100,
+            h: 8,
+            w: 8,
+            pad: 1,
+            pad_rows: true,
+            cb: 2,
+            prec: Precision::u(2),
+        };
+        assert_eq!(l.rows_stored(), 10);
+        assert_eq!(l.cols_stored(), 10);
+        assert_eq!(l.pixel_words(), 4);
+        assert_eq!(l.row_words(), 40);
+        assert_eq!(l.size_words(), 400);
+        assert_eq!(l.addr(0, 0, 0), 100);
+        assert_eq!(l.addr(0, 0, 1), 102);
+        assert_eq!(l.addr(0, 1, 0), 104);
+        assert_eq!(l.addr(1, 0, 0), 140);
+        // Raw (0,0) lands inside the padding frame.
+        assert_eq!(l.addr(l.stored_row(0), l.stored_col(0), 0), 144);
+    }
+
+    #[test]
+    fn act_image_roundtrip() {
+        let l = ActLayout {
+            base: 0,
+            h: 5,
+            w: 4,
+            pad: 1,
+            pad_rows: true,
+            cb: 2,
+            prec: Precision::u(3),
+        };
+        let t = Tensor3::from_fn(100, 5, 4, |c, y, x| ((c + 3 * y + 7 * x) % 8) as i32);
+        let mut ram = ActRam::new(4096);
+        l.load(&mut ram, &t);
+        let back = l.read(&ram, 100);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn padding_regions_are_zero() {
+        let l = ActLayout {
+            base: 0,
+            h: 3,
+            w: 3,
+            pad: 1,
+            pad_rows: true,
+            cb: 1,
+            prec: Precision::u(2),
+        };
+        let t = Tensor3::from_fn(64, 3, 3, |_, _, _| 3);
+        let img = l.image(&t);
+        // Stored (0,0) is the padding corner: both plane words zero.
+        assert_eq!(img[0], 0);
+        assert_eq!(img[1], 0);
+        // Stored (1,1) is raw (0,0): both planes all-ones.
+        let at = (l.addr(1, 1, 0) - l.base) as usize;
+        assert_eq!(img[at], u64::MAX);
+        assert_eq!(img[at + 1], u64::MAX);
+    }
+
+    #[test]
+    fn no_pad_rows_layout() {
+        let l = ActLayout {
+            base: 0,
+            h: 4,
+            w: 4,
+            pad: 1,
+            pad_rows: false,
+            cb: 1,
+            prec: Precision::u(1),
+        };
+        assert_eq!(l.rows_stored(), 4);
+        assert_eq!(l.stored_row(0), 0);
+        assert_eq!(l.stored_col(0), 1);
+        let t = Tensor3::from_fn(64, 4, 4, |c, y, x| ((c + y + x) % 2) as i32);
+        let mut ram = ActRam::new(1024);
+        l.load(&mut ram, &t);
+        assert_eq!(l.read(&ram, 64), t);
+    }
+
+    #[test]
+    fn weight_layout_addresses() {
+        let l = WeightLayout { base: 10, cos: 2, fh: 3, fw: 3, cb: 2, prec: Precision::s(2) };
+        assert_eq!(l.addr(0, 0, 0, 0), 10);
+        assert_eq!(l.addr(0, 0, 0, 1), 12);
+        assert_eq!(l.addr(0, 0, 1, 0), 14);
+        assert_eq!(l.addr(0, 1, 0, 0), 22);
+        assert_eq!(l.cos_words(), 36);
+        assert_eq!(l.addr(1, 0, 0, 0), 46);
+        assert_eq!(l.size_words(), 72);
+    }
+
+    #[test]
+    fn weight_image_decodes_back() {
+        let (ci, co) = (80, 70); // exercises channel padding
+        let l = WeightLayout { base: 0, cos: 2, fh: 2, fw: 1, cb: 2, prec: Precision::s(3) };
+        let weights: Vec<i32> =
+            (0..co * ci * 2).map(|i| ((i as i32 * 7) % 8) - 4).collect();
+        let img = l.image(&weights, ci, co);
+        // Decode tile (cos=1, fy=1, fx=0, cb=1), row r=3 → output channel 67,
+        // input channels 64..127 (only 64..79 real).
+        let at = (l.addr(1, 1, 0, 1) - l.base) as usize;
+        let planes: Vec<u64> = (0..3).map(|p| img[at + p][3]).collect();
+        let got = crate::quant::unpack_block(&planes, Precision::s(3));
+        for l_ in 0..64 {
+            let i = 64 + l_;
+            let want = if i < ci {
+                weights[((67 * ci + i) * 2 + 1) * 1]
+            } else {
+                0
+            };
+            assert_eq!(got[l_], want, "lane {l_}");
+        }
+    }
+
+    #[test]
+    fn scaler_bias_loading() {
+        let mut mvu = crate::mvu::Mvu::new(0, crate::mvu::MvuConfig::default());
+        let scale: Vec<u16> = (0..130).map(|i| i as u16 + 1).collect();
+        let bias: Vec<i32> = (0..130).map(|i| -(i as i32)).collect();
+        load_scaler_bias(&mut mvu, 4, &scale, &bias);
+        assert_eq!(mvu.scalers.read(4)[0], 1);
+        assert_eq!(mvu.scalers.read(5)[63], 128);
+        assert_eq!(mvu.scalers.read(6)[1], 130);
+        assert_eq!(mvu.scalers.read(6)[2], 1, "unused lanes stay neutral");
+        assert_eq!(mvu.biases.read(6)[1], -129);
+        assert_eq!(mvu.biases.read(6)[2], 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The code generator (§3.3): turns a quantized [`crate::model::Model`]
+//! into RAM layouts, bit-transposed weight images, per-job AGU programs and
+//! the RISC-V command stream executed by Pito.
+//!
+//! * [`layout`] — activation/weight/scaler/bias RAM address layouts and
+//!   image builders (Fig. 3 bit-transposed format, §3.1.2 tensor layouts).
+//! * [`conv2d`] / [`gemv`] — per-operation job generation (AGU loop
+//!   programs, §3.1.3).
+//! * [`program`] — RV32I assembly emission: per-hart layer loops, CSR
+//!   writes, start/wait handshakes and DRAM row-flag synchronisation.
+//! * [`schedule`] — Pipelined vs Distributed execution modes (§3.1.6,
+//!   Fig. 5).
+
+pub mod conv2d;
+pub mod gemv;
+pub mod layout;
+pub mod program;
+pub mod schedule;
+
+pub use conv2d::{conv_jobs, layer_cycles, EdgePolicy};
+pub use layout::{ActLayout, WeightLayout};
+pub use program::{compile_pipelined, CompiledModel, MvuImage};
+pub use schedule::{compile_distributed, DistributedPlan};

@@ -1,0 +1,433 @@
+//! Pipelined-mode program emission (§3.1.6 Fig. 5a, §3.3).
+//!
+//! Each hart drives its own MVU through one layer:
+//!
+//! ```text
+//! for row in 0..rows:            # one output row per job (§3.1.3)
+//!     wait until producer_rows_done >= needed(row)   # DRAM flag
+//!     for cos in 0..co_sets:     # 64-channel output sets
+//!         csrw abase/wbase/sbase/bbase/obase         # per-job registers
+//!         csrw mvu_command, START ; poll IRQ ; clear
+//!     rows_done[hart] = row+1                        # DRAM flag
+//! ecall
+//! ```
+//!
+//! Static job parameters (precisions, AGU loop programs, QuantSer window)
+//! are written once per layer; only the five base registers change per job,
+//! updated with constant-increment `addi` — this is why the AGU's
+//! jump-based walk matters: all address arithmetic that *could* need a
+//! multiplier is folded into constants at code-generation time.
+
+use crate::accel::{MvuCsrFile, System};
+use crate::model::{ConvLayer, Model};
+use crate::mvu::JobConfig;
+use crate::pito::assemble;
+use crate::sim::Tensor3;
+use crate::NUM_MVUS;
+
+use super::conv2d::{conv_jobs, layer_cycles, rows_computed, EdgePolicy};
+use super::layout::{load_scaler_bias, ActLayout, WeightLayout};
+
+/// DRAM address of hart `h`'s rows-done flag.
+pub fn flag_addr(h: usize) -> u32 {
+    0x100 + 4 * h as u32
+}
+
+/// Activation-RAM base of the final output region (last MVU's own RAM).
+pub const OUT_BASE: u32 = 16_384;
+
+/// Per-MVU preload images.
+#[derive(Debug, Clone, Default)]
+pub struct MvuImage {
+    pub weights: Vec<[u64; 64]>,
+    pub scale: Vec<u16>,
+    pub bias: Vec<i32>,
+}
+
+/// Per-layer compilation record.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub in_layout: ActLayout,
+    pub out_layout: ActLayout,
+    pub w_layout: WeightLayout,
+    pub jobs: Vec<JobConfig>,
+    pub mvu: usize,
+    pub analytic_cycles: u64,
+}
+
+/// A fully compiled pipelined model.
+pub struct CompiledModel {
+    pub asm: String,
+    pub program: Vec<u32>,
+    pub images: Vec<MvuImage>,
+    pub plans: Vec<LayerPlan>,
+    pub policy: EdgePolicy,
+    /// MVU index and layout where the final activations appear.
+    pub out_mvu: usize,
+}
+
+impl CompiledModel {
+    pub fn total_analytic_cycles(&self) -> u64 {
+        self.plans.iter().map(|p| p.analytic_cycles).sum()
+    }
+
+    /// Load weights/scalers/biases into a system and the input image into
+    /// MVU 0 (the host's DMA step before starting the program).
+    pub fn load_into(&self, sys: &mut System, input: &Tensor3) {
+        for (m, img) in self.images.iter().enumerate() {
+            if !img.weights.is_empty() {
+                sys.mvus[m].weights.load(self.plans[m].w_layout.base, &img.weights);
+                load_scaler_bias(&mut sys.mvus[m], 0, &img.scale, &img.bias);
+            }
+        }
+        self.plans[0].in_layout.load(&mut sys.mvus[0].act, input);
+        sys.load_program(&self.program);
+    }
+
+    /// Read the final output tensor back from the system.
+    pub fn read_output(&self, sys: &System, co: usize) -> Tensor3 {
+        self.plans.last().unwrap().out_layout.read(&sys.mvus[self.out_mvu].act, co)
+    }
+}
+
+/// Input layout of `layer` when mapped to its MVU's RAM at `base`.
+fn in_layout(layer: &ConvLayer, base: u32, policy: EdgePolicy) -> ActLayout {
+    ActLayout {
+        base,
+        h: layer.in_h,
+        w: layer.in_w,
+        pad: layer.pad,
+        pad_rows: policy == EdgePolicy::PadInRam,
+        cb: layer.ci_blocks(),
+        prec: layer.aprec,
+    }
+}
+
+/// Compile a model for pipelined execution: layer `i` on MVU `i`.
+pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledModel, String> {
+    model.validate()?;
+    let n = model.layers.len();
+    if n == 0 || n > NUM_MVUS {
+        return Err(format!("pipelined mode maps one layer per MVU (1..=8), got {n}"));
+    }
+
+    let mut plans = Vec::with_capacity(n);
+    let mut images = vec![MvuImage::default(); NUM_MVUS];
+    for (h, layer) in model.layers.iter().enumerate() {
+        let in_l = in_layout(layer, 0, policy);
+        let last = h + 1 == n;
+        let out_l = if last {
+            // Compact layout in the last MVU's own RAM.
+            ActLayout {
+                base: OUT_BASE,
+                h: layer.out_h(),
+                w: layer.out_w(),
+                pad: 0,
+                pad_rows: false,
+                cb: layer.co_sets(),
+                prec: layer.oprec,
+            }
+        } else {
+            in_layout(&model.layers[h + 1], 0, policy)
+        };
+        let w_l = WeightLayout {
+            base: 0,
+            cos: layer.co_sets(),
+            fh: layer.fh,
+            fw: layer.fw,
+            cb: layer.ci_blocks(),
+            prec: layer.wprec,
+        };
+        if rows_computed(layer, policy) == 0 {
+            return Err(format!(
+                "{}: no computable rows under {policy:?} (input {}×{} smaller than kernel)",
+                layer.name, layer.in_h, layer.in_w
+            ));
+        }
+        let dest_mask = if last { None } else { Some(1u8 << (h + 1)) };
+        let jobs = conv_jobs(layer, &in_l, &out_l, &w_l, 0, 0, dest_mask, policy);
+        images[h] = MvuImage {
+            weights: w_l.image(&layer.weights, layer.ci, layer.co),
+            scale: layer.quant.scale.clone(),
+            bias: layer.quant.bias.clone(),
+        };
+        plans.push(LayerPlan {
+            in_layout: in_l,
+            out_layout: out_l,
+            w_layout: w_l,
+            jobs,
+            mvu: h,
+            analytic_cycles: layer_cycles(layer, policy),
+        });
+    }
+
+    let asm = emit_asm(model, &plans, policy);
+    let program = assemble(&asm).map_err(|e| format!("{e}"))?;
+    if program.len() * 4 > crate::pito::IRAM_BYTES {
+        return Err(format!(
+            "program of {} words exceeds the 8 KiB IRAM",
+            program.len()
+        ));
+    }
+    Ok(CompiledModel { asm, program, images, plans, policy, out_mvu: n - 1 })
+}
+
+/// How many producer rows consumer row `r` of `layer` needs, as affine
+/// constants `(need0, inc, max)`: `needed(r) = min(need0 + r·inc, max)`.
+fn producer_need(
+    layer: &ConvLayer,
+    prev: &ConvLayer,
+    policy: EdgePolicy,
+) -> (i64, i64, i64) {
+    match policy {
+        EdgePolicy::PadInRam => {
+            // Raw input rows needed: min(r·s + fh − pad, H_prev_out).
+            let need0 = (layer.fh - layer.pad) as i64;
+            (need0, layer.stride as i64, prev.out_h() as i64)
+        }
+        EdgePolicy::SkipEdges => {
+            // Producer emits its full rows starting at global row oy0_prev.
+            let oy0_prev = prev.pad.div_ceil(prev.stride) as i64;
+            let oy0 = layer.pad.div_ceil(layer.stride) as i64;
+            // Raw input row needed at local row r:
+            //   (r + oy0)·s − pad + fh − 1; producer count = raw − oy0_prev + 1.
+            let need0 =
+                oy0 * layer.stride as i64 - layer.pad as i64 + layer.fh as i64 - oy0_prev;
+            (need0, layer.stride as i64, prev.full_rows() as i64)
+        }
+    }
+}
+
+fn emit_asm(model: &Model, plans: &[LayerPlan], policy: EdgePolicy) -> String {
+    use std::fmt::Write;
+    let n = plans.len();
+    let mut s = String::new();
+    let w = &mut s;
+    writeln!(w, "# {} — pipelined mode, {:?} (generated)", model.name, policy).unwrap();
+    writeln!(w, "    csrr  t0, mhartid").unwrap();
+    for h in 0..n {
+        writeln!(w, "    li    t1, {h}").unwrap();
+        writeln!(w, "    beq   t0, t1, layer{h}").unwrap();
+    }
+    writeln!(w, "    ecall                      # spare harts").unwrap();
+
+    for (h, plan) in plans.iter().enumerate() {
+        let layer = &model.layers[h];
+        let job0 = &plan.jobs[0];
+        let file = MvuCsrFile::from_job_config(job0);
+        let rows = rows_computed(layer, policy) as i64;
+        let cos = layer.co_sets() as i64;
+
+        writeln!(w, "\nlayer{h}:                      # {}", layer.name).unwrap();
+        // Static configuration (everything except the five bases).
+        for (csr, val) in file.write_sequence() {
+            let name = crate::accel::mvu_csr_name(csr).unwrap();
+            if matches!(name, "mvu_abase" | "mvu_wbase" | "mvu_sbase" | "mvu_bbase" | "mvu_obase")
+            {
+                continue;
+            }
+            writeln!(w, "    li    t1, {}", val as i32).unwrap();
+            writeln!(w, "    csrw  {name}, t1").unwrap();
+        }
+
+        // Loop registers.
+        //   s0 abase  s1 obase(row)  s2 row  s3 needed  s4 cos  s5 wbase
+        //   s6 s/b base  s7 obase(job)
+        let a0 = plan.jobs[0].a_agu.base as i32;
+        let o0 = plan.jobs[0].o_agu.base as i32;
+        let row_in_stride =
+            layer.stride as i32 * plan.in_layout.row_words() as i32;
+        let row_out_stride = plan.out_layout.row_words() as i32;
+        let cos_w_stride = plan.w_layout.cos_words() as i32;
+        let cos_o_stride = layer.oprec.bits as i32;
+        writeln!(w, "    li    s0, {a0}").unwrap();
+        writeln!(w, "    li    s1, {o0}").unwrap();
+        writeln!(w, "    li    s2, 0").unwrap();
+        if h > 0 {
+            let (need0, _inc, _max) = producer_need(layer, &model.layers[h - 1], policy);
+            writeln!(w, "    li    s3, {need0}").unwrap();
+        }
+        writeln!(w, "row{h}:").unwrap();
+        if h > 0 {
+            let (_n0, _inc, max) = producer_need(layer, &model.layers[h - 1], policy);
+            writeln!(w, "    li    t2, {max}").unwrap();
+            writeln!(w, "    blt   s3, t2, rwait{h}").unwrap();
+            writeln!(w, "    mv    s3, t2").unwrap();
+            writeln!(w, "rwait{h}:").unwrap();
+            writeln!(w, "    li    t3, {}", flag_addr(h - 1)).unwrap();
+            writeln!(w, "wait{h}:").unwrap();
+            writeln!(w, "    lw    t4, 0(t3)").unwrap();
+            writeln!(w, "    blt   t4, s3, wait{h}").unwrap();
+        }
+        writeln!(w, "    li    s4, 0").unwrap();
+        writeln!(w, "    li    s5, {}", plan.jobs[0].w_agu.base as i32).unwrap();
+        writeln!(w, "    li    s6, 0").unwrap();
+        writeln!(w, "    mv    s7, s1").unwrap();
+        writeln!(w, "cos{h}:").unwrap();
+        writeln!(w, "    csrw  mvu_abase, s0").unwrap();
+        writeln!(w, "    csrw  mvu_wbase, s5").unwrap();
+        writeln!(w, "    csrw  mvu_sbase, s6").unwrap();
+        writeln!(w, "    csrw  mvu_bbase, s6").unwrap();
+        writeln!(w, "    csrw  mvu_obase, s7").unwrap();
+        writeln!(w, "    li    t1, 1").unwrap();
+        writeln!(w, "    csrw  mvu_command, t1   # START").unwrap();
+        writeln!(w, "poll{h}:").unwrap();
+        writeln!(w, "    csrr  t2, mvu_status").unwrap();
+        writeln!(w, "    andi  t2, t2, 2").unwrap();
+        writeln!(w, "    beqz  t2, poll{h}").unwrap();
+        writeln!(w, "    li    t1, 2").unwrap();
+        writeln!(w, "    csrw  mvu_command, t1   # CLEAR_IRQ").unwrap();
+        writeln!(w, "    addi  s4, s4, 1").unwrap();
+        writeln!(w, "    addi  s5, s5, {cos_w_stride}").unwrap();
+        writeln!(w, "    addi  s6, s6, 1").unwrap();
+        writeln!(w, "    addi  s7, s7, {cos_o_stride}").unwrap();
+        writeln!(w, "    li    t2, {cos}").unwrap();
+        writeln!(w, "    blt   s4, t2, cos{h}").unwrap();
+        // Row complete: bump the flag and advance.
+        writeln!(w, "    addi  s2, s2, 1").unwrap();
+        writeln!(w, "    li    t3, {}", flag_addr(h)).unwrap();
+        writeln!(w, "    sw    s2, 0(t3)").unwrap();
+        writeln!(w, "    addi  s0, s0, {row_in_stride}").unwrap();
+        writeln!(w, "    addi  s1, s1, {row_out_stride}").unwrap();
+        if h > 0 {
+            let (_n0, inc, _max) = producer_need(layer, &model.layers[h - 1], policy);
+            writeln!(w, "    addi  s3, s3, {inc}").unwrap();
+        }
+        writeln!(w, "    li    t2, {rows}").unwrap();
+        writeln!(w, "    blt   s2, t2, row{h}").unwrap();
+        writeln!(w, "    ecall").unwrap();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SystemConfig;
+    use crate::model::zoo::{resnet9_cifar10, Rng};
+    use crate::quant::QuantSerCfg;
+    use crate::sim::{conv2d_i32, requant_i32};
+
+    fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
+        let mut t = input.clone();
+        for l in &model.layers {
+            let acc = conv2d_i32(&t, &l.weights, l.spec());
+            t = requant_i32(
+                &acc,
+                &l.quant.scale,
+                &l.quant.bias,
+                QuantSerCfg {
+                    msb_index: l.quant.quant_msb,
+                    out_bits: l.oprec.bits,
+                    saturate: true,
+                },
+                l.relu,
+            );
+        }
+        t
+    }
+
+    /// Shrink ResNet9 (first six layers, 16×16 inputs) so the full
+    /// pipelined chain runs fast in debug-mode unit tests — the real 32×32
+    /// 8-layer run is the e2e example and release-mode integration test.
+    fn tiny_resnet9() -> Model {
+        let mut m = resnet9_cifar10(2, 2);
+        m.layers.truncate(6);
+        let mut h = 16;
+        for l in &mut m.layers {
+            l.in_h = h;
+            l.in_w = h;
+            if l.stride == 2 {
+                h /= 2;
+            }
+        }
+        m.validate().unwrap();
+        m
+    }
+
+    fn random_input(m: &Model, seed: u64) -> Tensor3 {
+        let l0 = &m.layers[0];
+        let mut rng = Rng(seed);
+        Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+            rng.range_i32(0, l0.aprec.max_value())
+        })
+    }
+
+    #[test]
+    fn program_fits_iram() {
+        let m = resnet9_cifar10(2, 2);
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        assert!(c.program.len() * 4 <= crate::pito::IRAM_BYTES);
+        // Sanity: non-trivial program.
+        assert!(c.program.len() > 400, "{} words", c.program.len());
+    }
+
+    /// The crown-jewel test: the generated RISC-V program, executed by the
+    /// barrel CPU, drives all 8 MVUs through the pipelined chain and
+    /// produces bit-exact golden results.
+    #[test]
+    fn pipelined_pito_run_matches_golden() {
+        let m = tiny_resnet9();
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        let mut sys = System::new(SystemConfig::default());
+        let input = random_input(&m, 99);
+        c.load_into(&mut sys, &input);
+        let exit = sys.run();
+        assert_eq!(
+            exit,
+            crate::accel::SystemExit::AllExited,
+            "launch errors: {:?}",
+            sys.launch_errors()
+        );
+        let got = c.read_output(&sys, m.layers.last().unwrap().co);
+        let want = golden_forward(&m, &input);
+        assert_eq!(got, want, "pipelined output differs from golden");
+        // MVP busy cycles must equal the analytic total.
+        assert_eq!(sys.total_mvu_busy_cycles(), c.total_analytic_cycles());
+    }
+
+    /// Direct-drive (no CPU) execution of the same plan gives the same
+    /// output — isolating codegen from program-emission bugs.
+    #[test]
+    fn pipelined_direct_drive_matches_golden() {
+        let m = tiny_resnet9();
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        let mut sys = System::new(SystemConfig::default());
+        let input = random_input(&m, 123);
+        c.load_into(&mut sys, &input);
+        // Run layer by layer (direct drive ignores the program).
+        for plan in &c.plans {
+            for job in &plan.jobs {
+                sys.run_job(plan.mvu, job.clone());
+            }
+        }
+        let got = c.read_output(&sys, m.layers.last().unwrap().co);
+        assert_eq!(got, golden_forward(&m, &input));
+    }
+
+    /// SkipEdges mode reproduces the analytic (Table 3 style) cycle count
+    /// through the full pito-driven pipeline.
+    #[test]
+    fn skipedges_pito_cycles_exact() {
+        let m = tiny_resnet9();
+        let c = compile_pipelined(&m, EdgePolicy::SkipEdges).unwrap();
+        let mut sys = System::new(SystemConfig::default());
+        c.load_into(&mut sys, &random_input(&m, 5));
+        let exit = sys.run();
+        assert_eq!(exit, crate::accel::SystemExit::AllExited);
+        assert_eq!(sys.total_mvu_busy_cycles(), c.total_analytic_cycles());
+    }
+
+    #[test]
+    fn rejects_oversized_models() {
+        let mut m = resnet9_cifar10(2, 2);
+        let extra = m.layers.last().unwrap().clone();
+        let mut l9 = extra.clone();
+        l9.name = "conv9".into();
+        l9.ci = extra.co;
+        l9.in_h = extra.out_h();
+        l9.in_w = extra.out_w();
+        m.layers.push(l9);
+        assert!(compile_pipelined(&m, EdgePolicy::PadInRam).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Request batcher: groups queued requests into batches of at most
+//! `max_batch`, flushing when full or when the oldest request has waited
+//! `max_wait`. FIFO order is preserved within and across batches.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::server::InferenceRequest;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+    pub formed_at: Instant,
+}
+
+/// Accumulates requests and emits batches.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<(InferenceRequest, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Time until the oldest request must be flushed (None when empty).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|(_, t)| *t + self.cfg.max_wait)
+    }
+
+    /// Pop a batch if one is due: full, or oldest request timed out.
+    pub fn pop(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_expired =
+            self.queue.front().map(|(_, t)| now >= *t + self.cfg.max_wait).unwrap_or(false);
+        if self.queue.len() >= self.cfg.max_batch || oldest_expired {
+            let take = self.queue.len().min(self.cfg.max_batch);
+            let requests = self.queue.drain(..take).map(|(r, _)| r).collect();
+            return Some(Batch { requests, formed_at: now });
+        }
+        None
+    }
+
+    /// Flush everything regardless of deadlines (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.cfg.max_batch);
+            let requests = self.queue.drain(..take).map(|(r, _)| r).collect();
+            out.push(Batch { requests, formed_at: Instant::now() });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest { id, image: vec![0.0; 4] }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.push(req(1));
+        b.push(req(2));
+        assert!(b.pop(now).is_none(), "not full, not expired");
+        b.push(req(3));
+        let batch = b.pop(now).expect("full → flush");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) });
+        b.push(req(1));
+        let later = Instant::now() + Duration::from_millis(5);
+        let batch = b.pop(later).expect("expired → flush");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        for i in 0..6 {
+            b.push(req(i));
+        }
+        let mut ids = Vec::new();
+        let now = Instant::now();
+        while let Some(batch) = b.pop(now) {
+            assert!(batch.requests.len() <= 2);
+            ids.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    /// Randomized invariants: never exceeds max_batch, never loses or
+    /// duplicates a request (property test with the crate-local RNG).
+    #[test]
+    fn randomized_no_loss_no_overflow() {
+        let mut rng = crate::model::zoo::Rng(0xC0FFEE);
+        for round in 0..50 {
+            let max_batch = 1 + (rng.next_u64() % 7) as usize;
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(rng.next_u64() % 3),
+            });
+            let n = (rng.next_u64() % 64) as u64;
+            let mut seen = Vec::new();
+            let mut now = Instant::now();
+            for i in 0..n {
+                b.push(req(i));
+                if rng.next_u64() % 3 == 0 {
+                    now += Duration::from_millis(2);
+                    while let Some(batch) = b.pop(now) {
+                        assert!(batch.requests.len() <= max_batch, "round {round}");
+                        seen.extend(batch.requests.iter().map(|r| r.id));
+                    }
+                }
+            }
+            for batch in b.drain_all() {
+                assert!(batch.requests.len() <= max_batch);
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n).collect();
+            assert_eq!(seen, want, "round {round}: lost/dup/reordered");
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Serving metrics: lock-free counters plus a mutex-guarded latency
+//! reservoir for percentile reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics handle.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    sim_cycles: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub sim_cycles: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+impl Metrics {
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let _ = size;
+    }
+
+    pub fn on_complete(&self, latency: Duration, sim_cycles: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(sim_cycles, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lats = self.latencies_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[((lats.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let mean = if lats.is_empty() {
+            0.0
+        } else {
+            lats.iter().sum::<u64>() as f64 / lats.len() as f64
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            mean_us: mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.on_submit();
+            m.on_complete(Duration::from_micros(i), 10);
+        }
+        m.on_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.sim_cycles, 1000);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p99_us, 99);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.mean_us, 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Inference coordinator: the serving front-end over the simulated
+//! accelerator (productionization layer — the paper's host-side "sequence
+//! operations with software" role, grown into a service).
+//!
+//! Architecture (std-thread based; the vendored offline crate set has no
+//! tokio — see Cargo.toml):
+//!
+//! ```text
+//! submit() ──► Router ──► per-worker queue ──► Worker thread (Engine)
+//!                 │                                   │
+//!              Batcher (groups up to max_batch)    Metrics
+//! ```
+//!
+//! * [`Engine`] — anything that can run one image to logits. The real
+//!   implementation drives conv0/fc through PJRT and conv1..8 through the
+//!   cycle-accurate MVU array (`examples/serve.rs`); tests use mocks.
+//! * [`Batcher`] — groups queued requests (weight reuse amortisation).
+//! * [`Router`] — least-loaded dispatch over workers.
+//! * [`Metrics`] — counters + latency aggregates.
+
+mod batcher;
+mod metrics;
+mod router;
+mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::Router;
+pub use server::{Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse};

@@ -1,0 +1,287 @@
+//! The coordinator service: worker threads owning [`Engine`]s, fed through
+//! the router + batcher, reporting through [`super::Metrics`].
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::router::Router;
+
+/// One inference request (a CIFAR-shaped image).
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub image: Vec<f32>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Simulated accelerator cycles consumed by this request.
+    pub sim_cycles: u64,
+    pub worker: usize,
+}
+
+/// Anything that can run a batch of images to logits. `infer_batch` returns
+/// one `(logits, sim_cycles)` per input, in order.
+///
+/// Engines are constructed *inside* their worker thread from an
+/// [`EngineFactory`], so they need not be `Send` (PJRT executables are
+/// thread-affine in the `xla` crate).
+pub trait Engine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)>;
+}
+
+/// Constructs a worker's engine on its own thread.
+pub type EngineFactory = Box<dyn FnOnce() -> Box<dyn Engine> + Send>;
+
+enum WorkerMsg {
+    Run(InferenceRequest, mpsc::Sender<InferenceResponse>, Instant),
+    Flush,
+    Stop,
+}
+
+/// The coordinator: owns worker threads and dispatch state.
+pub struct Coordinator {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    senders: Vec<mpsc::Sender<WorkerMsg>>,
+    joins: Vec<JoinHandle<()>>,
+    next_id: u64,
+}
+
+impl Coordinator {
+    /// Spawn one worker per engine factory.
+    pub fn new(engines: Vec<EngineFactory>, batch: BatcherConfig) -> Self {
+        let router = Arc::new(Router::new(engines.len()));
+        let metrics = Arc::new(Metrics::default());
+        let mut senders = Vec::new();
+        let mut joins = Vec::new();
+        for (w, factory) in engines.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let router2 = Arc::clone(&router);
+            let metrics2 = Arc::clone(&metrics);
+            let join = std::thread::Builder::new()
+                .name(format!("barvinn-worker-{w}"))
+                .spawn(move || {
+                    let mut engine = factory();
+                    let mut batcher = Batcher::new(batch);
+                    let mut replies: Vec<(u64, mpsc::Sender<InferenceResponse>, Instant)> =
+                        Vec::new();
+                    let run_batch =
+                        |batcher: &mut Batcher,
+                         replies: &mut Vec<(u64, mpsc::Sender<InferenceResponse>, Instant)>,
+                         engine: &mut Box<dyn Engine>,
+                         force: bool| {
+                            loop {
+                                let batch = if force {
+                                    let mut all = batcher.drain_all();
+                                    if all.is_empty() {
+                                        break;
+                                    }
+                                    all.remove(0)
+                                } else {
+                                    match batcher.pop(Instant::now()) {
+                                        Some(b) => b,
+                                        None => break,
+                                    }
+                                };
+                                metrics2.on_batch(batch.requests.len());
+                                let images: Vec<Vec<f32>> =
+                                    batch.requests.iter().map(|r| r.image.clone()).collect();
+                                let outs = engine.infer_batch(&images);
+                                for (req, (logits, cycles)) in
+                                    batch.requests.iter().zip(outs)
+                                {
+                                    let idx = replies
+                                        .iter()
+                                        .position(|(id, _, _)| *id == req.id)
+                                        .expect("reply channel registered");
+                                    let (_, tx, t0) = replies.swap_remove(idx);
+                                    metrics2.on_complete(t0.elapsed(), cycles);
+                                    router2.complete(w);
+                                    let _ = tx.send(InferenceResponse {
+                                        id: req.id,
+                                        logits,
+                                        sim_cycles: cycles,
+                                        worker: w,
+                                    });
+                                }
+                            }
+                        };
+                    loop {
+                        // Wait bounded by the batcher deadline.
+                        let msg = match batcher.deadline() {
+                            Some(dl) => {
+                                let now = Instant::now();
+                                let dur = dl.saturating_duration_since(now);
+                                match rx.recv_timeout(dur) {
+                                    Ok(m) => Some(m),
+                                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                                }
+                            }
+                            None => match rx.recv() {
+                                Ok(m) => Some(m),
+                                Err(_) => break,
+                            },
+                        };
+                        match msg {
+                            Some(WorkerMsg::Run(req, tx, t0)) => {
+                                replies.push((req.id, tx, t0));
+                                batcher.push(req);
+                                run_batch(&mut batcher, &mut replies, &mut engine, false);
+                            }
+                            Some(WorkerMsg::Flush) => {
+                                run_batch(&mut batcher, &mut replies, &mut engine, true);
+                            }
+                            Some(WorkerMsg::Stop) => {
+                                run_batch(&mut batcher, &mut replies, &mut engine, true);
+                                break;
+                            }
+                            None => {
+                                // Deadline expired.
+                                run_batch(&mut batcher, &mut replies, &mut engine, false);
+                            }
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            senders.push(tx);
+            joins.push(join);
+        }
+        Coordinator { router, metrics, senders, joins, next_id: 0 }
+    }
+
+    /// Submit an image; returns a receiver for the response.
+    pub fn submit(&mut self, image: Vec<f32>) -> mpsc::Receiver<InferenceResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let worker = self.router.route();
+        self.metrics.on_submit();
+        let (tx, rx) = mpsc::channel();
+        self.senders[worker]
+            .send(WorkerMsg::Run(InferenceRequest { id, image }, tx, Instant::now()))
+            .expect("worker alive");
+        rx
+    }
+
+    /// Force all pending batches through.
+    pub fn flush(&self) {
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Flush);
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Graceful shutdown: flush, stop, join.
+    pub fn shutdown(mut self) {
+        for s in &self.senders {
+            let _ = s.send(WorkerMsg::Stop);
+        }
+        self.senders.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Mock engine: logits = image sums; fixed cycle cost.
+    struct MockEngine {
+        cost: u64,
+    }
+
+    impl Engine for MockEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+            images
+                .iter()
+                .map(|img| (vec![img.iter().sum::<f32>()], self.cost))
+                .collect()
+        }
+    }
+
+    fn coordinator(workers: usize, max_batch: usize) -> Coordinator {
+        let engines: Vec<EngineFactory> = (0..workers)
+            .map(|_| {
+                Box::new(|| Box::new(MockEngine { cost: 100 }) as Box<dyn Engine>)
+                    as EngineFactory
+            })
+            .collect();
+        Coordinator::new(
+            engines,
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(1) },
+        )
+    }
+
+    #[test]
+    fn all_requests_answered_correctly() {
+        let mut c = coordinator(3, 4);
+        let rxs: Vec<_> = (0..32)
+            .map(|i| c.submit(vec![i as f32, 1.0]))
+            .collect();
+        c.flush();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(resp.logits, vec![i as f32 + 1.0]);
+            assert_eq!(resp.sim_cycles, 100);
+        }
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.submitted, 32);
+        assert_eq!(snap.completed, 32);
+        assert_eq!(snap.sim_cycles, 3200);
+        c.shutdown();
+    }
+
+    #[test]
+    fn work_is_distributed() {
+        let mut c = coordinator(4, 1);
+        let rxs: Vec<_> = (0..16).map(|i| c.submit(vec![i as f32])).collect();
+        c.flush();
+        let mut workers = std::collections::HashSet::new();
+        for rx in rxs {
+            workers.insert(rx.recv_timeout(Duration::from_secs(5)).unwrap().worker);
+        }
+        assert!(workers.len() >= 2, "requests all pinned to one worker");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let mut c = coordinator(1, 64); // big batch: nothing flushes by size
+        let rxs: Vec<_> = (0..5).map(|i| c.submit(vec![i as f32])).collect();
+        c.shutdown(); // must flush the partial batch
+        for rx in rxs {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).is_ok());
+        }
+    }
+
+    #[test]
+    fn batching_happens() {
+        let mut c = coordinator(1, 8);
+        let rxs: Vec<_> = (0..16).map(|i| c.submit(vec![i as f32])).collect();
+        c.flush();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let snap = c.metrics().snapshot();
+        assert!(
+            snap.batches < 16,
+            "expected some batching, got {} batches for 16 reqs",
+            snap.batches
+        );
+        c.shutdown();
+    }
+}

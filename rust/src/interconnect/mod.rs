@@ -1,0 +1,14 @@
+//! The MVU-to-MVU interconnect (§3.1.5): an 8-way crossbar switch with
+//! broadcast capability and fixed-priority write arbitration.
+//!
+//! "A source MVU is programmed to send its output results in a serialized
+//! fashion to a given address in the activation memory of a destination
+//! MVU(s). [...] When multiple MVUs attempt to write to the same destination
+//! MVU, a fixed priority scheme determines which MVU can write to its
+//! memory." The interconnect has the highest priority at the destination's
+//! activation-RAM write port, followed by the controller, then the MVU
+//! itself.
+
+mod crossbar;
+
+pub use crossbar::{Crossbar, DeliveredWrite, PendingWrite};

@@ -1,0 +1,58 @@
+//! # BARVINN — Arbitrary-Precision DNN Accelerator (reproduction)
+//!
+//! This crate reproduces the system described in
+//! *BARVINN: Arbitrary Precision DNN Accelerator Controlled by a RISC-V CPU*
+//! (Askarihemmat et al., ASPDAC '23) as a bit- and cycle-accurate software
+//! model plus the full surrounding toolchain:
+//!
+//! * [`quant`] — fixed-point numerics, bit-plane packing and the paper's
+//!   bit-transposed memory format (Fig. 3).
+//! * [`mvu`] — the Matrix-Vector Unit: 64 bit-serial VVP lanes (Alg. 1,
+//!   Fig. 4), activation/weight/scaler/bias RAMs, address-generation units,
+//!   scaler, pool/ReLU and quantizer/serializer pipeline stages (§3.1).
+//! * [`pito`] — the Pito RV32I barrel processor: 8 harts, Zicsr, interrupts,
+//!   plus a two-pass assembler and disassembler (§3.2).
+//! * [`interconnect`] — the 8-way crossbar with broadcast and fixed-priority
+//!   arbitration (§3.1.5).
+//! * [`accel`] — the whole accelerator: Pito + 8 MVUs + crossbar, with the
+//!   MVU CSR file bridged into the CPU (Fig. 1).
+//! * [`model`] — DNN model IR, ONNX-lite JSON ingestion and the model-zoo
+//!   channel census behind Fig. 2.
+//! * [`codegen`] — the code generator: tiling, bit-transposed weight export,
+//!   AGU loop programs and RV32I assembly emission; pipelined/distributed
+//!   execution-mode scheduling (§3.3, §3.1.6).
+//! * [`sim`] — golden integer reference operators used to validate the MVU.
+//! * [`runtime`] — PJRT runtime executing AOT-lowered JAX artifacts
+//!   (`artifacts/*.hlo.txt`) for host-side layers and golden checking.
+//! * [`coordinator`] — an async inference front-end: request router, batcher
+//!   and metrics over the simulated accelerator.
+//! * [`perf`] — analytic performance/resource/power models for BARVINN and
+//!   the baselines (FINN, FILM-QNN, BitFusion, BitBlade, Loom) behind
+//!   Tables 3–6.
+//!
+//! The Python side (`python/compile`) authors the quantized networks in JAX,
+//! with the bit-serial hot loop as a Pallas kernel, and AOT-lowers them to
+//! HLO text once (`make artifacts`). Python never runs at inference time.
+
+pub mod accel;
+pub mod codegen;
+pub mod coordinator;
+pub mod interconnect;
+pub mod model;
+pub mod mvu;
+pub mod perf;
+pub mod pito;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+
+/// Number of vector lanes in every MVU datapath (the paper's 64-element
+/// design point, justified by the Fig. 2 channel census).
+pub const LANES: usize = 64;
+
+/// Number of MVUs in the base configuration (one per Pito hart).
+pub const NUM_MVUS: usize = 8;
+
+/// Design clock frequency on the Alveo U250 (Table 4), used to convert
+/// simulated cycles into FPS estimates.
+pub const CLOCK_HZ: u64 = 250_000_000;

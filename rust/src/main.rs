@@ -1,0 +1,220 @@
+//! `barvinn` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the offline vendored
+//! crate set):
+//!
+//! * `info`                    — architecture summary + Table 4 resources
+//! * `cycles [--wbits N --abits N]` — Table 3 per-layer cycle report
+//! * `census`                  — Fig. 2 channel census
+//! * `estimate <cnv|resnet50>` — Table 5/6 throughput estimates
+//! * `asm <file.s>`            — assemble a Pito program, print words
+//! * `disasm <hex words...>`   — disassemble
+//! * `run [--images N]`        — run quantized ResNet9 end-to-end on the
+//!                               simulated accelerator
+
+use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::model::zoo;
+use barvinn::perf::benchkit::report_table;
+use barvinn::perf::{cycle_model, finn, resource_model};
+use barvinn::sim::Tensor3;
+use barvinn::CLOCK_HZ;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("info");
+    match cmd {
+        "info" => info(),
+        "cycles" => cycles(&args[1..]),
+        "census" => census(),
+        "estimate" => estimate(args.get(1).map(String::as_str).unwrap_or("cnv")),
+        "asm" => asm(&args[1..]),
+        "disasm" => disasm(&args[1..]),
+        "run" => run(&args[1..]),
+        "help" | "--help" | "-h" => help(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            help();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn help() {
+    println!(
+        "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
+         usage: barvinn <info|cycles|census|estimate|asm|disasm|run> [args]\n\
+         see README.md for details"
+    );
+}
+
+fn info() {
+    println!("BARVINN: 8 MVUs x 64 VVPs x 64 lanes @ 250 MHz");
+    println!(
+        "peak: {:.3} T bit-MACs/s",
+        cycle_model::peak_bit_macs_per_s(CLOCK_HZ) as f64 / 1e12
+    );
+    let p = resource_model::pito_resources();
+    let o = resource_model::overall_resources();
+    report_table(
+        "Table 4 — resources (analytic model)",
+        &["", "LUT", "BRAM", "DSP", "Power (W)", "MHz"],
+        &[
+            vec![
+                "Pito".into(),
+                p.lut.to_string(),
+                p.bram36.to_string(),
+                p.dsp.to_string(),
+                format!("{:.3}", p.dynamic_power_w),
+                p.clock_mhz.to_string(),
+            ],
+            vec![
+                "Overall".into(),
+                o.lut.to_string(),
+                o.bram36.to_string(),
+                o.dsp.to_string(),
+                format!("{:.3}", o.dynamic_power_w),
+                o.clock_mhz.to_string(),
+            ],
+        ],
+    );
+}
+
+fn parse_flag(args: &[String], name: &str, default: u32) -> u32 {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cycles(args: &[String]) {
+    let wb = parse_flag(args, "--wbits", 2) as u8;
+    let ab = parse_flag(args, "--abits", 2) as u8;
+    let m = zoo::resnet9_cifar10(ab, wb);
+    let mut rows = Vec::new();
+    let mut total = 0u64;
+    for l in &m.layers {
+        let c = barvinn::codegen::layer_cycles(l, EdgePolicy::SkipEdges);
+        total += c;
+        rows.push(vec![
+            l.name.clone(),
+            format!("[{},{},{}]", l.ci, l.in_h, l.in_w),
+            format!("[{},{},3,3]", l.co, l.ci),
+            c.to_string(),
+        ]);
+    }
+    rows.push(vec!["total".into(), "".into(), "".into(), total.to_string()]);
+    report_table(
+        &format!("Table 3 — ResNet9 cycles ({wb}b weights / {ab}b activations)"),
+        &["layer", "input", "kernel", "cycles"],
+        &rows,
+    );
+}
+
+fn census() {
+    let s = zoo::census_stats();
+    println!(
+        "{} models, {} conv layers; {:.0}% of layers / {:.0}% of models use\n\
+         input channel counts that are multiples of 64 (paper: 79%)",
+        s.models,
+        s.layers,
+        s.layer_frac_mult64 * 100.0,
+        s.model_frac_mult64 * 100.0
+    );
+    let rows: Vec<Vec<String>> = s
+        .histogram
+        .iter()
+        .map(|(b, n)| vec![b.to_string(), n.to_string()])
+        .collect();
+    report_table("Fig. 2 — channel-size histogram", &["bucket", "layers"], &rows);
+}
+
+fn estimate(which: &str) {
+    match which {
+        "cnv" => {
+            let net = zoo::cnv_cifar10();
+            let mut rows = Vec::new();
+            for (w, a) in [(1u8, 1u8), (1, 2), (2, 2)] {
+                let bits = cycle_model::Bits { w, a };
+                let ours = cycle_model::fps_pipelined(&net, bits, CLOCK_HZ);
+                let fb = finn::estimate_fps(&net, bits, 25_000.0);
+                rows.push(vec![
+                    format!("{w}/{a}"),
+                    format!("{ours:.0}"),
+                    format!("{:.0}", fb.fps),
+                    format!("{:.1}x", ours / fb.fps),
+                ]);
+            }
+            report_table(
+                "Table 5 — CNV/CIFAR10 FPS (ours vs FINN @25 kLUT)",
+                &["W/A", "BARVINN FPS", "FINN FPS", "speedup"],
+                &rows,
+            );
+        }
+        "resnet50" => {
+            let net = cycle_model::accel_portion(&zoo::resnet50_imagenet());
+            let bits = cycle_model::Bits { w: 1, a: 2 };
+            let ours = cycle_model::fps_pipelined_streamed(&net, bits, CLOCK_HZ);
+            let power = resource_model::overall_resources().dynamic_power_w;
+            println!(
+                "ResNet-50 1/2: {ours:.0} FPS, {:.1} FPS/W (paper: 2296, 106.8)",
+                ours / power
+            );
+        }
+        other => eprintln!("unknown network '{other}' (cnv|resnet50)"),
+    }
+}
+
+fn asm(args: &[String]) {
+    let Some(path) = args.first() else {
+        eprintln!("usage: barvinn asm <file.s>");
+        std::process::exit(2);
+    };
+    let src = std::fs::read_to_string(path).expect("read asm file");
+    match barvinn::pito::assemble(&src) {
+        Ok(words) => {
+            for w in words {
+                println!("{w:08x}");
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn disasm(args: &[String]) {
+    for a in args {
+        let w = u32::from_str_radix(a.trim_start_matches("0x"), 16).expect("hex word");
+        println!("{:08x}  {}", w, barvinn::pito::disassemble(w));
+    }
+}
+
+fn run(args: &[String]) {
+    let n_images = parse_flag(args, "--images", 1) as usize;
+    let m = zoo::resnet9_cifar10(2, 2);
+    let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
+    let mut rng = zoo::Rng(1);
+    let mut total_cycles = 0u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..n_images {
+        let mut sys = barvinn::accel::System::new(Default::default());
+        let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
+        compiled.load_into(&mut sys, &input);
+        let exit = sys.run();
+        assert_eq!(exit, barvinn::accel::SystemExit::AllExited, "{exit:?}");
+        total_cycles += sys.total_mvu_busy_cycles();
+        println!(
+            "image {i}: {} MVU cycles, {} system cycles",
+            sys.total_mvu_busy_cycles(),
+            sys.cycles()
+        );
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n_images} images in {:.2}s wall ({:.1} M MVU-cycles/s simulated)",
+        dt.as_secs_f64(),
+        total_cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+}

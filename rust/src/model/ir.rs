@@ -1,0 +1,198 @@
+//! Model intermediate representation.
+//!
+//! BARVINN's code generator consumes a *linear* sequence of quantized conv
+//! layers (the paper's code generator "supports Pipelined mode execution"
+//! over linear topologies; shortcuts are removed by residual distillation,
+//! §4.1). First and last layers (conv0 / fc) run on the host via the AOT
+//! JAX artifacts, so the accelerator IR carries the middle convolutions.
+
+use crate::quant::Precision;
+
+/// Integer requantization parameters of one layer (per-output-channel
+/// scaler/bias plus the QuantSer window — see `quant::lsq` for how LSQ
+/// parameters fold into this form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    /// Per-output-channel 16-bit scaler operands.
+    pub scale: Vec<u16>,
+    /// Per-output-channel 32-bit bias operands (BN shift + rounding).
+    pub bias: Vec<i32>,
+    /// QuantSer MSB index (output window is `[msb : msb-out_bits+1]`).
+    pub quant_msb: u8,
+}
+
+/// One quantized 2-D convolution layer on the accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// Input channels / output channels.
+    pub ci: usize,
+    pub co: usize,
+    /// Kernel size (height, width) — square 3×3 for the ResNet9 family.
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    /// Symmetric spatial zero padding.
+    pub pad: usize,
+    /// Input spatial size.
+    pub in_h: usize,
+    pub in_w: usize,
+    /// Activation (input) precision.
+    pub aprec: Precision,
+    /// Weight precision.
+    pub wprec: Precision,
+    /// Output precision (activation precision of the next layer).
+    pub oprec: Precision,
+    /// Whether ReLU is applied before requantization.
+    pub relu: bool,
+    /// Weights, flat `[co][ci][fh][fw]`.
+    pub weights: Vec<i32>,
+    /// Requantization parameters.
+    pub quant: QuantSpec,
+}
+
+impl ConvLayer {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.fh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.fw) / self.stride + 1
+    }
+    /// Input channel blocks (channels padded up to a multiple of 64).
+    pub fn ci_blocks(&self) -> usize {
+        self.ci.div_ceil(64)
+    }
+    /// Output channel sets.
+    pub fn co_sets(&self) -> usize {
+        self.co.div_ceil(64)
+    }
+    /// Output rows whose receptive field needs no row padding — the rows
+    /// the paper schedules on the MVU (Table 3; see DESIGN.md §1).
+    /// Zero when the input is shorter than the kernel.
+    pub fn full_rows(&self) -> usize {
+        if self.in_h < self.fh {
+            0
+        } else {
+            (self.in_h - self.fh) / self.stride + 1
+        }
+    }
+    /// Golden conv spec for this layer.
+    pub fn spec(&self) -> crate::sim::Conv2dSpec {
+        crate::sim::Conv2dSpec {
+            ci: self.ci,
+            co: self.co,
+            fh: self.fh,
+            fw: self.fw,
+            stride: self.stride,
+            pad: self.pad,
+        }
+    }
+    /// Weight storage bits on the accelerator (padded to blocks).
+    pub fn weight_bits(&self) -> u64 {
+        (self.co_sets() * 64 * self.fh * self.fw * self.ci_blocks() * 64) as u64
+            * self.wprec.bits as u64
+    }
+}
+
+/// A quantized model for the accelerator: a linear chain of conv layers.
+/// `host_prologue` / `host_epilogue` name the AOT artifacts that run the
+/// first/last layers on the host (paper §4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+    pub host_prologue: Option<String>,
+    pub host_epilogue: Option<String>,
+}
+
+impl Model {
+    /// Validate chain consistency (shapes and precisions line up).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, w) in self.layers.windows(2).enumerate() {
+            let (a, b) = (&w[0], &w[1]);
+            if a.co != b.ci {
+                return Err(format!("{}→{}: channel mismatch {} vs {}", a.name, b.name, a.co, b.ci));
+            }
+            if a.out_h() != b.in_h || a.out_w() != b.in_w {
+                return Err(format!(
+                    "{}→{}: spatial mismatch {}x{} vs {}x{}",
+                    a.name,
+                    b.name,
+                    a.out_h(),
+                    a.out_w(),
+                    b.in_h,
+                    b.in_w
+                ));
+            }
+            if a.oprec != b.aprec {
+                return Err(format!("layer {i}: oprec/aprec mismatch"));
+            }
+        }
+        for l in &self.layers {
+            if l.weights.len() != l.co * l.ci * l.fh * l.fw {
+                return Err(format!("{}: weight length mismatch", l.name));
+            }
+            if l.quant.scale.len() != l.co || l.quant.bias.len() != l.co {
+                return Err(format!("{}: quant vector length mismatch", l.name));
+            }
+            for &wv in &l.weights {
+                if !l.wprec.contains(wv) {
+                    return Err(format!("{}: weight {wv} exceeds {:?}", l.name, l.wprec));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter-memory bytes at the quantized precisions (packed,
+    /// unpadded — the "Size" columns of Tables 1–2 count logical weights).
+    pub fn packed_weight_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let params = (l.co * l.ci * l.fh * l.fw) as u64;
+                (params * l.wprec.bits as u64).div_ceil(8)
+                    + (l.co as u64) * 6 // u16 scale + i32 bias per channel
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+
+    use crate::model::zoo;
+
+    #[test]
+    fn resnet9_geometry() {
+        let m = zoo::resnet9_cifar10(2, 2);
+        assert!(m.validate().is_ok(), "{:?}", m.validate());
+        assert_eq!(m.layers.len(), 8);
+        let conv1 = &m.layers[0];
+        assert_eq!((conv1.ci, conv1.co), (64, 64));
+        assert_eq!(conv1.full_rows(), 30);
+        let conv3 = &m.layers[2];
+        assert_eq!(conv3.stride, 2);
+        assert_eq!(conv3.out_h(), 16);
+        assert_eq!(conv3.full_rows(), 15);
+        let conv8 = &m.layers[7];
+        assert_eq!(conv8.full_rows(), 2);
+        assert_eq!(conv8.co_sets(), 8);
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let mut m = zoo::resnet9_cifar10(2, 2);
+        m.layers[3].ci = 100;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn channel_padding_in_blocks() {
+        let mut m = zoo::resnet9_cifar10(2, 2);
+        m.layers[0].ci = 60; // not a multiple of 64 → still 1 block
+        assert_eq!(m.layers[0].ci_blocks(), 1);
+        m.layers[0].ci = 65;
+        assert_eq!(m.layers[0].ci_blocks(), 2);
+    }
+}

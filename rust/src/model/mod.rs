@@ -1,0 +1,11 @@
+//! DNN model representation: the IR consumed by the code generator, the
+//! ONNX-lite JSON ingestion path (produced by `python/compile/export.py`),
+//! and the model-zoo layer-shape census behind Fig. 2.
+
+mod ir;
+pub mod json;
+mod onnx_lite;
+pub mod zoo;
+
+pub use ir::{ConvLayer, Model, QuantSpec};
+pub use onnx_lite::{load_model_json, parse_model_json};

@@ -1,0 +1,189 @@
+//! ONNX-lite ingestion: the JSON model graph exported by
+//! `python/compile/export.py` (which in turn walks the JAX model the way the
+//! paper's code generator walks an ONNX graph).
+//!
+//! Schema (one object):
+//! ```json
+//! {
+//!   "name": "resnet9",
+//!   "host_prologue": "conv0",   // AOT artifact for the host-run first layer
+//!   "host_epilogue": "fc",      // AOT artifact for the host-run last layer
+//!   "layers": [ { conv-layer fields... }, ... ]
+//! }
+//! ```
+
+use super::ir::{ConvLayer, Model, QuantSpec};
+use super::json::{parse, JsonError, Value};
+use crate::quant::Precision;
+
+fn prec_of(v: &Value) -> Result<Precision, JsonError> {
+    let bits = v.req("bits")?.as_i64().ok_or(JsonError("bits must be int".into()))?;
+    let signed = v.req("signed")?.as_bool().ok_or(JsonError("signed must be bool".into()))?;
+    if !(1..=16).contains(&bits) {
+        return Err(JsonError(format!("precision bits out of range: {bits}")));
+    }
+    Ok(Precision { bits: bits as u8, signed })
+}
+
+fn usize_of(v: &Value, key: &str) -> Result<usize, JsonError> {
+    v.req(key)?
+        .as_i64()
+        .filter(|&x| x >= 0)
+        .map(|x| x as usize)
+        .ok_or_else(|| JsonError(format!("'{key}' must be a non-negative int")))
+}
+
+fn layer_of(v: &Value) -> Result<ConvLayer, JsonError> {
+    let quant = QuantSpec {
+        scale: v
+            .req("scale")?
+            .as_i64_vec()?
+            .into_iter()
+            .map(|x| u16::try_from(x).map_err(|_| JsonError("scale exceeds u16".into())))
+            .collect::<Result<_, _>>()?,
+        bias: v
+            .req("bias")?
+            .as_i64_vec()?
+            .into_iter()
+            .map(|x| i32::try_from(x).map_err(|_| JsonError("bias exceeds i32".into())))
+            .collect::<Result<_, _>>()?,
+        quant_msb: usize_of(v, "quant_msb")? as u8,
+    };
+    Ok(ConvLayer {
+        name: v.req("name")?.as_str().unwrap_or("conv").to_string(),
+        ci: usize_of(v, "ci")?,
+        co: usize_of(v, "co")?,
+        fh: usize_of(v, "fh")?,
+        fw: usize_of(v, "fw")?,
+        stride: usize_of(v, "stride")?,
+        pad: usize_of(v, "pad")?,
+        in_h: usize_of(v, "in_h")?,
+        in_w: usize_of(v, "in_w")?,
+        aprec: prec_of(v.req("aprec")?)?,
+        wprec: prec_of(v.req("wprec")?)?,
+        oprec: prec_of(v.req("oprec")?)?,
+        relu: v.req("relu")?.as_bool().unwrap_or(true),
+        weights: v
+            .req("weights")?
+            .as_i64_vec()?
+            .into_iter()
+            .map(|x| x as i32)
+            .collect(),
+        quant,
+    })
+}
+
+/// Parse a model from JSON text.
+pub fn parse_model_json(src: &str) -> Result<Model, JsonError> {
+    let v = parse(src)?;
+    let layers = v
+        .req("layers")?
+        .as_array()
+        .ok_or(JsonError("layers must be an array".into()))?
+        .iter()
+        .map(layer_of)
+        .collect::<Result<Vec<_>, _>>()?;
+    let model = Model {
+        name: v.req("name")?.as_str().unwrap_or("model").to_string(),
+        layers,
+        host_prologue: v.get("host_prologue").and_then(|s| s.as_str()).map(String::from),
+        host_epilogue: v.get("host_epilogue").and_then(|s| s.as_str()).map(String::from),
+    };
+    model.validate().map_err(JsonError)?;
+    Ok(model)
+}
+
+/// Load a model from a JSON file.
+pub fn load_model_json(path: &std::path::Path) -> Result<Model, String> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    parse_model_json(&src).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Serialize a model back to JSON (tooling / tests).
+pub fn model_to_json(m: &Model) -> String {
+    use super::json::Value as V;
+    use std::collections::BTreeMap;
+    let prec = |p: Precision| {
+        let mut o = BTreeMap::new();
+        o.insert("bits".into(), V::Int(p.bits as i64));
+        o.insert("signed".into(), V::Bool(p.signed));
+        V::Object(o)
+    };
+    let layers: Vec<V> = m
+        .layers
+        .iter()
+        .map(|l| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), V::Str(l.name.clone()));
+            for (k, x) in [
+                ("ci", l.ci),
+                ("co", l.co),
+                ("fh", l.fh),
+                ("fw", l.fw),
+                ("stride", l.stride),
+                ("pad", l.pad),
+                ("in_h", l.in_h),
+                ("in_w", l.in_w),
+                ("quant_msb", l.quant.quant_msb as usize),
+            ] {
+                o.insert(k.into(), V::Int(x as i64));
+            }
+            o.insert("aprec".into(), prec(l.aprec));
+            o.insert("wprec".into(), prec(l.wprec));
+            o.insert("oprec".into(), prec(l.oprec));
+            o.insert("relu".into(), V::Bool(l.relu));
+            o.insert(
+                "weights".into(),
+                V::Array(l.weights.iter().map(|&w| V::Int(w as i64)).collect()),
+            );
+            o.insert(
+                "scale".into(),
+                V::Array(l.quant.scale.iter().map(|&s| V::Int(s as i64)).collect()),
+            );
+            o.insert(
+                "bias".into(),
+                V::Array(l.quant.bias.iter().map(|&b| V::Int(b as i64)).collect()),
+            );
+            V::Object(o)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("name".into(), V::Str(m.name.clone()));
+    if let Some(p) = &m.host_prologue {
+        o.insert("host_prologue".into(), V::Str(p.clone()));
+    }
+    if let Some(e) = &m.host_epilogue {
+        o.insert("host_epilogue".into(), V::Str(e.clone()));
+    }
+    o.insert("layers".into(), V::Array(layers));
+    V::Object(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn roundtrip_resnet9() {
+        let m = zoo::resnet9_cifar10(2, 2);
+        let json = model_to_json(&m);
+        let m2 = parse_model_json(&json).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_invalid_chain() {
+        let mut m = zoo::resnet9_cifar10(2, 2);
+        m.layers[1].ci = 32; // breaks the chain
+        let json = model_to_json(&m);
+        assert!(parse_model_json(&json).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(parse_model_json(r#"{"name":"x"}"#).is_err());
+        assert!(parse_model_json(r#"{"name":"x","layers":[{}]}"#).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Address-generation units (§3.1.3).
+//!
+//! "Each MVU contains address generation units (AGU) that drive the memory
+//! access pattern across the activation and weight RAMs. The access pattern
+//! is managed by a set of up to five nested loops with parameters setting
+//! the number of iterations and the forward or backward address jumps to
+//! make on each iteration."
+//!
+//! Semantics: the AGU holds a current address (initially `base`) and five
+//! loop counters. On every `next()` it *emits* the current address, then
+//! advances: the innermost loop whose counter has not reached its `count`
+//! increments and its (signed) `jump` is added to the address; all loops
+//! inside it reset. The AGU therefore emits `Π (count_i + 1)` addresses per
+//! pass and then wraps around (restarting from `base`), so a single
+//! configuration can be replayed across output vectors.
+
+/// Number of nested loops in the hardware AGU.
+pub const AGU_LOOPS: usize = 5;
+
+/// One AGU loop: `count` extra iterations (total `count+1` passes of the
+/// loop body) and the signed address `jump` applied each time this loop
+/// advances.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AguLoop {
+    pub count: u32,
+    pub jump: i32,
+}
+
+/// Full AGU configuration: base address + five loops, `loops[0]` innermost.
+/// Unused loops are left at `count: 0, jump: 0`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AguCfg {
+    pub base: u32,
+    pub loops: [AguLoop; AGU_LOOPS],
+}
+
+impl AguCfg {
+    /// Build a configuration from *logical strides*: the caller specifies,
+    /// per loop level (innermost first), how many extra iterations `count`
+    /// and the desired address delta `stride` between successive iterations
+    /// of that level. This converts strides into the hardware's relative
+    /// jumps, which must rewind the accumulated delta of one complete pass
+    /// of all inner loops `P_{i-1}`:
+    ///
+    /// `jump_i = stride_i − P_{i-1}` where
+    /// `P_i = (count_i + 1) · P_{i-1} + count_i · jump_i`, `P_{-1} = 0`.
+    pub fn from_strides(base: u32, levels: &[(u32, i64)]) -> AguCfg {
+        assert!(levels.len() <= AGU_LOOPS, "AGU has only {AGU_LOOPS} loops");
+        let mut loops = [AguLoop::default(); AGU_LOOPS];
+        let mut inner_pass: i64 = 0; // P_{i-1}
+        for (i, &(count, stride)) in levels.iter().enumerate() {
+            let jump = stride - inner_pass;
+            loops[i] = AguLoop {
+                count,
+                jump: i32::try_from(jump).expect("AGU jump overflows i32"),
+            };
+            inner_pass = (count as i64 + 1) * inner_pass + count as i64 * jump;
+        }
+        AguCfg { base, loops }
+    }
+
+    /// Total number of addresses emitted in one full pass.
+    pub fn pass_len(&self) -> u64 {
+        self.loops.iter().map(|l| l.count as u64 + 1).product()
+    }
+
+    /// Convenience: enumerate one full pass of addresses (test/debug aid;
+    /// the hot path uses the incremental [`Agu`]).
+    pub fn addresses(&self) -> Vec<u32> {
+        let mut agu = Agu::new(*self);
+        (0..self.pass_len()).map(|_| agu.next_addr()).collect()
+    }
+}
+
+/// Live AGU state.
+#[derive(Debug, Clone)]
+pub struct Agu {
+    cfg: AguCfg,
+    addr: i64,
+    counters: [u32; AGU_LOOPS],
+}
+
+impl Agu {
+    pub fn new(cfg: AguCfg) -> Self {
+        Agu { cfg, addr: cfg.base as i64, counters: [0; AGU_LOOPS] }
+    }
+
+    /// Emit the current address and advance to the next.
+    #[inline]
+    pub fn next_addr(&mut self) -> u32 {
+        let emit = self.addr;
+        debug_assert!(emit >= 0, "AGU address went negative: {emit}");
+        // Advance: innermost non-exhausted loop jumps; inner ones reset.
+        let mut advanced = false;
+        for i in 0..AGU_LOOPS {
+            if self.counters[i] < self.cfg.loops[i].count {
+                self.counters[i] += 1;
+                self.addr += self.cfg.loops[i].jump as i64;
+                for c in self.counters[..i].iter_mut() {
+                    *c = 0;
+                }
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            // Full pass complete: wrap to base for replay.
+            self.counters = [0; AGU_LOOPS];
+            self.addr = self.cfg.base as i64;
+        }
+        u32::try_from(emit).expect("AGU emitted negative address")
+    }
+
+    pub fn reset(&mut self) {
+        self.addr = self.cfg.base as i64;
+        self.counters = [0; AGU_LOOPS];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_loop_linear() {
+        let cfg = AguCfg::from_strides(10, &[(4, 1)]);
+        assert_eq!(cfg.addresses(), vec![10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn two_level_with_gap() {
+        // Inner: 3 addresses stride 1; outer: 2 rows stride 10.
+        let cfg = AguCfg::from_strides(0, &[(2, 1), (1, 10)]);
+        assert_eq!(cfg.addresses(), vec![0, 1, 2, 10, 11, 12]);
+    }
+
+    #[test]
+    fn backward_jump_replay() {
+        // Replay the same 3 addresses 4 times: outer stride 0 rewinds.
+        let cfg = AguCfg::from_strides(7, &[(2, 1), (3, 0)]);
+        let got = cfg.addresses();
+        assert_eq!(got, vec![7, 8, 9, 7, 8, 9, 7, 8, 9, 7, 8, 9]);
+        // The hardware jump for the replay loop must be negative.
+        assert_eq!(cfg.loops[1].jump, -2);
+    }
+
+    #[test]
+    fn three_level_conv_like() {
+        // cb (2 blocks, stride 2 = aprec), fw (3 taps, stride 8), fh (3 rows,
+        // stride 80): a miniature conv tile walk.
+        let cfg = AguCfg::from_strides(100, &[(1, 2), (2, 8), (2, 80)]);
+        let got = cfg.addresses();
+        let mut want = Vec::new();
+        for fh in 0..3i64 {
+            for fw in 0..3i64 {
+                for cb in 0..2i64 {
+                    want.push((100 + cb * 2 + fw * 8 + fh * 80) as u32);
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn wraps_after_full_pass() {
+        let cfg = AguCfg::from_strides(5, &[(1, 1)]);
+        let mut agu = Agu::new(cfg);
+        assert_eq!(agu.next_addr(), 5);
+        assert_eq!(agu.next_addr(), 6);
+        // Wrapped.
+        assert_eq!(agu.next_addr(), 5);
+        assert_eq!(agu.next_addr(), 6);
+    }
+
+    #[test]
+    fn pass_len() {
+        let cfg = AguCfg::from_strides(0, &[(1, 1), (2, 3), (0, 0), (4, 9)]);
+        assert_eq!(cfg.pass_len(), 2 * 3 * 1 * 5);
+        assert_eq!(cfg.addresses().len(), 30);
+    }
+
+    #[test]
+    fn five_levels() {
+        let cfg = AguCfg::from_strides(0, &[(1, 1), (1, 2), (1, 4), (1, 8), (1, 16)]);
+        let got = cfg.addresses();
+        assert_eq!(got.len(), 32);
+        // Address = bit pattern of counters: 0..=31 in order.
+        assert_eq!(got, (0..32).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,230 @@
+//! Job configuration and the bit-combination sequencer (§3.1.3).
+//!
+//! A *job* is one CSR-programmed unit of work: e.g. one output row of a
+//! Conv2D layer or one GEMV pass. The controller writes the configuration
+//! registers, pulses the start command and receives an interrupt when the
+//! job completes.
+
+use crate::quant::Precision;
+
+use super::agu::AguCfg;
+
+/// Where the QuantSer output words go (§3.1.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputDest {
+    /// Write back to this MVU's own activation RAM.
+    SelfRam,
+    /// Send through the crossbar to the activation RAM(s) of the MVUs in
+    /// `dest_mask` (bit i = MVU i; multiple bits = broadcast).
+    Xbar { dest_mask: u8 },
+}
+
+/// Full job configuration — the software-visible contract of one MVU job.
+/// The CSR file (accel::csr_map) decodes into exactly this struct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobConfig {
+    /// Activation operand precision.
+    pub aprec: Precision,
+    /// Weight operand precision.
+    pub wprec: Precision,
+    /// Number of (activation word × weight word) tiles accumulated into each
+    /// output vector (e.g. `C_b · F_H · F_W` for a conv row job).
+    pub tiles: u32,
+    /// Number of MVP output vectors this job produces (e.g. `W_out`).
+    pub outputs: u32,
+    /// Activation tile-base AGU: must emit `tiles` addresses per bit
+    /// combination, replayed `aprec.bits·wprec.bits` times per output
+    /// (the MVP adds the bit-plane offset `aprec.bits-1-j`).
+    pub a_agu: AguCfg,
+    /// Weight tile-base AGU, mirroring `a_agu` (offset `wprec.bits-1-k`).
+    pub w_agu: AguCfg,
+    /// Scaler RAM AGU: one address per MVP output vector.
+    pub s_agu: AguCfg,
+    /// Bias RAM AGU: one address per MVP output vector.
+    pub b_agu: AguCfg,
+    /// Output AGU: one base address per *written* output vector
+    /// (`outputs / pool_count` of them); QuantSer writes `oprec` consecutive
+    /// plane words from each base.
+    pub o_agu: AguCfg,
+    /// Enable the scaler multiply stage.
+    pub scaler_en: bool,
+    /// Enable the bias add stage.
+    pub bias_en: bool,
+    /// Enable ReLU in the pool/ReLU comparator.
+    pub relu_en: bool,
+    /// Max-pool window: the pool unit reduces every `pool_count` consecutive
+    /// MVP outputs into one written output (1 = pooling off).
+    pub pool_count: u32,
+    /// Output precision / QuantSer window.
+    pub quant: crate::quant::QuantSerCfg,
+    /// Output destination.
+    pub dest: OutputDest,
+}
+
+impl JobConfig {
+    /// Bit combinations per output = `b_a · b_w` (§3.1.1).
+    pub fn bit_combos(&self) -> u32 {
+        self.aprec.bits as u32 * self.wprec.bits as u32
+    }
+
+    /// Total MVP cycles for the job: `outputs · b_a · b_w · tiles`.
+    pub fn cycles(&self) -> u64 {
+        self.outputs as u64 * self.bit_combos() as u64 * self.tiles as u64
+    }
+
+    /// Number of output vectors actually written after pooling.
+    pub fn written_outputs(&self) -> u32 {
+        self.outputs / self.pool_count
+    }
+
+    /// Validate internal consistency; returns a description of the first
+    /// problem found.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tiles == 0 || self.outputs == 0 {
+            return Err("tiles and outputs must be non-zero".into());
+        }
+        if self.pool_count == 0 || self.outputs % self.pool_count != 0 {
+            return Err(format!(
+                "pool_count {} must divide outputs {}",
+                self.pool_count, self.outputs
+            ));
+        }
+        if self.quant.out_bits < 1 || self.quant.out_bits > 16 {
+            return Err("quant.out_bits must be 1..=16".into());
+        }
+        // The quantser window shift() asserts internally; check here softly.
+        if self.quant.msb_index + 1 < self.quant.out_bits {
+            return Err("quantser window underflows bit 0".into());
+        }
+        if let super::job::OutputDest::Xbar { dest_mask } = self.dest {
+            if dest_mask == 0 {
+                return Err("xbar destination mask is empty".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The bit-combination sequencer: walks all `(j, k)` activation/weight bit
+/// pairs in descending order of magnitude `j + k` (Algorithm 1), flagging
+/// the steps where the shifter-accumulator must shift.
+///
+/// The sequence is precomputed at job launch (it is at most 16×16 = 256
+/// entries) and replayed once per output vector.
+#[derive(Debug, Clone)]
+pub struct ComboSeq {
+    /// `(j, k, shift_before, sign)` per combination step.
+    pub steps: Vec<(u8, u8, bool, i32)>,
+}
+
+impl ComboSeq {
+    pub fn new(aprec: Precision, wprec: Precision) -> Self {
+        let mut steps = Vec::with_capacity(aprec.bits as usize * wprec.bits as usize);
+        let top = (aprec.bits - 1) as i32 + (wprec.bits - 1) as i32;
+        let mut first_of_level;
+        for i in (0..=top).rev() {
+            first_of_level = true;
+            for j in (0..aprec.bits as i32).rev() {
+                let k = i - j;
+                if k < 0 || k >= wprec.bits as i32 {
+                    continue;
+                }
+                let sign = aprec.plane_sign(j as u8) * wprec.plane_sign(k as u8);
+                // Shift once when entering a new magnitude level (except the
+                // first level overall).
+                let shift = first_of_level && i != top;
+                steps.push((j as u8, k as u8, shift, sign));
+                first_of_level = false;
+            }
+        }
+        debug_assert_eq!(steps.len(), aprec.bits as usize * wprec.bits as usize);
+        ComboSeq { steps }
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantSerCfg;
+
+    fn dummy_job() -> JobConfig {
+        JobConfig {
+            aprec: Precision::u(2),
+            wprec: Precision::s(2),
+            tiles: 9,
+            outputs: 32,
+            a_agu: AguCfg::default(),
+            w_agu: AguCfg::default(),
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::default(),
+            scaler_en: true,
+            bias_en: true,
+            relu_en: true,
+            pool_count: 1,
+            quant: QuantSerCfg { msb_index: 7, out_bits: 2, saturate: true },
+            dest: OutputDest::SelfRam,
+        }
+    }
+
+    #[test]
+    fn cycle_count_formula() {
+        let j = dummy_job();
+        // 32 outputs × (2·2) combos × 9 tiles.
+        assert_eq!(j.cycles(), 32 * 4 * 9);
+    }
+
+    #[test]
+    fn combo_seq_order_2x2() {
+        let seq = ComboSeq::new(Precision::u(2), Precision::u(2));
+        // Magnitudes: (1,1)=2 then (1,0),(0,1)=1 then (0,0)=0.
+        let jk: Vec<(u8, u8)> = seq.steps.iter().map(|s| (s.0, s.1)).collect();
+        assert_eq!(jk, vec![(1, 1), (1, 0), (0, 1), (0, 0)]);
+        let shifts: Vec<bool> = seq.steps.iter().map(|s| s.2).collect();
+        assert_eq!(shifts, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn combo_seq_signs() {
+        let seq = ComboSeq::new(Precision::u(2), Precision::s(2));
+        // Sign plane of weights is k=1: steps with k==1 are negative.
+        for &(_, k, _, sign) in &seq.steps {
+            assert_eq!(sign, if k == 1 { -1 } else { 1 });
+        }
+    }
+
+    #[test]
+    fn magnitudes_non_increasing() {
+        for (ab, wb) in [(3u8, 5u8), (8, 8), (1, 7), (16, 16)] {
+            let seq = ComboSeq::new(Precision::u(ab), Precision::u(wb));
+            let mags: Vec<i32> =
+                seq.steps.iter().map(|s| s.0 as i32 + s.1 as i32).collect();
+            assert!(mags.windows(2).all(|w| w[0] >= w[1]), "{ab}x{wb}: {mags:?}");
+            assert_eq!(seq.len(), ab as usize * wb as usize);
+            // Shift count = number of magnitude levels − 1.
+            let shifts = seq.steps.iter().filter(|s| s.2).count();
+            assert_eq!(shifts, (ab + wb - 2) as usize);
+        }
+    }
+
+    #[test]
+    fn validation() {
+        let mut j = dummy_job();
+        assert!(j.validate().is_ok());
+        j.pool_count = 5; // does not divide 32
+        assert!(j.validate().is_err());
+        j.pool_count = 4;
+        assert!(j.validate().is_ok());
+        assert_eq!(j.written_outputs(), 8);
+        j.dest = OutputDest::Xbar { dest_mask: 0 };
+        assert!(j.validate().is_err());
+    }
+}

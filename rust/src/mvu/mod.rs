@@ -1,0 +1,44 @@
+//! The Matrix-Vector Unit (§3.1, Fig. 1 right, Fig. 4).
+//!
+//! Each MVU is a 64-lane vector pipeline:
+//!
+//! ```text
+//!  act RAM ──64b──► ┌─────────────────────────┐
+//!                   │ MVP: 64 × VVP            │ 64 × 32b
+//!  wgt RAM ─4096b─► │ (bit-serial, Alg. 1)     ├─────────► Scaler ─► Bias
+//!                   └─────────────────────────┘              (27×16)   (32b)
+//!                                                               │
+//!        act RAM (self or via crossbar) ◄── QuantSer ◄── Pool/ReLU
+//! ```
+//!
+//! The MVP computes on 1–16-bit operands bit-serially: one activation word
+//! (bit `j` of 64 elements) is broadcast to 64 VVPs while a 4096-bit weight
+//! word (bit `k` of a 64×64 tile) feeds one row per VVP; each VVP ANDs,
+//! popcounts through the adder tree and shift-accumulates by order of
+//! magnitude. A `b_w × b_a`-bit job takes `b_w·b_a` cycles per accumulated
+//! tile.
+//!
+//! Faithfulness note (documented in DESIGN.md): the address-generation units
+//! produce *tile* addresses through five nested ± jump loops, while the
+//! bit-plane offset within a tile (`prec-1-j`) is added by the MVP's bit
+//! combination sequencer — the zigzag magnitude order of Alg. 1 is not
+//! expressible as nested counters alone, and the real design likewise keeps
+//! the bit-combination walk in dedicated sequencer logic.
+
+mod agu;
+mod job;
+mod mvu;
+mod pool;
+mod ram;
+mod scaler;
+mod transposer;
+mod vvp;
+
+pub use agu::{Agu, AguCfg, AguLoop, AGU_LOOPS};
+pub use job::{ComboSeq, JobConfig, OutputDest};
+pub use mvu::{Mvu, MvuConfig, MvuState, XbarWrite};
+pub use pool::PoolRelu;
+pub use ram::{ActRam, BiasRam, ScalerRam, WeightRam, WEIGHT_WORD_LANES};
+pub use scaler::ScalerStage;
+pub use transposer::Transposer;
+pub use vvp::Vvp;

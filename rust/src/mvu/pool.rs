@@ -1,0 +1,103 @@
+//! Combined MaxPool/ReLU unit (§3.1.4): "implemented as a comparator with an
+//! internal register. For ReLU, the incoming value is checked against the
+//! register initially set to 0. The combined MaxPool/ReLU is implemented by
+//! programming MVUs to produce data in the sequence needed for a MaxPool
+//! window."
+//!
+//! The unit consumes MVP output vectors one at a time; every `window`
+//! vectors it emits the lane-wise running maximum. With ReLU enabled the
+//! comparator register starts at 0 instead of −∞, which simultaneously
+//! implements `max(0, ·)`.
+
+/// 64-lane pool/ReLU comparator state.
+#[derive(Debug, Clone)]
+pub struct PoolRelu {
+    relu: bool,
+    window: u32,
+    regs: [i32; 64],
+    filled: u32,
+}
+
+impl PoolRelu {
+    pub fn new(relu: bool, window: u32) -> Self {
+        assert!(window >= 1);
+        let mut p = PoolRelu { relu, window, regs: [0; 64], filled: 0 };
+        p.reset_regs();
+        p
+    }
+
+    fn reset_regs(&mut self) {
+        let init = if self.relu { 0 } else { i32::MIN };
+        self.regs = [init; 64];
+        self.filled = 0;
+    }
+
+    /// Push one vector; returns the reduced vector when the window fills.
+    pub fn push(&mut self, v: &[i32; 64]) -> Option<[i32; 64]> {
+        for l in 0..64 {
+            if v[l] > self.regs[l] {
+                self.regs[l] = v[l];
+            }
+        }
+        self.filled += 1;
+        if self.filled == self.window {
+            let out = self.regs;
+            self.reset_regs();
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_only_window1() {
+        let mut p = PoolRelu::new(true, 1);
+        let v: [i32; 64] = std::array::from_fn(|i| i as i32 - 32);
+        let out = p.push(&v).expect("window of 1 emits immediately");
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, (i as i32 - 32).max(0));
+        }
+    }
+
+    #[test]
+    fn maxpool_window4() {
+        let mut p = PoolRelu::new(false, 4);
+        for step in 0..4 {
+            let v: [i32; 64] = std::array::from_fn(|l| ((l as i32) * 10 + step) - 100);
+            let r = p.push(&v);
+            if step < 3 {
+                assert!(r.is_none());
+            } else {
+                let out = r.unwrap();
+                // Max over step = value at step 3, negatives preserved
+                // (no ReLU).
+                assert_eq!(out[0], -97);
+                assert_eq!(out[63], 533);
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_with_relu_clamps_negative_windows() {
+        let mut p = PoolRelu::new(true, 2);
+        assert!(p.push(&[-5; 64]).is_none());
+        let out = p.push(&[-3; 64]).unwrap();
+        assert_eq!(out[0], 0, "all-negative window clamps to 0 with ReLU");
+    }
+
+    #[test]
+    fn window_resets_between_groups() {
+        let mut p = PoolRelu::new(false, 2);
+        p.push(&[100; 64]);
+        let a = p.push(&[1; 64]).unwrap();
+        assert_eq!(a[0], 100);
+        p.push(&[2; 64]);
+        let b = p.push(&[3; 64]).unwrap();
+        assert_eq!(b[0], 3, "previous window's max must not leak");
+    }
+}

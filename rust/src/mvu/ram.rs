@@ -1,0 +1,169 @@
+//! MVU-local memories (§3.1.2): activation, weight, scaler and bias RAMs.
+//!
+//! * **Activation RAM** — 64-bit words, bit-transposed activation blocks.
+//! * **Weight RAM** — 4096-bit words (modelled as `[u64; 64]`): bit `k` of a
+//!   64×64 weight tile, one 64-bit row per VVP.
+//! * **Scaler RAM** — 64 × 16-bit operands per word (one per lane).
+//! * **Bias RAM** — 64 × 32-bit operands per word.
+//!
+//! All reads/writes are bounds-checked; generated programs must stay within
+//! the configured depth exactly as on the FPGA.
+
+/// Rows per weight word = VVP count.
+pub const WEIGHT_WORD_LANES: usize = 64;
+
+/// Activation RAM: depth × 64-bit words.
+#[derive(Debug, Clone)]
+pub struct ActRam {
+    words: Vec<u64>,
+}
+
+impl ActRam {
+    pub fn new(depth: usize) -> Self {
+        ActRam { words: vec![0; depth] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.words.len()
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> u64 {
+        self.words[addr as usize]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u32, word: u64) {
+        self.words[addr as usize] = word;
+    }
+
+    /// Bulk host-side load (PCIe DMA model): copy `words` starting at `addr`.
+    pub fn load(&mut self, addr: u32, words: &[u64]) {
+        let a = addr as usize;
+        self.words[a..a + words.len()].copy_from_slice(words);
+    }
+
+    /// Zero a region (used to materialise padding rows/columns).
+    pub fn clear(&mut self, addr: u32, len: usize) {
+        let a = addr as usize;
+        self.words[a..a + len].fill(0);
+    }
+}
+
+/// Weight RAM: depth × 4096-bit words.
+#[derive(Debug, Clone)]
+pub struct WeightRam {
+    words: Vec<[u64; WEIGHT_WORD_LANES]>,
+}
+
+impl WeightRam {
+    pub fn new(depth: usize) -> Self {
+        WeightRam { words: vec![[0; WEIGHT_WORD_LANES]; depth] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.words.len()
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> &[u64; WEIGHT_WORD_LANES] {
+        &self.words[addr as usize]
+    }
+
+    pub fn write(&mut self, addr: u32, word: [u64; WEIGHT_WORD_LANES]) {
+        self.words[addr as usize] = word;
+    }
+
+    /// Bulk host-side load of a pre-transposed weight image.
+    pub fn load(&mut self, addr: u32, words: &[[u64; WEIGHT_WORD_LANES]]) {
+        let a = addr as usize;
+        self.words[a..a + words.len()].copy_from_slice(words);
+    }
+}
+
+/// Scaler RAM: depth × (64 × u16).
+#[derive(Debug, Clone)]
+pub struct ScalerRam {
+    words: Vec<[u16; 64]>,
+}
+
+impl ScalerRam {
+    pub fn new(depth: usize) -> Self {
+        ScalerRam { words: vec![[1; 64]; depth] } // neutral scale = 1
+    }
+
+    pub fn depth(&self) -> usize {
+        self.words.len()
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> &[u16; 64] {
+        &self.words[addr as usize]
+    }
+
+    pub fn write(&mut self, addr: u32, word: [u16; 64]) {
+        self.words[addr as usize] = word;
+    }
+}
+
+/// Bias RAM: depth × (64 × i32).
+#[derive(Debug, Clone)]
+pub struct BiasRam {
+    words: Vec<[i32; 64]>,
+}
+
+impl BiasRam {
+    pub fn new(depth: usize) -> Self {
+        BiasRam { words: vec![[0; 64]; depth] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.words.len()
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> &[i32; 64] {
+        &self.words[addr as usize]
+    }
+
+    pub fn write(&mut self, addr: u32, word: [i32; 64]) {
+        self.words[addr as usize] = word;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_ram_rw() {
+        let mut r = ActRam::new(16);
+        r.write(3, 0xDEAD_BEEF);
+        assert_eq!(r.read(3), 0xDEAD_BEEF);
+        r.load(8, &[1, 2, 3]);
+        assert_eq!(r.read(9), 2);
+        r.clear(8, 3);
+        assert_eq!(r.read(9), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn act_ram_oob() {
+        ActRam::new(4).read(4);
+    }
+
+    #[test]
+    fn weight_ram_rw() {
+        let mut r = WeightRam::new(4);
+        let mut w = [0u64; 64];
+        w[7] = 42;
+        r.write(2, w);
+        assert_eq!(r.read(2)[7], 42);
+    }
+
+    #[test]
+    fn scaler_defaults_neutral() {
+        let r = ScalerRam::new(2);
+        assert_eq!(r.read(0)[13], 1);
+    }
+}

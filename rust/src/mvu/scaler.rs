@@ -1,0 +1,60 @@
+//! Scaler + bias pipeline stage (§3.1.4): a 27×16 fixed-point multiplier
+//! aligned to the FPGA DSP ports, followed by a 32-bit bias adder. Used for
+//! batch-norm folding and LSQ quantization scaling.
+
+use crate::quant::Fixed;
+
+/// The 64-lane scaler/bias stage. Stateless per element; struct exists to
+/// mirror the hardware module boundary and hold enables.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalerStage {
+    pub scaler_en: bool,
+    pub bias_en: bool,
+}
+
+impl ScalerStage {
+    /// Process one 64-lane vector: `v·s + b` per lane, at pipeline width.
+    pub fn apply(&self, v: &[i32; 64], scales: &[u16; 64], biases: &[i32; 64]) -> [i32; 64] {
+        std::array::from_fn(|l| {
+            let mut f = Fixed(v[l]);
+            if self.scaler_en {
+                f = f.scale(scales[l]);
+            }
+            if self.bias_en {
+                f = f.bias(biases[l]);
+            }
+            f.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_and_bias() {
+        let st = ScalerStage { scaler_en: true, bias_en: true };
+        let v = [2i32; 64];
+        let s = [10u16; 64];
+        let mut b = [0i32; 64];
+        b[3] = 7;
+        let out = st.apply(&v, &s, &b);
+        assert_eq!(out[0], 20);
+        assert_eq!(out[3], 27);
+    }
+
+    #[test]
+    fn bypass() {
+        let st = ScalerStage { scaler_en: false, bias_en: false };
+        let v: [i32; 64] = std::array::from_fn(|i| i as i32 - 32);
+        assert_eq!(st.apply(&v, &[9; 64], &[9; 64]), v);
+    }
+
+    #[test]
+    fn negative_values_scale() {
+        let st = ScalerStage { scaler_en: true, bias_en: false };
+        let out = st.apply(&[-5; 64], &[3; 64], &[0; 64]);
+        assert_eq!(out[0], -15);
+    }
+}

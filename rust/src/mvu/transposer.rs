@@ -1,0 +1,92 @@
+//! The transposer module (§3.1.2): converts host-order element data into
+//! the bit-transposed format on the way into activation RAM. "Transposition
+//! is only needed on the first layer of a DNN since MVUs write back to
+//! activation RAM in the bit-transposed format."
+//!
+//! Hardware streams elements in and flushes one bit-plane block (`prec.bits`
+//! words) every 64 elements; we model exactly that streaming contract.
+
+use crate::quant::{pack_block, Precision, BLOCK};
+
+/// Streaming host→RAM transposer.
+#[derive(Debug, Clone)]
+pub struct Transposer {
+    prec: Precision,
+    buf: Vec<i32>,
+}
+
+impl Transposer {
+    pub fn new(prec: Precision) -> Self {
+        Transposer { prec, buf: Vec::with_capacity(BLOCK) }
+    }
+
+    /// Feed one element; returns a completed block of `prec.bits` plane
+    /// words (MSB first) every 64th element.
+    pub fn push(&mut self, v: i32) -> Option<Vec<u64>> {
+        debug_assert!(self.prec.contains(v), "{v} not representable at {:?}", self.prec);
+        self.buf.push(v);
+        if self.buf.len() == BLOCK {
+            let mut block = [0i32; BLOCK];
+            block.copy_from_slice(&self.buf);
+            self.buf.clear();
+            Some(pack_block(&block, self.prec))
+        } else {
+            None
+        }
+    }
+
+    /// Number of elements currently buffered (must be 0 at end of stream).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Transpose a full element stream (length multiple of 64) into the
+    /// concatenated plane-word image to DMA into activation RAM.
+    pub fn transpose_all(prec: Precision, vals: &[i32]) -> Vec<u64> {
+        assert!(vals.len() % BLOCK == 0, "stream must be a multiple of {BLOCK}");
+        let mut t = Transposer::new(prec);
+        let mut out = Vec::with_capacity(vals.len() / BLOCK * prec.bits as usize);
+        for &v in vals {
+            if let Some(words) = t.push(v) {
+                out.extend_from_slice(&words);
+            }
+        }
+        debug_assert_eq!(t.pending(), 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitTensor;
+
+    #[test]
+    fn streaming_matches_bulk_pack() {
+        let prec = Precision::u(3);
+        let vals: Vec<i32> = (0..2 * BLOCK as i32).map(|i| i % 8).collect();
+        let streamed = Transposer::transpose_all(prec, &vals);
+        let bulk = BitTensor::pack(&vals, prec);
+        assert_eq!(streamed, bulk.words);
+    }
+
+    #[test]
+    fn emits_every_64_elements() {
+        let mut t = Transposer::new(Precision::u(2));
+        for i in 0..63 {
+            assert!(t.push(i % 4).is_none());
+        }
+        let words = t.push(3).expect("64th element flushes");
+        assert_eq!(words.len(), 2);
+        assert_eq!(t.pending(), 0);
+    }
+
+    #[test]
+    fn signed_stream() {
+        let prec = Precision::s(4);
+        let vals: Vec<i32> = (0..BLOCK as i32).map(|i| (i % 15) - 7).collect();
+        let words = Transposer::transpose_all(prec, &vals);
+        let t = BitTensor { words, blocks: 1, prec };
+        assert_eq!(t.unpack(), vals);
+    }
+}

@@ -1,0 +1,165 @@
+//! The Vector-Vector Product pipeline (Fig. 4): 64 one-bit multipliers
+//! (AND gates), a 5-deep adder tree producing an 8-bit partial dot product,
+//! and a shifter-accumulator implementing the magnitude-ordered bit-serial
+//! scheme of Algorithm 1.
+
+/// One VVP lane-group: processes one 64-element row of the weight tile
+/// against the broadcast activation word.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Vvp {
+    /// Shifter-accumulator. 32-bit in hardware; modelled in i64 with a
+    /// wrap-to-i32 on output so overflow is detectable in tests.
+    acc: i64,
+}
+
+impl Vvp {
+    pub fn new() -> Self {
+        Vvp { acc: 0 }
+    }
+
+    /// Shift the accumulator left one bit — applied when the bit-combination
+    /// sequencer moves to the next lower order of magnitude (Alg. 1 l.11).
+    #[inline]
+    pub fn shift(&mut self) {
+        self.acc <<= 1;
+    }
+
+    /// One cycle: 64 1-bit products (AND), adder-tree sum (popcount) and
+    /// signed accumulate. `sign` is −1 when exactly one of the current bit
+    /// planes is a two's-complement sign plane.
+    #[inline]
+    pub fn mac(&mut self, act_word: u64, weight_row: u64, sign: i32) {
+        let partial = (act_word & weight_row).count_ones() as i64;
+        self.acc += sign as i64 * partial;
+    }
+
+    /// Read out and clear the accumulator at job-output boundaries.
+    /// Truncates to the 32-bit pipeline width (wrapping, like hardware).
+    #[inline]
+    pub fn take(&mut self) -> i32 {
+        let v = self.acc;
+        self.acc = 0;
+        v as i32
+    }
+
+    /// Current wide accumulator value (test/debug aid).
+    pub fn value(&self) -> i64 {
+        self.acc
+    }
+}
+
+/// Compute a full bit-serial dot product over pre-packed bit planes —
+/// a direct transcription of Algorithm 1, used as the unit-level oracle for
+/// the streaming MVP and exercised by proptests.
+///
+/// `a_planes[j]` holds bit `j` (LSB = index 0) of the 64 activation
+/// elements, `w_planes[k]` likewise for weights. Signs follow two's
+/// complement when the corresponding precision is signed.
+pub fn bitserial_dot(
+    a_planes: &[u64],
+    w_planes: &[u64],
+    a_prec: crate::quant::Precision,
+    w_prec: crate::quant::Precision,
+) -> i32 {
+    assert_eq!(a_planes.len(), a_prec.bits as usize);
+    assert_eq!(w_planes.len(), w_prec.bits as usize);
+    let mut vvp = Vvp::new();
+    let top = (a_prec.bits - 1) as i32 + (w_prec.bits - 1) as i32;
+    for i in (0..=top).rev() {
+        if i != top {
+            vvp.shift();
+        }
+        for j in 0..a_prec.bits as i32 {
+            let k = i - j;
+            if k < 0 || k >= w_prec.bits as i32 {
+                continue;
+            }
+            let sign = a_prec.plane_sign(j as u8) * w_prec.plane_sign(k as u8);
+            vvp.mac(a_planes[j as usize], w_planes[k as usize], sign);
+        }
+    }
+    vvp.take()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{pack_block, Precision, BLOCK};
+
+    /// Plain integer dot product oracle.
+    fn dot(a: &[i32; BLOCK], w: &[i32; BLOCK]) -> i64 {
+        a.iter().zip(w).map(|(&x, &y)| x as i64 * y as i64).sum()
+    }
+
+    /// Reorder packed planes from memory order (MSB first) to LSB-first as
+    /// `bitserial_dot` expects.
+    fn lsb_first(mem: Vec<u64>) -> Vec<u64> {
+        mem.into_iter().rev().collect()
+    }
+
+    fn check(a: [i32; BLOCK], w: [i32; BLOCK], ap: Precision, wp: Precision) {
+        let a_planes = lsb_first(pack_block(&a, ap));
+        let w_planes = lsb_first(pack_block(&w, wp));
+        let got = bitserial_dot(&a_planes, &w_planes, ap, wp) as i64;
+        assert_eq!(got, dot(&a, &w), "ap={ap:?} wp={wp:?}");
+    }
+
+    #[test]
+    fn unsigned_2x2() {
+        let a: [i32; BLOCK] = std::array::from_fn(|i| (i as i32) % 4);
+        let w: [i32; BLOCK] = std::array::from_fn(|i| (3 - i as i32 % 4) % 4);
+        check(a, w, Precision::u(2), Precision::s(3));
+    }
+
+    #[test]
+    fn unsigned_1x1_is_popcount() {
+        let a = [1i32; BLOCK];
+        let w: [i32; BLOCK] = std::array::from_fn(|i| (i % 2) as i32);
+        check(a, w, Precision::u(1), Precision::u(1));
+    }
+
+    #[test]
+    fn signed_weights() {
+        let a: [i32; BLOCK] = std::array::from_fn(|i| (i as i32 * 3) % 4);
+        let w: [i32; BLOCK] = std::array::from_fn(|i| ((i as i32 * 7) % 4) - 2);
+        check(a, w, Precision::u(2), Precision::s(2));
+    }
+
+    #[test]
+    fn signed_both() {
+        let a: [i32; BLOCK] = std::array::from_fn(|i| ((i as i32 * 5) % 16) - 8);
+        let w: [i32; BLOCK] = std::array::from_fn(|i| ((i as i32 * 11) % 16) - 8);
+        check(a, w, Precision::s(4), Precision::s(4));
+    }
+
+    #[test]
+    fn mixed_precision() {
+        for (ab, wb) in [(1u8, 4u8), (3, 2), (8, 8), (5, 7), (16, 1)] {
+            let ap = Precision::u(ab);
+            let wp = Precision::s(wb);
+            let a: [i32; BLOCK] =
+                std::array::from_fn(|i| (i as i32 * 13 + 1) % (1 << ab));
+            let span = (1 << wb) as i32;
+            let w: [i32; BLOCK] =
+                std::array::from_fn(|i| ((i as i32 * 17 + 3) % span) - span / 2);
+            check(a, w, ap, wp);
+        }
+    }
+
+    #[test]
+    fn take_resets() {
+        let mut v = Vvp::new();
+        v.mac(0b1111, 0b0110, 1);
+        assert_eq!(v.take(), 2);
+        assert_eq!(v.take(), 0);
+    }
+
+    #[test]
+    fn shift_doubles() {
+        let mut v = Vvp::new();
+        v.mac(1, 1, 1);
+        v.shift();
+        v.mac(1, 1, 1);
+        assert_eq!(v.take(), 3);
+    }
+}

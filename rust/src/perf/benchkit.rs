@@ -1,0 +1,102 @@
+//! Minimal benchmark harness (criterion is not in the offline vendored
+//! crate set). Benches are `harness = false` binaries that call
+//! [`bench`] / [`report_table`]; output is stable, grep-able text.
+
+use std::time::{Duration, Instant};
+
+/// Timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub per_iter: Duration,
+}
+
+impl BenchResult {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.per_iter.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` repeatedly: warm up, then time enough iterations to fill
+/// ~`target_ms`. Returns mean per-iteration time.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // Warm-up.
+    f();
+    // Estimate single-iteration cost.
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = ((target_ms as f64 / 1e3) / est.as_secs_f64()).clamp(1.0, 1e6) as u32;
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t1.elapsed();
+    let r = BenchResult { name: name.to_string(), iters, per_iter: total / iters };
+    println!(
+        "bench {:40} {:>12.3} ms/iter  ({} iters)",
+        r.name,
+        r.per_iter_ms(),
+        r.iters
+    );
+    r
+}
+
+/// Print a paper-style table: a title, column headers and rows.
+pub fn report_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let widths: Vec<usize> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(String::len).unwrap_or(0))
+                .chain([h.len()])
+                .max()
+                .unwrap_or(0)
+        })
+        .collect();
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}
+
+/// Format helper.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+pub fn f0(v: f64) -> String {
+    format!("{v:.0}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let r = bench("noop", 5, || n = n.wrapping_add(1));
+        assert!(r.iters >= 1);
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn table_renders() {
+        report_table(
+            "t",
+            &["a", "bbb"],
+            &[vec!["1".into(), "2".into()], vec!["10".into(), "20".into()]],
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Comparative models of the related bit-flexible architectures (§2,
+//! §3.1.1): BitFusion, BitBlade and Loom — used by the ablation bench to
+//! reproduce the paper's architectural claims:
+//!
+//! * BitFusion/BitBlade support only {2,4,8}-bit operands (bit widths round
+//!   up), BARVINN/Loom go down to 1 bit;
+//! * BitFusion needs a large number of variable shifters; BitBlade's
+//!   bitwise-summation needs 16 variable shifters + 17 adder trees per
+//!   unit; BARVINN serialises magnitudes through **one** fixed shifter and
+//!   **one** adder tree per VVP;
+//! * Loom's data loading limits GEMM efficiency below 16-bit weights,
+//!   whereas BARVINN sustains full throughput down to 1 bit.
+
+use super::cycle_model::Bits;
+
+/// Architecture identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Barvinn,
+    BitFusion,
+    BitBlade,
+    Loom,
+}
+
+/// Round a precision up to the architecture's supported operand widths.
+pub fn effective_bits(arch: Arch, bits: Bits) -> Bits {
+    match arch {
+        Arch::Barvinn | Arch::Loom => bits,
+        Arch::BitFusion | Arch::BitBlade => {
+            let up = |b: u8| match b {
+                0..=2 => 2,
+                3..=4 => 4,
+                _ => 8,
+            };
+            Bits { w: up(bits.w), a: up(bits.a) }
+        }
+    }
+}
+
+/// Throughput efficiency factor at `bits` relative to the architecture's
+/// peak (1.0 = full). Captures Loom's weight-loading bound below 16-bit
+/// weights (§3.1.1: "restricts the efficiency for general matrix multiply
+/// operations when the weight bit depth is below 16").
+pub fn efficiency(arch: Arch, bits: Bits) -> f64 {
+    match arch {
+        Arch::Barvinn | Arch::BitFusion | Arch::BitBlade => 1.0,
+        Arch::Loom => (bits.w as f64 / 16.0).min(1.0),
+    }
+}
+
+/// Effective bit-operations per MAC (lower is better): supported-width
+/// rounding × loading efficiency.
+pub fn bit_ops_per_mac(arch: Arch, bits: Bits) -> f64 {
+    let eff_bits = effective_bits(arch, bits);
+    eff_bits.product() as f64 / efficiency(arch, bits)
+}
+
+/// Shift/add datapath cost per compute unit, in (variable shifters,
+/// fixed shifters, adder trees) — the §3.1.1 comparison.
+pub fn shifter_adder_cost(arch: Arch) -> (u32, u32, u32) {
+    match arch {
+        Arch::Barvinn => (0, 1, 1),
+        Arch::BitBlade => (16, 0, 17),
+        // BitFusion aligns/sums every partial product: 16 fused 2-bit PEs
+        // per 8-bit unit, each with its own variable shift into the sum.
+        Arch::BitFusion => (16, 0, 1),
+        Arch::Loom => (0, 1, 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supported_widths() {
+        let b1 = Bits { w: 1, a: 1 };
+        assert_eq!(effective_bits(Arch::Barvinn, b1), b1);
+        assert_eq!(effective_bits(Arch::BitFusion, b1), Bits { w: 2, a: 2 });
+        assert_eq!(
+            effective_bits(Arch::BitBlade, Bits { w: 3, a: 5 }),
+            Bits { w: 4, a: 8 }
+        );
+    }
+
+    #[test]
+    fn barvinn_wins_at_one_bit() {
+        let b1 = Bits { w: 1, a: 1 };
+        let ours = bit_ops_per_mac(Arch::Barvinn, b1);
+        assert!(ours < bit_ops_per_mac(Arch::BitFusion, b1));
+        assert!(ours < bit_ops_per_mac(Arch::Loom, b1), "Loom pays loading");
+    }
+
+    #[test]
+    fn parity_at_supported_points() {
+        let b4 = Bits { w: 4, a: 4 };
+        assert_eq!(
+            bit_ops_per_mac(Arch::Barvinn, b4),
+            bit_ops_per_mac(Arch::BitBlade, b4)
+        );
+    }
+
+    #[test]
+    fn loom_full_efficiency_at_16bit_weights() {
+        assert_eq!(efficiency(Arch::Loom, Bits { w: 16, a: 2 }), 1.0);
+        assert_eq!(efficiency(Arch::Loom, Bits { w: 4, a: 2 }), 0.25);
+    }
+
+    #[test]
+    fn shifter_claims() {
+        // §3.1.1: "BitBlade requires 16 variable shifters and 17 adder
+        // trees" vs BARVINN's "single fixed shifter and a single adder
+        // tree".
+        assert_eq!(shifter_adder_cost(Arch::Barvinn), (0, 1, 1));
+        assert_eq!(shifter_adder_cost(Arch::BitBlade), (16, 0, 17));
+    }
+}

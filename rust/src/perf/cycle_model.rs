@@ -1,0 +1,227 @@
+//! BARVINN cycle / throughput model.
+//!
+//! Per-layer cycles follow the Table-3-exact formula (validated against the
+//! cycle-accurate simulator in `codegen::conv2d`):
+//!
+//! `cycles = b_a·b_w · ⌈C_i/64⌉ · F² · ⌈C_o/64⌉ · W_out · rows`
+//!
+//! * **Pipelined mode** (Fig. 5a): one layer per MVU; steady-state
+//!   throughput is set by the slowest stage. Models with more than 8
+//!   layers run in laps of 8 (§3.1.6), so effective cycles/frame is the
+//!   sum of per-lap bottlenecks.
+//! * **Distributed mode** (Fig. 5b): all 8 MVUs share each layer;
+//!   per-frame latency is total/8 (plus imperfect row-chunk balance).
+
+use crate::model::zoo::{ConvShape, FcShape, NetShape};
+use crate::{CLOCK_HZ, NUM_MVUS};
+
+/// Precision point (weights, activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bits {
+    pub w: u8,
+    pub a: u8,
+}
+
+impl Bits {
+    pub fn product(self) -> u64 {
+        self.w as u64 * self.a as u64
+    }
+}
+
+fn blocks(c: usize) -> u64 {
+    c.div_ceil(64) as u64
+}
+
+/// Cycles for one conv layer at `bits` (paper accounting: full-window rows).
+pub fn conv_cycles(s: &ConvShape, bits: Bits) -> u64 {
+    let full_rows = if s.in_h < s.k { 0 } else { ((s.in_h - s.k) / s.stride + 1) as u64 };
+    let out_w = s.out_h() as u64;
+    bits.product() * blocks(s.ci) * (s.k * s.k) as u64 * blocks(s.co) * out_w * full_rows
+}
+
+/// Cycles for one FC layer at `bits` (GEMV accounting, `gemv::GemvSpec`).
+pub fn fc_cycles(s: &FcShape, bits: Bits) -> u64 {
+    bits.product() * blocks(s.ci) * blocks(s.co)
+}
+
+/// All per-layer cycle counts for a network.
+pub fn layer_cycles(net: &NetShape, bits: Bits) -> Vec<u64> {
+    net.convs
+        .iter()
+        .map(|c| conv_cycles(c, bits))
+        .chain(net.fcs.iter().map(|f| fc_cycles(f, bits)))
+        .collect()
+}
+
+pub fn total_cycles(net: &NetShape, bits: Bits) -> u64 {
+    layer_cycles(net, bits).iter().sum()
+}
+
+/// Pipelined-mode frames/s at `clock_hz`: bottleneck stage per lap of 8.
+pub fn fps_pipelined(net: &NetShape, bits: Bits, clock_hz: u64) -> f64 {
+    let cycles = layer_cycles(net, bits);
+    let per_frame: u64 = cycles
+        .chunks(NUM_MVUS)
+        .map(|lap| lap.iter().copied().max().unwrap_or(0))
+        .sum();
+    if per_frame == 0 {
+        return 0.0;
+    }
+    clock_hz as f64 / per_frame as f64
+}
+
+/// Streamed pipelined throughput for models deeper than 8 layers: laps
+/// overlap across frames ("Output activations from the last MVU in the
+/// chain can also be stored temporarily in off-chip memory and fetched
+/// later in the case where the first MVU is still processing data from the
+/// current lap", §3.1.6), so in steady state the array is work-conserving:
+/// `FPS = clock · 8 / total_cycles`.
+pub fn fps_pipelined_streamed(net: &NetShape, bits: Bits, clock_hz: u64) -> f64 {
+    let total = total_cycles(net, bits);
+    if total == 0 {
+        return 0.0;
+    }
+    clock_hz as f64 * NUM_MVUS as f64 / total as f64
+}
+
+/// Distributed-mode frames/s: all MVUs share every layer's rows; chunking
+/// is by ⌈rows/8⌉ so the effective speedup is rows/⌈rows/8⌉ per layer.
+pub fn fps_distributed(net: &NetShape, bits: Bits, clock_hz: u64) -> f64 {
+    let mut per_frame = 0.0f64;
+    for c in &net.convs {
+        let cyc = conv_cycles(c, bits) as f64;
+        let rows = if c.in_h < c.k { 0 } else { (c.in_h - c.k) / c.stride + 1 };
+        if rows == 0 {
+            continue;
+        }
+        let chunk = rows.div_ceil(NUM_MVUS);
+        per_frame += cyc * chunk as f64 / rows as f64;
+    }
+    for f in &net.fcs {
+        // FC row sets split across MVUs.
+        let cyc = fc_cycles(f, bits) as f64;
+        let sets = f.co.div_ceil(64);
+        let chunk = sets.div_ceil(NUM_MVUS);
+        per_frame += cyc * chunk as f64 / sets as f64;
+    }
+    if per_frame == 0.0 {
+        return 0.0;
+    }
+    clock_hz as f64 / per_frame
+}
+
+/// Distributed-mode single-frame latency in cycles.
+pub fn latency_cycles_distributed(net: &NetShape, bits: Bits) -> u64 {
+    (CLOCK_HZ as f64 / fps_distributed(net, bits, CLOCK_HZ)).round() as u64
+}
+
+/// Pipelined-mode single-frame latency: the frame traverses every stage.
+pub fn latency_cycles_pipelined(net: &NetShape, bits: Bits) -> u64 {
+    total_cycles(net, bits)
+}
+
+/// Peak bit-MACs/s of the array: 8 MVUs × 64 VVPs × 64 lanes per cycle
+/// (the paper's "8.2 TMACs" headline at 1-bit operands & 250 MHz).
+pub fn peak_bit_macs_per_s(clock_hz: u64) -> u64 {
+    NUM_MVUS as u64 * 64 * 64 * clock_hz
+}
+
+/// The accelerator-resident portion of a network: the paper computes the
+/// first layer and the classifier on the host (§4.1), so throughput
+/// estimates drop the stem conv and the FC head.
+pub fn accel_portion(net: &NetShape) -> NetShape {
+    NetShape {
+        name: net.name,
+        convs: net.convs.iter().skip(1).copied().collect(),
+        fcs: vec![],
+        quant_exempt: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    const B22: Bits = Bits { w: 2, a: 2 };
+    const B12: Bits = Bits { w: 1, a: 2 };
+    const B11: Bits = Bits { w: 1, a: 1 };
+
+    fn resnet9_shapes() -> NetShape {
+        NetShape {
+            name: "resnet9-mid",
+            convs: zoo::RESNET9_SCHEDULE
+                .iter()
+                .map(|&(_, ci, co, stride, in_h)| ConvShape {
+                    ci,
+                    co,
+                    k: 3,
+                    stride,
+                    pad: 1,
+                    in_h,
+                })
+                .collect(),
+            fcs: vec![],
+            quant_exempt: vec![],
+        }
+    }
+
+    #[test]
+    fn table3_total_via_shape_model() {
+        assert_eq!(total_cycles(&resnet9_shapes(), B22), 194_688);
+    }
+
+    #[test]
+    fn fps_halves_per_bit_product_doubling() {
+        // The Table 5 scaling law: FPS(1/1) = 2·FPS(1/2) = 4·FPS(2/2).
+        let cnv = zoo::cnv_cifar10();
+        let f11 = fps_pipelined(&cnv, B11, CLOCK_HZ);
+        let f12 = fps_pipelined(&cnv, B12, CLOCK_HZ);
+        let f22 = fps_pipelined(&cnv, B22, CLOCK_HZ);
+        assert!((f11 / f12 - 2.0).abs() < 1e-9, "{f11} vs {f12}");
+        assert!((f11 / f22 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_macs_headline() {
+        // 8 × 64 × 64 × 250 MHz = 8.192 T bit-MACs/s — the abstract's
+        // "8.2 TMACs".
+        assert_eq!(peak_bit_macs_per_s(CLOCK_HZ), 8_192_000_000_000);
+    }
+
+    #[test]
+    fn distributed_faster_latency_pipelined_higher_throughput_consistency() {
+        let net = resnet9_shapes();
+        let lat_d = latency_cycles_distributed(&net, B22);
+        let lat_p = latency_cycles_pipelined(&net, B22);
+        assert!(lat_d < lat_p, "distributed must cut single-frame latency");
+        // Distributed latency ≈ total/8 with chunking overhead < 2.5×/8.
+        assert!(lat_d as f64 > lat_p as f64 / 8.0);
+        assert!((lat_d as f64) < lat_p as f64 / 3.0);
+    }
+
+    #[test]
+    fn resnet50_scale_sanity() {
+        // Table 6 reports 2296 FPS for 1/2. Like the paper, the stem conv
+        // and FC run on the host. Our streamed-pipelined estimator lands
+        // within ~2.2× (their exact lap packing/weight streaming schedule
+        // is not archived); the *shape* claims of Table 6 — FINN slightly
+        // faster in FPS, BARVINN best FPS/W, FILM-QNN far behind — are
+        // asserted in the table6 bench and EXPERIMENTS.md.
+        let net = accel_portion(&zoo::resnet50_imagenet());
+        let fps = fps_pipelined_streamed(&net, B12, CLOCK_HZ);
+        assert!(fps > 2296.0 / 2.5 && fps < 2296.0 * 2.5, "{fps}");
+        // Strict lap-sum pipelining is a lower bound.
+        assert!(fps_pipelined(&net, B12, CLOCK_HZ) <= fps);
+    }
+
+    #[test]
+    fn mixed_precision_is_layerwise() {
+        let s = ConvShape { ci: 128, co: 128, k: 3, stride: 1, pad: 1, in_h: 16 };
+        assert_eq!(
+            conv_cycles(&s, Bits { w: 4, a: 2 }),
+            2 * conv_cycles(&s, B22)
+        );
+        assert_eq!(conv_cycles(&s, B22), 32_256, "Table 3 conv4");
+    }
+}

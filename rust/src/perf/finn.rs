@@ -1,0 +1,106 @@
+//! FINN / FINN-R baseline estimator (Umuroglu et al. FPGA'17, Blott et al.
+//! TRETS'18): a folded streaming dataflow where every layer gets dedicated
+//! compute sized by a folding factor, and throughput is set by the slowest
+//! stage. Resources grow with the *whole network* (all layers instantiated
+//! at once — the scalability limit §2 and Table 6 discuss), while BARVINN's
+//! footprint is model-independent.
+//!
+//! Calibration (documented, from the paper's Table 5 FINN rows on the
+//! U250): ~12.5 LUTs per 1×1-bit MAC unit including its share of
+//! accumulation/control, 200 MHz clock; a (w×a)-bit MAC unit costs
+//! `w·a` binary units (XNOR-popcount generalised to multi-bit).
+
+use crate::model::zoo::NetShape;
+
+use super::cycle_model::Bits;
+
+/// Calibrated constants.
+pub const LUT_PER_BIT_MAC: f64 = 12.5;
+pub const FINN_CLOCK_HZ: u64 = 200_000_000;
+
+/// Total multiply-accumulates for one frame.
+pub fn network_macs(net: &NetShape) -> u64 {
+    net.convs.iter().map(|c| c.macs()).sum::<u64>()
+        + net.fcs.iter().map(|f| (f.ci * f.co) as u64).sum::<u64>()
+}
+
+/// A FINN build: folding chosen to balance all stages within a LUT budget.
+#[derive(Debug, Clone)]
+pub struct FinnBuild {
+    pub kluts: f64,
+    pub fps: f64,
+    pub fps_per_klut: f64,
+}
+
+/// Estimate the FPS a FINN dataflow build achieves within `lut_budget`.
+///
+/// With per-stage parallelism `p_i` balanced so all stages take equal
+/// cycles (`macs_i / p_i = T`), the LUT cost is
+/// `Σ p_i · LUT_PER_BIT_MAC · w·a = (Σ macs_i) · LUT_PER_BIT_MAC · w·a / T`,
+/// giving `T = total_macs · cost / budget` and `FPS = clock / T`.
+pub fn estimate_fps(net: &NetShape, bits: Bits, lut_budget: f64) -> FinnBuild {
+    let macs = network_macs(net) as f64;
+    let unit_cost = LUT_PER_BIT_MAC * bits.product() as f64;
+    let t = macs * unit_cost / lut_budget;
+    let fps = FINN_CLOCK_HZ as f64 / t;
+    FinnBuild { kluts: lut_budget / 1e3, fps, fps_per_klut: fps / (lut_budget / 1e3) }
+}
+
+/// Inverse: LUTs needed to reach `fps` (the Table 6 "87% of the U250"
+/// observation for a ResNet-50 build).
+pub fn luts_for_fps(net: &NetShape, bits: Bits, fps: f64) -> f64 {
+    let macs = network_macs(net) as f64;
+    let t = FINN_CLOCK_HZ as f64 / fps;
+    macs * LUT_PER_BIT_MAC * bits.product() as f64 / t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn cnv_macs_magnitude() {
+        let macs = network_macs(&zoo::cnv_cifar10());
+        // CNV ≈ 58 M MACs/frame.
+        assert!((40_000_000..80_000_000).contains(&macs), "{macs}");
+    }
+
+    #[test]
+    fn calibration_reproduces_table5_order() {
+        // Paper Table 5, FINN rows: 1/1 @ 28.2 kLUT → 7716 FPS.
+        let b = estimate_fps(&zoo::cnv_cifar10(), Bits { w: 1, a: 1 }, 28_200.0);
+        assert!(
+            (b.fps / 7716.0 - 1.0).abs() < 0.5,
+            "estimate {} should be within 50% of the published 7716",
+            b.fps
+        );
+        // 2/2 @ 24.3 kLUT → 2170 FPS (same order).
+        let b22 = estimate_fps(&zoo::cnv_cifar10(), Bits { w: 2, a: 2 }, 24_300.0);
+        assert!((b22.fps / 2170.0 - 1.0).abs() < 0.7, "{}", b22.fps);
+    }
+
+    #[test]
+    fn fps_scales_linearly_with_budget() {
+        let net = zoo::cnv_cifar10();
+        let a = estimate_fps(&net, Bits { w: 1, a: 1 }, 10_000.0);
+        let b = estimate_fps(&net, Bits { w: 1, a: 1 }, 20_000.0);
+        assert!((b.fps / a.fps - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resnet50_needs_most_of_the_u250() {
+        // FINN-R's tuned ResNet-50 (Table 6: 2873 FPS at 1/2) needs >87% of
+        // the U250's ~1.34M LUTs per the finn-examples repo.
+        let luts = luts_for_fps(&zoo::resnet50_imagenet(), Bits { w: 1, a: 2 }, 2873.0);
+        assert!(luts > 0.5e6, "estimated {luts} LUTs");
+    }
+
+    #[test]
+    fn roundtrip_fps_luts() {
+        let net = zoo::cnv_cifar10();
+        let b = estimate_fps(&net, Bits { w: 2, a: 2 }, 50_000.0);
+        let back = luts_for_fps(&net, Bits { w: 2, a: 2 }, b.fps);
+        assert!((back / 50_000.0 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,23 @@
+//! Analytic performance, resource and power models behind the paper's
+//! evaluation tables, plus the baseline estimators (the authors' testbed
+//! was an Alveo U250; repro band 0/5 → the hardware is modelled, with
+//! every calibration constant documented at its definition).
+//!
+//! * [`cycle_model`] — BARVINN cycles/FPS for arbitrary networks in
+//!   Pipelined and Distributed modes (Tables 3, 5, 6; Fig. 5).
+//! * [`finn`] — FINN/FINN-R folded-dataflow estimator (Tables 5, 6).
+//! * [`film_qnn`] — FILM-QNN DSP-packing estimator (Table 6).
+//! * [`bitfusion`] — BitFusion / BitBlade / Loom comparative models for
+//!   the §2/§3.1.1 architectural claims (ablation bench).
+//! * [`resource_model`] — LUT/BRAM/DSP/power/frequency model (Table 4).
+//! * [`model_size`] — quantized model size accounting (Tables 1, 2).
+//! * [`benchkit`] — the minimal timing harness used by `cargo bench`
+//!   (criterion is not in the offline vendored crate set).
+
+pub mod benchkit;
+pub mod bitfusion;
+pub mod cycle_model;
+pub mod film_qnn;
+pub mod finn;
+pub mod model_size;
+pub mod resource_model;

@@ -1,0 +1,145 @@
+//! Quantized model-size accounting (Tables 1 and 2).
+//!
+//! The paper's "Size" columns are pure arithmetic over the architectures:
+//! quantized layers store `params · bits / 8` bytes; first and last layers
+//! stay fp32 (state-of-the-art quantization leaves them untouched, §4.1);
+//! per-channel affine (BN / LSQ scale+shift) parameters stay fp32.
+//! Table 2's byte counts are reproduced to < 1%.
+
+use crate::model::zoo::{self, NetShape};
+
+/// Size in bytes of a network with all parameters at fp32 (+ per-channel
+/// affine pairs).
+pub fn fp32_bytes(net: &NetShape) -> u64 {
+    let conv: u64 = net.convs.iter().map(|c| c.params() + c.co as u64 * 2).sum();
+    let fc: u64 = net.fcs.iter().map(|f| (f.ci * f.co + f.co) as u64).sum();
+    (conv + fc) * 4
+}
+
+/// Size with every conv except the first quantized to `bits` (first conv,
+/// FC head and per-channel affines kept fp32, as in the paper).
+pub fn quantized_bytes(net: &NetShape, bits: u8) -> u64 {
+    let mut total = 0u64;
+    for (i, c) in net.convs.iter().enumerate() {
+        if i == 0 || net.quant_exempt.contains(&i) {
+            total += (c.params() + c.co as u64 * 2) * 4;
+        } else {
+            total += (c.params() * bits as u64).div_ceil(8) + c.co as u64 * 2 * 4;
+        }
+    }
+    for f in &net.fcs {
+        total += (f.ci * f.co + f.co) as u64 * 4;
+    }
+    total
+}
+
+/// Size with *every* parameter (including first/last layers, excluding
+/// affine terms) at `bits` — Table 2's "Quantized Plain-CNN Int2" counts
+/// exactly this: 4,725,440 params × 2 / 8 = 1,181,360 bytes.
+pub fn fully_quantized_bytes(net: &NetShape, bits: u8) -> u64 {
+    let params: u64 = net.convs.iter().map(|c| c.params()).sum::<u64>()
+        + net.fcs.iter().map(|f| (f.ci * f.co) as u64).sum::<u64>();
+    (params * bits as u64).div_ceil(8)
+}
+
+/// The plain-CNN ResNet9 (Table 2) as a NetShape including conv0 + fc.
+pub fn resnet9_plain() -> NetShape {
+    let mut convs = vec![zoo::ConvShape { ci: 3, co: 64, k: 3, stride: 1, pad: 1, in_h: 32 }];
+    convs.extend(zoo::RESNET9_SCHEDULE.iter().map(|&(_, ci, co, stride, in_h)| {
+        zoo::ConvShape { ci, co, k: 3, stride, pad: 1, in_h }
+    }));
+    NetShape {
+        name: "ResNet9-plain",
+        convs,
+        fcs: vec![zoo::FcShape { ci: 512, co: 10 }],
+        quant_exempt: vec![],
+    }
+}
+
+/// The original (shortcut-ful) ResNet9: plain + the 1×1 projection
+/// shortcuts at the three down-sampling points.
+pub fn resnet9_original() -> NetShape {
+    let mut n = resnet9_plain();
+    for (ci, co, in_h) in [(64usize, 128usize, 32usize), (128, 256, 16), (256, 512, 8)] {
+        n.convs.push(zoo::ConvShape { ci, co, k: 1, stride: 2, pad: 0, in_h });
+    }
+    n.name = "ResNet9-original";
+    n
+}
+
+/// Table 2 rows: (label, bytes).
+pub fn table2_rows() -> Vec<(&'static str, u64)> {
+    vec![
+        ("Original Fp32", fp32_bytes(&resnet9_original())),
+        ("Plain-CNN Fp32", fp32_bytes(&resnet9_plain())),
+        ("Quantized Plain-CNN Int2", fully_quantized_bytes(&resnet9_plain(), 2)),
+    ]
+}
+
+/// Table 1 size rows for ResNet18/CIFAR100 and SSD300-ResNet18/VOC:
+/// (model, precision label, bytes).
+pub fn table1_rows() -> Vec<(&'static str, &'static str, u64)> {
+    let r18 = zoo::resnet18_cifar100();
+    let ssd = zoo::ssd300_resnet18_voc();
+    let mut rows = Vec::new();
+    for (lbl, bits) in [("LSQ(2/2)", 2u8), ("LSQ(4/4)", 4), ("LSQ(8/8)", 8)] {
+        rows.push(("ResNet18", lbl, quantized_bytes(&r18, bits)));
+    }
+    rows.push(("ResNet18", "FP32", fp32_bytes(&r18)));
+    for (lbl, bits) in [("LSQ(2/2)", 2u8), ("LSQ(4/4)", 4), ("LSQ(8/8)", 8)] {
+        rows.push(("SSD300-ResNet18", lbl, quantized_bytes(&ssd, bits)));
+    }
+    rows.push(("SSD300-ResNet18", "FP32", fp32_bytes(&ssd)));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_plain_fp32_within_a_percent() {
+        // Paper: 18,912,487 bytes.
+        let b = fp32_bytes(&resnet9_plain());
+        let err = (b as f64 / 18_912_487.0 - 1.0).abs();
+        assert!(err < 0.01, "{b} ({err:.3})");
+    }
+
+    #[test]
+    fn table2_original_fp32_within_a_percent() {
+        // Paper: 19,605,141 bytes.
+        let b = fp32_bytes(&resnet9_original());
+        let err = (b as f64 / 19_605_141.0 - 1.0).abs();
+        assert!(err < 0.01, "{b} ({err:.3})");
+    }
+
+    #[test]
+    fn table2_int2_exact() {
+        // Paper: 1,181,360 bytes — reproduced exactly (all 4,725,440
+        // parameters at 2 bits).
+        assert_eq!(fully_quantized_bytes(&resnet9_plain(), 2), 1_181_360);
+    }
+
+    #[test]
+    fn table1_resnet18_sizes_track_paper() {
+        // Paper: 2.889 / 5.559 / 10.87 / 42.8 MB.
+        let rows = table1_rows();
+        let mb = |b: u64| b as f64 / 1e6;
+        let r: Vec<f64> =
+            rows.iter().filter(|r| r.0 == "ResNet18").map(|r| mb(r.2)).collect();
+        for (got, want) in r.iter().zip([2.889, 5.559, 10.87, 42.8]) {
+            assert!(
+                (got / want - 1.0).abs() < 0.12,
+                "{got:.3} MB vs paper {want} MB"
+            );
+        }
+    }
+
+    #[test]
+    fn quantization_monotone() {
+        let n = resnet9_plain();
+        assert!(quantized_bytes(&n, 2) < quantized_bytes(&n, 4));
+        assert!(quantized_bytes(&n, 4) < quantized_bytes(&n, 8));
+        assert!(quantized_bytes(&n, 8) < fp32_bytes(&n));
+    }
+}

@@ -1,0 +1,170 @@
+//! FPGA resource and power model (Table 4).
+//!
+//! Vivado synthesis is replaced by a calibrated analytic model: component
+//! counts derive from the architecture parameters (64 VVPs × 64 lanes, RAM
+//! geometries, 27×16 DSP scalers), and per-component constants are
+//! calibrated to the paper's U250 report — so the *structure* (what scales
+//! with what) is real and the absolute numbers land on Table 4 by
+//! construction of the constants, stated inline.
+
+/// Resource vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resources {
+    pub lut: u64,
+    pub bram36: u64,
+    pub dsp: u64,
+    pub dynamic_power_w: f64,
+    pub clock_mhz: u64,
+}
+
+impl Resources {
+    pub fn add(self, o: Resources) -> Resources {
+        Resources {
+            lut: self.lut + o.lut,
+            bram36: self.bram36 + o.bram36,
+            dsp: self.dsp + o.dsp,
+            dynamic_power_w: self.dynamic_power_w + o.dynamic_power_w,
+            clock_mhz: self.clock_mhz.min(o.clock_mhz),
+        }
+    }
+}
+
+/// Alveo U250 capacity (for utilisation percentages).
+pub const U250_LUTS: u64 = 1_341_000;
+pub const U250_BRAM36: u64 = 2_000;
+pub const U250_DSPS: u64 = 12_288;
+
+/// Calibrated constants (to Table 4, see module docs).
+mod cal {
+    /// LUTs per VVP lane: 1-bit AND + its slice of the 5-deep adder tree.
+    pub const LUT_PER_LANE: f64 = 4.45;
+    /// LUTs per VVP for the shifter-accumulator + control.
+    pub const LUT_PER_VVP_CTRL: f64 = 60.0;
+    /// LUTs per MVU for AGUs, pool/ReLU, QuantSer, interconnect port.
+    pub const LUT_PER_MVU_MISC: f64 = 1_700.0;
+    /// Pito core LUTs (8-hart barrel, regfiles in LUTRAM).
+    pub const LUT_PITO: u64 = 10_454;
+    /// Pito BRAM: 8 KiB IRAM + 8 KiB DRAM → 4 × 36Kb + CSR/regfile spill.
+    pub const BRAM_PITO: u64 = 15;
+    /// Dynamic power: per-MLUT and per-BRAM/DSP activity constants.
+    pub const W_PER_KLUT: f64 = 0.0719;
+    pub const W_PER_BRAM: f64 = 0.00424;
+    pub const W_PER_DSP: f64 = 0.0035;
+    pub const W_PITO: f64 = 0.410;
+}
+
+/// MVU memory geometry in BRAM36 blocks.
+fn mvu_brams(act_words: u64, weight_words: u64, scaler_words: u64, bias_words: u64) -> u64 {
+    let bits = act_words * 64 + weight_words * 4096 + scaler_words * 1024 + bias_words * 2048;
+    bits.div_ceil(36 * 1024)
+}
+
+/// One MVU's resources. Defaults reproduce Table 4's array column when
+/// multiplied by 8.
+pub fn mvu_resources(act_words: u64, weight_words: u64) -> Resources {
+    let lanes = 64.0 * 64.0;
+    let lut = (lanes * cal::LUT_PER_LANE
+        + 64.0 * cal::LUT_PER_VVP_CTRL
+        + cal::LUT_PER_MVU_MISC) as u64;
+    let bram = mvu_brams(act_words, weight_words, 512, 512);
+    let dsp = 64; // one 27×16 scaler multiplier per lane group (§3.1.4)
+    Resources {
+        lut,
+        bram36: bram,
+        dsp,
+        dynamic_power_w: lut as f64 / 1e3 * cal::W_PER_KLUT
+            + bram as f64 * cal::W_PER_BRAM
+            + dsp as f64 * cal::W_PER_DSP,
+        clock_mhz: 250,
+    }
+}
+
+/// Pito's resources (Table 4 column 1).
+pub fn pito_resources() -> Resources {
+    Resources {
+        lut: cal::LUT_PITO,
+        bram36: cal::BRAM_PITO,
+        dsp: 0,
+        dynamic_power_w: cal::W_PITO,
+        clock_mhz: 250,
+    }
+}
+
+/// The full 8-MVU accelerator (Table 4 "Overall").
+pub fn overall_resources() -> Resources {
+    let mut r = pito_resources();
+    for _ in 0..crate::NUM_MVUS {
+        // Default geometry: 0.5 Mib act RAM + 4 Mib weight RAM per MVU
+        // (calibrated to the paper's 1312 array BRAMs).
+        r = r.add(mvu_resources(8 * 1024, 1024));
+    }
+    r
+}
+
+/// Utilisation of the U250 in percent LUTs.
+pub fn u250_lut_utilisation(r: &Resources) -> f64 {
+    r.lut as f64 / U250_LUTS as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_pito_column() {
+        let p = pito_resources();
+        assert_eq!(p.lut, 10_454);
+        assert_eq!(p.bram36, 15);
+        assert_eq!(p.dsp, 0);
+        assert!((p.dynamic_power_w - 0.410).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table4_array_column_within_tolerance() {
+        let one = mvu_resources(8 * 1024, 1024);
+        let array_lut = one.lut * 8;
+        let array_bram = one.bram36 * 8;
+        let array_dsp = one.dsp * 8;
+        // Paper: 190,625 LUT / 1,312 BRAM / 512 DSP.
+        assert!(
+            (array_lut as f64 / 190_625.0 - 1.0).abs() < 0.02,
+            "LUT {array_lut}"
+        );
+        assert!(
+            (array_bram as f64 / 1_312.0 - 1.0).abs() < 0.05,
+            "BRAM {array_bram}"
+        );
+        assert_eq!(array_dsp, 512);
+        let power = one.dynamic_power_w * 8.0;
+        assert!((power / 21.066 - 1.0).abs() < 0.05, "power {power}");
+    }
+
+    #[test]
+    fn overall_matches_paper_sums() {
+        let r = overall_resources();
+        assert!((r.lut as f64 / 201_079.0 - 1.0).abs() < 0.02, "{}", r.lut);
+        assert!((r.dynamic_power_w / 21.504 - 1.0).abs() < 0.05);
+        assert_eq!(r.dsp, 512);
+        assert_eq!(r.clock_mhz, 250);
+        // ~15% of the U250 (paper Table 5: "201.1 (15.0%)").
+        let u = u250_lut_utilisation(&r);
+        assert!((u - 15.0).abs() < 0.6, "{u}%");
+    }
+
+    #[test]
+    fn footprint_is_model_independent() {
+        // The §4.2 contrast with FINN: BARVINN's LUTs do not depend on the
+        // network. (Trivially true of the model — asserted as documentation.)
+        let a = overall_resources();
+        let b = overall_resources();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bram_scales_with_memory_geometry() {
+        let small = mvu_resources(8 * 1024, 512);
+        let big = mvu_resources(32 * 1024, 2048);
+        assert!(big.bram36 > small.bram36);
+        assert_eq!(big.lut, small.lut, "datapath LUTs independent of RAM depth");
+    }
+}

@@ -1,0 +1,755 @@
+//! Two-pass RV32I assembler for the code-generator toolchain (§3.3).
+//!
+//! Supports the full RV32I + Zicsr instruction set, labels, `#`/`;`/`//`
+//! comments, decimal/hex immediates, ABI and numeric register names,
+//! named or numeric CSRs, `.word` data directives and the common
+//! pseudo-instructions (`li`, `la`, `mv`, `not`, `neg`, `j`, `jr`, `ret`,
+//! `call`, `beqz`, `bnez`, `seqz`, `snez`, `nop`, `csrr`, `csrw`).
+
+use std::collections::HashMap;
+
+use super::isa::{encode, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+/// Assembly error with line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn reg(name: &str, line: usize) -> Result<u8, AsmError> {
+    let name = name.trim();
+    let abi = [
+        ("zero", 0u8),
+        ("ra", 1),
+        ("sp", 2),
+        ("gp", 3),
+        ("tp", 4),
+        ("t0", 5),
+        ("t1", 6),
+        ("t2", 7),
+        ("s0", 8),
+        ("fp", 8),
+        ("s1", 9),
+        ("a0", 10),
+        ("a1", 11),
+        ("a2", 12),
+        ("a3", 13),
+        ("a4", 14),
+        ("a5", 15),
+        ("a6", 16),
+        ("a7", 17),
+        ("s2", 18),
+        ("s3", 19),
+        ("s4", 20),
+        ("s5", 21),
+        ("s6", 22),
+        ("s7", 23),
+        ("s8", 24),
+        ("s9", 25),
+        ("s10", 26),
+        ("s11", 27),
+        ("t3", 28),
+        ("t4", 29),
+        ("t5", 30),
+        ("t6", 31),
+    ];
+    for (n, i) in abi {
+        if n == name {
+            return Ok(i);
+        }
+    }
+    if let Some(num) = name.strip_prefix('x') {
+        if let Ok(i) = num.parse::<u8>() {
+            if i < 32 {
+                return Ok(i);
+            }
+        }
+    }
+    Err(AsmError { line, msg: format!("unknown register '{name}'") })
+}
+
+fn csr_addr(name: &str, line: usize) -> Result<u16, AsmError> {
+    let named = [
+        ("mstatus", 0x300u16),
+        ("mie", 0x304),
+        ("mtvec", 0x305),
+        ("mscratch", 0x340),
+        ("mepc", 0x341),
+        ("mcause", 0x342),
+        ("mip", 0x344),
+        ("mcycle", 0xB00),
+        ("mcycleh", 0xB80),
+        ("minstret", 0xB02),
+        ("minstreth", 0xB82),
+        ("mhartid", 0xF14),
+    ];
+    for (n, a) in named {
+        if n == name {
+            return Ok(a);
+        }
+    }
+    // Also accept the MVU CSR names exported by accel::csr_map.
+    if let Some(a) = crate::accel::mvu_csr_by_name(name) {
+        return Ok(a);
+    }
+    parse_imm(name, line).and_then(|v| {
+        if (0..=0xfff).contains(&v) {
+            Ok(v as u16)
+        } else {
+            Err(AsmError { line, msg: format!("csr address out of range: {v}") })
+        }
+    })
+}
+
+fn parse_imm(s: &str, line: usize) -> Result<i64, AsmError> {
+    let s = s.trim();
+    let (neg, body) = if let Some(rest) = s.strip_prefix('-') { (true, rest) } else { (false, s) };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else if let Some(bin) = body.strip_prefix("0b") {
+        i64::from_str_radix(bin, 2)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|_| AsmError { line, msg: format!("bad immediate '{s}'") })?;
+    Ok(if neg { -v } else { v })
+}
+
+/// Split an operand list on commas (no nesting in this grammar).
+fn operands(rest: &str) -> Vec<String> {
+    rest.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
+}
+
+/// Parse `off(reg)` memory operands.
+fn mem_operand(s: &str, line: usize) -> Result<(i64, u8), AsmError> {
+    let open = s.find('(').ok_or_else(|| AsmError {
+        line,
+        msg: format!("expected off(reg), got '{s}'"),
+    })?;
+    let close = s.rfind(')').ok_or_else(|| AsmError { line, msg: "missing ')'".into() })?;
+    let off_s = s[..open].trim();
+    let off = if off_s.is_empty() { 0 } else { parse_imm(off_s, line)? };
+    let r = reg(&s[open + 1..close], line)?;
+    Ok((off, r))
+}
+
+/// Items produced by pass 1.
+enum Item {
+    Instr(Instr),
+    /// Branch/jump needing label resolution: (mnemonic-kind, operands).
+    BranchTo { op: BranchOp, rs1: u8, rs2: u8, label: String, line: usize },
+    JalTo { rd: u8, label: String, line: usize },
+    /// `li rd, imm32` expands to 1 or 2 instructions; already expanded in
+    /// pass 1 (labels are not allowed in li).
+    Word(u32),
+    /// `la rd, label`: resolved to `li` against the label's *byte* address.
+    LaTo { rd: u8, label: String, line: usize },
+    /// Placeholder consuming a slot for the second half of a pending `la`
+    /// (worst-case two-instruction expansion keeps addresses stable).
+    LaHi,
+}
+
+fn imm_fits_i12(v: i64) -> bool {
+    (-2048..=2047).contains(&v)
+}
+
+/// Expand `li rd, imm` into one or two instructions.
+fn expand_li(rd: u8, v: i64, out: &mut Vec<Item>) {
+    let v32 = v as i32;
+    if imm_fits_i12(v) {
+        out.push(Item::Instr(Instr::OpImm { op: AluOp::Add, rd, rs1: 0, imm: v32 }));
+    } else {
+        // lui + addi with carry correction for negative low parts.
+        let lo = (v32 << 20) >> 20; // sign-extended low 12
+        let hi = (v32.wrapping_sub(lo)) & (!0xfffu32 as i32);
+        out.push(Item::Instr(Instr::Lui { rd, imm: hi }));
+        if lo != 0 {
+            out.push(Item::Instr(Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: lo }));
+        } else {
+            out.push(Item::Instr(Instr::OpImm { op: AluOp::Add, rd, rs1: rd, imm: 0 }));
+        }
+    }
+}
+
+/// Assemble a program into instruction words.
+pub fn assemble(src: &str) -> Result<Vec<u32>, AsmError> {
+    let mut labels: HashMap<String, u32> = HashMap::new();
+    let mut items: Vec<Item> = Vec::new();
+
+    // Pass 1: parse, expand pseudos, record label addresses.
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = lineno + 1;
+        let mut text = raw;
+        for sep in ["#", "//", ";"] {
+            if let Some(i) = text.find(sep) {
+                text = &text[..i];
+            }
+        }
+        let mut text = text.trim();
+        // Labels (possibly several on one line).
+        while let Some(colon) = text.find(':') {
+            let (lbl, rest) = text.split_at(colon);
+            let lbl = lbl.trim();
+            if lbl.is_empty() || lbl.contains(char::is_whitespace) {
+                break; // not a label, e.g. inside an operand (no such case)
+            }
+            if labels.insert(lbl.to_string(), (items.len() * 4) as u32).is_some() {
+                return Err(AsmError { line, msg: format!("duplicate label '{lbl}'") });
+            }
+            text = rest[1..].trim();
+        }
+        if text.is_empty() {
+            continue;
+        }
+        let (mn, rest) = match text.find(char::is_whitespace) {
+            Some(i) => (&text[..i], text[i..].trim()),
+            None => (text, ""),
+        };
+        let ops = operands(rest);
+        let bad_arity = |want: usize| AsmError {
+            line,
+            msg: format!("'{mn}' expects {want} operands, got {}", ops.len()),
+        };
+
+        macro_rules! need {
+            ($n:expr) => {
+                if ops.len() != $n {
+                    return Err(bad_arity($n));
+                }
+            };
+        }
+
+        match mn {
+            // Directives.
+            ".word" => {
+                need!(1);
+                items.push(Item::Word(parse_imm(&ops[0], line)? as u32));
+            }
+            ".text" | ".globl" | ".global" | ".align" => {}
+            // ALU register forms.
+            "add" | "sub" | "sll" | "slt" | "sltu" | "xor" | "srl" | "sra" | "or" | "and" => {
+                need!(3);
+                let op = match mn {
+                    "add" => AluOp::Add,
+                    "sub" => AluOp::Sub,
+                    "sll" => AluOp::Sll,
+                    "slt" => AluOp::Slt,
+                    "sltu" => AluOp::Sltu,
+                    "xor" => AluOp::Xor,
+                    "srl" => AluOp::Srl,
+                    "sra" => AluOp::Sra,
+                    "or" => AluOp::Or,
+                    _ => AluOp::And,
+                };
+                items.push(Item::Instr(Instr::Op {
+                    op,
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    rs2: reg(&ops[2], line)?,
+                }));
+            }
+            // ALU immediate forms.
+            "addi" | "slti" | "sltiu" | "xori" | "ori" | "andi" | "slli" | "srli" | "srai" => {
+                need!(3);
+                let op = match mn {
+                    "addi" => AluOp::Add,
+                    "slti" => AluOp::Slt,
+                    "sltiu" => AluOp::Sltu,
+                    "xori" => AluOp::Xor,
+                    "ori" => AluOp::Or,
+                    "andi" => AluOp::And,
+                    "slli" => AluOp::Sll,
+                    "srli" => AluOp::Srl,
+                    _ => AluOp::Sra,
+                };
+                items.push(Item::Instr(Instr::OpImm {
+                    op,
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    imm: parse_imm(&ops[2], line)? as i32,
+                }));
+            }
+            "lui" | "auipc" => {
+                need!(2);
+                let rd = reg(&ops[0], line)?;
+                // Accept both `lui rd, 0x12345` (upper-20 convention) and a
+                // pre-shifted page value.
+                let v = parse_imm(&ops[1], line)?;
+                let imm = if v & 0xfff == 0 { v as i32 } else { (v as i32) << 12 };
+                items.push(Item::Instr(if mn == "lui" {
+                    Instr::Lui { rd, imm }
+                } else {
+                    Instr::Auipc { rd, imm }
+                }));
+            }
+            // Loads / stores.
+            "lb" | "lh" | "lw" | "lbu" | "lhu" => {
+                need!(2);
+                let op = match mn {
+                    "lb" => LoadOp::Lb,
+                    "lh" => LoadOp::Lh,
+                    "lw" => LoadOp::Lw,
+                    "lbu" => LoadOp::Lbu,
+                    _ => LoadOp::Lhu,
+                };
+                let rd = reg(&ops[0], line)?;
+                let (off, rs1) = mem_operand(&ops[1], line)?;
+                items.push(Item::Instr(Instr::Load { op, rd, rs1, imm: off as i32 }));
+            }
+            "sb" | "sh" | "sw" => {
+                need!(2);
+                let op = match mn {
+                    "sb" => StoreOp::Sb,
+                    "sh" => StoreOp::Sh,
+                    _ => StoreOp::Sw,
+                };
+                let rs2 = reg(&ops[0], line)?;
+                let (off, rs1) = mem_operand(&ops[1], line)?;
+                items.push(Item::Instr(Instr::Store { op, rs2, rs1, imm: off as i32 }));
+            }
+            // Branches.
+            "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+                need!(3);
+                let op = match mn {
+                    "beq" => BranchOp::Beq,
+                    "bne" => BranchOp::Bne,
+                    "blt" => BranchOp::Blt,
+                    "bge" => BranchOp::Bge,
+                    "bltu" => BranchOp::Bltu,
+                    _ => BranchOp::Bgeu,
+                };
+                items.push(Item::BranchTo {
+                    op,
+                    rs1: reg(&ops[0], line)?,
+                    rs2: reg(&ops[1], line)?,
+                    label: ops[2].clone(),
+                    line,
+                });
+            }
+            "beqz" | "bnez" | "bltz" | "bgez" => {
+                need!(2);
+                let (op, rs1, rs2) = match mn {
+                    "beqz" => (BranchOp::Beq, reg(&ops[0], line)?, 0),
+                    "bnez" => (BranchOp::Bne, reg(&ops[0], line)?, 0),
+                    "bltz" => (BranchOp::Blt, reg(&ops[0], line)?, 0),
+                    _ => (BranchOp::Bge, reg(&ops[0], line)?, 0),
+                };
+                items.push(Item::BranchTo { op, rs1, rs2, label: ops[1].clone(), line });
+            }
+            "ble" | "bgt" => {
+                // ble a,b,l == bge b,a,l ; bgt a,b,l == blt b,a,l
+                need!(3);
+                let op = if mn == "ble" { BranchOp::Bge } else { BranchOp::Blt };
+                items.push(Item::BranchTo {
+                    op,
+                    rs1: reg(&ops[1], line)?,
+                    rs2: reg(&ops[0], line)?,
+                    label: ops[2].clone(),
+                    line,
+                });
+            }
+            // Jumps.
+            "jal" => match ops.len() {
+                1 => items.push(Item::JalTo { rd: 1, label: ops[0].clone(), line }),
+                2 => items.push(Item::JalTo {
+                    rd: reg(&ops[0], line)?,
+                    label: ops[1].clone(),
+                    line,
+                }),
+                _ => return Err(bad_arity(2)),
+            },
+            "jalr" => match ops.len() {
+                1 => {
+                    let rs1 = reg(&ops[0], line)?;
+                    items.push(Item::Instr(Instr::Jalr { rd: 1, rs1, imm: 0 }));
+                }
+                3 => items.push(Item::Instr(Instr::Jalr {
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    imm: parse_imm(&ops[2], line)? as i32,
+                })),
+                2 => {
+                    let rd = reg(&ops[0], line)?;
+                    let (off, rs1) = mem_operand(&ops[1], line)?;
+                    items.push(Item::Instr(Instr::Jalr { rd, rs1, imm: off as i32 }));
+                }
+                _ => return Err(bad_arity(3)),
+            },
+            "j" => {
+                need!(1);
+                items.push(Item::JalTo { rd: 0, label: ops[0].clone(), line });
+            }
+            "jr" => {
+                need!(1);
+                items.push(Item::Instr(Instr::Jalr { rd: 0, rs1: reg(&ops[0], line)?, imm: 0 }));
+            }
+            "call" => {
+                need!(1);
+                items.push(Item::JalTo { rd: 1, label: ops[0].clone(), line });
+            }
+            "ret" => {
+                need!(0);
+                items.push(Item::Instr(Instr::Jalr { rd: 0, rs1: 1, imm: 0 }));
+            }
+            // Pseudos.
+            "nop" => items.push(Item::Instr(Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 })),
+            "mv" => {
+                need!(2);
+                items.push(Item::Instr(Instr::OpImm {
+                    op: AluOp::Add,
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    imm: 0,
+                }));
+            }
+            "not" => {
+                need!(2);
+                items.push(Item::Instr(Instr::OpImm {
+                    op: AluOp::Xor,
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    imm: -1,
+                }));
+            }
+            "neg" => {
+                need!(2);
+                items.push(Item::Instr(Instr::Op {
+                    op: AluOp::Sub,
+                    rd: reg(&ops[0], line)?,
+                    rs1: 0,
+                    rs2: reg(&ops[1], line)?,
+                }));
+            }
+            "seqz" => {
+                need!(2);
+                items.push(Item::Instr(Instr::OpImm {
+                    op: AluOp::Sltu,
+                    rd: reg(&ops[0], line)?,
+                    rs1: reg(&ops[1], line)?,
+                    imm: 1,
+                }));
+            }
+            "snez" => {
+                need!(2);
+                items.push(Item::Instr(Instr::Op {
+                    op: AluOp::Sltu,
+                    rd: reg(&ops[0], line)?,
+                    rs1: 0,
+                    rs2: reg(&ops[1], line)?,
+                }));
+            }
+            "li" => {
+                need!(2);
+                let rd = reg(&ops[0], line)?;
+                expand_li(rd, parse_imm(&ops[1], line)?, &mut items);
+            }
+            "la" => {
+                need!(2);
+                // Two-slot worst-case expansion so label addresses stay
+                // stable; resolved in pass 2.
+                items.push(Item::LaTo { rd: reg(&ops[0], line)?, label: ops[1].clone(), line });
+                items.push(Item::LaHi);
+            }
+            // CSR.
+            "csrrw" | "csrrs" | "csrrc" => {
+                need!(3);
+                let op = match mn {
+                    "csrrw" => CsrOp::Rw,
+                    "csrrs" => CsrOp::Rs,
+                    _ => CsrOp::Rc,
+                };
+                items.push(Item::Instr(Instr::Csr {
+                    op,
+                    rd: reg(&ops[0], line)?,
+                    csr: csr_addr(&ops[1], line)?,
+                    src: reg(&ops[2], line)?,
+                }));
+            }
+            "csrrwi" | "csrrsi" | "csrrci" => {
+                need!(3);
+                let op = match mn {
+                    "csrrwi" => CsrOp::Rwi,
+                    "csrrsi" => CsrOp::Rsi,
+                    _ => CsrOp::Rci,
+                };
+                let z = parse_imm(&ops[2], line)?;
+                if !(0..32).contains(&z) {
+                    return Err(AsmError { line, msg: "csr zimm must be 0..32".into() });
+                }
+                items.push(Item::Instr(Instr::Csr {
+                    op,
+                    rd: reg(&ops[0], line)?,
+                    csr: csr_addr(&ops[1], line)?,
+                    src: z as u8,
+                }));
+            }
+            "csrr" => {
+                need!(2);
+                items.push(Item::Instr(Instr::Csr {
+                    op: CsrOp::Rs,
+                    rd: reg(&ops[0], line)?,
+                    csr: csr_addr(&ops[1], line)?,
+                    src: 0,
+                }));
+            }
+            "csrw" => {
+                need!(2);
+                items.push(Item::Instr(Instr::Csr {
+                    op: CsrOp::Rw,
+                    rd: 0,
+                    csr: csr_addr(&ops[0], line)?,
+                    src: reg(&ops[1], line)?,
+                }));
+            }
+            "csrwi" => {
+                need!(2);
+                let z = parse_imm(&ops[1], line)?;
+                items.push(Item::Instr(Instr::Csr {
+                    op: CsrOp::Rwi,
+                    rd: 0,
+                    csr: csr_addr(&ops[0], line)?,
+                    src: z as u8,
+                }));
+            }
+            // System.
+            "fence" | "fence.i" => items.push(Item::Instr(Instr::Fence)),
+            "ecall" => items.push(Item::Instr(Instr::Ecall)),
+            "ebreak" => items.push(Item::Instr(Instr::Ebreak)),
+            "mret" => items.push(Item::Instr(Instr::Mret)),
+            "wfi" => items.push(Item::Instr(Instr::Wfi)),
+            other => {
+                return Err(AsmError { line, msg: format!("unknown mnemonic '{other}'") })
+            }
+        }
+    }
+
+    // Pass 2: resolve labels and encode.
+    let mut words = Vec::with_capacity(items.len());
+    for (idx, item) in items.iter().enumerate() {
+        let pc = (idx * 4) as i64;
+        // A target is either a label or a numeric pc-relative offset (the
+        // form the disassembler emits).
+        let resolve = |label: &str, line: usize| -> Result<i64, AsmError> {
+            if let Some(&a) = labels.get(label) {
+                return Ok(a as i64);
+            }
+            if let Ok(off) = parse_imm(label, line) {
+                return Ok(pc + off);
+            }
+            Err(AsmError { line, msg: format!("undefined label '{label}'") })
+        };
+        let w = match item {
+            Item::Instr(i) => encode(*i),
+            Item::Word(w) => *w,
+            Item::BranchTo { op, rs1, rs2, label, line } => {
+                let target = resolve(label, *line)?;
+                let off = target - pc;
+                if !(-4096..=4094).contains(&off) {
+                    return Err(AsmError {
+                        line: *line,
+                        msg: format!("branch to '{label}' out of range ({off})"),
+                    });
+                }
+                encode(Instr::Branch { op: *op, rs1: *rs1, rs2: *rs2, imm: off as i32 })
+            }
+            Item::JalTo { rd, label, line } => {
+                let target = resolve(label, *line)?;
+                let off = target - pc;
+                encode(Instr::Jal { rd: *rd, imm: off as i32 })
+            }
+            Item::LaTo { rd, label, line } => {
+                // First slot: lui (or addi when the address fits 12 bits —
+                // still emitted as lui 0 + addi for slot stability).
+                let target = resolve(label, *line)?;
+                let lo = ((target as i32) << 20) >> 20;
+                let hi = (target as i32).wrapping_sub(lo) & (!0xfffu32 as i32);
+                encode(Instr::Lui { rd: *rd, imm: hi })
+            }
+            Item::LaHi => {
+                // Second slot of `la`: addi rd, rd, lo — needs the label of
+                // the preceding LaTo.
+                let Item::LaTo { rd, label, line } = &items[idx - 1] else {
+                    unreachable!("LaHi must follow LaTo");
+                };
+                let target = resolve(label, *line)?;
+                let lo = ((target as i32) << 20) >> 20;
+                encode(Instr::OpImm { op: AluOp::Add, rd: *rd, rs1: *rd, imm: lo })
+            }
+        };
+        words.push(w);
+    }
+    Ok(words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::disasm::disassemble;
+    use super::super::isa::decode;
+    use super::*;
+
+    #[test]
+    fn basic_program() {
+        let words = assemble(
+            r#"
+            # sum loop
+            li   t0, 0
+            li   t1, 5
+        loop:
+            add  t0, t0, t1
+            addi t1, t1, -1
+            bnez t1, loop
+            ecall
+        "#,
+        )
+        .unwrap();
+        assert_eq!(words.len(), 6);
+        assert!(decode(words[0]).is_ok());
+    }
+
+    #[test]
+    fn li_large_values() {
+        let words = assemble("li t0, 0x12345678").unwrap();
+        assert_eq!(words.len(), 2);
+        // lui t0, 0x12345000 ; addi t0, t0, 0x678.
+        assert_eq!(
+            decode(words[0]).unwrap(),
+            Instr::Lui { rd: 5, imm: 0x1234_5000 }
+        );
+        assert_eq!(
+            decode(words[1]).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 0x678 }
+        );
+        // Negative-low carry case: 0x12345FFF = lui 0x12346000 + addi -1.
+        let words = assemble("li t0, 0x12345FFF").unwrap();
+        assert_eq!(decode(words[0]).unwrap(), Instr::Lui { rd: 5, imm: 0x1234_6000 });
+        assert_eq!(
+            decode(words[1]).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: -1 }
+        );
+    }
+
+    #[test]
+    fn labels_forward_and_backward() {
+        let words = assemble(
+            r#"
+        start:
+            j    fwd
+            nop
+        fwd:
+            beq  zero, zero, start
+        "#,
+        )
+        .unwrap();
+        assert_eq!(decode(words[0]).unwrap(), Instr::Jal { rd: 0, imm: 8 });
+        assert_eq!(
+            decode(words[2]).unwrap(),
+            Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, imm: -8 }
+        );
+    }
+
+    #[test]
+    fn csr_forms() {
+        let words = assemble(
+            r#"
+            csrr  t0, mhartid
+            csrw  mtvec, t1
+            csrrwi x0, 0x7C0, 3
+            csrrs  t2, mstatus, zero
+        "#,
+        )
+        .unwrap();
+        assert_eq!(
+            decode(words[0]).unwrap(),
+            Instr::Csr { op: CsrOp::Rs, rd: 5, csr: 0xF14, src: 0 }
+        );
+        assert_eq!(
+            decode(words[2]).unwrap(),
+            Instr::Csr { op: CsrOp::Rwi, rd: 0, csr: 0x7C0, src: 3 }
+        );
+    }
+
+    #[test]
+    fn mem_operands() {
+        let words = assemble("lw a0, 16(sp)\nsw a0, -4(s0)").unwrap();
+        assert_eq!(
+            decode(words[0]).unwrap(),
+            Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 2, imm: 16 }
+        );
+        assert_eq!(
+            decode(words[1]).unwrap(),
+            Instr::Store { op: StoreOp::Sw, rs2: 10, rs1: 8, imm: -4 }
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(assemble("bogus t0, t1").is_err());
+        assert!(assemble("addi t0, t1").is_err());
+        assert!(assemble("j nowhere").is_err());
+        assert!(assemble("add q0, t0, t1").is_err());
+        let dup = assemble("x:\nnop\nx:\nnop");
+        assert!(dup.is_err());
+    }
+
+    #[test]
+    fn la_two_slot_expansion() {
+        let words = assemble(
+            r#"
+            la   t0, data
+            nop
+        data:
+            .word 0xdeadbeef
+        "#,
+        )
+        .unwrap();
+        assert_eq!(words.len(), 4);
+        assert_eq!(words[3], 0xdead_beef);
+        // data is at byte 12.
+        assert_eq!(decode(words[0]).unwrap(), Instr::Lui { rd: 5, imm: 0 });
+        assert_eq!(
+            decode(words[1]).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 5, imm: 12 }
+        );
+    }
+
+    /// Round-trip: assemble → disassemble → assemble gives identical words.
+    #[test]
+    fn asm_disasm_roundtrip() {
+        let src = r#"
+            addi  sp, sp, -16
+            sw    ra, 12(sp)
+            li    a0, 42
+            lui   a1, 0x10000
+            xor   a2, a0, a1
+            sltu  a3, a2, a0
+            sra   a4, a1, a0
+            srai  a5, a1, 3
+            beq   a0, a1, out
+            jal   ra, out
+        out:
+            csrrw t0, mstatus, t1
+            csrrci t2, mie, 8
+            wfi
+            mret
+            fence
+            ebreak
+            ecall
+        "#;
+        let words = assemble(src).unwrap();
+        let listing: String = words
+            .iter()
+            .map(|&w| disassemble(w) + "\n")
+            .collect();
+        let words2 = assemble(&listing).unwrap_or_else(|e| panic!("{e}\n{listing}"));
+        assert_eq!(words, words2);
+    }
+}

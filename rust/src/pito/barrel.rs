@@ -1,0 +1,428 @@
+//! The barrel core: 8 harts round-robin over shared Harvard memories.
+//!
+//! "Because every thread comes up for execution only every 8 clock cycles,
+//! the five pipeline stages can be completely hidden. Branch prediction
+//! units are unnecessary." (§3.2) — so the model is exact: one hart
+//! architecturally retires per cycle, in strict rotation.
+
+use super::csr::CsrBridge;
+use super::hart::{Bus, Hart, StepResult, Trap};
+use super::isa::{LoadOp, StoreOp};
+use super::{DRAM_BYTES, IRAM_BYTES, NUM_HARTS};
+
+/// Memory-mapped I/O, above the data RAM:
+pub mod mmio {
+    /// Write a byte to the simulation console.
+    pub const PUTCHAR: u32 = 0x4000_0000;
+    /// Any write halts the whole machine (end of program).
+    pub const HALT: u32 = 0x4000_0004;
+    /// Read the global cycle counter (low / high words).
+    pub const CYCLE_LO: u32 = 0x4000_0008;
+    pub const CYCLE_HI: u32 = 0x4000_000C;
+}
+
+/// Configuration for a barrel instance.
+#[derive(Debug, Clone, Copy)]
+pub struct BarrelConfig {
+    pub iram_bytes: usize,
+    pub dram_bytes: usize,
+    /// Simulation fuel: abort after this many cycles (deadlock guard).
+    pub max_cycles: u64,
+}
+
+impl Default for BarrelConfig {
+    fn default() -> Self {
+        BarrelConfig {
+            iram_bytes: IRAM_BYTES,
+            dram_bytes: DRAM_BYTES,
+            max_cycles: 200_000_000,
+        }
+    }
+}
+
+/// Why `run` returned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExitReason {
+    /// A store hit the HALT MMIO register.
+    Halted,
+    /// All harts exited via `ecall`.
+    AllExited,
+    /// All live harts are asleep in `wfi` and no interrupt can arrive
+    /// (only detectable by the embedding system; the standalone runner
+    /// reports it after a full idle rotation with no IRQ sources).
+    Deadlock,
+    /// `ebreak` or a fault.
+    Fault { hart: usize, trap: Trap },
+    /// Ran out of fuel.
+    MaxCycles,
+}
+
+/// A CSR bridge with no MVUs behind it: all custom accesses trap and no
+/// interrupts are raised. Used for standalone CPU tests.
+#[derive(Debug, Default, Clone)]
+pub struct NullBridge;
+
+impl CsrBridge for NullBridge {
+    fn csr_read(&mut self, _hart: usize, _csr: u16) -> Option<u32> {
+        None
+    }
+    fn csr_write(&mut self, _hart: usize, _csr: u16, _value: u32) -> bool {
+        false
+    }
+    fn irq_level(&mut self, _hart: usize) -> bool {
+        false
+    }
+}
+
+/// Data bus: DRAM + MMIO. Owned by the barrel, borrowed per step.
+struct DataBus<'a> {
+    dram: &'a mut [u8],
+    cycle: u64,
+    console: &'a mut Vec<u8>,
+    halted: &'a mut bool,
+}
+
+impl Bus for DataBus<'_> {
+    fn load(&mut self, addr: u32, op: LoadOp) -> Result<u32, Trap> {
+        let width = match op {
+            LoadOp::Lb | LoadOp::Lbu => 1,
+            LoadOp::Lh | LoadOp::Lhu => 2,
+            LoadOp::Lw => 4,
+        };
+        if addr % width != 0 {
+            return Err(Trap::LoadFault(addr));
+        }
+        let raw: u32 = match addr {
+            mmio::CYCLE_LO => self.cycle as u32,
+            mmio::CYCLE_HI => (self.cycle >> 32) as u32,
+            a if (a as usize) + (width as usize) <= self.dram.len() => {
+                let i = a as usize;
+                let mut v = 0u32;
+                for b in 0..width as usize {
+                    v |= (self.dram[i + b] as u32) << (8 * b);
+                }
+                v
+            }
+            _ => return Err(Trap::LoadFault(addr)),
+        };
+        Ok(match op {
+            LoadOp::Lb => raw as u8 as i8 as i32 as u32,
+            LoadOp::Lbu => raw & 0xff,
+            LoadOp::Lh => raw as u16 as i16 as i32 as u32,
+            LoadOp::Lhu => raw & 0xffff,
+            LoadOp::Lw => raw,
+        })
+    }
+
+    fn store(&mut self, addr: u32, value: u32, op: StoreOp) -> Result<(), Trap> {
+        let width = match op {
+            StoreOp::Sb => 1,
+            StoreOp::Sh => 2,
+            StoreOp::Sw => 4,
+        };
+        if addr % width != 0 {
+            return Err(Trap::StoreFault(addr));
+        }
+        match addr {
+            mmio::PUTCHAR => {
+                self.console.push(value as u8);
+                Ok(())
+            }
+            mmio::HALT => {
+                *self.halted = true;
+                Ok(())
+            }
+            a if (a as usize) + (width as usize) <= self.dram.len() => {
+                let i = a as usize;
+                for b in 0..width as usize {
+                    self.dram[i + b] = (value >> (8 * b)) as u8;
+                }
+                Ok(())
+            }
+            _ => Err(Trap::StoreFault(addr)),
+        }
+    }
+}
+
+/// The 8-hart barrel processor.
+pub struct Barrel {
+    pub harts: Vec<Hart>,
+    imem: Vec<u32>,
+    dram: Vec<u8>,
+    cycle: u64,
+    halted: bool,
+    /// Bytes written to the PUTCHAR console.
+    pub console: Vec<u8>,
+    cfg: BarrelConfig,
+}
+
+impl Barrel {
+    pub fn new(cfg: BarrelConfig) -> Self {
+        Barrel {
+            harts: (0..NUM_HARTS).map(Hart::new).collect(),
+            imem: vec![0; cfg.iram_bytes / 4],
+            dram: vec![0; cfg.dram_bytes],
+            cycle: 0,
+            halted: false,
+            console: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Load a program image (instruction words) at IRAM word offset 0.
+    /// All harts reset to PC 0; programs branch on `mhartid`.
+    pub fn load_program(&mut self, words: &[u32]) {
+        assert!(
+            words.len() <= self.imem.len(),
+            "program of {} words exceeds IRAM ({} words)",
+            words.len(),
+            self.imem.len()
+        );
+        self.imem[..words.len()].copy_from_slice(words);
+        for h in &mut self.harts {
+            *h = Hart::new(h.id);
+        }
+        self.cycle = 0;
+        self.halted = false;
+        self.console.clear();
+    }
+
+    /// Write bytes into data RAM (host-side initialisation).
+    pub fn write_dram(&mut self, addr: u32, bytes: &[u8]) {
+        let a = addr as usize;
+        self.dram[a..a + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn read_dram_word(&self, addr: u32) -> u32 {
+        let i = addr as usize;
+        u32::from_le_bytes([self.dram[i], self.dram[i + 1], self.dram[i + 2], self.dram[i + 3]])
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    /// Advance one clock: the hart owning this slot executes one
+    /// instruction. Returns a fatal trap if one occurred.
+    pub fn step(&mut self, bridge: &mut dyn CsrBridge) -> Option<(usize, Trap)> {
+        let hid = (self.cycle % NUM_HARTS as u64) as usize;
+        let mut bus = DataBus {
+            dram: &mut self.dram,
+            cycle: self.cycle,
+            console: &mut self.console,
+            halted: &mut self.halted,
+        };
+        let res = self.harts[hid].step(&self.imem, &mut bus, bridge, self.cycle);
+        self.cycle += 1;
+        match res {
+            StepResult::Retired | StepResult::Idle => None,
+            StepResult::Fatal(Trap::MachineHalt) => {
+                self.halted = true;
+                None
+            }
+            StepResult::Fatal(t) => Some((hid, t)),
+        }
+    }
+
+    /// Whether every hart has exited (`ecall`).
+    pub fn all_exited(&self) -> bool {
+        self.harts.iter().all(|h| h.exited)
+    }
+
+    /// Whether every non-exited hart is asleep.
+    pub fn all_asleep(&self) -> bool {
+        self.harts.iter().all(|h| h.exited || h.asleep)
+    }
+
+    /// Run until halt/exit/fault/fuel-exhaustion, with a standalone bridge
+    /// (for CPU-only programs and tests). The embedding accelerator system
+    /// drives `step` itself to interleave MVU cycles.
+    pub fn run(&mut self, bridge: &mut dyn CsrBridge) -> ExitReason {
+        loop {
+            if self.halted {
+                return ExitReason::Halted;
+            }
+            if self.all_exited() {
+                return ExitReason::AllExited;
+            }
+            if self.cycle >= self.cfg.max_cycles {
+                return ExitReason::MaxCycles;
+            }
+            // Deadlock: a full rotation with every hart asleep and no IRQ
+            // source behind the bridge can never make progress.
+            if self.all_asleep() {
+                let any_irq = (0..NUM_HARTS).any(|h| bridge.irq_level(h));
+                if !any_irq {
+                    return ExitReason::Deadlock;
+                }
+            }
+            if let Some((hart, trap)) = self.step(bridge) {
+                match trap {
+                    Trap::MachineHalt => return ExitReason::Halted,
+                    t => return ExitReason::Fault { hart, trap: t },
+                }
+            }
+        }
+    }
+
+    pub fn console_string(&self) -> String {
+        String::from_utf8_lossy(&self.console).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::assembler::assemble;
+    use super::*;
+
+    fn run_asm(src: &str) -> (Barrel, ExitReason) {
+        let words = assemble(src).expect("assembly failed");
+        let mut b = Barrel::new(BarrelConfig::default());
+        b.load_program(&words);
+        let reason = b.run(&mut NullBridge);
+        (b, reason)
+    }
+
+    #[test]
+    fn all_harts_compute_their_id_sum() {
+        // Each hart stores its hartid into dram[4*id], then exits.
+        let src = r#"
+            csrr  t0, mhartid
+            slli  t1, t0, 2
+            sw    t0, 0(t1)
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::AllExited);
+        for h in 0..8 {
+            assert_eq!(b.read_dram_word(4 * h as u32), h as u32);
+        }
+    }
+
+    #[test]
+    fn barrel_rotation_is_fair() {
+        // Every hart increments a shared counter once; with strict rotation
+        // and identical code there is no race within a rotation (one hart
+        // per cycle, and each load/store pair is 8 cycles apart — so we give
+        // each hart its own slot and sum at the end on hart 0).
+        let src = r#"
+            csrr  t0, mhartid
+            slli  t1, t0, 2
+            addi  t2, t0, 100
+            sw    t2, 256(t1)
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::AllExited);
+        let sum: u32 = (0..8).map(|h| b.read_dram_word(256 + 4 * h)).sum();
+        assert_eq!(sum, (0..8).map(|h| h + 100).sum::<u32>());
+    }
+
+    #[test]
+    fn loop_and_branch() {
+        // Hart 0 sums 1..=10 into dram[0] and halts the machine; others spin
+        // on ecall.
+        let src = r#"
+            csrr  t0, mhartid
+            bnez  t0, done
+            li    t1, 0      # acc
+            li    t2, 1      # i
+            li    t3, 11
+        loop:
+            add   t1, t1, t2
+            addi  t2, t2, 1
+            bne   t2, t3, loop
+            sw    t1, 0(zero)
+            li    t4, 0x40000004
+            sw    zero, 0(t4)
+        done:
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::Halted);
+        assert_eq!(b.read_dram_word(0), 55);
+    }
+
+    #[test]
+    fn putchar_console() {
+        let src = r#"
+            csrr  t0, mhartid
+            bnez  t0, done
+            li    t1, 0x40000000
+            li    t2, 72     # 'H'
+            sw    t2, 0(t1)
+            li    t2, 105    # 'i'
+            sw    t2, 0(t1)
+        done:
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::AllExited);
+        assert_eq!(b.console_string(), "Hi");
+    }
+
+    #[test]
+    fn fault_on_bad_memory() {
+        let src = r#"
+            li   t0, 0x7ffffff0
+            lw   t1, 0(t0)
+            ecall
+        "#;
+        let (_, reason) = run_asm(src);
+        match reason {
+            ExitReason::Fault { trap: Trap::LoadFault(_), .. } => {}
+            other => panic!("expected load fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadlock_detected_for_wfi_without_sources() {
+        let src = "wfi\necall";
+        let (_, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::Deadlock);
+    }
+
+    #[test]
+    fn byte_and_half_accesses() {
+        let src = r#"
+            csrr  t0, mhartid
+            bnez  t0, done
+            li    t1, 0x1234
+            sh    t1, 0(zero)
+            li    t1, 0xab
+            sb    t1, 2(zero)
+            lhu   t2, 0(zero)
+            lb    t3, 2(zero)   # 0xab sign-extends negative
+            sw    t2, 16(zero)
+            sw    t3, 20(zero)
+        done:
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::AllExited);
+        assert_eq!(b.read_dram_word(16), 0x1234);
+        assert_eq!(b.read_dram_word(20) as i32, 0xab_u8 as i8 as i32);
+    }
+
+    #[test]
+    fn mcycle_visible() {
+        // Each hart records the cycle of its first slot: hart h runs at
+        // cycle h in strict barrel rotation.
+        let src = r#"
+            csrr  t0, mcycle
+            csrr  t1, mhartid
+            slli  t1, t1, 2
+            sw    t0, 0(t1)
+            ecall
+        "#;
+        let (b, reason) = run_asm(src);
+        assert_eq!(reason, ExitReason::AllExited);
+        for h in 0..8u32 {
+            assert_eq!(b.read_dram_word(4 * h), h, "hart {h} first slot");
+        }
+    }
+}

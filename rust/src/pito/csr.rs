@@ -1,0 +1,97 @@
+//! CSR address space and the bridge to the MVU configuration registers.
+//!
+//! Pito implements the base machine-mode CSRs ("minimal support for
+//! privilege specification to make CSRs and Interrupts available",  §3.2)
+//! in-core. The 74 MVU-specific CSRs are *external*: every access by hart
+//! `h` in the custom ranges is delegated to a [`CsrBridge`], which the
+//! accelerator implements by mapping the access onto MVU `h`'s
+//! configuration registers (see `accel::csr_map` for the full register
+//! list).
+
+/// Standard machine-mode CSR addresses implemented in-core.
+pub mod addr {
+    pub const MSTATUS: u16 = 0x300;
+    pub const MIE: u16 = 0x304;
+    pub const MTVEC: u16 = 0x305;
+    pub const MSCRATCH: u16 = 0x340;
+    pub const MEPC: u16 = 0x341;
+    pub const MCAUSE: u16 = 0x342;
+    pub const MIP: u16 = 0x344;
+    pub const MCYCLE: u16 = 0xB00;
+    pub const MCYCLEH: u16 = 0xB80;
+    pub const MINSTRET: u16 = 0xB02;
+    pub const MINSTRETH: u16 = 0xB82;
+    pub const MHARTID: u16 = 0xF14;
+}
+
+/// First MVU CSR (custom machine read/write space).
+pub const MVU_CSR_BASE: u16 = 0x7C0;
+/// Last address of the primary MVU CSR window (64 registers).
+pub const MVU_CSR_LAST: u16 = 0x7FF;
+/// Second custom window for the remaining MVU CSRs.
+pub const MVU_CSR2_BASE: u16 = 0xBC0;
+pub const MVU_CSR2_LAST: u16 = 0xBC9;
+
+/// Is `csr` in one of the MVU windows?
+pub fn is_mvu_csr(csr: u16) -> bool {
+    (MVU_CSR_BASE..=MVU_CSR_LAST).contains(&csr)
+        || (MVU_CSR2_BASE..=MVU_CSR2_LAST).contains(&csr)
+}
+
+/// External handler for the custom CSR space. Each access carries the hart
+/// index so the implementation can route to the per-hart MVU.
+pub trait CsrBridge {
+    /// Read a custom CSR; `None` → illegal-instruction trap.
+    fn csr_read(&mut self, hart: usize, csr: u16) -> Option<u32>;
+    /// Write a custom CSR; `false` → illegal-instruction trap.
+    fn csr_write(&mut self, hart: usize, csr: u16, value: u32) -> bool;
+    /// Level of the external (MVU-completion) interrupt line into `hart`.
+    fn irq_level(&mut self, hart: usize) -> bool;
+}
+
+/// Human-readable CSR names for the disassembler and traces.
+pub fn csr_name(csr: u16) -> Option<&'static str> {
+    Some(match csr {
+        0x300 => "mstatus",
+        0x304 => "mie",
+        0x305 => "mtvec",
+        0x340 => "mscratch",
+        0x341 => "mepc",
+        0x342 => "mcause",
+        0x344 => "mip",
+        0xB00 => "mcycle",
+        0xB80 => "mcycleh",
+        0xB02 => "minstret",
+        0xB82 => "minstreth",
+        0xF14 => "mhartid",
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mvu_window_bounds() {
+        assert!(is_mvu_csr(0x7C0));
+        assert!(is_mvu_csr(0x7FF));
+        assert!(is_mvu_csr(0xBC0));
+        assert!(is_mvu_csr(0xBC9));
+        assert!(!is_mvu_csr(0x7BF));
+        assert!(!is_mvu_csr(0xBCA));
+        assert!(!is_mvu_csr(0x300));
+    }
+
+    #[test]
+    fn window_capacity_is_74() {
+        let n = (MVU_CSR_LAST - MVU_CSR_BASE + 1) + (MVU_CSR2_LAST - MVU_CSR2_BASE + 1);
+        assert_eq!(n, 74, "the paper adds 74 MVU-specific CSRs");
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(csr_name(0x305), Some("mtvec"));
+        assert_eq!(csr_name(0x7C0), None);
+    }
+}

@@ -1,0 +1,155 @@
+//! Disassembler for traces and debugging. Output re-assembles to identical
+//! words (branch/jump targets are printed as numeric pc-relative offsets,
+//! which the assembler accepts in place of labels).
+
+use super::csr::csr_name;
+use super::isa::{decode, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+fn r(i: u8) -> String {
+    format!("x{i}")
+}
+
+/// Disassemble one instruction word.
+pub fn disassemble(word: u32) -> String {
+    let Ok(i) = decode(word) else {
+        return format!(".word {word:#010x}");
+    };
+    match i {
+        Instr::Lui { rd, imm } => format!("lui {}, {:#x}", r(rd), imm as u32),
+        Instr::Auipc { rd, imm } => format!("auipc {}, {:#x}", r(rd), imm as u32),
+        Instr::Jal { rd, imm } => format!("jal {}, {}", r(rd), imm),
+        Instr::Jalr { rd, rs1, imm } => format!("jalr {}, {}({})", r(rd), imm, r(rs1)),
+        Instr::Branch { op, rs1, rs2, imm } => {
+            let mn = match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            };
+            format!("{mn} {}, {}, {}", r(rs1), r(rs2), imm)
+        }
+        Instr::Load { op, rd, rs1, imm } => {
+            let mn = match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            };
+            format!("{mn} {}, {}({})", r(rd), imm, r(rs1))
+        }
+        Instr::Store { op, rs2, rs1, imm } => {
+            let mn = match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            };
+            format!("{mn} {}, {}({})", r(rs2), imm, r(rs1))
+        }
+        Instr::OpImm { op, rd, rs1, imm } => {
+            let mn = match op {
+                AluOp::Add => "addi",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sll => "slli",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Sub => unreachable!(),
+            };
+            format!("{mn} {}, {}, {}", r(rd), r(rs1), imm)
+        }
+        Instr::Op { op, rd, rs1, rs2 } => {
+            let mn = match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            };
+            format!("{mn} {}, {}, {}", r(rd), r(rs1), r(rs2))
+        }
+        Instr::Csr { op, rd, csr, src } => {
+            let mn = match op {
+                CsrOp::Rw => "csrrw",
+                CsrOp::Rs => "csrrs",
+                CsrOp::Rc => "csrrc",
+                CsrOp::Rwi => "csrrwi",
+                CsrOp::Rsi => "csrrsi",
+                CsrOp::Rci => "csrrci",
+            };
+            let csr_s = csr_name(csr)
+                .map(str::to_string)
+                .or_else(|| crate::accel::mvu_csr_name(csr).map(str::to_string))
+                .unwrap_or_else(|| format!("{csr:#x}"));
+            match op {
+                CsrOp::Rwi | CsrOp::Rsi | CsrOp::Rci => {
+                    format!("{mn} {}, {}, {}", r(rd), csr_s, src)
+                }
+                _ => format!("{mn} {}, {}, {}", r(rd), csr_s, r(src)),
+            }
+        }
+        Instr::Fence => "fence".into(),
+        Instr::Ecall => "ecall".into(),
+        Instr::Ebreak => "ebreak".into(),
+        Instr::Mret => "mret".into(),
+        Instr::Wfi => "wfi".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::isa::encode;
+    use super::*;
+
+    #[test]
+    fn readable_output() {
+        let w = encode(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 });
+        assert_eq!(disassemble(w), "addi x1, x0, 5");
+        let w = encode(Instr::Csr { op: CsrOp::Rs, rd: 5, csr: 0xF14, src: 0 });
+        assert_eq!(disassemble(w), "csrrs x5, mhartid, x0");
+    }
+
+    #[test]
+    fn illegal_becomes_word() {
+        assert_eq!(disassemble(0), ".word 0x00000000");
+    }
+
+    /// decode→disasm→asm→encode round-trip on a pseudo-random sample.
+    #[test]
+    fn roundtrip_sample() {
+        let mut state = 0xfeed_face_cafe_beefu64;
+        let mut rnd = move || {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let mut n = 0;
+        for _ in 0..60_000 {
+            let w = rnd() as u32;
+            if let Ok(i) = decode(w) {
+                let text = disassemble(encode(i));
+                let words = super::super::assembler::assemble(&text)
+                    .unwrap_or_else(|e| panic!("'{text}': {e}"));
+                assert_eq!(words.len(), 1, "'{text}'");
+                assert_eq!(
+                    decode(words[0]).unwrap(),
+                    i,
+                    "semantic roundtrip via '{text}'"
+                );
+                n += 1;
+            }
+        }
+        assert!(n > 3_000, "sample too small: {n}");
+    }
+}

@@ -1,0 +1,369 @@
+//! One barrel hart: architectural state and single-instruction execution.
+//!
+//! The barrel scheduler ([`super::barrel::Barrel`]) calls [`Hart::step`]
+//! on one hart per clock; everything pipeline-related is hidden by the
+//! barrel design, so a hart is purely architectural state.
+
+use super::csr::{addr, is_mvu_csr, CsrBridge};
+use super::isa::{decode, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+/// Synchronous traps / execution events surfaced to the barrel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    IllegalInstr(u32),
+    FetchFault(u32),
+    LoadFault(u32),
+    StoreFault(u32),
+    /// `ecall`: by bare-metal convention, terminates the calling hart.
+    HartExit,
+    /// `ebreak`: terminates the whole simulation with an error.
+    Break,
+    /// MMIO halt: terminates the whole simulation successfully.
+    MachineHalt,
+}
+
+/// Data-side memory interface (DRAM + MMIO), implemented by the barrel.
+pub trait Bus {
+    fn load(&mut self, addr: u32, op: LoadOp) -> Result<u32, Trap>;
+    fn store(&mut self, addr: u32, value: u32, op: StoreOp) -> Result<(), Trap>;
+}
+
+/// mstatus bits.
+const MSTATUS_MIE: u32 = 1 << 3;
+const MSTATUS_MPIE: u32 = 1 << 7;
+/// mie / mip bit for the machine external interrupt (the MVU line).
+const MEI_BIT: u32 = 1 << 11;
+/// mcause value for machine external interrupt.
+const MCAUSE_MEI: u32 = 0x8000_000B;
+
+/// Per-hart architectural state.
+#[derive(Debug, Clone)]
+pub struct Hart {
+    pub id: usize,
+    pub regs: [u32; 32],
+    pub pc: u32,
+    pub mstatus: u32,
+    pub mie: u32,
+    pub mtvec: u32,
+    pub mscratch: u32,
+    pub mepc: u32,
+    pub mcause: u32,
+    pub mip: u32,
+    pub minstret: u64,
+    /// Sleeping in `wfi` until an interrupt is pending.
+    pub asleep: bool,
+    /// Terminated via `ecall`.
+    pub exited: bool,
+}
+
+/// Result of stepping a hart for one slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepResult {
+    Retired,
+    /// Slot consumed while sleeping/exited (barrel keeps rotating).
+    Idle,
+    Fatal(Trap),
+}
+
+impl Hart {
+    pub fn new(id: usize) -> Self {
+        Hart {
+            id,
+            regs: [0; 32],
+            pc: 0,
+            mstatus: 0,
+            mie: 0,
+            mtvec: 0,
+            mscratch: 0,
+            mepc: 0,
+            mcause: 0,
+            mip: 0,
+            minstret: 0,
+            asleep: false,
+            exited: false,
+        }
+    }
+
+    #[inline]
+    fn rget(&self, r: u8) -> u32 {
+        self.regs[r as usize]
+    }
+
+    #[inline]
+    fn rset(&mut self, r: u8, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Update the external-interrupt pending bit from the MVU line level.
+    pub fn set_irq_level(&mut self, level: bool) {
+        if level {
+            self.mip |= MEI_BIT;
+        } else {
+            self.mip &= !MEI_BIT;
+        }
+    }
+
+    fn interrupt_ready(&self) -> bool {
+        self.mip & self.mie & MEI_BIT != 0 && self.mstatus & MSTATUS_MIE != 0
+    }
+
+    /// Take the machine external interrupt: save context and vector.
+    fn take_interrupt(&mut self) {
+        self.mepc = self.pc;
+        self.mcause = MCAUSE_MEI;
+        // MPIE <- MIE, MIE <- 0.
+        let mie_was = self.mstatus & MSTATUS_MIE != 0;
+        self.mstatus &= !(MSTATUS_MIE | MSTATUS_MPIE);
+        if mie_was {
+            self.mstatus |= MSTATUS_MPIE;
+        }
+        self.pc = self.mtvec & !0b11; // direct mode
+    }
+
+    /// In-core CSR read; MVU space goes through the bridge.
+    fn csr_read(
+        &mut self,
+        csr: u16,
+        cycle: u64,
+        bridge: &mut dyn CsrBridge,
+    ) -> Result<u32, Trap> {
+        if is_mvu_csr(csr) {
+            return bridge
+                .csr_read(self.id, csr)
+                .ok_or(Trap::IllegalInstr(csr as u32));
+        }
+        Ok(match csr {
+            addr::MSTATUS => self.mstatus,
+            addr::MIE => self.mie,
+            addr::MTVEC => self.mtvec,
+            addr::MSCRATCH => self.mscratch,
+            addr::MEPC => self.mepc,
+            addr::MCAUSE => self.mcause,
+            addr::MIP => self.mip,
+            addr::MCYCLE => cycle as u32,
+            addr::MCYCLEH => (cycle >> 32) as u32,
+            addr::MINSTRET => self.minstret as u32,
+            addr::MINSTRETH => (self.minstret >> 32) as u32,
+            addr::MHARTID => self.id as u32,
+            _ => return Err(Trap::IllegalInstr(csr as u32)),
+        })
+    }
+
+    fn csr_write(
+        &mut self,
+        csr: u16,
+        value: u32,
+        bridge: &mut dyn CsrBridge,
+    ) -> Result<(), Trap> {
+        if is_mvu_csr(csr) {
+            return if bridge.csr_write(self.id, csr, value) {
+                Ok(())
+            } else {
+                Err(Trap::IllegalInstr(csr as u32))
+            };
+        }
+        match csr {
+            addr::MSTATUS => self.mstatus = value & (MSTATUS_MIE | MSTATUS_MPIE),
+            addr::MIE => self.mie = value & MEI_BIT,
+            addr::MTVEC => self.mtvec = value,
+            addr::MSCRATCH => self.mscratch = value,
+            addr::MEPC => self.mepc = value & !1,
+            addr::MCAUSE => self.mcause = value,
+            addr::MIP => {} // read-only from software for our single source
+            addr::MCYCLE | addr::MCYCLEH | addr::MINSTRET | addr::MINSTRETH
+            | addr::MHARTID => {
+                return Err(Trap::IllegalInstr(csr as u32));
+            }
+            _ => return Err(Trap::IllegalInstr(csr as u32)),
+        }
+        Ok(())
+    }
+
+    /// Execute one instruction slot.
+    ///
+    /// `imem` is the shared instruction RAM (word-addressed), `bus` the data
+    /// bus, `bridge` the MVU CSR bridge, `cycle` the global cycle counter
+    /// (for mcycle).
+    pub fn step(
+        &mut self,
+        imem: &[u32],
+        bus: &mut dyn Bus,
+        bridge: &mut dyn CsrBridge,
+        cycle: u64,
+    ) -> StepResult {
+        if self.exited {
+            return StepResult::Idle;
+        }
+        // Refresh the interrupt line level.
+        let level = bridge.irq_level(self.id);
+        self.set_irq_level(level);
+
+        if self.asleep {
+            if self.mip & MEI_BIT != 0 {
+                self.asleep = false; // wake; fall through to (maybe) trap
+            } else {
+                return StepResult::Idle;
+            }
+        }
+        if self.interrupt_ready() {
+            self.take_interrupt();
+        }
+
+        // Fetch.
+        let widx = (self.pc / 4) as usize;
+        if self.pc % 4 != 0 || widx >= imem.len() {
+            return StepResult::Fatal(Trap::FetchFault(self.pc));
+        }
+        let word = imem[widx];
+        let instr = match decode(word) {
+            Ok(i) => i,
+            Err(_) => return StepResult::Fatal(Trap::IllegalInstr(word)),
+        };
+
+        let mut next_pc = self.pc.wrapping_add(4);
+        match instr {
+            Instr::Lui { rd, imm } => self.rset(rd, imm as u32),
+            Instr::Auipc { rd, imm } => self.rset(rd, self.pc.wrapping_add(imm as u32)),
+            Instr::Jal { rd, imm } => {
+                self.rset(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let t = next_pc;
+                next_pc = self.rget(rs1).wrapping_add(imm as u32) & !1;
+                self.rset(rd, t);
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let a = self.rget(rs1);
+                let b = self.rget(rs2);
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let a = self.rget(rs1).wrapping_add(imm as u32);
+                match bus.load(a, op) {
+                    Ok(v) => self.rset(rd, v),
+                    Err(t) => return StepResult::Fatal(t),
+                }
+            }
+            Instr::Store { op, rs2, rs1, imm } => {
+                let a = self.rget(rs1).wrapping_add(imm as u32);
+                if let Err(t) = bus.store(a, self.rget(rs2), op) {
+                    match t {
+                        Trap::MachineHalt => return StepResult::Fatal(Trap::MachineHalt),
+                        other => return StepResult::Fatal(other),
+                    }
+                }
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let a = self.rget(rs1);
+                let v = alu(op, a, imm as u32);
+                self.rset(rd, v);
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let v = alu(op, self.rget(rs1), self.rget(rs2));
+                self.rset(rd, v);
+            }
+            Instr::Csr { op, rd, csr, src } => {
+                let uimm = src as u32;
+                let (do_read, write_val) = match op {
+                    CsrOp::Rw => (rd != 0, Some(self.rget(src))),
+                    CsrOp::Rwi => (rd != 0, Some(uimm)),
+                    CsrOp::Rs => (true, (src != 0).then(|| self.rget(src))),
+                    CsrOp::Rsi => (true, (src != 0).then_some(uimm)),
+                    CsrOp::Rc => (true, (src != 0).then(|| self.rget(src))),
+                    CsrOp::Rci => (true, (src != 0).then_some(uimm)),
+                };
+                let old = if do_read || write_val.is_some() {
+                    // Reads of side-effecting MVU CSRs are fine (status).
+                    match self.csr_read(csr, cycle, bridge) {
+                        Ok(v) => v,
+                        Err(t) => return StepResult::Fatal(t),
+                    }
+                } else {
+                    0
+                };
+                if let Some(wv) = write_val {
+                    let newv = match op {
+                        CsrOp::Rw | CsrOp::Rwi => wv,
+                        CsrOp::Rs | CsrOp::Rsi => old | wv,
+                        CsrOp::Rc | CsrOp::Rci => old & !wv,
+                    };
+                    if let Err(t) = self.csr_write(csr, newv, bridge) {
+                        return StepResult::Fatal(t);
+                    }
+                }
+                self.rset(rd, old);
+            }
+            Instr::Fence => {}
+            Instr::Ecall => {
+                self.exited = true;
+                self.pc = next_pc;
+                self.minstret += 1;
+                return StepResult::Idle;
+            }
+            Instr::Ebreak => return StepResult::Fatal(Trap::Break),
+            Instr::Mret => {
+                // MIE <- MPIE; MPIE <- 1.
+                let mpie = self.mstatus & MSTATUS_MPIE != 0;
+                self.mstatus &= !MSTATUS_MIE;
+                if mpie {
+                    self.mstatus |= MSTATUS_MIE;
+                }
+                self.mstatus |= MSTATUS_MPIE;
+                next_pc = self.mepc;
+            }
+            Instr::Wfi => {
+                // Sleep if nothing pending; otherwise fall through.
+                if self.mip & MEI_BIT == 0 {
+                    self.asleep = true;
+                }
+            }
+        }
+        self.pc = next_pc;
+        self.minstret += 1;
+        StepResult::Retired
+    }
+}
+
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => (((a as i32) < (b as i32)) as u32),
+        AluOp::Sltu => ((a < b) as u32),
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_semantics() {
+        assert_eq!(alu(AluOp::Add, 7, u32::MAX), 6);
+        assert_eq!(alu(AluOp::Sub, 3, 5), (-2i32) as u32);
+        assert_eq!(alu(AluOp::Slt, (-1i32) as u32, 0), 1);
+        assert_eq!(alu(AluOp::Sltu, (-1i32) as u32, 0), 0);
+        assert_eq!(alu(AluOp::Sra, (-8i32) as u32, 2), (-2i32) as u32);
+        assert_eq!(alu(AluOp::Srl, (-8i32) as u32, 2), 0x3FFF_FFFE);
+        assert_eq!(alu(AluOp::Sll, 1, 33), 2, "shift amount masks to 5 bits");
+    }
+}

@@ -1,0 +1,493 @@
+//! RV32I + Zicsr instruction set: typed representation, encoder and decoder.
+//!
+//! The encoder/decoder pair is exact: `decode(encode(i)) == i` for every
+//! representable instruction, which the round-trip property tests exercise.
+
+/// Register index 0..=31.
+pub type Reg = u8;
+
+/// Integer ALU operations (shared by OP and OP-IMM forms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub, // OP form only
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+/// Branch comparisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+/// Load widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+/// Store widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+/// Zicsr operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CsrOp {
+    Rw,
+    Rs,
+    Rc,
+    Rwi,
+    Rsi,
+    Rci,
+}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, imm: i32 },
+    Jalr { rd: Reg, rs1: Reg, imm: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, imm: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, imm: i32 },
+    Store { op: StoreOp, rs2: Reg, rs1: Reg, imm: i32 },
+    /// OP-IMM. For shifts, `imm` is the 5-bit shamt.
+    OpImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Zicsr. For immediate forms, `src` is the 5-bit zimm; otherwise rs1.
+    Csr { op: CsrOp, rd: Reg, csr: u16, src: Reg },
+    Fence,
+    Ecall,
+    Ebreak,
+    Mret,
+    Wfi,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: u32,
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal instruction {:#010x}: {}", self.word, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+// --- field helpers -----------------------------------------------------------
+
+fn sext(v: u32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    ((v << shift) as i32) >> shift
+}
+
+fn rd(w: u32) -> Reg {
+    ((w >> 7) & 0x1f) as Reg
+}
+fn rs1(w: u32) -> Reg {
+    ((w >> 15) & 0x1f) as Reg
+}
+fn rs2(w: u32) -> Reg {
+    ((w >> 20) & 0x1f) as Reg
+}
+fn funct3(w: u32) -> u32 {
+    (w >> 12) & 7
+}
+fn funct7(w: u32) -> u32 {
+    w >> 25
+}
+fn imm_i(w: u32) -> i32 {
+    sext(w >> 20, 12)
+}
+fn imm_s(w: u32) -> i32 {
+    sext(((w >> 25) << 5) | ((w >> 7) & 0x1f), 12)
+}
+fn imm_b(w: u32) -> i32 {
+    let v = (((w >> 31) & 1) << 12)
+        | (((w >> 7) & 1) << 11)
+        | (((w >> 25) & 0x3f) << 5)
+        | (((w >> 8) & 0xf) << 1);
+    sext(v, 13)
+}
+fn imm_u(w: u32) -> i32 {
+    (w & 0xFFFF_F000) as i32
+}
+fn imm_j(w: u32) -> i32 {
+    let v = (((w >> 31) & 1) << 20)
+        | (((w >> 12) & 0xff) << 12)
+        | (((w >> 20) & 1) << 11)
+        | (((w >> 21) & 0x3ff) << 1);
+    sext(v, 21)
+}
+
+/// Decode one 32-bit instruction word.
+pub fn decode(w: u32) -> Result<Instr, DecodeError> {
+    let err = |reason| Err(DecodeError { word: w, reason });
+    match w & 0x7f {
+        0x37 => Ok(Instr::Lui { rd: rd(w), imm: imm_u(w) }),
+        0x17 => Ok(Instr::Auipc { rd: rd(w), imm: imm_u(w) }),
+        0x6f => Ok(Instr::Jal { rd: rd(w), imm: imm_j(w) }),
+        0x67 => match funct3(w) {
+            0 => Ok(Instr::Jalr { rd: rd(w), rs1: rs1(w), imm: imm_i(w) }),
+            _ => err("bad JALR funct3"),
+        },
+        0x63 => {
+            let op = match funct3(w) {
+                0 => BranchOp::Beq,
+                1 => BranchOp::Bne,
+                4 => BranchOp::Blt,
+                5 => BranchOp::Bge,
+                6 => BranchOp::Bltu,
+                7 => BranchOp::Bgeu,
+                _ => return err("bad branch funct3"),
+            };
+            Ok(Instr::Branch { op, rs1: rs1(w), rs2: rs2(w), imm: imm_b(w) })
+        }
+        0x03 => {
+            let op = match funct3(w) {
+                0 => LoadOp::Lb,
+                1 => LoadOp::Lh,
+                2 => LoadOp::Lw,
+                4 => LoadOp::Lbu,
+                5 => LoadOp::Lhu,
+                _ => return err("bad load funct3"),
+            };
+            Ok(Instr::Load { op, rd: rd(w), rs1: rs1(w), imm: imm_i(w) })
+        }
+        0x23 => {
+            let op = match funct3(w) {
+                0 => StoreOp::Sb,
+                1 => StoreOp::Sh,
+                2 => StoreOp::Sw,
+                _ => return err("bad store funct3"),
+            };
+            Ok(Instr::Store { op, rs2: rs2(w), rs1: rs1(w), imm: imm_s(w) })
+        }
+        0x13 => {
+            let op = match funct3(w) {
+                0 => AluOp::Add,
+                1 => {
+                    if funct7(w) != 0 {
+                        return err("bad SLLI funct7");
+                    }
+                    AluOp::Sll
+                }
+                2 => AluOp::Slt,
+                3 => AluOp::Sltu,
+                4 => AluOp::Xor,
+                5 => match funct7(w) {
+                    0x00 => AluOp::Srl,
+                    0x20 => AluOp::Sra,
+                    _ => return err("bad shift funct7"),
+                },
+                6 => AluOp::Or,
+                7 => AluOp::And,
+                _ => unreachable!(),
+            };
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => (rs2(w)) as i32,
+                _ => imm_i(w),
+            };
+            Ok(Instr::OpImm { op, rd: rd(w), rs1: rs1(w), imm })
+        }
+        0x33 => {
+            let op = match (funct3(w), funct7(w)) {
+                (0, 0x00) => AluOp::Add,
+                (0, 0x20) => AluOp::Sub,
+                (1, 0x00) => AluOp::Sll,
+                (2, 0x00) => AluOp::Slt,
+                (3, 0x00) => AluOp::Sltu,
+                (4, 0x00) => AluOp::Xor,
+                (5, 0x00) => AluOp::Srl,
+                (5, 0x20) => AluOp::Sra,
+                (6, 0x00) => AluOp::Or,
+                (7, 0x00) => AluOp::And,
+                _ => return err("bad OP funct3/funct7"),
+            };
+            Ok(Instr::Op { op, rd: rd(w), rs1: rs1(w), rs2: rs2(w) })
+        }
+        0x0f => Ok(Instr::Fence),
+        0x73 => {
+            let csr = (w >> 20) as u16;
+            match funct3(w) {
+                0 => match w {
+                    0x0000_0073 => Ok(Instr::Ecall),
+                    0x0010_0073 => Ok(Instr::Ebreak),
+                    0x3020_0073 => Ok(Instr::Mret),
+                    0x1050_0073 => Ok(Instr::Wfi),
+                    _ => err("bad SYSTEM encoding"),
+                },
+                1 => Ok(Instr::Csr { op: CsrOp::Rw, rd: rd(w), csr, src: rs1(w) }),
+                2 => Ok(Instr::Csr { op: CsrOp::Rs, rd: rd(w), csr, src: rs1(w) }),
+                3 => Ok(Instr::Csr { op: CsrOp::Rc, rd: rd(w), csr, src: rs1(w) }),
+                5 => Ok(Instr::Csr { op: CsrOp::Rwi, rd: rd(w), csr, src: rs1(w) }),
+                6 => Ok(Instr::Csr { op: CsrOp::Rsi, rd: rd(w), csr, src: rs1(w) }),
+                7 => Ok(Instr::Csr { op: CsrOp::Rci, rd: rd(w), csr, src: rs1(w) }),
+                _ => err("bad SYSTEM funct3"),
+            }
+        }
+        _ => err("unknown opcode"),
+    }
+}
+
+// --- encoder -----------------------------------------------------------------
+
+fn enc_r(funct7: u32, rs2: Reg, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    (funct7 << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn enc_i(imm: i32, rs1: Reg, funct3: u32, rd: Reg, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "I-imm out of range: {imm}");
+    ((imm as u32 & 0xfff) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+fn enc_s(imm: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    assert!((-2048..=2047).contains(&imm), "S-imm out of range: {imm}");
+    let u = imm as u32 & 0xfff;
+    ((u >> 5) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | ((u & 0x1f) << 7)
+        | opcode
+}
+
+fn enc_b(imm: i32, rs2: Reg, rs1: Reg, funct3: u32, opcode: u32) -> u32 {
+    assert!(imm % 2 == 0 && (-4096..=4094).contains(&imm), "B-imm out of range: {imm}");
+    let u = imm as u32;
+    (((u >> 12) & 1) << 31)
+        | (((u >> 5) & 0x3f) << 25)
+        | ((rs2 as u32) << 20)
+        | ((rs1 as u32) << 15)
+        | (funct3 << 12)
+        | (((u >> 1) & 0xf) << 8)
+        | (((u >> 11) & 1) << 7)
+        | opcode
+}
+
+fn enc_u(imm: i32, rd: Reg, opcode: u32) -> u32 {
+    assert!(imm as u32 & 0xfff == 0, "U-imm must be 4K-aligned: {imm:#x}");
+    (imm as u32) | ((rd as u32) << 7) | opcode
+}
+
+fn enc_j(imm: i32, rd: Reg, opcode: u32) -> u32 {
+    assert!(
+        imm % 2 == 0 && (-(1 << 20)..(1 << 20)).contains(&imm),
+        "J-imm out of range: {imm}"
+    );
+    let u = imm as u32;
+    (((u >> 20) & 1) << 31)
+        | (((u >> 1) & 0x3ff) << 21)
+        | (((u >> 11) & 1) << 20)
+        | (((u >> 12) & 0xff) << 12)
+        | ((rd as u32) << 7)
+        | opcode
+}
+
+/// Encode a typed instruction into its 32-bit word.
+pub fn encode(i: Instr) -> u32 {
+    use Instr::*;
+    match i {
+        Lui { rd, imm } => enc_u(imm, rd, 0x37),
+        Auipc { rd, imm } => enc_u(imm, rd, 0x17),
+        Jal { rd, imm } => enc_j(imm, rd, 0x6f),
+        Jalr { rd, rs1, imm } => enc_i(imm, rs1, 0, rd, 0x67),
+        Branch { op, rs1, rs2, imm } => {
+            let f3 = match op {
+                BranchOp::Beq => 0,
+                BranchOp::Bne => 1,
+                BranchOp::Blt => 4,
+                BranchOp::Bge => 5,
+                BranchOp::Bltu => 6,
+                BranchOp::Bgeu => 7,
+            };
+            enc_b(imm, rs2, rs1, f3, 0x63)
+        }
+        Load { op, rd, rs1, imm } => {
+            let f3 = match op {
+                LoadOp::Lb => 0,
+                LoadOp::Lh => 1,
+                LoadOp::Lw => 2,
+                LoadOp::Lbu => 4,
+                LoadOp::Lhu => 5,
+            };
+            enc_i(imm, rs1, f3, rd, 0x03)
+        }
+        Store { op, rs2, rs1, imm } => {
+            let f3 = match op {
+                StoreOp::Sb => 0,
+                StoreOp::Sh => 1,
+                StoreOp::Sw => 2,
+            };
+            enc_s(imm, rs2, rs1, f3, 0x23)
+        }
+        OpImm { op, rd, rs1, imm } => match op {
+            AluOp::Add => enc_i(imm, rs1, 0, rd, 0x13),
+            AluOp::Slt => enc_i(imm, rs1, 2, rd, 0x13),
+            AluOp::Sltu => enc_i(imm, rs1, 3, rd, 0x13),
+            AluOp::Xor => enc_i(imm, rs1, 4, rd, 0x13),
+            AluOp::Or => enc_i(imm, rs1, 6, rd, 0x13),
+            AluOp::And => enc_i(imm, rs1, 7, rd, 0x13),
+            AluOp::Sll => {
+                assert!((0..32).contains(&imm), "shamt out of range");
+                enc_r(0x00, imm as Reg, rs1, 1, rd, 0x13)
+            }
+            AluOp::Srl => {
+                assert!((0..32).contains(&imm));
+                enc_r(0x00, imm as Reg, rs1, 5, rd, 0x13)
+            }
+            AluOp::Sra => {
+                assert!((0..32).contains(&imm));
+                enc_r(0x20, imm as Reg, rs1, 5, rd, 0x13)
+            }
+            AluOp::Sub => panic!("SUBI does not exist in RV32I"),
+        },
+        Op { op, rd, rs1, rs2 } => {
+            let (f7, f3) = match op {
+                AluOp::Add => (0x00, 0),
+                AluOp::Sub => (0x20, 0),
+                AluOp::Sll => (0x00, 1),
+                AluOp::Slt => (0x00, 2),
+                AluOp::Sltu => (0x00, 3),
+                AluOp::Xor => (0x00, 4),
+                AluOp::Srl => (0x00, 5),
+                AluOp::Sra => (0x20, 5),
+                AluOp::Or => (0x00, 6),
+                AluOp::And => (0x00, 7),
+            };
+            enc_r(f7, rs2, rs1, f3, rd, 0x33)
+        }
+        Csr { op, rd, csr, src } => {
+            let f3 = match op {
+                CsrOp::Rw => 1,
+                CsrOp::Rs => 2,
+                CsrOp::Rc => 3,
+                CsrOp::Rwi => 5,
+                CsrOp::Rsi => 6,
+                CsrOp::Rci => 7,
+            };
+            ((csr as u32) << 20) | ((src as u32) << 15) | (f3 << 12) | ((rd as u32) << 7) | 0x73
+        }
+        Fence => 0x0000_000f,
+        Ecall => 0x0000_0073,
+        Ebreak => 0x0010_0073,
+        Mret => 0x3020_0073,
+        Wfi => 0x1050_0073,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_encodings() {
+        // addi x1, x0, 5  = 0x00500093
+        assert_eq!(
+            encode(Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 }),
+            0x0050_0093
+        );
+        // add x3, x1, x2 = 0x002081b3
+        assert_eq!(encode(Instr::Op { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }), 0x0020_81b3);
+        // lui x5, 0x12345000
+        assert_eq!(encode(Instr::Lui { rd: 5, imm: 0x1234_5000 }), 0x1234_52b7);
+        // sw x2, 8(x1) = 0x0020a423
+        assert_eq!(
+            encode(Instr::Store { op: StoreOp::Sw, rs2: 2, rs1: 1, imm: 8 }),
+            0x0020_a423
+        );
+        // csrrw x0, 0x305, x1 (mtvec)
+        assert_eq!(
+            encode(Instr::Csr { op: CsrOp::Rw, rd: 0, csr: 0x305, src: 1 }),
+            0x3050_9073
+        );
+    }
+
+    #[test]
+    fn decode_known() {
+        assert_eq!(
+            decode(0x0050_0093).unwrap(),
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 }
+        );
+        assert_eq!(decode(0x0000_0073).unwrap(), Instr::Ecall);
+        assert_eq!(decode(0x3020_0073).unwrap(), Instr::Mret);
+        assert_eq!(decode(0x1050_0073).unwrap(), Instr::Wfi);
+    }
+
+    #[test]
+    fn negative_immediates() {
+        let i = Instr::OpImm { op: AluOp::Add, rd: 7, rs1: 7, imm: -1 };
+        assert_eq!(decode(encode(i)).unwrap(), i);
+        let b = Instr::Branch { op: BranchOp::Bne, rs1: 1, rs2: 2, imm: -8 };
+        assert_eq!(decode(encode(b)).unwrap(), b);
+        let j = Instr::Jal { rd: 0, imm: -1024 };
+        assert_eq!(decode(encode(j)).unwrap(), j);
+        let s = Instr::Store { op: StoreOp::Sb, rs2: 3, rs1: 4, imm: -2048 };
+        assert_eq!(decode(encode(s)).unwrap(), s);
+    }
+
+    #[test]
+    fn illegal_instructions_rejected() {
+        assert!(decode(0x0000_0000).is_err());
+        assert!(decode(0xffff_ffff).is_err());
+        // OP with bad funct7.
+        assert!(decode(0x4020_81b3 | (1 << 26)).is_err());
+    }
+
+    /// Exhaustive-ish round-trip over a deterministic pseudo-random sample
+    /// of the instruction space (property test without external deps).
+    #[test]
+    fn roundtrip_random_sample() {
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut rnd = move || {
+            // xorshift64*
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        };
+        let mut checked = 0;
+        for _ in 0..200_000 {
+            let w = rnd() as u32;
+            if let Ok(i) = decode(w) {
+                let w2 = encode(i);
+                let i2 = decode(w2).expect("re-decode");
+                assert_eq!(i, i2, "semantic roundtrip for {w:#010x}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 10_000, "sample too small: {checked}");
+    }
+}

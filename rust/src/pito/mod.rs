@@ -1,0 +1,41 @@
+//! Pito: the RISC-V barrel processor controlling the MVU array (§3.2).
+//!
+//! * RV32I base ISA plus Zicsr, `mret` and `wfi` — enough privilege support
+//!   to expose CSRs and interrupts to the MVU array, as in the paper.
+//! * **Barrel execution**: 8 hardware threads (harts), one per MVU. Each
+//!   clock cycle advances exactly one hart (`hart = cycle mod 8`), so the
+//!   5-stage pipeline is completely hidden and no branch prediction or
+//!   forwarding exists — each hart architecturally retires one instruction
+//!   every 8 cycles.
+//! * **Harvard memories**: 8 KiB instruction RAM and 8 KiB data RAM shared
+//!   by all harts.
+//! * The 74 MVU CSRs live outside the core: accesses in the custom CSR
+//!   space are delegated to a [`CsrBridge`] implemented by the accelerator
+//!   (each hart's accesses reach its own MVU's configuration registers).
+//!
+//! The module also ships the software side: a two-pass assembler and a
+//! disassembler for the full supported instruction set, used by the code
+//! generator (§3.3) to produce executable command streams.
+
+mod assembler;
+mod barrel;
+mod csr;
+mod disasm;
+mod hart;
+mod isa;
+
+pub use assembler::{assemble, AsmError};
+pub use barrel::{Barrel, BarrelConfig, ExitReason, NullBridge};
+pub use csr::{csr_name, CsrBridge, MVU_CSR_BASE, MVU_CSR_LAST};
+pub use disasm::disassemble;
+pub use hart::{Hart, Trap};
+pub use isa::{decode, encode, AluOp, BranchOp, CsrOp, Instr, LoadOp, StoreOp};
+
+/// Number of barrel harts (= number of MVUs).
+pub const NUM_HARTS: usize = 8;
+
+/// Instruction RAM size in bytes (§3.2: 8 KB each, shared between harts).
+pub const IRAM_BYTES: usize = 8 * 1024;
+
+/// Data RAM size in bytes.
+pub const DRAM_BYTES: usize = 8 * 1024;

@@ -1,0 +1,270 @@
+//! Bit-plane packing: the bit-transposed memory format of §3.1.2 / Fig. 3.
+//!
+//! A *block* is 64 elements. With precision `b`, the block is stored as `b`
+//! consecutive `u64` words: word 0 holds bit `b-1` (the MSB) of all 64
+//! elements, word `b-1` holds bit 0 (the LSB). Lane `l` of the block maps to
+//! bit `l` of each word.
+
+use super::BLOCK;
+
+/// Operand precision and signedness for one tensor (§3.1.1: bit-depth is set
+/// independently for weights and activations, 1..=16 bits each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Precision {
+    /// Number of bits, 1..=16.
+    pub bits: u8,
+    /// Two's-complement signed if true, unsigned otherwise.
+    pub signed: bool,
+}
+
+impl Precision {
+    /// Unsigned precision of `bits` bits.
+    pub const fn u(bits: u8) -> Self {
+        Precision { bits, signed: false }
+    }
+
+    /// Two's-complement signed precision of `bits` bits.
+    pub const fn s(bits: u8) -> Self {
+        Precision { bits, signed: true }
+    }
+
+    /// Smallest representable value.
+    pub fn min_value(self) -> i32 {
+        if self.signed {
+            -(1i32 << (self.bits - 1))
+        } else {
+            0
+        }
+    }
+
+    /// Largest representable value.
+    pub fn max_value(self) -> i32 {
+        if self.signed {
+            (1i32 << (self.bits - 1)) - 1
+        } else {
+            (1i32 << self.bits) - 1
+        }
+    }
+
+    /// Whether `v` is representable at this precision.
+    pub fn contains(self, v: i32) -> bool {
+        v >= self.min_value() && v <= self.max_value()
+    }
+
+    /// Clamp `v` into the representable range.
+    pub fn clamp(self, v: i32) -> i32 {
+        v.clamp(self.min_value(), self.max_value())
+    }
+
+    /// Sign of the contribution of bit-plane `j` (0 = LSB): `-1` for the sign
+    /// bit of a two's-complement operand, `+1` otherwise. This is what makes
+    /// the bit-serial scheme of Alg. 1 exact for signed operands:
+    /// `v = -v[b-1]·2^(b-1) + Σ_{j<b-1} v[j]·2^j`.
+    pub fn plane_sign(self, j: u8) -> i32 {
+        if self.signed && j == self.bits - 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    fn assert_valid(self) {
+        assert!(
+            (1..=16).contains(&self.bits),
+            "precision must be 1..=16 bits, got {}",
+            self.bits
+        );
+    }
+}
+
+/// Pack a block of 64 integer elements into `bits` bit-plane words,
+/// MSB-plane first (the memory order of Fig. 3).
+///
+/// Values must be representable at `prec`; signed values are stored as
+/// two's complement over `prec.bits` bits.
+pub fn pack_block(vals: &[i32; BLOCK], prec: Precision) -> Vec<u64> {
+    prec.assert_valid();
+    let mask = if prec.bits == 32 { u32::MAX } else { (1u32 << prec.bits) - 1 };
+    let mut words = vec![0u64; prec.bits as usize];
+    for (lane, &v) in vals.iter().enumerate() {
+        debug_assert!(
+            prec.contains(v),
+            "value {v} not representable at {prec:?}"
+        );
+        let enc = (v as u32) & mask; // two's complement truncation
+        for j in 0..prec.bits {
+            if (enc >> j) & 1 == 1 {
+                // word index: MSB plane (j = bits-1) at address 0.
+                words[(prec.bits - 1 - j) as usize] |= 1u64 << lane;
+            }
+        }
+    }
+    words
+}
+
+/// Inverse of [`pack_block`]: decode `bits` bit-plane words (MSB first) into
+/// 64 integers, sign-extending when `prec.signed`.
+pub fn unpack_block(words: &[u64], prec: Precision) -> [i32; BLOCK] {
+    prec.assert_valid();
+    assert_eq!(
+        words.len(),
+        prec.bits as usize,
+        "expected {} plane words, got {}",
+        prec.bits,
+        words.len()
+    );
+    let mut out = [0i32; BLOCK];
+    for lane in 0..BLOCK {
+        let mut enc: u32 = 0;
+        for j in 0..prec.bits {
+            let w = words[(prec.bits - 1 - j) as usize];
+            if (w >> lane) & 1 == 1 {
+                enc |= 1 << j;
+            }
+        }
+        // Sign-extend two's complement.
+        let v = if prec.signed && (enc >> (prec.bits - 1)) & 1 == 1 {
+            (enc | !((1u32 << prec.bits) - 1)) as i32
+        } else {
+            enc as i32
+        };
+        out[lane] = v;
+    }
+    out
+}
+
+/// A tensor stored in bit-transposed block format: a flat sequence of
+/// 64-element blocks, each occupying `prec.bits` plane words.
+///
+/// The logical element order (how tensor indices map to `(block, lane)`)
+/// is owned by the layout code in [`crate::codegen::layout`]; `BitTensor`
+/// is only the container.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitTensor {
+    /// Plane words, `blocks * prec.bits` of them, block-major, MSB-plane
+    /// first within each block.
+    pub words: Vec<u64>,
+    /// Number of 64-element blocks.
+    pub blocks: usize,
+    /// Element precision.
+    pub prec: Precision,
+}
+
+impl BitTensor {
+    /// Pack a flat slice of values (length must be a multiple of 64 after
+    /// zero-padding by the caller) into block bit-plane format.
+    pub fn pack(vals: &[i32], prec: Precision) -> Self {
+        assert!(
+            vals.len() % BLOCK == 0,
+            "BitTensor::pack needs a multiple of {BLOCK} values (pad first), got {}",
+            vals.len()
+        );
+        let blocks = vals.len() / BLOCK;
+        let mut words = Vec::with_capacity(blocks * prec.bits as usize);
+        for b in 0..blocks {
+            let mut block = [0i32; BLOCK];
+            block.copy_from_slice(&vals[b * BLOCK..(b + 1) * BLOCK]);
+            words.extend_from_slice(&pack_block(&block, prec));
+        }
+        BitTensor { words, blocks, prec }
+    }
+
+    /// Unpack back to a flat value vector of `blocks * 64` elements.
+    pub fn unpack(&self) -> Vec<i32> {
+        let b = self.prec.bits as usize;
+        let mut out = Vec::with_capacity(self.blocks * BLOCK);
+        for blk in 0..self.blocks {
+            let words = &self.words[blk * b..(blk + 1) * b];
+            out.extend_from_slice(&unpack_block(words, self.prec));
+        }
+        out
+    }
+
+    /// Number of plane words per block.
+    pub fn words_per_block(&self) -> usize {
+        self.prec.bits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip_unsigned() {
+        for bits in 1..=8u8 {
+            let prec = Precision::u(bits);
+            let vals: [i32; BLOCK] =
+                std::array::from_fn(|i| (i as i32 * 7 + 3) % (1 << bits));
+            let words = pack_block(&vals, prec);
+            assert_eq!(words.len(), bits as usize);
+            assert_eq!(unpack_block(&words, prec), vals);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_signed() {
+        for bits in 2..=8u8 {
+            let prec = Precision::s(bits);
+            let lo = prec.min_value();
+            let hi = prec.max_value();
+            let span = hi - lo + 1;
+            let vals: [i32; BLOCK] =
+                std::array::from_fn(|i| lo + ((i as i32 * 13 + 5) % span));
+            let words = pack_block(&vals, prec);
+            assert_eq!(unpack_block(&words, prec), vals);
+        }
+    }
+
+    #[test]
+    fn msb_plane_is_word_zero() {
+        // Element value 2 = 0b10 at 2 bits: MSB set, LSB clear.
+        let mut vals = [0i32; BLOCK];
+        vals[5] = 2;
+        let words = pack_block(&vals, Precision::u(2));
+        assert_eq!(words[0], 1 << 5, "word 0 must be the MSB plane");
+        assert_eq!(words[1], 0, "word 1 must be the LSB plane");
+    }
+
+    #[test]
+    fn signed_negative_encoding() {
+        // -1 at 2 bits signed = 0b11: both planes set.
+        let mut vals = [0i32; BLOCK];
+        vals[0] = -1;
+        vals[1] = -2; // 0b10
+        let words = pack_block(&vals, Precision::s(2));
+        assert_eq!(words[0] & 0b11, 0b11, "MSB plane: lanes 0 and 1");
+        assert_eq!(words[1] & 0b11, 0b01, "LSB plane: lane 0 only");
+    }
+
+    #[test]
+    fn plane_sign() {
+        let s = Precision::s(4);
+        assert_eq!(s.plane_sign(3), -1);
+        assert_eq!(s.plane_sign(2), 1);
+        let u = Precision::u(4);
+        assert_eq!(u.plane_sign(3), 1);
+    }
+
+    #[test]
+    fn bit_tensor_multiblock() {
+        let prec = Precision::u(3);
+        let vals: Vec<i32> = (0..3 * BLOCK as i32).map(|i| i % 8).collect();
+        let t = BitTensor::pack(&vals, prec);
+        assert_eq!(t.blocks, 3);
+        assert_eq!(t.words.len(), 9);
+        assert_eq!(t.unpack(), vals);
+    }
+
+    #[test]
+    fn precision_ranges() {
+        assert_eq!(Precision::u(2).max_value(), 3);
+        assert_eq!(Precision::s(2).min_value(), -2);
+        assert_eq!(Precision::s(2).max_value(), 1);
+        assert_eq!(Precision::s(8).min_value(), -128);
+        assert!(Precision::u(1).contains(1));
+        assert!(!Precision::u(1).contains(2));
+        assert_eq!(Precision::s(3).clamp(17), 3);
+        assert_eq!(Precision::s(3).clamp(-17), -4);
+    }
+}

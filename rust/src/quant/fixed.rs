@@ -1,0 +1,157 @@
+//! High-precision fixed-point arithmetic used by the post-MVP pipeline
+//! stages (§3.1.4): the 27×16 scaler multiplier, the 32-bit bias adder and
+//! the quantizer/serializer bit-select.
+//!
+//! All arithmetic is modelled with the same widths as the FPGA datapath:
+//! MVP accumulator and everything downstream is 32-bit two's complement;
+//! the scaler multiplies by a 16-bit unsigned operand (DSP48 27×16 port
+//! alignment) and the bias adder adds a 32-bit term.
+
+/// A 32-bit fixed-point value as carried between MVU pipeline stages.
+///
+/// The binary-point position is a software convention (held by the code
+/// generator / LSQ folding), not hardware state, so `Fixed` is a thin
+/// newtype used for documentation and checked arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Fixed(pub i32);
+
+impl Fixed {
+    /// Scaler stage: multiply by an unsigned 16-bit scale. The hardware
+    /// multiplier is 27×16 → we model the product in 64-bit and truncate to
+    /// the 32-bit pipeline width (wrapping, as the DSP cascade would).
+    pub fn scale(self, s: u16) -> Fixed {
+        Fixed(((self.0 as i64) * (s as i64)) as i32)
+    }
+
+    /// Bias stage: 32-bit wrapping add.
+    pub fn bias(self, b: i32) -> Fixed {
+        Fixed(self.0.wrapping_add(b))
+    }
+
+    /// ReLU as implemented by the Pool/ReLU comparator (compare against a
+    /// register initialised to 0).
+    pub fn relu(self) -> Fixed {
+        Fixed(self.0.max(0))
+    }
+}
+
+/// Saturate an i64 into i32 range (used for checked variants / golden).
+pub fn sat_i32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Quantizer/serializer configuration (§3.1.4, *QuantSer* in Fig. 1):
+/// select `out_bits` bits of the 32-bit input starting at `msb_index`
+/// (inclusive, counting from 0 = LSB), producing the requantized value that
+/// is serialized into bit-transposed output words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSerCfg {
+    /// Index of the most-significant selected bit (0..=31).
+    pub msb_index: u8,
+    /// Output precision in bits (1..=16).
+    pub out_bits: u8,
+    /// Saturate values outside the window instead of wrapping. The bit-select
+    /// alone wraps; with saturation enabled, inputs ≥ 2^(msb_index+1) clamp
+    /// to the max code and negative inputs clamp to 0 (outputs are unsigned,
+    /// the pipeline applies ReLU upstream for signed paths).
+    pub saturate: bool,
+}
+
+impl QuantSerCfg {
+    /// Right-shift amount implied by the window.
+    pub fn shift(&self) -> u8 {
+        assert!(self.out_bits >= 1 && self.out_bits <= 16);
+        assert!(self.msb_index >= self.out_bits - 1, "window underflows bit 0");
+        self.msb_index + 1 - self.out_bits
+    }
+}
+
+/// Apply the QuantSer bit-select to one 32-bit value, returning the unsigned
+/// output code (0 .. 2^out_bits − 1).
+pub fn quantser(v: i32, cfg: QuantSerCfg) -> u32 {
+    let shift = cfg.shift();
+    let max_code = (1u32 << cfg.out_bits) - 1;
+    if cfg.saturate {
+        if v < 0 {
+            return 0;
+        }
+        // Values with magnitude beyond the selected MSB clamp to max code.
+        let ceiling = if cfg.msb_index >= 31 {
+            i64::from(i32::MAX) + 1
+        } else {
+            1i64 << (cfg.msb_index + 1)
+        };
+        if i64::from(v) >= ceiling {
+            return max_code;
+        }
+    }
+    ((v as u32) >> shift) & max_code
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaler_is_64bit_product_truncated() {
+        assert_eq!(Fixed(3).scale(100).0, 300);
+        assert_eq!(Fixed(-3).scale(2).0, -6);
+        // Wrapping at 32 bits, like the hardware pipeline width.
+        assert_eq!(Fixed(1 << 30).scale(4).0, (1i64 << 32) as i32);
+    }
+
+    #[test]
+    fn bias_wraps() {
+        assert_eq!(Fixed(i32::MAX).bias(1).0, i32::MIN);
+        assert_eq!(Fixed(5).bias(-7).0, -2);
+    }
+
+    #[test]
+    fn relu() {
+        assert_eq!(Fixed(-5).relu().0, 0);
+        assert_eq!(Fixed(5).relu().0, 5);
+    }
+
+    #[test]
+    fn quantser_bit_select() {
+        // Select bits [5:4] of 0b110000 = 48 → 0b11 = 3.
+        let cfg = QuantSerCfg { msb_index: 5, out_bits: 2, saturate: false };
+        assert_eq!(quantser(48, cfg), 3);
+        // Bits [5:4] of 0b010000 = 16 → 0b01.
+        assert_eq!(quantser(16, cfg), 1);
+    }
+
+    #[test]
+    fn quantser_saturation() {
+        let cfg = QuantSerCfg { msb_index: 5, out_bits: 2, saturate: true };
+        // 64 ≥ 2^6 → clamps to 3 instead of wrapping to 0.
+        assert_eq!(quantser(64, cfg), 3);
+        assert_eq!(quantser(-1, cfg), 0);
+        let nosat = QuantSerCfg { saturate: false, ..cfg };
+        assert_eq!(quantser(64, nosat), 0, "without saturation the select wraps");
+    }
+
+    #[test]
+    fn quantser_full_width_window() {
+        let cfg = QuantSerCfg { msb_index: 31, out_bits: 8, saturate: true };
+        // Bit 31 of i32::MAX is 0, so the selected window [31:24] reads
+        // 0b0111_1111 — the select is exact, no clamping applies.
+        assert_eq!(quantser(i32::MAX, cfg), 127);
+        assert_eq!(quantser(0, cfg), 0);
+        // A window below the top bit does saturate on overflow.
+        let cfg = QuantSerCfg { msb_index: 30, out_bits: 8, saturate: true };
+        assert_eq!(quantser(i32::MAX, cfg), 255);
+    }
+
+    #[test]
+    fn shift_math() {
+        assert_eq!(QuantSerCfg { msb_index: 7, out_bits: 2, saturate: true }.shift(), 6);
+        assert_eq!(QuantSerCfg { msb_index: 1, out_bits: 2, saturate: true }.shift(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shift_underflow_panics() {
+        QuantSerCfg { msb_index: 0, out_bits: 2, saturate: true }.shift();
+    }
+}

@@ -1,0 +1,151 @@
+//! Folding LSQ-style quantization parameters into the MVU's integer
+//! pipeline (§3.1.4: "Combined with scaler units, this is used to implement
+//! quantization schemes such as LSQ").
+//!
+//! An LSQ layer computes `q = clamp(round(y / step), 0, 2^b − 1)` on the
+//! 32-bit convolution accumulator `y` (after folding batch-norm into a
+//! per-channel affine). The MVU realises this with
+//!
+//! ```text
+//! q = quantser( y * s + bias ,  msb_index = f + b − 1, out_bits = b )
+//!   = clamp( (y * s + bias) >> f , 0, 2^b − 1 )
+//! ```
+//!
+//! where `s` is the 16-bit scaler operand and `f` the implied right shift,
+//! chosen so `s / 2^f ≈ 1 / step`. The `bias` term carries the batch-norm
+//! shift (pre-multiplied by `s`) plus `2^(f-1)` for round-to-nearest.
+
+use super::fixed::QuantSerCfg;
+
+/// Per-channel LSQ requantization parameters in float form, as learned /
+/// exported by the Python side.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LsqParams {
+    /// Effective multiplier applied to the integer accumulator
+    /// (`w_step · a_step / out_step`, with any BN scale folded in).
+    pub multiplier: f64,
+    /// Additive term in *output-step* units (BN shift folded), applied
+    /// before rounding.
+    pub offset: f64,
+    /// Output precision in bits.
+    pub out_bits: u8,
+}
+
+/// Integer-folded requantization: the exact operands the MVU pipeline uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldedQuant {
+    /// 16-bit scaler RAM operand.
+    pub scale: u16,
+    /// 32-bit bias RAM operand (includes rounding constant).
+    pub bias: i32,
+    /// Quantizer/serializer window.
+    pub quantser: QuantSerCfg,
+}
+
+/// Fold float LSQ parameters into `(scale, bias, quantser)` integer form.
+///
+/// Picks the largest shift `f` such that `round(multiplier · 2^f)` still
+/// fits in 16 bits, maximising precision of the fixed-point multiplier.
+/// Returns an error if the multiplier is non-positive or too large to
+/// represent (≥ 2^16).
+pub fn fold_lsq(p: LsqParams) -> Result<FoldedQuant, String> {
+    if !(p.multiplier.is_finite() && p.multiplier > 0.0) {
+        return Err(format!("LSQ multiplier must be positive, got {}", p.multiplier));
+    }
+    if p.out_bits < 1 || p.out_bits > 16 {
+        return Err(format!("out_bits must be 1..=16, got {}", p.out_bits));
+    }
+    // Find f maximising scale precision: scale = round(m * 2^f) <= u16::MAX,
+    // and the quantser window f + out_bits - 1 must fit in 31 bits.
+    let mut best: Option<(u8, u16)> = None;
+    for f in 0..=(31 - p.out_bits) {
+        let s = (p.multiplier * (1u64 << f) as f64).round();
+        if s >= 1.0 && s <= u16::MAX as f64 {
+            best = Some((f, s as u16));
+        }
+    }
+    let (f, scale) = best.ok_or_else(|| {
+        format!("multiplier {} not representable as u16/2^f", p.multiplier)
+    })?;
+    // bias = offset·2^f (offset is in output-step units, i.e. already divided
+    // by out_step) plus the round-to-nearest half-ulp of the shift.
+    let round_half = if f > 0 { 1i64 << (f - 1) } else { 0 };
+    let bias64 = (p.offset * (1u64 << f) as f64).round() as i64 + round_half;
+    if bias64 > i32::MAX as i64 || bias64 < i32::MIN as i64 {
+        return Err(format!("folded bias {bias64} overflows i32"));
+    }
+    Ok(FoldedQuant {
+        scale,
+        bias: bias64 as i32,
+        quantser: QuantSerCfg {
+            msb_index: f + p.out_bits - 1,
+            out_bits: p.out_bits,
+            saturate: true,
+        },
+    })
+}
+
+/// Reference float requantization (what the folded path approximates):
+/// `clamp(round(y·m + o), 0, 2^b−1)`.
+pub fn lsq_reference(y: i32, p: LsqParams) -> u32 {
+    let q = (y as f64 * p.multiplier + p.offset).round();
+    let max = ((1u32 << p.out_bits) - 1) as f64;
+    q.clamp(0.0, max) as u32
+}
+
+/// Apply the folded integer path (scaler → bias → ReLU → quantser), exactly
+/// as the MVU pipeline does.
+pub fn lsq_folded(y: i32, fq: FoldedQuant) -> u32 {
+    use super::fixed::{quantser, Fixed};
+    let v = Fixed(y).scale(fq.scale).bias(fq.bias).relu();
+    quantser(v.0, fq.quantser)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_power_of_two() {
+        // multiplier 1/64 → scale 2^k / 2^(k+6).
+        let p = LsqParams { multiplier: 1.0 / 64.0, offset: 0.0, out_bits: 2 };
+        let fq = fold_lsq(p).unwrap();
+        // Exact: folded equals reference on all accumulator values in range.
+        for y in -200..200 {
+            assert_eq!(lsq_folded(y, fq), lsq_reference(y, p), "y={y}");
+        }
+    }
+
+    #[test]
+    fn fold_awkward_multiplier_close_to_reference() {
+        let p = LsqParams { multiplier: 0.0123, offset: 1.3, out_bits: 4 };
+        let fq = fold_lsq(p).unwrap();
+        let mut mismatches = 0;
+        for y in -2000..2000 {
+            let a = lsq_folded(y, fq) as i64;
+            let b = lsq_reference(y, p) as i64;
+            // Fixed-point rounding may differ by at most 1 code at decision
+            // boundaries.
+            assert!((a - b).abs() <= 1, "y={y}: folded={a} ref={b}");
+            if a != b {
+                mismatches += 1;
+            }
+        }
+        assert!(mismatches < 20, "too many boundary mismatches: {mismatches}");
+    }
+
+    #[test]
+    fn fold_rejects_bad_multipliers() {
+        assert!(fold_lsq(LsqParams { multiplier: 0.0, offset: 0.0, out_bits: 2 }).is_err());
+        assert!(fold_lsq(LsqParams { multiplier: -1.0, offset: 0.0, out_bits: 2 }).is_err());
+        assert!(fold_lsq(LsqParams { multiplier: 1e9, offset: 0.0, out_bits: 2 }).is_err());
+    }
+
+    #[test]
+    fn saturation_at_max_code() {
+        let p = LsqParams { multiplier: 1.0, offset: 0.0, out_bits: 2 };
+        let fq = fold_lsq(p).unwrap();
+        assert_eq!(lsq_folded(1000, fq), 3);
+        assert_eq!(lsq_folded(-5, fq), 0);
+    }
+}

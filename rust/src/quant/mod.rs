@@ -1,0 +1,18 @@
+//! Fixed-point numerics and the paper's bit-plane / bit-transposed data
+//! formats (§3.1.2, Fig. 3).
+//!
+//! The MVU computes on operands of 1–16 bits, unsigned or two's-complement
+//! signed. Tensors are stored *bit-transposed*: a block of 64 elements with
+//! precision `b` occupies `b` consecutive 64-bit memory words, one word per
+//! bit position, **MSB first** (lowest address).
+
+mod bitplane;
+mod fixed;
+mod lsq;
+
+pub use bitplane::{pack_block, unpack_block, BitTensor, Precision};
+pub use fixed::{quantser, sat_i32, Fixed, QuantSerCfg};
+pub use lsq::{fold_lsq, LsqParams};
+
+/// Vector width of every MVU block (64 lanes).
+pub const BLOCK: usize = 64;

@@ -1,0 +1,104 @@
+//! Artifact store: locates the `artifacts/` directory produced by
+//! `make artifacts` and loads the model graph and cross-language test
+//! vectors it contains.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::model::json::{parse, Value};
+use crate::model::Model;
+
+/// Handle to the artifacts directory.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+/// Cross-language test vectors exported by `python/compile/aot.py`: the
+/// seams of the split execution (image → conv0 codes → final acts → logits).
+#[derive(Debug, Clone)]
+pub struct TestVectors {
+    pub image: Vec<f32>,
+    pub image_shape: Vec<usize>,
+    pub conv0_q: Vec<i32>,
+    pub conv0_q_shape: Vec<usize>,
+    pub final_acts: Vec<i32>,
+    pub final_acts_shape: Vec<usize>,
+    pub golden_logits: Vec<f32>,
+    pub act_step: f32,
+}
+
+impl ArtifactStore {
+    /// Open `dir`, or search upward from the current directory for an
+    /// `artifacts/` folder when `dir` is `None`.
+    pub fn open(dir: Option<&Path>) -> Result<Self> {
+        if let Some(d) = dir {
+            if d.join("model.json").exists() {
+                return Ok(ArtifactStore { dir: d.to_path_buf() });
+            }
+            return Err(anyhow!("{} has no model.json — run `make artifacts`", d.display()));
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("model.json").exists() {
+                return Ok(ArtifactStore { dir: cand });
+            }
+            if !cur.pop() {
+                return Err(anyhow!(
+                    "no artifacts/ directory found — run `make artifacts` first"
+                ));
+            }
+        }
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load the ONNX-lite model graph.
+    pub fn model(&self) -> Result<Model> {
+        crate::model::load_model_json(&self.dir.join("model.json")).map_err(|e| anyhow!(e))
+    }
+
+    /// Load the test vectors.
+    pub fn test_vectors(&self) -> Result<TestVectors> {
+        let src = std::fs::read_to_string(self.dir.join("testvec.json"))
+            .context("reading testvec.json")?;
+        let v = parse(&src).map_err(|e| anyhow!("{e}"))?;
+        fn f32s(v: &Value, key: &str) -> Result<Vec<f32>> {
+            Ok(v.req(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_array()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+                .collect())
+        }
+        fn i32s(v: &Value, key: &str) -> Result<Vec<i32>> {
+            Ok(v.req(key)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_i64_vec()
+                .map_err(|e| anyhow!("{e}"))?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect())
+        }
+        fn dims(v: &Value, key: &str) -> Result<Vec<usize>> {
+            Ok(i32s(v, key)?.into_iter().map(|x| x as usize).collect())
+        }
+        Ok(TestVectors {
+            image: f32s(&v, "image")?,
+            image_shape: dims(&v, "image_shape")?,
+            conv0_q: i32s(&v, "conv0_q")?,
+            conv0_q_shape: dims(&v, "conv0_q_shape")?,
+            final_acts: i32s(&v, "final_acts")?,
+            final_acts_shape: dims(&v, "final_acts_shape")?,
+            golden_logits: f32s(&v, "golden_logits")?,
+            act_step: v
+                .req("act_step")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_f64()
+                .ok_or_else(|| anyhow!("act_step"))? as f32,
+        })
+    }
+}

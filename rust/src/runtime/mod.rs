@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled JAX artifacts (`artifacts/*.hlo.txt`)
+//! and executes them from Rust — the host-side compute path of the system
+//! (first/last layers per §4.1, the golden oracle, and the L1 kernel tile).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md). All modules
+//! are lowered with `return_tuple=True`, so results unwrap with
+//! `to_tuple1()`.
+
+mod artifacts;
+mod pjrt;
+
+pub use artifacts::{ArtifactStore, TestVectors};
+pub use pjrt::{HostModule, Runtime};

@@ -1,0 +1,87 @@
+//! Thin, typed wrapper over the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus the executables loaded through it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module ready to execute.
+pub struct HostModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<HostModule> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HostModule {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl HostModule {
+    fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        // Modules are lowered with return_tuple=True.
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Execute with one f32 input tensor, returning f32 outputs.
+    pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        Ok(self.run(&[lit])?.to_vec::<f32>()?)
+    }
+
+    /// Execute with one f32 input, returning i32 outputs (e.g. conv0 codes).
+    pub fn run_f32_to_i32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<i32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        Ok(self.run(&[lit])?.to_vec::<i32>()?)
+    }
+
+    /// Execute with one i32 input, returning f32 outputs (e.g. the fc head).
+    pub fn run_i32_to_f32(&self, input: &[i32], dims: &[i64]) -> Result<Vec<f32>> {
+        let lit = xla::Literal::vec1(input).reshape(dims)?;
+        Ok(self.run(&[lit])?.to_vec::<f32>()?)
+    }
+
+    /// Execute with two i32 inputs, returning i32 (the bit-serial tile).
+    pub fn run_i32x2(
+        &self,
+        a: (&[i32], &[i64]),
+        b: (&[i32], &[i64]),
+    ) -> Result<Vec<i32>> {
+        let la = xla::Literal::vec1(a.0).reshape(a.1)?;
+        let lb = xla::Literal::vec1(b.0).reshape(b.1)?;
+        Ok(self.run(&[la, lb])?.to_vec::<i32>()?)
+    }
+}

@@ -1,0 +1,237 @@
+//! Plain-integer golden reference operators.
+//!
+//! Everything here is deliberately naive and obviously-correct: nested loops
+//! over `i64` accumulators, then checked truncation. The MVU simulator, the
+//! Pallas kernel (via the exported HLO artifacts) and the code generator are
+//! all validated against these functions.
+
+use crate::quant::{quantser, Fixed, QuantSerCfg};
+
+/// A dense CHW tensor of i32 values (channel-major, matching the golden
+/// conv convention; the accelerator-side NHWC/blocked layouts are produced
+/// by [`crate::codegen::layout`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i32>, // c * h * w, index = (ch * h + y) * w + x
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor3 { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    pub fn from_fn(c: usize, h: usize, w: usize, mut f: impl FnMut(usize, usize, usize) -> i32) -> Self {
+        let mut t = Tensor3::zeros(c, h, w);
+        for ch in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    t.set(ch, y, x, f(ch, y, x));
+                }
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn get(&self, ch: usize, y: usize, x: usize) -> i32 {
+        self.data[(ch * self.h + y) * self.w + x]
+    }
+
+    /// Zero-padded read: out-of-bounds coordinates return 0 (conv padding).
+    #[inline]
+    pub fn get_padded(&self, ch: usize, y: isize, x: isize) -> i32 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0
+        } else {
+            self.get(ch, y as usize, x as usize)
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, ch: usize, y: usize, x: usize, v: i32) {
+        self.data[(ch * self.h + y) * self.w + x] = v;
+    }
+}
+
+/// 2-D convolution geometry. Weights are indexed `[co][ci][fy][fx]` flat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub ci: usize,
+    pub co: usize,
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl Conv2dSpec {
+    pub fn out_h(&self, in_h: usize) -> usize {
+        (in_h + 2 * self.pad - self.fh) / self.stride + 1
+    }
+    pub fn out_w(&self, in_w: usize) -> usize {
+        (in_w + 2 * self.pad - self.fw) / self.stride + 1
+    }
+    pub fn weight_len(&self) -> usize {
+        self.co * self.ci * self.fh * self.fw
+    }
+    #[inline]
+    pub fn widx(&self, co: usize, ci: usize, fy: usize, fx: usize) -> usize {
+        ((co * self.ci + ci) * self.fh + fy) * self.fw + fx
+    }
+}
+
+/// Golden integer conv2d: i64 accumulation, panics on i32 overflow (the
+/// hardware accumulator is 32-bit; generated workloads must stay in range).
+pub fn conv2d_i32(input: &Tensor3, weights: &[i32], spec: Conv2dSpec) -> Tensor3 {
+    assert_eq!(input.c, spec.ci, "input channels mismatch");
+    assert_eq!(weights.len(), spec.weight_len(), "weight length mismatch");
+    let oh = spec.out_h(input.h);
+    let ow = spec.out_w(input.w);
+    let mut out = Tensor3::zeros(spec.co, oh, ow);
+    for co in 0..spec.co {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i64 = 0;
+                for ci in 0..spec.ci {
+                    for fy in 0..spec.fh {
+                        for fx in 0..spec.fw {
+                            let iy = (oy * spec.stride + fy) as isize - spec.pad as isize;
+                            let ix = (ox * spec.stride + fx) as isize - spec.pad as isize;
+                            let a = input.get_padded(ci, iy, ix) as i64;
+                            let w = weights[spec.widx(co, ci, fy, fx)] as i64;
+                            acc += a * w;
+                        }
+                    }
+                }
+                assert!(
+                    acc >= i32::MIN as i64 && acc <= i32::MAX as i64,
+                    "accumulator overflow at co={co} oy={oy} ox={ox}: {acc}"
+                );
+                out.set(co, oy, ox, acc as i32);
+            }
+        }
+    }
+    out
+}
+
+/// Golden GEMV: `y = W·x`, `W` is `rows × cols` row-major.
+pub fn gemv_i32(w: &[i32], x: &[i32], rows: usize, cols: usize) -> Vec<i32> {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    (0..rows)
+        .map(|r| {
+            let acc: i64 = (0..cols).map(|c| w[r * cols + c] as i64 * x[c] as i64).sum();
+            assert!(acc >= i32::MIN as i64 && acc <= i32::MAX as i64, "gemv overflow");
+            acc as i32
+        })
+        .collect()
+}
+
+/// Golden 2×2 (or k×k) max pooling with stride = kernel.
+pub fn maxpool2d_i32(input: &Tensor3, k: usize) -> Tensor3 {
+    assert!(input.h % k == 0 && input.w % k == 0, "pooling needs divisible dims");
+    let mut out = Tensor3::zeros(input.c, input.h / k, input.w / k);
+    for c in 0..input.c {
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                let mut m = i32::MIN;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        m = m.max(input.get(c, oy * k + dy, ox * k + dx));
+                    }
+                }
+                out.set(c, oy, ox, m);
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise ReLU.
+pub fn relu_i32(t: &Tensor3) -> Tensor3 {
+    Tensor3 { c: t.c, h: t.h, w: t.w, data: t.data.iter().map(|&v| v.max(0)).collect() }
+}
+
+/// Golden requantization: per-channel scaler multiply, bias add, ReLU and
+/// QuantSer bit-select — the exact integer pipeline of §3.1.4, applied to a
+/// whole tensor. `scale[c]` / `bias[c]` are per output channel.
+pub fn requant_i32(t: &Tensor3, scale: &[u16], bias: &[i32], cfg: QuantSerCfg, relu: bool) -> Tensor3 {
+    assert_eq!(scale.len(), t.c);
+    assert_eq!(bias.len(), t.c);
+    let mut out = Tensor3::zeros(t.c, t.h, t.w);
+    for c in 0..t.c {
+        for y in 0..t.h {
+            for x in 0..t.w {
+                let mut v = Fixed(t.get(c, y, x)).scale(scale[c]).bias(bias[c]);
+                if relu {
+                    v = v.relu();
+                }
+                out.set(c, y, x, quantser(v.0, cfg) as i32);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input.
+        let input = Tensor3::from_fn(2, 3, 3, |c, y, x| (c * 9 + y * 3 + x) as i32);
+        let spec = Conv2dSpec { ci: 2, co: 2, fh: 1, fw: 1, stride: 1, pad: 0 };
+        let mut w = vec![0i32; spec.weight_len()];
+        w[spec.widx(0, 0, 0, 0)] = 1;
+        w[spec.widx(1, 1, 0, 0)] = 1;
+        let out = conv2d_i32(&input, &w, spec);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn conv_padding_and_stride() {
+        // All-ones 3x3 kernel over all-ones 4x4 input, pad 1, stride 1:
+        // interior = 9, edges = 6, corners = 4.
+        let input = Tensor3::from_fn(1, 4, 4, |_, _, _| 1);
+        let spec = Conv2dSpec { ci: 1, co: 1, fh: 3, fw: 3, stride: 1, pad: 1 };
+        let w = vec![1i32; 9];
+        let out = conv2d_i32(&input, &w, spec);
+        assert_eq!(out.get(0, 1, 1), 9);
+        assert_eq!(out.get(0, 0, 1), 6);
+        assert_eq!(out.get(0, 0, 0), 4);
+        // Stride 2 halves the output.
+        let spec2 = Conv2dSpec { stride: 2, ..spec };
+        let out2 = conv2d_i32(&input, &w, spec2);
+        assert_eq!((out2.h, out2.w), (2, 2));
+        assert_eq!(out2.get(0, 0, 0), 4);
+        assert_eq!(out2.get(0, 1, 1), 9);
+    }
+
+    #[test]
+    fn gemv_small() {
+        // [[1,2],[3,4]] · [5,6] = [17, 39]
+        assert_eq!(gemv_i32(&[1, 2, 3, 4], &[5, 6], 2, 2), vec![17, 39]);
+    }
+
+    #[test]
+    fn maxpool() {
+        let t = Tensor3::from_fn(1, 4, 4, |_, y, x| (y * 4 + x) as i32);
+        let p = maxpool2d_i32(&t, 2);
+        assert_eq!(p.get(0, 0, 0), 5);
+        assert_eq!(p.get(0, 1, 1), 15);
+    }
+
+    #[test]
+    fn requant_pipeline() {
+        let t = Tensor3::from_fn(1, 1, 4, |_, _, x| [-64, 0, 64, 512][x]);
+        let cfg = QuantSerCfg { msb_index: 7, out_bits: 2, saturate: true };
+        // scale 1, bias 0, relu: -64→0, 0→0, 64→(64>>6)=1, 512→sat 3.
+        let out = requant_i32(&t, &[1], &[0], cfg, true);
+        assert_eq!(&out.data, &[0, 0, 1, 3]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Golden functional models: plain integer implementations of every
+//! operation the MVU accelerates, used as the correctness oracle for the
+//! bit-/cycle-accurate simulator and the code generator.
+
+mod golden;
+
+pub use golden::{
+    conv2d_i32, gemv_i32, maxpool2d_i32, relu_i32, requant_i32, Conv2dSpec, Tensor3,
+};

@@ -1,0 +1,141 @@
+//! Integration: the full quantized ResNet9 through the pito-driven 8-MVU
+//! pipeline at real 32×32 scale, verified bit-exactly against the Rust
+//! golden model, plus Table-3 cycle accounting.
+//!
+//! Heavy paths are release-only (`make test` runs `cargo test --release`);
+//! under debug they downscale to keep `cargo test` responsive.
+
+use barvinn::accel::{System, SystemConfig, SystemExit};
+use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::model::zoo::{resnet9_cifar10, Rng};
+use barvinn::model::Model;
+use barvinn::quant::QuantSerCfg;
+use barvinn::sim::{conv2d_i32, requant_i32, Tensor3};
+
+fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
+    let mut t = input.clone();
+    for l in &model.layers {
+        let acc = conv2d_i32(&t, &l.weights, l.spec());
+        t = requant_i32(
+            &acc,
+            &l.quant.scale,
+            &l.quant.bias,
+            QuantSerCfg {
+                msb_index: l.quant.quant_msb,
+                out_bits: l.oprec.bits,
+                saturate: true,
+            },
+            l.relu,
+        );
+    }
+    t
+}
+
+fn model_under_test() -> Model {
+    let mut m = resnet9_cifar10(2, 2);
+    if cfg!(debug_assertions) {
+        // Downscale spatially (keeps all 8 layers + channel widths).
+        let mut h = 16;
+        for l in &mut m.layers {
+            l.in_h = h;
+            l.in_w = h;
+            if l.stride == 2 {
+                h /= 2;
+            }
+        }
+    }
+    m.validate().unwrap();
+    m
+}
+
+#[test]
+fn pipelined_full_resnet9_bit_exact() {
+    let m = model_under_test();
+    let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+    let mut sys = System::new(SystemConfig::default());
+    let mut rng = Rng(2026);
+    let l0 = &m.layers[0];
+    let input = Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| rng.range_i32(0, 3));
+    compiled.load_into(&mut sys, &input);
+    let exit = sys.run();
+    assert_eq!(exit, SystemExit::AllExited, "{:?}", sys.launch_errors());
+    let got = compiled.read_output(&sys, m.layers.last().unwrap().co);
+    assert_eq!(got, golden_forward(&m, &input), "accelerator != golden");
+    assert_eq!(sys.total_mvu_busy_cycles(), compiled.total_analytic_cycles());
+}
+
+#[test]
+fn table3_cycles_full_scale() {
+    // Analytic accounting at real scale is cheap in any build mode.
+    let m = resnet9_cifar10(2, 2);
+    let expected = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
+    for (l, &want) in m.layers.iter().zip(&expected) {
+        assert_eq!(
+            barvinn::codegen::layer_cycles(l, EdgePolicy::SkipEdges),
+            want,
+            "{}",
+            l.name
+        );
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only (make test): full 32x32 measured run")]
+fn table3_cycles_measured_full_scale() {
+    let m = resnet9_cifar10(2, 2);
+    let compiled = compile_pipelined(&m, EdgePolicy::SkipEdges).unwrap();
+    let mut sys = System::new(SystemConfig::default());
+    let mut rng = Rng(7);
+    let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
+    compiled.load_into(&mut sys, &input);
+    assert_eq!(sys.run(), SystemExit::AllExited);
+    let expected = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
+    for (h, &want) in expected.iter().enumerate() {
+        assert_eq!(sys.mvus[h].busy_cycles(), want, "layer {h}");
+    }
+    assert_eq!(sys.total_mvu_busy_cycles(), 194_688, "Table 3 total");
+}
+
+#[test]
+fn mixed_precision_pipeline() {
+    // 1-bit weights / 2-bit activations end-to-end (precision is per-MVU
+    // runtime state).
+    let mut m = resnet9_cifar10(2, 1);
+    let mut h = 8;
+    for l in &mut m.layers {
+        l.in_h = h;
+        l.in_w = h;
+        if l.stride == 2 {
+            h /= 2;
+        }
+    }
+    m.layers.truncate(5);
+    m.validate().unwrap();
+    let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+    let mut sys = System::new(SystemConfig::default());
+    let mut rng = Rng(11);
+    let input = Tensor3::from_fn(64, 8, 8, |_, _, _| rng.range_i32(0, 3));
+    compiled.load_into(&mut sys, &input);
+    assert_eq!(sys.run(), SystemExit::AllExited);
+    let got = compiled.read_output(&sys, m.layers.last().unwrap().co);
+    assert_eq!(got, golden_forward(&m, &input));
+    // Half the cycles of the 2/2 configuration.
+    let m22 = {
+        let mut m22 = resnet9_cifar10(2, 2);
+        let mut h = 8;
+        for l in &mut m22.layers {
+            l.in_h = h;
+            l.in_w = h;
+            if l.stride == 2 {
+                h /= 2;
+            }
+        }
+        m22.layers.truncate(5);
+        m22
+    };
+    let c22 = compile_pipelined(&m22, EdgePolicy::PadInRam).unwrap();
+    assert_eq!(
+        compiled.total_analytic_cycles() * 2,
+        c22.total_analytic_cycles()
+    );
+}

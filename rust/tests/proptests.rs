@@ -1,0 +1,269 @@
+//! Randomized cross-module property tests (proptest-style; driven by the
+//! crate-local deterministic RNG since proptest is not in the offline
+//! vendor set). Each test sweeps many random cases of the *whole* path —
+//! random layer geometry → layout → job generation → cycle-accurate
+//! simulation → golden integer reference.
+
+use barvinn::accel::{System, SystemConfig};
+use barvinn::codegen::layout::{load_scaler_bias, ActLayout, WeightLayout};
+use barvinn::codegen::{conv_jobs, layer_cycles, EdgePolicy};
+use barvinn::model::zoo::Rng;
+use barvinn::model::{ConvLayer, QuantSpec};
+use barvinn::quant::{pack_block, unpack_block, BitTensor, Precision, QuantSerCfg};
+use barvinn::sim::{conv2d_i32, requant_i32, Tensor3};
+
+fn random_layer(rng: &mut Rng, case: u64) -> ConvLayer {
+    let ci = [64usize, 80, 128, 192][(rng.next_u64() % 4) as usize];
+    let co = [64usize, 70, 128][(rng.next_u64() % 3) as usize];
+    let stride = 1 + (rng.next_u64() % 2) as usize;
+    let in_h = 4 + (rng.next_u64() % 5) as usize; // 4..=8
+    let a_bits = 1 + (rng.next_u64() % 3) as u8; // 1..=3
+    let w_bits = 1 + (rng.next_u64() % 3) as u8;
+    let wprec = Precision::s(w_bits.max(1));
+    ConvLayer {
+        name: format!("prop{case}"),
+        ci,
+        co,
+        fh: 3,
+        fw: 3,
+        stride,
+        pad: 1,
+        in_h,
+        in_w: in_h,
+        aprec: Precision::u(a_bits),
+        wprec,
+        oprec: Precision::u(a_bits),
+        relu: rng.next_u64() % 2 == 0,
+        weights: (0..co * ci * 9)
+            .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+            .collect(),
+        quant: QuantSpec {
+            scale: (0..co).map(|_| rng.range_i32(1, 5) as u16).collect(),
+            bias: (0..co).map(|_| rng.range_i32(-100, 100)).collect(),
+            quant_msb: 10 + (rng.next_u64() % 6) as u8,
+        },
+    }
+}
+
+/// The big one: random conv layers end-to-end on the simulator vs golden.
+#[test]
+fn random_conv_layers_match_golden() {
+    let mut rng = Rng(0xDEC0DE);
+    let cases = if cfg!(debug_assertions) { 8 } else { 24 };
+    for case in 0..cases {
+        let layer = random_layer(&mut rng, case);
+        let policy = if rng.next_u64() % 2 == 0 {
+            EdgePolicy::PadInRam
+        } else {
+            EdgePolicy::SkipEdges
+        };
+        if layer.full_rows() == 0 {
+            continue;
+        }
+        let in_l = ActLayout {
+            base: 0,
+            h: layer.in_h,
+            w: layer.in_w,
+            pad: 1,
+            pad_rows: policy == EdgePolicy::PadInRam,
+            cb: layer.ci_blocks(),
+            prec: layer.aprec,
+        };
+        let out_l = ActLayout {
+            base: 16384,
+            h: layer.out_h(),
+            w: layer.out_w(),
+            pad: 0,
+            pad_rows: false,
+            cb: layer.co_sets(),
+            prec: layer.oprec,
+        };
+        let w_l = WeightLayout {
+            base: 0,
+            cos: layer.co_sets(),
+            fh: 3,
+            fw: 3,
+            cb: layer.ci_blocks(),
+            prec: layer.wprec,
+        };
+        let mut sys = System::new(SystemConfig::default());
+        let input = Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| {
+            rng.range_i32(0, layer.aprec.max_value())
+        });
+        in_l.load(&mut sys.mvus[0].act, &input);
+        w_l.load(&mut sys.mvus[0].weights, &layer.weights, layer.ci, layer.co);
+        load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
+
+        let jobs = conv_jobs(&layer, &in_l, &out_l, &w_l, 0, 0, None, policy);
+        let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j)).sum();
+        assert_eq!(measured, layer_cycles(&layer, policy), "case {case} cycles");
+
+        let got = out_l.read(&sys.mvus[0].act, layer.co);
+        let acc = conv2d_i32(&input, &layer.weights, layer.spec());
+        let want = requant_i32(
+            &acc,
+            &layer.quant.scale,
+            &layer.quant.bias,
+            QuantSerCfg {
+                msb_index: layer.quant.quant_msb,
+                out_bits: layer.oprec.bits,
+                saturate: true,
+            },
+            layer.relu,
+        );
+        let r0 = barvinn::codegen::conv2d::global_row(&layer, policy, 0);
+        let rows = barvinn::codegen::conv2d::rows_computed(&layer, policy);
+        for c in 0..layer.co {
+            for y in r0..r0 + rows {
+                for x in 0..layer.out_w() {
+                    assert_eq!(
+                        got.get(c, y, x),
+                        want.get(c, y, x),
+                        "case {case} ({policy:?}) c={c} y={y} x={x}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Bit-plane pack/unpack roundtrip over random precisions and values.
+#[test]
+fn random_bitplane_roundtrips() {
+    let mut rng = Rng(0xB17);
+    for _ in 0..500 {
+        let bits = 1 + (rng.next_u64() % 16) as u8;
+        let signed = rng.next_u64() % 2 == 0 && bits >= 2;
+        let prec = Precision { bits, signed };
+        let vals: [i32; 64] = std::array::from_fn(|_| {
+            rng.range_i32(prec.min_value(), prec.max_value())
+        });
+        assert_eq!(unpack_block(&pack_block(&vals, prec), prec), vals);
+    }
+    // Multi-block tensors too.
+    for _ in 0..50 {
+        let bits = 1 + (rng.next_u64() % 8) as u8;
+        let prec = Precision::u(bits);
+        let n = 64 * (1 + (rng.next_u64() % 5) as usize);
+        let vals: Vec<i32> = (0..n).map(|_| rng.range_i32(0, prec.max_value())).collect();
+        assert_eq!(BitTensor::pack(&vals, prec).unpack(), vals);
+    }
+}
+
+/// Layout image/read roundtrip over random geometries.
+#[test]
+fn random_act_layout_roundtrips() {
+    let mut rng = Rng(0x1A10);
+    for _ in 0..60 {
+        let c = 1 + (rng.next_u64() % 200) as usize;
+        let h = 1 + (rng.next_u64() % 8) as usize;
+        let w = 1 + (rng.next_u64() % 8) as usize;
+        let bits = 1 + (rng.next_u64() % 4) as u8;
+        let l = ActLayout {
+            base: (rng.next_u64() % 100) as u32,
+            h,
+            w,
+            pad: (rng.next_u64() % 2) as usize,
+            pad_rows: rng.next_u64() % 2 == 0,
+            cb: c.div_ceil(64),
+            prec: Precision::u(bits),
+        };
+        let t = Tensor3::from_fn(c, h, w, |_, _, _| rng.range_i32(0, (1 << bits) - 1));
+        let mut ram = barvinn::mvu::ActRam::new((l.base + l.size_words()) as usize);
+        l.load(&mut ram, &t);
+        assert_eq!(l.read(&ram, c), t);
+    }
+}
+
+/// Fault injection: flipping any single weight bit must change some output
+/// (the simulator genuinely reads every weight plane it is billed for).
+#[test]
+fn weight_bit_flip_changes_output() {
+    let mut rng = Rng(0xFA11);
+    let layer = ConvLayer {
+        name: "fault".into(),
+        ci: 64,
+        co: 64,
+        fh: 3,
+        fw: 3,
+        stride: 1,
+        pad: 1,
+        in_h: 4,
+        in_w: 4,
+        aprec: Precision::u(2),
+        wprec: Precision::s(2),
+        // Full-width window (msb 15, 16 bits, shift 0) with a centring bias
+        // keeps every accumulator inside the unclamped region, so *any*
+        // accumulator change is visible in the output.
+        oprec: Precision::u(16),
+        relu: false,
+        weights: (0..64 * 64 * 9).map(|_| rng.range_i32(-2, 1)).collect(),
+        quant: QuantSpec {
+            scale: vec![1; 64],
+            bias: vec![8192; 64],
+            quant_msb: 15,
+        },
+    };
+    let in_l = ActLayout {
+        base: 0,
+        h: 4,
+        w: 4,
+        pad: 1,
+        pad_rows: true,
+        cb: 1,
+        prec: layer.aprec,
+    };
+    let out_l = ActLayout {
+        base: 16384,
+        h: 4,
+        w: 4,
+        pad: 0,
+        pad_rows: false,
+        cb: 1,
+        prec: layer.oprec,
+    };
+    let w_l = WeightLayout { base: 0, cos: 1, fh: 3, fw: 3, cb: 1, prec: layer.wprec };
+    let input = Tensor3::from_fn(64, 4, 4, |_, _, _| rng.range_i32(1, 3));
+
+    let run = |weights: &[i32]| -> Tensor3 {
+        let mut sys = System::new(SystemConfig::default());
+        in_l.load(&mut sys.mvus[0].act, &input);
+        w_l.load(&mut sys.mvus[0].weights, weights, 64, 64);
+        load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
+        for j in conv_jobs(&layer, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::PadInRam) {
+            sys.run_job(0, j.clone());
+        }
+        out_l.read(&sys.mvus[0].act, 64)
+    };
+
+    let base = run(&layer.weights);
+    for _ in 0..10 {
+        let idx = (rng.next_u64() % layer.weights.len() as u64) as usize;
+        let mut mutated = layer.weights.clone();
+        // Flip between two representable values.
+        mutated[idx] = if mutated[idx] == 1 { -2 } else { mutated[idx] + 1 };
+        let out = run(&mutated);
+        assert_ne!(base, out, "flipping weight {idx} must perturb the output");
+    }
+}
+
+/// Assembler fuzz: random valid programs assemble, disassemble and
+/// re-assemble to identical words.
+#[test]
+fn assembler_fuzz_roundtrip() {
+    use barvinn::pito::{assemble, disassemble};
+    let mut rng = Rng(0xA53);
+    for _ in 0..2000 {
+        let w = rng.next_u64() as u32;
+        if barvinn::pito::decode(w).is_ok() {
+            let text = disassemble(barvinn::pito::encode(barvinn::pito::decode(w).unwrap()));
+            let re = assemble(&text).unwrap_or_else(|e| panic!("'{text}': {e}"));
+            assert_eq!(re.len(), 1);
+            assert_eq!(
+                barvinn::pito::decode(re[0]).unwrap(),
+                barvinn::pito::decode(w).unwrap(),
+                "via '{text}'"
+            );
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration over the PJRT runtime + AOT artifacts: every HLO module
+//! loads, executes and matches the Python-exported seams. Skips (with a
+//! notice) when `make artifacts` has not run.
+
+use barvinn::runtime::{ArtifactStore, Runtime};
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open(None) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn conv0_artifact_matches_python_seam() {
+    let Some(store) = store() else { return };
+    let tv = store.test_vectors().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let conv0 = rt.load_hlo_text(&store.hlo_path("conv0")).unwrap();
+    let q = conv0.run_f32_to_i32(&tv.image, &[1, 3, 32, 32]).unwrap();
+    assert_eq!(q, tv.conv0_q);
+    assert!(q.iter().all(|&v| (0..=3).contains(&v)), "2-bit codes");
+}
+
+#[test]
+fn fc_artifact_produces_golden_logits() {
+    let Some(store) = store() else { return };
+    let tv = store.test_vectors().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let fc = rt.load_hlo_text(&store.hlo_path("fc")).unwrap();
+    let logits = fc.run_i32_to_f32(&tv.final_acts, &[1, 512, 4, 4]).unwrap();
+    assert_eq!(logits.len(), 10);
+    for (a, b) in logits.iter().zip(&tv.golden_logits) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn golden_artifact_matches_python_logits() {
+    let Some(store) = store() else { return };
+    let tv = store.test_vectors().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let golden = rt.load_hlo_text(&store.hlo_path("golden")).unwrap();
+    let logits = golden.run_f32(&tv.image, &[1, 3, 32, 32]).unwrap();
+    for (a, b) in logits.iter().zip(&tv.golden_logits) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn bitserial_tile_artifact_equals_host_matmul() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let tile = rt.load_hlo_text(&store.hlo_path("bitserial_tile")).unwrap();
+    let mut rng = barvinn::model::zoo::Rng(13);
+    let x: Vec<i32> = (0..64 * 576).map(|_| rng.range_i32(0, 3)).collect();
+    let w: Vec<i32> = (0..576 * 64).map(|_| rng.range_i32(-2, 1)).collect();
+    let out = tile.run_i32x2((&x, &[64, 576]), (&w, &[576, 64])).unwrap();
+    // Full check against a host-side i64 matmul.
+    for m in 0..64 {
+        for n in 0..64 {
+            let want: i64 =
+                (0..576).map(|k| (x[m * 576 + k] * w[k * 64 + n]) as i64).sum();
+            assert_eq!(out[m * 64 + n] as i64, want, "({m},{n})");
+        }
+    }
+}
+
+#[test]
+fn model_json_loads_and_validates() {
+    let Some(store) = store() else { return };
+    if cfg!(debug_assertions) {
+        eprintln!("skipping 12 MB JSON parse in debug build (run `make test`)");
+        return;
+    }
+    let model = store.model().unwrap();
+    assert_eq!(model.layers.len(), 8);
+    assert_eq!(model.name, "resnet9-cifar10-w2a2");
+    assert_eq!(model.host_prologue.as_deref(), Some("conv0"));
+    // Table 3 cycles from the imported model too.
+    let total: u64 = model
+        .layers
+        .iter()
+        .map(|l| barvinn::codegen::layer_cycles(l, barvinn::codegen::EdgePolicy::SkipEdges))
+        .sum();
+    assert_eq!(total, 194_688);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "release-only (make test): full artifact e2e")]
+fn full_e2e_python_seams() {
+    // The same chain as examples/resnet9_e2e.rs, as a test.
+    let Some(store) = store() else { return };
+    let tv = store.test_vectors().unwrap();
+    let model = store.model().unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let conv0 = rt.load_hlo_text(&store.hlo_path("conv0")).unwrap();
+    let q = conv0.run_f32_to_i32(&tv.image, &[1, 3, 32, 32]).unwrap();
+    assert_eq!(q, tv.conv0_q);
+
+    let compiled = barvinn::codegen::compile_pipelined(
+        &model,
+        barvinn::codegen::EdgePolicy::PadInRam,
+    )
+    .unwrap();
+    let mut sys = barvinn::accel::System::new(Default::default());
+    let input = barvinn::sim::Tensor3 { c: 64, h: 32, w: 32, data: q };
+    compiled.load_into(&mut sys, &input);
+    assert_eq!(sys.run(), barvinn::accel::SystemExit::AllExited);
+    let acts = compiled.read_output(&sys, 512);
+    assert_eq!(acts.data, tv.final_acts, "MVU array != python middle");
+
+    let fc = rt.load_hlo_text(&store.hlo_path("fc")).unwrap();
+    let logits = fc.run_i32_to_f32(&acts.data, &[1, 512, 4, 4]).unwrap();
+    for (a, b) in logits.iter().zip(&tv.golden_logits) {
+        assert!((a - b).abs() < 1e-4);
+    }
+}
