@@ -3,21 +3,36 @@
 //! all layers compose:
 //!
 //! 1. `conv0` runs on the host via the AOT JAX artifact (PJRT);
-//! 2. `conv1..conv8` run on the simulated 8-MVU array, driven by the
-//!    *generated RISC-V program* executing on the Pito barrel CPU;
+//! 2. `conv1..conv8` run on the simulated 8-MVU array through a warm
+//!    [`barvinn::session::InferenceSession`] — the *generated RISC-V
+//!    program* executing on the Pito barrel CPU;
 //! 3. `fc` runs on the host via PJRT;
 //! 4. logits are checked against the single-module golden artifact, and
 //!    every seam is checked against the Python-exported test vectors;
-//! 5. the Table-3 cycle accounting is reproduced exactly in SkipEdges mode.
+//! 5. the Table-3 cycle accounting is reproduced exactly through a
+//!    SkipEdges-mode session;
+//! 6. the one-call facade (`run_image`) is exercised twice over the warm
+//!    session and must agree with the hand-staged pipeline.
 //!
-//! Run: `make artifacts && cargo run --release --example resnet9_e2e`
+//! Run: `make artifacts && cargo run --release --features pjrt --example resnet9_e2e`
+//! (the `pjrt` feature additionally needs `xla = "0.1"` added under
+//! `[dependencies]` — see Cargo.toml; without it this example exits with
+//! the typed `RuntimeError::Disabled`)
 
-use barvinn::accel::{System, SystemConfig, SystemExit};
-use barvinn::codegen::{compile_pipelined, layer_cycles, EdgePolicy};
+use barvinn::codegen::EdgePolicy;
 use barvinn::perf::benchkit::report_table;
 use barvinn::runtime::{ArtifactStore, Runtime};
+use barvinn::session::SessionBuilder;
 use barvinn::sim::Tensor3;
 use barvinn::CLOCK_HZ;
+
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*).into());
+        }
+    };
+}
 
 fn tensor_from(vals: &[i32], shape: &[usize]) -> Tensor3 {
     assert_eq!(shape[0], 1);
@@ -25,7 +40,7 @@ fn tensor_from(vals: &[i32], shape: &[usize]) -> Tensor3 {
     Tensor3 { c, h, w, data: vals.to_vec() }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let store = ArtifactStore::open(None)?;
     println!("artifacts: {}", store.dir.display());
     let model = store.model()?;
@@ -38,86 +53,99 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let q = conv0.run_f32_to_i32(&tv.image, &[1, 3, 32, 32])?;
     let conv0_ms = t0.elapsed().as_secs_f64() * 1e3;
-    anyhow::ensure!(q == tv.conv0_q, "conv0 PJRT output != python test vector");
+    ensure!(q == tv.conv0_q, "conv0 PJRT output != python test vector");
     println!("conv0 (PJRT): OK in {conv0_ms:.2} ms — matches python seam");
 
-    // --- accelerator middle: generated RISC-V on the 8-MVU array ------------
-    let compiled = compile_pipelined(&model, EdgePolicy::PadInRam)
-        .map_err(|e| anyhow::anyhow!(e))?;
+    // --- accelerator middle: a warm session over the 8-MVU array ------------
+    let mut session = SessionBuilder::new(model.clone())
+        .edge_policy(EdgePolicy::PadInRam)
+        .build()?;
     println!(
         "compiled pipelined program: {} instructions, {} layers",
-        compiled.program.len(),
-        compiled.plans.len()
+        session.program_len(),
+        session.model().layers.len()
     );
-    let mut sys = System::new(SystemConfig::default());
     let input = tensor_from(&q, &tv.conv0_q_shape);
-    compiled.load_into(&mut sys, &input);
     let t1 = std::time::Instant::now();
-    let exit = sys.run();
+    let out = session.run(&input)?;
     let sim_s = t1.elapsed().as_secs_f64();
-    anyhow::ensure!(
-        exit == SystemExit::AllExited,
-        "accelerator run failed: {exit:?} ({:?})",
-        sys.launch_errors()
-    );
-    let acts = compiled.read_output(&sys, 512);
     let want_acts = tensor_from(&tv.final_acts, &tv.final_acts_shape);
-    anyhow::ensure!(acts == want_acts, "MVU activations != python test vector");
+    ensure!(out.output == want_acts, "MVU activations != python test vector");
     println!(
         "conv1..conv8 (Pito + MVUs): OK — {} MVU cycles, {} system cycles, \
          {:.2}s wall ({:.1} M cycles/s)",
-        sys.total_mvu_busy_cycles(),
-        sys.cycles(),
+        out.total_mvu_cycles,
+        out.system_cycles,
         sim_s,
-        sys.cycles() as f64 / sim_s / 1e6
+        out.system_cycles as f64 / sim_s / 1e6
     );
 
     // --- host epilogue: fc on PJRT ------------------------------------------
     let fc = rt.load_hlo_text(&store.hlo_path("fc"))?;
-    let logits = fc.run_i32_to_f32(&acts.data, &[1, 512, 4, 4])?;
+    let logits = fc.run_i32_to_f32(&out.output.data, &[1, 512, 4, 4])?;
 
     // --- golden check --------------------------------------------------------
     let golden = rt.load_hlo_text(&store.hlo_path("golden"))?;
     let golden_logits = golden.run_f32(&tv.image, &[1, 3, 32, 32])?;
     for (i, (a, b)) in logits.iter().zip(&golden_logits).enumerate() {
-        anyhow::ensure!((a - b).abs() < 1e-4, "logit {i}: {a} vs golden {b}");
+        ensure!((a - b).abs() < 1e-4, "logit {i}: {a} vs golden {b}");
     }
     for (i, (a, b)) in golden_logits.iter().zip(&tv.golden_logits).enumerate() {
-        anyhow::ensure!((a - b).abs() < 1e-4, "logit {i}: {a} vs python {b}");
+        ensure!((a - b).abs() < 1e-4, "logit {i}: {a} vs python {b}");
     }
     println!("logits match the golden module and the python export: {logits:?}");
+
+    // --- the one-call facade: warm run_image, twice --------------------------
+    let mut facade = SessionBuilder::new(model.clone())
+        .artifacts(ArtifactStore::open(Some(store.dir.as_path()))?)
+        .build()?;
+    for pass in 0u64..2 {
+        let full = facade.run_image(&tv.image)?;
+        for (i, (a, b)) in full.logits.iter().zip(&logits).enumerate() {
+            ensure!(
+                (a - b).abs() < 1e-6,
+                "pass {pass} logit {i}: facade {a} vs staged {b}"
+            );
+        }
+        ensure!(
+            full.accel.image_index == pass,
+            "facade image index {} != {pass}",
+            full.accel.image_index
+        );
+    }
+    println!("run_image facade: OK — two warm passes, identical logits");
 
     // --- the L1 kernel artifact through the same runtime ---------------------
     let tile = rt.load_hlo_text(&store.hlo_path("bitserial_tile"))?;
     let x: Vec<i32> = (0..64 * 576).map(|i| (i % 4) as i32).collect();
     let w: Vec<i32> = (0..576 * 64).map(|i| ((i % 4) as i32) - 2).collect();
-    let out = tile.run_i32x2((&x, &[64, 576]), (&w, &[576, 64]))?;
+    let tile_out = tile.run_i32x2((&x, &[64, 576]), (&w, &[576, 64]))?;
     // Spot-check one entry against a host-side dot product.
     let want: i64 = (0..576).map(|k| (x[k] * w[k * 64]) as i64).sum();
-    anyhow::ensure!(out[0] as i64 == want, "bitserial tile mismatch");
+    ensure!(tile_out[0] as i64 == want, "bitserial tile mismatch");
     println!("bitserial_tile (Pallas, interpret): OK");
 
     // --- Table 3: exact cycle reproduction (SkipEdges accounting) ------------
     let expected = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
+    let mut session_t3 = SessionBuilder::new(model.clone())
+        .edge_policy(EdgePolicy::SkipEdges)
+        .build()?;
+    let out_t3 = session_t3.run(&input)?;
     let mut rows = Vec::new();
     let mut total = 0;
-    let compiled_t3 =
-        compile_pipelined(&model, EdgePolicy::SkipEdges).map_err(|e| anyhow::anyhow!(e))?;
-    let mut sys3 = System::new(SystemConfig::default());
-    compiled_t3.load_into(&mut sys3, &input);
-    let exit3 = sys3.run();
-    anyhow::ensure!(exit3 == SystemExit::AllExited, "{exit3:?}");
-    for ((l, plan), want) in model.layers.iter().zip(&compiled_t3.plans).zip(&expected) {
-        let analytic = layer_cycles(l, EdgePolicy::SkipEdges);
-        let measured = sys3.mvus[plan.mvu].busy_cycles();
-        anyhow::ensure!(analytic == *want, "{}: analytic {analytic} != paper {want}", l.name);
-        anyhow::ensure!(measured == *want, "{}: measured {measured} != paper {want}", l.name);
+    for ((l, &want), &measured) in
+        model.layers.iter().zip(&expected).zip(&out_t3.mvu_cycles)
+    {
+        let analytic = barvinn::codegen::layer_cycles(l, EdgePolicy::SkipEdges);
+        ensure!(analytic == want, "{}: analytic {analytic} != paper {want}", l.name);
+        ensure!(measured == want, "{}: measured {measured} != paper {want}", l.name);
         total += measured;
         rows.push(vec![l.name.clone(), want.to_string(), measured.to_string()]);
     }
     rows.push(vec!["total".into(), "194688".into(), total.to_string()]);
+    ensure!(out_t3.total_mvu_cycles == 194_688, "Table 3 total mismatch");
     report_table(
-        "Table 3 — paper vs simulator-measured cycles (2b/2b)",
+        "Table 3 — paper vs session-measured cycles (2b/2b)",
         &["layer", "paper", "measured"],
         &rows,
     );

@@ -1,74 +1,41 @@
 //! Serving scenario: the inference coordinator fronting the accelerator —
-//! batched requests routed over worker engines, each running the full
-//! host-PJRT → MVU-array → host-PJRT pipeline; reports latency percentiles,
-//! throughput and simulated accelerator cycles.
+//! batched requests routed over worker engines, each a warm
+//! [`barvinn::session::InferenceSession`] running the full host-PJRT →
+//! MVU-array → host-PJRT pipeline with weights loaded once per worker;
+//! reports latency percentiles, throughput and simulated accelerator
+//! cycles.
 //!
-//! Run: `make artifacts && cargo run --release --example serve [-- n_requests]`
+//! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests]`
+//! (the `pjrt` feature additionally needs `xla = "0.1"` added under
+//! `[dependencies]` — see Cargo.toml; without it this example exits with
+//! the typed `RuntimeError::Disabled`)
 
 use std::time::{Duration, Instant};
 
-use barvinn::accel::{System, SystemConfig, SystemExit};
-use barvinn::codegen::{compile_pipelined, CompiledModel, EdgePolicy};
 use barvinn::coordinator::{BatcherConfig, Coordinator, Engine, EngineFactory};
-use barvinn::runtime::{ArtifactStore, HostModule, Runtime};
-use barvinn::sim::Tensor3;
+use barvinn::runtime::ArtifactStore;
+use barvinn::session::SessionBuilder;
 use barvinn::CLOCK_HZ;
 
-/// Full-stack engine: conv0 + fc on PJRT, conv1..8 on the simulated array.
-struct BarvinnEngine {
-    conv0: HostModule,
-    fc: HostModule,
-    compiled: CompiledModel,
-}
-
-impl BarvinnEngine {
-    fn new(store: &ArtifactStore) -> anyhow::Result<Self> {
-        let rt = Runtime::cpu()?;
-        Ok(BarvinnEngine {
-            conv0: rt.load_hlo_text(&store.hlo_path("conv0"))?,
-            fc: rt.load_hlo_text(&store.hlo_path("fc"))?,
-            compiled: store
-                .model()
-                .and_then(|m| {
-                    compile_pipelined(&m, EdgePolicy::PadInRam).map_err(|e| anyhow::anyhow!(e))
-                })?,
-        })
-    }
-}
-
-impl Engine for BarvinnEngine {
-    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
-        images
-            .iter()
-            .map(|img| {
-                let q = self.conv0.run_f32_to_i32(img, &[1, 3, 32, 32]).expect("conv0");
-                let input = Tensor3 { c: 64, h: 32, w: 32, data: q };
-                let mut sys = System::new(SystemConfig::default());
-                self.compiled.load_into(&mut sys, &input);
-                let exit = sys.run();
-                assert_eq!(exit, SystemExit::AllExited, "{:?}", sys.launch_errors());
-                let acts = self.compiled.read_output(&sys, 512);
-                let logits =
-                    self.fc.run_i32_to_f32(&acts.data, &[1, 512, 4, 4]).expect("fc");
-                (logits, sys.total_mvu_busy_cycles())
-            })
-            .collect()
-    }
-}
-
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(16);
     let store = ArtifactStore::open(None)?;
     let workers = 2;
-    // Engines are built inside their worker threads (PJRT executables are
-    // thread-affine), so each factory re-opens the artifact store.
+    // Sessions are built inside their worker threads (PJRT executables are
+    // thread-affine), so each factory re-opens the artifact store and
+    // builds its own warm, weight-resident session.
     let dir = store.dir.clone();
     let engines: Vec<EngineFactory> = (0..workers)
         .map(|_| {
             let dir = dir.clone();
             Box::new(move || {
                 let store = ArtifactStore::open(Some(dir.as_path())).expect("artifacts");
-                Box::new(BarvinnEngine::new(&store).expect("engine")) as Box<dyn Engine>
+                let model = store.model().expect("model");
+                let session = SessionBuilder::new(model)
+                    .artifacts(store)
+                    .build()
+                    .expect("session");
+                Box::new(session) as Box<dyn Engine>
             }) as EngineFactory
         })
         .collect();

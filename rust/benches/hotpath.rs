@@ -1,12 +1,14 @@
 //! §Perf hot-path microbenchmarks: the MVU inner loop, the full pipelined
-//! system (Pito + 8 MVUs), the crossbar, the assembler and the JSON model
-//! load — the profile targets of EXPERIMENTS.md §Perf.
+//! system (Pito + 8 MVUs) as a cold per-image rebuild vs a warm
+//! weight-resident `InferenceSession`, the crossbar, the assembler and the
+//! JSON model load — the profile targets of EXPERIMENTS.md §Perf.
 
 use barvinn::accel::{System, SystemConfig, SystemExit};
 use barvinn::codegen::{compile_pipelined, EdgePolicy};
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::mvu::{Mvu, MvuConfig, XbarWrite};
 use barvinn::perf::benchkit::bench;
+use barvinn::session::SessionBuilder;
 use barvinn::sim::Tensor3;
 
 fn main() {
@@ -57,13 +59,17 @@ fn main() {
         );
     }
 
-    // --- full system: pipelined ResNet9 under Pito ---------------------------
+    // --- full system: per-image rebuild (cold) vs warm session ---------------
+    // The cold path is what every consumer hand-wired before the session
+    // API existed: build the whole system and reload every weight RAM for
+    // each image. The warm path compiles + loads once, then resets only
+    // activation state per image.
     {
         let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
         let mut rng = Rng(2);
         let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
         let mut sys_cycles = 0;
-        let r = bench("system: pipelined ResNet9 e2e", 4000, || {
+        let cold = bench("system: rebuild+reload per image (cold)", 4000, || {
             let mut sys = System::new(SystemConfig::default());
             compiled.load_into(&mut sys, &input);
             assert_eq!(sys.run(), SystemExit::AllExited);
@@ -71,9 +77,30 @@ fn main() {
         });
         println!(
             "  → {:.1} M system-cycles/s ({} cycles/frame, {:.1} sim-frames/s)",
-            sys_cycles as f64 / r.per_iter.as_secs_f64() / 1e6,
+            sys_cycles as f64 / cold.per_iter.as_secs_f64() / 1e6,
             sys_cycles,
-            1.0 / r.per_iter.as_secs_f64()
+            1.0 / cold.per_iter.as_secs_f64()
+        );
+
+        let mut session = SessionBuilder::new(m.clone())
+            .edge_policy(EdgePolicy::PadInRam)
+            .build()
+            .expect("session");
+        let warm = bench("session: warm weight-resident run()", 4000, || {
+            let out = session.run(&input).expect("run");
+            assert_eq!(out.system_cycles, sys_cycles, "warm run diverged from cold");
+        });
+        println!(
+            "  → {:.1} M system-cycles/s ({:.1} sim-frames/s)",
+            sys_cycles as f64 / warm.per_iter.as_secs_f64() / 1e6,
+            1.0 / warm.per_iter.as_secs_f64()
+        );
+        println!(
+            "  → warm session is {:.2}x the cold rebuild path \
+             ({:.2} ms vs {:.2} ms per image)",
+            cold.per_iter.as_secs_f64() / warm.per_iter.as_secs_f64(),
+            warm.per_iter_ms(),
+            cold.per_iter_ms()
         );
     }
 

@@ -1,61 +1,37 @@
 //! Table 3: per-layer computation cost of 2b/2b ResNet9 on CIFAR10.
 //! Regenerates every row by (a) the analytic model and (b) executing the
-//! generated job streams on the cycle-accurate simulator, and asserts exact
-//! equality with the paper (total 194,688). Also times the simulator.
+//! generated RISC-V program on the cycle-accurate simulator through a
+//! SkipEdges-mode `InferenceSession` (one warm run reports all eight
+//! layers at once — layer `i` runs on MVU `i`), and asserts exact equality
+//! with the paper (total 194,688). Also times the simulator.
 
 use barvinn::accel::{System, SystemConfig};
-use barvinn::codegen::layout::{load_scaler_bias, ActLayout, WeightLayout};
+use barvinn::codegen::layout::{ActLayout, WeightLayout};
 use barvinn::codegen::{conv_jobs, layer_cycles, EdgePolicy};
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::perf::benchkit::{bench, report_table};
+use barvinn::session::SessionBuilder;
 use barvinn::sim::Tensor3;
 
 fn main() {
     let m = resnet9_cifar10(2, 2);
     let paper = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
+
+    // One warm session in Table-3-exact SkipEdges mode: the per-MVU busy
+    // counters of a single run are exactly the per-layer costs.
+    let mut session = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::SkipEdges)
+        .build()
+        .expect("session");
+    let mut rng = Rng(5);
+    let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
+    let out = session.run(&input).expect("run");
+
     let mut rows = Vec::new();
     let mut total_analytic = 0;
     let mut total_measured = 0;
-
-    for (l, &want) in m.layers.iter().zip(&paper) {
+    for ((l, &want), &measured) in m.layers.iter().zip(&paper).zip(&out.mvu_cycles) {
         let analytic = layer_cycles(l, EdgePolicy::SkipEdges);
-        // Execute the layer's generated jobs on MVU 0.
-        let in_l = ActLayout {
-            base: 0,
-            h: l.in_h,
-            w: l.in_w,
-            pad: 1,
-            pad_rows: false,
-            cb: l.ci_blocks(),
-            prec: l.aprec,
-        };
-        let out_l = ActLayout {
-            base: 16384,
-            h: l.out_h(),
-            w: l.out_w(),
-            pad: 0,
-            pad_rows: false,
-            cb: l.co_sets(),
-            prec: l.oprec,
-        };
-        let w_l = WeightLayout {
-            base: 0,
-            cos: l.co_sets(),
-            fh: 3,
-            fw: 3,
-            cb: l.ci_blocks(),
-            prec: l.wprec,
-        };
-        let mut sys = System::new(SystemConfig::default());
-        let mut rng = Rng(5);
-        let input =
-            Tensor3::from_fn(l.ci, l.in_h, l.in_w, |_, _, _| rng.range_i32(0, 3));
-        in_l.load(&mut sys.mvus[0].act, &input);
-        w_l.load(&mut sys.mvus[0].weights, &l.weights, l.ci, l.co);
-        load_scaler_bias(&mut sys.mvus[0], 0, &l.quant.scale, &l.quant.bias);
-        let jobs = conv_jobs(l, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges);
-        let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j)).sum();
-
         assert_eq!(analytic, want, "{} analytic", l.name);
         assert_eq!(measured, want, "{} measured", l.name);
         total_analytic += analytic;
@@ -79,13 +55,15 @@ fn main() {
     ]);
     assert_eq!(total_analytic, 194_688);
     assert_eq!(total_measured, 194_688);
+    assert_eq!(out.total_mvu_cycles, 194_688);
     report_table(
         "Table 3 — ResNet9/CIFAR10 per-layer cycles (2b/2b), paper vs ours",
         &["layer", "input", "kernel", "paper", "analytic", "simulated"],
         &rows,
     );
 
-    // Simulator throughput on the heaviest layer (perf tracking).
+    // Simulator throughput on the heaviest layer (perf tracking; direct
+    // drive isolates the MVU datapath from the CPU model).
     let l = &m.layers[0];
     let in_l = ActLayout {
         base: 0,

@@ -144,6 +144,31 @@ impl System {
         self.cycles
     }
 
+    /// Simulation fuel: `run` returns [`SystemExit::MaxCycles`] once the
+    /// global clock reaches this many cycles.
+    pub fn max_cycles(&self) -> u64 {
+        self.max_cycles
+    }
+
+    /// Reset all *run-scoped* state — the CPU (registers, PCs, DRAM flags),
+    /// the activation RAMs, the crossbar FIFOs, the CSR files, the launch
+    /// error log and the cycle/perf counters — while keeping the program in
+    /// IRAM and the weight/scaler/bias RAMs loaded. After this call the
+    /// system behaves exactly like a freshly built one with the same
+    /// program and weights: the warm path of an inference session.
+    pub fn reset_run_state(&mut self) {
+        self.cpu.reset_run_state();
+        for m in &mut self.mvus {
+            m.reset_run_state();
+        }
+        self.xbar = Crossbar::new(NUM_MVUS);
+        for c in &mut self.csrs {
+            *c = MvuCsrFile::default();
+        }
+        self.launch_errors.clear();
+        self.cycles = 0;
+    }
+
     /// Errors recorded by rejected job launches (surface for debugging).
     pub fn launch_errors(&self) -> &[String] {
         &self.launch_errors

@@ -19,5 +19,5 @@ pub mod schedule;
 
 pub use conv2d::{conv_jobs, layer_cycles, EdgePolicy};
 pub use layout::{ActLayout, WeightLayout};
-pub use program::{compile_pipelined, CompiledModel, MvuImage};
+pub use program::{compile_pipelined, CompileError, CompiledModel, MvuImage};
 pub use schedule::{compile_distributed, DistributedPlan};

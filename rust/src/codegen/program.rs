@@ -28,6 +28,51 @@ use crate::NUM_MVUS;
 use super::conv2d::{conv_jobs, layer_cycles, rows_computed, EdgePolicy};
 use super::layout::{load_scaler_bias, ActLayout, WeightLayout};
 
+/// Why compilation of a model failed. Carried into
+/// [`crate::session::SessionError::Compile`] by the session facade.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// The model failed shape/precision chain validation.
+    InvalidModel(String),
+    /// Pipelined mode maps one layer per MVU (1..=8 layers).
+    LayerCount(usize),
+    /// A layer computes no output rows under the chosen edge policy.
+    NoComputableRows { layer: String, policy: EdgePolicy },
+    /// The generated program does not fit the 8 KiB IRAM.
+    ProgramTooLarge { words: usize },
+    /// The emitted assembly failed to assemble (a code-generator bug).
+    Assemble(String),
+    /// Distributed mode: the output region exceeds the activation RAM.
+    OutputRegionTooLarge,
+    /// The requested execution mode cannot map this model.
+    Mode(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::InvalidModel(m) => write!(f, "invalid model: {m}"),
+            CompileError::LayerCount(n) => {
+                write!(f, "pipelined mode maps one layer per MVU (1..=8), got {n}")
+            }
+            CompileError::NoComputableRows { layer, policy } => write!(
+                f,
+                "{layer}: no computable rows under {policy:?} (input smaller than kernel)"
+            ),
+            CompileError::ProgramTooLarge { words } => {
+                write!(f, "program of {words} words exceeds the 8 KiB IRAM")
+            }
+            CompileError::Assemble(m) => write!(f, "generated program failed to assemble: {m}"),
+            CompileError::OutputRegionTooLarge => {
+                write!(f, "distributed output region exceeds act RAM")
+            }
+            CompileError::Mode(m) => write!(f, "unsupported execution mode: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
 /// DRAM address of hart `h`'s rows-done flag.
 pub fn flag_addr(h: usize) -> u32 {
     0x100 + 4 * h as u32
@@ -71,17 +116,30 @@ impl CompiledModel {
         self.plans.iter().map(|p| p.analytic_cycles).sum()
     }
 
-    /// Load weights/scalers/biases into a system and the input image into
-    /// MVU 0 (the host's DMA step before starting the program).
-    pub fn load_into(&self, sys: &mut System, input: &Tensor3) {
+    /// Load the per-image state: the input image into MVU 0's activation
+    /// RAM (the host's DMA step before starting the program). Weights and
+    /// the program must already be resident ([`Self::load_weights`]).
+    pub fn load_input(&self, sys: &mut System, input: &Tensor3) {
+        self.plans[0].in_layout.load(&mut sys.mvus[0].act, input);
+    }
+
+    /// Load the image-invariant state: weight/scaler/bias RAM images for
+    /// every MVU plus the assembled program. Done once per session; only
+    /// [`Self::load_input`] runs per image.
+    pub fn load_weights(&self, sys: &mut System) {
         for (m, img) in self.images.iter().enumerate() {
             if !img.weights.is_empty() {
                 sys.mvus[m].weights.load(self.plans[m].w_layout.base, &img.weights);
                 load_scaler_bias(&mut sys.mvus[m], 0, &img.scale, &img.bias);
             }
         }
-        self.plans[0].in_layout.load(&mut sys.mvus[0].act, input);
         sys.load_program(&self.program);
+    }
+
+    /// Load weights, program and the input image (cold one-shot path).
+    pub fn load_into(&self, sys: &mut System, input: &Tensor3) {
+        self.load_weights(sys);
+        self.load_input(sys, input);
     }
 
     /// Read the final output tensor back from the system.
@@ -104,11 +162,11 @@ fn in_layout(layer: &ConvLayer, base: u32, policy: EdgePolicy) -> ActLayout {
 }
 
 /// Compile a model for pipelined execution: layer `i` on MVU `i`.
-pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledModel, String> {
-    model.validate()?;
+pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledModel, CompileError> {
+    model.validate().map_err(CompileError::InvalidModel)?;
     let n = model.layers.len();
     if n == 0 || n > NUM_MVUS {
-        return Err(format!("pipelined mode maps one layer per MVU (1..=8), got {n}"));
+        return Err(CompileError::LayerCount(n));
     }
 
     let mut plans = Vec::with_capacity(n);
@@ -139,10 +197,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
             prec: layer.wprec,
         };
         if rows_computed(layer, policy) == 0 {
-            return Err(format!(
-                "{}: no computable rows under {policy:?} (input {}×{} smaller than kernel)",
-                layer.name, layer.in_h, layer.in_w
-            ));
+            return Err(CompileError::NoComputableRows { layer: layer.name.clone(), policy });
         }
         let dest_mask = if last { None } else { Some(1u8 << (h + 1)) };
         let jobs = conv_jobs(layer, &in_l, &out_l, &w_l, 0, 0, dest_mask, policy);
@@ -162,12 +217,9 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
     }
 
     let asm = emit_asm(model, &plans, policy);
-    let program = assemble(&asm).map_err(|e| format!("{e}"))?;
+    let program = assemble(&asm).map_err(|e| CompileError::Assemble(e.to_string()))?;
     if program.len() * 4 > crate::pito::IRAM_BYTES {
-        return Err(format!(
-            "program of {} words exceeds the 8 KiB IRAM",
-            program.len()
-        ));
+        return Err(CompileError::ProgramTooLarge { words: program.len() });
     }
     Ok(CompiledModel { asm, program, images, plans, policy, out_mvu: n - 1 })
 }

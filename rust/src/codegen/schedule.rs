@@ -17,7 +17,7 @@ use crate::NUM_MVUS;
 
 use super::conv2d::{conv_jobs, rows_computed, EdgePolicy};
 use super::layout::{load_scaler_bias, ActLayout, WeightLayout};
-use super::program::OUT_BASE;
+use super::program::{CompileError, OUT_BASE};
 
 /// A distributed-mode plan for one layer.
 pub struct DistributedPlan {
@@ -47,18 +47,35 @@ impl DistributedPlan {
         self.jobs.iter().flatten().map(|j| j.cycles()).sum()
     }
 
-    /// Load input/weights into *every* MVU (shared-weight replication).
-    pub fn load_into(&self, sys: &mut System, layer: &ConvLayer, input: &Tensor3) {
+    /// Load the image-invariant state into *every* participating MVU
+    /// (shared-weight replication) plus the program. Done once per session.
+    pub fn load_weights(&self, sys: &mut System, layer: &ConvLayer) {
         let wimg = self.w_layout.image(&layer.weights, layer.ci, layer.co);
         for m in 0..NUM_MVUS {
             if self.jobs[m].is_empty() {
                 continue;
             }
-            self.in_layout.load(&mut sys.mvus[m].act, input);
             sys.mvus[m].weights.load(self.w_layout.base, &wimg);
             load_scaler_bias(&mut sys.mvus[m], 0, &layer.quant.scale, &layer.quant.bias);
         }
         sys.load_program(&self.program);
+    }
+
+    /// Load the per-image input into every participating MVU's activation
+    /// RAM (each chunk reads its own copy of the input rows).
+    pub fn load_input(&self, sys: &mut System, input: &Tensor3) {
+        for m in 0..NUM_MVUS {
+            if self.jobs[m].is_empty() {
+                continue;
+            }
+            self.in_layout.load(&mut sys.mvus[m].act, input);
+        }
+    }
+
+    /// Load weights, program and the input image (cold one-shot path).
+    pub fn load_into(&self, sys: &mut System, layer: &ConvLayer, input: &Tensor3) {
+        self.load_weights(sys, layer);
+        self.load_input(sys, input);
     }
 
     /// Gather the output rows from all MVUs into one tensor.
@@ -95,7 +112,10 @@ impl DistributedPlan {
 }
 
 /// Compile one layer for distributed execution over the 8-MVU array.
-pub fn compile_distributed(layer: &ConvLayer, policy: EdgePolicy) -> Result<DistributedPlan, String> {
+pub fn compile_distributed(
+    layer: &ConvLayer,
+    policy: EdgePolicy,
+) -> Result<DistributedPlan, CompileError> {
     let in_l = ActLayout {
         base: 0,
         h: layer.in_h,
@@ -123,7 +143,7 @@ pub fn compile_distributed(layer: &ConvLayer, policy: EdgePolicy) -> Result<Dist
         prec: layer.wprec,
     };
     if out_l.base + out_l.size_words() > 32 * 1024 as u32 {
-        return Err("distributed output region exceeds act RAM".into());
+        return Err(CompileError::OutputRegionTooLarge);
     }
 
     // All jobs for the full layer, row-major (co_sets per row), then chunked
@@ -140,7 +160,7 @@ pub fn compile_distributed(layer: &ConvLayer, policy: EdgePolicy) -> Result<Dist
     }
 
     let asm = emit_asm(layer, &jobs);
-    let program = assemble(&asm).map_err(|e| format!("{e}"))?;
+    let program = assemble(&asm).map_err(|e| CompileError::Assemble(e.to_string()))?;
     Ok(DistributedPlan { in_layout: in_l, out_layout: out_l, w_layout: w_l, jobs, asm, program, policy })
 }
 

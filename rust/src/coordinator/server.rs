@@ -78,35 +78,40 @@ impl Coordinator {
                          replies: &mut Vec<(u64, mpsc::Sender<InferenceResponse>, Instant)>,
                          engine: &mut Box<dyn Engine>,
                          force: bool| {
-                            loop {
-                                let batch = if force {
-                                    let mut all = batcher.drain_all();
-                                    if all.is_empty() {
-                                        break;
-                                    }
-                                    all.remove(0)
-                                } else {
-                                    match batcher.pop(Instant::now()) {
-                                        Some(b) => b,
-                                        None => break,
-                                    }
-                                };
+                            // Drain once: `drain_all` empties the queue, so
+                            // it must not sit inside a per-batch loop (that
+                            // dropped every batch but the first). Due
+                            // batches are collected up front, then each is
+                            // processed.
+                            let batches = if force {
+                                batcher.drain_all()
+                            } else {
+                                let mut due = Vec::new();
+                                while let Some(b) = batcher.pop(Instant::now()) {
+                                    due.push(b);
+                                }
+                                due
+                            };
+                            for batch in batches {
                                 metrics2.on_batch(batch.requests.len());
-                                let images: Vec<Vec<f32>> =
-                                    batch.requests.iter().map(|r| r.image.clone()).collect();
+                                // Move the images out of the requests —
+                                // the batch is consumed here, no clones.
+                                let (ids, images): (Vec<u64>, Vec<Vec<f32>>) = batch
+                                    .requests
+                                    .into_iter()
+                                    .map(|r| (r.id, r.image))
+                                    .unzip();
                                 let outs = engine.infer_batch(&images);
-                                for (req, (logits, cycles)) in
-                                    batch.requests.iter().zip(outs)
-                                {
+                                for (id, (logits, cycles)) in ids.into_iter().zip(outs) {
                                     let idx = replies
                                         .iter()
-                                        .position(|(id, _, _)| *id == req.id)
+                                        .position(|(rid, _, _)| *rid == id)
                                         .expect("reply channel registered");
                                     let (_, tx, t0) = replies.swap_remove(idx);
                                     metrics2.on_complete(t0.elapsed(), cycles);
                                     router2.complete(w);
                                     let _ = tx.send(InferenceResponse {
-                                        id: req.id,
+                                        id,
                                         logits,
                                         sim_cycles: cycles,
                                         worker: w,

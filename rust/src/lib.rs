@@ -23,7 +23,11 @@
 //!   execution-mode scheduling (§3.3, §3.1.6).
 //! * [`sim`] — golden integer reference operators used to validate the MVU.
 //! * [`runtime`] — PJRT runtime executing AOT-lowered JAX artifacts
-//!   (`artifacts/*.hlo.txt`) for host-side layers and golden checking.
+//!   (`artifacts/*.hlo.txt`) for host-side layers and golden checking
+//!   (feature-gated behind `pjrt`; a stub otherwise).
+//! * [`session`] — the unified inference API: `SessionBuilder` →
+//!   `InferenceSession` compiles once, loads weights once and serves
+//!   `run()` per image with typed `SessionError`s (the warm hot path).
 //! * [`coordinator`] — an async inference front-end: request router, batcher
 //!   and metrics over the simulated accelerator.
 //! * [`perf`] — analytic performance/resource/power models for BARVINN and
@@ -44,6 +48,7 @@ pub mod perf;
 pub mod pito;
 pub mod quant;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 
 /// Number of vector lanes in every MVU datapath (the paper's 64-element

@@ -9,13 +9,16 @@
 //! * `estimate <cnv|resnet50>` — Table 5/6 throughput estimates
 //! * `asm <file.s>`            — assemble a Pito program, print words
 //! * `disasm <hex words...>`   — disassemble
-//! * `run [--images N]`        — run quantized ResNet9 end-to-end on the
-//!                               simulated accelerator
+//! * `run [--wbits N --abits N --images N]` — run quantized ResNet9
+//!                               end-to-end on the simulated accelerator
+//!                               through a warm `InferenceSession`
+//!                               (weights loaded once, any precision)
 
-use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::codegen::EdgePolicy;
 use barvinn::model::zoo;
 use barvinn::perf::benchkit::report_table;
 use barvinn::perf::{cycle_model, finn, resource_model};
+use barvinn::session::SessionBuilder;
 use barvinn::sim::Tensor3;
 use barvinn::CLOCK_HZ;
 
@@ -43,6 +46,7 @@ fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
          usage: barvinn <info|cycles|census|estimate|asm|disasm|run> [args]\n\
+         run flags: --wbits N --abits N --images N (warm InferenceSession)\n\
          see README.md for details"
     );
 }
@@ -193,28 +197,46 @@ fn disasm(args: &[String]) {
 
 fn run(args: &[String]) {
     let n_images = parse_flag(args, "--images", 1) as usize;
-    let m = zoo::resnet9_cifar10(2, 2);
-    let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
+    let wb = parse_flag(args, "--wbits", 2) as u8;
+    let ab = parse_flag(args, "--abits", 2) as u8;
+    let m = zoo::resnet9_cifar10(ab, wb);
+    let l0 = &m.layers[0];
+    let (ci, in_h, in_w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
+    // Compile once, load weights once; every image below is a warm run —
+    // runtime precision switching costs one build, not one per image.
+    let mut session = match SessionBuilder::new(m).edge_policy(EdgePolicy::PadInRam).build() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("session build failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "ResNet9 {wb}b weights / {ab}b activations — program: {} instructions",
+        session.program_len()
+    );
     let mut rng = zoo::Rng(1);
-    let mut total_cycles = 0u64;
     let t0 = std::time::Instant::now();
     for i in 0..n_images {
-        let mut sys = barvinn::accel::System::new(Default::default());
-        let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
-        compiled.load_into(&mut sys, &input);
-        let exit = sys.run();
-        assert_eq!(exit, barvinn::accel::SystemExit::AllExited, "{exit:?}");
-        total_cycles += sys.total_mvu_busy_cycles();
-        println!(
-            "image {i}: {} MVU cycles, {} system cycles",
-            sys.total_mvu_busy_cycles(),
-            sys.cycles()
-        );
+        let input = Tensor3::from_fn(ci, in_h, in_w, |_, _, _| rng.range_i32(0, amax));
+        match session.run(&input) {
+            Ok(out) => println!(
+                "image {i}: {} MVU cycles, {} system cycles",
+                out.total_mvu_cycles, out.system_cycles
+            ),
+            Err(e) => {
+                eprintln!("image {i} failed: {e}");
+                std::process::exit(1);
+            }
+        }
     }
     let dt = t0.elapsed();
+    let metrics = session.metrics();
     println!(
-        "{n_images} images in {:.2}s wall ({:.1} M MVU-cycles/s simulated)",
+        "{} images in {:.2}s wall ({:.1} M MVU-cycles/s simulated, {:.0} FPS at 250 MHz)",
+        metrics.images,
         dt.as_secs_f64(),
-        total_cycles as f64 / dt.as_secs_f64() / 1e6
+        metrics.total_mvu_cycles as f64 / dt.as_secs_f64() / 1e6,
+        metrics.fps_at(CLOCK_HZ)
     );
 }

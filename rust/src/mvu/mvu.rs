@@ -123,6 +123,19 @@ impl Mvu {
         self.jobs_done
     }
 
+    /// Reset all *run-scoped* state — activation RAM, the active job, the
+    /// IRQ line and the perf counters — while keeping the weight, scaler and
+    /// bias RAMs intact. This is the warm path of an inference session:
+    /// weights persist across images, activations do not.
+    pub fn reset_run_state(&mut self) {
+        let depth = self.act.depth();
+        self.act.clear(0, depth);
+        self.job = None;
+        self.irq_pending = false;
+        self.busy_cycles = 0;
+        self.jobs_done = 0;
+    }
+
     /// Launch a job. Panics if already running (the controller must respect
     /// the status CSR) or if the configuration is inconsistent.
     pub fn launch(&mut self, cfg: JobConfig) {

@@ -187,6 +187,21 @@ impl Barrel {
         self.console.clear();
     }
 
+    /// Reset all run-scoped CPU state — hart registers/PCs, the cycle
+    /// counter, the halt latch, the console and the data RAM (which holds
+    /// the inter-hart rows-done flags) — while keeping the program in IRAM.
+    /// This lets an inference session re-run the loaded program without
+    /// re-assembling or re-loading it.
+    pub fn reset_run_state(&mut self) {
+        for h in &mut self.harts {
+            *h = Hart::new(h.id);
+        }
+        self.cycle = 0;
+        self.halted = false;
+        self.console.clear();
+        self.dram.fill(0);
+    }
+
     /// Write bytes into data RAM (host-side initialisation).
     pub fn write_dram(&mut self, addr: u32, bytes: &[u8]) {
         let a = addr as usize;

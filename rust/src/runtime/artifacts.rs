@@ -2,9 +2,9 @@
 //! `make artifacts` and loads the model graph and cross-language test
 //! vectors it contains.
 
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 
+use super::{RuntimeError, RuntimeResult};
 use crate::model::json::{parse, Value};
 use crate::model::Model;
 
@@ -30,22 +30,28 @@ pub struct TestVectors {
 impl ArtifactStore {
     /// Open `dir`, or search upward from the current directory for an
     /// `artifacts/` folder when `dir` is `None`.
-    pub fn open(dir: Option<&Path>) -> Result<Self> {
+    pub fn open(dir: Option<&Path>) -> RuntimeResult<Self> {
         if let Some(d) = dir {
             if d.join("model.json").exists() {
                 return Ok(ArtifactStore { dir: d.to_path_buf() });
             }
-            return Err(anyhow!("{} has no model.json — run `make artifacts`", d.display()));
+            return Err(RuntimeError::Missing(format!(
+                "{} has no model.json — run `make artifacts`",
+                d.display()
+            )));
         }
-        let mut cur = std::env::current_dir()?;
+        let mut cur = std::env::current_dir().map_err(|e| RuntimeError::Io {
+            path: PathBuf::from("."),
+            message: e.to_string(),
+        })?;
         loop {
             let cand = cur.join("artifacts");
             if cand.join("model.json").exists() {
                 return Ok(ArtifactStore { dir: cand });
             }
             if !cur.pop() {
-                return Err(anyhow!(
-                    "no artifacts/ directory found — run `make artifacts` first"
+                return Err(RuntimeError::Missing(
+                    "no artifacts/ directory found — run `make artifacts` first".into(),
                 ));
             }
         }
@@ -56,34 +62,35 @@ impl ArtifactStore {
     }
 
     /// Load the ONNX-lite model graph.
-    pub fn model(&self) -> Result<Model> {
-        crate::model::load_model_json(&self.dir.join("model.json")).map_err(|e| anyhow!(e))
+    pub fn model(&self) -> RuntimeResult<Model> {
+        crate::model::load_model_json(&self.dir.join("model.json")).map_err(RuntimeError::Parse)
     }
 
     /// Load the test vectors.
-    pub fn test_vectors(&self) -> Result<TestVectors> {
-        let src = std::fs::read_to_string(self.dir.join("testvec.json"))
-            .context("reading testvec.json")?;
-        let v = parse(&src).map_err(|e| anyhow!("{e}"))?;
-        fn f32s(v: &Value, key: &str) -> Result<Vec<f32>> {
+    pub fn test_vectors(&self) -> RuntimeResult<TestVectors> {
+        let path = self.dir.join("testvec.json");
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| RuntimeError::Io { path: path.clone(), message: e.to_string() })?;
+        let v = parse(&src).map_err(|e| RuntimeError::Parse(format!("testvec.json: {e}")))?;
+        fn f32s(v: &Value, key: &str) -> RuntimeResult<Vec<f32>> {
             Ok(v.req(key)
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| RuntimeError::Parse(e.to_string()))?
                 .as_array()
-                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .ok_or_else(|| RuntimeError::Parse(format!("{key} not an array")))?
                 .iter()
                 .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
                 .collect())
         }
-        fn i32s(v: &Value, key: &str) -> Result<Vec<i32>> {
+        fn i32s(v: &Value, key: &str) -> RuntimeResult<Vec<i32>> {
             Ok(v.req(key)
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| RuntimeError::Parse(e.to_string()))?
                 .as_i64_vec()
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| RuntimeError::Parse(e.to_string()))?
                 .into_iter()
                 .map(|x| x as i32)
                 .collect())
         }
-        fn dims(v: &Value, key: &str) -> Result<Vec<usize>> {
+        fn dims(v: &Value, key: &str) -> RuntimeResult<Vec<usize>> {
             Ok(i32s(v, key)?.into_iter().map(|x| x as usize).collect())
         }
         Ok(TestVectors {
@@ -96,9 +103,9 @@ impl ArtifactStore {
             golden_logits: f32s(&v, "golden_logits")?,
             act_step: v
                 .req("act_step")
-                .map_err(|e| anyhow!("{e}"))?
+                .map_err(|e| RuntimeError::Parse(e.to_string()))?
                 .as_f64()
-                .ok_or_else(|| anyhow!("act_step"))? as f32,
+                .ok_or_else(|| RuntimeError::Parse("act_step".into()))? as f32,
         })
     }
 }

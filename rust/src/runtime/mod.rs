@@ -7,9 +7,55 @@
 //! reassigns ids (see DESIGN.md and /opt/xla-example/README.md). All modules
 //! are lowered with `return_tuple=True`, so results unwrap with
 //! `to_tuple1()`.
+//!
+//! The PJRT backend needs the `xla` crate and is compiled only with the
+//! `pjrt` cargo feature. Without it, [`Runtime`] is a stub whose
+//! constructor reports [`RuntimeError::Disabled`] — everything else in the
+//! crate (the simulator, codegen, sessions without host layers) works
+//! unchanged, and artifact-dependent tests skip instead of failing.
 
 mod artifacts;
 mod pjrt;
 
+use std::path::PathBuf;
+
 pub use artifacts::{ArtifactStore, TestVectors};
 pub use pjrt::{HostModule, Runtime};
+
+/// Typed host-runtime error, surfaced through
+/// [`crate::session::SessionError::Artifact`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RuntimeError {
+    /// The artifacts directory or a required artifact is missing
+    /// (run `make artifacts`).
+    Missing(String),
+    /// Filesystem failure while reading an artifact.
+    Io { path: PathBuf, message: String },
+    /// An artifact file failed to parse/validate.
+    Parse(String),
+    /// A PJRT client, compile or execute call failed.
+    Pjrt(String),
+    /// The crate was built without the `pjrt` cargo feature.
+    Disabled,
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Missing(m) => write!(f, "missing artifacts: {m}"),
+            RuntimeError::Io { path, message } => {
+                write!(f, "reading {}: {message}", path.display())
+            }
+            RuntimeError::Parse(m) => write!(f, "artifact parse error: {m}"),
+            RuntimeError::Pjrt(m) => write!(f, "PJRT error: {m}"),
+            RuntimeError::Disabled => {
+                write!(f, "PJRT support not compiled in (build with `--features pjrt`)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Crate-local result alias for host-runtime operations.
+pub type RuntimeResult<T> = std::result::Result<T, RuntimeError>;

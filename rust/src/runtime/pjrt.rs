@@ -1,87 +1,172 @@
 //! Thin, typed wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Compiled in two flavours:
+//! * `--features pjrt` — the real backend over `xla::PjRtClient`. The
+//!   feature only flips the `cfg`; the `xla` crate is deliberately not a
+//!   (optional) manifest dependency so the default build resolves fully
+//!   offline — add `xla = "0.1"` to `[dependencies]` (with its native
+//!   `xla_extension` library installed) before enabling the feature.
+//! * default — an API-compatible stub whose constructor returns
+//!   [`RuntimeError::Disabled`], so the rest of the crate builds and runs
+//!   offline without the native toolchain.
 
-use anyhow::{Context, Result};
 use std::path::Path;
 
-/// A PJRT client plus the executables loaded through it.
-pub struct Runtime {
-    client: xla::PjRtClient,
+use super::{RuntimeError, RuntimeResult};
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::*;
+
+    /// A PJRT client plus the executables loaded through it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    /// One compiled HLO module ready to execute.
+    pub struct HostModule {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Runtime {
+        /// Create the CPU PJRT client.
+        pub fn cpu() -> RuntimeResult<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::Pjrt(format!("creating PJRT CPU client: {e}")))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> RuntimeResult<HostModule> {
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| RuntimeError::Parse(format!("non-utf8 path {path:?}")))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| {
+                RuntimeError::Pjrt(format!("parsing HLO text {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::Pjrt(format!("compiling {}: {e}", path.display())))?;
+            Ok(HostModule {
+                exe,
+                name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+            })
+        }
+    }
+
+    impl HostModule {
+        fn run(&self, inputs: &[xla::Literal]) -> RuntimeResult<xla::Literal> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .map_err(|e| RuntimeError::Pjrt(format!("executing {}: {e}", self.name)))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::Pjrt(format!("fetching result of {}: {e}", self.name)))?;
+            // Modules are lowered with return_tuple=True.
+            lit.to_tuple1().map_err(|e| RuntimeError::Pjrt(e.to_string()))
+        }
+
+        /// Execute with one f32 input tensor, returning f32 outputs.
+        pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> RuntimeResult<Vec<f32>> {
+            let lit = xla::Literal::vec1(input)
+                .reshape(dims)
+                .map_err(|e| RuntimeError::Pjrt(e.to_string()))?;
+            self.run(&[lit])?.to_vec::<f32>().map_err(|e| RuntimeError::Pjrt(e.to_string()))
+        }
+
+        /// Execute with one f32 input, returning i32 outputs (e.g. conv0 codes).
+        pub fn run_f32_to_i32(&self, input: &[f32], dims: &[i64]) -> RuntimeResult<Vec<i32>> {
+            let lit = xla::Literal::vec1(input)
+                .reshape(dims)
+                .map_err(|e| RuntimeError::Pjrt(e.to_string()))?;
+            self.run(&[lit])?.to_vec::<i32>().map_err(|e| RuntimeError::Pjrt(e.to_string()))
+        }
+
+        /// Execute with one i32 input, returning f32 outputs (e.g. the fc head).
+        pub fn run_i32_to_f32(&self, input: &[i32], dims: &[i64]) -> RuntimeResult<Vec<f32>> {
+            let lit = xla::Literal::vec1(input)
+                .reshape(dims)
+                .map_err(|e| RuntimeError::Pjrt(e.to_string()))?;
+            self.run(&[lit])?.to_vec::<f32>().map_err(|e| RuntimeError::Pjrt(e.to_string()))
+        }
+
+        /// Execute with two i32 inputs, returning i32 (the bit-serial tile).
+        pub fn run_i32x2(
+            &self,
+            a: (&[i32], &[i64]),
+            b: (&[i32], &[i64]),
+        ) -> RuntimeResult<Vec<i32>> {
+            let la = xla::Literal::vec1(a.0)
+                .reshape(a.1)
+                .map_err(|e| RuntimeError::Pjrt(e.to_string()))?;
+            let lb = xla::Literal::vec1(b.0)
+                .reshape(b.1)
+                .map_err(|e| RuntimeError::Pjrt(e.to_string()))?;
+            self.run(&[la, lb])?.to_vec::<i32>().map_err(|e| RuntimeError::Pjrt(e.to_string()))
+        }
+    }
 }
 
-/// One compiled HLO module ready to execute.
-pub struct HostModule {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::*;
 
-impl Runtime {
-    /// Create the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+    /// Stub PJRT runtime: cannot be constructed; [`Runtime::cpu`] reports
+    /// [`RuntimeError::Disabled`]. Exists so session/host-layer code paths
+    /// type-check in offline builds.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Stub compiled module (never constructed in this build flavour).
+    pub struct HostModule {
+        pub name: String,
+        _private: (),
     }
 
-    /// Load + compile an HLO text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<HostModule> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(HostModule {
-            exe,
-            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
-        })
-    }
-}
+    impl Runtime {
+        pub fn cpu() -> RuntimeResult<Self> {
+            Err(RuntimeError::Disabled)
+        }
 
-impl HostModule {
-    fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.name))?;
-        // Modules are lowered with return_tuple=True.
-        Ok(lit.to_tuple1()?)
+        pub fn platform(&self) -> String {
+            "disabled".into()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> RuntimeResult<HostModule> {
+            Err(RuntimeError::Disabled)
+        }
     }
 
-    /// Execute with one f32 input tensor, returning f32 outputs.
-    pub fn run_f32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<f32>> {
-        let lit = xla::Literal::vec1(input).reshape(dims)?;
-        Ok(self.run(&[lit])?.to_vec::<f32>()?)
-    }
+    impl HostModule {
+        pub fn run_f32(&self, _input: &[f32], _dims: &[i64]) -> RuntimeResult<Vec<f32>> {
+            Err(RuntimeError::Disabled)
+        }
 
-    /// Execute with one f32 input, returning i32 outputs (e.g. conv0 codes).
-    pub fn run_f32_to_i32(&self, input: &[f32], dims: &[i64]) -> Result<Vec<i32>> {
-        let lit = xla::Literal::vec1(input).reshape(dims)?;
-        Ok(self.run(&[lit])?.to_vec::<i32>()?)
-    }
+        pub fn run_f32_to_i32(&self, _input: &[f32], _dims: &[i64]) -> RuntimeResult<Vec<i32>> {
+            Err(RuntimeError::Disabled)
+        }
 
-    /// Execute with one i32 input, returning f32 outputs (e.g. the fc head).
-    pub fn run_i32_to_f32(&self, input: &[i32], dims: &[i64]) -> Result<Vec<f32>> {
-        let lit = xla::Literal::vec1(input).reshape(dims)?;
-        Ok(self.run(&[lit])?.to_vec::<f32>()?)
-    }
+        pub fn run_i32_to_f32(&self, _input: &[i32], _dims: &[i64]) -> RuntimeResult<Vec<f32>> {
+            Err(RuntimeError::Disabled)
+        }
 
-    /// Execute with two i32 inputs, returning i32 (the bit-serial tile).
-    pub fn run_i32x2(
-        &self,
-        a: (&[i32], &[i64]),
-        b: (&[i32], &[i64]),
-    ) -> Result<Vec<i32>> {
-        let la = xla::Literal::vec1(a.0).reshape(a.1)?;
-        let lb = xla::Literal::vec1(b.0).reshape(b.1)?;
-        Ok(self.run(&[la, lb])?.to_vec::<i32>()?)
+        pub fn run_i32x2(
+            &self,
+            _a: (&[i32], &[i64]),
+            _b: (&[i32], &[i64]),
+        ) -> RuntimeResult<Vec<i32>> {
+            Err(RuntimeError::Disabled)
+        }
     }
 }
+
+pub use backend::{HostModule, Runtime};

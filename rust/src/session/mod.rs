@@ -1,0 +1,660 @@
+//! The unified inference facade: **compile → load → run** behind one typed,
+//! weight-persistent API.
+//!
+//! The paper's pitch is *runtime programmability*: one compiled command
+//! stream drives the 8-MVU array at any precision without reconfiguration.
+//! [`InferenceSession`] is that idea as an API. A [`SessionBuilder`]
+//! compiles the model once, builds the system once, loads the weight,
+//! scaler and bias RAMs and the RISC-V program **once**, and then serves
+//! [`InferenceSession::run`] repeatedly, resetting only activation state
+//! (activation RAMs, CPU registers, DRAM row flags, crossbar FIFOs)
+//! between images — the warm-weight hot path measured in
+//! `rust/benches/hotpath.rs`.
+//!
+//! ```no_run
+//! use barvinn::codegen::EdgePolicy;
+//! use barvinn::model::zoo;
+//! use barvinn::session::SessionBuilder;
+//! use barvinn::sim::Tensor3;
+//!
+//! let model = zoo::resnet9_cifar10(2, 2);
+//! let mut session = SessionBuilder::new(model)
+//!     .edge_policy(EdgePolicy::PadInRam)
+//!     .build()
+//!     .expect("compile");
+//! let input = Tensor3::zeros(64, 32, 32);
+//! let out = session.run(&input).expect("inference");
+//! println!("{} MVU cycles", out.total_mvu_cycles);
+//! ```
+//!
+//! With an [`ArtifactStore`], the session also owns the PJRT host prologue
+//! and epilogue (conv0 / fc per §4.1) and serves raw f32 images end-to-end
+//! through [`InferenceSession::run_image`]; it implements
+//! [`crate::coordinator::Engine`], so it drops straight into the serving
+//! coordinator (`examples/serve.rs`).
+//!
+//! All failure paths surface as the typed [`SessionError`] — no stringly
+//! errors, no panicking asserts on [`SystemExit`].
+
+use crate::accel::{System, SystemConfig, SystemExit};
+use crate::codegen::program::CompiledModel;
+use crate::codegen::schedule::DistributedPlan;
+use crate::codegen::{compile_distributed, compile_pipelined, CompileError, EdgePolicy};
+use crate::coordinator::Engine;
+use crate::model::Model;
+use crate::mvu::MvuConfig;
+use crate::pito::Trap;
+use crate::runtime::{ArtifactStore, HostModule, Runtime, RuntimeError};
+use crate::sim::Tensor3;
+
+/// §3.1.6 execution modes (Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Layer `i` on MVU `i`, rows streamed between layers (max throughput).
+    Pipelined,
+    /// One layer split row-wise across all 8 MVUs (min latency); the model
+    /// must be a single layer.
+    Distributed,
+}
+
+/// Typed inference error: every way a session can fail to build or run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionError {
+    /// Model compilation failed (validation, mapping, codegen).
+    Compile(CompileError),
+    /// A hart took a fatal trap while driving the array.
+    Fault { hart: usize, trap: Trap },
+    /// Every hart asleep with no interrupt possible.
+    Deadlock,
+    /// The run exceeded the session's fuel limit.
+    FuelExhausted { fuel: u64 },
+    /// MVU job launches were rejected (bad CSR programming).
+    Launch(Vec<String>),
+    /// Host-side artifact / PJRT failure.
+    Artifact(RuntimeError),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Compile(e) => write!(f, "compile error: {e}"),
+            SessionError::Fault { hart, trap } => {
+                write!(f, "hart {hart} faulted: {trap:?}")
+            }
+            SessionError::Deadlock => write!(f, "deadlock: all harts asleep, no IRQ possible"),
+            SessionError::FuelExhausted { fuel } => {
+                write!(f, "fuel exhausted after {fuel} cycles")
+            }
+            SessionError::Launch(errs) => {
+                write!(f, "{} job launch error(s): {}", errs.len(), errs.join("; "))
+            }
+            SessionError::Artifact(e) => write!(f, "artifact error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+impl From<CompileError> for SessionError {
+    fn from(e: CompileError) -> Self {
+        SessionError::Compile(e)
+    }
+}
+
+impl From<RuntimeError> for SessionError {
+    fn from(e: RuntimeError) -> Self {
+        SessionError::Artifact(e)
+    }
+}
+
+/// Builder for an [`InferenceSession`].
+pub struct SessionBuilder {
+    model: Model,
+    policy: EdgePolicy,
+    mode: ExecutionMode,
+    fuel: u64,
+    mvu: MvuConfig,
+    artifacts: Option<ArtifactStore>,
+    host_input_shape: Vec<i64>,
+}
+
+impl SessionBuilder {
+    /// Start a session over `model` with the defaults: pipelined execution,
+    /// `PadInRam` edges, the stock memory geometry and a 200 M-cycle fuel
+    /// limit.
+    pub fn new(model: Model) -> Self {
+        SessionBuilder {
+            model,
+            policy: EdgePolicy::PadInRam,
+            mode: ExecutionMode::Pipelined,
+            fuel: crate::pito::BarrelConfig::default().max_cycles,
+            mvu: MvuConfig::default(),
+            artifacts: None,
+            host_input_shape: vec![1, 3, 32, 32],
+        }
+    }
+
+    /// How edge rows are handled (Table-3-exact `SkipEdges` vs full-output
+    /// `PadInRam`).
+    pub fn edge_policy(mut self, policy: EdgePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Pipelined (throughput) vs Distributed (latency) mapping.
+    pub fn mode(mut self, mode: ExecutionMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Per-run cycle budget; exceeding it yields
+    /// [`SessionError::FuelExhausted`] instead of spinning forever.
+    pub fn fuel(mut self, cycles: u64) -> Self {
+        self.fuel = cycles;
+        self
+    }
+
+    /// Override the MVU memory geometry.
+    pub fn mvu_config(mut self, cfg: MvuConfig) -> Self {
+        self.mvu = cfg;
+        self
+    }
+
+    /// Attach an artifact store: the model's `host_prologue` /
+    /// `host_epilogue` HLO modules are compiled through PJRT at build time
+    /// and [`InferenceSession::run_image`] becomes available.
+    pub fn artifacts(mut self, store: ArtifactStore) -> Self {
+        self.artifacts = Some(store);
+        self
+    }
+
+    /// Shape of the raw image fed to the host prologue (defaults to CIFAR
+    /// `[1, 3, 32, 32]`).
+    pub fn host_input_shape(mut self, shape: &[i64]) -> Self {
+        self.host_input_shape = shape.to_vec();
+        self
+    }
+
+    /// Compile the model, build the system and make all image-invariant
+    /// state resident: weights, scalers, biases, the assembled program and
+    /// (optionally) the compiled host modules.
+    pub fn build(self) -> Result<InferenceSession, SessionError> {
+        let program = match self.mode {
+            ExecutionMode::Pipelined => {
+                Program::Pipelined(compile_pipelined(&self.model, self.policy)?)
+            }
+            ExecutionMode::Distributed => {
+                if self.model.layers.len() != 1 {
+                    return Err(SessionError::Compile(CompileError::Mode(format!(
+                        "distributed mode maps a single layer across the array, got {}",
+                        self.model.layers.len()
+                    ))));
+                }
+                self.model.validate().map_err(CompileError::InvalidModel)?;
+                Program::Distributed(compile_distributed(&self.model.layers[0], self.policy)?)
+            }
+        };
+
+        let cfg = SystemConfig {
+            mvu: self.mvu,
+            barrel: crate::pito::BarrelConfig { max_cycles: self.fuel, ..Default::default() },
+        };
+        let mut sys = System::new(cfg);
+        match &program {
+            Program::Pipelined(c) => c.load_weights(&mut sys),
+            Program::Distributed(p) => p.load_weights(&mut sys, &self.model.layers[0]),
+        }
+
+        let host = match self.artifacts {
+            None => None,
+            Some(store) => {
+                let runtime = Runtime::cpu()?;
+                let load = |name: &Option<String>| -> Result<Option<HostModule>, SessionError> {
+                    match name {
+                        None => Ok(None),
+                        Some(n) => Ok(Some(runtime.load_hlo_text(&store.hlo_path(n))?)),
+                    }
+                };
+                let prologue = load(&self.model.host_prologue)?;
+                let epilogue = load(&self.model.host_epilogue)?;
+                Some(HostPipeline {
+                    _runtime: runtime,
+                    prologue,
+                    epilogue,
+                    input_shape: self.host_input_shape,
+                })
+            }
+        };
+
+        Ok(InferenceSession {
+            model: self.model,
+            program,
+            sys,
+            host,
+            images_run: 0,
+            total_mvu_cycles: 0,
+            total_system_cycles: 0,
+            total_bottleneck_cycles: 0,
+        })
+    }
+}
+
+/// The compiled command stream, by execution mode.
+enum Program {
+    Pipelined(CompiledModel),
+    Distributed(DistributedPlan),
+}
+
+/// PJRT host prologue/epilogue owned by the session.
+struct HostPipeline {
+    _runtime: Runtime,
+    prologue: Option<HostModule>,
+    epilogue: Option<HostModule>,
+    input_shape: Vec<i64>,
+}
+
+/// Result of one accelerator run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunOutput {
+    /// The final activation tensor.
+    pub output: Tensor3,
+    /// Per-MVU busy cycles for this image (pipelined mode: per-layer).
+    pub mvu_cycles: Vec<u64>,
+    /// Sum of MVU busy cycles for this image.
+    pub total_mvu_cycles: u64,
+    /// Global system cycles for this image.
+    pub system_cycles: u64,
+    /// 0-based index of this image within the session.
+    pub image_index: u64,
+}
+
+/// Result of a full host-prologue → array → host-epilogue run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostRunOutput {
+    /// Epilogue output (the classifier logits).
+    pub logits: Vec<f32>,
+    /// The accelerator-portion stats and activations.
+    pub accel: RunOutput,
+}
+
+/// Cumulative session counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionMetrics {
+    pub images: u64,
+    pub total_mvu_cycles: u64,
+    pub total_system_cycles: u64,
+    /// Sum over runs of the *slowest* MVU's busy cycles — the pipeline
+    /// bottleneck stage, which bounds steady-state throughput.
+    pub total_bottleneck_cycles: u64,
+}
+
+impl SessionMetrics {
+    /// Mean MVU cycles per image (0 when nothing ran).
+    pub fn mean_mvu_cycles(&self) -> u64 {
+        if self.images == 0 {
+            0
+        } else {
+            self.total_mvu_cycles / self.images
+        }
+    }
+
+    /// Steady-state FPS estimate at `clock_hz`: a pipelined run is bounded
+    /// by its slowest stage (a distributed run by its slowest chunk), so
+    /// the per-image cost is the mean *bottleneck* MVU's cycles, not the
+    /// work-conserving mean over the array.
+    pub fn fps_at(&self, clock_hz: u64) -> f64 {
+        if self.images == 0 || self.total_bottleneck_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz as f64 / (self.total_bottleneck_cycles as f64 / self.images as f64)
+    }
+}
+
+/// A warm, weight-resident inference session over the simulated
+/// accelerator. See the [module docs](self) for the lifecycle.
+pub struct InferenceSession {
+    model: Model,
+    program: Program,
+    sys: System,
+    host: Option<HostPipeline>,
+    images_run: u64,
+    total_mvu_cycles: u64,
+    total_system_cycles: u64,
+    total_bottleneck_cycles: u64,
+}
+
+impl InferenceSession {
+    /// The model this session serves.
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// The generated RISC-V assembly listing.
+    pub fn asm(&self) -> &str {
+        match &self.program {
+            Program::Pipelined(c) => &c.asm,
+            Program::Distributed(p) => &p.asm,
+        }
+    }
+
+    /// Instruction count of the loaded program.
+    pub fn program_len(&self) -> usize {
+        match &self.program {
+            Program::Pipelined(c) => c.program.len(),
+            Program::Distributed(p) => p.program.len(),
+        }
+    }
+
+    /// Cumulative counters across all completed runs.
+    pub fn metrics(&self) -> SessionMetrics {
+        SessionMetrics {
+            images: self.images_run,
+            total_mvu_cycles: self.total_mvu_cycles,
+            total_system_cycles: self.total_system_cycles,
+            total_bottleneck_cycles: self.total_bottleneck_cycles,
+        }
+    }
+
+    /// Run one quantized input image through the array and return the final
+    /// activations plus cycle accounting. Only activation state is reset
+    /// between calls; weights, scalers, biases and the program stay
+    /// resident from [`SessionBuilder::build`].
+    pub fn run(&mut self, input: &Tensor3) -> Result<RunOutput, SessionError> {
+        self.sys.reset_run_state();
+        match &self.program {
+            Program::Pipelined(c) => c.load_input(&mut self.sys, input),
+            Program::Distributed(p) => p.load_input(&mut self.sys, input),
+        }
+
+        let exit = self.sys.run();
+        match exit {
+            SystemExit::Done | SystemExit::AllExited => {}
+            SystemExit::MaxCycles => {
+                return Err(SessionError::FuelExhausted { fuel: self.sys.max_cycles() })
+            }
+            SystemExit::Deadlock => return Err(SessionError::Deadlock),
+            SystemExit::Fault { hart, trap } => {
+                // A rejected launch surfaces as an illegal CSR write; prefer
+                // the recorded launch diagnostics over the raw trap.
+                if !self.sys.launch_errors().is_empty() {
+                    return Err(SessionError::Launch(self.sys.launch_errors().to_vec()));
+                }
+                return Err(SessionError::Fault { hart, trap });
+            }
+        }
+        if !self.sys.launch_errors().is_empty() {
+            return Err(SessionError::Launch(self.sys.launch_errors().to_vec()));
+        }
+
+        let output = match &self.program {
+            Program::Pipelined(c) => {
+                c.read_output(&self.sys, self.model.layers.last().unwrap().co)
+            }
+            Program::Distributed(p) => p.read_output(&self.sys, &self.model.layers[0]),
+        };
+        let mvu_cycles: Vec<u64> = self.sys.mvus.iter().map(|m| m.busy_cycles()).collect();
+        let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
+        let system_cycles = self.sys.cycles();
+        let image_index = self.images_run;
+        self.images_run += 1;
+        self.total_mvu_cycles += total_mvu_cycles;
+        self.total_system_cycles += system_cycles;
+        self.total_bottleneck_cycles += mvu_cycles.iter().max().copied().unwrap_or(0);
+        Ok(RunOutput { output, mvu_cycles, total_mvu_cycles, system_cycles, image_index })
+    }
+
+    /// Run one raw f32 image through host prologue → MVU array → host
+    /// epilogue. Requires the session to have been built with
+    /// [`SessionBuilder::artifacts`] and the model to name both host
+    /// modules.
+    pub fn run_image(&mut self, image: &[f32]) -> Result<HostRunOutput, SessionError> {
+        let l0 = self
+            .model
+            .layers
+            .first()
+            .ok_or(SessionError::Compile(CompileError::LayerCount(0)))?;
+        let (ci, in_h, in_w) = (l0.ci, l0.in_h, l0.in_w);
+        let q = {
+            let host = self.host.as_ref().ok_or(SessionError::Artifact(
+                RuntimeError::Missing("session built without .artifacts(...)".into()),
+            ))?;
+            let prologue = host.prologue.as_ref().ok_or(SessionError::Artifact(
+                RuntimeError::Missing("model names no host prologue".into()),
+            ))?;
+            prologue.run_f32_to_i32(image, &host.input_shape)?
+        };
+        let input = Tensor3 { c: ci, h: in_h, w: in_w, data: q };
+        let accel = self.run(&input)?;
+
+        let last = self.model.layers.last().unwrap();
+        let acts_shape =
+            [1i64, last.co as i64, last.out_h() as i64, last.out_w() as i64];
+        let host = self.host.as_ref().unwrap();
+        let epilogue = host.epilogue.as_ref().ok_or(SessionError::Artifact(
+            RuntimeError::Missing("model names no host epilogue".into()),
+        ))?;
+        let logits = epilogue.run_i32_to_f32(&accel.output.data, &acts_shape)?;
+        Ok(HostRunOutput { logits, accel })
+    }
+}
+
+/// A session slots straight into the serving coordinator: one engine per
+/// worker thread, each owning its own warm system (PJRT executables are
+/// thread-affine, so sessions are built inside the worker's
+/// `EngineFactory`).
+impl Engine for InferenceSession {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+        images
+            .iter()
+            .map(|img| {
+                let out = self
+                    .run_image(img)
+                    .unwrap_or_else(|e| panic!("session inference failed: {e}"));
+                (out.logits, out.accel.total_mvu_cycles)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SystemConfig;
+    use crate::model::zoo::{resnet9_cifar10, Rng};
+    use crate::quant::QuantSerCfg;
+    use crate::sim::{conv2d_i32, requant_i32};
+
+    fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
+        let mut t = input.clone();
+        for l in &model.layers {
+            let acc = conv2d_i32(&t, &l.weights, l.spec());
+            t = requant_i32(
+                &acc,
+                &l.quant.scale,
+                &l.quant.bias,
+                QuantSerCfg {
+                    msb_index: l.quant.quant_msb,
+                    out_bits: l.oprec.bits,
+                    saturate: true,
+                },
+                l.relu,
+            );
+        }
+        t
+    }
+
+    /// First six ResNet9 layers at 16×16 — fast enough for debug-mode unit
+    /// tests while still exercising the full pipelined chain.
+    fn tiny_resnet9() -> Model {
+        let mut m = resnet9_cifar10(2, 2);
+        m.layers.truncate(6);
+        let mut h = 16;
+        for l in &mut m.layers {
+            l.in_h = h;
+            l.in_w = h;
+            if l.stride == 2 {
+                h /= 2;
+            }
+        }
+        m.validate().unwrap();
+        m
+    }
+
+    fn random_input(m: &Model, seed: u64) -> Tensor3 {
+        let l0 = &m.layers[0];
+        let mut rng = Rng(seed);
+        Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+            rng.range_i32(0, l0.aprec.max_value())
+        })
+    }
+
+    /// The headline property: a warm session serving N images is bit-exact
+    /// with building a fresh system per image.
+    #[test]
+    fn warm_session_matches_fresh_system_per_image() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m.clone()).build().unwrap();
+        let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        for seed in [1u64, 2, 3, 4] {
+            let input = random_input(&m, seed);
+            let warm = session.run(&input).unwrap();
+            // Fresh per-image rebuild (the old cold path).
+            let mut sys = System::new(SystemConfig::default());
+            compiled.load_into(&mut sys, &input);
+            assert_eq!(sys.run(), SystemExit::AllExited);
+            let cold = compiled.read_output(&sys, m.layers.last().unwrap().co);
+            assert_eq!(warm.output, cold, "seed {seed}: warm != cold");
+            assert_eq!(warm.output, golden_forward(&m, &input), "seed {seed}: != golden");
+            assert_eq!(warm.total_mvu_cycles, sys.total_mvu_busy_cycles(), "seed {seed}");
+        }
+        let metrics = session.metrics();
+        assert_eq!(metrics.images, 4);
+        assert_eq!(metrics.total_mvu_cycles, metrics.mean_mvu_cycles() * 4);
+        // The bottleneck stage is at most the whole array's work and the
+        // FPS estimate is finite and positive.
+        assert!(metrics.total_bottleneck_cycles > 0);
+        assert!(metrics.total_bottleneck_cycles <= metrics.total_mvu_cycles);
+        assert!(metrics.fps_at(crate::CLOCK_HZ) > 0.0);
+    }
+
+    #[test]
+    fn image_indices_increment() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m.clone()).build().unwrap();
+        let input = random_input(&m, 9);
+        assert_eq!(session.run(&input).unwrap().image_index, 0);
+        assert_eq!(session.run(&input).unwrap().image_index, 1);
+    }
+
+    #[test]
+    fn tiny_fuel_yields_fuel_exhausted() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m.clone()).fuel(500).build().unwrap();
+        let err = session.run(&random_input(&m, 3)).unwrap_err();
+        assert_eq!(err, SessionError::FuelExhausted { fuel: 500 });
+        // The session stays usable: bump nothing, just observe the typed
+        // error is stable across calls.
+        assert!(matches!(
+            session.run(&random_input(&m, 4)),
+            Err(SessionError::FuelExhausted { fuel: 500 })
+        ));
+    }
+
+    #[test]
+    fn malformed_model_yields_compile_error() {
+        let mut m = tiny_resnet9();
+        m.layers[1].ci = 100; // breaks the channel chain
+        match SessionBuilder::new(m).build() {
+            Err(SessionError::Compile(CompileError::InvalidModel(_))) => {}
+            other => panic!("expected Compile(InvalidModel), got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn empty_model_yields_layer_count_error() {
+        let m = Model {
+            name: "empty".into(),
+            layers: vec![],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        match SessionBuilder::new(m).build() {
+            Err(SessionError::Compile(CompileError::LayerCount(0))) => {}
+            other => panic!("expected Compile(LayerCount(0)), got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn distributed_mode_requires_single_layer() {
+        let m = tiny_resnet9();
+        match SessionBuilder::new(m).mode(ExecutionMode::Distributed).build() {
+            Err(SessionError::Compile(CompileError::Mode(_))) => {}
+            other => panic!("expected Compile(Mode), got {:?}", other.err()),
+        }
+    }
+
+    /// Distributed sessions reuse weights across images too.
+    #[test]
+    fn distributed_session_matches_golden() {
+        let full = resnet9_cifar10(2, 2);
+        let mut layer = full.layers[5].clone(); // 256→256
+        layer.in_h = 8;
+        layer.in_w = 8;
+        let single = Model {
+            name: "one-layer".into(),
+            layers: vec![layer.clone()],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        let mut session = SessionBuilder::new(single)
+            .mode(ExecutionMode::Distributed)
+            .build()
+            .unwrap();
+        for seed in [11u64, 12] {
+            let mut rng = Rng(seed);
+            let input = Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| {
+                rng.range_i32(0, 3)
+            });
+            let got = session.run(&input).unwrap().output;
+            let acc = conv2d_i32(&input, &layer.weights, layer.spec());
+            let want = requant_i32(
+                &acc,
+                &layer.quant.scale,
+                &layer.quant.bias,
+                QuantSerCfg {
+                    msb_index: layer.quant.quant_msb,
+                    out_bits: layer.oprec.bits,
+                    saturate: true,
+                },
+                layer.relu,
+            );
+            assert_eq!(got, want, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn run_image_without_artifacts_is_typed() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m).build().unwrap();
+        match session.run_image(&[0.0; 4]) {
+            Err(SessionError::Artifact(RuntimeError::Missing(_))) => {}
+            other => panic!("expected Artifact(Missing), got {:?}", other.err()),
+        }
+    }
+
+    /// Every variant is constructible and displays a readable message.
+    #[test]
+    fn error_variants_display() {
+        let variants: Vec<SessionError> = vec![
+            SessionError::Compile(CompileError::LayerCount(9)),
+            SessionError::Fault { hart: 3, trap: Trap::IllegalInstr(0) },
+            SessionError::Deadlock,
+            SessionError::FuelExhausted { fuel: 42 },
+            SessionError::Launch(vec!["hart 0: bad job".into()]),
+            SessionError::Artifact(RuntimeError::Disabled),
+        ];
+        for v in variants {
+            assert!(!v.to_string().is_empty(), "{v:?}");
+        }
+    }
+}

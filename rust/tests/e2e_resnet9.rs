@@ -1,15 +1,18 @@
 //! Integration: the full quantized ResNet9 through the pito-driven 8-MVU
-//! pipeline at real 32×32 scale, verified bit-exactly against the Rust
-//! golden model, plus Table-3 cycle accounting.
+//! pipeline at real 32×32 scale, driven by the unified
+//! [`barvinn::session::InferenceSession`] API and verified bit-exactly
+//! against the Rust golden model, plus Table-3 cycle accounting and the
+//! warm-session reuse guarantee.
 //!
 //! Heavy paths are release-only (`make test` runs `cargo test --release`);
 //! under debug they downscale to keep `cargo test` responsive.
 
 use barvinn::accel::{System, SystemConfig, SystemExit};
-use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::codegen::{compile_pipelined, CompileError, EdgePolicy};
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::model::Model;
 use barvinn::quant::QuantSerCfg;
+use barvinn::session::{SessionBuilder, SessionError};
 use barvinn::sim::{conv2d_i32, requant_i32, Tensor3};
 
 fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
@@ -48,20 +51,76 @@ fn model_under_test() -> Model {
     m
 }
 
+fn random_input(m: &Model, seed: u64) -> Tensor3 {
+    let l0 = &m.layers[0];
+    let mut rng = Rng(seed);
+    Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| rng.range_i32(0, 3))
+}
+
 #[test]
 fn pipelined_full_resnet9_bit_exact() {
     let m = model_under_test();
+    let mut session = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::PadInRam)
+        .build()
+        .unwrap();
+    let input = random_input(&m, 2026);
+    let out = session.run(&input).unwrap();
+    assert_eq!(out.output, golden_forward(&m, &input), "accelerator != golden");
+    assert_eq!(
+        out.total_mvu_cycles,
+        compile_pipelined(&m, EdgePolicy::PadInRam).unwrap().total_analytic_cycles()
+    );
+}
+
+/// The warm-session guarantee: one session serving ≥3 images is bit-exact
+/// with a freshly built system (full rebuild + weight reload) per image.
+#[test]
+fn session_reuse_matches_fresh_system_across_images() {
+    let m = model_under_test();
+    let mut session = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::PadInRam)
+        .build()
+        .unwrap();
     let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
-    let mut sys = System::new(SystemConfig::default());
-    let mut rng = Rng(2026);
-    let l0 = &m.layers[0];
-    let input = Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| rng.range_i32(0, 3));
-    compiled.load_into(&mut sys, &input);
-    let exit = sys.run();
-    assert_eq!(exit, SystemExit::AllExited, "{:?}", sys.launch_errors());
-    let got = compiled.read_output(&sys, m.layers.last().unwrap().co);
-    assert_eq!(got, golden_forward(&m, &input), "accelerator != golden");
-    assert_eq!(sys.total_mvu_busy_cycles(), compiled.total_analytic_cycles());
+    for seed in [7u64, 8, 9] {
+        let input = random_input(&m, seed);
+        let warm = session.run(&input).unwrap();
+
+        let mut fresh = System::new(SystemConfig::default());
+        compiled.load_into(&mut fresh, &input);
+        assert_eq!(fresh.run(), SystemExit::AllExited, "{:?}", fresh.launch_errors());
+        let cold = compiled.read_output(&fresh, m.layers.last().unwrap().co);
+
+        assert_eq!(warm.output, cold, "seed {seed}: warm session != fresh system");
+        assert_eq!(warm.output, golden_forward(&m, &input), "seed {seed}: != golden");
+        assert_eq!(
+            warm.total_mvu_cycles,
+            fresh.total_mvu_busy_cycles(),
+            "seed {seed}: cycle accounting drifted across reuse"
+        );
+        assert_eq!(warm.system_cycles, fresh.cycles(), "seed {seed}: system clock drifted");
+    }
+    assert_eq!(session.metrics().images, 3);
+}
+
+/// Typed errors surface through the integration-level API: a tiny fuel
+/// limit exhausts, a malformed model fails compilation.
+#[test]
+fn session_errors_surface_typed() {
+    let m = model_under_test();
+    let mut starved = SessionBuilder::new(m.clone()).fuel(200).build().unwrap();
+    match starved.run(&random_input(&m, 1)) {
+        Err(SessionError::FuelExhausted { fuel: 200 }) => {}
+        other => panic!("expected FuelExhausted, got {:?}", other.map(|o| o.image_index)),
+    }
+
+    let mut bad = model_under_test();
+    bad.layers[2].weights.pop(); // weight length mismatch
+    match SessionBuilder::new(bad).build() {
+        Err(SessionError::Compile(CompileError::InvalidModel(_))) => {}
+        other => panic!("expected Compile(InvalidModel), got {:?}", other.err()),
+    }
 }
 
 #[test]
@@ -83,59 +142,47 @@ fn table3_cycles_full_scale() {
 #[cfg_attr(debug_assertions, ignore = "release-only (make test): full 32x32 measured run")]
 fn table3_cycles_measured_full_scale() {
     let m = resnet9_cifar10(2, 2);
-    let compiled = compile_pipelined(&m, EdgePolicy::SkipEdges).unwrap();
-    let mut sys = System::new(SystemConfig::default());
-    let mut rng = Rng(7);
-    let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
-    compiled.load_into(&mut sys, &input);
-    assert_eq!(sys.run(), SystemExit::AllExited);
+    let mut session = SessionBuilder::new(m)
+        .edge_policy(EdgePolicy::SkipEdges)
+        .build()
+        .unwrap();
+    let input = Tensor3::from_fn(64, 32, 32, {
+        let mut rng = Rng(7);
+        move |_, _, _| rng.range_i32(0, 3)
+    });
+    let out = session.run(&input).unwrap();
     let expected = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
     for (h, &want) in expected.iter().enumerate() {
-        assert_eq!(sys.mvus[h].busy_cycles(), want, "layer {h}");
+        assert_eq!(out.mvu_cycles[h], want, "layer {h}");
     }
-    assert_eq!(sys.total_mvu_busy_cycles(), 194_688, "Table 3 total");
+    assert_eq!(out.total_mvu_cycles, 194_688, "Table 3 total");
 }
 
 #[test]
 fn mixed_precision_pipeline() {
     // 1-bit weights / 2-bit activations end-to-end (precision is per-MVU
-    // runtime state).
-    let mut m = resnet9_cifar10(2, 1);
-    let mut h = 8;
-    for l in &mut m.layers {
-        l.in_h = h;
-        l.in_w = h;
-        if l.stride == 2 {
-            h /= 2;
-        }
-    }
-    m.layers.truncate(5);
-    m.validate().unwrap();
-    let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
-    let mut sys = System::new(SystemConfig::default());
-    let mut rng = Rng(11);
-    let input = Tensor3::from_fn(64, 8, 8, |_, _, _| rng.range_i32(0, 3));
-    compiled.load_into(&mut sys, &input);
-    assert_eq!(sys.run(), SystemExit::AllExited);
-    let got = compiled.read_output(&sys, m.layers.last().unwrap().co);
-    assert_eq!(got, golden_forward(&m, &input));
-    // Half the cycles of the 2/2 configuration.
-    let m22 = {
-        let mut m22 = resnet9_cifar10(2, 2);
+    // runtime state), served through the same session API — runtime
+    // precision switching costs one build.
+    let shrink = |mut m: Model| {
         let mut h = 8;
-        for l in &mut m22.layers {
+        for l in &mut m.layers {
             l.in_h = h;
             l.in_w = h;
             if l.stride == 2 {
                 h /= 2;
             }
         }
-        m22.layers.truncate(5);
-        m22
+        m.layers.truncate(5);
+        m.validate().unwrap();
+        m
     };
+    let m = shrink(resnet9_cifar10(2, 1));
+    let mut session = SessionBuilder::new(m.clone()).build().unwrap();
+    let input = random_input(&m, 11);
+    let out = session.run(&input).unwrap();
+    assert_eq!(out.output, golden_forward(&m, &input));
+    // Half the cycles of the 2/2 configuration.
+    let m22 = shrink(resnet9_cifar10(2, 2));
     let c22 = compile_pipelined(&m22, EdgePolicy::PadInRam).unwrap();
-    assert_eq!(
-        compiled.total_analytic_cycles() * 2,
-        c22.total_analytic_cycles()
-    );
+    assert_eq!(out.total_mvu_cycles * 2, c22.total_analytic_cycles());
 }
