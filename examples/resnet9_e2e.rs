@@ -4,8 +4,10 @@
 //!
 //! 1. `conv0` runs on the host via the AOT JAX artifact (PJRT);
 //! 2. `conv1..conv8` run on the simulated 8-MVU array through a warm
-//!    [`barvinn::session::InferenceSession`] — the *generated RISC-V
-//!    program* executing on the Pito barrel CPU;
+//!    [`barvinn::session::InferenceSession`] (turbo backend by default —
+//!    the compiled job stream replayed functionally; the cycle-accurate
+//!    Pito-driven path is asserted bit-identical by the test suite and
+//!    selectable with `SessionBuilder::exec_mode`);
 //! 3. `fc` runs on the host via PJRT;
 //! 4. logits are checked against the single-module golden artifact, and
 //!    every seam is checked against the Python-exported test vectors;
@@ -72,8 +74,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let want_acts = tensor_from(&tv.final_acts, &tv.final_acts_shape);
     ensure!(out.output == want_acts, "MVU activations != python test vector");
     println!(
-        "conv1..conv8 (Pito + MVUs): OK — {} MVU cycles, {} system cycles, \
-         {:.2}s wall ({:.1} M cycles/s)",
+        "conv1..conv8 (8-MVU array, {} backend): OK — {} MVU cycles, \
+         {} system cycles, {:.2}s wall ({:.1} M cycles/s)",
+        out.exec,
         out.total_mvu_cycles,
         out.system_cycles,
         sim_s,

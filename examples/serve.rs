@@ -5,7 +5,7 @@
 //! reports latency percentiles, throughput and simulated accelerator
 //! cycles.
 //!
-//! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests]`
+//! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests] [--exec cycle|turbo]`
 //! (the `pjrt` feature additionally needs `xla = "0.1"` added under
 //! `[dependencies]` — see Cargo.toml; without it this example exits with
 //! the typed `RuntimeError::Disabled`)
@@ -13,12 +13,24 @@
 use std::time::{Duration, Instant};
 
 use barvinn::coordinator::{BatcherConfig, Coordinator, Engine, EngineFactory};
+use barvinn::exec::ExecMode;
 use barvinn::runtime::ArtifactStore;
 use barvinn::session::SessionBuilder;
 use barvinn::CLOCK_HZ;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(16);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // First token that parses as a count is n_requests — flag values like
+    // `--exec cycle` never parse as usize, so position doesn't matter.
+    let n: usize = args.iter().find_map(|a| a.parse().ok()).unwrap_or(16);
+    // Serving defaults to the turbo backend — the coordinator's engines are
+    // throughput-facing; pass `--exec cycle` to serve off the
+    // cycle-accurate stepper instead (e.g. to validate timing under load).
+    let exec: ExecMode =
+        barvinn::exec::parse_exec_arg(&args, ExecMode::Turbo).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
     let store = ArtifactStore::open(None)?;
     let workers = 2;
     // Sessions are built inside their worker threads (PJRT executables are
@@ -33,6 +45,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 let model = store.model().expect("model");
                 let session = SessionBuilder::new(model)
                     .artifacts(store)
+                    .exec_mode(exec)
                     .build()
                     .expect("session");
                 Box::new(session) as Box<dyn Engine>
@@ -44,7 +57,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
     );
 
-    println!("serving {n} requests over {workers} workers...");
+    println!("serving {n} requests over {workers} workers ({exec} backend)...");
     let mut rng = barvinn::model::zoo::Rng(99);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)

@@ -1,10 +1,12 @@
 //! §Perf hot-path microbenchmarks: the MVU inner loop, the full pipelined
 //! system (Pito + 8 MVUs) as a cold per-image rebuild vs a warm
-//! weight-resident `InferenceSession`, the crossbar, the assembler and the
-//! JSON model load — the profile targets of EXPERIMENTS.md §Perf.
+//! weight-resident `InferenceSession`, the turbo vs cycle-accurate backend
+//! split, the crossbar, the assembler and the JSON model load — the
+//! profile targets of EXPERIMENTS.md §Perf.
 
 use barvinn::accel::{System, SystemConfig, SystemExit};
 use barvinn::codegen::{compile_pipelined, EdgePolicy};
+use barvinn::exec::ExecMode;
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::mvu::{Mvu, MvuConfig, XbarWrite};
 use barvinn::perf::benchkit::bench;
@@ -84,9 +86,10 @@ fn main() {
 
         let mut session = SessionBuilder::new(m.clone())
             .edge_policy(EdgePolicy::PadInRam)
+            .exec_mode(ExecMode::CycleAccurate)
             .build()
             .expect("session");
-        let warm = bench("session: warm weight-resident run()", 4000, || {
+        let warm = bench("session: warm cycle-accurate run()", 4000, || {
             let out = session.run(&input).expect("run");
             assert_eq!(out.system_cycles, sys_cycles, "warm run diverged from cold");
         });
@@ -101,6 +104,40 @@ fn main() {
             cold.per_iter.as_secs_f64() / warm.per_iter.as_secs_f64(),
             warm.per_iter_ms(),
             cold.per_iter_ms()
+        );
+
+        // --- functional/timing split: turbo vs cycle-accurate, same image ----
+        // Same warm session shape, same image; the only variable is the
+        // execution backend. Outputs and per-layer job cycles must be
+        // bit-identical (the proptest matrix enforces this exhaustively);
+        // wall-clock is the headline — the ISSUE acceptance bar is ≥ 5×.
+        let mut turbo_session = SessionBuilder::new(m.clone())
+            .edge_policy(EdgePolicy::PadInRam)
+            .exec_mode(ExecMode::Turbo)
+            .build()
+            .expect("turbo session");
+        let cycle_out = session.run(&input).expect("cycle run");
+        let turbo_out = turbo_session.run(&input).expect("turbo run");
+        assert_eq!(turbo_out.output, cycle_out.output, "backends disagree on outputs");
+        assert_eq!(
+            turbo_out.mvu_cycles, cycle_out.mvu_cycles,
+            "backends disagree on per-layer job cycles"
+        );
+        let turbo = bench("session: warm turbo run()", 4000, || {
+            let out = turbo_session.run(&input).expect("turbo run");
+            assert_eq!(out.total_mvu_cycles, cycle_out.total_mvu_cycles);
+        });
+        let speedup = warm.per_iter.as_secs_f64() / turbo.per_iter.as_secs_f64();
+        println!(
+            "  → turbo backend is {:.1}x the cycle-accurate path \
+             ({:.3} ms vs {:.3} ms per image, bit-identical outputs)",
+            speedup,
+            turbo.per_iter_ms(),
+            warm.per_iter_ms()
+        );
+        assert!(
+            speedup >= 5.0,
+            "turbo speedup regressed below the 5x acceptance bar: {speedup:.2}x"
         );
     }
 

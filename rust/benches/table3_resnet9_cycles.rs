@@ -1,13 +1,14 @@
 //! Table 3: per-layer computation cost of 2b/2b ResNet9 on CIFAR10.
 //! Regenerates every row by (a) the analytic model and (b) executing the
-//! generated RISC-V program on the cycle-accurate simulator through a
-//! SkipEdges-mode `InferenceSession` (one warm run reports all eight
-//! layers at once — layer `i` runs on MVU `i`), and asserts exact equality
-//! with the paper (total 194,688). Also times the simulator.
+//! model through a SkipEdges-mode `InferenceSession` on **both** execution
+//! backends (one warm run reports all eight layers at once — layer `i`
+//! runs on MVU `i`), asserting the cycle counts are backend-invariant and
+//! exactly equal to the paper (total 194,688). Also times the simulator.
 
 use barvinn::accel::{System, SystemConfig};
 use barvinn::codegen::layout::{ActLayout, WeightLayout};
 use barvinn::codegen::{conv_jobs, layer_cycles, EdgePolicy};
+use barvinn::exec::ExecMode;
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::perf::benchkit::{bench, report_table};
 use barvinn::session::SessionBuilder;
@@ -17,15 +18,28 @@ fn main() {
     let m = resnet9_cifar10(2, 2);
     let paper = [34560u64, 34560, 17280, 32256, 16128, 27648, 13824, 18432];
 
-    // One warm session in Table-3-exact SkipEdges mode: the per-MVU busy
-    // counters of a single run are exactly the per-layer costs.
-    let mut session = SessionBuilder::new(m.clone())
-        .edge_policy(EdgePolicy::SkipEdges)
-        .build()
-        .expect("session");
+    // One warm session per backend in Table-3-exact SkipEdges mode: the
+    // per-MVU busy counters of a single run are exactly the per-layer
+    // costs, and they must not depend on which backend executed the jobs.
     let mut rng = Rng(5);
     let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
+    let mut session = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::SkipEdges)
+        .exec_mode(ExecMode::CycleAccurate)
+        .build()
+        .expect("session");
     let out = session.run(&input).expect("run");
+    let mut turbo_session = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::SkipEdges)
+        .exec_mode(ExecMode::Turbo)
+        .build()
+        .expect("turbo session");
+    let turbo_out = turbo_session.run(&input).expect("turbo run");
+    assert_eq!(
+        turbo_out.mvu_cycles, out.mvu_cycles,
+        "Table-3 cycle counts must be backend-invariant"
+    );
+    assert_eq!(turbo_out.output, out.output, "backends disagree on outputs");
 
     let mut rows = Vec::new();
     let mut total_analytic = 0;

@@ -10,9 +10,12 @@
 //! bit-product doubling, BARVINN ahead of FINN in raw FPS, FINN ahead in
 //! FPS/kLUT at 2/2 (using the conservative bound).
 
+use barvinn::exec::ExecMode;
 use barvinn::model::zoo;
 use barvinn::perf::benchkit::report_table;
 use barvinn::perf::{cycle_model, finn, resource_model};
+use barvinn::session::{ExecutionMode, SessionBuilder};
+use barvinn::sim::Tensor3;
 use barvinn::CLOCK_HZ;
 
 fn main() {
@@ -78,4 +81,44 @@ fn main() {
         "\nshape checks passed: halving law, paper values inside the model\n\
          bracket, BARVINN FPS lead, FINN FPS/kLUT lead at 2/2"
     );
+
+    // Backend invariance at every Table-5 precision point: the simulated
+    // cycle counts behind the FPS scaling law must not depend on the
+    // execution backend. One distributed-mode conv layer per (W/A) point,
+    // run through both backends on the same input.
+    for (w, a) in [(1u8, 1u8), (1, 2), (2, 2)] {
+        let full = zoo::resnet9_cifar10(a, w);
+        let mut layer = full.layers[5].clone(); // 256→256 conv
+        layer.in_h = 8;
+        layer.in_w = 8;
+        let single = barvinn::model::Model {
+            name: format!("table5-{w}w{a}a"),
+            layers: vec![layer.clone()],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        let mut rng = zoo::Rng(42 + w as u64 * 8 + a as u64);
+        let input = Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| {
+            rng.range_i32(0, layer.aprec.max_value())
+        });
+        let run = |exec: ExecMode| {
+            let mut s = SessionBuilder::new(single.clone())
+                .mode(ExecutionMode::Distributed)
+                .exec_mode(exec)
+                .build()
+                .expect("session");
+            s.run(&input).expect("run")
+        };
+        let cyc = run(ExecMode::CycleAccurate);
+        let trb = run(ExecMode::Turbo);
+        assert_eq!(
+            trb.mvu_cycles, cyc.mvu_cycles,
+            "{w}/{a}: per-MVU cycles must be backend-invariant"
+        );
+        assert_eq!(trb.output, cyc.output, "{w}/{a}: outputs must be backend-invariant");
+        println!(
+            "backend invariance {w}/{a}: {} MVU cycles on both backends",
+            trb.total_mvu_cycles
+        );
+    }
 }

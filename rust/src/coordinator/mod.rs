@@ -13,7 +13,10 @@
 //!
 //! * [`Engine`] — anything that can run one image to logits. The real
 //!   implementation drives conv0/fc through PJRT and conv1..8 through the
-//!   cycle-accurate MVU array (`examples/serve.rs`); tests use mocks.
+//!   MVU array via an `InferenceSession` built in **turbo** execution mode
+//!   (`examples/serve.rs`) — serving engines want the job-level functional
+//!   backend; its outputs and cycle accounting are bit-identical to the
+//!   cycle-accurate stepper (see [`crate::exec`]). Tests use mocks.
 //! * [`Batcher`] — groups queued requests (weight reuse amortisation).
 //! * [`Router`] — least-loaded dispatch over workers.
 //! * [`Metrics`] — counters + latency aggregates.

@@ -1,0 +1,119 @@
+//! Execution backends: the functional/timing split.
+//!
+//! The simulator carries two ways to advance the MVU datapath that agree
+//! bit-for-bit on every output word and on every reported job cycle:
+//!
+//! * [`ExecMode::CycleAccurate`] — one call to `Mvu::step` per modelled
+//!   clock, interleaved with the Pito barrel CPU and the crossbar FIFOs.
+//!   This is the verifiable ground truth: it observes arbitration,
+//!   polling, IRQ latency and every other timing artefact.
+//! * [`ExecMode::Turbo`] — a job-level functional executor
+//!   ([`run_job_turbo`]): an entire MVU job's outputs are computed in one
+//!   call by replaying the same [`crate::mvu::JobWalk`] address sequence
+//!   over the packed bit-plane RAMs and running the shared
+//!   [`crate::mvu::OutputStage`] once per output vector. Cycles are
+//!   *reported* from the hardware's own per-job formula
+//!   `outputs · b_a · b_w · tiles` ([`crate::mvu::JobConfig::cycles`]) —
+//!   the exact count the stepper would have consumed — so Table-3/Table-5
+//!   accounting is backend-invariant while wall-clock drops by an order of
+//!   magnitude (no CPU interpretation, no per-cycle FIFO modelling).
+//!
+//! What turbo does *not* model: the global system clock stops being a
+//! timing estimate. On the direct-drive path (`System::run_job`, which is
+//! what `InferenceSession::run` replays) it advances by exactly the booked
+//! MVP job cycles; on the CPU-driven path (`System::run` executing a Pito
+//! program in turbo mode) it counts CPU orchestration steps while jobs
+//! complete within their launch cycle — an orchestration count, not
+//! simulated time. Only the cycle-accurate backend's clock is timing
+//! truth. A job's crossbar traffic is likewise delivered in one batch at
+//! job completion rather than one word per cycle; jobs that read
+//! activation words they themselves wrote *through the crossbar* mid-job
+//! would observe different RAM contents, and no generated workload does
+//! that (self-updates use `OutputDest::SelfRam`, which both backends apply
+//! in identical per-output order).
+//!
+//! Equivalence is enforced by `rust/tests/proptests.rs` (randomized
+//! precisions/tiles/destinations vs the `sim::golden` reference) and the
+//! ResNet-9 e2e tests; the speedup is tracked in `rust/benches/hotpath.rs`.
+
+mod turbo;
+
+pub use turbo::run_job_turbo;
+
+/// Which execution backend advances the MVU datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// One modelled clock per step: CPU + MVUs + crossbar in lock-step.
+    /// Authoritative for *timing* (system cycles, arbitration, latency).
+    #[default]
+    CycleAccurate,
+    /// Job-level functional execution with formula-reported cycles.
+    /// Authoritative for *serving throughput*; numerics and per-job cycle
+    /// accounting are identical to the stepper by construction and by test.
+    Turbo,
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecMode::CycleAccurate => "cycle-accurate",
+            ExecMode::Turbo => "turbo",
+        })
+    }
+}
+
+/// Parse a CLI backend name (`cycle` | `turbo`).
+impl std::str::FromStr for ExecMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cycle" | "cycle-accurate" => Ok(ExecMode::CycleAccurate),
+            "turbo" => Ok(ExecMode::Turbo),
+            other => Err(format!("unknown exec backend '{other}' (cycle|turbo)")),
+        }
+    }
+}
+
+/// Scan CLI args for `--exec <cycle|turbo>`: `Ok(default)` when the flag is
+/// absent, `Err(message)` when its value is missing or invalid. The one
+/// parser every binary (`barvinn run`, `examples/serve.rs`) shares, so the
+/// flag's contract cannot drift between them.
+pub fn parse_exec_arg(args: &[String], default: ExecMode) -> Result<ExecMode, String> {
+    let Some(i) = args.iter().position(|a| a == "--exec") else {
+        return Ok(default);
+    };
+    match args.get(i + 1) {
+        None => Err("--exec requires a value (cycle|turbo)".into()),
+        Some(v) => v.parse(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_and_displays() {
+        assert_eq!("cycle".parse::<ExecMode>().unwrap(), ExecMode::CycleAccurate);
+        assert_eq!("turbo".parse::<ExecMode>().unwrap(), ExecMode::Turbo);
+        assert!("warp".parse::<ExecMode>().is_err());
+        assert_eq!(ExecMode::Turbo.to_string(), "turbo");
+        assert_eq!(ExecMode::default(), ExecMode::CycleAccurate);
+    }
+
+    #[test]
+    fn exec_arg_scanning() {
+        let args = |s: &[&str]| -> Vec<String> { s.iter().map(|a| a.to_string()).collect() };
+        assert_eq!(
+            parse_exec_arg(&args(&["--images", "3"]), ExecMode::Turbo),
+            Ok(ExecMode::Turbo)
+        );
+        assert_eq!(
+            parse_exec_arg(&args(&["--exec", "cycle"]), ExecMode::Turbo),
+            Ok(ExecMode::CycleAccurate)
+        );
+        assert!(parse_exec_arg(&args(&["--exec"]), ExecMode::Turbo).is_err());
+        assert!(parse_exec_arg(&args(&["--exec", "warp"]), ExecMode::Turbo).is_err());
+    }
+}

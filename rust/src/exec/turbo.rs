@@ -1,0 +1,161 @@
+//! The job-level turbo executor: compute a whole MVU job functionally.
+//!
+//! The numerics of a job are fully determined by its RAM contents and its
+//! AGU/sequencer walk, so instead of modelling one clock per MAC we drain
+//! the shared [`JobWalk`] in a tight loop — read activation word, read
+//! 4096-bit weight word, 64 AND+POPCNT accumulates — and run the shared
+//! [`OutputStage`] once per output vector. The inner arithmetic is the
+//! *same* packed-bit-plane popcount kernel the cycle-accurate stepper
+//! executes (`vvp::bitserial_dot` semantics over `u64` planes); what turbo
+//! removes is everything around it: the RISC-V interpreter, the idle-MVU
+//! sweep, the per-cycle crossbar arbitration and the per-step `Vec`
+//! plumbing.
+//!
+//! Cycle accounting uses the per-job closed form the hardware obeys,
+//! [`JobConfig::cycles`] = `outputs · b_a · b_w · tiles`, which equals the
+//! number of `JobWalk::step` calls made here and the number of busy cycles
+//! the stepper would have burned — asserted in debug builds and enforced
+//! by the proptest matrix.
+
+use crate::mvu::{JobConfig, JobWalk, Mvu, MvuState, OutputStage, XbarWrite};
+use crate::quant::BLOCK;
+
+/// Execute one whole job on `mvu`: all RAM effects are applied exactly as
+/// the cycle-accurate stepper would, the completion IRQ is raised and the
+/// busy-cycle counter advances by the job formula. Returns the crossbar
+/// writes the job produced (in emission order) and the cycles booked.
+///
+/// Panics under the same contract as [`Mvu::launch`]: the MVU must be idle
+/// and the configuration valid.
+pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> (Vec<XbarWrite>, u64) {
+    assert!(
+        mvu.state() == MvuState::Idle,
+        "MVU{} turbo launch while busy",
+        mvu.id
+    );
+    if let Err(e) = cfg.validate() {
+        panic!("MVU{} bad job config: {e}", mvu.id);
+    }
+
+    let mut walk = JobWalk::new(cfg);
+    let mut out = OutputStage::new(cfg);
+    let mut writes = Vec::new();
+    let mut acc = [0i64; BLOCK];
+    let macs_per_output = walk.cycles_per_output();
+
+    for _ in 0..cfg.outputs {
+        // --- MVP: one output vector's worth of MACs ------------------------
+        // The arithmetic lives in `MacStep::apply` — the identical kernel
+        // `Mvu::step` executes, shared by construction.
+        for _ in 0..macs_per_output {
+            let mac = walk.step();
+            let act_word = mvu.act.read(mac.a_addr);
+            let weight_word = mvu.weights.read(mac.w_addr);
+            mac.apply(&mut acc, act_word, weight_word);
+        }
+
+        // --- post-MVP pipeline, once per output vector ----------------------
+        // `OutputStage::push_to` owns the dest-dispatch loop — identical to
+        // the stepper's, shared by construction.
+        let mvp_out: [i32; BLOCK] = std::array::from_fn(|l| acc[l] as i32);
+        acc = [0; BLOCK];
+        out.push_to(&mvp_out, cfg.dest, &mut mvu.act, &mvu.scalers, &mvu.biases, &mut writes);
+    }
+
+    let cycles = cfg.cycles();
+    debug_assert_eq!(cycles, macs_per_output * cfg.outputs as u64);
+    mvu.finish_job_accounting(cycles);
+    (writes, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvu::{AguCfg, MvuConfig, OutputDest};
+    use crate::quant::{pack_block, Precision, QuantSerCfg};
+
+    /// Weight image for a single 64×64 tile, plane-major MSB first.
+    fn tile_words(m: &[[i32; 64]; 64], prec: Precision) -> Vec<[u64; 64]> {
+        let rows: Vec<Vec<u64>> = m.iter().map(|r| pack_block(r, prec)).collect();
+        (0..prec.bits as usize)
+            .map(|p| std::array::from_fn(|r| rows[r][p]))
+            .collect()
+    }
+
+    fn job(dest: OutputDest) -> JobConfig {
+        JobConfig {
+            aprec: Precision::u(2),
+            wprec: Precision::s(2),
+            tiles: 1,
+            outputs: 1,
+            a_agu: AguCfg::from_strides(0, &[]),
+            w_agu: AguCfg::from_strides(0, &[]),
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::from_strides(1000, &[]),
+            scaler_en: false,
+            bias_en: false,
+            relu_en: false,
+            pool_count: 1,
+            quant: QuantSerCfg { msb_index: 15, out_bits: 16, saturate: false },
+            dest,
+        }
+    }
+
+    fn loaded_mvu(id: u8) -> Mvu {
+        let x: [i32; 64] = std::array::from_fn(|i| (i as i32 * 7 + 1) % 4);
+        let w: [[i32; 64]; 64] =
+            std::array::from_fn(|r| std::array::from_fn(|c| ((r * 64 + c) as i32 * 5 % 4) - 2));
+        let mut mvu = Mvu::new(id, MvuConfig::default());
+        mvu.act.load(0, &pack_block(&x, Precision::u(2)));
+        mvu.weights.load(0, &tile_words(&w, Precision::s(2)));
+        mvu
+    }
+
+    /// Turbo and the stepper agree on RAM contents, IRQ, counters, cycles.
+    #[test]
+    fn turbo_matches_stepper_self_ram() {
+        let cfg = job(OutputDest::SelfRam);
+
+        let mut stepped = loaded_mvu(0);
+        stepped.launch(cfg.clone());
+        let (step_writes, step_cycles) = stepped.run_to_completion();
+
+        let mut turbo = loaded_mvu(0);
+        let (turbo_writes, turbo_cycles) = run_job_turbo(&mut turbo, &cfg);
+
+        assert_eq!(turbo_cycles, step_cycles);
+        assert_eq!(turbo_writes, step_writes);
+        assert_eq!(turbo.busy_cycles(), stepped.busy_cycles());
+        assert_eq!(turbo.jobs_done(), 1);
+        assert!(turbo.irq_pending());
+        for p in 0..16 {
+            assert_eq!(turbo.act.read(1000 + p), stepped.act.read(1000 + p), "plane {p}");
+        }
+    }
+
+    /// Crossbar-destined jobs emit identical write streams.
+    #[test]
+    fn turbo_matches_stepper_xbar() {
+        let cfg = job(OutputDest::Xbar { dest_mask: 0b0110 });
+
+        let mut stepped = loaded_mvu(1);
+        stepped.launch(cfg.clone());
+        let (step_writes, _) = stepped.run_to_completion();
+
+        let mut turbo = loaded_mvu(1);
+        let (turbo_writes, cycles) = run_job_turbo(&mut turbo, &cfg);
+        assert_eq!(cycles, cfg.cycles());
+        assert_eq!(turbo_writes, step_writes);
+        assert_eq!(turbo_writes.len(), 16, "one write per output plane");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad job config")]
+    fn turbo_rejects_invalid_config() {
+        let mut cfg = job(OutputDest::SelfRam);
+        cfg.tiles = 0;
+        let mut mvu = Mvu::new(2, MvuConfig::default());
+        run_job_turbo(&mut mvu, &cfg);
+    }
+}

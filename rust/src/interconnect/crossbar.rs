@@ -28,6 +28,10 @@ pub struct DeliveredWrite {
 #[derive(Debug)]
 pub struct Crossbar {
     queues: Vec<VecDeque<XbarWrite>>,
+    /// Total writes currently queued across all sources — kept incremental
+    /// so [`Crossbar::busy`] is O(1) in the per-cycle exit checks of
+    /// `accel::System::run` rather than a scan over every port FIFO.
+    queued: usize,
     /// Perf counters.
     delivered: u64,
     stalled_cycles: u64,
@@ -37,6 +41,7 @@ impl Crossbar {
     pub fn new(ports: usize) -> Self {
         Crossbar {
             queues: (0..ports).map(|_| VecDeque::new()).collect(),
+            queued: 0,
             delivered: 0,
             stalled_cycles: 0,
         }
@@ -48,12 +53,14 @@ impl Crossbar {
 
     /// Enqueue writes produced by source `src` this cycle.
     pub fn push(&mut self, src: usize, writes: impl IntoIterator<Item = XbarWrite>) {
+        let before = self.queues[src].len();
         self.queues[src].extend(writes);
+        self.queued += self.queues[src].len() - before;
     }
 
-    /// Whether any write is still in flight.
+    /// Whether any write is still in flight. O(1).
     pub fn busy(&self) -> bool {
-        self.queues.iter().any(|q| !q.is_empty())
+        self.queued > 0
     }
 
     /// Depth of a source's output FIFO (backpressure observability).
@@ -95,6 +102,7 @@ impl Crossbar {
                 .all(|d| grant[d] == Some(src));
             if all_granted {
                 self.queues[src].pop_front();
+                self.queued -= 1;
                 for d in 0..n {
                     if (w.dest_mask >> d) & 1 == 1 {
                         out.push(DeliveredWrite { dest: d, addr: w.addr, word: w.word, source: src });

@@ -16,6 +16,9 @@
 //!   arbitration (§3.1.5).
 //! * [`accel`] — the whole accelerator: Pito + 8 MVUs + crossbar, with the
 //!   MVU CSR file bridged into the CPU (Fig. 1).
+//! * [`exec`] — pluggable execution backends: the cycle-accurate stepper
+//!   (timing ground truth) and the job-level turbo executor (functional,
+//!   formula-reported cycles) behind one `ExecMode` switch.
 //! * [`model`] — DNN model IR, ONNX-lite JSON ingestion and the model-zoo
 //!   channel census behind Fig. 2.
 //! * [`codegen`] — the code generator: tiling, bit-transposed weight export,
@@ -41,6 +44,7 @@
 pub mod accel;
 pub mod codegen;
 pub mod coordinator;
+pub mod exec;
 pub mod interconnect;
 pub mod model;
 pub mod mvu;

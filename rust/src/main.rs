@@ -9,12 +9,14 @@
 //! * `estimate <cnv|resnet50>` — Table 5/6 throughput estimates
 //! * `asm <file.s>`            — assemble a Pito program, print words
 //! * `disasm <hex words...>`   — disassemble
-//! * `run [--wbits N --abits N --images N]` — run quantized ResNet9
-//!                               end-to-end on the simulated accelerator
-//!                               through a warm `InferenceSession`
-//!                               (weights loaded once, any precision)
+//! * `run [--wbits N --abits N --images N --exec cycle|turbo]` — run
+//!                               quantized ResNet9 end-to-end on the
+//!                               simulated accelerator through a warm
+//!                               `InferenceSession` (weights loaded once,
+//!                               any precision, either execution backend)
 
 use barvinn::codegen::EdgePolicy;
+use barvinn::exec::ExecMode;
 use barvinn::model::zoo;
 use barvinn::perf::benchkit::report_table;
 use barvinn::perf::{cycle_model, finn, resource_model};
@@ -46,7 +48,9 @@ fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
          usage: barvinn <info|cycles|census|estimate|asm|disasm|run> [args]\n\
-         run flags: --wbits N --abits N --images N (warm InferenceSession)\n\
+         run flags: --wbits N --abits N --images N --exec cycle|turbo\n\
+                    (warm InferenceSession; turbo = job-level functional\n\
+                    backend, cycle = cycle-accurate Pito-driven stepper)\n\
          see README.md for details"
     );
 }
@@ -89,6 +93,13 @@ fn parse_flag(args: &[String], name: &str, default: u32) -> u32 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+fn parse_exec_flag(args: &[String]) -> ExecMode {
+    barvinn::exec::parse_exec_arg(args, ExecMode::Turbo).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    })
 }
 
 fn cycles(args: &[String]) {
@@ -199,12 +210,17 @@ fn run(args: &[String]) {
     let n_images = parse_flag(args, "--images", 1) as usize;
     let wb = parse_flag(args, "--wbits", 2) as u8;
     let ab = parse_flag(args, "--abits", 2) as u8;
+    let exec = parse_exec_flag(args);
     let m = zoo::resnet9_cifar10(ab, wb);
     let l0 = &m.layers[0];
     let (ci, in_h, in_w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
     // Compile once, load weights once; every image below is a warm run —
     // runtime precision switching costs one build, not one per image.
-    let mut session = match SessionBuilder::new(m).edge_policy(EdgePolicy::PadInRam).build() {
+    let mut session = match SessionBuilder::new(m)
+        .edge_policy(EdgePolicy::PadInRam)
+        .exec_mode(exec)
+        .build()
+    {
         Ok(s) => s,
         Err(e) => {
             eprintln!("session build failed: {e}");
@@ -212,7 +228,7 @@ fn run(args: &[String]) {
         }
     };
     println!(
-        "ResNet9 {wb}b weights / {ab}b activations — program: {} instructions",
+        "ResNet9 {wb}b weights / {ab}b activations — program: {} instructions, {exec} backend",
         session.program_len()
     );
     let mut rng = zoo::Rng(1);
@@ -221,8 +237,8 @@ fn run(args: &[String]) {
         let input = Tensor3::from_fn(ci, in_h, in_w, |_, _, _| rng.range_i32(0, amax));
         match session.run(&input) {
             Ok(out) => println!(
-                "image {i}: {} MVU cycles, {} system cycles",
-                out.total_mvu_cycles, out.system_cycles
+                "image {i}: {} MVU cycles, {} system cycles [{}]",
+                out.total_mvu_cycles, out.system_cycles, out.exec
             ),
             Err(e) => {
                 eprintln!("image {i} failed: {e}");

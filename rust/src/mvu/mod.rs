@@ -33,6 +33,7 @@ mod ram;
 mod scaler;
 mod transposer;
 mod vvp;
+mod walk;
 
 pub use agu::{Agu, AguCfg, AguLoop, AGU_LOOPS};
 pub use job::{ComboSeq, JobConfig, OutputDest};
@@ -42,3 +43,4 @@ pub use ram::{ActRam, BiasRam, ScalerRam, WeightRam, WEIGHT_WORD_LANES};
 pub use scaler::ScalerStage;
 pub use transposer::Transposer;
 pub use vvp::Vvp;
+pub use walk::{JobWalk, MacStep, OutputStage};

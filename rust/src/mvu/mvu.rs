@@ -8,11 +8,9 @@
 
 use crate::quant::BLOCK;
 
-use super::agu::Agu;
-use super::job::{ComboSeq, JobConfig, OutputDest};
-use super::pool::PoolRelu;
+use super::job::JobConfig;
 use super::ram::{ActRam, BiasRam, ScalerRam, WeightRam};
-use super::scaler::ScalerStage;
+use super::walk::{JobWalk, OutputStage};
 
 /// Static MVU memory geometry. Defaults sized like the paper's U250 build
 /// (1 MiB weight RAM, 256 KiB activation RAM per MVU).
@@ -55,17 +53,13 @@ pub struct XbarWrite {
 
 struct ActiveJob {
     cfg: JobConfig,
-    combos: ComboSeq,
-    a_agu: Agu,
-    w_agu: Agu,
-    s_agu: Agu,
-    b_agu: Agu,
-    o_agu: Agu,
-    scaler: ScalerStage,
-    pool: PoolRelu,
+    /// MVP-side walk (combo sequencer + operand AGUs), shared with the
+    /// turbo backend — see [`crate::mvu::JobWalk`].
+    walk: JobWalk,
+    /// Post-MVP pipeline (scaler → bias → pool/ReLU → QuantSer), likewise
+    /// shared — see [`crate::mvu::OutputStage`].
+    out: OutputStage,
     acc: [i64; BLOCK],
-    combo_idx: usize,
-    tile_idx: u32,
     outputs_done: u32,
 }
 
@@ -143,23 +137,41 @@ impl Mvu {
         if let Err(e) = cfg.validate() {
             panic!("MVU{} bad job config: {e}", self.id);
         }
-        let combos = ComboSeq::new(cfg.aprec, cfg.wprec);
         let job = ActiveJob {
-            combos,
-            a_agu: Agu::new(cfg.a_agu),
-            w_agu: Agu::new(cfg.w_agu),
-            s_agu: Agu::new(cfg.s_agu),
-            b_agu: Agu::new(cfg.b_agu),
-            o_agu: Agu::new(cfg.o_agu),
-            scaler: ScalerStage { scaler_en: cfg.scaler_en, bias_en: cfg.bias_en },
-            pool: PoolRelu::new(cfg.relu_en, cfg.pool_count),
+            walk: JobWalk::new(&cfg),
+            out: OutputStage::new(&cfg),
             acc: [0; BLOCK],
-            combo_idx: 0,
-            tile_idx: 0,
             outputs_done: 0,
             cfg,
         };
         self.job = Some(Box::new(job));
+    }
+
+    /// Remove a just-launched job and hand back its configuration — the
+    /// turbo dispatch path in [`crate::accel::System`] converts a CSR
+    /// `START` into a functional whole-job execution. Callers must invoke
+    /// this before the job has consumed any cycles: re-running a
+    /// partially-stepped job from scratch would double-count work and,
+    /// for self-RAM jobs, read back its own partial outputs.
+    pub(crate) fn take_launched_job(&mut self) -> Option<JobConfig> {
+        let job = self.job.take()?;
+        debug_assert_eq!(
+            job.walk.steps_taken(),
+            0,
+            "MVU{}: turbo takeover of a job that already consumed cycles",
+            self.id
+        );
+        Some(job.cfg)
+    }
+
+    /// Book a whole job's worth of completion state at once (turbo backend):
+    /// the cycles the job would have occupied the MVP, the done counter and
+    /// the completion IRQ.
+    pub(crate) fn finish_job_accounting(&mut self, cycles: u64) {
+        debug_assert!(self.job.is_none(), "MVU{} turbo accounting while busy", self.id);
+        self.busy_cycles += cycles;
+        self.jobs_done += 1;
+        self.irq_pending = true;
     }
 
     /// Advance one clock cycle. Returns crossbar writes emitted this cycle
@@ -171,76 +183,28 @@ impl Mvu {
         self.busy_cycles += 1;
 
         // --- MVP cycle -----------------------------------------------------
-        let (j, k, shift, sign) = job.combos.steps[job.combo_idx];
-        if shift && job.tile_idx == 0 {
-            for a in job.acc.iter_mut() {
-                *a <<= 1;
-            }
-        }
-        // AGUs emit tile-base addresses; the sequencer adds the bit-plane
-        // offset (planes are stored MSB-first within each block).
-        let a_addr = job.a_agu.next_addr() + (job.cfg.aprec.bits - 1 - j) as u32;
-        let w_addr = job.w_agu.next_addr() + (job.cfg.wprec.bits - 1 - k) as u32;
-        let act_word = self.act.read(a_addr);
-        let weight_word = self.weights.read(w_addr);
-        // §Perf: branch on the plane sign outside the lane loop so the body
-        // is a pure AND+POPCNT+ADD chain the compiler can vectorize.
-        if sign >= 0 {
-            for (lane, row) in weight_word.iter().enumerate() {
-                job.acc[lane] += (act_word & row).count_ones() as i64;
-            }
-        } else {
-            for (lane, row) in weight_word.iter().enumerate() {
-                job.acc[lane] -= (act_word & row).count_ones() as i64;
-            }
-        }
-
-        // --- sequencing ----------------------------------------------------
-        job.tile_idx += 1;
-        if job.tile_idx < job.cfg.tiles {
+        let mac = job.walk.step();
+        let act_word = self.act.read(mac.a_addr);
+        let weight_word = self.weights.read(mac.w_addr);
+        mac.apply(&mut job.acc, act_word, weight_word);
+        if !mac.output_done {
             return Vec::new();
         }
-        job.tile_idx = 0;
-        job.combo_idx += 1;
-        if job.combo_idx < job.combos.len() {
-            return Vec::new();
-        }
-        job.combo_idx = 0;
 
         // --- output vector complete: post-MVP pipeline ----------------------
         let mvp_out: [i32; BLOCK] = std::array::from_fn(|l| job.acc[l] as i32);
         job.acc = [0; BLOCK];
         job.outputs_done += 1;
 
-        let s_word = *self.scalers.read(job.s_agu.next_addr());
-        let b_word = *self.biases.read(job.b_agu.next_addr());
-        let scaled = job.scaler.apply(&mvp_out, &s_word, &b_word);
-
         let mut writes = Vec::new();
-        if let Some(pooled) = job.pool.push(&scaled) {
-            // QuantSer: requantize each lane and serialize to `out_bits`
-            // bit-plane words, MSB plane first.
-            let q: [u32; BLOCK] =
-                std::array::from_fn(|l| crate::quant::quantser(pooled[l], job.cfg.quant));
-            let base = job.o_agu.next_addr();
-            let ob = job.cfg.quant.out_bits;
-            for p in 0..ob {
-                let bit = ob - 1 - p; // plane p stores bit (ob-1-p)
-                let mut word = 0u64;
-                for (l, &qv) in q.iter().enumerate() {
-                    if (qv >> bit) & 1 == 1 {
-                        word |= 1 << l;
-                    }
-                }
-                let addr = base + p as u32;
-                match job.cfg.dest {
-                    OutputDest::SelfRam => self.act.write(addr, word),
-                    OutputDest::Xbar { dest_mask } => {
-                        writes.push(XbarWrite { dest_mask, addr, word })
-                    }
-                }
-            }
-        }
+        job.out.push_to(
+            &mvp_out,
+            job.cfg.dest,
+            &mut self.act,
+            &self.scalers,
+            &self.biases,
+            &mut writes,
+        );
 
         // --- job completion -------------------------------------------------
         if job.outputs_done == job.cfg.outputs {
@@ -268,6 +232,7 @@ impl Mvu {
 mod tests {
     use super::*;
     use crate::mvu::agu::AguCfg;
+    use crate::mvu::OutputDest;
     use crate::quant::{pack_block, Precision, QuantSerCfg};
 
     /// Build a weight-RAM image for a single 64×64 tile from a row-major

@@ -1,0 +1,316 @@
+//! The shared job walk: the exact traversal one MVU job makes over its
+//! RAMs, factored out of the per-cycle stepper so that *every* execution
+//! backend consumes the same address/sign/shift sequence.
+//!
+//! A job's numerics are fully determined by its RAM contents plus this
+//! walk (§3.1.3): the bit-combination sequencer supplies the `(j, k)`
+//! plane pair, the activation/weight AGUs supply the tile base addresses,
+//! and the plane offset `bits−1−j` is added by the sequencer. The
+//! cycle-accurate stepper ([`super::Mvu::step`]) advances the walk one MAC
+//! per modelled clock; the turbo backend ([`crate::exec::run_job_turbo`])
+//! drains it one output vector at a time. Both observe bit-identical
+//! addresses in bit-identical order, which is what makes the backends
+//! interchangeable.
+
+use crate::quant::BLOCK;
+
+use super::agu::Agu;
+use super::job::{ComboSeq, JobConfig, OutputDest};
+use super::mvu::XbarWrite;
+use super::pool::PoolRelu;
+use super::ram::{ActRam, BiasRam, ScalerRam};
+use super::scaler::ScalerStage;
+
+/// One MVP cycle of the walk: which words to read, how to combine them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacStep {
+    /// Activation-RAM word address (tile base + plane offset).
+    pub a_addr: u32,
+    /// Weight-RAM word address (tile base + plane offset).
+    pub w_addr: u32,
+    /// ±1 contribution sign of this bit-plane pair (−1 when exactly one
+    /// plane is a two's-complement sign plane).
+    pub sign: i32,
+    /// Shift the accumulator left one bit *before* this MAC (the sequencer
+    /// moved down one order of magnitude, Alg. 1 l.11).
+    pub shift: bool,
+    /// This MAC completes an output vector: read out the accumulator and
+    /// run the post-MVP pipeline.
+    pub output_done: bool,
+}
+
+impl MacStep {
+    /// Apply this MAC to the 64-lane accumulator: the one numeric kernel
+    /// both backends execute (shift, then 64 × AND + POPCNT ± accumulate).
+    /// Living here — not duplicated per backend — is what keeps the
+    /// bit-for-bit backend-equivalence contract a structural property.
+    ///
+    /// §Perf: branch on the plane sign outside the lane loop so the body
+    /// is a pure AND+POPCNT+ADD chain the compiler can vectorize.
+    #[inline]
+    pub fn apply(&self, acc: &mut [i64; BLOCK], act_word: u64, weight_word: &[u64; BLOCK]) {
+        if self.shift {
+            for a in acc.iter_mut() {
+                *a <<= 1;
+            }
+        }
+        if self.sign >= 0 {
+            for (lane, row) in weight_word.iter().enumerate() {
+                acc[lane] += (act_word & row).count_ones() as i64;
+            }
+        } else {
+            for (lane, row) in weight_word.iter().enumerate() {
+                acc[lane] -= (act_word & row).count_ones() as i64;
+            }
+        }
+    }
+}
+
+/// MVP-side walk state for one job: the combo sequencer, the two operand
+/// AGUs and the tile counter.
+#[derive(Debug, Clone)]
+pub struct JobWalk {
+    combos: ComboSeq,
+    a_agu: Agu,
+    w_agu: Agu,
+    a_bits: u8,
+    w_bits: u8,
+    tiles: u32,
+    combo_idx: usize,
+    tile_idx: u32,
+    steps_taken: u64,
+}
+
+impl JobWalk {
+    pub fn new(cfg: &JobConfig) -> Self {
+        JobWalk {
+            combos: ComboSeq::new(cfg.aprec, cfg.wprec),
+            a_agu: Agu::new(cfg.a_agu),
+            w_agu: Agu::new(cfg.w_agu),
+            a_bits: cfg.aprec.bits,
+            w_bits: cfg.wprec.bits,
+            tiles: cfg.tiles,
+            combo_idx: 0,
+            tile_idx: 0,
+            steps_taken: 0,
+        }
+    }
+
+    /// MVP cycles consumed per output vector (`b_a · b_w · tiles`).
+    pub fn cycles_per_output(&self) -> u64 {
+        self.combos.len() as u64 * self.tiles as u64
+    }
+
+    /// Total MACs emitted so far (= MVP cycles this job has consumed).
+    pub fn steps_taken(&self) -> u64 {
+        self.steps_taken
+    }
+
+    /// Advance one MVP cycle: emit the addresses/sign/shift for this MAC
+    /// and move the sequencer forward.
+    #[inline]
+    pub fn step(&mut self) -> MacStep {
+        let (j, k, shift, sign) = self.combos.steps[self.combo_idx];
+        // Shift only on the first tile of a shifting combo step.
+        let shift = shift && self.tile_idx == 0;
+        // AGUs emit tile-base addresses; the sequencer adds the bit-plane
+        // offset (planes are stored MSB-first within each block).
+        let a_addr = self.a_agu.next_addr() + (self.a_bits - 1 - j) as u32;
+        let w_addr = self.w_agu.next_addr() + (self.w_bits - 1 - k) as u32;
+        self.steps_taken += 1;
+        self.tile_idx += 1;
+        let mut output_done = false;
+        if self.tile_idx == self.tiles {
+            self.tile_idx = 0;
+            self.combo_idx += 1;
+            if self.combo_idx == self.combos.len() {
+                self.combo_idx = 0;
+                output_done = true;
+            }
+        }
+        MacStep { a_addr, w_addr, sign, shift, output_done }
+    }
+}
+
+/// The post-MVP output pipeline shared by both backends: scaler → bias →
+/// pool/ReLU → QuantSer, applied once per completed MVP output vector.
+#[derive(Debug, Clone)]
+pub struct OutputStage {
+    s_agu: Agu,
+    b_agu: Agu,
+    o_agu: Agu,
+    scaler: ScalerStage,
+    pool: PoolRelu,
+    quant: crate::quant::QuantSerCfg,
+}
+
+impl OutputStage {
+    pub fn new(cfg: &JobConfig) -> Self {
+        OutputStage {
+            s_agu: Agu::new(cfg.s_agu),
+            b_agu: Agu::new(cfg.b_agu),
+            o_agu: Agu::new(cfg.o_agu),
+            scaler: ScalerStage { scaler_en: cfg.scaler_en, bias_en: cfg.bias_en },
+            pool: PoolRelu::new(cfg.relu_en, cfg.pool_count),
+            quant: cfg.quant,
+        }
+    }
+
+    /// Feed one completed MVP output vector through the pipeline. When the
+    /// pool window fills, returns the output base address plus the
+    /// requantized plane words: plane `p` (MSB plane first) is the word
+    /// destined for address `base + p`, for `p < quant.out_bits`.
+    pub fn push(
+        &mut self,
+        mvp_out: &[i32; BLOCK],
+        scalers: &ScalerRam,
+        biases: &BiasRam,
+    ) -> Option<(u32, [u64; 16])> {
+        let s_word = *scalers.read(self.s_agu.next_addr());
+        let b_word = *biases.read(self.b_agu.next_addr());
+        let scaled = self.scaler.apply(mvp_out, &s_word, &b_word);
+        let pooled = self.pool.push(&scaled)?;
+        // QuantSer: requantize each lane and serialize to `out_bits`
+        // bit-plane words, MSB plane first.
+        let q: [u32; BLOCK] =
+            std::array::from_fn(|l| crate::quant::quantser(pooled[l], self.quant));
+        let base = self.o_agu.next_addr();
+        let ob = self.quant.out_bits as usize;
+        let mut planes = [0u64; 16];
+        for (p, word) in planes.iter_mut().enumerate().take(ob) {
+            let bit = ob - 1 - p; // plane p stores bit (ob-1-p)
+            for (l, &qv) in q.iter().enumerate() {
+                if (qv >> bit) & 1 == 1 {
+                    *word |= 1 << l;
+                }
+            }
+        }
+        Some((base, planes))
+    }
+
+    /// Feed one completed MVP output vector all the way out: run the
+    /// pipeline ([`Self::push`]) and, when the pool window fills, commit
+    /// the plane words to their destination — the MVU's own activation RAM
+    /// or the crossbar write stream. The one dest-dispatch loop both
+    /// backends execute; living here keeps addressing and plane order a
+    /// shared, structural property.
+    pub fn push_to(
+        &mut self,
+        mvp_out: &[i32; BLOCK],
+        dest: OutputDest,
+        act: &mut ActRam,
+        scalers: &ScalerRam,
+        biases: &BiasRam,
+        writes: &mut Vec<XbarWrite>,
+    ) {
+        let Some((base, planes)) = self.push(mvp_out, scalers, biases) else {
+            return;
+        };
+        for p in 0..self.quant.out_bits as u32 {
+            let word = planes[p as usize];
+            match dest {
+                OutputDest::SelfRam => act.write(base + p, word),
+                OutputDest::Xbar { dest_mask } => {
+                    writes.push(XbarWrite { dest_mask, addr: base + p, word })
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mvu::agu::AguCfg;
+    use crate::mvu::job::OutputDest;
+    use crate::quant::{Precision, QuantSerCfg};
+
+    fn walk_job(ab: u8, wb: u8, tiles: u32, outputs: u32) -> JobConfig {
+        JobConfig {
+            aprec: Precision::u(ab),
+            wprec: Precision::s(wb),
+            tiles,
+            outputs,
+            a_agu: AguCfg::from_strides(0, &[(tiles - 1, ab as i64)]),
+            w_agu: AguCfg::from_strides(0, &[(tiles - 1, wb as i64)]),
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::from_strides(100, &[]),
+            scaler_en: false,
+            bias_en: false,
+            relu_en: false,
+            pool_count: 1,
+            quant: QuantSerCfg { msb_index: 7, out_bits: 8, saturate: false },
+            dest: OutputDest::SelfRam,
+        }
+    }
+
+    /// The walk emits exactly `cycles()` MACs and flags output boundaries
+    /// at `b_a·b_w·tiles` intervals.
+    #[test]
+    fn walk_length_and_output_boundaries() {
+        let cfg = walk_job(3, 2, 4, 2);
+        let mut walk = JobWalk::new(&cfg);
+        assert_eq!(walk.cycles_per_output(), 3 * 2 * 4);
+        let mut outputs = 0;
+        for i in 0..cfg.cycles() {
+            let s = walk.step();
+            let boundary = (i + 1) % walk.cycles_per_output() == 0;
+            assert_eq!(s.output_done, boundary, "MAC {i}");
+            if s.output_done {
+                outputs += 1;
+            }
+        }
+        assert_eq!(outputs, cfg.outputs);
+    }
+
+    /// Shift flags fire once per magnitude-level change, on the first tile
+    /// of the combo only.
+    #[test]
+    fn walk_shift_count_matches_combo_seq() {
+        let cfg = walk_job(3, 3, 5, 1);
+        let mut walk = JobWalk::new(&cfg);
+        let shifts = (0..cfg.cycles()).filter(|_| walk.step().shift).count();
+        // Levels − 1 per output replay.
+        assert_eq!(shifts, (3 + 3 - 2) as usize);
+    }
+
+    /// Addresses follow AGU bases + MSB-first plane offsets.
+    #[test]
+    fn walk_addresses_add_plane_offsets() {
+        let cfg = walk_job(2, 2, 1, 1);
+        let mut walk = JobWalk::new(&cfg);
+        // Combo order for 2×2 is (1,1),(1,0),(0,1),(0,0); offsets are
+        // bits−1−j / bits−1−k from base 0.
+        let want = [(0u32, 0u32), (0, 1), (1, 0), (1, 1)];
+        for (i, &(a, w)) in want.iter().enumerate() {
+            let s = walk.step();
+            assert_eq!((s.a_addr, s.w_addr), (a, w), "MAC {i}");
+        }
+    }
+
+    /// OutputStage matches a hand-rolled scaler→bias→quantser on one vector.
+    #[test]
+    fn output_stage_requantizes() {
+        let mut cfg = walk_job(1, 1, 1, 1);
+        cfg.scaler_en = true;
+        cfg.bias_en = true;
+        cfg.s_agu = AguCfg::from_strides(3, &[]);
+        cfg.b_agu = AguCfg::from_strides(4, &[]);
+        cfg.quant = QuantSerCfg { msb_index: 7, out_bits: 4, saturate: true };
+        let mut scalers = ScalerRam::new(8);
+        let mut biases = BiasRam::new(8);
+        scalers.write(3, [2u16; 64]);
+        biases.write(4, [5i32; 64]);
+        let mut stage = OutputStage::new(&cfg);
+        let mvp_out: [i32; BLOCK] = std::array::from_fn(|l| l as i32);
+        let (base, planes) = stage.push(&mvp_out, &scalers, &biases).unwrap();
+        assert_eq!(base, 100);
+        let words: Vec<u64> = planes[..4].to_vec();
+        let got = crate::quant::unpack_block(&words, Precision::u(4));
+        for (l, &g) in got.iter().enumerate() {
+            let want = crate::quant::quantser(l as i32 * 2 + 5, cfg.quant) as i32;
+            assert_eq!(g, want, "lane {l}");
+        }
+    }
+}

@@ -154,6 +154,12 @@ pub struct Barrel {
     /// Bytes written to the PUTCHAR console.
     pub console: Vec<u8>,
     cfg: BarrelConfig,
+    /// Harts that executed `ecall` — kept incremental so [`Self::all_exited`]
+    /// is O(1) in per-cycle run loops instead of a scan over every hart.
+    exited_harts: usize,
+    /// Harts that are exited *or* asleep in `wfi` (the "parked" set behind
+    /// [`Self::all_asleep`]), likewise incremental.
+    parked_harts: usize,
 }
 
 impl Barrel {
@@ -166,6 +172,8 @@ impl Barrel {
             halted: false,
             console: Vec::new(),
             cfg,
+            exited_harts: 0,
+            parked_harts: 0,
         }
     }
 
@@ -185,6 +193,8 @@ impl Barrel {
         self.cycle = 0;
         self.halted = false;
         self.console.clear();
+        self.exited_harts = 0;
+        self.parked_harts = 0;
     }
 
     /// Reset all run-scoped CPU state — hart registers/PCs, the cycle
@@ -200,6 +210,8 @@ impl Barrel {
         self.halted = false;
         self.console.clear();
         self.dram.fill(0);
+        self.exited_harts = 0;
+        self.parked_harts = 0;
     }
 
     /// Write bytes into data RAM (host-side initialisation).
@@ -225,6 +237,8 @@ impl Barrel {
     /// instruction. Returns a fatal trap if one occurred.
     pub fn step(&mut self, bridge: &mut dyn CsrBridge) -> Option<(usize, Trap)> {
         let hid = (self.cycle % NUM_HARTS as u64) as usize;
+        let was_exited = self.harts[hid].exited;
+        let was_parked = was_exited || self.harts[hid].asleep;
         let mut bus = DataBus {
             dram: &mut self.dram,
             cycle: self.cycle,
@@ -233,6 +247,20 @@ impl Barrel {
         };
         let res = self.harts[hid].step(&self.imem, &mut bus, bridge, self.cycle);
         self.cycle += 1;
+        // Exit/sleep transitions only ever happen inside a hart's own slot,
+        // so diffing before/after keeps the counters exact in O(1).
+        let now_exited = self.harts[hid].exited;
+        let now_parked = now_exited || self.harts[hid].asleep;
+        if now_exited != was_exited {
+            self.exited_harts += 1; // `exited` is never cleared mid-run
+        }
+        if now_parked != was_parked {
+            if now_parked {
+                self.parked_harts += 1;
+            } else {
+                self.parked_harts -= 1;
+            }
+        }
         match res {
             StepResult::Retired | StepResult::Idle => None,
             StepResult::Fatal(Trap::MachineHalt) => {
@@ -243,20 +271,36 @@ impl Barrel {
         }
     }
 
-    /// Whether every hart has exited (`ecall`).
+    /// Whether every hart has exited (`ecall`). O(1) via the incremental
+    /// counter maintained in [`Self::step`].
     pub fn all_exited(&self) -> bool {
-        self.harts.iter().all(|h| h.exited)
+        debug_assert_eq!(self.exited_harts, self.harts.iter().filter(|h| h.exited).count());
+        self.exited_harts == self.harts.len()
     }
 
-    /// Whether every non-exited hart is asleep.
+    /// Whether every non-exited hart is asleep. O(1), see [`Self::all_exited`].
     pub fn all_asleep(&self) -> bool {
-        self.harts.iter().all(|h| h.exited || h.asleep)
+        debug_assert_eq!(
+            self.parked_harts,
+            self.harts.iter().filter(|h| h.exited || h.asleep).count()
+        );
+        self.parked_harts == self.harts.len()
+    }
+
+    /// Recompute the incremental exited/parked counters from raw hart state.
+    /// `harts` is public, so embedders that mutate hart flags directly must
+    /// (and run loops defensively do) re-sync before trusting the O(1)
+    /// predicates.
+    pub fn resync_sleep_state(&mut self) {
+        self.exited_harts = self.harts.iter().filter(|h| h.exited).count();
+        self.parked_harts = self.harts.iter().filter(|h| h.exited || h.asleep).count();
     }
 
     /// Run until halt/exit/fault/fuel-exhaustion, with a standalone bridge
     /// (for CPU-only programs and tests). The embedding accelerator system
     /// drives `step` itself to interleave MVU cycles.
     pub fn run(&mut self, bridge: &mut dyn CsrBridge) -> ExitReason {
+        self.resync_sleep_state();
         loop {
             if self.halted {
                 return ExitReason::Halted;

@@ -33,10 +33,20 @@
 //! [`crate::coordinator::Engine`], so it drops straight into the serving
 //! coordinator (`examples/serve.rs`).
 //!
+//! **Execution backends** ([`crate::exec`]): `run()` defaults to
+//! [`ExecMode::Turbo`] — the compiled job stream is replayed through the
+//! job-level functional executor, which is bit-identical to the
+//! cycle-accurate stepper in outputs and per-job cycle accounting but an
+//! order of magnitude faster in wall-clock (no RISC-V interpretation).
+//! Verification paths pin [`SessionBuilder::exec_mode`] to
+//! [`ExecMode::CycleAccurate`], which drives the generated Pito program on
+//! the modelled CPU and additionally reports true system cycles.
+//!
 //! All failure paths surface as the typed [`SessionError`] — no stringly
 //! errors, no panicking asserts on [`SystemExit`].
 
 use crate::accel::{System, SystemConfig, SystemExit};
+use crate::exec::ExecMode;
 use crate::codegen::program::CompiledModel;
 use crate::codegen::schedule::DistributedPlan;
 use crate::codegen::{compile_distributed, compile_pipelined, CompileError, EdgePolicy};
@@ -112,6 +122,7 @@ pub struct SessionBuilder {
     model: Model,
     policy: EdgePolicy,
     mode: ExecutionMode,
+    exec: ExecMode,
     fuel: u64,
     mvu: MvuConfig,
     artifacts: Option<ArtifactStore>,
@@ -120,13 +131,14 @@ pub struct SessionBuilder {
 
 impl SessionBuilder {
     /// Start a session over `model` with the defaults: pipelined execution,
-    /// `PadInRam` edges, the stock memory geometry and a 200 M-cycle fuel
-    /// limit.
+    /// the turbo backend, `PadInRam` edges, the stock memory geometry and a
+    /// 200 M-cycle fuel limit.
     pub fn new(model: Model) -> Self {
         SessionBuilder {
             model,
             policy: EdgePolicy::PadInRam,
             mode: ExecutionMode::Pipelined,
+            exec: ExecMode::Turbo,
             fuel: crate::pito::BarrelConfig::default().max_cycles,
             mvu: MvuConfig::default(),
             artifacts: None,
@@ -144,6 +156,15 @@ impl SessionBuilder {
     /// Pipelined (throughput) vs Distributed (latency) mapping.
     pub fn mode(mut self, mode: ExecutionMode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Execution backend for `run()`: job-level [`ExecMode::Turbo`]
+    /// (default — serving speed) or the per-clock
+    /// [`ExecMode::CycleAccurate`] stepper (timing ground truth). Outputs
+    /// and per-job cycle accounting are bit-identical either way.
+    pub fn exec_mode(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -198,6 +219,7 @@ impl SessionBuilder {
         let cfg = SystemConfig {
             mvu: self.mvu,
             barrel: crate::pito::BarrelConfig { max_cycles: self.fuel, ..Default::default() },
+            exec: self.exec,
         };
         let mut sys = System::new(cfg);
         match &program {
@@ -259,13 +281,19 @@ pub struct RunOutput {
     /// The final activation tensor.
     pub output: Tensor3,
     /// Per-MVU busy cycles for this image (pipelined mode: per-layer).
+    /// Backend-invariant: turbo books the same per-job counts as the
+    /// stepper.
     pub mvu_cycles: Vec<u64>,
     /// Sum of MVU busy cycles for this image.
     pub total_mvu_cycles: u64,
-    /// Global system cycles for this image.
+    /// Global system cycles for this image. Under the cycle-accurate
+    /// backend this includes CPU orchestration; under turbo it advances by
+    /// MVP job cycles only.
     pub system_cycles: u64,
     /// 0-based index of this image within the session.
     pub image_index: u64,
+    /// Execution backend that served this run.
+    pub exec: ExecMode,
 }
 
 /// Result of a full host-prologue → array → host-epilogue run.
@@ -329,6 +357,12 @@ impl InferenceSession {
         &self.model
     }
 
+    /// The execution backend serving `run()` — held by the embedded
+    /// [`System`], the single source of truth `run_job` dispatches on.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.sys.exec_mode()
+    }
+
     /// The generated RISC-V assembly listing.
     pub fn asm(&self) -> &str {
         match &self.program {
@@ -358,7 +392,9 @@ impl InferenceSession {
     /// Run one quantized input image through the array and return the final
     /// activations plus cycle accounting. Only activation state is reset
     /// between calls; weights, scalers, biases and the program stay
-    /// resident from [`SessionBuilder::build`].
+    /// resident from [`SessionBuilder::build`]. Dispatches on the
+    /// configured [`ExecMode`] — see the module docs for when each backend
+    /// is authoritative.
     pub fn run(&mut self, input: &Tensor3) -> Result<RunOutput, SessionError> {
         self.sys.reset_run_state();
         match &self.program {
@@ -366,6 +402,38 @@ impl InferenceSession {
             Program::Distributed(p) => p.load_input(&mut self.sys, input),
         }
 
+        match self.sys.exec_mode() {
+            ExecMode::CycleAccurate => self.drive_cycle_accurate()?,
+            ExecMode::Turbo => self.drive_turbo()?,
+        }
+
+        let output = match &self.program {
+            Program::Pipelined(c) => {
+                c.read_output(&self.sys, self.model.layers.last().unwrap().co)
+            }
+            Program::Distributed(p) => p.read_output(&self.sys, &self.model.layers[0]),
+        };
+        let mvu_cycles: Vec<u64> = self.sys.mvus.iter().map(|m| m.busy_cycles()).collect();
+        let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
+        let system_cycles = self.sys.cycles();
+        let image_index = self.images_run;
+        self.images_run += 1;
+        self.total_mvu_cycles += total_mvu_cycles;
+        self.total_system_cycles += system_cycles;
+        self.total_bottleneck_cycles += mvu_cycles.iter().max().copied().unwrap_or(0);
+        Ok(RunOutput {
+            output,
+            mvu_cycles,
+            total_mvu_cycles,
+            system_cycles,
+            image_index,
+            exec: self.sys.exec_mode(),
+        })
+    }
+
+    /// Cycle-accurate drive: execute the generated Pito program on the
+    /// modelled barrel CPU (the verification path).
+    fn drive_cycle_accurate(&mut self) -> Result<(), SessionError> {
         let exit = self.sys.run();
         match exit {
             SystemExit::Done | SystemExit::AllExited => {}
@@ -385,22 +453,60 @@ impl InferenceSession {
         if !self.sys.launch_errors().is_empty() {
             return Err(SessionError::Launch(self.sys.launch_errors().to_vec()));
         }
+        Ok(())
+    }
 
-        let output = match &self.program {
-            Program::Pipelined(c) => {
-                c.read_output(&self.sys, self.model.layers.last().unwrap().co)
-            }
-            Program::Distributed(p) => p.read_output(&self.sys, &self.model.layers[0]),
+    /// Turbo drive: replay the compiled job stream through the job-level
+    /// executor, skipping the CPU entirely. The compiled plans already
+    /// encode the dataflow order the program enforces at runtime (layer
+    /// order in pipelined mode, independent chunks in distributed mode), so
+    /// sequential replay is exact. The session's fuel budget is honoured in
+    /// modelled MVP cycles, checked *after* every job so a stream that
+    /// overshoots the budget — even on its final job — fails with
+    /// [`SessionError::FuelExhausted`] just like a starved cycle-accurate
+    /// run (whose fuel check also fires at `cycles >= max`). Jobs are
+    /// validated before launch so a malformed stream surfaces as the same
+    /// typed [`SessionError::Launch`] the CSR bridge reports, not a panic.
+    fn drive_turbo(&mut self) -> Result<(), SessionError> {
+        let fuel = self.sys.max_cycles();
+        let checked = |mvu: usize, job: &crate::mvu::JobConfig| -> Result<(), SessionError> {
+            job.validate()
+                .map_err(|e| SessionError::Launch(vec![format!("MVU {mvu}: {e}")]))
         };
-        let mvu_cycles: Vec<u64> = self.sys.mvus.iter().map(|m| m.busy_cycles()).collect();
-        let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
-        let system_cycles = self.sys.cycles();
-        let image_index = self.images_run;
-        self.images_run += 1;
-        self.total_mvu_cycles += total_mvu_cycles;
-        self.total_system_cycles += system_cycles;
-        self.total_bottleneck_cycles += mvu_cycles.iter().max().copied().unwrap_or(0);
-        Ok(RunOutput { output, mvu_cycles, total_mvu_cycles, system_cycles, image_index })
+        match &self.program {
+            Program::Pipelined(c) => {
+                for plan in &c.plans {
+                    let before = self.sys.mvus[plan.mvu].busy_cycles();
+                    for job in &plan.jobs {
+                        checked(plan.mvu, job)?;
+                        self.sys.run_job(plan.mvu, job.clone());
+                        if self.sys.cycles() >= fuel {
+                            return Err(SessionError::FuelExhausted { fuel });
+                        }
+                    }
+                    // Cross-check: the job-formula cycles turbo books must
+                    // equal the analytic per-layer model (Table-3 exact).
+                    debug_assert_eq!(
+                        self.sys.mvus[plan.mvu].busy_cycles() - before,
+                        plan.analytic_cycles,
+                        "turbo cycle accounting diverged from perf model on MVU {}",
+                        plan.mvu
+                    );
+                }
+            }
+            Program::Distributed(p) => {
+                for (m, jobs) in p.jobs.iter().enumerate() {
+                    for job in jobs {
+                        checked(m, job)?;
+                        self.sys.run_job(m, job.clone());
+                        if self.sys.cycles() >= fuel {
+                            return Err(SessionError::FuelExhausted { fuel });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Run one raw f32 image through host prologue → MVU array → host
@@ -508,12 +614,14 @@ mod tests {
         })
     }
 
-    /// The headline property: a warm session serving N images is bit-exact
-    /// with building a fresh system per image.
+    /// The headline property: a warm (turbo, by default) session serving N
+    /// images is bit-exact with building a fresh cycle-accurate system per
+    /// image.
     #[test]
     fn warm_session_matches_fresh_system_per_image() {
         let m = tiny_resnet9();
         let mut session = SessionBuilder::new(m.clone()).build().unwrap();
+        assert_eq!(session.exec_mode(), ExecMode::Turbo, "turbo is the run() default");
         let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
         for seed in [1u64, 2, 3, 4] {
             let input = random_input(&m, seed);
@@ -544,6 +652,35 @@ mod tests {
         let input = random_input(&m, 9);
         assert_eq!(session.run(&input).unwrap().image_index, 0);
         assert_eq!(session.run(&input).unwrap().image_index, 1);
+    }
+
+    /// Backend equivalence through the session facade: turbo and
+    /// cycle-accurate runs of the same warm session report identical
+    /// outputs and per-MVU job cycles (system cycles legitimately differ —
+    /// only the timing backend models CPU orchestration).
+    #[test]
+    fn session_backends_agree_bit_for_bit() {
+        let m = tiny_resnet9();
+        let mut turbo = SessionBuilder::new(m.clone())
+            .exec_mode(ExecMode::Turbo)
+            .build()
+            .unwrap();
+        let mut cycle = SessionBuilder::new(m.clone())
+            .exec_mode(ExecMode::CycleAccurate)
+            .build()
+            .unwrap();
+        for seed in [5u64, 6] {
+            let input = random_input(&m, seed);
+            let t = turbo.run(&input).unwrap();
+            let c = cycle.run(&input).unwrap();
+            assert_eq!(t.exec, ExecMode::Turbo);
+            assert_eq!(c.exec, ExecMode::CycleAccurate);
+            assert_eq!(t.output, c.output, "seed {seed}: outputs differ");
+            assert_eq!(t.mvu_cycles, c.mvu_cycles, "seed {seed}: job cycles differ");
+            // Turbo's global clock advances by MVP job cycles only (the
+            // exact sum of every job formula); no CPU cycles appear in it.
+            assert_eq!(t.system_cycles, t.total_mvu_cycles, "seed {seed}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use barvinn::accel::{System, SystemConfig, SystemExit};
 use barvinn::codegen::{compile_pipelined, CompileError, EdgePolicy};
+use barvinn::exec::ExecMode;
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::model::Model;
 use barvinn::quant::QuantSerCfg;
@@ -59,13 +60,16 @@ fn random_input(m: &Model, seed: u64) -> Tensor3 {
 
 #[test]
 fn pipelined_full_resnet9_bit_exact() {
+    // Default-built session: exercises the turbo backend end-to-end.
     let m = model_under_test();
     let mut session = SessionBuilder::new(m.clone())
         .edge_policy(EdgePolicy::PadInRam)
         .build()
         .unwrap();
+    assert_eq!(session.exec_mode(), ExecMode::Turbo, "run() defaults to turbo");
     let input = random_input(&m, 2026);
     let out = session.run(&input).unwrap();
+    assert_eq!(out.exec, ExecMode::Turbo);
     assert_eq!(out.output, golden_forward(&m, &input), "accelerator != golden");
     assert_eq!(
         out.total_mvu_cycles,
@@ -73,13 +77,45 @@ fn pipelined_full_resnet9_bit_exact() {
     );
 }
 
+/// The backend-equivalence acceptance test at ResNet-9 scale: turbo and
+/// cycle-accurate sessions agree bit-for-bit on the output tensor and on
+/// every per-MVU (= per-layer) reported job cycle count, with the golden
+/// integer model as the third reference.
+#[test]
+fn resnet9_turbo_matches_cycle_accurate() {
+    let m = model_under_test();
+    let mut turbo = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::PadInRam)
+        .exec_mode(ExecMode::Turbo)
+        .build()
+        .unwrap();
+    let mut cycle = SessionBuilder::new(m.clone())
+        .edge_policy(EdgePolicy::PadInRam)
+        .exec_mode(ExecMode::CycleAccurate)
+        .build()
+        .unwrap();
+    for seed in [21u64, 22] {
+        let input = random_input(&m, seed);
+        let t = turbo.run(&input).unwrap();
+        let c = cycle.run(&input).unwrap();
+        assert_eq!(t.output, c.output, "seed {seed}: outputs differ across backends");
+        assert_eq!(t.output, golden_forward(&m, &input), "seed {seed}: != golden");
+        assert_eq!(t.mvu_cycles, c.mvu_cycles, "seed {seed}: per-layer job cycles differ");
+        assert_eq!(t.total_mvu_cycles, c.total_mvu_cycles, "seed {seed}");
+    }
+}
+
 /// The warm-session guarantee: one session serving ≥3 images is bit-exact
 /// with a freshly built system (full rebuild + weight reload) per image.
 #[test]
 fn session_reuse_matches_fresh_system_across_images() {
+    // Pinned to the cycle-accurate backend: this test also asserts the
+    // global system clock matches a fresh per-image system, which only the
+    // timing backend reports.
     let m = model_under_test();
     let mut session = SessionBuilder::new(m.clone())
         .edge_policy(EdgePolicy::PadInRam)
+        .exec_mode(ExecMode::CycleAccurate)
         .build()
         .unwrap();
     let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();

@@ -247,6 +247,206 @@ fn weight_bit_flip_changes_output() {
     }
 }
 
+/// The functional/timing-split acceptance property: the job-level turbo
+/// executor and the cycle-accurate stepper agree *bit-for-bit* on every
+/// output word (self-RAM and crossbar destinations) and on every reported
+/// job cycle count, across randomized precisions (1–8 bit
+/// weights/activations, signed/unsigned), tile counts, pooling windows,
+/// scaler/bias/ReLU enables and output destinations — with the
+/// plain-integer `sim::golden` model as the third reference.
+#[test]
+fn turbo_and_cycle_accurate_backends_agree() {
+    use barvinn::exec::ExecMode;
+    use barvinn::mvu::{AguCfg, JobConfig, OutputDest};
+    use barvinn::quant::pack_block;
+
+    const OUT_BASE: u32 = 8000;
+    let mut rng = Rng(0x7EB0);
+    let cases = if cfg!(debug_assertions) { 48 } else { 160 };
+    for case in 0..cases {
+        // --- random job geometry ------------------------------------------
+        let ab = 1 + (rng.next_u64() % 8) as u8;
+        let wb = 1 + (rng.next_u64() % 8) as u8;
+        let aprec = Precision { bits: ab, signed: ab >= 2 && rng.next_u64() % 2 == 0 };
+        let wprec = Precision { bits: wb, signed: wb >= 2 && rng.next_u64() % 2 == 0 };
+        let tiles = 1 + (rng.next_u64() % 4) as u32;
+        let pool_count = [1u32, 2, 4][(rng.next_u64() % 3) as usize];
+        let outputs = pool_count * (1 + (rng.next_u64() % 3) as u32);
+        let combos = ab as u32 * wb as u32;
+        let scaler_en = rng.next_u64() % 2 == 0;
+        let bias_en = rng.next_u64() % 2 == 0;
+        let relu_en = rng.next_u64() % 2 == 0;
+        let out_bits = 1 + (rng.next_u64() % 16) as u8;
+        let quant = QuantSerCfg {
+            msb_index: (out_bits - 1) + (rng.next_u64() % 8) as u8,
+            out_bits,
+            saturate: rng.next_u64() % 2 == 0,
+        };
+        // Crossbar destinations exclude the source MVU: turbo batches a
+        // job's traffic at completion, so mid-job self-delivery (which no
+        // generated workload performs) is outside the equivalence contract.
+        let dest = if rng.next_u64() % 2 == 0 {
+            OutputDest::SelfRam
+        } else {
+            OutputDest::Xbar { dest_mask: 1u8 << (1 + (rng.next_u64() % 7) as u8) }
+        };
+
+        // --- random operands ----------------------------------------------
+        // Activations: `outputs × tiles` distinct blocks laid out linearly;
+        // weights: `tiles` 64×64 tiles shared by every output.
+        let a_vals: Vec<[i32; 64]> = (0..(outputs * tiles) as usize)
+            .map(|_| {
+                std::array::from_fn(|_| rng.range_i32(aprec.min_value(), aprec.max_value()))
+            })
+            .collect();
+        let w_vals: Vec<[[i32; 64]; 64]> = (0..tiles as usize)
+            .map(|_| {
+                std::array::from_fn(|_| {
+                    std::array::from_fn(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+                })
+            })
+            .collect();
+        let scales: Vec<[u16; 64]> = (0..outputs as usize)
+            .map(|_| std::array::from_fn(|_| rng.range_i32(1, 6) as u16))
+            .collect();
+        let biases: Vec<[i32; 64]> = (0..outputs as usize)
+            .map(|_| std::array::from_fn(|_| rng.range_i32(-500, 500)))
+            .collect();
+
+        let cfg = JobConfig {
+            aprec,
+            wprec,
+            tiles,
+            outputs,
+            // Per output: `tiles` blocks, replayed `combos` times, then
+            // advance to the next output's blocks.
+            a_agu: AguCfg::from_strides(
+                0,
+                &[
+                    (tiles - 1, ab as i64),
+                    (combos - 1, 0),
+                    (outputs - 1, (tiles * ab as u32) as i64),
+                ],
+            ),
+            // One full pass = one output; the AGU wraps for the replay.
+            w_agu: AguCfg::from_strides(0, &[(tiles - 1, wb as i64), (combos - 1, 0)]),
+            s_agu: AguCfg::from_strides(0, &[(outputs - 1, 1)]),
+            b_agu: AguCfg::from_strides(0, &[(outputs - 1, 1)]),
+            o_agu: AguCfg::from_strides(
+                OUT_BASE,
+                &[(outputs / pool_count - 1, out_bits as i64)],
+            ),
+            scaler_en,
+            bias_en,
+            relu_en,
+            pool_count,
+            quant,
+            dest,
+        };
+
+        // --- identically-loaded systems, one per backend -------------------
+        let load = |sys: &mut System| {
+            for (b, vals) in a_vals.iter().enumerate() {
+                sys.mvus[0].act.load((b * ab as usize) as u32, &pack_block(vals, aprec));
+            }
+            for (t, tile) in w_vals.iter().enumerate() {
+                let rows: Vec<Vec<u64>> = tile.iter().map(|r| pack_block(r, wprec)).collect();
+                let words: Vec<[u64; 64]> = (0..wb as usize)
+                    .map(|p| std::array::from_fn(|r| rows[r][p]))
+                    .collect();
+                sys.mvus[0].weights.load((t * wb as usize) as u32, &words);
+            }
+            for (o, s) in scales.iter().enumerate() {
+                sys.mvus[0].scalers.write(o as u32, *s);
+            }
+            for (o, b) in biases.iter().enumerate() {
+                sys.mvus[0].biases.write(o as u32, *b);
+            }
+        };
+        let mut cyc = System::new(SystemConfig::default());
+        load(&mut cyc);
+        let mut trb = System::new(SystemConfig { exec: ExecMode::Turbo, ..Default::default() });
+        load(&mut trb);
+
+        // --- run on both backends; cycles must match the job formula -------
+        let c_cycles = cyc.run_job(0, cfg.clone());
+        let t_cycles = trb.run_job(0, cfg.clone());
+        assert_eq!(t_cycles, c_cycles, "case {case}: reported job cycles differ");
+        assert_eq!(t_cycles, cfg.cycles(), "case {case}: cycles != job formula");
+        assert_eq!(
+            trb.mvus[0].busy_cycles(),
+            cyc.mvus[0].busy_cycles(),
+            "case {case}: busy counters differ"
+        );
+        assert_eq!(trb.mvus[0].jobs_done(), cyc.mvus[0].jobs_done(), "case {case}");
+
+        // --- output regions bit-identical across every MVU -----------------
+        let out_words = (outputs / pool_count) * out_bits as u32;
+        for m in 0..trb.mvus.len() {
+            for addr in OUT_BASE..OUT_BASE + out_words {
+                assert_eq!(
+                    trb.mvus[m].act.read(addr),
+                    cyc.mvus[m].act.read(addr),
+                    "case {case}: MVU {m} word {addr} differs across backends"
+                );
+            }
+        }
+
+        // --- third reference: plain-integer golden model -------------------
+        let dest_mvu = match dest {
+            OutputDest::SelfRam => 0usize,
+            OutputDest::Xbar { dest_mask } => dest_mask.trailing_zeros() as usize,
+        };
+        let relu_init = if relu_en { 0i32 } else { i32::MIN };
+        let mut pool_reg = [relu_init; 64];
+        let mut filled = 0u32;
+        let mut written = 0u32;
+        for o in 0..outputs {
+            let mut acc = [0i64; 64];
+            for t in 0..tiles {
+                let x = &a_vals[(o * tiles + t) as usize];
+                let wflat: Vec<i32> =
+                    w_vals[t as usize].iter().flatten().copied().collect();
+                let dot = barvinn::sim::gemv_i32(&wflat, x, 64, 64);
+                for (a, &d) in acc.iter_mut().zip(&dot) {
+                    *a += d as i64;
+                }
+            }
+            for (l, reg) in pool_reg.iter_mut().enumerate() {
+                let mut v = acc[l] as i32;
+                if scaler_en {
+                    v = ((v as i64) * (scales[o as usize][l] as i64)) as i32;
+                }
+                if bias_en {
+                    v = v.wrapping_add(biases[o as usize][l]);
+                }
+                if v > *reg {
+                    *reg = v;
+                }
+            }
+            filled += 1;
+            if filled == pool_count {
+                let base = OUT_BASE + written * out_bits as u32;
+                for (l, &reg) in pool_reg.iter().enumerate() {
+                    let want = barvinn::quant::quantser(reg, quant);
+                    let mut got = 0u32;
+                    for p in 0..out_bits as u32 {
+                        let word = cyc.mvus[dest_mvu].act.read(base + p);
+                        got |= (((word >> l) & 1) as u32) << (out_bits as u32 - 1 - p);
+                    }
+                    assert_eq!(
+                        got, want,
+                        "case {case}: output {written} lane {l} != golden"
+                    );
+                }
+                pool_reg = [relu_init; 64];
+                filled = 0;
+                written += 1;
+            }
+        }
+    }
+}
+
 /// Assembler fuzz: random valid programs assemble, disassemble and
 /// re-assemble to identical words.
 #[test]
