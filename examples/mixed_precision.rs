@@ -88,7 +88,7 @@ fn main() {
             load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
             for job in conv_jobs(&layer, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges)
             {
-                measured += sys.run_job(0, job);
+                measured += sys.run_job(0, job).expect("valid job");
             }
         }
         assert_eq!(measured, total_cycles, "simulator must match analytic");

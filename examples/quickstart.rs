@@ -39,7 +39,7 @@ fn main() {
 
     // 2. One CSR-shaped job: AGUs walk input blocks × bit-combos × row sets.
     let job = gemv_job(&spec, 0, 0, 4096, 0, 0, None);
-    let cycles = sys.run_job(0, job);
+    let cycles = sys.run_job(0, job).expect("valid job");
     println!(
         "GEMV {}×{} at w{}a{}: {} MVP cycles ({} expected: combos × blocks × row sets)",
         spec.rows, spec.cols, spec.wprec.bits, spec.aprec.bits, cycles, spec.cycles()

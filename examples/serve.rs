@@ -5,7 +5,7 @@
 //! reports latency percentiles, throughput and simulated accelerator
 //! cycles.
 //!
-//! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests] [--exec cycle|turbo]`
+//! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests] [--exec cycle|turbo] [--mode pipelined|multipass|auto]`
 //! (the `pjrt` feature additionally needs `xla = "0.1"` added under
 //! `[dependencies]` — see Cargo.toml; without it this example exits with
 //! the typed `RuntimeError::Disabled`)
@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 use barvinn::coordinator::{BatcherConfig, Coordinator, Engine, EngineFactory};
 use barvinn::exec::ExecMode;
 use barvinn::runtime::ArtifactStore;
-use barvinn::session::SessionBuilder;
+use barvinn::session::{parse_mode_arg, ExecutionMode, SessionBuilder};
 use barvinn::CLOCK_HZ;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -28,6 +28,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // cycle-accurate stepper instead (e.g. to validate timing under load).
     let exec: ExecMode =
         barvinn::exec::parse_exec_arg(&args, ExecMode::Turbo).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    // Scheduling mode: auto resolves from model depth at build time, so a
+    // deep artifact model transparently serves through multi-pass laps.
+    let mode: ExecutionMode =
+        parse_mode_arg(&args, ExecutionMode::Auto).unwrap_or_else(|e| {
             eprintln!("{e}");
             std::process::exit(2);
         });
@@ -46,6 +53,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 let session = SessionBuilder::new(model)
                     .artifacts(store)
                     .exec_mode(exec)
+                    .mode(mode)
                     .build()
                     .expect("session");
                 Box::new(session) as Box<dyn Engine>
@@ -57,7 +65,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
     );
 
-    println!("serving {n} requests over {workers} workers ({exec} backend)...");
+    println!("serving {n} requests over {workers} workers ({exec} backend, {mode} mode)...");
     let mut rng = barvinn::model::zoo::Rng(99);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
@@ -69,24 +77,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .collect();
     coord.flush();
     let mut sim_cycles = 0u64;
+    let mut failed = 0usize;
     for rx in rxs {
+        // A per-request engine failure is an answered response carrying a
+        // typed error string — the worker (and the run) survive it.
         let resp = rx.recv_timeout(Duration::from_secs(300))?;
-        sim_cycles += resp.sim_cycles;
+        match resp.error {
+            None => sim_cycles += resp.sim_cycles,
+            Some(e) => {
+                failed += 1;
+                eprintln!("request {} failed: {e}", resp.id);
+            }
+        }
     }
     let wall = t0.elapsed();
     let snap = coord.metrics().snapshot();
     println!(
-        "done: {} completed in {:.2}s wall → {:.2} req/s host-side",
+        "done: {} completed, {failed} failed in {:.2}s wall → {:.2} req/s host-side",
         snap.completed,
         wall.as_secs_f64(),
         snap.completed as f64 / wall.as_secs_f64()
     );
     println!(
-        "latency p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms ({} batches)",
+        "latency p50 {:.1} ms, p99 {:.1} ms, mean {:.1} ms \
+         ({} batches, mean size {:.1})",
         snap.p50_us as f64 / 1e3,
         snap.p99_us as f64 / 1e3,
         snap.mean_us / 1e3,
-        snap.batches
+        snap.batches,
+        snap.mean_batch_size()
     );
     println!(
         "simulated accelerator: {} MVU cycles total → {:.0} FPS at 250 MHz\n\

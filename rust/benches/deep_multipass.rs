@@ -1,0 +1,98 @@
+//! Deep-model multi-pass bench: the 16-layer ResNet-18-style CIFAR stack
+//! *executed* on the simulated array in two pipelined passes, reported
+//! next to the analytic `perf::cycle_model` prediction (the Table-6-class
+//! accounting that was previously analytic-only) — asserting the executed
+//! and predicted cycle counts agree exactly, layer by layer, and that the
+//! lap-sum throughput model matches the session's bottleneck accounting.
+
+use barvinn::codegen::{compile_multi_pass, EdgePolicy};
+use barvinn::model::zoo::{resnet18_cifar, Rng};
+use barvinn::perf::benchkit::{bench, report_table};
+use barvinn::perf::cycle_model::{self, Bits};
+use barvinn::session::{ExecutionMode, SessionBuilder};
+use barvinn::sim::Tensor3;
+use barvinn::CLOCK_HZ;
+
+fn main() {
+    let m = resnet18_cifar(2, 2);
+    let bits = Bits { w: 2, a: 2 };
+    let net = cycle_model::shape_of_model("resnet18-cifar", &m);
+    let predicted = cycle_model::layer_cycles(&net, bits);
+
+    // SkipEdges = the paper's Table-3-style row accounting, which the
+    // analytic conv model also uses: executed must equal predicted exactly.
+    let mut session = SessionBuilder::new(m.clone())
+        .mode(ExecutionMode::MultiPass)
+        .edge_policy(EdgePolicy::SkipEdges)
+        .build()
+        .expect("compile deep model");
+    let l0 = &m.layers[0];
+    let mut rng = Rng(3);
+    let input =
+        Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| rng.range_i32(0, 3));
+    let out = session.run(&input).expect("multi-pass run");
+
+    let mut rows = Vec::new();
+    let mut executed_total = 0u64;
+    for ((l, &want), &got) in m.layers.iter().zip(&predicted).zip(&out.mvu_cycles) {
+        assert_eq!(got, want, "{}: executed != analytic", l.name);
+        executed_total += got;
+        rows.push(vec![
+            l.name.clone(),
+            format!("[{},{},{}]", l.ci, l.in_h, l.in_w),
+            want.to_string(),
+            got.to_string(),
+        ]);
+    }
+    let predicted_total: u64 = predicted.iter().sum();
+    assert_eq!(executed_total, predicted_total);
+    assert_eq!(out.total_mvu_cycles, predicted_total);
+    rows.push(vec![
+        "total".into(),
+        "".into(),
+        predicted_total.to_string(),
+        executed_total.to_string(),
+    ]);
+    report_table(
+        "ResNet-18/CIFAR (16 layers, 2 passes) — analytic vs executed cycles (2b/2b)",
+        &["layer", "input", "analytic", "executed"],
+        &rows,
+    );
+
+    // Throughput: the lap-sum pipelined model (§3.1.6) must equal the
+    // session's per-pass bottleneck accounting for one image.
+    let lap_fps = cycle_model::fps_pipelined(&net, bits, CLOCK_HZ);
+    let metrics = session.metrics();
+    let session_fps = metrics.fps_at(CLOCK_HZ);
+    let rel = (lap_fps - session_fps).abs() / lap_fps;
+    assert!(
+        rel < 1e-9,
+        "lap model {lap_fps:.1} FPS vs session bottleneck {session_fps:.1} FPS"
+    );
+    // Streamed (work-conserving) steady state is the upper bound.
+    let streamed_fps = cycle_model::fps_pipelined_streamed(&net, bits, CLOCK_HZ);
+    assert!(streamed_fps >= lap_fps);
+
+    // The multi-pass price: per-image weight/scaler/bias reload traffic.
+    let plan = compile_multi_pass(&m, EdgePolicy::SkipEdges).unwrap();
+    println!(
+        "\n{} passes/image, {} RAM words reloaded/image (weight-reload cost of \
+         run-time programmability)",
+        plan.n_passes(),
+        plan.reload_words()
+    );
+    println!(
+        "lap-pipelined {lap_fps:.0} FPS, streamed bound {streamed_fps:.0} FPS at 250 MHz"
+    );
+
+    // Wall-clock of the executed multi-pass turbo path.
+    let r = bench("deep multi-pass turbo run (16 layers)", 200, || {
+        let o = session.run(&input).expect("run");
+        assert_eq!(o.total_mvu_cycles, predicted_total);
+    });
+    println!(
+        "  → {:.1} M MVU-cycles/s simulated",
+        predicted_total as f64 / r.per_iter.as_secs_f64() / 1e6
+    );
+    println!("deep_multipass OK");
+}

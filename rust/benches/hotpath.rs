@@ -52,7 +52,7 @@ fn main() {
         let cycles: u64 = jobs.iter().map(|j| j.cycles()).sum();
         let r = bench("mvu: conv8 layer (18,432 cycles)", 2000, || {
             for j in &jobs {
-                sys.run_job(0, j.clone());
+                sys.run_job(0, j.clone()).unwrap();
             }
         });
         println!(

@@ -103,7 +103,7 @@ fn main() {
     let jobs = conv_jobs(l, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges);
     let r = bench("simulate conv1 (34,560 MVU cycles)", 2000, || {
         for j in &jobs {
-            sys.run_job(0, j.clone());
+            sys.run_job(0, j.clone()).unwrap();
         }
     });
     println!(

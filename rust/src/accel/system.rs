@@ -91,17 +91,15 @@ impl CsrBridge for SystemBridge<'_> {
         match off {
             o if o == cmd_off::COMMAND => {
                 if value & command::START != 0 {
-                    if self.mvus[hart].state() == MvuState::Running {
-                        self.launch_errors
-                            .push(format!("hart {hart}: START while MVU busy"));
-                        return false;
-                    }
+                    // `Mvu::launch` rejects busy MVUs and malformed configs
+                    // with a typed error; a rejected START is recorded and
+                    // fails the CSR write (an illegal-CSR trap on the hart),
+                    // never an abort.
                     let job = self.csrs[hart].to_job_config();
-                    if let Err(e) = job.validate() {
+                    if let Err(e) = self.mvus[hart].launch(job) {
                         self.launch_errors.push(format!("hart {hart}: {e}"));
                         return false;
                     }
-                    self.mvus[hart].launch(job);
                     *self.running_mask |= 1 << hart;
                 }
                 if value & command::CLEAR_IRQ != 0 {
@@ -185,6 +183,14 @@ impl System {
     /// global clock reaches this many cycles.
     pub fn max_cycles(&self) -> u64 {
         self.max_cycles
+    }
+
+    /// Re-arm the simulation fuel. Multi-pass sessions run one system
+    /// program per pass with the clock reset in between, so the remaining
+    /// share of the image's budget is installed before each pass — fuel is
+    /// honoured across passes, not per pass.
+    pub fn set_max_cycles(&mut self, cycles: u64) {
+        self.max_cycles = cycles;
     }
 
     /// Reset all *run-scoped* state — the CPU (registers, PCs, DRAM flags),
@@ -288,10 +294,21 @@ impl System {
                         self.running_mask &= !(1 << m); // stale bit: no job
                         continue;
                     };
-                    let (writes, _) = run_job_turbo(&mut self.mvus[m], &cfg);
-                    if !writes.is_empty() {
-                        self.xbar.push(m, writes);
-                        self.drain_xbar();
+                    match run_job_turbo(&mut self.mvus[m], &cfg) {
+                        Ok((writes, _)) => {
+                            if !writes.is_empty() {
+                                self.xbar.push(m, writes);
+                                self.drain_xbar();
+                            }
+                        }
+                        Err(e) => {
+                            // Unreachable after a validated CSR launch, but
+                            // kept typed: record the error and signal job
+                            // completion (zero work) so the driving program
+                            // can't hang; callers observe `launch_errors`.
+                            self.launch_errors.push(format!("MVU {m}: {e}"));
+                            self.mvus[m].finish_job_accounting(0);
+                        }
                     }
                     self.running_mask &= !(1 << m);
                     self.irq_mask |= 1 << m;
@@ -373,23 +390,24 @@ impl System {
     }
 
     /// Direct-drive API (no CPU): launch a job on one MVU and run the
-    /// datapath until idle. Returns MVP cycles the job consumed.
+    /// datapath until idle. Returns MVP cycles the job consumed, or a typed
+    /// launch error (busy MVU / malformed config) — never a panic.
     /// Dispatches on the configured [`ExecMode`]: the cycle-accurate
     /// stepper walks the job one modelled clock at a time; turbo computes
     /// the whole job functionally and books the same cycle count from the
     /// job formula.
-    pub fn run_job(&mut self, mvu: usize, job: JobConfig) -> u64 {
+    pub fn run_job(&mut self, mvu: usize, job: JobConfig) -> Result<u64, String> {
         match self.exec {
             ExecMode::CycleAccurate => self.run_job_cycle_accurate(mvu, job),
             ExecMode::Turbo => {
-                let (writes, cycles) = run_job_turbo(&mut self.mvus[mvu], &job);
+                let (writes, cycles) = run_job_turbo(&mut self.mvus[mvu], &job)?;
                 if !writes.is_empty() {
                     self.xbar.push(mvu, writes);
                     self.drain_xbar();
                 }
                 self.mvus[mvu].clear_irq();
                 self.cycles += cycles;
-                cycles
+                Ok(cycles)
             }
         }
     }
@@ -398,9 +416,9 @@ impl System {
     /// the other seven are architecturally idle, and stepping them cost 8×
     /// in the original implementation. The crossbar is only stepped while
     /// it holds traffic.
-    fn run_job_cycle_accurate(&mut self, mvu: usize, job: JobConfig) -> u64 {
+    fn run_job_cycle_accurate(&mut self, mvu: usize, job: JobConfig) -> Result<u64, String> {
         let before = self.mvus[mvu].busy_cycles();
-        self.mvus[mvu].launch(job);
+        self.mvus[mvu].launch(job)?;
         while self.mvus[mvu].state() == MvuState::Running || self.xbar.busy() {
             if self.xbar.busy() {
                 self.deliver_round();
@@ -412,7 +430,7 @@ impl System {
             self.cycles += 1;
         }
         self.mvus[mvu].clear_irq();
-        self.mvus[mvu].busy_cycles() - before
+        Ok(self.mvus[mvu].busy_cycles() - before)
     }
 
     /// Sum of MVP busy cycles across the array (perf reporting).
@@ -498,7 +516,7 @@ mod tests {
         sys.mvus[0].act.load(0, &pack_block(&x, Precision::u(4)));
         sys.mvus[0].weights.load(0, &identity_weights());
 
-        let cycles = sys.run_job(0, simple_job(OutputDest::Xbar { dest_mask: 0b10 }));
+        let cycles = sys.run_job(0, simple_job(OutputDest::Xbar { dest_mask: 0b10 })).unwrap();
         assert_eq!(cycles, 4, "4b×1b single tile");
         let words: Vec<u64> = (0..4).map(|p| sys.mvus[1].act.read(100 + p)).collect();
         let got = crate::quant::unpack_block(&words, Precision::u(4));
@@ -543,7 +561,7 @@ mod tests {
         sys.mvus[0].act.load(0, &pack_block(&x, Precision::u(4)));
         sys.mvus[0].weights.load(0, &identity_weights());
         sys.load_asm("ecall").unwrap();
-        sys.mvus[0].launch(simple_job(OutputDest::SelfRam));
+        sys.mvus[0].launch(simple_job(OutputDest::SelfRam)).unwrap();
         for _ in 0..8 {
             sys.step(); // 4b×1b single tile needs 4 MVU cycles
         }
@@ -621,5 +639,54 @@ mod tests {
             sys.launch_errors()
         );
         assert_eq!(sys.launch_errors().len(), 1);
+    }
+
+    /// Regression: a *malformed* CSR-programmed job (here `tiles = 0`) is
+    /// rejected at START with a recorded launch error and a typed
+    /// `SystemExit::Fault` — it must not abort the process, under either
+    /// execution backend.
+    #[test]
+    fn malformed_csr_job_faults_typed() {
+        for exec in [ExecMode::CycleAccurate, ExecMode::Turbo] {
+            let mut sys = System::new(SystemConfig { exec, ..Default::default() });
+            // Program a job but leave `mvu_tiles` at its reset value of 0.
+            let mut asm = String::new();
+            asm.push_str("csrr t0, mhartid\nbnez t0, done\n");
+            asm.push_str("li t1, 1\ncsrw mvu_outputs, t1\n");
+            asm.push_str("li t1, 8\ncsrw mvu_oprec, t1\n");
+            asm.push_str("li t1, 7\ncsrw mvu_quant_msb, t1\n");
+            asm.push_str("li t1, 1\ncsrw mvu_command, t1\n"); // START
+            asm.push_str("done:\necall\n");
+            sys.load_asm(&asm).unwrap();
+            let exit = sys.run();
+            assert!(
+                matches!(exit, SystemExit::Fault { hart: 0, .. }),
+                "{exec:?}: expected typed fault, got {exit:?}"
+            );
+            assert_eq!(sys.launch_errors().len(), 1, "{exec:?}");
+            assert!(
+                sys.launch_errors()[0].contains("bad job config"),
+                "{exec:?}: {:?}",
+                sys.launch_errors()
+            );
+            assert_eq!(sys.mvus[0].state(), MvuState::Idle, "{exec:?}");
+        }
+    }
+
+    /// Regression: the direct-drive path surfaces a malformed config as a
+    /// typed error on both backends instead of panicking.
+    #[test]
+    fn direct_drive_bad_job_errors_typed() {
+        for exec in [ExecMode::CycleAccurate, ExecMode::Turbo] {
+            let mut sys = System::new(SystemConfig { exec, ..Default::default() });
+            let mut bad = simple_job(OutputDest::SelfRam);
+            bad.outputs = 0;
+            let err = sys.run_job(0, bad).unwrap_err();
+            assert!(err.contains("bad job config"), "{exec:?}: {err}");
+            // The system stays serviceable: a good job still runs.
+            sys.mvus[0].act.load(0, &pack_block(&[1; 64], Precision::u(4)));
+            sys.mvus[0].weights.load(0, &identity_weights());
+            assert_eq!(sys.run_job(0, simple_job(OutputDest::SelfRam)).unwrap(), 4);
+        }
     }
 }

@@ -248,7 +248,7 @@ mod tests {
         let jobs = conv_jobs(layer, &in_l, &out_l, &w_l, 0, 0, None, policy);
         let mut total = 0;
         for job in jobs {
-            total += sys.run_job(0, job);
+            total += sys.run_job(0, job).unwrap();
         }
         assert_eq!(total, layer_cycles(layer, policy), "cycle accounting");
 
@@ -354,7 +354,7 @@ mod tests {
             in_l.load(&mut sys.mvus[0].act, &input);
             w_l.load(&mut sys.mvus[0].weights, &l.weights, l.ci, l.co);
             let jobs = conv_jobs(l, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::SkipEdges);
-            let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j)).sum();
+            let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j).unwrap()).sum();
             assert_eq!(measured, layer_cycles(l, EdgePolicy::SkipEdges), "{}", l.name);
         }
     }

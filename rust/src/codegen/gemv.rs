@@ -175,7 +175,7 @@ mod tests {
         load_scaler_bias(&mut sys.mvus[0], 0, &scale, &bias);
 
         let job = gemv_job(&spec, 0, 0, 8000, 0, 0, None);
-        let cycles = sys.run_job(0, job);
+        let cycles = sys.run_job(0, job).unwrap();
         assert_eq!(cycles, spec.cycles());
 
         let want = golden(&spec, &w, &x_real, &scale, &bias);

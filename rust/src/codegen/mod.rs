@@ -20,4 +20,4 @@ pub mod schedule;
 pub use conv2d::{conv_jobs, layer_cycles, EdgePolicy};
 pub use layout::{ActLayout, WeightLayout};
 pub use program::{compile_pipelined, CompileError, CompiledModel, MvuImage};
-pub use schedule::{compile_distributed, DistributedPlan};
+pub use schedule::{compile_distributed, compile_multi_pass, DistributedPlan, MultiPassPlan};

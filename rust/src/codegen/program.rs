@@ -44,6 +44,10 @@ pub enum CompileError {
     Assemble(String),
     /// Distributed mode: the output region exceeds the activation RAM.
     OutputRegionTooLarge,
+    /// A compiled RAM image exceeds the session's memory geometry — caught
+    /// at build time (where the geometry is known) instead of an
+    /// out-of-range panic at load time.
+    CapacityExceeded { mvu: usize, resource: &'static str, words: usize, depth: usize },
     /// The requested execution mode cannot map this model.
     Mode(String),
 }
@@ -53,7 +57,11 @@ impl std::fmt::Display for CompileError {
         match self {
             CompileError::InvalidModel(m) => write!(f, "invalid model: {m}"),
             CompileError::LayerCount(n) => {
-                write!(f, "pipelined mode maps one layer per MVU (1..=8), got {n}")
+                write!(
+                    f,
+                    "pipelined mode maps one layer per MVU (1..=8), got {n}; deeper models \
+                     run via multi-pass scheduling (ExecutionMode::Auto / --mode auto)"
+                )
             }
             CompileError::NoComputableRows { layer, policy } => write!(
                 f,
@@ -66,6 +74,11 @@ impl std::fmt::Display for CompileError {
             CompileError::OutputRegionTooLarge => {
                 write!(f, "distributed output region exceeds act RAM")
             }
+            CompileError::CapacityExceeded { mvu, resource, words, depth } => write!(
+                f,
+                "MVU {mvu}: {resource} image of {words} words exceeds the {depth}-word RAM \
+                 (shrink the model/precision or enlarge SessionBuilder::mvu_config)"
+            ),
             CompileError::Mode(m) => write!(f, "unsupported execution mode: {m}"),
         }
     }
@@ -145,6 +158,33 @@ impl CompiledModel {
     /// Read the final output tensor back from the system.
     pub fn read_output(&self, sys: &System, co: usize) -> Tensor3 {
         self.plans.last().unwrap().out_layout.read(&sys.mvus[self.out_mvu].act, co)
+    }
+
+    /// Check every RAM image fits the given memory geometry — a typed
+    /// [`CompileError::CapacityExceeded`] instead of an out-of-range panic
+    /// when the images are loaded. The session builder runs this for the
+    /// geometry it was configured with; direct `compile_pipelined` users
+    /// driving a custom [`System`] should call it with theirs.
+    pub fn check_fits(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
+        for plan in &self.plans {
+            let img = &self.images[plan.mvu];
+            let cap = |resource: &'static str, words: usize, depth: usize| {
+                if words > depth {
+                    Err(CompileError::CapacityExceeded { mvu: plan.mvu, resource, words, depth })
+                } else {
+                    Ok(())
+                }
+            };
+            cap("weight", plan.w_layout.base as usize + img.weights.len(), cfg.weight_depth)?;
+            // The out layout lives in the *next* MVU's activation RAM for
+            // non-final layers, but every MVU shares one act geometry.
+            let a_need = (plan.in_layout.base + plan.in_layout.size_words())
+                .max(plan.out_layout.base + plan.out_layout.size_words());
+            cap("activation", a_need as usize, cfg.act_depth)?;
+            cap("scaler", img.scale.len().div_ceil(64), cfg.scaler_depth)?;
+            cap("bias", img.bias.len().div_ceil(64), cfg.bias_depth)?;
+        }
+        Ok(())
     }
 }
 
@@ -357,26 +397,9 @@ mod tests {
     use super::*;
     use crate::accel::SystemConfig;
     use crate::model::zoo::{resnet9_cifar10, Rng};
-    use crate::quant::QuantSerCfg;
-    use crate::sim::{conv2d_i32, requant_i32};
 
     fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
-        let mut t = input.clone();
-        for l in &model.layers {
-            let acc = conv2d_i32(&t, &l.weights, l.spec());
-            t = requant_i32(
-                &acc,
-                &l.quant.scale,
-                &l.quant.bias,
-                QuantSerCfg {
-                    msb_index: l.quant.quant_msb,
-                    out_bits: l.oprec.bits,
-                    saturate: true,
-                },
-                l.relu,
-            );
-        }
-        t
+        model.golden_forward(input)
     }
 
     /// Shrink ResNet9 (first six layers, 16×16 inputs) so the full
@@ -450,7 +473,7 @@ mod tests {
         // Run layer by layer (direct drive ignores the program).
         for plan in &c.plans {
             for job in &plan.jobs {
-                sys.run_job(plan.mvu, job.clone());
+                sys.run_job(plan.mvu, job.clone()).unwrap();
             }
         }
         let got = c.read_output(&sys, m.layers.last().unwrap().co);

@@ -1,15 +1,25 @@
-//! Distributed-mode scheduling (§3.1.6, Fig. 5b): "the computation of a
-//! single layer is broken into 8 independent computation regions. All MVUs
-//! will be programmed to share the same set of weights."
+//! Execution-mode scheduling beyond the single-image pipelined map
+//! (§3.1.6):
 //!
-//! Rows of the output map are split into contiguous chunks, one per MVU;
-//! every MVU holds a full copy of the weights and the input rows its chunk
-//! needs (we load the whole input — the paper likewise notes the user "might
-//! need to copy the input regions that are shared between computation
-//! units"). No inter-MVU synchronisation is required, minimising latency.
+//! * **Distributed mode** (Fig. 5b): "the computation of a single layer is
+//!   broken into 8 independent computation regions. All MVUs will be
+//!   programmed to share the same set of weights." Rows of the output map
+//!   are split into contiguous chunks, one per MVU; every MVU holds a full
+//!   copy of the weights and the input rows its chunk needs (we load the
+//!   whole input — the paper likewise notes the user "might need to copy
+//!   the input regions that are shared between computation units"). No
+//!   inter-MVU synchronisation is required, minimising latency.
+//! * **Multi-pass pipelined mode** ([`MultiPassPlan`]): deep models are
+//!   split into ⌈N/8⌉ *passes* of ≤ 8 layers, each compiled as an ordinary
+//!   pipelined image ("models with more than 8 layers … require scheduling
+//!   laps of 8 layers", §3.1.6). Between passes the host copies the last
+//!   MVU's output region into MVU 0's input region and reloads the next
+//!   pass's weight/scaler/bias RAMs and RISC-V program — run-time
+//!   programmability is exactly what makes this a reload, not a
+//!   reconfiguration (the FINN-R contrast of Table 6).
 
 use crate::accel::{MvuCsrFile, System};
-use crate::model::ConvLayer;
+use crate::model::{ConvLayer, Model};
 use crate::mvu::JobConfig;
 use crate::pito::assemble;
 use crate::sim::Tensor3;
@@ -17,7 +27,7 @@ use crate::NUM_MVUS;
 
 use super::conv2d::{conv_jobs, rows_computed, EdgePolicy};
 use super::layout::{load_scaler_bias, ActLayout, WeightLayout};
-use super::program::{CompileError, OUT_BASE};
+use super::program::{compile_pipelined, CompileError, CompiledModel, OUT_BASE};
 
 /// A distributed-mode plan for one layer.
 pub struct DistributedPlan {
@@ -100,6 +110,29 @@ impl DistributedPlan {
         out
     }
 
+    /// Check the replicated RAM images fit the given memory geometry —
+    /// typed [`CompileError::CapacityExceeded`] instead of a load-time
+    /// panic (every participating MVU holds the same images).
+    pub fn check_fits(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
+        let cap = |resource: &'static str, words: usize, depth: usize| {
+            if words > depth {
+                Err(CompileError::CapacityExceeded { mvu: 0, resource, words, depth })
+            } else {
+                Ok(())
+            }
+        };
+        cap(
+            "weight",
+            (self.w_layout.base + self.w_layout.size_words()) as usize,
+            cfg.weight_depth,
+        )?;
+        let a_need = (self.in_layout.base + self.in_layout.size_words())
+            .max(self.out_layout.base + self.out_layout.size_words());
+        cap("activation", a_need as usize, cfg.act_depth)?;
+        cap("scaler", self.out_layout.cb, cfg.scaler_depth)?;
+        cap("bias", self.out_layout.cb, cfg.bias_depth)
+    }
+
     /// Global output-row range `[r0, r1)` assigned to MVU `m`.
     pub fn row_range(&self, m: usize, layer: &ConvLayer) -> (usize, usize) {
         let rows = rows_computed(layer, self.policy);
@@ -162,6 +195,92 @@ pub fn compile_distributed(
     let asm = emit_asm(layer, &jobs);
     let program = assemble(&asm).map_err(|e| CompileError::Assemble(e.to_string()))?;
     Ok(DistributedPlan { in_layout: in_l, out_layout: out_l, w_layout: w_l, jobs, asm, program, policy })
+}
+
+/// A deep model scheduled as ⌈N/8⌉ pipelined passes of ≤ 8 layers each.
+///
+/// Every pass is a self-contained [`CompiledModel`] (per-MVU weight images,
+/// RV32I program, layer plans). Executing an image means, per pass:
+/// reload that pass's weights/scalers/biases/program, copy the previous
+/// pass's output tensor into MVU 0's input region, run, and read the last
+/// MVU's output region back. Weights are therefore *not* image-persistent
+/// across runs the way a single-pass session's are — the per-image reload
+/// cost is [`MultiPassPlan::reload_words`] RAM words, the price §3.1.6
+/// pays for mapping arbitrarily deep models onto a fixed 8-MVU array.
+pub struct MultiPassPlan {
+    /// One compiled pipelined image per pass, in execution order.
+    pub passes: Vec<CompiledModel>,
+    /// Layer index range `[start, end)` of each pass in the source model.
+    pub ranges: Vec<(usize, usize)>,
+    /// Concatenated assembly listings of every pass (display/debug).
+    pub asm: String,
+    pub policy: EdgePolicy,
+}
+
+impl MultiPassPlan {
+    pub fn n_passes(&self) -> usize {
+        self.passes.len()
+    }
+
+    /// Sum of the analytic per-layer MVP cycles across every pass — the
+    /// multi-pass analogue of [`CompiledModel::total_analytic_cycles`].
+    pub fn total_analytic_cycles(&self) -> u64 {
+        self.passes.iter().map(|p| p.total_analytic_cycles()).sum()
+    }
+
+    /// Instruction count summed over every pass's program.
+    pub fn program_len(&self) -> usize {
+        self.passes.iter().map(|p| p.program.len()).sum()
+    }
+
+    /// Check every pass's RAM images fit the given memory geometry.
+    pub fn check_fits(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
+        self.passes.iter().try_for_each(|p| p.check_fits(cfg))
+    }
+
+    /// Weight + scaler + bias RAM words re-loaded per image (all passes):
+    /// the weight-reload cost model for deep networks. Weight words are
+    /// 4096-bit, scaler/bias words 64-lane.
+    pub fn reload_words(&self) -> u64 {
+        self.passes
+            .iter()
+            .flat_map(|p| p.images.iter())
+            .map(|img| {
+                (img.weights.len() + img.scale.len().div_ceil(64) + img.bias.len().div_ceil(64))
+                    as u64
+            })
+            .sum()
+    }
+}
+
+/// Compile a model of any depth for multi-pass pipelined execution: layer
+/// `start + i` of pass `p` runs on MVU `i`, with `start = 8·p`. Models of
+/// ≤ 8 layers yield a single pass (but still pay the per-run weight reload
+/// — prefer plain pipelined mode for them).
+pub fn compile_multi_pass(model: &Model, policy: EdgePolicy) -> Result<MultiPassPlan, CompileError> {
+    model.validate().map_err(CompileError::InvalidModel)?;
+    if model.layers.is_empty() {
+        return Err(CompileError::LayerCount(0));
+    }
+    let mut passes = Vec::new();
+    let mut ranges = Vec::new();
+    let mut asm = String::new();
+    let mut start = 0;
+    while start < model.layers.len() {
+        let end = (start + NUM_MVUS).min(model.layers.len());
+        let sub = Model {
+            name: format!("{}-pass{}", model.name, passes.len()),
+            layers: model.layers[start..end].to_vec(),
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        let pass = compile_pipelined(&sub, policy)?;
+        asm.push_str(&pass.asm);
+        passes.push(pass);
+        ranges.push((start, end));
+        start = end;
+    }
+    Ok(MultiPassPlan { passes, ranges, asm, policy })
 }
 
 fn emit_asm(layer: &ConvLayer, jobs: &[Vec<JobConfig>]) -> String {
@@ -320,5 +439,67 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c), "all rows covered");
+    }
+
+    /// Multi-pass splitting: a 16-layer chain yields two 8-layer passes
+    /// whose plans tile the source model in order, with matching analytic
+    /// cycle totals.
+    #[test]
+    fn multi_pass_splits_deep_models() {
+        let m = crate::model::zoo::resnet18_cifar(2, 2);
+        assert!(m.layers.len() > NUM_MVUS, "needs a deep model");
+        let plan = compile_multi_pass(&m, EdgePolicy::PadInRam).unwrap();
+        assert_eq!(plan.n_passes(), m.layers.len().div_ceil(NUM_MVUS));
+        // Ranges partition [0, n) contiguously in order.
+        let mut next = 0;
+        for (p, &(start, end)) in plan.ranges.iter().enumerate() {
+            assert_eq!(start, next, "pass {p} range gap");
+            assert!(end - start <= NUM_MVUS && end > start);
+            assert_eq!(plan.passes[p].plans.len(), end - start);
+            next = end;
+        }
+        assert_eq!(next, m.layers.len());
+        // Per-layer analytic cycles line up with the flat model.
+        let flat: u64 = m
+            .layers
+            .iter()
+            .map(|l| super::super::conv2d::layer_cycles(l, EdgePolicy::PadInRam))
+            .sum();
+        assert_eq!(plan.total_analytic_cycles(), flat);
+        assert!(plan.reload_words() > 0);
+        assert!(plan.program_len() > 0);
+        assert!(plan.asm.contains("pass0") && plan.asm.contains("pass1"));
+    }
+
+    /// A ≤8-layer model still compiles to exactly one pass, bitwise
+    /// identical in plan structure to `compile_pipelined`.
+    #[test]
+    fn multi_pass_shallow_is_single_pass() {
+        let m = resnet9_cifar10(2, 2);
+        let plan = compile_multi_pass(&m, EdgePolicy::SkipEdges).unwrap();
+        assert_eq!(plan.n_passes(), 1);
+        let single = compile_pipelined(&m, EdgePolicy::SkipEdges).unwrap();
+        assert_eq!(plan.total_analytic_cycles(), single.total_analytic_cycles());
+        assert_eq!(plan.passes[0].program, single.program);
+    }
+
+    #[test]
+    fn multi_pass_rejects_empty_and_invalid() {
+        let empty = Model {
+            name: "empty".into(),
+            layers: vec![],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        assert!(matches!(
+            compile_multi_pass(&empty, EdgePolicy::PadInRam),
+            Err(CompileError::LayerCount(0))
+        ));
+        let mut bad = resnet9_cifar10(2, 2);
+        bad.layers[1].ci = 100;
+        assert!(matches!(
+            compile_multi_pass(&bad, EdgePolicy::PadInRam),
+            Err(CompileError::InvalidModel(_))
+        ));
     }
 }

@@ -1,18 +1,72 @@
-//! Serving metrics: lock-free counters plus a mutex-guarded latency
-//! reservoir for percentile reporting.
+//! Serving metrics: lock-free counters plus a mutex-guarded **bounded**
+//! latency reservoir for percentile reporting.
+//!
+//! The original implementation pushed every completed request's latency
+//! into an unbounded `Vec` — a memory leak over the life of a heavy-traffic
+//! serving process, with `snapshot()` cloning the whole history each time.
+//! The reservoir keeps a fixed-size uniform sample (Vitter's Algorithm R),
+//! so memory and snapshot cost are O(capacity) forever while percentiles
+//! stay statistically faithful. Means are tracked exactly via atomic sums,
+//! and percentiles use the nearest-rank (ceiling) rule — the floor-biased
+//! rank made p99 of small samples read low (p99 of 10 samples must be the
+//! maximum, not the 9th value).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::model::zoo::Rng;
+
+/// Fixed reservoir capacity: enough for stable tail percentiles, small
+/// enough that a snapshot clone is trivial.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Uniform fixed-size sample of a stream (Algorithm R), driven by the
+/// crate's deterministic xorshift64* [`Rng`].
+#[derive(Debug)]
+struct Reservoir {
+    samples: Vec<u64>,
+    /// Stream length so far (samples.len() once the cap is reached).
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng(0x9E37_79B9_7F4A_7C15) }
+    }
+}
+
+impl Reservoir {
+    fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+            return;
+        }
+        // Replace a random slot with probability cap/seen.
+        let j = (self.rng.next_u64() % self.seen) as usize;
+        if j < RESERVOIR_CAP {
+            self.samples[j] = v;
+        }
+    }
+}
 
 /// Shared metrics handle.
 #[derive(Debug, Default)]
 pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
+    /// Requests that finished with a per-request engine error (the worker
+    /// thread survives; see `coordinator::Engine`).
+    failed: AtomicU64,
     batches: AtomicU64,
+    /// Total images across all batches (batch-size accounting).
+    batch_images: AtomicU64,
     sim_cycles: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// Exact latency sum for the mean (the reservoir is a sample).
+    lat_sum_us: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
 }
 
 /// Point-in-time snapshot.
@@ -20,11 +74,26 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    pub failed: u64,
     pub batches: u64,
+    /// Total images across all batches; `batch_images / batches` is the
+    /// mean batch size.
+    pub batch_images: u64,
     pub sim_cycles: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
+}
+
+impl MetricsSnapshot {
+    /// Mean images per dispatched batch (0 when nothing ran).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_images as f64 / self.batches as f64
+        }
+    }
 }
 
 impl Metrics {
@@ -34,34 +103,45 @@ impl Metrics {
 
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        let _ = size;
+        self.batch_images.fetch_add(size as u64, Ordering::Relaxed);
     }
 
     pub fn on_complete(&self, latency: Duration, sim_cycles: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.sim_cycles.fetch_add(sim_cycles, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(us);
+    }
+
+    pub fn on_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lats = self.latencies_us.lock().unwrap().clone();
+        // Bounded: at most RESERVOIR_CAP elements regardless of uptime.
+        let mut lats = self.latencies_us.lock().unwrap().samples.clone();
         lats.sort_unstable();
+        // Nearest-rank (ceiling) percentile: rank = ⌈p·n⌉, 1-based.
         let pct = |p: f64| -> u64 {
             if lats.is_empty() {
-                0
-            } else {
-                lats[((lats.len() - 1) as f64 * p) as usize]
+                return 0;
             }
+            let rank = ((lats.len() as f64) * p).ceil() as usize;
+            lats[rank.clamp(1, lats.len()) - 1]
         };
-        let mean = if lats.is_empty() {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let mean = if completed == 0 {
             0.0
         } else {
-            lats.iter().sum::<u64>() as f64 / lats.len() as f64
+            self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
         };
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            batch_images: self.batch_images.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             p50_us: pct(0.50),
             p99_us: pct(0.99),
@@ -85,7 +165,10 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 100);
         assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 0);
         assert_eq!(s.batches, 1);
+        assert_eq!(s.batch_images, 4);
+        assert!((s.mean_batch_size() - 4.0).abs() < 1e-9);
         assert_eq!(s.sim_cycles, 1000);
         assert_eq!(s.p50_us, 50);
         assert_eq!(s.p99_us, 99);
@@ -97,5 +180,54 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p99_us, 0);
         assert_eq!(s.mean_us, 0.0);
+        assert_eq!(s.mean_batch_size(), 0.0);
+    }
+
+    /// The old floor-biased rank read p99 of 10 samples as the 9th value;
+    /// nearest-rank reports the maximum, as it must.
+    #[test]
+    fn small_sample_p99_is_max() {
+        let m = Metrics::default();
+        for i in 1..=10u64 {
+            m.on_complete(Duration::from_micros(i), 0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.p99_us, 10);
+        assert_eq!(s.p50_us, 5);
+    }
+
+    /// The leak fix: memory stays bounded under serving-scale traffic and
+    /// the exact mean is unaffected by sampling.
+    #[test]
+    fn reservoir_stays_bounded() {
+        let m = Metrics::default();
+        let n = (RESERVOIR_CAP * 4) as u64;
+        for i in 0..n {
+            m.on_complete(Duration::from_micros(i % 1000), 1);
+        }
+        {
+            let r = m.latencies_us.lock().unwrap();
+            assert_eq!(r.samples.len(), RESERVOIR_CAP);
+            assert_eq!(r.seen, n);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, n);
+        // Exact mean of 0..1000 repeated = 499.5.
+        assert!((s.mean_us - 499.5).abs() < 1e-9, "{}", s.mean_us);
+        // Percentiles from the sample stay in a sane band.
+        assert!(s.p50_us >= 350 && s.p50_us <= 650, "p50 {}", s.p50_us);
+        assert!(s.p99_us >= 900, "p99 {}", s.p99_us);
+    }
+
+    #[test]
+    fn failures_counted_separately() {
+        let m = Metrics::default();
+        m.on_submit();
+        m.on_submit();
+        m.on_complete(Duration::from_micros(5), 1);
+        m.on_failure();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.failed, 1);
     }
 }

@@ -21,20 +21,28 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// Classifier logits; empty when `error` is set.
     pub logits: Vec<f32>,
-    /// Simulated accelerator cycles consumed by this request.
+    /// Simulated accelerator cycles consumed by this request (0 on error).
     pub sim_cycles: u64,
     pub worker: usize,
+    /// Per-request engine failure (rendered typed error). A failed request
+    /// is answered — the worker thread and every other queued request on
+    /// it survive.
+    pub error: Option<String>,
 }
 
 /// Anything that can run a batch of images to logits. `infer_batch` returns
-/// one `(logits, sim_cycles)` per input, in order.
+/// one `Result<(logits, sim_cycles), error>` per input, in order: a
+/// poisoned request surfaces as a per-item error rather than a panic, so a
+/// single bad image cannot kill a worker thread (and silently drop every
+/// request queued behind it) in a serving process.
 ///
 /// Engines are constructed *inside* their worker thread from an
 /// [`EngineFactory`], so they need not be `Send` (PJRT executables are
 /// thread-affine in the `xla` crate).
 pub trait Engine {
-    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)>;
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>>;
 }
 
 /// Constructs a worker's engine on its own thread.
@@ -102,20 +110,36 @@ impl Coordinator {
                                     .map(|r| (r.id, r.image))
                                     .unzip();
                                 let outs = engine.infer_batch(&images);
-                                for (id, (logits, cycles)) in ids.into_iter().zip(outs) {
+                                for (id, out) in ids.into_iter().zip(outs) {
                                     let idx = replies
                                         .iter()
                                         .position(|(rid, _, _)| *rid == id)
                                         .expect("reply channel registered");
                                     let (_, tx, t0) = replies.swap_remove(idx);
-                                    metrics2.on_complete(t0.elapsed(), cycles);
                                     router2.complete(w);
-                                    let _ = tx.send(InferenceResponse {
-                                        id,
-                                        logits,
-                                        sim_cycles: cycles,
-                                        worker: w,
-                                    });
+                                    let resp = match out {
+                                        Ok((logits, cycles)) => {
+                                            metrics2.on_complete(t0.elapsed(), cycles);
+                                            InferenceResponse {
+                                                id,
+                                                logits,
+                                                sim_cycles: cycles,
+                                                worker: w,
+                                                error: None,
+                                            }
+                                        }
+                                        Err(e) => {
+                                            metrics2.on_failure();
+                                            InferenceResponse {
+                                                id,
+                                                logits: Vec::new(),
+                                                sim_cycles: 0,
+                                                worker: w,
+                                                error: Some(e),
+                                            }
+                                        }
+                                    };
+                                    let _ = tx.send(resp);
                                 }
                             }
                         };
@@ -204,16 +228,24 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
-    /// Mock engine: logits = image sums; fixed cycle cost.
+    /// Mock engine: logits = image sums; fixed cycle cost. Images whose
+    /// first element is NaN fail with a per-request error (the serving
+    /// robustness contract under test).
     struct MockEngine {
         cost: u64,
     }
 
     impl Engine for MockEngine {
-        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
             images
                 .iter()
-                .map(|img| (vec![img.iter().sum::<f32>()], self.cost))
+                .map(|img| {
+                    if img.first().is_some_and(|v| v.is_nan()) {
+                        Err("malformed image".into())
+                    } else {
+                        Ok((vec![img.iter().sum::<f32>()], self.cost))
+                    }
+                })
                 .collect()
         }
     }
@@ -240,13 +272,47 @@ mod tests {
         c.flush();
         for (i, rx) in rxs.into_iter().enumerate() {
             let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(resp.error, None);
             assert_eq!(resp.logits, vec![i as f32 + 1.0]);
             assert_eq!(resp.sim_cycles, 100);
         }
         let snap = c.metrics().snapshot();
         assert_eq!(snap.submitted, 32);
         assert_eq!(snap.completed, 32);
+        assert_eq!(snap.failed, 0);
         assert_eq!(snap.sim_cycles, 3200);
+        assert_eq!(snap.batch_images, 32, "every image flows through on_batch");
+        c.shutdown();
+    }
+
+    /// Regression (serving robustness): a poisoned request is answered
+    /// with a per-request error; the worker thread survives and keeps
+    /// serving requests queued after it.
+    #[test]
+    fn engine_failure_answers_request_and_worker_survives() {
+        let mut c = coordinator(1, 2);
+        let ok_before = c.submit(vec![1.0, 2.0]);
+        let poisoned = c.submit(vec![f32::NAN]);
+        let ok_after = c.submit(vec![3.0, 4.0]);
+        c.flush();
+
+        let good = ok_before.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(good.error, None);
+        assert_eq!(good.logits, vec![3.0]);
+
+        let bad = poisoned.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(bad.error.as_deref(), Some("malformed image"));
+        assert!(bad.logits.is_empty());
+        assert_eq!(bad.sim_cycles, 0);
+
+        // The same worker still answers the request behind the poison pill.
+        let after = ok_after.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(after.error, None);
+        assert_eq!(after.logits, vec![7.0]);
+
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.failed, 1);
         c.shutdown();
     }
 

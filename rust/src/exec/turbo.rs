@@ -25,17 +25,16 @@ use crate::quant::BLOCK;
 /// busy-cycle counter advances by the job formula. Returns the crossbar
 /// writes the job produced (in emission order) and the cycles booked.
 ///
-/// Panics under the same contract as [`Mvu::launch`]: the MVU must be idle
-/// and the configuration valid.
-pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> (Vec<XbarWrite>, u64) {
-    assert!(
-        mvu.state() == MvuState::Idle,
-        "MVU{} turbo launch while busy",
-        mvu.id
-    );
-    if let Err(e) = cfg.validate() {
-        panic!("MVU{} bad job config: {e}", mvu.id);
+/// Fails under the same contract as [`Mvu::launch`] — the MVU must be idle
+/// and the configuration valid — as a typed error, never a panic: a
+/// malformed job is reachable from CSR-launched serving traffic and must
+/// not abort a coordinator worker thread.
+pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> Result<(Vec<XbarWrite>, u64), String> {
+    if mvu.state() != MvuState::Idle {
+        return Err(format!("MVU{} turbo launch while busy", mvu.id));
     }
+    cfg.validate()
+        .map_err(|e| format!("MVU{} bad job config: {e}", mvu.id))?;
 
     let mut walk = JobWalk::new(cfg);
     let mut out = OutputStage::new(cfg);
@@ -65,7 +64,7 @@ pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> (Vec<XbarWrite>, u64) {
     let cycles = cfg.cycles();
     debug_assert_eq!(cycles, macs_per_output * cfg.outputs as u64);
     mvu.finish_job_accounting(cycles);
-    (writes, cycles)
+    Ok((writes, cycles))
 }
 
 #[cfg(test)]
@@ -118,11 +117,11 @@ mod tests {
         let cfg = job(OutputDest::SelfRam);
 
         let mut stepped = loaded_mvu(0);
-        stepped.launch(cfg.clone());
+        stepped.launch(cfg.clone()).unwrap();
         let (step_writes, step_cycles) = stepped.run_to_completion();
 
         let mut turbo = loaded_mvu(0);
-        let (turbo_writes, turbo_cycles) = run_job_turbo(&mut turbo, &cfg);
+        let (turbo_writes, turbo_cycles) = run_job_turbo(&mut turbo, &cfg).unwrap();
 
         assert_eq!(turbo_cycles, step_cycles);
         assert_eq!(turbo_writes, step_writes);
@@ -140,22 +139,25 @@ mod tests {
         let cfg = job(OutputDest::Xbar { dest_mask: 0b0110 });
 
         let mut stepped = loaded_mvu(1);
-        stepped.launch(cfg.clone());
+        stepped.launch(cfg.clone()).unwrap();
         let (step_writes, _) = stepped.run_to_completion();
 
         let mut turbo = loaded_mvu(1);
-        let (turbo_writes, cycles) = run_job_turbo(&mut turbo, &cfg);
+        let (turbo_writes, cycles) = run_job_turbo(&mut turbo, &cfg).unwrap();
         assert_eq!(cycles, cfg.cycles());
         assert_eq!(turbo_writes, step_writes);
         assert_eq!(turbo_writes.len(), 16, "one write per output plane");
     }
 
+    /// Regression: a malformed job config is a typed error, not an abort.
     #[test]
-    #[should_panic(expected = "bad job config")]
     fn turbo_rejects_invalid_config() {
         let mut cfg = job(OutputDest::SelfRam);
         cfg.tiles = 0;
         let mut mvu = Mvu::new(2, MvuConfig::default());
-        run_job_turbo(&mut mvu, &cfg);
+        let err = run_job_turbo(&mut mvu, &cfg).unwrap_err();
+        assert!(err.contains("bad job config"), "{err}");
+        assert_eq!(mvu.busy_cycles(), 0, "rejected job must book nothing");
+        assert!(!mvu.irq_pending());
     }
 }

@@ -9,18 +9,21 @@
 //! * `estimate <cnv|resnet50>` — Table 5/6 throughput estimates
 //! * `asm <file.s>`            — assemble a Pito program, print words
 //! * `disasm <hex words...>`   — disassemble
-//! * `run [--wbits N --abits N --images N --exec cycle|turbo]` — run
-//!                               quantized ResNet9 end-to-end on the
-//!                               simulated accelerator through a warm
+//! * `run [--model resnet9|resnet18 --wbits N --abits N --images N
+//!        --exec cycle|turbo --mode pipelined|distributed|multipass|auto]`
+//!                             — run a quantized zoo model end-to-end on
+//!                               the simulated accelerator through a warm
 //!                               `InferenceSession` (weights loaded once,
-//!                               any precision, either execution backend)
+//!                               any precision, either execution backend;
+//!                               `--mode auto` schedules >8-layer models
+//!                               as multi-pass laps)
 
 use barvinn::codegen::EdgePolicy;
 use barvinn::exec::ExecMode;
 use barvinn::model::zoo;
 use barvinn::perf::benchkit::report_table;
 use barvinn::perf::{cycle_model, finn, resource_model};
-use barvinn::session::SessionBuilder;
+use barvinn::session::{parse_mode_arg, ExecutionMode, SessionBuilder};
 use barvinn::sim::Tensor3;
 use barvinn::CLOCK_HZ;
 
@@ -48,9 +51,11 @@ fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
          usage: barvinn <info|cycles|census|estimate|asm|disasm|run> [args]\n\
-         run flags: --wbits N --abits N --images N --exec cycle|turbo\n\
+         run flags: --model resnet9|resnet18 --wbits N --abits N --images N\n\
+                    --exec cycle|turbo --mode pipelined|distributed|multipass|auto\n\
                     (warm InferenceSession; turbo = job-level functional\n\
-                    backend, cycle = cycle-accurate Pito-driven stepper)\n\
+                    backend, cycle = cycle-accurate Pito-driven stepper;\n\
+                    auto mode schedules deep models as multi-pass laps)\n\
          see README.md for details"
     );
 }
@@ -211,7 +216,31 @@ fn run(args: &[String]) {
     let wb = parse_flag(args, "--wbits", 2) as u8;
     let ab = parse_flag(args, "--abits", 2) as u8;
     let exec = parse_exec_flag(args);
-    let m = zoo::resnet9_cifar10(ab, wb);
+    let mode = parse_mode_arg(args, ExecutionMode::Auto).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let model_name = match args.iter().position(|a| a == "--model") {
+        None => "resnet9",
+        Some(i) => match args.get(i + 1) {
+            Some(v) => v.as_str(),
+            None => {
+                eprintln!("--model requires a value (resnet9|resnet18)");
+                std::process::exit(2);
+            }
+        },
+    };
+    let m = match model_name {
+        "resnet9" => zoo::resnet9_cifar10(ab, wb),
+        // 16 layers: exceeds the array; --mode auto (the default) schedules
+        // it as two pipelined passes.
+        "resnet18" => zoo::resnet18_cifar(ab, wb),
+        other => {
+            eprintln!("unknown model '{other}' (resnet9|resnet18)");
+            std::process::exit(2);
+        }
+    };
+    let n_layers = m.layers.len();
     let l0 = &m.layers[0];
     let (ci, in_h, in_w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
     // Compile once, load weights once; every image below is a warm run —
@@ -219,6 +248,7 @@ fn run(args: &[String]) {
     let mut session = match SessionBuilder::new(m)
         .edge_policy(EdgePolicy::PadInRam)
         .exec_mode(exec)
+        .mode(mode)
         .build()
     {
         Ok(s) => s,
@@ -228,7 +258,10 @@ fn run(args: &[String]) {
         }
     };
     println!(
-        "ResNet9 {wb}b weights / {ab}b activations — program: {} instructions, {exec} backend",
+        "{model_name} ({n_layers} layers) {wb}b weights / {ab}b activations — \
+         {} mode, {} pass(es), program: {} instructions, {exec} backend",
+        session.execution_mode(),
+        session.n_passes(),
         session.program_len()
     );
     let mut rng = zoo::Rng(1);

@@ -144,6 +144,29 @@ impl Model {
         Ok(())
     }
 
+    /// Golden integer forward pass over the whole chain — the plain
+    /// `sim::conv2d_i32` + `sim::requant_i32` reference every accelerator
+    /// execution path (pipelined, distributed, multi-pass; both backends)
+    /// is verified bit-exactly against.
+    pub fn golden_forward(&self, input: &crate::sim::Tensor3) -> crate::sim::Tensor3 {
+        let mut t = input.clone();
+        for l in &self.layers {
+            let acc = crate::sim::conv2d_i32(&t, &l.weights, l.spec());
+            t = crate::sim::requant_i32(
+                &acc,
+                &l.quant.scale,
+                &l.quant.bias,
+                crate::quant::QuantSerCfg {
+                    msb_index: l.quant.quant_msb,
+                    out_bits: l.oprec.bits,
+                    saturate: true,
+                },
+                l.relu,
+            );
+        }
+        t
+    }
+
     /// Total parameter-memory bytes at the quantized precisions (packed,
     /// unpadded — the "Size" columns of Tables 1–2 count logical weights).
     pub fn packed_weight_bytes(&self) -> u64 {

@@ -1,17 +1,28 @@
 //! Model zoo: canonical architectures used across the paper's experiments.
 //!
-//! * [`resnet9_cifar10`] — the plain-CNN ResNet9 of §4.1/Table 3, with
-//!   deterministic pseudo-random quantized weights (training is a Python
-//!   concern; the simulator/codegen tests need geometry + valid operands).
-//! * Shape tables for FINN's CNV (Table 5), ResNet-50 (Table 6),
-//!   ResNet-18/CIFAR100 and SSD300-ResNet18 (Table 1 sizes).
+//! Two kinds of entry live here — know which you are holding:
+//!
+//! * **Executable [`Model`]s** — full layer stacks with deterministic
+//!   pseudo-random quantized weights (training is a Python concern; the
+//!   simulator/codegen tests need geometry + valid operands). These
+//!   compile to command streams and *run* on the simulated array:
+//!   [`resnet9_cifar10`] (§4.1/Table 3, 8 layers, single-pass pipelined)
+//!   and [`resnet18_cifar`] (16 layers — the deep-model workload that
+//!   exercises multi-pass scheduling, §3.1.6).
+//! * **Analytic [`NetShape`]s** — geometry-only tables feeding
+//!   `perf::cycle_model` / size estimators, never executed: FINN's CNV
+//!   (Table 5), ResNet-50 (Table 6), ResNet-18/CIFAR100 and
+//!   SSD300-ResNet18 (Table 1 sizes).
 //! * [`channel_census`] — per-model conv input-channel lists reconstructing
 //!   the ONNX-Model-Zoo census behind Fig. 2.
 
 use super::ir::{ConvLayer, Model, QuantSpec};
 use crate::quant::Precision;
 
-/// Deterministic xorshift64* generator for reproducible synthetic weights.
+/// Deterministic xorshift64* generator for reproducible synthetic weights
+/// (and anywhere else the crate needs a dependency-free PRNG, e.g. the
+/// serving metrics reservoir).
+#[derive(Debug, Clone, Copy)]
 pub struct Rng(pub u64);
 
 impl Rng {
@@ -90,6 +101,85 @@ pub fn resnet9_cifar10(a_bits: u8, w_bits: u8) -> Model {
         layers,
         host_prologue: Some("conv0".into()),
         host_epilogue: Some("fc".into()),
+    }
+}
+
+/// The accelerator-resident conv stack of a residual-distilled
+/// ResNet-18-style CIFAR network as an **executable** 16-layer [`Model`]
+/// (basic-block stages of widths 64/128/256/512, shortcuts removed by
+/// distillation like the paper's ResNet9, stem and classifier on the
+/// host): `(name, ci, co, stride, in_h)`, all 3×3 / pad 1.
+///
+/// At 16 layers this is the canonical multi-pass workload — two pipelined
+/// passes of 8 on the array (§3.1.6) — turning the deep-model rows of
+/// Tables 1/6 from analytic [`NetShape`]s into executed command streams.
+pub const RESNET18_CIFAR_SCHEDULE: [(&str, usize, usize, usize, usize); 16] = [
+    ("conv1", 64, 64, 1, 32),
+    ("conv2", 64, 64, 1, 32),
+    ("conv3", 64, 64, 1, 32),
+    ("conv4", 64, 64, 1, 32),
+    ("conv5", 64, 128, 2, 32),
+    ("conv6", 128, 128, 1, 16),
+    ("conv7", 128, 128, 1, 16),
+    ("conv8", 128, 128, 1, 16),
+    ("conv9", 128, 256, 2, 16),
+    ("conv10", 256, 256, 1, 8),
+    ("conv11", 256, 256, 1, 8),
+    ("conv12", 256, 256, 1, 8),
+    ("conv13", 256, 512, 2, 8),
+    ("conv14", 512, 512, 1, 4),
+    ("conv15", 512, 512, 1, 4),
+    ("conv16", 512, 512, 1, 4),
+];
+
+/// Build the executable deep model from [`RESNET18_CIFAR_SCHEDULE`] with
+/// deterministic synthetic quantized weights (same generation scheme as
+/// [`resnet9_cifar10`], its own seed). More than 8 layers: sessions must
+/// schedule it multi-pass (`ExecutionMode::Auto` picks that up).
+pub fn resnet18_cifar(a_bits: u8, w_bits: u8) -> Model {
+    let mut rng = Rng(0xBA5E_BA11_0000_0002);
+    let aprec = Precision::u(a_bits);
+    let wprec = Precision::s(w_bits);
+    let layers = RESNET18_CIFAR_SCHEDULE
+        .iter()
+        .map(|&(name, ci, co, stride, in_h)| {
+            let weights: Vec<i32> = (0..co * ci * 9)
+                .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+                .collect();
+            // Same requantization-window construction as resnet9_cifar10:
+            // select the top `a_bits` of the reachable accumulator range.
+            let max_acc = (ci * 9) as i64
+                * aprec.max_value() as i64
+                * wprec.min_value().unsigned_abs() as i64;
+            let scale: Vec<u16> = (0..co).map(|_| rng.range_i32(1, 4) as u16).collect();
+            let bias: Vec<i32> = (0..co).map(|_| rng.range_i32(-64, 64)).collect();
+            let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
+            ConvLayer {
+                name: name.to_string(),
+                ci,
+                co,
+                fh: 3,
+                fw: 3,
+                stride,
+                pad: 1,
+                in_h,
+                in_w: in_h,
+                aprec,
+                wprec,
+                oprec: aprec,
+                relu: true,
+                weights,
+                quant: QuantSpec { scale, bias, quant_msb: msb },
+            }
+        })
+        .collect();
+    Model {
+        name: format!("resnet18-cifar-w{w_bits}a{a_bits}"),
+        layers,
+        // Fully accelerator-resident: no AOT host artifacts exist for this
+        // synthetic stack (the stem/classifier are simply out of scope).
+        host_prologue: None,
+        host_epilogue: None,
     }
 }
 
@@ -560,6 +650,25 @@ mod tests {
         let b = resnet9_cifar10(2, 2);
         assert_eq!(a, b);
         assert!(a.validate().is_ok());
+    }
+
+    #[test]
+    fn resnet18_cifar_is_deep_valid_and_deterministic() {
+        let a = resnet18_cifar(2, 2);
+        let b = resnet18_cifar(2, 2);
+        assert_eq!(a, b);
+        assert!(a.validate().is_ok(), "{:?}", a.validate());
+        assert_eq!(a.layers.len(), 16, "must exceed the 8-MVU array");
+        // Stage geometry: 32→16→8→4 across the stride-2 layers.
+        assert_eq!(a.layers[4].out_h(), 16);
+        assert_eq!(a.layers[8].out_h(), 8);
+        assert_eq!(a.layers[12].out_h(), 4);
+        assert_eq!(a.layers[15].co, 512);
+        // Every layer's weight image fits the stock 2048-word weight RAM.
+        for l in &a.layers {
+            let words = l.co_sets() * l.fh * l.fw * l.ci_blocks() * l.wprec.bits as usize;
+            assert!(words <= 2048, "{}: {words} weight words", l.name);
+        }
     }
 
     #[test]

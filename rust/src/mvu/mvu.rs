@@ -130,13 +130,19 @@ impl Mvu {
         self.jobs_done = 0;
     }
 
-    /// Launch a job. Panics if already running (the controller must respect
-    /// the status CSR) or if the configuration is inconsistent.
-    pub fn launch(&mut self, cfg: JobConfig) {
-        assert!(self.job.is_none(), "MVU{} launch while busy", self.id);
-        if let Err(e) = cfg.validate() {
-            panic!("MVU{} bad job config: {e}", self.id);
+    /// Launch a job. Fails — typed, never a panic — when the MVU is still
+    /// running (the controller must respect the status CSR) or when the
+    /// configuration is inconsistent. Malformed CSR-programmed jobs are
+    /// reachable from serving traffic, so the error is surfaced up the
+    /// stack (`SystemExit::Fault` on the CSR path,
+    /// `SessionError::Launch` through the session) instead of aborting the
+    /// process and killing a coordinator worker thread.
+    pub fn launch(&mut self, cfg: JobConfig) -> Result<(), String> {
+        if self.job.is_some() {
+            return Err(format!("MVU{} launch while busy", self.id));
         }
+        cfg.validate()
+            .map_err(|e| format!("MVU{} bad job config: {e}", self.id))?;
         let job = ActiveJob {
             walk: JobWalk::new(&cfg),
             out: OutputStage::new(&cfg),
@@ -145,6 +151,7 @@ impl Mvu {
             cfg,
         };
         self.job = Some(Box::new(job));
+        Ok(())
     }
 
     /// Remove a just-launched job and hand back its configuration — the
@@ -282,7 +289,7 @@ mod tests {
             dest: OutputDest::SelfRam,
         };
         let expected_cycles = job.cycles();
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         let (_, cycles) = mvu.run_to_completion();
         assert_eq!(cycles, expected_cycles);
         assert_eq!(cycles, 4, "2b×2b single tile = 4 cycles (§3.1.1)");
@@ -336,7 +343,7 @@ mod tests {
             quant: raw_quant(),
             dest: OutputDest::SelfRam,
         };
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         let (_, cycles) = mvu.run_to_completion();
         assert_eq!(cycles, 9 * 2, "3b×3b × 2 tiles");
 
@@ -385,7 +392,7 @@ mod tests {
             quant: QuantSerCfg { msb_index: 7, out_bits: 2, saturate: true },
             dest: OutputDest::SelfRam,
         };
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         mvu.run_to_completion();
 
         let words: Vec<u64> = (0..2).map(|p| mvu.act.read(100 + p)).collect();
@@ -429,7 +436,7 @@ mod tests {
             quant: QuantSerCfg { msb_index: 7, out_bits: 8, saturate: false },
             dest: OutputDest::Xbar { dest_mask: 0b0001_0010 },
         };
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         let (writes, _) = mvu.run_to_completion();
         assert_eq!(writes.len(), 8, "one write per output plane word");
         assert!(writes.iter().all(|w| w.dest_mask == 0b0001_0010));
@@ -468,10 +475,10 @@ mod tests {
             quant: QuantSerCfg { msb_index: 7, out_bits: 8, saturate: false },
             dest: OutputDest::SelfRam,
         };
-        mvu.launch(job.clone());
+        mvu.launch(job.clone()).unwrap();
         mvu.run_to_completion();
         mvu.clear_irq();
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         mvu.run_to_completion();
         assert_eq!(mvu.busy_cycles(), 8);
         assert_eq!(mvu.jobs_done(), 2);
@@ -508,11 +515,50 @@ mod tests {
             quant: QuantSerCfg { msb_index: 7, out_bits: 8, saturate: false },
             dest: OutputDest::SelfRam,
         };
-        mvu.launch(job);
+        mvu.launch(job).unwrap();
         let (_, cycles) = mvu.run_to_completion();
         assert_eq!(cycles, 4 * 2 * 1);
         let words: Vec<u64> = (0..8).map(|p| mvu.act.read(500 + p)).collect();
         let got = crate::quant::unpack_block(&words, Precision::u(8));
         assert!(got.iter().all(|&v| v == 64 * 3), "max over {{0,128,192,64}}");
+    }
+
+    /// Regression: a malformed job config or a launch-while-busy is a typed
+    /// error, not a process abort (reachable from CSR-launched serving
+    /// traffic).
+    #[test]
+    fn bad_launches_error_instead_of_panicking() {
+        let ap = Precision::u(2);
+        let wp = Precision::s(2);
+        let mut mvu = Mvu::new(6, MvuConfig::default());
+        let good = JobConfig {
+            aprec: ap,
+            wprec: wp,
+            tiles: 1,
+            outputs: 1,
+            a_agu: AguCfg::from_strides(0, &[]),
+            w_agu: AguCfg::from_strides(0, &[]),
+            s_agu: AguCfg::default(),
+            b_agu: AguCfg::default(),
+            o_agu: AguCfg::from_strides(100, &[]),
+            scaler_en: false,
+            bias_en: false,
+            relu_en: false,
+            pool_count: 1,
+            quant: raw_quant(),
+            dest: OutputDest::SelfRam,
+        };
+        let mut bad = good.clone();
+        bad.tiles = 0;
+        let err = mvu.launch(bad).unwrap_err();
+        assert!(err.contains("bad job config"), "{err}");
+        assert_eq!(mvu.state(), MvuState::Idle, "rejected launch leaves MVU idle");
+
+        mvu.launch(good.clone()).unwrap();
+        let err = mvu.launch(good).unwrap_err();
+        assert!(err.contains("while busy"), "{err}");
+        // The original job is untouched and still completes.
+        let (_, cycles) = mvu.run_to_completion();
+        assert_eq!(cycles, 4);
     }
 }

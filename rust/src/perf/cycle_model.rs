@@ -126,6 +126,33 @@ pub fn peak_bit_macs_per_s(clock_hz: u64) -> u64 {
     NUM_MVUS as u64 * 64 * 64 * clock_hz
 }
 
+/// Shape view of an executable [`crate::model::Model`] (square-kernel conv
+/// chains): the bridge between executed command streams and this analytic
+/// model, so e2e tests and benches can assert *executed* multi-pass cycles
+/// against the Table-3/Table-6-class prediction.
+pub fn shape_of_model(name: &'static str, m: &crate::model::Model) -> NetShape {
+    NetShape {
+        name,
+        convs: m
+            .layers
+            .iter()
+            .map(|l| {
+                debug_assert_eq!(l.fh, l.fw, "analytic ConvShape assumes square kernels");
+                ConvShape {
+                    ci: l.ci,
+                    co: l.co,
+                    k: l.fh,
+                    stride: l.stride,
+                    pad: l.pad,
+                    in_h: l.in_h,
+                }
+            })
+            .collect(),
+        fcs: vec![],
+        quant_exempt: vec![],
+    }
+}
+
 /// The accelerator-resident portion of a network: the paper computes the
 /// first layer and the classifier on the host (§4.1), so throughput
 /// estimates drop the stem conv and the FC head.
@@ -169,6 +196,24 @@ mod tests {
     #[test]
     fn table3_total_via_shape_model() {
         assert_eq!(total_cycles(&resnet9_shapes(), B22), 194_688);
+    }
+
+    /// The Model→NetShape bridge agrees with both the hand-built shape
+    /// table and the per-layer codegen accounting (SkipEdges rows).
+    #[test]
+    fn shape_of_model_matches_codegen_accounting() {
+        let m = zoo::resnet9_cifar10(2, 2);
+        let net = shape_of_model("resnet9", &m);
+        assert_eq!(total_cycles(&net, B22), 194_688);
+        let deep = zoo::resnet18_cifar(2, 2);
+        let net18 = shape_of_model("resnet18", &deep);
+        let codegen: u64 = deep
+            .layers
+            .iter()
+            .map(|l| crate::codegen::layer_cycles(l, crate::codegen::EdgePolicy::SkipEdges))
+            .sum();
+        assert_eq!(total_cycles(&net18, B22), codegen);
+        assert_eq!(net18.convs.len(), 16);
     }
 
     #[test]

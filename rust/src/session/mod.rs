@@ -42,29 +42,91 @@
 //! [`ExecMode::CycleAccurate`], which drives the generated Pito program on
 //! the modelled CPU and additionally reports true system cycles.
 //!
+//! **Deep models** (§3.1.6 "laps"): the pipelined map holds at most 8
+//! layers. [`ExecutionMode::Auto`] (or explicit
+//! [`ExecutionMode::MultiPass`]) schedules an N-layer model as ⌈N/8⌉
+//! pipelined passes; `run()` reloads each pass's weights and program,
+//! copies the previous pass's output into MVU 0's input region and sums
+//! cycle accounting across passes — same bit-exact outputs under both
+//! backends. Weight residency then rotates per pass, so deep sessions pay
+//! a per-image reload ([`crate::codegen::MultiPassPlan::reload_words`]);
+//! this is the run-time-programmability trade the paper makes against
+//! per-model bitstream regeneration.
+//!
 //! All failure paths surface as the typed [`SessionError`] — no stringly
 //! errors, no panicking asserts on [`SystemExit`].
 
 use crate::accel::{System, SystemConfig, SystemExit};
 use crate::exec::ExecMode;
-use crate::codegen::program::CompiledModel;
-use crate::codegen::schedule::DistributedPlan;
-use crate::codegen::{compile_distributed, compile_pipelined, CompileError, EdgePolicy};
+use crate::codegen::program::{CompiledModel, LayerPlan};
+use crate::codegen::schedule::{DistributedPlan, MultiPassPlan};
+use crate::codegen::{
+    compile_distributed, compile_multi_pass, compile_pipelined, CompileError, EdgePolicy,
+};
 use crate::coordinator::Engine;
 use crate::model::Model;
-use crate::mvu::MvuConfig;
+use crate::mvu::{JobConfig, MvuConfig};
 use crate::pito::Trap;
 use crate::runtime::{ArtifactStore, HostModule, Runtime, RuntimeError};
 use crate::sim::Tensor3;
 
-/// §3.1.6 execution modes (Fig. 5).
+/// §3.1.6 execution modes (Fig. 5), plus the depth-driven selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecutionMode {
-    /// Layer `i` on MVU `i`, rows streamed between layers (max throughput).
+    /// Layer `i` on MVU `i`, rows streamed between layers (max throughput);
+    /// the model must fit the array (1..=8 layers).
     Pipelined,
     /// One layer split row-wise across all 8 MVUs (min latency); the model
     /// must be a single layer.
     Distributed,
+    /// Deep models: ⌈N/8⌉ pipelined passes of ≤ 8 layers, activations
+    /// carried between passes, weights reloaded per pass (§3.1.6 "laps").
+    MultiPass,
+    /// Resolve from model depth at build time: 1 layer → `Distributed`,
+    /// 2..=8 → `Pipelined`, >8 → `MultiPass`.
+    Auto,
+}
+
+impl std::fmt::Display for ExecutionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ExecutionMode::Pipelined => "pipelined",
+            ExecutionMode::Distributed => "distributed",
+            ExecutionMode::MultiPass => "multi-pass",
+            ExecutionMode::Auto => "auto",
+        })
+    }
+}
+
+/// Parse a CLI mode name (`pipelined` | `distributed` | `multipass` | `auto`).
+impl std::str::FromStr for ExecutionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pipelined" => Ok(ExecutionMode::Pipelined),
+            "distributed" => Ok(ExecutionMode::Distributed),
+            "multipass" | "multi-pass" => Ok(ExecutionMode::MultiPass),
+            "auto" => Ok(ExecutionMode::Auto),
+            other => Err(format!(
+                "unknown execution mode '{other}' (pipelined|distributed|multipass|auto)"
+            )),
+        }
+    }
+}
+
+/// Scan CLI args for `--mode <pipelined|distributed|multipass|auto>`:
+/// `Ok(default)` when the flag is absent, `Err(message)` when its value is
+/// missing or invalid. Shared by `barvinn run` and `examples/serve.rs`
+/// (mirrors [`crate::exec::parse_exec_arg`]).
+pub fn parse_mode_arg(args: &[String], default: ExecutionMode) -> Result<ExecutionMode, String> {
+    let Some(i) = args.iter().position(|a| a == "--mode") else {
+        return Ok(default);
+    };
+    match args.get(i + 1) {
+        None => Err("--mode requires a value (pipelined|distributed|multipass|auto)".into()),
+        Some(v) => v.parse(),
+    }
 }
 
 /// Typed inference error: every way a session can fail to build or run.
@@ -153,7 +215,8 @@ impl SessionBuilder {
         self
     }
 
-    /// Pipelined (throughput) vs Distributed (latency) mapping.
+    /// Scheduling mode: Pipelined (throughput), Distributed (latency),
+    /// MultiPass (deep models) or Auto (resolve from model depth).
     pub fn mode(mut self, mode: ExecutionMode) -> Self {
         self.mode = mode;
         self
@@ -198,22 +261,42 @@ impl SessionBuilder {
 
     /// Compile the model, build the system and make all image-invariant
     /// state resident: weights, scalers, biases, the assembled program and
-    /// (optionally) the compiled host modules.
+    /// (optionally) the compiled host modules. Multi-pass programs stage
+    /// the per-pass weight images in the plan instead — RAM residency
+    /// rotates pass by pass inside [`InferenceSession::run`].
     pub fn build(self) -> Result<InferenceSession, SessionError> {
-        let program = match self.mode {
+        let n = self.model.layers.len();
+        let mode = match self.mode {
+            ExecutionMode::Auto => {
+                if n == 1 {
+                    ExecutionMode::Distributed
+                } else if n <= crate::NUM_MVUS {
+                    ExecutionMode::Pipelined
+                } else {
+                    ExecutionMode::MultiPass
+                }
+            }
+            m => m,
+        };
+        let program = match mode {
             ExecutionMode::Pipelined => {
                 Program::Pipelined(compile_pipelined(&self.model, self.policy)?)
             }
+            ExecutionMode::MultiPass => {
+                Program::MultiPass(compile_multi_pass(&self.model, self.policy)?)
+            }
             ExecutionMode::Distributed => {
-                if self.model.layers.len() != 1 {
+                if n != 1 {
                     return Err(SessionError::Compile(CompileError::Mode(format!(
-                        "distributed mode maps a single layer across the array, got {}",
-                        self.model.layers.len()
+                        "distributed mode maps a single layer across the array, got {n} \
+                         layers (pipelined handles 2..=8; ExecutionMode::Auto / --mode auto \
+                         picks multi-pass for deeper models)"
                     ))));
                 }
                 self.model.validate().map_err(CompileError::InvalidModel)?;
                 Program::Distributed(compile_distributed(&self.model.layers[0], self.policy)?)
             }
+            ExecutionMode::Auto => unreachable!("Auto resolved to a concrete mode above"),
         };
 
         let cfg = SystemConfig {
@@ -223,8 +306,17 @@ impl SessionBuilder {
         };
         let mut sys = System::new(cfg);
         match &program {
-            Program::Pipelined(c) => c.load_weights(&mut sys),
-            Program::Distributed(p) => p.load_weights(&mut sys, &self.model.layers[0]),
+            Program::Pipelined(c) => {
+                c.check_fits(&self.mvu)?;
+                c.load_weights(&mut sys);
+            }
+            Program::Distributed(p) => {
+                p.check_fits(&self.mvu)?;
+                p.load_weights(&mut sys, &self.model.layers[0]);
+            }
+            // Weights rotate per pass inside run(): nothing to pre-load,
+            // but every pass must fit the geometry before we accept it.
+            Program::MultiPass(p) => p.check_fits(&self.mvu)?,
         }
 
         let host = match self.artifacts {
@@ -253,6 +345,7 @@ impl SessionBuilder {
             program,
             sys,
             host,
+            fuel: self.fuel,
             images_run: 0,
             total_mvu_cycles: 0,
             total_system_cycles: 0,
@@ -265,6 +358,7 @@ impl SessionBuilder {
 enum Program {
     Pipelined(CompiledModel),
     Distributed(DistributedPlan),
+    MultiPass(MultiPassPlan),
 }
 
 /// PJRT host prologue/epilogue owned by the session.
@@ -280,15 +374,17 @@ struct HostPipeline {
 pub struct RunOutput {
     /// The final activation tensor.
     pub output: Tensor3,
-    /// Per-MVU busy cycles for this image (pipelined mode: per-layer).
-    /// Backend-invariant: turbo books the same per-job counts as the
-    /// stepper.
+    /// Per-MVU busy cycles for this image. Pipelined mode: one entry per
+    /// MVU (= per layer); multi-pass mode: one entry per *layer* across
+    /// all passes, in model order (the array is time-multiplexed, so
+    /// per-MVU totals would conflate layers). Backend-invariant: turbo
+    /// books the same per-job counts as the stepper.
     pub mvu_cycles: Vec<u64>,
     /// Sum of MVU busy cycles for this image.
     pub total_mvu_cycles: u64,
-    /// Global system cycles for this image. Under the cycle-accurate
-    /// backend this includes CPU orchestration; under turbo it advances by
-    /// MVP job cycles only.
+    /// Global system cycles for this image (multi-pass: summed over
+    /// passes). Under the cycle-accurate backend this includes CPU
+    /// orchestration; under turbo it advances by MVP job cycles only.
     pub system_cycles: u64,
     /// 0-based index of this image within the session.
     pub image_index: u64,
@@ -312,7 +408,9 @@ pub struct SessionMetrics {
     pub total_mvu_cycles: u64,
     pub total_system_cycles: u64,
     /// Sum over runs of the *slowest* MVU's busy cycles — the pipeline
-    /// bottleneck stage, which bounds steady-state throughput.
+    /// bottleneck stage, which bounds steady-state throughput. Multi-pass
+    /// runs sum the bottleneck of every pass (the lap model behind
+    /// [`crate::perf::cycle_model::fps_pipelined`]).
     pub total_bottleneck_cycles: u64,
 }
 
@@ -345,6 +443,10 @@ pub struct InferenceSession {
     program: Program,
     sys: System,
     host: Option<HostPipeline>,
+    /// The image-level cycle budget from the builder. Multi-pass runs
+    /// re-arm the system's remaining fuel before each pass, so this keeps
+    /// the original budget for error reporting.
+    fuel: u64,
     images_run: u64,
     total_mvu_cycles: u64,
     total_system_cycles: u64,
@@ -363,19 +465,42 @@ impl InferenceSession {
         self.sys.exec_mode()
     }
 
-    /// The generated RISC-V assembly listing.
+    /// The concrete execution mode this session compiled to (never
+    /// [`ExecutionMode::Auto`] — that is resolved at build time).
+    pub fn execution_mode(&self) -> ExecutionMode {
+        match &self.program {
+            Program::Pipelined(_) => ExecutionMode::Pipelined,
+            Program::Distributed(_) => ExecutionMode::Distributed,
+            Program::MultiPass(_) => ExecutionMode::MultiPass,
+        }
+    }
+
+    /// Scheduling passes per image: 1 for single-pass modes, ⌈layers/8⌉
+    /// under multi-pass.
+    pub fn n_passes(&self) -> usize {
+        match &self.program {
+            Program::MultiPass(p) => p.n_passes(),
+            _ => 1,
+        }
+    }
+
+    /// The generated RISC-V assembly listing (multi-pass: all passes,
+    /// concatenated in execution order).
     pub fn asm(&self) -> &str {
         match &self.program {
             Program::Pipelined(c) => &c.asm,
             Program::Distributed(p) => &p.asm,
+            Program::MultiPass(p) => &p.asm,
         }
     }
 
-    /// Instruction count of the loaded program.
+    /// Instruction count of the loaded program (multi-pass: summed over
+    /// every pass's program).
     pub fn program_len(&self) -> usize {
         match &self.program {
             Program::Pipelined(c) => c.program.len(),
             Program::Distributed(p) => p.program.len(),
+            Program::MultiPass(p) => p.program_len(),
         }
     }
 
@@ -390,37 +515,29 @@ impl InferenceSession {
     }
 
     /// Run one quantized input image through the array and return the final
-    /// activations plus cycle accounting. Only activation state is reset
-    /// between calls; weights, scalers, biases and the program stay
-    /// resident from [`SessionBuilder::build`]. Dispatches on the
-    /// configured [`ExecMode`] — see the module docs for when each backend
-    /// is authoritative.
+    /// activations plus cycle accounting.
+    ///
+    /// Single-pass modes reset only activation state between calls;
+    /// weights, scalers, biases and the program stay resident from
+    /// [`SessionBuilder::build`]. Multi-pass mode additionally reloads each
+    /// pass's weights and program as the array is time-multiplexed through
+    /// the deep model, carrying activations between passes and honouring
+    /// the fuel budget *across* passes. Dispatches on the configured
+    /// [`ExecMode`] — see the module docs for when each backend is
+    /// authoritative.
     pub fn run(&mut self, input: &Tensor3) -> Result<RunOutput, SessionError> {
-        self.sys.reset_run_state();
-        match &self.program {
-            Program::Pipelined(c) => c.load_input(&mut self.sys, input),
-            Program::Distributed(p) => p.load_input(&mut self.sys, input),
-        }
-
-        match self.sys.exec_mode() {
-            ExecMode::CycleAccurate => self.drive_cycle_accurate()?,
-            ExecMode::Turbo => self.drive_turbo()?,
-        }
-
-        let output = match &self.program {
-            Program::Pipelined(c) => {
-                c.read_output(&self.sys, self.model.layers.last().unwrap().co)
-            }
-            Program::Distributed(p) => p.read_output(&self.sys, &self.model.layers[0]),
+        let multi = matches!(self.program, Program::MultiPass(_));
+        let (output, mvu_cycles, system_cycles, bottleneck) = if multi {
+            self.exec_multi_pass(input)?
+        } else {
+            self.exec_single(input)?
         };
-        let mvu_cycles: Vec<u64> = self.sys.mvus.iter().map(|m| m.busy_cycles()).collect();
         let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
-        let system_cycles = self.sys.cycles();
         let image_index = self.images_run;
         self.images_run += 1;
         self.total_mvu_cycles += total_mvu_cycles;
         self.total_system_cycles += system_cycles;
-        self.total_bottleneck_cycles += mvu_cycles.iter().max().copied().unwrap_or(0);
+        self.total_bottleneck_cycles += bottleneck;
         Ok(RunOutput {
             output,
             mvu_cycles,
@@ -431,82 +548,96 @@ impl InferenceSession {
         })
     }
 
-    /// Cycle-accurate drive: execute the generated Pito program on the
-    /// modelled barrel CPU (the verification path).
-    fn drive_cycle_accurate(&mut self) -> Result<(), SessionError> {
-        let exit = self.sys.run();
-        match exit {
-            SystemExit::Done | SystemExit::AllExited => {}
-            SystemExit::MaxCycles => {
-                return Err(SessionError::FuelExhausted { fuel: self.sys.max_cycles() })
-            }
-            SystemExit::Deadlock => return Err(SessionError::Deadlock),
-            SystemExit::Fault { hart, trap } => {
-                // A rejected launch surfaces as an illegal CSR write; prefer
-                // the recorded launch diagnostics over the raw trap.
-                if !self.sys.launch_errors().is_empty() {
-                    return Err(SessionError::Launch(self.sys.launch_errors().to_vec()));
+    /// One warm single-pass run: reset activation state, load the input,
+    /// drive, read back `(output, per-MVU cycles, system cycles,
+    /// bottleneck-stage cycles)`.
+    fn exec_single(
+        &mut self,
+        input: &Tensor3,
+    ) -> Result<(Tensor3, Vec<u64>, u64, u64), SessionError> {
+        self.sys.reset_run_state();
+        match &self.program {
+            Program::Pipelined(c) => c.load_input(&mut self.sys, input),
+            Program::Distributed(p) => p.load_input(&mut self.sys, input),
+            Program::MultiPass(_) => unreachable!("multi-pass handled by exec_multi_pass"),
+        }
+
+        match self.sys.exec_mode() {
+            ExecMode::CycleAccurate => drive_cycle_accurate(&mut self.sys, self.fuel)?,
+            ExecMode::Turbo => match &self.program {
+                Program::Pipelined(c) => {
+                    drive_pipelined_turbo(&mut self.sys, &c.plans, self.fuel)?
                 }
-                return Err(SessionError::Fault { hart, trap });
+                Program::Distributed(p) => {
+                    drive_distributed_turbo(&mut self.sys, &p.jobs, self.fuel)?
+                }
+                Program::MultiPass(_) => unreachable!("multi-pass handled by exec_multi_pass"),
+            },
+        }
+
+        let output = match &self.program {
+            Program::Pipelined(c) => {
+                c.read_output(&self.sys, self.model.layers.last().unwrap().co)
             }
-        }
-        if !self.sys.launch_errors().is_empty() {
-            return Err(SessionError::Launch(self.sys.launch_errors().to_vec()));
-        }
-        Ok(())
+            Program::Distributed(p) => p.read_output(&self.sys, &self.model.layers[0]),
+            Program::MultiPass(_) => unreachable!("multi-pass handled by exec_multi_pass"),
+        };
+        let mvu_cycles: Vec<u64> = self.sys.mvus.iter().map(|m| m.busy_cycles()).collect();
+        let bottleneck = mvu_cycles.iter().max().copied().unwrap_or(0);
+        Ok((output, mvu_cycles, self.sys.cycles(), bottleneck))
     }
 
-    /// Turbo drive: replay the compiled job stream through the job-level
-    /// executor, skipping the CPU entirely. The compiled plans already
-    /// encode the dataflow order the program enforces at runtime (layer
-    /// order in pipelined mode, independent chunks in distributed mode), so
-    /// sequential replay is exact. The session's fuel budget is honoured in
-    /// modelled MVP cycles, checked *after* every job so a stream that
-    /// overshoots the budget — even on its final job — fails with
-    /// [`SessionError::FuelExhausted`] just like a starved cycle-accurate
-    /// run (whose fuel check also fires at `cycles >= max`). Jobs are
-    /// validated before launch so a malformed stream surfaces as the same
-    /// typed [`SessionError::Launch`] the CSR bridge reports, not a panic.
-    fn drive_turbo(&mut self) -> Result<(), SessionError> {
-        let fuel = self.sys.max_cycles();
-        let checked = |mvu: usize, job: &crate::mvu::JobConfig| -> Result<(), SessionError> {
-            job.validate()
-                .map_err(|e| SessionError::Launch(vec![format!("MVU {mvu}: {e}")]))
+    /// One multi-pass run over a deep model. Per pass `p`: reset run
+    /// state, re-arm the *remaining* fuel, reload pass `p`'s weight,
+    /// scaler and bias RAMs and its program, load the carried activations
+    /// (the raw input for pass 0) into MVU 0, drive with the configured
+    /// backend, then read the last MVU's output region as the next pass's
+    /// input — the host-DMA copy of §3.1.6's lap schedule. Returns per
+    /// *layer* MVU cycles (model order) and the per-pass-bottleneck sum.
+    fn exec_multi_pass(
+        &mut self,
+        input: &Tensor3,
+    ) -> Result<(Tensor3, Vec<u64>, u64, u64), SessionError> {
+        let Program::MultiPass(plan) = &self.program else {
+            unreachable!("exec_multi_pass requires a multi-pass program")
         };
-        match &self.program {
-            Program::Pipelined(c) => {
-                for plan in &c.plans {
-                    let before = self.sys.mvus[plan.mvu].busy_cycles();
-                    for job in &plan.jobs {
-                        checked(plan.mvu, job)?;
-                        self.sys.run_job(plan.mvu, job.clone());
-                        if self.sys.cycles() >= fuel {
-                            return Err(SessionError::FuelExhausted { fuel });
-                        }
-                    }
-                    // Cross-check: the job-formula cycles turbo books must
-                    // equal the analytic per-layer model (Table-3 exact).
-                    debug_assert_eq!(
-                        self.sys.mvus[plan.mvu].busy_cycles() - before,
-                        plan.analytic_cycles,
-                        "turbo cycle accounting diverged from perf model on MVU {}",
-                        plan.mvu
-                    );
-                }
+        let fuel = self.fuel;
+        let mut spent = 0u64;
+        let mut mvu_cycles: Vec<u64> = Vec::with_capacity(self.model.layers.len());
+        let mut bottleneck = 0u64;
+        let mut carried: Option<Tensor3> = None;
+        for (p, pass) in plan.passes.iter().enumerate() {
+            if spent >= fuel {
+                return Err(SessionError::FuelExhausted { fuel });
             }
-            Program::Distributed(p) => {
-                for (m, jobs) in p.jobs.iter().enumerate() {
-                    for job in jobs {
-                        checked(m, job)?;
-                        self.sys.run_job(m, job.clone());
-                        if self.sys.cycles() >= fuel {
-                            return Err(SessionError::FuelExhausted { fuel });
-                        }
-                    }
-                }
+            self.sys.reset_run_state();
+            self.sys.set_max_cycles(fuel - spent);
+            pass.load_weights(&mut self.sys);
+            match &carried {
+                None => pass.load_input(&mut self.sys, input),
+                Some(t) => pass.load_input(&mut self.sys, t),
+            }
+            match self.sys.exec_mode() {
+                ExecMode::CycleAccurate => drive_cycle_accurate(&mut self.sys, fuel)?,
+                ExecMode::Turbo => drive_pipelined_turbo(&mut self.sys, &pass.plans, fuel)?,
+            }
+            spent += self.sys.cycles();
+            let mut pass_max = 0u64;
+            for layer_plan in &pass.plans {
+                let c = self.sys.mvus[layer_plan.mvu].busy_cycles();
+                pass_max = pass_max.max(c);
+                mvu_cycles.push(c);
+            }
+            bottleneck += pass_max;
+            let (_, end) = plan.ranges[p];
+            let out = pass.read_output(&self.sys, self.model.layers[end - 1].co);
+            if p + 1 < plan.passes.len() {
+                carried = Some(out);
+            } else {
+                return Ok((out, mvu_cycles, spent, bottleneck));
             }
         }
-        Ok(())
+        unreachable!("compile_multi_pass guarantees at least one pass")
     }
 
     /// Run one raw f32 image through host prologue → MVU array → host
@@ -544,19 +675,110 @@ impl InferenceSession {
     }
 }
 
+/// Cycle-accurate drive: execute the loaded Pito program on the modelled
+/// barrel CPU (the verification path). `fuel_report` is the session's
+/// image-level budget, quoted in [`SessionError::FuelExhausted`] — under
+/// multi-pass the system's own `max_cycles` is only the remaining share.
+fn drive_cycle_accurate(sys: &mut System, fuel_report: u64) -> Result<(), SessionError> {
+    let exit = sys.run();
+    match exit {
+        SystemExit::Done | SystemExit::AllExited => {}
+        SystemExit::MaxCycles => {
+            return Err(SessionError::FuelExhausted { fuel: fuel_report })
+        }
+        // A rejected or aborted launch is recorded by the bridge; prefer
+        // those diagnostics over the raw trap/deadlock when present.
+        SystemExit::Deadlock => {
+            if !sys.launch_errors().is_empty() {
+                return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+            }
+            return Err(SessionError::Deadlock);
+        }
+        SystemExit::Fault { hart, trap } => {
+            if !sys.launch_errors().is_empty() {
+                return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+            }
+            return Err(SessionError::Fault { hart, trap });
+        }
+    }
+    if !sys.launch_errors().is_empty() {
+        return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+    }
+    Ok(())
+}
+
+/// Turbo drive of a pipelined pass: replay the compiled job stream through
+/// the job-level executor, skipping the CPU entirely. The compiled plans
+/// already encode the dataflow order the program enforces at runtime, so
+/// sequential replay is exact. The fuel budget is honoured in modelled MVP
+/// cycles, checked *after* every job so a stream that overshoots — even on
+/// its final job — fails with [`SessionError::FuelExhausted`] just like a
+/// starved cycle-accurate run (whose fuel check also fires at
+/// `cycles >= max`). A malformed job surfaces as the same typed
+/// [`SessionError::Launch`] the CSR bridge reports, never a panic.
+fn drive_pipelined_turbo(
+    sys: &mut System,
+    plans: &[LayerPlan],
+    fuel_report: u64,
+) -> Result<(), SessionError> {
+    let cap = sys.max_cycles();
+    for plan in plans {
+        let before = sys.mvus[plan.mvu].busy_cycles();
+        for job in &plan.jobs {
+            sys.run_job(plan.mvu, job.clone())
+                .map_err(|e| SessionError::Launch(vec![e]))?;
+            if sys.cycles() >= cap {
+                return Err(SessionError::FuelExhausted { fuel: fuel_report });
+            }
+        }
+        // Cross-check: the job-formula cycles turbo books must equal the
+        // analytic per-layer model (Table-3 exact).
+        debug_assert_eq!(
+            sys.mvus[plan.mvu].busy_cycles() - before,
+            plan.analytic_cycles,
+            "turbo cycle accounting diverged from perf model on MVU {}",
+            plan.mvu
+        );
+    }
+    Ok(())
+}
+
+/// Turbo drive of a distributed plan: independent per-MVU chunks, replayed
+/// sequentially with the same fuel and launch-error contracts as
+/// [`drive_pipelined_turbo`].
+fn drive_distributed_turbo(
+    sys: &mut System,
+    jobs: &[Vec<JobConfig>],
+    fuel_report: u64,
+) -> Result<(), SessionError> {
+    let cap = sys.max_cycles();
+    for (m, chunk) in jobs.iter().enumerate() {
+        for job in chunk {
+            sys.run_job(m, job.clone())
+                .map_err(|e| SessionError::Launch(vec![e]))?;
+            if sys.cycles() >= cap {
+                return Err(SessionError::FuelExhausted { fuel: fuel_report });
+            }
+        }
+    }
+    Ok(())
+}
+
 /// A session slots straight into the serving coordinator: one engine per
 /// worker thread, each owning its own warm system (PJRT executables are
 /// thread-affine, so sessions are built inside the worker's
 /// `EngineFactory`).
 impl Engine for InferenceSession {
-    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<(Vec<f32>, u64)> {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
         images
             .iter()
             .map(|img| {
-                let out = self
-                    .run_image(img)
-                    .unwrap_or_else(|e| panic!("session inference failed: {e}"));
-                (out.logits, out.accel.total_mvu_cycles)
+                // A failed image is a per-request typed error, not a panic:
+                // a poisoned request must not tear down the worker thread
+                // (and with it every queued request on this engine).
+                self.run_image(img)
+                    .map(|out| (out.logits, out.accel.total_mvu_cycles))
+                    .map_err(|e| e.to_string())
             })
             .collect()
     }
@@ -571,22 +793,7 @@ mod tests {
     use crate::sim::{conv2d_i32, requant_i32};
 
     fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
-        let mut t = input.clone();
-        for l in &model.layers {
-            let acc = conv2d_i32(&t, &l.weights, l.spec());
-            t = requant_i32(
-                &acc,
-                &l.quant.scale,
-                &l.quant.bias,
-                QuantSerCfg {
-                    msb_index: l.quant.quant_msb,
-                    out_bits: l.oprec.bits,
-                    saturate: true,
-                },
-                l.relu,
-            );
-        }
-        t
+        model.golden_forward(input)
     }
 
     /// First six ResNet9 layers at 16×16 — fast enough for debug-mode unit
@@ -767,6 +974,205 @@ mod tests {
             );
             assert_eq!(got, want, "seed {seed}");
         }
+    }
+
+    /// A deep (>8-layer) chain of small 64-channel conv layers — fast
+    /// enough for debug-mode unit tests while forcing ≥2 scheduling
+    /// passes.
+    fn tiny_deep_model(depth: usize) -> Model {
+        use crate::model::{ConvLayer, QuantSpec};
+        use crate::quant::Precision;
+        let mut rng = Rng(0xD0_0D);
+        let aprec = Precision::u(2);
+        let wprec = Precision::s(2);
+        let max_acc = (64 * 9) as i64 * 3 * 2;
+        let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
+        let layers = (0..depth)
+            .map(|i| ConvLayer {
+                name: format!("deep{i}"),
+                ci: 64,
+                co: 64,
+                fh: 3,
+                fw: 3,
+                stride: 1,
+                pad: 1,
+                in_h: 8,
+                in_w: 8,
+                aprec,
+                wprec,
+                oprec: aprec,
+                relu: true,
+                weights: (0..64 * 64 * 9).map(|_| rng.range_i32(-2, 1)).collect(),
+                quant: QuantSpec {
+                    scale: (0..64).map(|_| rng.range_i32(1, 4) as u16).collect(),
+                    bias: (0..64).map(|_| rng.range_i32(-64, 64)).collect(),
+                    quant_msb: msb,
+                },
+            })
+            .collect();
+        let m = Model {
+            name: format!("tiny-deep-{depth}"),
+            layers,
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        m.validate().unwrap();
+        m
+    }
+
+    #[test]
+    fn auto_mode_resolves_by_depth() {
+        let s = SessionBuilder::new(tiny_deep_model(1))
+            .mode(ExecutionMode::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(s.execution_mode(), ExecutionMode::Distributed);
+        assert_eq!(s.n_passes(), 1);
+
+        let s = SessionBuilder::new(tiny_resnet9())
+            .mode(ExecutionMode::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(s.execution_mode(), ExecutionMode::Pipelined);
+        assert_eq!(s.n_passes(), 1);
+
+        let s = SessionBuilder::new(tiny_deep_model(10))
+            .mode(ExecutionMode::Auto)
+            .build()
+            .unwrap();
+        assert_eq!(s.execution_mode(), ExecutionMode::MultiPass);
+        assert_eq!(s.n_passes(), 2);
+        assert!(s.program_len() > 0);
+        assert!(s.asm().contains("pass1"), "multi-pass asm lists every pass");
+    }
+
+    #[test]
+    fn mode_parsing_and_display() {
+        for (s, m) in [
+            ("pipelined", ExecutionMode::Pipelined),
+            ("distributed", ExecutionMode::Distributed),
+            ("multipass", ExecutionMode::MultiPass),
+            ("multi-pass", ExecutionMode::MultiPass),
+            ("auto", ExecutionMode::Auto),
+        ] {
+            assert_eq!(s.parse::<ExecutionMode>().unwrap(), m);
+        }
+        assert!("warp".parse::<ExecutionMode>().is_err());
+        assert_eq!(ExecutionMode::MultiPass.to_string(), "multi-pass");
+        let args = |s: &[&str]| -> Vec<String> { s.iter().map(|a| a.to_string()).collect() };
+        assert_eq!(
+            parse_mode_arg(&args(&["--images", "2"]), ExecutionMode::Auto),
+            Ok(ExecutionMode::Auto)
+        );
+        assert_eq!(
+            parse_mode_arg(&args(&["--mode", "multipass"]), ExecutionMode::Auto),
+            Ok(ExecutionMode::MultiPass)
+        );
+        assert!(parse_mode_arg(&args(&["--mode"]), ExecutionMode::Auto).is_err());
+        assert!(parse_mode_arg(&args(&["--mode", "warp"]), ExecutionMode::Auto).is_err());
+    }
+
+    /// The tentpole acceptance property at unit scale: a 10-layer model
+    /// (two passes) is bit-exact with the golden integer model under both
+    /// execution backends, per-layer cycle accounting matches the analytic
+    /// formula, and the session stays warm across images.
+    #[test]
+    fn multi_pass_deep_session_matches_golden_both_backends() {
+        let m = tiny_deep_model(10);
+        let input = random_input(&m, 77);
+        let golden = golden_forward(&m, &input);
+        let analytic: u64 = m
+            .layers
+            .iter()
+            .map(|l| crate::codegen::layer_cycles(l, EdgePolicy::PadInRam))
+            .sum();
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut session = SessionBuilder::new(m.clone())
+                .mode(ExecutionMode::Auto)
+                .exec_mode(exec)
+                .build()
+                .unwrap();
+            let out = session.run(&input).unwrap();
+            assert_eq!(out.output, golden, "{exec:?}: output != golden");
+            assert_eq!(out.mvu_cycles.len(), m.layers.len(), "{exec:?}: per-layer cycles");
+            for (i, (l, &c)) in m.layers.iter().zip(&out.mvu_cycles).enumerate() {
+                assert_eq!(
+                    c,
+                    crate::codegen::layer_cycles(l, EdgePolicy::PadInRam),
+                    "{exec:?}: layer {i}"
+                );
+            }
+            assert_eq!(out.total_mvu_cycles, analytic, "{exec:?}");
+            // Warm reuse: pass-rotating weight reloads must not corrupt
+            // the second image.
+            let out2 = session.run(&input).unwrap();
+            assert_eq!(out2.output, golden, "{exec:?}: second image differs");
+            assert_eq!(out2.image_index, 1);
+            let metrics = session.metrics();
+            assert_eq!(metrics.images, 2);
+            // Per-pass bottleneck sum: ≤ total, ≥ total / 8.
+            assert!(metrics.total_bottleneck_cycles <= metrics.total_mvu_cycles);
+            assert!(metrics.total_bottleneck_cycles * 8 >= metrics.total_mvu_cycles);
+        }
+    }
+
+    /// Fuel is an image budget honoured *across* passes: a budget that
+    /// covers pass 0 but not the full image exhausts on a later pass.
+    #[test]
+    fn multi_pass_fuel_spans_passes() {
+        let m = tiny_deep_model(10);
+        let per_layer = crate::codegen::layer_cycles(&m.layers[0], EdgePolicy::PadInRam);
+        let total = per_layer * 10;
+        let input = random_input(&m, 5);
+
+        // Turbo books exactly the MVP cycles: 9 layers' worth covers all of
+        // pass 0 (8 layers) but exhausts inside pass 1.
+        let fuel = per_layer * 9;
+        let mut starved = SessionBuilder::new(m.clone())
+            .mode(ExecutionMode::MultiPass)
+            .fuel(fuel)
+            .build()
+            .unwrap();
+        match starved.run(&input) {
+            Err(SessionError::FuelExhausted { fuel: f }) => assert_eq!(f, fuel),
+            other => panic!("expected FuelExhausted, got {:?}", other.map(|o| o.image_index)),
+        }
+
+        // A budget above the whole image succeeds.
+        let mut fed = SessionBuilder::new(m)
+            .mode(ExecutionMode::MultiPass)
+            .fuel(total + 1)
+            .build()
+            .unwrap();
+        let out = fed.run(&input).unwrap();
+        assert_eq!(out.total_mvu_cycles, total);
+        assert_eq!(out.system_cycles, total, "turbo clock sums MVP cycles over passes");
+    }
+
+    /// Regression: a weight image larger than the configured weight RAM is
+    /// a typed build-time error, not a slice-out-of-range panic at load
+    /// time (4-bit weights push the deep model's 512-channel layers to
+    /// 2304 words against the stock 2048-word RAM).
+    #[test]
+    fn oversized_weight_image_yields_typed_capacity_error() {
+        let m = crate::model::zoo::resnet18_cifar(2, 4);
+        match SessionBuilder::new(m.clone()).mode(ExecutionMode::Auto).build() {
+            Err(SessionError::Compile(CompileError::CapacityExceeded {
+                resource: "weight",
+                ..
+            })) => {}
+            other => panic!(
+                "expected CapacityExceeded, got {:?}",
+                other.err().map(|e| e.to_string())
+            ),
+        }
+        // A deeper weight RAM (a build parameter, §3.1.2) accepts it.
+        let cfg = crate::mvu::MvuConfig { weight_depth: 4096, ..Default::default() };
+        SessionBuilder::new(m)
+            .mode(ExecutionMode::Auto)
+            .mvu_config(cfg)
+            .build()
+            .unwrap();
     }
 
     #[test]

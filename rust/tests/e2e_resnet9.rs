@@ -12,27 +12,11 @@ use barvinn::codegen::{compile_pipelined, CompileError, EdgePolicy};
 use barvinn::exec::ExecMode;
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
 use barvinn::model::Model;
-use barvinn::quant::QuantSerCfg;
 use barvinn::session::{SessionBuilder, SessionError};
-use barvinn::sim::{conv2d_i32, requant_i32, Tensor3};
+use barvinn::sim::Tensor3;
 
 fn golden_forward(model: &Model, input: &Tensor3) -> Tensor3 {
-    let mut t = input.clone();
-    for l in &model.layers {
-        let acc = conv2d_i32(&t, &l.weights, l.spec());
-        t = requant_i32(
-            &acc,
-            &l.quant.scale,
-            &l.quant.bias,
-            QuantSerCfg {
-                msb_index: l.quant.quant_msb,
-                out_bits: l.oprec.bits,
-                saturate: true,
-            },
-            l.relu,
-        );
-    }
-    t
+    model.golden_forward(input)
 }
 
 fn model_under_test() -> Model {

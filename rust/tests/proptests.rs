@@ -95,7 +95,7 @@ fn random_conv_layers_match_golden() {
         load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
 
         let jobs = conv_jobs(&layer, &in_l, &out_l, &w_l, 0, 0, None, policy);
-        let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j)).sum();
+        let measured: u64 = jobs.into_iter().map(|j| sys.run_job(0, j).unwrap()).sum();
         assert_eq!(measured, layer_cycles(&layer, policy), "case {case} cycles");
 
         let got = out_l.read(&sys.mvus[0].act, layer.co);
@@ -231,7 +231,7 @@ fn weight_bit_flip_changes_output() {
         w_l.load(&mut sys.mvus[0].weights, weights, 64, 64);
         load_scaler_bias(&mut sys.mvus[0], 0, &layer.quant.scale, &layer.quant.bias);
         for j in conv_jobs(&layer, &in_l, &out_l, &w_l, 0, 0, None, EdgePolicy::PadInRam) {
-            sys.run_job(0, j.clone());
+            sys.run_job(0, j.clone()).unwrap();
         }
         out_l.read(&sys.mvus[0].act, 64)
     };
@@ -369,8 +369,8 @@ fn turbo_and_cycle_accurate_backends_agree() {
         load(&mut trb);
 
         // --- run on both backends; cycles must match the job formula -------
-        let c_cycles = cyc.run_job(0, cfg.clone());
-        let t_cycles = trb.run_job(0, cfg.clone());
+        let c_cycles = cyc.run_job(0, cfg.clone()).unwrap();
+        let t_cycles = trb.run_job(0, cfg.clone()).unwrap();
         assert_eq!(t_cycles, c_cycles, "case {case}: reported job cycles differ");
         assert_eq!(t_cycles, cfg.cycles(), "case {case}: cycles != job formula");
         assert_eq!(
@@ -444,6 +444,112 @@ fn turbo_and_cycle_accurate_backends_agree() {
                 written += 1;
             }
         }
+    }
+}
+
+/// The multi-pass acceptance property: random-depth models (1–20 layers,
+/// random 1–8-bit precisions per layer) served through the session's
+/// depth-resolving `Auto` mode agree bit-for-bit with `sim::golden` and
+/// across both execution backends — outputs, per-entry cycle accounting
+/// and totals included. Depths above 8 exercise multi-pass scheduling
+/// (weight rotation + activation carry between passes); 1 resolves to
+/// distributed, 2–8 to single-pass pipelined.
+#[test]
+fn random_depth_models_agree_with_golden_across_backends() {
+    use barvinn::exec::ExecMode;
+    use barvinn::model::Model;
+    use barvinn::session::{ExecutionMode, SessionBuilder};
+
+    let mut rng = Rng(0xDEE9);
+    let (cases, h) = if cfg!(debug_assertions) { (2, 4usize) } else { (6, 6usize) };
+    for case in 0..cases {
+        let depth = 1 + (rng.next_u64() % 20) as usize;
+        // Linear 64-channel chain at constant spatial size (3×3, stride 1,
+        // pad 1); per-layer precisions chain through oprec → next aprec.
+        let mut a_bits = 1 + (rng.next_u64() % 8) as u8;
+        let mut layers = Vec::with_capacity(depth);
+        for i in 0..depth {
+            let w_bits = 1 + (rng.next_u64() % 8) as u8;
+            let o_bits = 1 + (rng.next_u64() % 8) as u8;
+            let aprec = Precision::u(a_bits);
+            let wprec = Precision::s(w_bits);
+            let max_acc = (64 * 9) as i64
+                * aprec.max_value() as i64
+                * wprec.min_value().unsigned_abs() as i64;
+            let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
+            layers.push(ConvLayer {
+                name: format!("c{case}l{i}"),
+                ci: 64,
+                co: 64,
+                fh: 3,
+                fw: 3,
+                stride: 1,
+                pad: 1,
+                in_h: h,
+                in_w: h,
+                aprec,
+                wprec,
+                oprec: Precision::u(o_bits),
+                relu: rng.next_u64() % 2 == 0,
+                weights: (0..64 * 64 * 9)
+                    .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+                    .collect(),
+                quant: QuantSpec {
+                    scale: (0..64).map(|_| rng.range_i32(1, 4) as u16).collect(),
+                    bias: (0..64).map(|_| rng.range_i32(-64, 64)).collect(),
+                    quant_msb: msb,
+                },
+            });
+            a_bits = o_bits;
+        }
+        let model = Model {
+            name: format!("prop-depth-{depth}"),
+            layers,
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        model.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        let l0 = &model.layers[0];
+        let input = Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+            rng.range_i32(0, l0.aprec.max_value())
+        });
+        // Golden integer reference.
+        let want = model.golden_forward(&input);
+        let analytic: u64 = model
+            .layers
+            .iter()
+            .map(|l| layer_cycles(l, EdgePolicy::PadInRam))
+            .sum();
+
+        let mut runs = Vec::new();
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut session = SessionBuilder::new(model.clone())
+                .mode(ExecutionMode::Auto)
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(exec)
+                .build()
+                .unwrap_or_else(|e| panic!("case {case} depth {depth} ({exec:?}): {e}"));
+            if depth > 8 {
+                assert_eq!(session.execution_mode(), ExecutionMode::MultiPass);
+                assert_eq!(session.n_passes(), depth.div_ceil(8), "case {case}");
+            }
+            let out = session
+                .run(&input)
+                .unwrap_or_else(|e| panic!("case {case} depth {depth} ({exec:?}): {e}"));
+            assert_eq!(
+                out.output, want,
+                "case {case} depth {depth} ({exec:?}): output != golden"
+            );
+            assert_eq!(
+                out.total_mvu_cycles, analytic,
+                "case {case} depth {depth} ({exec:?}): cycle accounting"
+            );
+            runs.push(out);
+        }
+        // Backends agree bit-for-bit, per-entry cycles included.
+        assert_eq!(runs[0].output, runs[1].output, "case {case}");
+        assert_eq!(runs[0].mvu_cycles, runs[1].mvu_cycles, "case {case}");
     }
 }
 
