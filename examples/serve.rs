@@ -1,18 +1,27 @@
-//! Serving scenario: the inference coordinator fronting the accelerator —
-//! batched requests routed over worker engines, each a warm
-//! [`barvinn::session::InferenceSession`] running the full host-PJRT →
-//! MVU-array → host-PJRT pipeline with weights loaded once per worker;
-//! reports latency percentiles, throughput and simulated accelerator
-//! cycles.
+//! Serving scenario: the multi-tenant inference **fleet** fronting the
+//! accelerator — keyed, batched requests routed with cache affinity over
+//! worker engines, each a warm [`barvinn::session::InferenceSession`]
+//! running the full host-PJRT → MVU-array → host-PJRT pipeline. Requests
+//! are tagged with the artifact model's [`ModelKey`] (name + precisions +
+//! scheduling mode), so responses, per-key metrics and the session caches
+//! all see the tenant identity; after the run the fleet reports latency
+//! percentiles, throughput, cache hit rate and the weight-reload words
+//! warm reuse avoided.
 //!
 //! Run: `make artifacts && cargo run --release --features pjrt --example serve [-- n_requests] [--exec cycle|turbo] [--mode pipelined|multipass|auto]`
-//! (the `pjrt` feature additionally needs `xla = "0.1"` added under
-//! `[dependencies]` — see Cargo.toml; without it this example exits with
-//! the typed `RuntimeError::Disabled`)
+//! (the real PJRT backend additionally needs `xla = "0.1"` under
+//! `[dependencies]` and `RUSTFLAGS="--cfg xla_runtime"` — see Cargo.toml;
+//! without it this example exits with the typed `RuntimeError::Disabled`)
+//!
+//! [`ModelKey`]: barvinn::coordinator::ModelKey
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use barvinn::coordinator::{BatcherConfig, Coordinator, Engine, EngineFactory};
+use barvinn::coordinator::{
+    BatcherConfig, Engine, Fleet, FleetConfig, KeyedEngine, KeyedEngineFactory, ModelKey,
+    RoutingPolicy,
+};
 use barvinn::exec::ExecMode;
 use barvinn::runtime::ArtifactStore;
 use barvinn::session::{parse_mode_arg, ExecutionMode, SessionBuilder};
@@ -23,7 +32,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // First token that parses as a count is n_requests — flag values like
     // `--exec cycle` never parse as usize, so position doesn't matter.
     let n: usize = args.iter().find_map(|a| a.parse().ok()).unwrap_or(16);
-    // Serving defaults to the turbo backend — the coordinator's engines are
+    // Serving defaults to the turbo backend — the fleet's engines are
     // throughput-facing; pass `--exec cycle` to serve off the
     // cycle-accurate stepper instead (e.g. to validate timing under load).
     let exec: ExecMode =
@@ -39,43 +48,56 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             std::process::exit(2);
         });
     let store = ArtifactStore::open(None)?;
+    // The tenant identity every request is tagged with: the artifact
+    // model's name and quantization point plus the scheduling mode.
+    let key = {
+        let model = store.model()?;
+        let l0 = &model.layers[0];
+        ModelKey::new(&model.name, l0.wprec.bits, l0.aprec.bits, mode)
+    };
     let workers = 2;
     // Sessions are built inside their worker threads (PJRT executables are
-    // thread-affine), so each factory re-opens the artifact store and
-    // builds its own warm, weight-resident session.
+    // thread-affine): the factory re-opens the artifact store and builds a
+    // warm, weight-resident session on demand — once per worker that the
+    // router sends this tenant to, cached thereafter.
     let dir = store.dir.clone();
-    let engines: Vec<EngineFactory> = (0..workers)
-        .map(|_| {
-            let dir = dir.clone();
-            Box::new(move || {
-                let store = ArtifactStore::open(Some(dir.as_path())).expect("artifacts");
-                let model = store.model().expect("model");
-                let session = SessionBuilder::new(model)
-                    .artifacts(store)
-                    .exec_mode(exec)
-                    .mode(mode)
-                    .build()
-                    .expect("session");
-                Box::new(session) as Box<dyn Engine>
-            }) as EngineFactory
-        })
-        .collect();
-    let mut coord = Coordinator::new(
-        engines,
-        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+    let factory: KeyedEngineFactory =
+        Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
+            let store = ArtifactStore::open(Some(dir.as_path())).map_err(|e| e.to_string())?;
+            let model = store.model().map_err(|e| e.to_string())?;
+            let session = SessionBuilder::new(model)
+                .artifacts(store)
+                .exec_mode(exec)
+                .mode(key.mode)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let resident_words = session.resident_words();
+            Ok(KeyedEngine { engine: Box::new(session) as Box<dyn Engine>, resident_words })
+        });
+    let mut fleet = Fleet::new(
+        factory,
+        FleetConfig {
+            workers,
+            cache_per_worker: 2,
+            batch: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            policy: RoutingPolicy::Affinity,
+        },
     );
 
-    println!("serving {n} requests over {workers} workers ({exec} backend, {mode} mode)...");
+    println!(
+        "serving {n} requests for tenant {key} over {workers} workers \
+         ({exec} backend, affinity routing)..."
+    );
     let mut rng = barvinn::model::zoo::Rng(99);
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
         .map(|_| {
             let img: Vec<f32> =
                 (0..3 * 32 * 32).map(|_| rng.range_i32(-128, 127) as f32 / 64.0).collect();
-            coord.submit(img)
+            fleet.submit(key.clone(), img)
         })
         .collect();
-    coord.flush();
+    fleet.flush();
     let mut sim_cycles = 0u64;
     let mut failed = 0usize;
     for rx in rxs {
@@ -86,12 +108,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             None => sim_cycles += resp.sim_cycles,
             Some(e) => {
                 failed += 1;
-                eprintln!("request {} failed: {e}", resp.id);
+                eprintln!("request {} ({}) failed: {e}", resp.id, resp.key);
             }
         }
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics().snapshot();
+    let snap = fleet.metrics().snapshot();
     println!(
         "done: {} completed, {failed} failed in {:.2}s wall → {:.2} req/s host-side",
         snap.completed,
@@ -108,12 +130,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         snap.mean_batch_size()
     );
     println!(
+        "session cache: {} hits / {} misses ({:.0}% hit rate), \
+         {} weight-reload words avoided",
+        snap.cache_hits,
+        snap.cache_misses,
+        snap.cache_hit_rate() * 100.0,
+        snap.reload_words_saved
+    );
+    for pk in &snap.per_key {
+        println!(
+            "  {}: {} ok, mean {:.1} ms, max {:.1} ms",
+            pk.key,
+            pk.completed,
+            pk.mean_us / 1e3,
+            pk.max_us as f64 / 1e3
+        );
+    }
+    println!(
         "simulated accelerator: {} MVU cycles total → {:.0} FPS at 250 MHz\n\
          (work-conserving, {} cycles/frame)",
         sim_cycles,
         CLOCK_HZ as f64 / (sim_cycles as f64 / n as f64 / 8.0),
         sim_cycles / n as u64 / 8
     );
-    coord.shutdown();
+    fleet.shutdown();
     Ok(())
 }

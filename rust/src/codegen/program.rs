@@ -129,6 +129,20 @@ impl CompiledModel {
         self.plans.iter().map(|p| p.analytic_cycles).sum()
     }
 
+    /// Weight + scaler + bias RAM words made resident across the array by
+    /// [`Self::load_weights`] (weight words are 4096-bit, scaler/bias words
+    /// 64-lane) — the one-time load a warm session amortises and a serving
+    /// cache hit avoids re-paying.
+    pub fn resident_words(&self) -> u64 {
+        self.images
+            .iter()
+            .map(|img| {
+                (img.weights.len() + img.scale.len().div_ceil(64) + img.bias.len().div_ceil(64))
+                    as u64
+            })
+            .sum()
+    }
+
     /// Load the per-image state: the input image into MVU 0's activation
     /// RAM (the host's DMA step before starting the program). Weights and
     /// the program must already be resident ([`Self::load_weights`]).

@@ -133,6 +133,17 @@ impl DistributedPlan {
         cap("bias", self.out_layout.cb, cfg.bias_depth)
     }
 
+    /// Weight + scaler + bias RAM words made resident across the array by
+    /// [`Self::load_weights`]: the shared weight image plus scaler/bias
+    /// words, replicated into every participating MVU. The distributed-mode
+    /// analogue of [`CompiledModel::resident_words`].
+    pub fn resident_words(&self) -> u64 {
+        let per_mvu =
+            self.w_layout.size_words() as u64 + 2 * self.out_layout.cb as u64;
+        let participating = self.jobs.iter().filter(|j| !j.is_empty()).count() as u64;
+        per_mvu * participating
+    }
+
     /// Global output-row range `[r0, r1)` assigned to MVU `m`.
     pub fn row_range(&self, m: usize, layer: &ConvLayer) -> (usize, usize) {
         let rows = rows_computed(layer, self.policy);
@@ -242,14 +253,7 @@ impl MultiPassPlan {
     /// the weight-reload cost model for deep networks. Weight words are
     /// 4096-bit, scaler/bias words 64-lane.
     pub fn reload_words(&self) -> u64 {
-        self.passes
-            .iter()
-            .flat_map(|p| p.images.iter())
-            .map(|img| {
-                (img.weights.len() + img.scale.len().div_ceil(64) + img.bias.len().div_ceil(64))
-                    as u64
-            })
-            .sum()
+        self.passes.iter().map(|p| p.resident_words()).sum()
     }
 }
 

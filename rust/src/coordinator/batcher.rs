@@ -1,10 +1,13 @@
-//! Request batcher: groups queued requests into batches of at most
-//! `max_batch`, flushing when full or when the oldest request has waited
-//! `max_wait`. FIFO order is preserved within and across batches.
+//! Request batcher: groups queued requests into **key-homogeneous** batches
+//! of at most `max_batch`, flushing a key group when it fills or when the
+//! oldest queued request has waited `max_wait`. One batch = one
+//! [`ModelKey`] = one warm engine run, so batching never forces a
+//! weight-reload mid-batch. FIFO order is preserved within a key.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
+use super::fleet::ModelKey;
 use super::server::InferenceRequest;
 
 #[derive(Debug, Clone, Copy)]
@@ -19,14 +22,16 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A formed batch.
+/// A formed batch. All requests share `key` (batch homogeneity is the
+/// batcher's invariant, not a caller obligation).
 #[derive(Debug)]
 pub struct Batch {
+    pub key: ModelKey,
     pub requests: Vec<InferenceRequest>,
     pub formed_at: Instant,
 }
 
-/// Accumulates requests and emits batches.
+/// Accumulates requests and emits key-homogeneous batches.
 #[derive(Debug)]
 pub struct Batcher {
     cfg: BatcherConfig,
@@ -48,43 +53,83 @@ impl Batcher {
     }
 
     /// Time until the oldest request must be flushed (None when empty).
+    /// After a partial flush this reflects the *new* oldest request — the
+    /// remainder's own arrival time, not the flushed one's.
     pub fn deadline(&self) -> Option<Instant> {
         self.queue.front().map(|(_, t)| *t + self.cfg.max_wait)
     }
 
-    /// Pop a batch if one is due: full, or oldest request timed out.
+    /// Pop a batch if one is due: some key group reached `max_batch`, or
+    /// the oldest request timed out (at `now >= arrival + max_wait` — the
+    /// deadline instant itself is due). A due batch contains only requests
+    /// sharing one key, oldest key first.
     pub fn pop(&mut self, now: Instant) -> Option<Batch> {
-        if self.queue.is_empty() {
-            return None;
+        let expired_key = match self.queue.front() {
+            None => return None,
+            Some((req, t)) if now >= *t + self.cfg.max_wait => Some(req.key.clone()),
+            _ => None,
+        };
+        if let Some(key) = expired_key {
+            return Some(self.take_key(&key, now));
         }
-        let oldest_expired =
-            self.queue.front().map(|(_, t)| now >= *t + self.cfg.max_wait).unwrap_or(false);
-        if self.queue.len() >= self.cfg.max_batch || oldest_expired {
-            let take = self.queue.len().min(self.cfg.max_batch);
-            let requests = self.queue.drain(..take).map(|(r, _)| r).collect();
-            return Some(Batch { requests, formed_at: now });
+        // No timeout due: flush only a key group that filled a whole batch.
+        let mut counts: HashMap<&ModelKey, usize> = HashMap::new();
+        let mut full = None;
+        for (req, _) in &self.queue {
+            let c = counts.entry(&req.key).or_insert(0);
+            *c += 1;
+            if *c >= self.cfg.max_batch {
+                full = Some(req.key.clone());
+                break;
+            }
         }
-        None
+        let key = full?;
+        Some(self.take_key(&key, now))
     }
 
-    /// Flush everything regardless of deadlines (shutdown path).
+    /// Flush everything regardless of deadlines (shutdown path); batches
+    /// stay key-homogeneous, grouped in oldest-first key order.
     pub fn drain_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        while !self.queue.is_empty() {
-            let take = self.queue.len().min(self.cfg.max_batch);
-            let requests = self.queue.drain(..take).map(|(r, _)| r).collect();
-            out.push(Batch { requests, formed_at: Instant::now() });
+        while let Some((front, _)) = self.queue.front() {
+            let key = front.key.clone();
+            out.push(self.take_key(&key, Instant::now()));
         }
         out
+    }
+
+    /// Extract up to `max_batch` requests with `key` (FIFO among them),
+    /// leaving everything else queued with original arrival times.
+    fn take_key(&mut self, key: &ModelKey, now: Instant) -> Batch {
+        let mut requests = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for (req, t) in self.queue.drain(..) {
+            if requests.len() < self.cfg.max_batch && req.key == *key {
+                requests.push(req);
+            } else {
+                rest.push_back((req, t));
+            }
+        }
+        self.queue = rest;
+        Batch { key: key.clone(), requests, formed_at: now }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::session::ExecutionMode;
 
     fn req(id: u64) -> InferenceRequest {
-        InferenceRequest { id, image: vec![0.0; 4] }
+        InferenceRequest { id, key: ModelKey::default(), image: vec![0.0; 4] }
+    }
+
+    fn req_k(id: u64, model: &str) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            key: ModelKey::new(model, 2, 2, ExecutionMode::Auto),
+            image: vec![0.0; 4],
+        }
     }
 
     #[test]
@@ -109,6 +154,44 @@ mod tests {
         assert_eq!(batch.requests.len(), 1);
     }
 
+    /// Boundary: the deadline instant itself is due — `pop` flushes at
+    /// exactly `arrival + max_wait`, and not a nanosecond before.
+    #[test]
+    fn flushes_at_exactly_the_deadline() {
+        let mut b =
+            Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50) });
+        b.push(req(1));
+        let dl = b.deadline().expect("non-empty");
+        assert!(b.pop(dl - Duration::from_nanos(1)).is_none(), "before the deadline: not due");
+        let batch = b.pop(dl).expect("at the deadline: due");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.deadline(), None, "drained");
+    }
+
+    /// A timeout flush that leaves a remainder re-arms the deadline from
+    /// the *new* oldest request's arrival time — not the flushed one's
+    /// (which would make the remainder look instantly overdue) and not
+    /// from the flush instant (which would grant it a fresh full wait).
+    #[test]
+    fn partial_timeout_flush_rearms_deadline_from_new_oldest() {
+        let mut b =
+            Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(50) });
+        b.push(req(1));
+        b.push(req(2));
+        let lo = Instant::now();
+        b.push(req(3)); // same key; max_batch 2 → this one stays behind
+        let hi = Instant::now();
+        let first_dl = b.deadline().expect("armed");
+        let batch = b.pop(first_dl).expect("timeout flush");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(b.pending(), 1);
+        let dl = b.deadline().expect("remainder re-arms");
+        assert!(
+            dl >= lo + Duration::from_millis(50) && dl <= hi + Duration::from_millis(50),
+            "deadline must be the remainder's own arrival + max_wait"
+        );
+    }
+
     #[test]
     fn preserves_fifo_order() {
         let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
@@ -124,11 +207,71 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
     }
 
-    /// Randomized invariants: never exceeds max_batch, never loses or
-    /// duplicates a request (property test with the crate-local RNG).
+    /// Batches are key-homogeneous: an interleaved two-tenant arrival
+    /// stream yields per-key batches (a full key group flushes even with
+    /// other keys interleaved), and every request keeps its key.
     #[test]
-    fn randomized_no_loss_no_overflow() {
+    fn batches_are_key_homogeneous() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        b.push(req_k(0, "a"));
+        b.push(req_k(1, "b"));
+        assert!(b.pop(now).is_none(), "no key group full yet");
+        b.push(req_k(2, "a"));
+        let batch = b.pop(now).expect("key 'a' filled a batch");
+        assert_eq!(batch.key.model, "a");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert!(batch.requests.iter().all(|r| r.key == batch.key));
+        assert_eq!(b.pending(), 1, "'b' stays queued");
+        b.push(req_k(3, "b"));
+        let batch = b.pop(now).expect("key 'b' filled a batch");
+        assert_eq!(batch.key.model, "b");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    /// A timeout flushes only the oldest request's key group; younger
+    /// other-key requests keep waiting (their deadline, their batch).
+    #[test]
+    fn timeout_flush_takes_only_the_oldest_key_group() {
+        let mut b =
+            Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(10) });
+        b.push(req_k(0, "a"));
+        b.push(req_k(1, "b"));
+        b.push(req_k(2, "a"));
+        let batch = b.pop(Instant::now() + Duration::from_millis(20)).expect("expired");
+        assert_eq!(batch.key.model, "a");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(b.pending(), 1);
+        let rest = b.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].key.model, "b");
+    }
+
+    #[test]
+    fn drain_all_groups_by_key() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(10) });
+        for (i, m) in ["a", "b", "a", "c", "b"].iter().enumerate() {
+            b.push(req_k(i as u64, m));
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.len(), 3, "one batch per key");
+        let models: Vec<&str> = batches.iter().map(|b| b.key.model.as_str()).collect();
+        assert_eq!(models, vec!["a", "b", "c"], "oldest-first key order");
+        let ids: Vec<Vec<u64>> =
+            batches.iter().map(|b| b.requests.iter().map(|r| r.id).collect()).collect();
+        assert_eq!(ids, vec![vec![0, 2], vec![1, 4], vec![3]]);
+        for batch in &batches {
+            assert!(batch.requests.iter().all(|r| r.key == batch.key));
+        }
+    }
+
+    /// Randomized invariants: never exceeds max_batch, never loses or
+    /// duplicates a request, never mixes keys in a batch (property test
+    /// with the crate-local RNG over a 3-tenant arrival stream).
+    #[test]
+    fn randomized_no_loss_no_overflow_no_mixing() {
         let mut rng = crate::model::zoo::Rng(0xC0FFEE);
+        let models = ["a", "b", "c"];
         for round in 0..50 {
             let max_batch = 1 + (rng.next_u64() % 7) as usize;
             let mut b = Batcher::new(BatcherConfig {
@@ -139,21 +282,27 @@ mod tests {
             let mut seen = Vec::new();
             let mut now = Instant::now();
             for i in 0..n {
-                b.push(req(i));
+                b.push(req_k(i, models[(rng.next_u64() % 3) as usize]));
                 if rng.next_u64() % 3 == 0 {
                     now += Duration::from_millis(2);
                     while let Some(batch) = b.pop(now) {
                         assert!(batch.requests.len() <= max_batch, "round {round}");
+                        assert!(
+                            batch.requests.iter().all(|r| r.key == batch.key),
+                            "round {round}: mixed batch"
+                        );
                         seen.extend(batch.requests.iter().map(|r| r.id));
                     }
                 }
             }
             for batch in b.drain_all() {
                 assert!(batch.requests.len() <= max_batch);
+                assert!(batch.requests.iter().all(|r| r.key == batch.key));
                 seen.extend(batch.requests.iter().map(|r| r.id));
             }
+            seen.sort_unstable();
             let want: Vec<u64> = (0..n).collect();
-            assert_eq!(seen, want, "round {round}: lost/dup/reordered");
+            assert_eq!(seen, want, "round {round}: lost/duplicated");
         }
     }
 }

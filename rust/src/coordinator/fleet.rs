@@ -1,0 +1,709 @@
+//! Multi-tenant serving fleet: one process, many `(model, precision,
+//! mode)` tenants, no hardware reconfiguration.
+//!
+//! The paper's headline claim is *run-time programmability* — a single
+//! accelerator serves DNNs at any quantization level by swapping command
+//! streams and RAM images, not bitstreams. [`Fleet`] turns that claim into
+//! a serving architecture:
+//!
+//! ```text
+//! submit(key, image) ──► Router (affinity-aware) ──► worker queue
+//!                                                        │
+//!                     SessionCache (LRU of warm engines, │ per worker)
+//!                        hit: reuse warm weights ◄───────┤
+//!                        miss: build + admit (evict LRU) │
+//!                                                     Metrics
+//! ```
+//!
+//! * [`ModelKey`] — the tenant identity: zoo model name, weight/activation
+//!   bit widths and scheduling [`ExecutionMode`]. Batches are
+//!   key-homogeneous ([`super::Batcher`]), so one engine serves a whole
+//!   batch without reloading.
+//! * [`SessionCache`] — an LRU-bounded cache of warm engines per worker.
+//!   A hit reuses resident weight/scaler/bias RAMs and the compiled
+//!   program; a miss pays the full rebuild
+//!   (`InferenceSession::resident_words` RAM words for single-pass
+//!   tenants — deep multi-pass tenants instead rotate
+//!   [`crate::codegen::MultiPassPlan::reload_words`] per image whether
+//!   warm or not, so that cost stays out of the cache accounting).
+//! * Affinity routing ([`super::Router::route_affine`]) — a keyed request
+//!   prefers a worker whose cache already holds that key, falling back to
+//!   the least-loaded worker with the emptiest cache (admission should not
+//!   evict another tenant's warm session while a free slot exists).
+//!
+//! Engines are built *inside* their worker thread from a shared
+//! [`KeyedEngineFactory`] (PJRT executables are thread-affine), mirroring
+//! [`super::Coordinator`]'s single-tenant design.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::session::ExecutionMode;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::router::Router;
+use super::server::{Engine, InferenceRequest, InferenceResponse};
+
+/// Identity of one serving tenant: which compiled command stream + RAM
+/// images serve its requests. Two requests share a warm engine iff their
+/// keys are equal, so `Eq`/`Hash` define both batch homogeneity and cache
+/// identity.
+///
+/// Rendered (and parsed) as `model:wbits:abits[:mode]`, e.g.
+/// `resnet9:4:4` or `resnet18:2:2:multipass` — the `--mix` vocabulary of
+/// `barvinn bench-serve`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelKey {
+    /// Executable zoo model name (see `crate::model::zoo::model_by_name`).
+    pub model: String,
+    /// Weight precision in bits (signed two's-complement).
+    pub wbits: u8,
+    /// Activation precision in bits (unsigned).
+    pub abits: u8,
+    /// Scheduling mode the tenant's session compiles to.
+    pub mode: ExecutionMode,
+}
+
+impl ModelKey {
+    pub fn new(model: &str, wbits: u8, abits: u8, mode: ExecutionMode) -> Self {
+        ModelKey { model: model.into(), wbits, abits, mode }
+    }
+}
+
+/// The single-tenant key legacy [`super::Coordinator::submit`] tags
+/// untyped requests with: the paper's baseline ResNet9 2w/2a workload.
+impl Default for ModelKey {
+    fn default() -> Self {
+        ModelKey::new("resnet9", 2, 2, ExecutionMode::Auto)
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}:{}", self.model, self.wbits, self.abits, self.mode)
+    }
+}
+
+/// Parse `model:wbits:abits[:mode]` (mode defaults to `auto`).
+impl std::str::FromStr for ModelKey {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 && parts.len() != 4 {
+            return Err(format!(
+                "bad model key '{s}' (want model:wbits:abits[:mode], e.g. resnet9:4:4)"
+            ));
+        }
+        let bits = |what: &str, v: &str| -> Result<u8, String> {
+            v.parse::<u8>().map_err(|_| format!("bad {what} '{v}' in model key '{s}'"))
+        };
+        let mode = match parts.get(3) {
+            None => ExecutionMode::Auto,
+            Some(m) => m.parse::<ExecutionMode>()?,
+        };
+        Ok(ModelKey {
+            model: parts[0].to_string(),
+            wbits: bits("wbits", parts[1])?,
+            abits: bits("abits", parts[2])?,
+            mode,
+        })
+    }
+}
+
+/// How the fleet's router places keyed requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Prefer a worker whose cache holds the key ([`Router::route_affine`]);
+    /// fall back to least-loaded with cache admission. The default.
+    Affinity,
+    /// Plain least-loaded dispatch ([`Router::route`]), ignoring caches —
+    /// the comparison baseline `bench-serve --policy least-loaded` measures
+    /// affinity against.
+    LeastLoaded,
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RoutingPolicy::Affinity => "affinity",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+        })
+    }
+}
+
+impl std::str::FromStr for RoutingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "affinity" => Ok(RoutingPolicy::Affinity),
+            "least-loaded" | "leastloaded" => Ok(RoutingPolicy::LeastLoaded),
+            other => Err(format!("unknown routing policy '{other}' (affinity|least-loaded)")),
+        }
+    }
+}
+
+/// A freshly built engine plus its admission cost.
+pub struct KeyedEngine {
+    pub engine: Box<dyn Engine>,
+    /// Weight + scaler + bias RAM words loaded **once at build** to make
+    /// this engine warm — exactly what a cache hit saves
+    /// (`InferenceSession::resident_words`). Per-image reloads that a
+    /// tenant pays regardless of warmth (multi-pass lap rotation,
+    /// `InferenceSession::per_image_reload_words`) must NOT be counted
+    /// here — they are invariant to routing and caching.
+    pub resident_words: u64,
+}
+
+/// Builds an engine for any [`ModelKey`]; shared by every worker and
+/// invoked on the worker's own thread (engines need not be `Send`).
+pub type KeyedEngineFactory = Arc<dyn Fn(&ModelKey) -> Result<KeyedEngine, String> + Send + Sync>;
+
+/// LRU-bounded cache of warm engines, keyed by [`ModelKey`]. One per fleet
+/// worker; lives entirely on that worker's thread.
+pub struct SessionCache {
+    cap: usize,
+    tick: u64,
+    entries: Vec<CacheEntry>,
+}
+
+struct CacheEntry {
+    key: ModelKey,
+    engine: Box<dyn Engine>,
+    resident_words: u64,
+    last_used: u64,
+}
+
+impl SessionCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "a worker must be able to hold at least one warm engine");
+        SessionCache { cap, tick: 0, entries: Vec::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &ModelKey) -> bool {
+        self.entries.iter().any(|e| e.key == *key)
+    }
+
+    /// Admission cost recorded for `key` (0 when absent).
+    pub fn resident_words(&self, key: &ModelKey) -> u64 {
+        self.entries.iter().find(|e| e.key == *key).map_or(0, |e| e.resident_words)
+    }
+
+    /// Cached keys, least-recently-used first.
+    pub fn keys(&self) -> Vec<ModelKey> {
+        let mut es: Vec<(u64, &ModelKey)> =
+            self.entries.iter().map(|e| (e.last_used, &e.key)).collect();
+        es.sort_by_key(|(t, _)| *t);
+        es.into_iter().map(|(_, k)| k.clone()).collect()
+    }
+
+    /// Borrow the engine for `key`, marking it most-recently-used.
+    pub fn get_mut(&mut self, key: &ModelKey) -> Option<&mut dyn Engine> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.iter_mut().find(|e| e.key == *key).map(|e| {
+            e.last_used = tick;
+            e.engine.as_mut()
+        })
+    }
+
+    /// Admit a freshly built engine; if the cache is full, the
+    /// least-recently-used tenant is evicted and its key returned (so the
+    /// router's affinity map can be told).
+    pub fn insert(&mut self, key: ModelKey, built: KeyedEngine) -> Option<ModelKey> {
+        debug_assert!(!self.contains(&key), "admitting a key that is already cached");
+        let mut evicted = None;
+        if self.entries.len() == self.cap {
+            let idx = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("cap >= 1, cache full");
+            evicted = Some(self.entries.swap_remove(idx).key);
+        }
+        self.tick += 1;
+        self.entries.push(CacheEntry {
+            key,
+            engine: built.engine,
+            resident_words: built.resident_words,
+            last_used: self.tick,
+        });
+        evicted
+    }
+}
+
+/// Fleet shape and policy.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetConfig {
+    pub workers: usize,
+    /// Warm engines each worker may hold ([`SessionCache`] capacity).
+    pub cache_per_worker: usize,
+    pub batch: BatcherConfig,
+    pub policy: RoutingPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            workers: 2,
+            cache_per_worker: 2,
+            batch: BatcherConfig::default(),
+            policy: RoutingPolicy::Affinity,
+        }
+    }
+}
+
+enum FleetMsg {
+    Run(InferenceRequest, mpsc::Sender<InferenceResponse>, Instant),
+    Flush,
+    Stop,
+}
+
+/// Per-worker reply bookkeeping: request id → response channel + t0.
+type Replies = Vec<(u64, mpsc::Sender<InferenceResponse>, Instant)>;
+
+/// The multi-tenant serving fleet: worker threads owning [`SessionCache`]s,
+/// fed through the affinity router and key-homogeneous batcher.
+pub struct Fleet {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    senders: Vec<mpsc::Sender<FleetMsg>>,
+    joins: Vec<JoinHandle<()>>,
+    next_id: u64,
+    policy: RoutingPolicy,
+}
+
+impl Fleet {
+    pub fn new(factory: KeyedEngineFactory, cfg: FleetConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        let router = Arc::new(Router::new(cfg.workers));
+        let metrics = Arc::new(Metrics::default());
+        let mut senders = Vec::new();
+        let mut joins = Vec::new();
+        for w in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel::<FleetMsg>();
+            let router2 = Arc::clone(&router);
+            let metrics2 = Arc::clone(&metrics);
+            let factory2 = Arc::clone(&factory);
+            let cache_cap = cfg.cache_per_worker;
+            let batch_cfg = cfg.batch;
+            let join = std::thread::Builder::new()
+                .name(format!("barvinn-fleet-{w}"))
+                .spawn(move || {
+                    worker_loop(w, rx, factory2, cache_cap, batch_cfg, &router2, &metrics2)
+                })
+                .expect("spawn fleet worker");
+            senders.push(tx);
+            joins.push(join);
+        }
+        Fleet { router, metrics, senders, joins, next_id: 0, policy: cfg.policy }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Submit one image for tenant `key`; returns a receiver for the
+    /// response. Routing follows the fleet's [`RoutingPolicy`].
+    pub fn submit(&mut self, key: ModelKey, image: Vec<f32>) -> mpsc::Receiver<InferenceResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let worker = match self.policy {
+            RoutingPolicy::Affinity => self.router.route_affine(&key).0,
+            RoutingPolicy::LeastLoaded => self.router.route(),
+        };
+        self.metrics.on_submit();
+        let (tx, rx) = mpsc::channel();
+        self.senders[worker]
+            .send(FleetMsg::Run(InferenceRequest { id, key, image }, tx, Instant::now()))
+            .expect("fleet worker alive");
+        rx
+    }
+
+    /// Force all pending batches through.
+    pub fn flush(&self) {
+        for s in &self.senders {
+            let _ = s.send(FleetMsg::Flush);
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn router(&self) -> Arc<Router> {
+        Arc::clone(&self.router)
+    }
+
+    /// Graceful shutdown: flush, stop, join.
+    pub fn shutdown(mut self) {
+        for s in &self.senders {
+            let _ = s.send(FleetMsg::Stop);
+        }
+        self.senders.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    rx: mpsc::Receiver<FleetMsg>,
+    factory: KeyedEngineFactory,
+    cache_cap: usize,
+    batch_cfg: BatcherConfig,
+    router: &Router,
+    metrics: &Metrics,
+) {
+    let mut cache = SessionCache::new(cache_cap);
+    let mut batcher = Batcher::new(batch_cfg);
+    let mut replies: Replies = Vec::new();
+    loop {
+        // Wait bounded by the batcher deadline (same loop shape as the
+        // single-tenant Coordinator worker).
+        let msg = match batcher.deadline() {
+            Some(dl) => {
+                let dur = dl.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(dur) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+        let (force, stop) = match msg {
+            Some(FleetMsg::Run(req, tx, t0)) => {
+                replies.push((req.id, tx, t0));
+                batcher.push(req);
+                (false, false)
+            }
+            Some(FleetMsg::Flush) => (true, false),
+            Some(FleetMsg::Stop) => (true, true),
+            // Deadline expired: only due batches flush.
+            None => (false, false),
+        };
+        run_due(w, force, &mut batcher, &mut cache, &mut replies, &factory, router, metrics);
+        if stop {
+            break;
+        }
+    }
+}
+
+/// Process due (or, when `force`, all) batches: resolve each batch's engine
+/// through the cache, run it, answer every request.
+#[allow(clippy::too_many_arguments)]
+fn run_due(
+    w: usize,
+    force: bool,
+    batcher: &mut Batcher,
+    cache: &mut SessionCache,
+    replies: &mut Replies,
+    factory: &KeyedEngineFactory,
+    router: &Router,
+    metrics: &Metrics,
+) {
+    let batches = if force {
+        batcher.drain_all()
+    } else {
+        let mut due = Vec::new();
+        while let Some(b) = batcher.pop(Instant::now()) {
+            due.push(b);
+        }
+        due
+    };
+    let build = factory.as_ref();
+    for batch in batches {
+        metrics.on_batch(batch.requests.len());
+        let key = batch.key.clone();
+        if cache.contains(&key) {
+            // Warm hit: the whole weight/scaler/bias (+ program) reload is
+            // avoided — the quantity affinity routing exists to maximise.
+            metrics.on_cache_hit(cache.resident_words(&key));
+        } else {
+            match build(&key) {
+                Ok(built) => {
+                    metrics.on_cache_miss(built.resident_words);
+                    if let Some(evicted) = cache.insert(key.clone(), built) {
+                        router.note_evicted(w, &evicted);
+                    }
+                    router.note_cached(w, &key);
+                }
+                Err(e) => {
+                    // Answer the whole batch with the build error; the
+                    // worker survives to serve other tenants.
+                    let msg = format!("engine build failed for {key}: {e}");
+                    for req in batch.requests {
+                        answer(replies, router, metrics, w, &key, req.id, Err(msg.clone()));
+                    }
+                    continue;
+                }
+            }
+        }
+        let engine = cache.get_mut(&key).expect("engine admitted above");
+        let (ids, images): (Vec<u64>, Vec<Vec<f32>>) =
+            batch.requests.into_iter().map(|r| (r.id, r.image)).unzip();
+        let outs = engine.infer_batch(&images);
+        for (id, out) in ids.into_iter().zip(outs) {
+            answer(replies, router, metrics, w, &key, id, out);
+        }
+    }
+}
+
+/// Answer one request: book metrics, release the router slot, send the
+/// response.
+fn answer(
+    replies: &mut Replies,
+    router: &Router,
+    metrics: &Metrics,
+    w: usize,
+    key: &ModelKey,
+    id: u64,
+    out: Result<(Vec<f32>, u64), String>,
+) {
+    let idx = replies
+        .iter()
+        .position(|(rid, _, _)| *rid == id)
+        .expect("reply channel registered");
+    let (_, tx, t0) = replies.swap_remove(idx);
+    router.complete(w);
+    let resp = match out {
+        Ok((logits, cycles)) => {
+            metrics.on_complete_keyed(key, t0.elapsed(), cycles);
+            InferenceResponse {
+                id,
+                key: key.clone(),
+                logits,
+                sim_cycles: cycles,
+                worker: w,
+                error: None,
+            }
+        }
+        Err(e) => {
+            metrics.on_failure_keyed(key);
+            InferenceResponse {
+                id,
+                key: key.clone(),
+                logits: Vec::new(),
+                sim_cycles: 0,
+                worker: w,
+                error: Some(e),
+            }
+        }
+    };
+    let _ = tx.send(resp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Mock engine: logits = image sum + 1000·wbits (key-distinguishable),
+    /// cycles = 10·wbits.
+    struct MockEngine {
+        wbits: u8,
+    }
+
+    impl Engine for MockEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            images
+                .iter()
+                .map(|img| {
+                    let sum: f32 = img.iter().sum();
+                    Ok((vec![sum + 1000.0 * self.wbits as f32], 10 * self.wbits as u64))
+                })
+                .collect()
+        }
+    }
+
+    /// Factory that counts builds per key and rejects model "bad".
+    fn counting_factory(builds: Arc<Mutex<HashMap<ModelKey, u64>>>) -> KeyedEngineFactory {
+        Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
+            if key.model == "bad" {
+                return Err("no such tenant".into());
+            }
+            *builds.lock().unwrap().entry(key.clone()).or_insert(0) += 1;
+            Ok(KeyedEngine {
+                engine: Box::new(MockEngine { wbits: key.wbits }),
+                resident_words: 100 * key.wbits as u64,
+            })
+        })
+    }
+
+    fn key(model: &str, bits: u8) -> ModelKey {
+        ModelKey::new(model, bits, bits, ExecutionMode::Auto)
+    }
+
+    fn fleet(policy: RoutingPolicy, builds: Arc<Mutex<HashMap<ModelKey, u64>>>) -> Fleet {
+        Fleet::new(
+            counting_factory(builds),
+            FleetConfig {
+                workers: 2,
+                cache_per_worker: 1,
+                batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                policy,
+            },
+        )
+    }
+
+    #[test]
+    fn model_key_display_parse_roundtrip() {
+        for s in ["resnet9:4:4", "resnet18:2:2:multipass", "resnet9:1:2:pipelined"] {
+            let k: ModelKey = s.parse().unwrap();
+            let k2: ModelKey = k.to_string().parse().unwrap();
+            assert_eq!(k, k2, "{s}");
+        }
+        let k: ModelKey = "resnet9:4:3".parse().unwrap();
+        assert_eq!((k.model.as_str(), k.wbits, k.abits), ("resnet9", 4, 3));
+        assert_eq!(k.mode, ExecutionMode::Auto, "mode defaults to auto");
+        assert!("resnet9:4".parse::<ModelKey>().is_err());
+        assert!("resnet9:x:4".parse::<ModelKey>().is_err());
+        assert!("resnet9:4:4:warp".parse::<ModelKey>().is_err());
+        assert!("affinity".parse::<RoutingPolicy>().is_ok());
+        assert!("least-loaded".parse::<RoutingPolicy>().is_ok());
+        assert!("random".parse::<RoutingPolicy>().is_err());
+    }
+
+    #[test]
+    fn session_cache_lru_evicts_least_recently_used() {
+        let mut c = SessionCache::new(2);
+        let (a, b, d) = (key("a", 1), key("b", 2), key("d", 3));
+        let built = |wbits: u8| KeyedEngine {
+            engine: Box::new(MockEngine { wbits }),
+            resident_words: 7,
+        };
+        assert_eq!(c.insert(a.clone(), built(1)), None);
+        assert_eq!(c.insert(b.clone(), built(2)), None);
+        assert_eq!(c.len(), 2);
+        // Touch `a`: `b` becomes the LRU entry.
+        assert!(c.get_mut(&a).is_some());
+        let evicted = c.insert(d.clone(), built(3));
+        assert_eq!(evicted, Some(b.clone()));
+        assert!(c.contains(&a) && c.contains(&d) && !c.contains(&b));
+        assert_eq!(c.resident_words(&d), 7);
+        assert_eq!(c.resident_words(&b), 0);
+        // LRU-first key order: `a` (touched before `d` was admitted) first.
+        assert_eq!(c.keys(), vec![a, d]);
+    }
+
+    /// The tentpole property at mock scale: with affinity routing and
+    /// serialized traffic alternating two tenants over 2 workers × 1 slot,
+    /// each tenant builds exactly once — every later request is a warm
+    /// cache hit; least-loaded routing on the same workload thrashes.
+    #[test]
+    fn affinity_builds_each_tenant_once_where_least_loaded_thrashes() {
+        let pattern = |fleet: &mut Fleet| -> Vec<f32> {
+            let (a, b) = (key("a", 1), key("b", 2));
+            let mut logits = Vec::new();
+            for i in 0..12u32 {
+                // a a b b a a b b ...
+                let k = if (i / 2) % 2 == 0 { a.clone() } else { b.clone() };
+                let rx = fleet.submit(k, vec![i as f32]);
+                let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+                assert_eq!(resp.error, None);
+                assert_eq!(resp.logits.len(), 1);
+                logits.push(resp.logits[0]);
+            }
+            logits
+        };
+
+        let aff_builds = Arc::new(Mutex::new(HashMap::new()));
+        let mut aff = fleet(RoutingPolicy::Affinity, Arc::clone(&aff_builds));
+        let aff_logits = pattern(&mut aff);
+        let aff_snap = aff.metrics().snapshot();
+        aff.shutdown();
+
+        let ll_builds = Arc::new(Mutex::new(HashMap::new()));
+        let mut ll = fleet(RoutingPolicy::LeastLoaded, Arc::clone(&ll_builds));
+        let ll_logits = pattern(&mut ll);
+        let ll_snap = ll.metrics().snapshot();
+        ll.shutdown();
+
+        // Identical logits either way — routing policy is invisible to
+        // correctness.
+        assert_eq!(aff_logits, ll_logits);
+
+        let total = |m: &HashMap<ModelKey, u64>| m.values().sum::<u64>();
+        let aff_total = total(&aff_builds.lock().unwrap());
+        let ll_total = total(&ll_builds.lock().unwrap());
+        assert_eq!(aff_total, 2, "affinity: one build per tenant");
+        assert!(
+            ll_total > aff_total,
+            "least-loaded must thrash 1-slot caches on an alternating mix \
+             (got {ll_total} builds vs affinity's {aff_total})"
+        );
+        assert_eq!(aff_snap.cache_misses, 2);
+        assert_eq!(aff_snap.cache_hits, 10);
+        assert!(aff_snap.reload_words_saved > 0);
+        assert!(
+            aff_snap.reload_words_loaded < ll_snap.reload_words_loaded,
+            "affinity reloads strictly fewer words"
+        );
+        assert_eq!(aff_snap.completed, 12);
+        // Per-key accounting: both tenants present, 6 images each.
+        assert_eq!(aff_snap.per_key.len(), 2);
+        for pk in &aff_snap.per_key {
+            assert_eq!(pk.completed, 6, "{}", pk.key);
+            assert_eq!(pk.failed, 0);
+        }
+    }
+
+    #[test]
+    fn factory_error_answers_batch_and_worker_survives() {
+        let builds = Arc::new(Mutex::new(HashMap::new()));
+        let mut f = fleet(RoutingPolicy::Affinity, builds);
+        let bad = f.submit(key("bad", 1), vec![1.0]);
+        let good = f.submit(key("a", 1), vec![2.0]);
+        f.flush();
+        let bad_resp = bad.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(bad_resp.error.as_deref().unwrap().contains("engine build failed"));
+        assert!(bad_resp.logits.is_empty());
+        let good_resp = good.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(good_resp.error, None);
+        let snap = f.metrics().snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        f.shutdown();
+    }
+
+    #[test]
+    fn responses_carry_their_key() {
+        let builds = Arc::new(Mutex::new(HashMap::new()));
+        let mut f = fleet(RoutingPolicy::Affinity, builds);
+        let k = key("a", 3);
+        let rx = f.submit(k.clone(), vec![0.5]);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.key, k);
+        assert_eq!(resp.sim_cycles, 30);
+        f.shutdown();
+    }
+}

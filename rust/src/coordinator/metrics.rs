@@ -11,11 +11,14 @@
 //! rank made p99 of small samples read low (p99 of 10 samples must be the
 //! maximum, not the 9th value).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::model::zoo::Rng;
+
+use super::fleet::ModelKey;
 
 /// Fixed reservoir capacity: enough for stable tail percentiles, small
 /// enough that a snapshot clone is trivial.
@@ -67,6 +70,39 @@ pub struct Metrics {
     /// Exact latency sum for the mean (the reservoir is a sample).
     lat_sum_us: AtomicU64,
     latencies_us: Mutex<Reservoir>,
+    /// Fleet session-cache hits (a batch served by a warm engine).
+    cache_hits: AtomicU64,
+    /// Fleet session-cache misses (a batch that paid an engine build).
+    cache_misses: AtomicU64,
+    /// Weight/scaler/bias RAM words a cache hit avoided re-loading.
+    reload_words_saved: AtomicU64,
+    /// Weight/scaler/bias RAM words actually loaded on cache misses.
+    reload_words_loaded: AtomicU64,
+    /// Per-tenant aggregates (the `per-key latency` serving signal).
+    per_key: Mutex<HashMap<ModelKey, PerKeyAgg>>,
+}
+
+/// Internal per-key accumulator.
+#[derive(Debug, Default, Clone)]
+struct PerKeyAgg {
+    completed: u64,
+    failed: u64,
+    lat_sum_us: u64,
+    max_us: u64,
+    sim_cycles: u64,
+}
+
+/// Point-in-time per-[`ModelKey`] aggregates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerKeySnapshot {
+    pub key: ModelKey,
+    pub completed: u64,
+    pub failed: u64,
+    /// Exact mean latency in µs (0 when nothing completed).
+    pub mean_us: f64,
+    /// Worst observed latency in µs.
+    pub max_us: u64,
+    pub sim_cycles: u64,
 }
 
 /// Point-in-time snapshot.
@@ -83,6 +119,14 @@ pub struct MetricsSnapshot {
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// RAM words warm reuse avoided re-loading (hits × resident words).
+    pub reload_words_saved: u64,
+    /// RAM words cold builds actually loaded (misses × resident words).
+    pub reload_words_loaded: u64,
+    /// Per-tenant aggregates, sorted by rendered key for determinism.
+    pub per_key: Vec<PerKeySnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -92,6 +136,17 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.batch_images as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of batches served by a warm cached engine (0 when no
+    /// keyed batches ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
         }
     }
 }
@@ -118,6 +173,38 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A batch was served by a warm cached engine, avoiding a reload of
+    /// `reload_words_saved` RAM words.
+    pub fn on_cache_hit(&self, reload_words_saved: u64) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        self.reload_words_saved.fetch_add(reload_words_saved, Ordering::Relaxed);
+    }
+
+    /// A batch paid a cold engine build loading `reload_words_loaded` RAM
+    /// words.
+    pub fn on_cache_miss(&self, reload_words_loaded: u64) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        self.reload_words_loaded.fetch_add(reload_words_loaded, Ordering::Relaxed);
+    }
+
+    /// Keyed completion: global counters plus the tenant's aggregates.
+    pub fn on_complete_keyed(&self, key: &ModelKey, latency: Duration, sim_cycles: u64) {
+        self.on_complete(latency, sim_cycles);
+        let us = latency.as_micros() as u64;
+        let mut map = self.per_key.lock().unwrap();
+        let agg = map.entry(key.clone()).or_default();
+        agg.completed += 1;
+        agg.lat_sum_us += us;
+        agg.max_us = agg.max_us.max(us);
+        agg.sim_cycles += sim_cycles;
+    }
+
+    /// Keyed failure: global counter plus the tenant's failure count.
+    pub fn on_failure_keyed(&self, key: &ModelKey) {
+        self.on_failure();
+        self.per_key.lock().unwrap().entry(key.clone()).or_default().failed += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         // Bounded: at most RESERVOIR_CAP elements regardless of uptime.
         let mut lats = self.latencies_us.lock().unwrap().samples.clone();
@@ -136,6 +223,25 @@ impl Metrics {
         } else {
             self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
         };
+        let mut per_key: Vec<PerKeySnapshot> = self
+            .per_key
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, a)| PerKeySnapshot {
+                key: k.clone(),
+                completed: a.completed,
+                failed: a.failed,
+                mean_us: if a.completed == 0 {
+                    0.0
+                } else {
+                    a.lat_sum_us as f64 / a.completed as f64
+                },
+                max_us: a.max_us,
+                sim_cycles: a.sim_cycles,
+            })
+            .collect();
+        per_key.sort_by_key(|pk| pk.key.to_string());
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -146,6 +252,11 @@ impl Metrics {
             p50_us: pct(0.50),
             p99_us: pct(0.99),
             mean_us: mean,
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            reload_words_saved: self.reload_words_saved.load(Ordering::Relaxed),
+            reload_words_loaded: self.reload_words_loaded.load(Ordering::Relaxed),
+            per_key,
         }
     }
 }
@@ -217,6 +328,41 @@ mod tests {
         // Percentiles from the sample stay in a sane band.
         assert!(s.p50_us >= 350 && s.p50_us <= 650, "p50 {}", s.p50_us);
         assert!(s.p99_us >= 900, "p99 {}", s.p99_us);
+    }
+
+    /// Keyed completions feed both the global aggregates and the tenant's
+    /// own latency/cycle accounting; cache hit/miss words accumulate.
+    #[test]
+    fn keyed_metrics_track_per_tenant_and_cache() {
+        use crate::session::ExecutionMode;
+        let m = Metrics::default();
+        let a = ModelKey::new("resnet9", 4, 4, ExecutionMode::Auto);
+        let b = ModelKey::new("resnet18", 2, 2, ExecutionMode::Auto);
+        m.on_complete_keyed(&a, Duration::from_micros(10), 100);
+        m.on_complete_keyed(&a, Duration::from_micros(30), 100);
+        m.on_complete_keyed(&b, Duration::from_micros(50), 7);
+        m.on_failure_keyed(&b);
+        m.on_cache_miss(500);
+        m.on_cache_hit(500);
+        m.on_cache_hit(500);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.reload_words_saved, 1000);
+        assert_eq!(s.reload_words_loaded, 500);
+        assert!((s.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.per_key.len(), 2);
+        // Sorted by rendered key: "resnet18:…" < "resnet9:…".
+        assert_eq!(s.per_key[0].key, b);
+        assert_eq!(s.per_key[1].key, a);
+        assert_eq!(s.per_key[1].completed, 2);
+        assert!((s.per_key[1].mean_us - 20.0).abs() < 1e-9);
+        assert_eq!(s.per_key[1].max_us, 30);
+        assert_eq!(s.per_key[1].sim_cycles, 200);
+        assert_eq!(s.per_key[0].failed, 1);
+        assert_eq!(s.per_key[0].completed, 1);
     }
 
     #[test]

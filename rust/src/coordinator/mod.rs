@@ -6,9 +6,11 @@
 //! tokio — see Cargo.toml):
 //!
 //! ```text
-//! submit() ──► Router ──► per-worker queue ──► Worker thread (Engine)
-//!                 │                                   │
-//!              Batcher (groups up to max_batch)    Metrics
+//! submit() ───────► Router ───► per-worker queue ──► Worker thread (Engine)
+//! submit(key) ──► (affinity)                             │
+//!                    │        Batcher (key-homogeneous,  │   SessionCache
+//!                    │         up to max_batch)          │  (Fleet: LRU of
+//!                    │                                Metrics  warm engines)
 //! ```
 //!
 //! * [`Engine`] — anything that can run one image to logits. The real
@@ -17,16 +19,28 @@
 //!   (`examples/serve.rs`) — serving engines want the job-level functional
 //!   backend; its outputs and cycle accounting are bit-identical to the
 //!   cycle-accurate stepper (see [`crate::exec`]). Tests use mocks.
-//! * [`Batcher`] — groups queued requests (weight reuse amortisation).
-//! * [`Router`] — least-loaded dispatch over workers.
-//! * [`Metrics`] — counters + latency aggregates.
+//! * [`Batcher`] — groups queued requests into key-homogeneous batches
+//!   (weight reuse amortisation: one batch = one warm engine run).
+//! * [`Router`] — least-loaded dispatch over workers, plus affinity-aware
+//!   keyed dispatch ([`Router::route_affine`]) for the fleet.
+//! * [`Metrics`] — counters, latency aggregates, cache hit/miss and
+//!   per-tenant accounting.
+//! * [`Coordinator`] — the single-tenant service: one engine per worker.
+//! * [`Fleet`] — the multi-tenant service: each worker holds an
+//!   LRU-bounded [`SessionCache`] of warm engines keyed by [`ModelKey`],
+//!   and requests route with cache affinity (run-time programmability as
+//!   a serving architecture).
 
 mod batcher;
+mod fleet;
 mod metrics;
 mod router;
 mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use fleet::{
+    Fleet, FleetConfig, KeyedEngine, KeyedEngineFactory, ModelKey, RoutingPolicy, SessionCache,
+};
+pub use metrics::{Metrics, MetricsSnapshot, PerKeySnapshot};
 pub use router::Router;
 pub use server::{Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse};

@@ -1,13 +1,27 @@
 //! Request router: least-loaded dispatch across worker queues, falling back
-//! to round-robin on ties (deterministic given identical load).
+//! to round-robin on ties (deterministic given identical load) — plus
+//! **affinity-aware** keyed dispatch for the multi-tenant fleet: a request
+//! tagged with a [`ModelKey`] prefers a worker whose session cache already
+//! holds that key, so the weight/scaler/bias/program reload a cold build
+//! pays is avoided entirely.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-/// Tracks per-worker in-flight counts and picks targets.
+use super::fleet::ModelKey;
+
+/// Tracks per-worker in-flight counts (and, for keyed routing, which model
+/// keys each worker's cache holds) and picks targets.
 #[derive(Debug)]
 pub struct Router {
     inflight: Vec<AtomicU64>,
     rr: AtomicU64,
+    /// Advisory affinity map, maintained by fleet workers through
+    /// [`Self::note_cached`] / [`Self::note_evicted`]. Advisory because a
+    /// worker admits/evicts asynchronously to routing — a stale read only
+    /// costs a reload, never correctness.
+    cached: Mutex<Vec<HashSet<ModelKey>>>,
 }
 
 impl Router {
@@ -16,6 +30,7 @@ impl Router {
         Router {
             inflight: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             rr: AtomicU64::new(0),
+            cached: Mutex::new(vec![HashSet::new(); workers]),
         }
     }
 
@@ -42,9 +57,66 @@ impl Router {
         best
     }
 
-    /// A worker finished one request.
+    /// Affinity-aware keyed dispatch: among workers whose cache holds
+    /// `key`, pick the least-loaded (the warm path — no reload). When no
+    /// worker holds it, fall back to least-loaded **with cache admission**:
+    /// ties prefer the worker with the emptiest cache, so admitting the new
+    /// tenant does not evict another's warm session while a free slot
+    /// exists elsewhere. Returns `(worker, affinity_hit)` and increments
+    /// the worker's in-flight count.
+    pub fn route_affine(&self, key: &ModelKey) -> (usize, bool) {
+        let cached = self.cached.lock().unwrap();
+        let n = self.inflight.len();
+        let holders: Vec<usize> = (0..n).filter(|&i| cached[i].contains(key)).collect();
+        let hit = !holders.is_empty();
+        let candidates: Vec<usize> = if hit { holders } else { (0..n).collect() };
+        let start = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % n;
+        let mut best = candidates[0];
+        let mut best_score = (u64::MAX, usize::MAX);
+        for off in 0..n {
+            let i = (start + off) % n;
+            if !candidates.contains(&i) {
+                continue;
+            }
+            let score = (self.inflight[i].load(Ordering::Relaxed), cached[i].len());
+            if score < best_score {
+                best = i;
+                best_score = score;
+            }
+        }
+        drop(cached);
+        self.inflight[best].fetch_add(1, Ordering::Relaxed);
+        (best, hit)
+    }
+
+    /// A fleet worker admitted `key` into its session cache.
+    pub fn note_cached(&self, worker: usize, key: &ModelKey) {
+        self.cached.lock().unwrap()[worker].insert(key.clone());
+    }
+
+    /// A fleet worker evicted `key` from its session cache.
+    pub fn note_evicted(&self, worker: usize, key: &ModelKey) {
+        self.cached.lock().unwrap()[worker].remove(key);
+    }
+
+    /// Whether the affinity map believes `worker` holds `key`.
+    pub fn holds(&self, worker: usize, key: &ModelKey) -> bool {
+        self.cached.lock().unwrap()[worker].contains(key)
+    }
+
+    /// A worker finished one request. Saturating: an (erroneous) double
+    /// completion for one request must not wrap the counter to `u64::MAX`
+    /// — the worker would look infinitely busy and be excluded from
+    /// least-loaded choice forever. The misuse is still loud in debug
+    /// builds.
     pub fn complete(&self, worker: usize) {
-        self.inflight[worker].fetch_sub(1, Ordering::Relaxed);
+        let prev = self.inflight[worker]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)))
+            .expect("update closure never declines");
+        debug_assert!(
+            prev > 0,
+            "Router::complete without a matching route() for worker {worker}"
+        );
     }
 
     pub fn load(&self, worker: usize) -> u64 {
@@ -55,6 +127,11 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::session::ExecutionMode;
+
+    fn key(model: &str) -> ModelKey {
+        ModelKey::new(model, 2, 2, ExecutionMode::Auto)
+    }
 
     #[test]
     fn spreads_over_idle_workers() {
@@ -77,6 +154,60 @@ mod tests {
         // Complete worker b: it must be chosen next.
         r.complete(b);
         assert_eq!(r.route(), b);
+    }
+
+    /// Regression: `complete` called twice for one request used to wrap
+    /// the in-flight counter to `u64::MAX`, making the worker look
+    /// maximally loaded (never `< best_load`) — i.e. permanently excluded
+    /// from least-loaded choice. It must saturate at 0 instead (and assert
+    /// in debug builds, where the misuse should be caught loudly).
+    #[test]
+    fn double_complete_saturates_instead_of_wrapping() {
+        let r = Router::new(2);
+        let w = r.route();
+        r.complete(w);
+        if cfg!(debug_assertions) {
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| r.complete(w)));
+            assert!(res.is_err(), "debug builds flag the double completion");
+        } else {
+            r.complete(w);
+        }
+        assert_eq!(r.load(w), 0, "counter saturates at 0, no wrap to u64::MAX");
+        // The worker remains routable: all idle → both workers take traffic.
+        let mut hits = [0u32; 2];
+        for _ in 0..4 {
+            hits[r.route()] += 1;
+        }
+        assert_eq!(hits, [2, 2], "worker {w} not poisoned out of rotation");
+    }
+
+    #[test]
+    fn affine_route_prefers_cached_worker() {
+        let r = Router::new(3);
+        let k = key("resnet9");
+        assert!(!r.holds(2, &k));
+        r.note_cached(2, &k);
+        assert!(r.holds(2, &k));
+        let (w, hit) = r.route_affine(&k);
+        assert_eq!((w, hit), (2, true));
+        // Two holders: the less-loaded one wins (worker 2 has 1 in-flight).
+        r.note_cached(1, &k);
+        let (w, hit) = r.route_affine(&k);
+        assert_eq!((w, hit), (1, true));
+        // Eviction removes the affinity.
+        r.note_evicted(2, &k);
+        assert!(!r.holds(2, &k));
+    }
+
+    #[test]
+    fn affine_fallback_prefers_empty_cache_slot() {
+        let r = Router::new(2);
+        let resident = key("resnet9");
+        r.note_cached(0, &resident);
+        // A new key: nobody holds it; loads are equal; worker 1's cache is
+        // emptier, so admission there won't evict worker 0's warm tenant.
+        let (w, hit) = r.route_affine(&key("resnet18"));
+        assert_eq!((w, hit), (1, false));
     }
 
     /// Property: inflight counts equal routes − completions per worker, and

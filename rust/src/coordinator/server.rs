@@ -7,13 +7,19 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::batcher::{Batcher, BatcherConfig};
+use super::fleet::ModelKey;
 use super::metrics::Metrics;
 use super::router::Router;
 
-/// One inference request (a CIFAR-shaped image).
+/// One inference request (a CIFAR-shaped image) for tenant `key`.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
+    /// Which (model, precision, mode) tenant serves this request — the
+    /// batcher groups key-homogeneously and the fleet routes by affinity
+    /// on it. The single-tenant [`Coordinator`] tags untyped submissions
+    /// with [`ModelKey::default`].
+    pub key: ModelKey,
     pub image: Vec<f32>,
 }
 
@@ -21,6 +27,8 @@ pub struct InferenceRequest {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// The tenant that served this request (echoed from the submission).
+    pub key: ModelKey,
     /// Classifier logits; empty when `error` is set.
     pub logits: Vec<f32>,
     /// Simulated accelerator cycles consumed by this request (0 on error).
@@ -102,6 +110,7 @@ impl Coordinator {
                             };
                             for batch in batches {
                                 metrics2.on_batch(batch.requests.len());
+                                let key = batch.key.clone();
                                 // Move the images out of the requests —
                                 // the batch is consumed here, no clones.
                                 let (ids, images): (Vec<u64>, Vec<Vec<f32>>) = batch
@@ -119,9 +128,14 @@ impl Coordinator {
                                     router2.complete(w);
                                     let resp = match out {
                                         Ok((logits, cycles)) => {
-                                            metrics2.on_complete(t0.elapsed(), cycles);
+                                            metrics2.on_complete_keyed(
+                                                &key,
+                                                t0.elapsed(),
+                                                cycles,
+                                            );
                                             InferenceResponse {
                                                 id,
+                                                key: key.clone(),
                                                 logits,
                                                 sim_cycles: cycles,
                                                 worker: w,
@@ -129,9 +143,10 @@ impl Coordinator {
                                             }
                                         }
                                         Err(e) => {
-                                            metrics2.on_failure();
+                                            metrics2.on_failure_keyed(&key);
                                             InferenceResponse {
                                                 id,
+                                                key: key.clone(),
                                                 logits: Vec::new(),
                                                 sim_cycles: 0,
                                                 worker: w,
@@ -187,15 +202,30 @@ impl Coordinator {
         Coordinator { router, metrics, senders, joins, next_id: 0 }
     }
 
-    /// Submit an image; returns a receiver for the response.
+    /// Submit an image; returns a receiver for the response. The request
+    /// is tagged [`ModelKey::default`] — every engine in a `Coordinator`
+    /// serves the same single tenant (the multi-tenant path is
+    /// [`super::Fleet`]).
     pub fn submit(&mut self, image: Vec<f32>) -> mpsc::Receiver<InferenceResponse> {
+        self.submit_keyed(ModelKey::default(), image)
+    }
+
+    /// Submit an image tagged with an explicit tenant key. The key flows
+    /// through batching (key-homogeneous) and into the response and
+    /// per-key metrics; dispatch stays least-loaded (every worker's single
+    /// engine is assumed able to serve any key it is handed).
+    pub fn submit_keyed(
+        &mut self,
+        key: ModelKey,
+        image: Vec<f32>,
+    ) -> mpsc::Receiver<InferenceResponse> {
         let id = self.next_id;
         self.next_id += 1;
         let worker = self.router.route();
         self.metrics.on_submit();
         let (tx, rx) = mpsc::channel();
         self.senders[worker]
-            .send(WorkerMsg::Run(InferenceRequest { id, image }, tx, Instant::now()))
+            .send(WorkerMsg::Run(InferenceRequest { id, key, image }, tx, Instant::now()))
             .expect("worker alive");
         rx
     }
@@ -313,6 +343,29 @@ mod tests {
         let snap = c.metrics().snapshot();
         assert_eq!(snap.completed, 2);
         assert_eq!(snap.failed, 1);
+        c.shutdown();
+    }
+
+    /// Keys thread through the single-tenant coordinator too: the response
+    /// echoes the submitted key and per-key metrics pick it up.
+    #[test]
+    fn submit_keyed_threads_key_to_response_and_metrics() {
+        use crate::session::ExecutionMode;
+        let mut c = coordinator(1, 4);
+        let k = ModelKey::new("resnet9", 4, 4, ExecutionMode::Auto);
+        let rx = c.submit_keyed(k.clone(), vec![2.0, 3.0]);
+        let rx_default = c.submit(vec![1.0]);
+        c.flush();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.key, k);
+        assert_eq!(resp.logits, vec![5.0]);
+        assert_eq!(
+            rx_default.recv_timeout(Duration::from_secs(5)).unwrap().key,
+            ModelKey::default()
+        );
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.per_key.len(), 2);
+        assert!(snap.per_key.iter().any(|pk| pk.key == k && pk.completed == 1));
         c.shutdown();
     }
 

@@ -31,8 +31,10 @@
 //! * [`session`] — the unified inference API: `SessionBuilder` →
 //!   `InferenceSession` compiles once, loads weights once and serves
 //!   `run()` per image with typed `SessionError`s (the warm hot path).
-//! * [`coordinator`] — an async inference front-end: request router, batcher
-//!   and metrics over the simulated accelerator.
+//! * [`coordinator`] — the serving front-end: request router (least-loaded
+//!   + key-affinity), key-homogeneous batcher, metrics, the single-tenant
+//!   `Coordinator` and the multi-tenant `Fleet` with per-worker LRU caches
+//!   of warm sessions.
 //! * [`perf`] — analytic performance/resource/power models for BARVINN and
 //!   the baselines (FINN, FILM-QNN, BitFusion, BitBlade, Loom) behind
 //!   Tables 3–6.

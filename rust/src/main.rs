@@ -17,6 +17,16 @@
 //!                               any precision, either execution backend;
 //!                               `--mode auto` schedules >8-layer models
 //!                               as multi-pass laps)
+//! * `bench-serve [--seed N --duration-images N --mix k=w,... --workers N
+//!                 --cache N --policy affinity|least-loaded
+//!                 --exec cycle|turbo --out PATH]`
+//!                             — drive a seeded multi-tenant request mix
+//!                               through the serving `Fleet` and write the
+//!                               machine-readable `BENCH_serve.json` perf
+//!                               report (throughput, p50/p99 latency, mean
+//!                               batch size, cache hit rate, weight-reload
+//!                               words avoided) — the artifact CI's
+//!                               `serve-bench` job uploads and gates on
 
 use barvinn::codegen::EdgePolicy;
 use barvinn::exec::ExecMode;
@@ -38,6 +48,7 @@ fn main() {
         "asm" => asm(&args[1..]),
         "disasm" => disasm(&args[1..]),
         "run" => run(&args[1..]),
+        "bench-serve" => bench_serve(&args[1..]),
         "help" | "--help" | "-h" => help(),
         other => {
             eprintln!("unknown command '{other}'");
@@ -50,12 +61,16 @@ fn main() {
 fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
-         usage: barvinn <info|cycles|census|estimate|asm|disasm|run> [args]\n\
+         usage: barvinn <info|cycles|census|estimate|asm|disasm|run|bench-serve> [args]\n\
          run flags: --model resnet9|resnet18 --wbits N --abits N --images N\n\
                     --exec cycle|turbo --mode pipelined|distributed|multipass|auto\n\
                     (warm InferenceSession; turbo = job-level functional\n\
                     backend, cycle = cycle-accurate Pito-driven stepper;\n\
                     auto mode schedules deep models as multi-pass laps)\n\
+         bench-serve flags: --seed N --duration-images N\n\
+                    --mix resnet9:4:4=0.7,resnet18:2:2=0.3 --workers N --cache N\n\
+                    --policy affinity|least-loaded --exec cycle|turbo --out PATH\n\
+                    (multi-tenant fleet load generator; writes BENCH_serve.json)\n\
          see README.md for details"
     );
 }
@@ -98,6 +113,23 @@ fn parse_flag(args: &[String], name: &str, default: u32) -> u32 {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Like [`parse_flag`] but strict, for `bench-serve` (whose output is a CI
+/// perf artifact): a present-but-malformed value is a usage error instead
+/// of a silent fallback to the default — a typo'd `--seed` must not
+/// quietly bench the default seed. Accepts the full u64 range.
+fn parse_u64_flag_strict(args: &[String], name: &str, default: u64) -> u64 {
+    match args.iter().position(|a| a == name) {
+        None => default,
+        Some(i) => match args.get(i + 1).and_then(|v| v.parse::<u64>().ok()) {
+            Some(v) => v,
+            None => {
+                eprintln!("{name} requires an unsigned integer value");
+                std::process::exit(2);
+            }
+        },
+    }
 }
 
 fn parse_exec_flag(args: &[String]) -> ExecMode {
@@ -230,13 +262,15 @@ fn run(args: &[String]) {
             }
         },
     };
-    let m = match model_name {
-        "resnet9" => zoo::resnet9_cifar10(ab, wb),
-        // 16 layers: exceeds the array; --mode auto (the default) schedules
-        // it as two pipelined passes.
-        "resnet18" => zoo::resnet18_cifar(ab, wb),
-        other => {
-            eprintln!("unknown model '{other}' (resnet9|resnet18)");
+    // resnet18's 16 layers exceed the array; --mode auto (the default)
+    // schedules it as two pipelined passes.
+    let m = match zoo::model_by_name(model_name, ab, wb) {
+        Some(m) => m,
+        None => {
+            eprintln!(
+                "unknown model '{model_name}' ({})",
+                zoo::executable_model_names().join("|")
+            );
             std::process::exit(2);
         }
     };
@@ -288,4 +322,103 @@ fn run(args: &[String]) {
         metrics.total_mvu_cycles as f64 / dt.as_secs_f64() / 1e6,
         metrics.fps_at(CLOCK_HZ)
     );
+}
+
+/// `barvinn bench-serve`: seeded multi-tenant fleet load generator →
+/// `BENCH_serve.json` (see `perf::serve_bench` for the schema).
+fn bench_serve(args: &[String]) {
+    use barvinn::coordinator::RoutingPolicy;
+    use barvinn::perf::serve_bench::{parse_mix, run_bench, BenchConfig};
+
+    let seed = parse_u64_flag_strict(args, "--seed", 42);
+    let images = parse_u64_flag_strict(args, "--duration-images", 32) as usize;
+    let workers = parse_u64_flag_strict(args, "--workers", 2) as usize;
+    let cache = parse_u64_flag_strict(args, "--cache", 2) as usize;
+    if workers < 1 || cache < 1 {
+        eprintln!("--workers and --cache must be at least 1");
+        std::process::exit(2);
+    }
+    let exec = parse_exec_flag(args);
+    let policy: RoutingPolicy = match args.iter().position(|a| a == "--policy") {
+        None => RoutingPolicy::Affinity,
+        Some(i) => match args.get(i + 1) {
+            None => {
+                eprintln!("--policy requires a value (affinity|least-loaded)");
+                std::process::exit(2);
+            }
+            Some(v) => v.parse().unwrap_or_else(|e| {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }),
+        },
+    };
+    let mix_str = match args.iter().position(|a| a == "--mix") {
+        None => "resnet9:2:2=0.5,resnet9:4:4=0.3,resnet18:2:2=0.2".to_string(),
+        Some(i) => match args.get(i + 1) {
+            Some(v) => v.clone(),
+            None => {
+                eprintln!("--mix requires a value (e.g. resnet9:4:4=0.7,resnet18:2:2=0.3)");
+                std::process::exit(2);
+            }
+        },
+    };
+    let mix = parse_mix(&mix_str).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let cfg = BenchConfig {
+        seed,
+        images,
+        workers,
+        cache_per_worker: cache,
+        mix,
+        exec,
+        policy,
+        ..Default::default()
+    };
+    println!(
+        "bench-serve: {images} images over {workers} workers × {cache} cache slots, \
+         {policy} routing, {exec} backend, seed {seed}, mix {mix_str}"
+    );
+    let report = match run_bench(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-serve failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let json = report.to_json();
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("writing {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "{:.1} img/s | p50 {:.2} ms, p99 {:.2} ms | mean batch {:.2} | \
+         cache hit rate {:.0}% | {} reload words avoided ({} paid)",
+        report.throughput_img_s,
+        report.p50_ms,
+        report.p99_ms,
+        report.mean_batch_size,
+        report.cache_hit_rate * 100.0,
+        report.reload_words_saved,
+        report.reload_words_loaded
+    );
+    for pk in &report.per_key {
+        println!(
+            "  {}: {} ok, {} failed, mean {:.2} ms, max {:.2} ms, {} sim cycles",
+            pk.key,
+            pk.completed,
+            pk.failed,
+            pk.mean_us / 1e3,
+            pk.max_us as f64 / 1e3,
+            pk.sim_cycles
+        );
+    }
+    println!("wrote {out_path}");
 }

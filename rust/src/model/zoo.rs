@@ -183,6 +183,27 @@ pub fn resnet18_cifar(a_bits: u8, w_bits: u8) -> Model {
     }
 }
 
+/// The executable zoo, as one `(serving/CLI name, constructor)` table —
+/// the serving key space ([`crate::coordinator::ModelKey::model`]) and the
+/// `--model` vocabulary. [`model_by_name`] resolves through this table and
+/// error messages list it, so the two cannot drift.
+pub const EXECUTABLE_MODELS: [(&str, fn(u8, u8) -> Model); 2] =
+    [("resnet9", resnet9_cifar10), ("resnet18", resnet18_cifar)];
+
+/// Look up an **executable** zoo model by its serving/CLI name at the given
+/// quantization point: the single resolver behind `barvinn run --model`,
+/// `barvinn bench-serve` mixes and fleet engine factories. Returns `None`
+/// for unknown names (analytic [`NetShape`]s are not addressable here —
+/// they cannot run).
+pub fn model_by_name(name: &str, a_bits: u8, w_bits: u8) -> Option<Model> {
+    EXECUTABLE_MODELS.iter().find(|(n, _)| *n == name).map(|(_, build)| build(a_bits, w_bits))
+}
+
+/// The executable model names, for error messages and help text.
+pub fn executable_model_names() -> Vec<&'static str> {
+    EXECUTABLE_MODELS.iter().map(|(n, _)| *n).collect()
+}
+
 /// A conv layer shape for analytic models: `(ci, co, k, stride, pad, in_h)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvShape {

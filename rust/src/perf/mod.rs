@@ -13,6 +13,8 @@
 //! * [`model_size`] — quantized model size accounting (Tables 1, 2).
 //! * [`benchkit`] — the minimal timing harness used by `cargo bench`
 //!   (criterion is not in the offline vendored crate set).
+//! * [`serve_bench`] — the `bench-serve` fleet load generator and the
+//!   machine-readable `BENCH_serve.json` perf report CI uploads.
 
 pub mod benchkit;
 pub mod bitfusion;
@@ -21,3 +23,4 @@ pub mod film_qnn;
 pub mod finn;
 pub mod model_size;
 pub mod resource_model;
+pub mod serve_bench;

@@ -1,0 +1,518 @@
+//! `bench-serve`: a deterministic load generator over the multi-tenant
+//! [`Fleet`] plus the machine-readable perf report it emits
+//! (`BENCH_serve.json`) — the repo's first CI perf artifact.
+//!
+//! A seeded RNG draws images from a weighted **mix** of [`ModelKey`]s
+//! (e.g. `resnet9:4:4=0.7,resnet18:2:2=0.3`), drives them through the
+//! fleet closed-loop (bounded in-flight window, so batching and cache
+//! behaviour resemble steady serving rather than one giant backlog), and
+//! reports throughput, latency percentiles, batch sizes and the
+//! cache/reload accounting affinity routing exists to win.
+//!
+//! ## `BENCH_serve.json` schema (`barvinn.bench_serve/v1`)
+//!
+//! Top-level object, all fields always present:
+//!
+//! | field | meaning |
+//! |---|---|
+//! | `schema`, `seed`, `images`, `workers`, `cache_per_worker`, `policy`, `exec` | run configuration |
+//! | `mix` | array of `{key, weight}` request-mix entries |
+//! | `wall_s`, `throughput_img_s` | wall clock and completed images/s |
+//! | `p50_ms`, `p99_ms`, `mean_ms` | end-to-end request latency |
+//! | `mean_batch_size`, `batches` | batcher behaviour |
+//! | `completed`, `failed` | request outcomes |
+//! | `cache_hits`, `cache_misses`, `cache_hit_rate` | warm-engine reuse |
+//! | `reload_words_loaded`, `reload_words_saved` | weight/scaler/bias RAM words paid vs avoided |
+//! | `sim_cycles` | simulated accelerator cycles across all requests |
+//! | `per_key` | array of `{key, completed, failed, mean_ms, max_ms, sim_cycles}` |
+//!
+//! Non-finite floats serialize as `null` (the CI gate treats that as a
+//! failure). Future PRs appending fields must keep existing ones stable —
+//! this schema is the contract `ci.yml`'s `serve-bench` job checks.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    BatcherConfig, Fleet, FleetConfig, InferenceResponse, KeyedEngine, KeyedEngineFactory,
+    ModelKey, PerKeySnapshot, RoutingPolicy,
+};
+use crate::exec::ExecMode;
+use crate::model::zoo::{self, Rng};
+use crate::session::{InferenceSession, SessionBuilder};
+use crate::sim::Tensor3;
+
+/// Report schema identifier; bump the suffix on breaking changes.
+pub const SCHEMA: &str = "barvinn.bench_serve/v1";
+
+/// One request-mix entry: a tenant and its traffic share (weights are
+/// relative, normalised over the mix).
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub key: ModelKey,
+    pub weight: f64,
+}
+
+/// Parse a `--mix` string: comma-separated `model:wbits:abits[:mode][=weight]`
+/// entries, weight defaulting to 1 (e.g. `resnet9:4:4=0.7,resnet18:2:2=0.3`).
+pub fn parse_mix(s: &str) -> Result<Vec<MixEntry>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (key_str, weight) = match part.split_once('=') {
+            Some((k, w)) => (
+                k,
+                w.parse::<f64>().map_err(|_| format!("bad mix weight in '{part}'"))?,
+            ),
+            None => (part, 1.0),
+        };
+        if weight <= 0.0 || !weight.is_finite() {
+            return Err(format!("mix weight must be positive and finite in '{part}'"));
+        }
+        out.push(MixEntry { key: key_str.parse()?, weight });
+    }
+    if out.is_empty() {
+        return Err("empty mix (want e.g. resnet9:4:4=0.7,resnet18:2:2=0.3)".into());
+    }
+    Ok(out)
+}
+
+/// Adapts a warm [`InferenceSession`] to the coordinator [`Engine`]
+/// contract for accelerator-only models: f32 image values quantize to the
+/// model's input code space, logits are the final activation tensor as
+/// f32 (bit-exact across backends and routing policies — the determinism
+/// the mixed-precision acceptance test pins).
+///
+/// [`Engine`]: crate::coordinator::Engine
+pub struct SessionEngine {
+    session: InferenceSession,
+    ci: usize,
+    h: usize,
+    w: usize,
+    amax: i32,
+}
+
+impl SessionEngine {
+    pub fn new(session: InferenceSession) -> Self {
+        let l0 = &session.model().layers[0];
+        let (ci, h, w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
+        SessionEngine { session, ci, h, w, amax }
+    }
+}
+
+impl crate::coordinator::Engine for SessionEngine {
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+        images
+            .iter()
+            .map(|img| {
+                let want = self.ci * self.h * self.w;
+                if img.len() != want {
+                    return Err(format!(
+                        "image has {} values, model wants {want} ({}x{}x{})",
+                        img.len(),
+                        self.ci,
+                        self.h,
+                        self.w
+                    ));
+                }
+                let input = Tensor3 {
+                    c: self.ci,
+                    h: self.h,
+                    w: self.w,
+                    data: img.iter().map(|&v| (v as i32).clamp(0, self.amax)).collect(),
+                };
+                self.session
+                    .run(&input)
+                    .map(|out| {
+                        let logits: Vec<f32> =
+                            out.output.data.iter().map(|&v| v as f32).collect();
+                        (logits, out.total_mvu_cycles)
+                    })
+                    .map_err(|e| e.to_string())
+            })
+            .collect()
+    }
+}
+
+/// The factory `bench-serve` fleets build engines through: resolve the
+/// key's model in the zoo, compile a warm session with the requested
+/// scheduling mode and the given execution backend, and report its
+/// resident RAM words as the admission cost.
+///
+/// Sessions are built with a 4096-word weight RAM (a §3.1.2 build
+/// parameter; the stock 2048 rejects 4-bit 512-channel layers such as
+/// `resnet9:4:4`'s conv8) so every precision in a mix fits.
+pub fn zoo_engine_factory(exec: ExecMode) -> KeyedEngineFactory {
+    std::sync::Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
+        let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
+            .ok_or_else(|| format!("unknown zoo model '{}'", key.model))?;
+        let mvu = crate::mvu::MvuConfig { weight_depth: 4096, ..Default::default() };
+        let session = SessionBuilder::new(model)
+            .mode(key.mode)
+            .exec_mode(exec)
+            .mvu_config(mvu)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let resident_words = session.resident_words();
+        Ok(KeyedEngine { engine: Box::new(SessionEngine::new(session)), resident_words })
+    })
+}
+
+/// Bench run configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub seed: u64,
+    /// Total images to drive (`--duration-images`).
+    pub images: usize,
+    pub workers: usize,
+    pub cache_per_worker: usize,
+    pub mix: Vec<MixEntry>,
+    pub exec: ExecMode,
+    pub policy: RoutingPolicy,
+    pub batch: BatcherConfig,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            seed: 42,
+            images: 32,
+            workers: 2,
+            cache_per_worker: 2,
+            mix: Vec::new(),
+            exec: ExecMode::Turbo,
+            policy: RoutingPolicy::Affinity,
+            batch: BatcherConfig::default(),
+        }
+    }
+}
+
+/// The machine-readable result of one bench run; [`Self::to_json`] renders
+/// the `BENCH_serve.json` document (schema in the [module docs](self)).
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub schema: &'static str,
+    pub seed: u64,
+    pub images: u64,
+    pub workers: usize,
+    pub cache_per_worker: usize,
+    pub policy: RoutingPolicy,
+    pub exec: ExecMode,
+    pub mix: Vec<MixEntry>,
+    pub wall_s: f64,
+    pub throughput_img_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub mean_batch_size: f64,
+    pub batches: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_rate: f64,
+    pub reload_words_loaded: u64,
+    pub reload_words_saved: u64,
+    pub sim_cycles: u64,
+    pub per_key: Vec<PerKeySnapshot>,
+}
+
+/// Escape a string for a JSON literal (keys are `model:w:a:mode`, so this
+/// is defensive).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render a float as a JSON number; non-finite values become `null` (the
+/// CI gate rejects them).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+impl BenchReport {
+    /// Serialize as a stable, dependency-free JSON document.
+    pub fn to_json(&self) -> String {
+        let mix: Vec<String> = self
+            .mix
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"key\": {}, \"weight\": {}}}",
+                    json_str(&e.key.to_string()),
+                    json_num(e.weight)
+                )
+            })
+            .collect();
+        let per_key: Vec<String> = self
+            .per_key
+            .iter()
+            .map(|pk| {
+                format!(
+                    "{{\"key\": {}, \"completed\": {}, \"failed\": {}, \"mean_ms\": {}, \
+                     \"max_ms\": {}, \"sim_cycles\": {}}}",
+                    json_str(&pk.key.to_string()),
+                    pk.completed,
+                    pk.failed,
+                    json_num(pk.mean_us / 1e3),
+                    json_num(pk.max_us as f64 / 1e3),
+                    pk.sim_cycles
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"schema\": {},\n  \"seed\": {},\n  \"images\": {},\n  \"workers\": {},\n  \
+             \"cache_per_worker\": {},\n  \"policy\": {},\n  \"exec\": {},\n  \"mix\": [{}],\n  \
+             \"wall_s\": {},\n  \"throughput_img_s\": {},\n  \"p50_ms\": {},\n  \"p99_ms\": {},\n  \
+             \"mean_ms\": {},\n  \"mean_batch_size\": {},\n  \"batches\": {},\n  \
+             \"completed\": {},\n  \"failed\": {},\n  \"cache_hits\": {},\n  \
+             \"cache_misses\": {},\n  \"cache_hit_rate\": {},\n  \"reload_words_loaded\": {},\n  \
+             \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"per_key\": [{}]\n}}\n",
+            json_str(self.schema),
+            self.seed,
+            self.images,
+            self.workers,
+            self.cache_per_worker,
+            json_str(&self.policy.to_string()),
+            json_str(&self.exec.to_string()),
+            mix.join(", "),
+            json_num(self.wall_s),
+            json_num(self.throughput_img_s),
+            json_num(self.p50_ms),
+            json_num(self.p99_ms),
+            json_num(self.mean_ms),
+            json_num(self.mean_batch_size),
+            self.batches,
+            self.completed,
+            self.failed,
+            self.cache_hits,
+            self.cache_misses,
+            json_num(self.cache_hit_rate),
+            self.reload_words_loaded,
+            self.reload_words_saved,
+            self.sim_cycles,
+            per_key.join(", ")
+        )
+    }
+}
+
+/// Input geometry resolved once per mix entry.
+struct KeyShape {
+    ci: usize,
+    h: usize,
+    w: usize,
+    amax: i32,
+}
+
+/// Weighted pick: `x` uniform in `[0, total_weight)`.
+fn pick<'a>(mix: &'a [MixEntry], shapes: &'a [KeyShape], x: f64) -> (&'a MixEntry, &'a KeyShape) {
+    let mut acc = 0.0;
+    for (e, s) in mix.iter().zip(shapes) {
+        acc += e.weight;
+        if x < acc {
+            return (e, s);
+        }
+    }
+    (mix.last().unwrap(), shapes.last().unwrap())
+}
+
+/// Drive `cfg.images` seeded requests through a fresh fleet and report.
+/// Closed-loop: at most `2 × workers × max_batch` requests are in flight,
+/// so measured latency reflects service + bounded queueing, not the whole
+/// backlog.
+pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
+    if cfg.mix.is_empty() {
+        return Err("bench mix is empty".into());
+    }
+    let total_w: f64 = cfg.mix.iter().map(|e| e.weight).sum();
+    let mut shapes = Vec::new();
+    for e in &cfg.mix {
+        let model = zoo::model_by_name(&e.key.model, e.key.abits, e.key.wbits)
+            .ok_or_else(|| format!("unknown zoo model '{}' in mix", e.key.model))?;
+        let l0 = &model.layers[0];
+        shapes.push(KeyShape { ci: l0.ci, h: l0.in_h, w: l0.in_w, amax: l0.aprec.max_value() });
+    }
+
+    let mut fleet = Fleet::new(
+        zoo_engine_factory(cfg.exec),
+        FleetConfig {
+            workers: cfg.workers,
+            cache_per_worker: cfg.cache_per_worker,
+            batch: cfg.batch,
+            policy: cfg.policy,
+        },
+    );
+    let timeout = Duration::from_secs(600);
+    let recv = |rx: std::sync::mpsc::Receiver<InferenceResponse>| -> Result<(), String> {
+        let resp = rx.recv_timeout(timeout).map_err(|e| format!("bench response lost: {e}"))?;
+        if let Some(err) = resp.error {
+            // Failures are counted in the metrics; a build/run error with a
+            // valid mix is a bench-harness bug worth surfacing loudly.
+            return Err(format!("request {} failed: {err}", resp.id));
+        }
+        Ok(())
+    };
+
+    let mut rng = Rng(cfg.seed ^ 0xB13C_5E17_0000_0001);
+    let max_inflight = (cfg.workers * cfg.batch.max_batch * 2).max(1);
+    let mut pending: VecDeque<std::sync::mpsc::Receiver<InferenceResponse>> = VecDeque::new();
+    let t0 = Instant::now();
+    for _ in 0..cfg.images {
+        if pending.len() >= max_inflight {
+            recv(pending.pop_front().expect("non-empty window"))?;
+        }
+        let x = ((rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64) * total_w;
+        let (entry, shape) = pick(&cfg.mix, &shapes, x);
+        let img: Vec<f32> = (0..shape.ci * shape.h * shape.w)
+            .map(|_| rng.range_i32(0, shape.amax) as f32)
+            .collect();
+        pending.push_back(fleet.submit(entry.key.clone(), img));
+    }
+    fleet.flush();
+    while let Some(rx) = pending.pop_front() {
+        recv(rx)?;
+    }
+    let wall = t0.elapsed();
+    let snap = fleet.metrics().snapshot();
+    fleet.shutdown();
+
+    let wall_s = wall.as_secs_f64();
+    Ok(BenchReport {
+        schema: SCHEMA,
+        seed: cfg.seed,
+        images: cfg.images as u64,
+        workers: cfg.workers,
+        cache_per_worker: cfg.cache_per_worker,
+        policy: cfg.policy,
+        exec: cfg.exec,
+        mix: cfg.mix.clone(),
+        wall_s,
+        throughput_img_s: if wall_s > 0.0 { snap.completed as f64 / wall_s } else { 0.0 },
+        p50_ms: snap.p50_us as f64 / 1e3,
+        p99_ms: snap.p99_us as f64 / 1e3,
+        mean_ms: snap.mean_us / 1e3,
+        mean_batch_size: snap.mean_batch_size(),
+        batches: snap.batches,
+        completed: snap.completed,
+        failed: snap.failed,
+        cache_hits: snap.cache_hits,
+        cache_misses: snap.cache_misses,
+        cache_hit_rate: snap.cache_hit_rate(),
+        reload_words_loaded: snap.reload_words_loaded,
+        reload_words_saved: snap.reload_words_saved,
+        sim_cycles: snap.sim_cycles,
+        per_key: snap.per_key,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::ExecutionMode;
+
+    #[test]
+    fn parse_mix_accepts_weights_and_defaults() {
+        let mix = parse_mix("resnet9:4:4=0.7,resnet18:2:2=0.3").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix[0].key.model, "resnet9");
+        assert_eq!((mix[0].key.wbits, mix[0].key.abits), (4, 4));
+        assert!((mix[0].weight - 0.7).abs() < 1e-12);
+        assert_eq!(mix[1].key.model, "resnet18");
+        let one = parse_mix("resnet9:2:2").unwrap();
+        assert!((one[0].weight - 1.0).abs() < 1e-12, "weight defaults to 1");
+        let modal = parse_mix("resnet18:2:2:multipass=2").unwrap();
+        assert_eq!(modal[0].key.mode, ExecutionMode::MultiPass);
+    }
+
+    #[test]
+    fn parse_mix_rejects_garbage() {
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("resnet9:4:4=0").is_err());
+        assert!(parse_mix("resnet9:4:4=-1").is_err());
+        assert!(parse_mix("resnet9:4:4=NaN").is_err());
+        assert!(parse_mix("resnet9:four:4=1").is_err());
+        assert!(parse_mix("resnet9=1").is_err());
+    }
+
+    #[test]
+    fn weighted_pick_is_cumulative() {
+        let mix = parse_mix("a:1:1=0.5,b:2:2=0.25,c:3:3=0.25").unwrap();
+        let shapes: Vec<KeyShape> =
+            (0..3).map(|i| KeyShape { ci: i + 1, h: 1, w: 1, amax: 1 }).collect();
+        assert_eq!(pick(&mix, &shapes, 0.0).0.key.model, "a");
+        assert_eq!(pick(&mix, &shapes, 0.49).0.key.model, "a");
+        assert_eq!(pick(&mix, &shapes, 0.5).0.key.model, "b");
+        assert_eq!(pick(&mix, &shapes, 0.74).0.key.model, "b");
+        assert_eq!(pick(&mix, &shapes, 0.75).0.key.model, "c");
+        assert_eq!(pick(&mix, &shapes, 99.0).0.key.model, "c", "clamped to last");
+    }
+
+    #[test]
+    fn report_json_has_schema_and_gate_fields() {
+        let report = BenchReport {
+            schema: SCHEMA,
+            seed: 42,
+            images: 8,
+            workers: 2,
+            cache_per_worker: 2,
+            policy: RoutingPolicy::Affinity,
+            exec: ExecMode::Turbo,
+            mix: parse_mix("resnet9:2:2=1").unwrap(),
+            wall_s: 0.5,
+            throughput_img_s: 16.0,
+            p50_ms: 1.5,
+            p99_ms: 3.0,
+            mean_ms: 1.75,
+            mean_batch_size: 4.0,
+            batches: 2,
+            completed: 8,
+            failed: 0,
+            cache_hits: 1,
+            cache_misses: 1,
+            cache_hit_rate: 0.5,
+            reload_words_loaded: 1000,
+            reload_words_saved: 1000,
+            sim_cycles: 12345,
+            per_key: vec![],
+        };
+        let json = report.to_json();
+        for needle in [
+            "\"schema\": \"barvinn.bench_serve/v1\"",
+            "\"throughput_img_s\": 16",
+            "\"p99_ms\": 3",
+            "\"policy\": \"affinity\"",
+            "\"exec\": \"turbo\"",
+            "\"mix\": [{\"key\": \"resnet9:2:2:auto\"",
+            "\"per_key\": []",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        // Balanced braces/brackets (cheap well-formedness check — the
+        // vendored crate set has no JSON parser).
+        let count = |c: char| json.chars().filter(|&x| x == c).count();
+        assert_eq!(count('{'), count('}'));
+        assert_eq!(count('['), count(']'));
+        assert_eq!(count('"') % 2, 0);
+    }
+
+    #[test]
+    fn non_finite_floats_serialize_as_null() {
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(2.5), "2.5");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+    }
+}

@@ -71,7 +71,9 @@ use crate::runtime::{ArtifactStore, HostModule, Runtime, RuntimeError};
 use crate::sim::Tensor3;
 
 /// §3.1.6 execution modes (Fig. 5), plus the depth-driven selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash`/`Eq` so the mode can key serving caches
+/// ([`crate::coordinator::ModelKey`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecutionMode {
     /// Layer `i` on MVU `i`, rows streamed between layers (max throughput);
     /// the model must fit the array (1..=8 layers).
@@ -501,6 +503,33 @@ impl InferenceSession {
             Program::Pipelined(c) => c.program.len(),
             Program::Distributed(p) => p.program.len(),
             Program::MultiPass(p) => p.program_len(),
+        }
+    }
+
+    /// Weight + scaler + bias RAM words made resident **once at build**
+    /// and reused across images: exactly the reload a serving-fleet cache
+    /// hit avoids re-paying when a warm session is reused instead of
+    /// rebuilt ([`crate::coordinator::Fleet`]). Multi-pass sessions report
+    /// 0 — their RAM images rotate *per image* inside `run()` regardless
+    /// of session warmth (see [`Self::per_image_reload_words`]), so a
+    /// rebuild costs compilation but no extra RAM loading.
+    pub fn resident_words(&self) -> u64 {
+        match &self.program {
+            Program::Pipelined(c) => c.resident_words(),
+            Program::Distributed(p) => p.resident_words(),
+            Program::MultiPass(_) => 0,
+        }
+    }
+
+    /// RAM words re-loaded on **every** image independent of session
+    /// warmth: [`MultiPassPlan::reload_words`] for multi-pass sessions
+    /// (the §3.1.6 lap cost), 0 for single-pass modes. Routing policy and
+    /// caching cannot change this term — keep it out of cache hit/miss
+    /// accounting.
+    pub fn per_image_reload_words(&self) -> u64 {
+        match &self.program {
+            Program::MultiPass(p) => p.reload_words(),
+            _ => 0,
         }
     }
 
@@ -1173,6 +1202,24 @@ mod tests {
             .mvu_config(cfg)
             .build()
             .unwrap();
+    }
+
+    /// Cache-accounting contract: single-pass sessions report their
+    /// build-time resident words (what a fleet cache hit saves); multi-pass
+    /// sessions report 0 resident (weights rotate per image regardless of
+    /// warmth) with the rotation cost on `per_image_reload_words`.
+    #[test]
+    fn resident_words_split_build_time_from_per_image() {
+        let single = SessionBuilder::new(tiny_resnet9()).build().unwrap();
+        assert!(single.resident_words() > 0);
+        assert_eq!(single.per_image_reload_words(), 0);
+
+        let multi = SessionBuilder::new(tiny_deep_model(10))
+            .mode(ExecutionMode::MultiPass)
+            .build()
+            .unwrap();
+        assert_eq!(multi.resident_words(), 0);
+        assert!(multi.per_image_reload_words() > 0);
     }
 
     #[test]

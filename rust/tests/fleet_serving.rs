@@ -1,0 +1,203 @@
+//! Multi-tenant fleet serving, end-to-end over real `InferenceSession`
+//! engines: the PR-4 acceptance property.
+//!
+//! A mixed-precision workload (two `ModelKey` tenants of the same tiny
+//! ResNet9-derived stack at different weight precisions) is served twice —
+//! once with affinity routing, once with plain least-loaded routing — under
+//! **both** execution backends. Affinity must perform strictly fewer
+//! weight-RAM reload words (cold engine builds) than least-loaded, while
+//! logits stay bit-identical across routing policies *and* backends: the
+//! cache layer is a pure performance optimisation, invisible to numerics.
+//!
+//! Models are downscaled (6 layers, 16×16 inputs) so the cycle-accurate
+//! legs stay responsive under `cargo test` in debug mode, mirroring the
+//! session unit tests.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use barvinn::coordinator::{
+    BatcherConfig, Engine, Fleet, FleetConfig, KeyedEngine, KeyedEngineFactory, MetricsSnapshot,
+    ModelKey, RoutingPolicy,
+};
+use barvinn::exec::ExecMode;
+use barvinn::model::zoo::{resnet9_cifar10, Rng};
+use barvinn::model::Model;
+use barvinn::perf::serve_bench::SessionEngine;
+use barvinn::session::{ExecutionMode, SessionBuilder};
+
+/// First six ResNet9 layers at 16×16 (same downscaling as the session unit
+/// tests): full pipelined chain, debug-mode fast.
+fn tiny_resnet9(a_bits: u8, w_bits: u8) -> Model {
+    let mut m = resnet9_cifar10(a_bits, w_bits);
+    m.layers.truncate(6);
+    let mut h = 16;
+    for l in &mut m.layers {
+        l.in_h = h;
+        l.in_w = h;
+        if l.stride == 2 {
+            h /= 2;
+        }
+    }
+    m.validate().unwrap();
+    m
+}
+
+/// Engine factory over the tiny model family: the key's precisions select
+/// the quantization point, `reloads` records every cold build's RAM words
+/// (ground truth the fleet's `reload_words_loaded` metric must match).
+fn tiny_factory(
+    exec: ExecMode,
+    reloads: Arc<Mutex<HashMap<ModelKey, u64>>>,
+) -> KeyedEngineFactory {
+    Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
+        if key.model != "tiny9" {
+            return Err(format!("unknown tenant {key}"));
+        }
+        let model = tiny_resnet9(key.abits, key.wbits);
+        let session = SessionBuilder::new(model)
+            .mode(key.mode)
+            .exec_mode(exec)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let resident_words = session.resident_words();
+        *reloads.lock().unwrap().entry(key.clone()).or_insert(0) += resident_words;
+        Ok(KeyedEngine {
+            engine: Box::new(SessionEngine::new(session)),
+            resident_words,
+        })
+    })
+}
+
+/// Serve the canonical mixed-precision workload (2 tenants, `n` serialized
+/// requests alternating in pairs: a a b b a a …) and return the per-request
+/// logits, the total reload words cold builds paid, and the final metrics.
+fn run_workload(
+    exec: ExecMode,
+    policy: RoutingPolicy,
+    n: u64,
+) -> (Vec<Vec<f32>>, u64, MetricsSnapshot) {
+    let reloads = Arc::new(Mutex::new(HashMap::new()));
+    let mut fleet = Fleet::new(
+        tiny_factory(exec, Arc::clone(&reloads)),
+        FleetConfig {
+            workers: 2,
+            // One warm engine per worker: an alternating two-tenant mix
+            // thrashes without affinity, sticks with it.
+            cache_per_worker: 1,
+            batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            policy,
+        },
+    );
+    let a = ModelKey::new("tiny9", 2, 2, ExecutionMode::Auto);
+    let b = ModelKey::new("tiny9", 4, 2, ExecutionMode::Auto);
+    let mut logits = Vec::new();
+    for i in 0..n {
+        let key = if (i / 2) % 2 == 0 { a.clone() } else { b.clone() };
+        // Per-request deterministic image, independent of policy/backend
+        // (activations are 2-bit for both tenants: codes 0..=3).
+        let mut rng = Rng(0xF1EE7 + i);
+        let img: Vec<f32> = (0..64 * 16 * 16).map(|_| rng.range_i32(0, 3) as f32).collect();
+        // Serialized traffic: wait for each response so routing decisions
+        // see settled cache state — the workload is fully deterministic.
+        let resp = fleet
+            .submit(key.clone(), img)
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response");
+        assert_eq!(resp.error, None, "request {i} failed");
+        assert_eq!(resp.key, key);
+        assert!(!resp.logits.is_empty());
+        assert!(resp.sim_cycles > 0);
+        logits.push(resp.logits);
+    }
+    let snap = fleet.metrics().snapshot();
+    fleet.shutdown();
+    let total_loaded: u64 = reloads.lock().unwrap().values().sum();
+    assert_eq!(
+        snap.reload_words_loaded, total_loaded,
+        "metric must equal the factory-observed load words"
+    );
+    (logits, total_loaded, snap)
+}
+
+/// The acceptance criterion: ≥2 model keys, both exec backends — affinity
+/// routing performs strictly fewer weight-RAM reloads than least-loaded
+/// routing, with bit-identical logits.
+#[test]
+fn affinity_routing_saves_reloads_with_bit_identical_logits() {
+    let n = 8;
+    let mut logits_by_backend = Vec::new();
+    for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+        let (aff_logits, aff_loaded, aff_snap) = run_workload(exec, RoutingPolicy::Affinity, n);
+        let (ll_logits, ll_loaded, ll_snap) = run_workload(exec, RoutingPolicy::LeastLoaded, n);
+
+        assert_eq!(
+            aff_logits, ll_logits,
+            "{exec:?}: routing policy must be invisible to numerics"
+        );
+        assert!(
+            aff_loaded < ll_loaded,
+            "{exec:?}: affinity must reload strictly fewer weight-RAM words \
+             (affinity {aff_loaded}, least-loaded {ll_loaded})"
+        );
+        // Affinity on a 2-tenant × 2-worker × 1-slot fleet: exactly one
+        // cold build per tenant, everything else warm.
+        assert_eq!(aff_snap.cache_misses, 2, "{exec:?}");
+        assert_eq!(aff_snap.cache_hits, n - 2, "{exec:?}");
+        assert!(aff_snap.reload_words_saved > 0, "{exec:?}");
+        assert_eq!(aff_snap.completed, n, "{exec:?}");
+        assert_eq!(ll_snap.completed, n, "{exec:?}");
+        // Both tenants show up in per-key accounting with half the traffic.
+        assert_eq!(aff_snap.per_key.len(), 2, "{exec:?}");
+        for pk in &aff_snap.per_key {
+            assert_eq!(pk.completed, n / 2, "{exec:?}: {}", pk.key);
+            assert!(pk.sim_cycles > 0, "{exec:?}: {}", pk.key);
+        }
+        logits_by_backend.push(aff_logits);
+    }
+    // Backend equivalence end-to-end through the fleet: turbo and
+    // cycle-accurate serve bit-identical logits.
+    assert_eq!(
+        logits_by_backend[0], logits_by_backend[1],
+        "turbo and cycle-accurate fleets must serve identical logits"
+    );
+}
+
+/// The two tenants really are different programs: same image, different
+/// precision → different logits (guards against the workload degenerating
+/// into one tenant twice, which would void the affinity comparison).
+#[test]
+fn tenants_differ_numerically() {
+    let mut rng = Rng(0xF1EE7);
+    let img: Vec<f32> = (0..64 * 16 * 16).map(|_| rng.range_i32(0, 3) as f32).collect();
+    let run = |wbits: u8| -> Vec<f32> {
+        let session = SessionBuilder::new(tiny_resnet9(2, wbits)).build().unwrap();
+        let mut engine = SessionEngine::new(session);
+        engine.infer_batch(std::slice::from_ref(&img)).remove(0).unwrap().0
+    };
+    assert_ne!(run(2), run(4));
+}
+
+/// Release-only smoke of the full `bench-serve` pipeline over the real
+/// zoo models (too heavy for debug-mode `cargo test -q`; CI additionally
+/// runs the `barvinn bench-serve` binary in its serve-bench job).
+#[test]
+#[cfg(not(debug_assertions))]
+fn bench_serve_pipeline_emits_valid_report() {
+    use barvinn::perf::serve_bench::{parse_mix, run_bench, BenchConfig};
+    let cfg = BenchConfig {
+        seed: 7,
+        images: 6,
+        mix: parse_mix("resnet9:2:2=0.7,resnet9:4:4=0.3").unwrap(),
+        ..Default::default()
+    };
+    let report = run_bench(&cfg).expect("bench runs");
+    assert_eq!(report.completed, 6);
+    assert_eq!(report.failed, 0);
+    assert!(report.throughput_img_s > 0.0);
+    assert!(report.p99_ms.is_finite());
+    let json = report.to_json();
+    assert!(json.contains("\"schema\": \"barvinn.bench_serve/v1\""));
+    assert!(!json.contains("null"), "no non-finite metrics in a healthy run");
+}
