@@ -63,7 +63,7 @@ fn main() {
     // session's per-pass bottleneck accounting for one image.
     let lap_fps = cycle_model::fps_pipelined(&net, bits, CLOCK_HZ);
     let metrics = session.metrics();
-    let session_fps = metrics.fps_at(CLOCK_HZ);
+    let session_fps = metrics.steady_state_fps_bound_at(CLOCK_HZ);
     let rel = (lap_fps - session_fps).abs() / lap_fps;
     assert!(
         rel < 1e-9,

@@ -61,6 +61,14 @@ impl ActLayout {
             + (row as u32 * self.cols_stored() as u32 + col as u32) * self.pixel_words()
             + (cb * self.prec.bits as usize) as u32
     }
+    /// The same layout shifted `words` higher in the RAM — the second slot
+    /// of a double-buffered region pair (streamed execution keeps frame
+    /// `i` and frame `i+1` in distinct buffers so consecutive frames never
+    /// clobber each other).
+    pub fn offset(&self, words: u32) -> ActLayout {
+        ActLayout { base: self.base + words, ..*self }
+    }
+
     /// Stored coordinates of raw element row/col.
     pub fn stored_row(&self, y: usize) -> usize {
         y + if self.pad_rows { self.pad } else { 0 }
@@ -242,6 +250,11 @@ mod tests {
         assert_eq!(l.addr(1, 0, 0), 140);
         // Raw (0,0) lands inside the padding frame.
         assert_eq!(l.addr(l.stored_row(0), l.stored_col(0), 0), 144);
+        // The double-buffer twin: identical geometry, shifted base.
+        let twin = l.offset(l.size_words());
+        assert_eq!(twin.base, 500);
+        assert_eq!(twin.size_words(), l.size_words());
+        assert_eq!(twin.addr(0, 0, 0), 500);
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub enum CompileError {
     /// at build time (where the geometry is known) instead of an
     /// out-of-range panic at load time.
     CapacityExceeded { mvu: usize, resource: &'static str, words: usize, depth: usize },
+    /// Streamed execution: the double-buffered input region of the final
+    /// stage would grow past the fixed output region base — the model's
+    /// activation maps are too large to hold two frames in flight in this
+    /// geometry (serial `run` still works).
+    StreamOverlap { mvu: usize, words: usize, limit: usize },
     /// The requested execution mode cannot map this model.
     Mode(String),
 }
@@ -78,6 +83,12 @@ impl std::fmt::Display for CompileError {
                 f,
                 "MVU {mvu}: {resource} image of {words} words exceeds the {depth}-word RAM \
                  (shrink the model/precision or enlarge SessionBuilder::mvu_config)"
+            ),
+            CompileError::StreamOverlap { mvu, words, limit } => write!(
+                f,
+                "MVU {mvu}: double-buffered input region of {words} words overlaps the \
+                 output region at word {limit}; this model cannot stream two frames in \
+                 flight in this geometry (serial run() still works)"
             ),
             CompileError::Mode(m) => write!(f, "unsupported execution mode: {m}"),
         }
@@ -119,6 +130,12 @@ pub struct CompiledModel {
     pub program: Vec<u32>,
     pub images: Vec<MvuImage>,
     pub plans: Vec<LayerPlan>,
+    /// Odd-parity twins of `plans` for streamed execution: identical job
+    /// streams over activation regions shifted one buffer higher, so frame
+    /// `i` (buffers `i % 2`) and frame `i+1` never clobber each other while
+    /// both are in flight. Weight/scaler/bias layouts are shared — only the
+    /// activation AGU bases differ.
+    pub stream_plans: Vec<LayerPlan>,
     pub policy: EdgePolicy,
     /// MVU index and layout where the final activations appear.
     pub out_mvu: usize,
@@ -148,6 +165,37 @@ impl CompiledModel {
     /// the program must already be resident ([`Self::load_weights`]).
     pub fn load_input(&self, sys: &mut System, input: &Tensor3) {
         self.plans[0].in_layout.load(&mut sys.mvus[0].act, input);
+    }
+
+    /// The plan driving stage `stage` for buffer `parity` (frame index
+    /// mod 2): even frames replay `plans`, odd frames the shifted
+    /// `stream_plans` twins.
+    pub fn stage_plan(&self, stage: usize, parity: usize) -> &LayerPlan {
+        if parity % 2 == 0 {
+            &self.plans[stage]
+        } else {
+            &self.stream_plans[stage]
+        }
+    }
+
+    /// Streamed analogue of [`Self::load_input`]: stage the entering
+    /// frame's input into buffer `parity` of MVU 0.
+    pub fn load_input_parity(&self, sys: &mut System, input: &Tensor3, parity: usize) {
+        self.stage_plan(0, parity).in_layout.load(&mut sys.mvus[0].act, input);
+    }
+
+    /// Streamed analogue of [`Self::read_output`]: read a retiring frame's
+    /// activations back from buffer `parity` of the final output region.
+    pub fn read_output_parity(&self, sys: &System, co: usize, parity: usize) -> Tensor3 {
+        self.stage_plan(self.plans.len() - 1, parity)
+            .out_layout
+            .read(&sys.mvus[self.out_mvu].act, co)
+    }
+
+    /// Per-stage MVP cycles per frame, in stage order — the input to
+    /// [`crate::exec::StreamSchedule`].
+    pub fn stage_cycles(&self) -> Vec<u64> {
+        self.plans.iter().map(|p| p.analytic_cycles).collect()
     }
 
     /// Load the image-invariant state: weight/scaler/bias RAM images for
@@ -180,7 +228,36 @@ impl CompiledModel {
     /// geometry it was configured with; direct `compile_pipelined` users
     /// driving a custom [`System`] should call it with theirs.
     pub fn check_fits(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
-        for plan in &self.plans {
+        self.check_plans_fit(&self.plans, cfg)
+    }
+
+    /// Streamed-execution capacity check: the odd-parity buffer twins must
+    /// also fit, and the final stage's double-buffered input must not grow
+    /// into the output region it shares an MVU with. Run lazily by the
+    /// session when a batch first streams — a model may be serially
+    /// runnable yet too large to double-buffer.
+    pub fn check_fits_streamed(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
+        self.check_plans_fit(&self.plans, cfg)?;
+        self.check_plans_fit(&self.stream_plans, cfg)?;
+        let last = self.stream_plans.last().expect("compile guarantees >= 1 layer");
+        let in_end = last.in_layout.base + last.in_layout.size_words();
+        let out_base = self.plans.last().unwrap().out_layout.base;
+        if in_end > out_base {
+            return Err(CompileError::StreamOverlap {
+                mvu: last.mvu,
+                words: in_end as usize,
+                limit: out_base as usize,
+            });
+        }
+        Ok(())
+    }
+
+    fn check_plans_fit(
+        &self,
+        plans: &[LayerPlan],
+        cfg: &crate::mvu::MvuConfig,
+    ) -> Result<(), CompileError> {
+        for plan in plans {
             let img = &self.images[plan.mvu];
             let cap = |resource: &'static str, words: usize, depth: usize| {
                 if words > depth {
@@ -224,6 +301,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
     }
 
     let mut plans = Vec::with_capacity(n);
+    let mut stream_plans = Vec::with_capacity(n);
     let mut images = vec![MvuImage::default(); NUM_MVUS];
     for (h, layer) in model.layers.iter().enumerate() {
         let in_l = in_layout(layer, 0, policy);
@@ -260,6 +338,25 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
             scale: layer.quant.scale.clone(),
             bias: layer.quant.bias.clone(),
         };
+        // The odd-parity twin for streamed execution: every activation
+        // region shifts up by its own size, forming the second slot of a
+        // double-buffer pair. Layer h's shifted output region coincides
+        // with layer h+1's shifted input region by construction (both are
+        // `in_layout(h+1)` offset by its size), so the chained dataflow is
+        // preserved buffer-for-buffer. Built eagerly: a second conv_jobs
+        // emission is cheap next to the weight-image transpose above, and
+        // it keeps CompiledModel immutable (&self) on the streaming path.
+        let in_l1 = in_l.offset(in_l.size_words());
+        let out_l1 = out_l.offset(out_l.size_words());
+        let stream_jobs = conv_jobs(layer, &in_l1, &out_l1, &w_l, 0, 0, dest_mask, policy);
+        stream_plans.push(LayerPlan {
+            in_layout: in_l1,
+            out_layout: out_l1,
+            w_layout: w_l,
+            jobs: stream_jobs,
+            mvu: h,
+            analytic_cycles: layer_cycles(layer, policy),
+        });
         plans.push(LayerPlan {
             in_layout: in_l,
             out_layout: out_l,
@@ -275,7 +372,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
     if program.len() * 4 > crate::pito::IRAM_BYTES {
         return Err(CompileError::ProgramTooLarge { words: program.len() });
     }
-    Ok(CompiledModel { asm, program, images, plans, policy, out_mvu: n - 1 })
+    Ok(CompiledModel { asm, program, images, plans, stream_plans, policy, out_mvu: n - 1 })
 }
 
 /// How many producer rows consumer row `r` of `layer` needs, as affine
@@ -505,6 +602,94 @@ mod tests {
         let exit = sys.run();
         assert_eq!(exit, crate::accel::SystemExit::AllExited);
         assert_eq!(sys.total_mvu_busy_cycles(), c.total_analytic_cycles());
+    }
+
+    /// Double-buffer geometry: the odd-parity twins replicate the even
+    /// plans exactly one region higher, the chained dataflow is preserved
+    /// buffer-for-buffer, and the two buffers of every region never
+    /// overlap.
+    #[test]
+    fn stream_plans_double_buffer_geometry() {
+        let m = tiny_resnet9();
+        for policy in [EdgePolicy::PadInRam, EdgePolicy::SkipEdges] {
+            let c = compile_pipelined(&m, policy).unwrap();
+            assert_eq!(c.stream_plans.len(), c.plans.len());
+            for (h, (p0, p1)) in c.plans.iter().zip(&c.stream_plans).enumerate() {
+                assert_eq!(p1.mvu, p0.mvu, "layer {h}");
+                assert_eq!(p1.analytic_cycles, p0.analytic_cycles, "layer {h}");
+                assert_eq!(p1.jobs.len(), p0.jobs.len(), "layer {h}");
+                // Buffer 1 sits immediately after buffer 0, same geometry.
+                assert_eq!(
+                    p1.in_layout.base,
+                    p0.in_layout.base + p0.in_layout.size_words(),
+                    "layer {h} input"
+                );
+                assert_eq!(p1.in_layout.size_words(), p0.in_layout.size_words());
+                assert_eq!(
+                    p1.out_layout.base,
+                    p0.out_layout.base + p0.out_layout.size_words(),
+                    "layer {h} output"
+                );
+                // Chaining: layer h's parity-1 output region is layer
+                // h+1's parity-1 input region.
+                if h + 1 < c.plans.len() {
+                    assert_eq!(p1.out_layout, c.stream_plans[h + 1].in_layout, "layer {h}");
+                }
+            }
+            assert_eq!(c.stage_cycles().len(), m.layers.len());
+            c.check_fits_streamed(&crate::mvu::MvuConfig::default()).unwrap();
+        }
+    }
+
+    /// A model whose final-stage input cannot double-buffer under the
+    /// output region is a typed StreamOverlap — while serial check_fits
+    /// still accepts it (streaming is strictly more demanding).
+    #[test]
+    fn stream_overlap_is_typed() {
+        use crate::model::{ConvLayer, QuantSpec};
+        use crate::quant::Precision;
+        let mut rng = crate::model::zoo::Rng(3);
+        // 64ch 48×48 at 4-bit activations: input region (50·50)·4 = 10000
+        // words < OUT_BASE, but its double buffer ends at 20000 > OUT_BASE.
+        let layer = ConvLayer {
+            name: "big".into(),
+            ci: 64,
+            co: 64,
+            fh: 3,
+            fw: 3,
+            stride: 1,
+            pad: 1,
+            in_h: 48,
+            in_w: 48,
+            aprec: Precision::u(4),
+            wprec: Precision::s(2),
+            oprec: Precision::u(4),
+            relu: true,
+            weights: (0..64 * 64 * 9).map(|_| rng.range_i32(-2, 1)).collect(),
+            quant: QuantSpec {
+                scale: (0..64).map(|_| 1u16).collect(),
+                bias: (0..64).map(|_| 0i32).collect(),
+                quant_msb: 13,
+            },
+        };
+        let m = Model {
+            name: "one-big".into(),
+            layers: vec![layer],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        // Roomy act RAM so raw capacity passes and the overlap check is
+        // what fires.
+        let cfg = crate::mvu::MvuConfig { act_depth: 64 * 1024, ..Default::default() };
+        c.check_fits(&cfg).unwrap();
+        match c.check_fits_streamed(&cfg) {
+            Err(CompileError::StreamOverlap { mvu: 0, words, limit }) => {
+                assert!(words > limit);
+                assert_eq!(limit, OUT_BASE as usize);
+            }
+            other => panic!("expected StreamOverlap, got {:?}", other.err()),
+        }
     }
 
     #[test]

@@ -249,6 +249,13 @@ impl MultiPassPlan {
         self.passes.iter().try_for_each(|p| p.check_fits(cfg))
     }
 
+    /// Streamed-execution capacity check: every pass must also fit its
+    /// double-buffered activation twins (multi-pass batches stream frames
+    /// *within* each pass — see `InferenceSession::run_stream`).
+    pub fn check_fits_streamed(&self, cfg: &crate::mvu::MvuConfig) -> Result<(), CompileError> {
+        self.passes.iter().try_for_each(|p| p.check_fits_streamed(cfg))
+    }
+
     /// Weight + scaler + bias RAM words re-loaded per image (all passes):
     /// the weight-reload cost model for deep networks. Weight words are
     /// 4096-bit, scaler/bias words 64-lane.

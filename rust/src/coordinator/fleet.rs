@@ -470,6 +470,12 @@ fn run_due(
         let (ids, images): (Vec<u64>, Vec<Vec<f32>>) =
             batch.requests.into_iter().map(|r| (r.id, r.image)).unzip();
         let outs = engine.infer_batch(&images);
+        // Key-homogeneous batches execute through the session's streamed
+        // pipeline; fold the batch's fill/steady/drain accounting into the
+        // fleet metrics (pipeline occupancy, streamed vs serial sim FPS).
+        if let Some(stats) = engine.take_stream_stats() {
+            metrics.on_stream(&stats);
+        }
         for (id, out) in ids.into_iter().zip(outs) {
             answer(replies, router, metrics, w, &key, id, out);
         }

@@ -19,6 +19,7 @@ use std::time::Duration;
 use crate::model::zoo::Rng;
 
 use super::fleet::ModelKey;
+use super::server::StreamStats;
 
 /// Fixed reservoir capacity: enough for stable tail percentiles, small
 /// enough that a snapshot clone is trivial.
@@ -78,6 +79,14 @@ pub struct Metrics {
     reload_words_saved: AtomicU64,
     /// Weight/scaler/bias RAM words actually loaded on cache misses.
     reload_words_loaded: AtomicU64,
+    /// Frames served through the streamed pipeline (`Engine::take_stream_stats`).
+    streamed_frames: AtomicU64,
+    /// Modelled streamed batch wall cycles (fill + steady + drain), summed.
+    pipeline_cycles: AtomicU64,
+    /// Serial-path cost of the same streamed frames, summed.
+    streamed_serial_cycles: AtomicU64,
+    /// Stage-cycle slots offered by streamed batches (occupancy denominator).
+    stage_cycle_slots: AtomicU64,
     /// Per-tenant aggregates (the `per-key latency` serving signal).
     per_key: Mutex<HashMap<ModelKey, PerKeyAgg>>,
 }
@@ -125,6 +134,14 @@ pub struct MetricsSnapshot {
     pub reload_words_saved: u64,
     /// RAM words cold builds actually loaded (misses × resident words).
     pub reload_words_loaded: u64,
+    /// Frames that executed through the streamed pipeline.
+    pub streamed_frames: u64,
+    /// Modelled streamed batch wall cycles (fill + steady + drain), summed.
+    pub pipeline_cycles: u64,
+    /// Serial-path cost of the same streamed frames, summed.
+    pub streamed_serial_cycles: u64,
+    /// Stage-cycle slots offered by streamed batches.
+    pub stage_cycle_slots: u64,
     /// Per-tenant aggregates, sorted by rendered key for determinism.
     pub per_key: Vec<PerKeySnapshot>,
 }
@@ -147,6 +164,38 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of streamed stage-cycle slots that did useful work (0 when
+    /// nothing streamed): 1.0 is a perfectly balanced, fully occupied
+    /// pipeline; fill/drain and stage imbalance pull it down.
+    pub fn pipeline_occupancy(&self) -> f64 {
+        if self.stage_cycle_slots == 0 {
+            0.0
+        } else {
+            self.streamed_serial_cycles as f64 / self.stage_cycle_slots as f64
+        }
+    }
+
+    /// Simulated throughput of the streamed path at `clock_hz`
+    /// (frames ÷ modelled pipeline wall cycles); 0 when nothing streamed.
+    pub fn sim_streamed_fps(&self, clock_hz: u64) -> f64 {
+        if self.streamed_frames == 0 || self.pipeline_cycles == 0 {
+            0.0
+        } else {
+            clock_hz as f64 * self.streamed_frames as f64 / self.pipeline_cycles as f64
+        }
+    }
+
+    /// What the serial one-image-at-a-time path (PR-4 serving) would have
+    /// sustained on the same frames — the baseline the streamed number is
+    /// gated against in CI.
+    pub fn sim_serial_fps(&self, clock_hz: u64) -> f64 {
+        if self.streamed_frames == 0 || self.streamed_serial_cycles == 0 {
+            0.0
+        } else {
+            clock_hz as f64 * self.streamed_frames as f64 / self.streamed_serial_cycles as f64
         }
     }
 }
@@ -185,6 +234,14 @@ impl Metrics {
     pub fn on_cache_miss(&self, reload_words_loaded: u64) {
         self.cache_misses.fetch_add(1, Ordering::Relaxed);
         self.reload_words_loaded.fetch_add(reload_words_loaded, Ordering::Relaxed);
+    }
+
+    /// Fold one engine's streamed-batch telemetry into the fleet counters.
+    pub fn on_stream(&self, stats: &StreamStats) {
+        self.streamed_frames.fetch_add(stats.frames, Ordering::Relaxed);
+        self.pipeline_cycles.fetch_add(stats.pipeline_cycles, Ordering::Relaxed);
+        self.streamed_serial_cycles.fetch_add(stats.serial_cycles, Ordering::Relaxed);
+        self.stage_cycle_slots.fetch_add(stats.stage_cycle_slots, Ordering::Relaxed);
     }
 
     /// Keyed completion: global counters plus the tenant's aggregates.
@@ -256,6 +313,10 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             reload_words_saved: self.reload_words_saved.load(Ordering::Relaxed),
             reload_words_loaded: self.reload_words_loaded.load(Ordering::Relaxed),
+            streamed_frames: self.streamed_frames.load(Ordering::Relaxed),
+            pipeline_cycles: self.pipeline_cycles.load(Ordering::Relaxed),
+            streamed_serial_cycles: self.streamed_serial_cycles.load(Ordering::Relaxed),
+            stage_cycle_slots: self.stage_cycle_slots.load(Ordering::Relaxed),
             per_key,
         }
     }
@@ -363,6 +424,37 @@ mod tests {
         assert_eq!(s.per_key[1].sim_cycles, 200);
         assert_eq!(s.per_key[0].failed, 1);
         assert_eq!(s.per_key[0].completed, 1);
+    }
+
+    /// Streamed-batch telemetry folds additively and derives occupancy and
+    /// the streamed-vs-serial simulated FPS pair.
+    #[test]
+    fn stream_stats_aggregate() {
+        let m = Metrics::default();
+        // Two batches of 8 frames over an 8-stage pipeline: serial cost
+        // 800 cycles each, pipelined down to 250.
+        for _ in 0..2 {
+            m.on_stream(&StreamStats {
+                frames: 8,
+                pipeline_cycles: 250,
+                serial_cycles: 800,
+                stage_cycle_slots: 250 * 8,
+            });
+        }
+        let s = m.snapshot();
+        assert_eq!(s.streamed_frames, 16);
+        assert_eq!(s.pipeline_cycles, 500);
+        assert_eq!(s.streamed_serial_cycles, 1600);
+        assert_eq!(s.stage_cycle_slots, 4000);
+        assert!((s.pipeline_occupancy() - 0.4).abs() < 1e-12);
+        let hz = 1000;
+        assert!((s.sim_streamed_fps(hz) - 32.0).abs() < 1e-9);
+        assert!((s.sim_serial_fps(hz) - 10.0).abs() < 1e-9);
+        assert!(s.sim_streamed_fps(hz) > 2.0 * s.sim_serial_fps(hz));
+        // Empty stats stay well-defined.
+        let empty = Metrics::default().snapshot();
+        assert_eq!(empty.pipeline_occupancy(), 0.0);
+        assert_eq!(empty.sim_streamed_fps(hz), 0.0);
     }
 
     #[test]

@@ -43,4 +43,6 @@ pub use fleet::{
 };
 pub use metrics::{Metrics, MetricsSnapshot, PerKeySnapshot};
 pub use router::Router;
-pub use server::{Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse};
+pub use server::{
+    Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse, StreamStats,
+};

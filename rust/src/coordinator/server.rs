@@ -40,6 +40,54 @@ pub struct InferenceResponse {
     pub error: Option<String>,
 }
 
+/// Streaming telemetry an engine accumulated since it was last asked:
+/// simulated-cycle accounting of batches that executed through the
+/// streamed pipeline (`InferenceSession::run_stream`). All counters are
+/// sums, so stats from many batches merge by addition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StreamStats {
+    /// Frames served through the streamed path.
+    pub frames: u64,
+    /// Modelled batch wall cycles (fill + steady + drain), summed.
+    pub pipeline_cycles: u64,
+    /// What the serial one-image-at-a-time path would have cost.
+    pub serial_cycles: u64,
+    /// Stage-cycle slots offered (`pipeline_cycles × stages` per batch,
+    /// summed) — the denominator of [`Self::occupancy`].
+    pub stage_cycle_slots: u64,
+}
+
+/// One streamed batch's accounting, folded down from the session layer
+/// (the single place `stage_cycle_slots` is derived).
+impl From<&crate::session::StreamMetrics> for StreamStats {
+    fn from(s: &crate::session::StreamMetrics) -> Self {
+        StreamStats {
+            frames: s.frames,
+            pipeline_cycles: s.pipeline_cycles,
+            serial_cycles: s.serial_cycles,
+            stage_cycle_slots: s.pipeline_cycles.saturating_mul(s.stages as u64),
+        }
+    }
+}
+
+impl StreamStats {
+    pub fn add(&mut self, other: &StreamStats) {
+        self.frames += other.frames;
+        self.pipeline_cycles += other.pipeline_cycles;
+        self.serial_cycles += other.serial_cycles;
+        self.stage_cycle_slots += other.stage_cycle_slots;
+    }
+
+    /// Fraction of offered stage-cycle slots that did useful work.
+    pub fn occupancy(&self) -> f64 {
+        if self.stage_cycle_slots == 0 {
+            0.0
+        } else {
+            self.serial_cycles as f64 / self.stage_cycle_slots as f64
+        }
+    }
+}
+
 /// Anything that can run a batch of images to logits. `infer_batch` returns
 /// one `Result<(logits, sim_cycles), error>` per input, in order: a
 /// poisoned request surfaces as a per-item error rather than a panic, so a
@@ -51,6 +99,14 @@ pub struct InferenceResponse {
 /// thread-affine in the `xla` crate).
 pub trait Engine {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>>;
+
+    /// Return-and-reset the engine's accumulated [`StreamStats`]. Workers
+    /// call this after every batch and feed the result into
+    /// [`super::Metrics::on_stream`]; engines that never stream (the
+    /// default) answer `None`.
+    fn take_stream_stats(&mut self) -> Option<StreamStats> {
+        None
+    }
 }
 
 /// Constructs a worker's engine on its own thread.
@@ -119,6 +175,9 @@ impl Coordinator {
                                     .map(|r| (r.id, r.image))
                                     .unzip();
                                 let outs = engine.infer_batch(&images);
+                                if let Some(stats) = engine.take_stream_stats() {
+                                    metrics2.on_stream(&stats);
+                                }
                                 for (id, out) in ids.into_iter().zip(outs) {
                                     let idx = replies
                                         .iter()

@@ -35,9 +35,23 @@
 //! Equivalence is enforced by `rust/tests/proptests.rs` (randomized
 //! precisions/tiles/destinations vs the `sim::golden` reference) and the
 //! ResNet-9 e2e tests; the speedup is tracked in `rust/benches/hotpath.rs`.
+//!
+//! **Streamed batches** ([`StreamSchedule`]): when a session executes a
+//! batch through `InferenceSession::run_stream`, up to 8 frames are in
+//! flight at once — stage `k` works on frame `i` while stage `k−1` works
+//! on frame `i+1`, over double-buffered activation regions. The schedule
+//! here decides which (stage, frame) pairs share a lap and prices the
+//! batch as fill + steady-state bottleneck laps + drain;
+//! [`crate::accel::System::run_lap`] executes one lap concurrently under
+//! either backend (the cycle-accurate stepper interleaves the active MVUs
+//! clock by clock; turbo runs each stage's jobs functionally and advances
+//! the clock by the slowest stage). Outputs stay bit-identical to serial
+//! `run` because concurrent stages touch disjoint frames and buffers.
 
+mod stream;
 mod turbo;
 
+pub use stream::{StreamCycles, StreamSchedule};
 pub use turbo::run_job_turbo;
 
 /// Which execution backend advances the MVU datapath.

@@ -1,0 +1,201 @@
+//! The streamed-pipeline lap schedule: which (stage, frame) pairs run
+//! concurrently, and what the pipeline costs in fill + steady-state +
+//! drain cycles.
+//!
+//! The paper's throughput claim assumes the 8-MVU pipeline is *streamed*:
+//! while MVU `k` processes frame `i`, MVU `k−1` already processes frame
+//! `i+1` (the FINN-style dataflow §3.1.6 describes for lap scheduling).
+//! With `S` stages and `N` frames the schedule is the classic software
+//! pipeline: at lap `t`, stage `k` processes frame `t − k` whenever that
+//! frame exists. A lap costs the *slowest active stage's* cycles, so the
+//! batch costs
+//!
+//! ```text
+//! pipeline_cycles = fill + steady + drain
+//!   fill   : laps 0 .. S−1        (pipeline filling, front stages only)
+//!   steady : laps S−1 .. N        (all stages busy — one frame retires
+//!                                  per bottleneck lap, the rate
+//!                                  perf::cycle_model::fps_pipelined models)
+//!   drain  : laps N .. N+S−1      (pipeline draining, back stages only)
+//! ```
+//!
+//! versus `N · Σ stage_cycles` for the serial one-frame-at-a-time path.
+//! The schedule is pure accounting + ordering; execution lives in
+//! [`crate::accel::System::run_lap`] and the session's streaming driver.
+
+/// Cycle breakdown of one streamed batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StreamCycles {
+    /// Laps before the pipeline is full (some leading stage still idle).
+    pub fill: u64,
+    /// Laps with every stage busy — each costs the bottleneck stage.
+    pub steady: u64,
+    /// Laps after the last frame entered (trailing stages draining).
+    pub drain: u64,
+}
+
+impl StreamCycles {
+    /// Modelled wall cycles for the whole batch.
+    pub fn total(&self) -> u64 {
+        self.fill + self.steady + self.drain
+    }
+}
+
+/// The lap schedule of `frames` frames over a pipeline of per-stage cycle
+/// costs (`stage_cycles[k]` = MVP cycles stage `k` spends per frame —
+/// constant across frames, since every frame replays the same job stream).
+#[derive(Debug, Clone)]
+pub struct StreamSchedule {
+    stage_cycles: Vec<u64>,
+    frames: usize,
+}
+
+impl StreamSchedule {
+    pub fn new(stage_cycles: Vec<u64>, frames: usize) -> Self {
+        assert!(!stage_cycles.is_empty(), "a pipeline needs at least one stage");
+        StreamSchedule { stage_cycles, frames }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stage_cycles.len()
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// Total laps: every frame traverses every stage, overlapped.
+    pub fn laps(&self) -> usize {
+        if self.frames == 0 {
+            0
+        } else {
+            self.frames + self.stages() - 1
+        }
+    }
+
+    /// The (stage, frame) pairs active at lap `t`: stage `k` processes
+    /// frame `t − k`. All active pairs touch *different* frames, which is
+    /// why they can run concurrently on their MVUs.
+    pub fn active(&self, lap: usize) -> Vec<(usize, usize)> {
+        (0..self.stages())
+            .filter_map(|k| {
+                let f = lap.checked_sub(k)?;
+                (f < self.frames).then_some((k, f))
+            })
+            .collect()
+    }
+
+    /// Cost of lap `t`: the slowest active stage (stages run concurrently).
+    pub fn lap_cycles(&self, lap: usize) -> u64 {
+        self.active(lap)
+            .iter()
+            .map(|&(k, _)| self.stage_cycles[k])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Steady-state per-frame cost: the bottleneck stage. This is exactly
+    /// the per-lap term of `perf::cycle_model::fps_pipelined`.
+    pub fn bottleneck_cycles(&self) -> u64 {
+        self.stage_cycles.iter().copied().max().unwrap_or(0)
+    }
+
+    /// What the serial path pays per frame: every stage, back to back.
+    pub fn serial_cycles_per_frame(&self) -> u64 {
+        self.stage_cycles.iter().sum()
+    }
+
+    /// Fill + steady + drain accounting over the whole batch.
+    pub fn cycles(&self) -> StreamCycles {
+        let mut c = StreamCycles::default();
+        for lap in 0..self.laps() {
+            let cost = self.lap_cycles(lap);
+            if lap + 1 < self.stages() {
+                c.fill += cost;
+            } else if lap < self.frames {
+                c.steady += cost;
+            } else {
+                c.drain += cost;
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_degenerates_to_serial() {
+        let s = StreamSchedule::new(vec![10], 4);
+        assert_eq!(s.laps(), 4);
+        assert_eq!(s.cycles().total(), 40);
+        assert_eq!(s.cycles().fill, 0);
+        assert_eq!(s.cycles().drain, 0);
+        assert_eq!(s.serial_cycles_per_frame(), 10);
+    }
+
+    #[test]
+    fn empty_batch_has_no_laps() {
+        let s = StreamSchedule::new(vec![5, 7], 0);
+        assert_eq!(s.laps(), 0);
+        assert_eq!(s.cycles(), StreamCycles::default());
+    }
+
+    /// 3 stages × 4 frames: lap-by-lap hand check of the schedule and the
+    /// fill/steady/drain split.
+    #[test]
+    fn three_stage_schedule_by_hand() {
+        let s = StreamSchedule::new(vec![2, 5, 3], 4);
+        assert_eq!(s.laps(), 6);
+        assert_eq!(s.active(0), vec![(0, 0)]);
+        assert_eq!(s.active(1), vec![(0, 1), (1, 0)]);
+        assert_eq!(s.active(2), vec![(0, 2), (1, 1), (2, 0)]);
+        assert_eq!(s.active(4), vec![(1, 3), (2, 2)]);
+        assert_eq!(s.active(5), vec![(2, 3)]);
+        // Lap costs: 2, 5, then steady 5s, then drain 5, 3.
+        assert_eq!(s.lap_cycles(0), 2);
+        assert_eq!(s.lap_cycles(1), 5);
+        assert_eq!(s.lap_cycles(5), 3);
+        let c = s.cycles();
+        assert_eq!(c.fill, 2 + 5);
+        assert_eq!(c.steady, 5 + 5); // laps 2 and 3 (all stages active)
+        assert_eq!(c.drain, 5 + 3);
+        assert_eq!(c.total(), 25);
+        assert_eq!(s.bottleneck_cycles(), 5);
+        assert_eq!(s.serial_cycles_per_frame(), 10);
+        // Streaming must beat serial for any multi-frame batch.
+        assert!(c.total() < 4 * s.serial_cycles_per_frame());
+    }
+
+    /// Fewer frames than stages: no steady laps, still a valid partition.
+    #[test]
+    fn short_batch_never_reaches_steady_state() {
+        let s = StreamSchedule::new(vec![1, 1, 1, 1], 2);
+        assert_eq!(s.laps(), 5);
+        let c = s.cycles();
+        assert_eq!(c.steady, 0);
+        assert_eq!(c.total(), 5);
+    }
+
+    /// In steady state one frame retires per bottleneck lap — the rate
+    /// `perf::cycle_model::fps_pipelined` models for ≤8-layer nets.
+    #[test]
+    fn steady_rate_matches_fps_pipelined() {
+        use crate::model::zoo;
+        use crate::perf::cycle_model::{self, Bits};
+        let net = cycle_model::shape_of_model("resnet9", &zoo::resnet9_cifar10(2, 2));
+        let per_layer = cycle_model::layer_cycles(&net, Bits { w: 2, a: 2 });
+        assert!(per_layer.len() <= crate::NUM_MVUS, "single-lap net");
+        let s = StreamSchedule::new(per_layer, 100);
+        let fps = cycle_model::fps_pipelined(&net, Bits { w: 2, a: 2 }, crate::CLOCK_HZ);
+        let modelled = crate::CLOCK_HZ as f64 / s.bottleneck_cycles() as f64;
+        assert!((fps - modelled).abs() < 1e-9, "{fps} vs {modelled}");
+        // Amortised per-frame cost approaches the bottleneck as the batch
+        // grows: within 10% at 100 frames.
+        let per_frame = s.cycles().total() as f64 / 100.0;
+        assert!(per_frame < s.bottleneck_cycles() as f64 * 1.1);
+        assert!(per_frame >= s.bottleneck_cycles() as f64);
+    }
+}

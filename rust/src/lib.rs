@@ -3,7 +3,12 @@
 //! This crate reproduces the system described in
 //! *BARVINN: Arbitrary Precision DNN Accelerator Controlled by a RISC-V CPU*
 //! (Askarihemmat et al., ASPDAC '23) as a bit- and cycle-accurate software
-//! model plus the full surrounding toolchain:
+//! model plus the full surrounding toolchain.
+//!
+//! **Orientation:** `docs/ARCHITECTURE.md` (repo root) maps every paper
+//! section to its module, explains the three execution modes and diagrams
+//! the streamed dataflow; `docs/BENCH_SCHEMAS.md` documents the
+//! machine-readable perf reports. The modules:
 //!
 //! * [`quant`] — fixed-point numerics, bit-plane packing and the paper's
 //!   bit-transposed memory format (Fig. 3).
@@ -18,7 +23,9 @@
 //!   MVU CSR file bridged into the CPU (Fig. 1).
 //! * [`exec`] — pluggable execution backends: the cycle-accurate stepper
 //!   (timing ground truth) and the job-level turbo executor (functional,
-//!   formula-reported cycles) behind one `ExecMode` switch.
+//!   formula-reported cycles) behind one `ExecMode` switch, plus the
+//!   streamed-pipeline lap schedule (`StreamSchedule`: frames in flight
+//!   across the MVU stages).
 //! * [`model`] — DNN model IR, ONNX-lite JSON ingestion and the model-zoo
 //!   channel census behind Fig. 2.
 //! * [`codegen`] — the code generator: tiling, bit-transposed weight export,
@@ -30,7 +37,8 @@
 //!   (feature-gated behind `pjrt`; a stub otherwise).
 //! * [`session`] — the unified inference API: `SessionBuilder` →
 //!   `InferenceSession` compiles once, loads weights once and serves
-//!   `run()` per image with typed `SessionError`s (the warm hot path).
+//!   `run()` per image — or `run_stream()` per batch with up to 8 frames
+//!   in flight — with typed `SessionError`s (the warm hot path).
 //! * [`coordinator`] — the serving front-end: request router (least-loaded
 //!   + key-affinity), key-homogeneous batcher, metrics, the single-tenant
 //!   `Coordinator` and the multi-tenant `Fleet` with per-worker LRU caches

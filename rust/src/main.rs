@@ -10,13 +10,17 @@
 //! * `asm <file.s>`            — assemble a Pito program, print words
 //! * `disasm <hex words...>`   — disassemble
 //! * `run [--model resnet9|resnet18 --wbits N --abits N --images N
-//!        --exec cycle|turbo --mode pipelined|distributed|multipass|auto]`
+//!        --exec cycle|turbo --mode pipelined|distributed|multipass|auto
+//!        --stream]`
 //!                             — run a quantized zoo model end-to-end on
 //!                               the simulated accelerator through a warm
 //!                               `InferenceSession` (weights loaded once,
 //!                               any precision, either execution backend;
 //!                               `--mode auto` schedules >8-layer models
-//!                               as multi-pass laps)
+//!                               as multi-pass laps; `--stream` executes
+//!                               the images as one streamed batch with up
+//!                               to 8 frames in flight and prints the
+//!                               fill/steady/drain pipeline accounting)
 //! * `bench-serve [--seed N --duration-images N --mix k=w,... --workers N
 //!                 --cache N --policy affinity|least-loaded
 //!                 --exec cycle|turbo --out PATH]`
@@ -64,6 +68,8 @@ fn help() {
          usage: barvinn <info|cycles|census|estimate|asm|disasm|run|bench-serve> [args]\n\
          run flags: --model resnet9|resnet18 --wbits N --abits N --images N\n\
                     --exec cycle|turbo --mode pipelined|distributed|multipass|auto\n\
+                    --stream (run the images as one streamed batch: up to 8\n\
+                    frames in flight across the MVU stages)\n\
                     (warm InferenceSession; turbo = job-level functional\n\
                     backend, cycle = cycle-accurate Pito-driven stepper;\n\
                     auto mode schedules deep models as multi-pass laps)\n\
@@ -300,6 +306,44 @@ fn run(args: &[String]) {
     );
     let mut rng = zoo::Rng(1);
     let t0 = std::time::Instant::now();
+    if args.iter().any(|a| a == "--stream") {
+        // Streamed batch: all images in one run_stream call, up to 8
+        // frames in flight across the MVU stages.
+        let inputs: Vec<Tensor3> = (0..n_images)
+            .map(|_| Tensor3::from_fn(ci, in_h, in_w, |_, _, _| rng.range_i32(0, amax)))
+            .collect();
+        let streamed = match session.run_stream(&inputs) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("streamed batch failed: {e}");
+                std::process::exit(1);
+            }
+        };
+        for out in &streamed.outputs {
+            println!(
+                "image {}: {} MVU cycles [{}]",
+                out.image_index, out.total_mvu_cycles, out.exec
+            );
+        }
+        let s = &streamed.stream;
+        println!(
+            "streamed {} frames over {} stages: {} pipeline cycles \
+             (fill {} + steady {} + drain {}) vs {} serial — {:.2}x speedup, \
+             occupancy {:.0}%, {:.0} FPS streamed vs {:.0} serial at 250 MHz",
+            s.frames,
+            s.stages,
+            s.pipeline_cycles,
+            s.fill_cycles,
+            s.steady_cycles,
+            s.drain_cycles,
+            s.serial_cycles,
+            s.speedup(),
+            s.occupancy() * 100.0,
+            s.streamed_fps_at(CLOCK_HZ),
+            s.serial_fps_at(CLOCK_HZ),
+        );
+        return;
+    }
     for i in 0..n_images {
         let input = Tensor3::from_fn(ci, in_h, in_w, |_, _, _| rng.range_i32(0, amax));
         match session.run(&input) {
@@ -316,11 +360,11 @@ fn run(args: &[String]) {
     let dt = t0.elapsed();
     let metrics = session.metrics();
     println!(
-        "{} images in {:.2}s wall ({:.1} M MVU-cycles/s simulated, {:.0} FPS at 250 MHz)",
+        "{} images in {:.2}s wall ({:.1} M MVU-cycles/s simulated, {:.0} serial FPS at 250 MHz)",
         metrics.images,
         dt.as_secs_f64(),
         metrics.total_mvu_cycles as f64 / dt.as_secs_f64() / 1e6,
-        metrics.fps_at(CLOCK_HZ)
+        metrics.serial_fps_at(CLOCK_HZ)
     );
 }
 
@@ -380,7 +424,15 @@ fn bench_serve(args: &[String]) {
         mix,
         exec,
         policy,
-        ..Default::default()
+        // Benches want deterministic batch formation: the serving default
+        // of 2 ms can fragment key groups on a loaded CI runner before
+        // they fill, which would understate batching and streaming. The
+        // closed-loop window (2 × workers × max_batch in flight) fills
+        // batches long before this deadline in practice.
+        batch: barvinn::coordinator::BatcherConfig {
+            max_wait: std::time::Duration::from_millis(50),
+            ..Default::default()
+        },
     };
     println!(
         "bench-serve: {images} images over {workers} workers × {cache} cache slots, \
@@ -408,6 +460,19 @@ fn bench_serve(args: &[String]) {
         report.cache_hit_rate * 100.0,
         report.reload_words_saved,
         report.reload_words_loaded
+    );
+    println!(
+        "streamed {} frames | pipeline occupancy {:.0}% | sim {:.0} FPS streamed \
+         vs {:.0} serial ({:.2}x)",
+        report.streamed_frames,
+        report.pipeline_occupancy * 100.0,
+        report.sim_streamed_fps,
+        report.sim_serial_fps,
+        if report.sim_serial_fps > 0.0 {
+            report.sim_streamed_fps / report.sim_serial_fps
+        } else {
+            0.0
+        }
     );
     for pk in &report.per_key {
         println!(

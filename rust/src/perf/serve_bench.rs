@@ -9,38 +9,26 @@
 //! reports throughput, latency percentiles, batch sizes and the
 //! cache/reload accounting affinity routing exists to win.
 //!
-//! ## `BENCH_serve.json` schema (`barvinn.bench_serve/v1`)
-//!
-//! Top-level object, all fields always present:
-//!
-//! | field | meaning |
-//! |---|---|
-//! | `schema`, `seed`, `images`, `workers`, `cache_per_worker`, `policy`, `exec` | run configuration |
-//! | `mix` | array of `{key, weight}` request-mix entries |
-//! | `wall_s`, `throughput_img_s` | wall clock and completed images/s |
-//! | `p50_ms`, `p99_ms`, `mean_ms` | end-to-end request latency |
-//! | `mean_batch_size`, `batches` | batcher behaviour |
-//! | `completed`, `failed` | request outcomes |
-//! | `cache_hits`, `cache_misses`, `cache_hit_rate` | warm-engine reuse |
-//! | `reload_words_loaded`, `reload_words_saved` | weight/scaler/bias RAM words paid vs avoided |
-//! | `sim_cycles` | simulated accelerator cycles across all requests |
-//! | `per_key` | array of `{key, completed, failed, mean_ms, max_ms, sim_cycles}` |
-//!
-//! Non-finite floats serialize as `null` (the CI gate treats that as a
-//! failure). Future PRs appending fields must keep existing ones stable —
-//! this schema is the contract `ci.yml`'s `serve-bench` job checks.
+//! The report schema (`barvinn.bench_serve/v1`, including the streamed
+//! pipeline fields `streamed_frames` / `pipeline_occupancy` /
+//! `sim_serial_fps` / `sim_streamed_fps`) is documented field by field in
+//! `docs/BENCH_SCHEMAS.md` — the contract `ci.yml`'s `serve-bench` job
+//! gates on. Non-finite floats serialize as `null` (CI treats that as a
+//! failure); future PRs may append fields but must keep existing ones
+//! stable.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
     BatcherConfig, Fleet, FleetConfig, InferenceResponse, KeyedEngine, KeyedEngineFactory,
-    ModelKey, PerKeySnapshot, RoutingPolicy,
+    ModelKey, PerKeySnapshot, RoutingPolicy, StreamStats,
 };
 use crate::exec::ExecMode;
 use crate::model::zoo::{self, Rng};
 use crate::session::{InferenceSession, SessionBuilder};
 use crate::sim::Tensor3;
+use crate::CLOCK_HZ;
 
 /// Report schema identifier; bump the suffix on breaking changes.
 pub const SCHEMA: &str = "barvinn.bench_serve/v1";
@@ -82,54 +70,96 @@ pub fn parse_mix(s: &str) -> Result<Vec<MixEntry>, String> {
 /// f32 (bit-exact across backends and routing policies — the determinism
 /// the mixed-precision acceptance test pins).
 ///
+/// A whole batch executes through [`InferenceSession::run_batch`], so
+/// key-homogeneous fleet batches keep up to 8 frames in flight across the
+/// MVU stages; the per-batch fill/steady/drain accounting accumulates
+/// here and drains to the fleet metrics via
+/// [`Engine::take_stream_stats`] (streamed outputs are bit-identical to
+/// the serial path, so this changes throughput accounting, never logits).
+///
 /// [`Engine`]: crate::coordinator::Engine
+/// [`Engine::take_stream_stats`]: crate::coordinator::Engine::take_stream_stats
 pub struct SessionEngine {
     session: InferenceSession,
     ci: usize,
     h: usize,
     w: usize,
     amax: i32,
+    stats: StreamStats,
 }
 
 impl SessionEngine {
     pub fn new(session: InferenceSession) -> Self {
         let l0 = &session.model().layers[0];
         let (ci, h, w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
-        SessionEngine { session, ci, h, w, amax }
+        SessionEngine { session, ci, h, w, amax, stats: StreamStats::default() }
     }
 }
 
 impl crate::coordinator::Engine for SessionEngine {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
-        images
-            .iter()
-            .map(|img| {
-                let want = self.ci * self.h * self.w;
-                if img.len() != want {
-                    return Err(format!(
-                        "image has {} values, model wants {want} ({}x{}x{})",
-                        img.len(),
-                        self.ci,
-                        self.h,
-                        self.w
-                    ));
-                }
-                let input = Tensor3 {
-                    c: self.ci,
-                    h: self.h,
-                    w: self.w,
-                    data: img.iter().map(|&v| (v as i32).clamp(0, self.amax)).collect(),
-                };
-                self.session
-                    .run(&input)
-                    .map(|out| {
+        let want = self.ci * self.h * self.w;
+        let mut results: Vec<Option<Result<(Vec<f32>, u64), String>>> =
+            images.iter().map(|_| None).collect();
+        // Shape-check first; only well-formed images enter the stream.
+        let mut tensors = Vec::with_capacity(images.len());
+        let mut slots = Vec::with_capacity(images.len());
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != want {
+                results[i] = Some(Err(format!(
+                    "image has {} values, model wants {want} ({}x{}x{})",
+                    img.len(),
+                    self.ci,
+                    self.h,
+                    self.w
+                )));
+                continue;
+            }
+            tensors.push(Tensor3 {
+                c: self.ci,
+                h: self.h,
+                w: self.w,
+                data: img.iter().map(|&v| (v as i32).clamp(0, self.amax)).collect(),
+            });
+            slots.push(i);
+        }
+        if !tensors.is_empty() {
+            match self.session.run_batch(&tensors) {
+                Ok(streamed) => {
+                    let s = streamed.stream;
+                    // Only genuinely pipelined batches count as streamed:
+                    // the distributed-mode fallback runs serially
+                    // (stages == 1) and must not report occupancy 1.0.
+                    if s.stages > 1 {
+                        self.stats.add(&StreamStats::from(&s));
+                    }
+                    for (&i, out) in slots.iter().zip(streamed.outputs) {
                         let logits: Vec<f32> =
                             out.output.data.iter().map(|&v| v as f32).collect();
-                        (logits, out.total_mvu_cycles)
-                    })
-                    .map_err(|e| e.to_string())
-            })
+                        results[i] = Some(Ok((logits, out.total_mvu_cycles)));
+                    }
+                }
+                Err(e) => {
+                    // A batch-level failure answers every frame in it.
+                    let msg = e.to_string();
+                    for &i in &slots {
+                        results[i] = Some(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every image answered exactly once"))
             .collect()
+    }
+
+    fn take_stream_stats(&mut self) -> Option<StreamStats> {
+        if self.stats.frames == 0 {
+            None
+        } else {
+            Some(std::mem::take(&mut self.stats))
+        }
     }
 }
 
@@ -213,6 +243,17 @@ pub struct BenchReport {
     pub reload_words_loaded: u64,
     pub reload_words_saved: u64,
     pub sim_cycles: u64,
+    /// Frames that executed through the streamed pipeline (batches of ≥1
+    /// well-formed image on pipelined/multi-pass tenants).
+    pub streamed_frames: u64,
+    /// Fraction of streamed stage-cycle slots doing useful work.
+    pub pipeline_occupancy: f64,
+    /// Simulated FPS the serial one-image-at-a-time path (the PR-4
+    /// serving baseline) would sustain on the streamed frames, at 250 MHz.
+    pub sim_serial_fps: f64,
+    /// Simulated FPS of the streamed pipeline on the same frames — the CI
+    /// gate requires ≥2× `sim_serial_fps` on a pipelined mix.
+    pub sim_streamed_fps: f64,
     pub per_key: Vec<PerKeySnapshot>,
 }
 
@@ -280,7 +321,9 @@ impl BenchReport {
              \"mean_ms\": {},\n  \"mean_batch_size\": {},\n  \"batches\": {},\n  \
              \"completed\": {},\n  \"failed\": {},\n  \"cache_hits\": {},\n  \
              \"cache_misses\": {},\n  \"cache_hit_rate\": {},\n  \"reload_words_loaded\": {},\n  \
-             \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"per_key\": [{}]\n}}\n",
+             \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"streamed_frames\": {},\n  \
+             \"pipeline_occupancy\": {},\n  \"sim_serial_fps\": {},\n  \
+             \"sim_streamed_fps\": {},\n  \"per_key\": [{}]\n}}\n",
             json_str(self.schema),
             self.seed,
             self.images,
@@ -304,6 +347,10 @@ impl BenchReport {
             self.reload_words_loaded,
             self.reload_words_saved,
             self.sim_cycles,
+            self.streamed_frames,
+            json_num(self.pipeline_occupancy),
+            json_num(self.sim_serial_fps),
+            json_num(self.sim_streamed_fps),
             per_key.join(", ")
         )
     }
@@ -414,6 +461,10 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
         reload_words_loaded: snap.reload_words_loaded,
         reload_words_saved: snap.reload_words_saved,
         sim_cycles: snap.sim_cycles,
+        streamed_frames: snap.streamed_frames,
+        pipeline_occupancy: snap.pipeline_occupancy(),
+        sim_serial_fps: snap.sim_serial_fps(CLOCK_HZ),
+        sim_streamed_fps: snap.sim_streamed_fps(CLOCK_HZ),
         per_key: snap.per_key,
     })
 }
@@ -486,6 +537,10 @@ mod tests {
             reload_words_loaded: 1000,
             reload_words_saved: 1000,
             sim_cycles: 12345,
+            streamed_frames: 8,
+            pipeline_occupancy: 0.75,
+            sim_serial_fps: 1250.0,
+            sim_streamed_fps: 6000.0,
             per_key: vec![],
         };
         let json = report.to_json();
@@ -496,6 +551,10 @@ mod tests {
             "\"policy\": \"affinity\"",
             "\"exec\": \"turbo\"",
             "\"mix\": [{\"key\": \"resnet9:2:2:auto\"",
+            "\"streamed_frames\": 8",
+            "\"pipeline_occupancy\": 0.75",
+            "\"sim_serial_fps\": 1250",
+            "\"sim_streamed_fps\": 6000",
             "\"per_key\": []",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");

@@ -11,20 +11,43 @@
 //! between images — the warm-weight hot path measured in
 //! `rust/benches/hotpath.rs`.
 //!
+//! The README Quickstart, as a compiling doctest (`cargo test --doc` keeps
+//! it honest):
+//!
 //! ```no_run
 //! use barvinn::codegen::EdgePolicy;
 //! use barvinn::model::zoo;
 //! use barvinn::session::SessionBuilder;
 //! use barvinn::sim::Tensor3;
 //!
-//! let model = zoo::resnet9_cifar10(2, 2);
+//! # fn main() -> Result<(), barvinn::session::SessionError> {
+//! // build: compile the model and make weights resident (any precision).
+//! let model = zoo::resnet9_cifar10(/*abits=*/2, /*wbits=*/2);
 //! let mut session = SessionBuilder::new(model)
-//!     .edge_policy(EdgePolicy::PadInRam)
-//!     .build()
-//!     .expect("compile");
+//!     .edge_policy(EdgePolicy::PadInRam) // or SkipEdges (Table-3-exact)
+//!     .fuel(50_000_000)                  // per-run cycle budget
+//!     .build()?;                         // Err(SessionError::Compile(..)) on bad models
+//!
+//! // run: warm per-image hot path.
 //! let input = Tensor3::zeros(64, 32, 32);
-//! let out = session.run(&input).expect("inference");
-//! println!("{} MVU cycles", out.total_mvu_cycles);
+//! let out = session.run(&input)?;        // Err(FuelExhausted / Fault / Deadlock / Launch)
+//! println!("{} MVU cycles, {} system cycles", out.total_mvu_cycles, out.system_cycles);
+//!
+//! // stream: a batch with up to 8 frames in flight across the MVU stages.
+//! let batch: Vec<Tensor3> = (0..8).map(|_| Tensor3::zeros(64, 32, 32)).collect();
+//! let streamed = session.run_stream(&batch)?;
+//! println!("streaming speedup over serial: {:.2}x", streamed.stream.speedup());
+//!
+//! // metrics: cumulative across the session.
+//! let m = session.metrics();
+//! println!(
+//!     "{} images, serial {:.0} / streamed {:.0} FPS at 250 MHz",
+//!     m.images,
+//!     m.serial_fps_at(barvinn::CLOCK_HZ),
+//!     m.streamed_fps_at(barvinn::CLOCK_HZ),
+//! );
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! With an [`ArtifactStore`], the session also owns the PJRT host prologue
@@ -53,11 +76,22 @@
 //! this is the run-time-programmability trade the paper makes against
 //! per-model bitstream regeneration.
 //!
+//! **Streamed batches** (§3.1.6 dataflow): [`InferenceSession::run_stream`]
+//! / [`InferenceSession::run_batch`] execute a batch with one frame per MVU
+//! stage in flight over double-buffered activation regions — bit-identical
+//! per-frame outputs, steady-state throughput set by the bottleneck stage
+//! instead of the whole chain (the gap between
+//! [`crate::perf::cycle_model::fps_pipelined`] and what serial `run` can
+//! reach). Multi-pass sessions stream within each pass and amortise the
+//! per-pass weight reload over the batch. See [`StreamMetrics`] for the
+//! fill/steady/drain accounting and `docs/ARCHITECTURE.md` for the
+//! dataflow diagram.
+//!
 //! All failure paths surface as the typed [`SessionError`] — no stringly
 //! errors, no panicking asserts on [`SystemExit`].
 
 use crate::accel::{System, SystemConfig, SystemExit};
-use crate::exec::ExecMode;
+use crate::exec::{ExecMode, StreamSchedule};
 use crate::codegen::program::{CompiledModel, LayerPlan};
 use crate::codegen::schedule::{DistributedPlan, MultiPassPlan};
 use crate::codegen::{
@@ -348,10 +382,13 @@ impl SessionBuilder {
             sys,
             host,
             fuel: self.fuel,
+            mvu_cfg: self.mvu,
             images_run: 0,
             total_mvu_cycles: 0,
             total_system_cycles: 0,
             total_bottleneck_cycles: 0,
+            streamed_images: 0,
+            total_pipeline_cycles: 0,
         })
     }
 }
@@ -414,6 +451,13 @@ pub struct SessionMetrics {
     /// runs sum the bottleneck of every pass (the lap model behind
     /// [`crate::perf::cycle_model::fps_pipelined`]).
     pub total_bottleneck_cycles: u64,
+    /// Images that executed through the streamed pipeline
+    /// ([`InferenceSession::run_stream`]) with up to 8 frames in flight.
+    pub streamed_images: u64,
+    /// Modelled wall cycles (fill + steady + drain) of every streamed
+    /// batch, summed. `streamed_images / total_pipeline_cycles` is the
+    /// *achieved* streamed rate, including fill/drain overhead.
+    pub total_pipeline_cycles: u64,
 }
 
 impl SessionMetrics {
@@ -426,17 +470,138 @@ impl SessionMetrics {
         }
     }
 
-    /// Steady-state FPS estimate at `clock_hz`: a pipelined run is bounded
-    /// by its slowest stage (a distributed run by its slowest chunk), so
-    /// the per-image cost is the mean *bottleneck* MVU's cycles, not the
-    /// work-conserving mean over the array.
-    pub fn fps_at(&self, clock_hz: u64) -> f64 {
+    /// FPS the serial one-image-at-a-time path actually achieves at
+    /// `clock_hz`: each `run()` walks the whole chain before the next
+    /// image enters, so the per-image cost is the mean *total* MVP cycles.
+    pub fn serial_fps_at(&self, clock_hz: u64) -> f64 {
+        if self.images == 0 || self.total_mvu_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz as f64 / (self.total_mvu_cycles as f64 / self.images as f64)
+    }
+
+    /// Achieved FPS of the streamed batches at `clock_hz`: frames divided
+    /// by the modelled batch wall cycles (fill + steady-state bottleneck
+    /// laps + drain). 0 when nothing streamed. Sits between
+    /// [`Self::serial_fps_at`] and [`Self::steady_state_fps_bound_at`],
+    /// approaching the bound as batches grow.
+    pub fn streamed_fps_at(&self, clock_hz: u64) -> f64 {
+        if self.streamed_images == 0 || self.total_pipeline_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz as f64 / (self.total_pipeline_cycles as f64 / self.streamed_images as f64)
+    }
+
+    /// Steady-state FPS *bound* of the pipeline at `clock_hz`: one frame
+    /// per bottleneck lap (a distributed run: per slowest chunk) — the
+    /// lap model of [`crate::perf::cycle_model::fps_pipelined`]. Serial
+    /// execution never reaches it; streamed batches approach it as fill
+    /// and drain amortise.
+    pub fn steady_state_fps_bound_at(&self, clock_hz: u64) -> f64 {
         if self.images == 0 || self.total_bottleneck_cycles == 0 {
             return 0.0;
         }
         clock_hz as f64 / (self.total_bottleneck_cycles as f64 / self.images as f64)
     }
+
+    /// The pre-streaming "FPS estimate". Deprecated as ambiguous: it
+    /// reported the steady-state *bound* while execution was serial — the
+    /// number bench-serve could never measure. Pick the explicit one:
+    /// [`Self::serial_fps_at`] (what `run()` achieves),
+    /// [`Self::streamed_fps_at`] (what batches achieve) or
+    /// [`Self::steady_state_fps_bound_at`] (the lap-model bound).
+    #[deprecated(
+        since = "0.1.0",
+        note = "ambiguous: use serial_fps_at, streamed_fps_at or steady_state_fps_bound_at"
+    )]
+    pub fn fps_at(&self, clock_hz: u64) -> f64 {
+        self.steady_state_fps_bound_at(clock_hz)
+    }
 }
+
+/// Cycle accounting of one streamed batch: the fill + steady-state + drain
+/// lap model ([`StreamSchedule`]), plus what the serial path would have
+/// paid — the measured counterpart of
+/// [`crate::perf::cycle_model::fps_pipelined`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StreamMetrics {
+    /// Frames in the batch.
+    pub frames: u64,
+    /// Pipeline stages frames flowed through — the maximum frames in
+    /// flight (multi-pass: the widest pass).
+    pub stages: usize,
+    /// Cycles spent filling the pipeline (leading stages idle).
+    pub fill_cycles: u64,
+    /// Steady-state cycles: every stage busy, one frame retiring per
+    /// bottleneck lap.
+    pub steady_cycles: u64,
+    /// Cycles draining the pipeline after the last frame entered.
+    pub drain_cycles: u64,
+    /// `fill + steady + drain` — modelled wall cycles for the batch
+    /// (multi-pass: summed over passes).
+    pub pipeline_cycles: u64,
+    /// Steady-state cost per frame: the bottleneck stage's cycles
+    /// (multi-pass: per-pass bottlenecks summed).
+    pub bottleneck_cycles: u64,
+    /// What serial `run()` would cost for the same frames: per-frame MVP
+    /// totals, summed.
+    pub serial_cycles: u64,
+    /// Wall cycles the system clock actually advanced executing the batch.
+    /// Equals `pipeline_cycles` under turbo laps; the cycle-accurate
+    /// backend adds short crossbar-drain tails between laps.
+    pub measured_cycles: u64,
+}
+
+impl StreamMetrics {
+    /// Achieved streamed FPS at `clock_hz` (includes fill/drain overhead).
+    pub fn streamed_fps_at(&self, clock_hz: u64) -> f64 {
+        if self.frames == 0 || self.pipeline_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz as f64 * self.frames as f64 / self.pipeline_cycles as f64
+    }
+
+    /// What the serial path would have achieved on the same frames.
+    pub fn serial_fps_at(&self, clock_hz: u64) -> f64 {
+        if self.frames == 0 || self.serial_cycles == 0 {
+            return 0.0;
+        }
+        clock_hz as f64 * self.frames as f64 / self.serial_cycles as f64
+    }
+
+    /// Streaming speedup over serial execution (1.0 when degenerate).
+    pub fn speedup(&self) -> f64 {
+        if self.pipeline_cycles == 0 {
+            return 1.0;
+        }
+        self.serial_cycles as f64 / self.pipeline_cycles as f64
+    }
+
+    /// Fraction of stage-cycle slots doing useful work:
+    /// `serial_cycles / (pipeline_cycles · stages)`. 1.0 means a perfectly
+    /// balanced, fully occupied pipeline; fill/drain and stage imbalance
+    /// pull it down.
+    pub fn occupancy(&self) -> f64 {
+        let slots = self.pipeline_cycles.saturating_mul(self.stages as u64);
+        if slots == 0 {
+            return 0.0;
+        }
+        self.serial_cycles as f64 / slots as f64
+    }
+}
+
+/// Result of one streamed batch: per-frame outputs (bit-identical to what
+/// serial [`InferenceSession::run`] would produce, in submission order)
+/// plus the batch-level pipeline accounting.
+#[derive(Debug, Clone)]
+pub struct StreamOutput {
+    pub outputs: Vec<RunOutput>,
+    pub stream: StreamMetrics,
+}
+
+/// Per-frame `(output tensor, per-stage MVP cycles)` pairs, in frame
+/// order — the raw currency of the streaming drivers below.
+type FrameResults = Vec<(Tensor3, Vec<u64>)>;
 
 /// A warm, weight-resident inference session over the simulated
 /// accelerator. See the [module docs](self) for the lifecycle.
@@ -447,12 +612,19 @@ pub struct InferenceSession {
     host: Option<HostPipeline>,
     /// The image-level cycle budget from the builder. Multi-pass runs
     /// re-arm the system's remaining fuel before each pass, so this keeps
-    /// the original budget for error reporting.
+    /// the original budget for error reporting; streamed batches scale it
+    /// by the frame count.
     fuel: u64,
+    /// The memory geometry the session was built for — streamed batches
+    /// re-check capacity against it (double buffering needs twice the
+    /// activation footprint serial execution does).
+    mvu_cfg: MvuConfig,
     images_run: u64,
     total_mvu_cycles: u64,
     total_system_cycles: u64,
     total_bottleneck_cycles: u64,
+    streamed_images: u64,
+    total_pipeline_cycles: u64,
 }
 
 impl InferenceSession {
@@ -540,6 +712,8 @@ impl InferenceSession {
             total_mvu_cycles: self.total_mvu_cycles,
             total_system_cycles: self.total_system_cycles,
             total_bottleneck_cycles: self.total_bottleneck_cycles,
+            streamed_images: self.streamed_images,
+            total_pipeline_cycles: self.total_pipeline_cycles,
         }
     }
 
@@ -585,6 +759,9 @@ impl InferenceSession {
         input: &Tensor3,
     ) -> Result<(Tensor3, Vec<u64>, u64, u64), SessionError> {
         self.sys.reset_run_state();
+        // Re-arm the per-image budget: a preceding streamed batch ran the
+        // system under the whole-batch cap (`fuel × frames`).
+        self.sys.set_max_cycles(self.fuel);
         match &self.program {
             Program::Pipelined(c) => c.load_input(&mut self.sys, input),
             Program::Distributed(p) => p.load_input(&mut self.sys, input),
@@ -667,6 +844,123 @@ impl InferenceSession {
             }
         }
         unreachable!("compile_multi_pass guarantees at least one pass")
+    }
+
+    /// Run a batch of images through the array with up to 8 frames in
+    /// flight — the streamed pipeline of §3.1.6 that the paper's
+    /// throughput headline assumes.
+    ///
+    /// Pipelined sessions keep one frame per MVU stage: while stage `k`
+    /// processes frame `i`, stage `k−1` already processes frame `i+1`,
+    /// over double-buffered activation regions (even frames in buffer 0,
+    /// odd in buffer 1) so in-flight frames never clobber each other.
+    /// Multi-pass sessions stream the whole batch *within* each pass — a
+    /// further win: each pass's weights are reloaded once per batch
+    /// instead of once per image. Distributed sessions have nothing to
+    /// overlap (one frame occupies the whole array) and fall back to the
+    /// serial loop.
+    ///
+    /// Per-frame outputs are **bit-identical** to serial [`Self::run`] in
+    /// both execution backends, in submission order — concurrent stages
+    /// touch disjoint frames and buffers, and every lap ends with the
+    /// crossbar drained. Per-frame [`RunOutput::mvu_cycles`] books the
+    /// same per-layer counts as serial runs; the batch-level fill +
+    /// steady-state + drain wall model lives in [`StreamOutput::stream`]
+    /// (`RunOutput::system_cycles` of a streamed frame is its own MVP
+    /// total — frames share the wall clock, so per-frame wall time is not
+    /// meaningful). The session's fuel budget scales with the batch:
+    /// `fuel × frames` cycles for the whole stream.
+    ///
+    /// Streaming needs twice the activation footprint of serial execution;
+    /// a model that fits serially but cannot double-buffer fails with a
+    /// typed [`CompileError::StreamOverlap`] / `CapacityExceeded` before
+    /// touching the array.
+    pub fn run_stream(&mut self, inputs: &[Tensor3]) -> Result<StreamOutput, SessionError> {
+        if inputs.is_empty() {
+            return Ok(StreamOutput { outputs: Vec::new(), stream: StreamMetrics::default() });
+        }
+        if matches!(self.program, Program::Distributed(_)) {
+            return self.run_stream_serial(inputs);
+        }
+        let exec = self.sys.exec_mode();
+        let fuel = self.fuel;
+        let (raw, stream) = match &self.program {
+            Program::Pipelined(c) => {
+                c.check_fits_streamed(&self.mvu_cfg)?;
+                self.sys.reset_run_state();
+                self.sys.set_max_cycles(fuel.saturating_mul(inputs.len() as u64));
+                let co = self.model.layers.last().unwrap().co;
+                let (mut raw, stream) = stream_compiled(&mut self.sys, c, inputs, co, fuel)?;
+                // Serial pipelined runs report one entry per MVU (trailing
+                // zeros for unused stages); match that shape bit-for-bit.
+                for (_, cycles) in &mut raw {
+                    cycles.resize(crate::NUM_MVUS, 0);
+                }
+                (raw, stream)
+            }
+            Program::MultiPass(p) => {
+                p.check_fits_streamed(&self.mvu_cfg)?;
+                stream_multi_pass(&mut self.sys, p, &self.model, inputs, fuel)?
+            }
+            Program::Distributed(_) => unreachable!("serial fallback handled above"),
+        };
+        let mut outputs = Vec::with_capacity(raw.len());
+        for (output, mvu_cycles) in raw {
+            let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
+            outputs.push(RunOutput {
+                output,
+                mvu_cycles,
+                total_mvu_cycles,
+                system_cycles: total_mvu_cycles,
+                image_index: self.images_run,
+                exec,
+            });
+            self.images_run += 1;
+            self.total_mvu_cycles += total_mvu_cycles;
+            self.total_bottleneck_cycles += stream.bottleneck_cycles;
+        }
+        self.total_system_cycles += stream.measured_cycles;
+        self.streamed_images += stream.frames;
+        self.total_pipeline_cycles += stream.pipeline_cycles;
+        Ok(StreamOutput { outputs, stream })
+    }
+
+    /// Serving-facing alias of [`Self::run_stream`]: the coordinator's
+    /// key-homogeneous batches execute through this path (see
+    /// `perf::serve_bench::SessionEngine`).
+    pub fn run_batch(&mut self, inputs: &[Tensor3]) -> Result<StreamOutput, SessionError> {
+        self.run_stream(inputs)
+    }
+
+    /// Distributed-mode fallback: no pipeline to stream (a single frame
+    /// already occupies all 8 MVUs), so the batch runs serially; the
+    /// stream accounting degenerates to `pipeline == serial` (speedup 1),
+    /// which keeps the serving telemetry honest. Serial `run` updates the
+    /// session counters itself, and no streamed counters are booked.
+    fn run_stream_serial(&mut self, inputs: &[Tensor3]) -> Result<StreamOutput, SessionError> {
+        let bottleneck0 = self.total_bottleneck_cycles;
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut serial = 0u64;
+        let mut measured = 0u64;
+        for input in inputs {
+            let out = self.run(input)?;
+            serial += out.total_mvu_cycles;
+            measured += out.system_cycles;
+            outputs.push(out);
+        }
+        let frames = inputs.len() as u64;
+        let stream = StreamMetrics {
+            frames,
+            stages: 1,
+            fill_cycles: 0,
+            steady_cycles: serial,
+            drain_cycles: 0,
+            pipeline_cycles: serial,
+            bottleneck_cycles: (self.total_bottleneck_cycles - bottleneck0) / frames,
+            serial_cycles: serial,
+            measured_cycles: measured,
+        };
+        Ok(StreamOutput { outputs, stream })
     }
 
     /// Run one raw f32 image through host prologue → MVU array → host
@@ -793,6 +1087,126 @@ fn drive_distributed_turbo(
     Ok(())
 }
 
+/// Stream one pipelined pass over `inputs` with one frame per stage in
+/// flight. The caller has reset run state, made weights resident and armed
+/// `sys.max_cycles()` with the batch's remaining fuel.
+///
+/// Per lap `t` of the [`StreamSchedule`]: the entering frame (if any) is
+/// DMA'd into MVU 0's buffer `t % 2`, every active stage `k` replays its
+/// job stream for frame `t − k` out of that frame's buffer parity via
+/// [`System::run_lap`] (concurrent under both backends), and the retiring
+/// frame — the one that just left the last stage — is read back from its
+/// output buffer before that buffer's next reuse two laps later. Returns
+/// per-frame `(output, per-stage cycles)` in frame order plus the batch
+/// accounting.
+fn stream_compiled(
+    sys: &mut System,
+    c: &CompiledModel,
+    inputs: &[Tensor3],
+    out_co: usize,
+    fuel_report: u64,
+) -> Result<(FrameResults, StreamMetrics), SessionError> {
+    let stages = c.plans.len();
+    let frames = inputs.len();
+    let sched = StreamSchedule::new(c.stage_cycles(), frames);
+    let cap = sys.max_cycles();
+    let mut per_frame: Vec<Vec<u64>> = vec![vec![0; stages]; frames];
+    let mut raw: FrameResults = Vec::with_capacity(frames);
+    let mut measured = 0u64;
+    for lap in 0..sched.laps() {
+        if lap < frames {
+            c.load_input_parity(sys, &inputs[lap], lap % 2);
+        }
+        let active = sched.active(lap);
+        let mut work: Vec<(usize, &[JobConfig])> = Vec::with_capacity(active.len());
+        let mut track: Vec<(usize, usize, usize, u64)> = Vec::with_capacity(active.len());
+        for &(k, f) in &active {
+            let plan = c.stage_plan(k, f % 2);
+            track.push((k, f, plan.mvu, sys.mvus[plan.mvu].busy_cycles()));
+            work.push((plan.mvu, plan.jobs.as_slice()));
+        }
+        measured += sys.run_lap(&work).map_err(|e| SessionError::Launch(vec![e]))?;
+        if sys.cycles() >= cap {
+            return Err(SessionError::FuelExhausted { fuel: fuel_report });
+        }
+        for (k, f, m, before) in track {
+            let booked = sys.mvus[m].busy_cycles() - before;
+            // Cross-check: streamed laps book exactly the analytic
+            // per-layer cycles — Table-3/Table-5 accounting is invariant
+            // to how many frames are in flight.
+            debug_assert_eq!(booked, c.plans[k].analytic_cycles, "stage {k} frame {f}");
+            per_frame[f][k] = booked;
+        }
+        if lap + 1 >= stages {
+            let f = lap + 1 - stages;
+            let out = c.read_output_parity(sys, out_co, f % 2);
+            raw.push((out, std::mem::take(&mut per_frame[f])));
+        }
+    }
+    let cyc = sched.cycles();
+    let stream = StreamMetrics {
+        frames: frames as u64,
+        stages,
+        fill_cycles: cyc.fill,
+        steady_cycles: cyc.steady,
+        drain_cycles: cyc.drain,
+        pipeline_cycles: cyc.total(),
+        bottleneck_cycles: sched.bottleneck_cycles(),
+        serial_cycles: sched.serial_cycles_per_frame() * frames as u64,
+        measured_cycles: measured,
+    };
+    Ok((raw, stream))
+}
+
+/// Stream a batch through a multi-pass program: per pass, reset run state,
+/// re-arm the *remaining* batch fuel, reload that pass's weights and
+/// program **once for the whole batch** (serial multi-pass pays the reload
+/// per image — batching amortises the §3.1.6 lap cost by the batch size),
+/// then stream every frame through the pass's ≤8 stages, carrying each
+/// frame's output tensor to the next pass. Accounting sums the per-pass
+/// fill/steady/drain model; per-frame layer cycles concatenate across
+/// passes in model order.
+fn stream_multi_pass(
+    sys: &mut System,
+    plan: &MultiPassPlan,
+    model: &Model,
+    inputs: &[Tensor3],
+    fuel_report: u64,
+) -> Result<(FrameResults, StreamMetrics), SessionError> {
+    let frames = inputs.len();
+    let cap = fuel_report.saturating_mul(frames as u64);
+    let mut spent = 0u64;
+    let mut carried: Vec<Tensor3> = inputs.to_vec();
+    let mut layer_cycles: Vec<Vec<u64>> = vec![Vec::new(); frames];
+    let mut agg = StreamMetrics { frames: frames as u64, ..Default::default() };
+    for (p, pass) in plan.passes.iter().enumerate() {
+        if spent >= cap {
+            return Err(SessionError::FuelExhausted { fuel: fuel_report });
+        }
+        sys.reset_run_state();
+        sys.set_max_cycles(cap - spent);
+        pass.load_weights(sys);
+        let (_, end) = plan.ranges[p];
+        let co = model.layers[end - 1].co;
+        let (outs, s) = stream_compiled(sys, pass, &carried, co, fuel_report)?;
+        spent += sys.cycles();
+        agg.stages = agg.stages.max(s.stages);
+        agg.fill_cycles += s.fill_cycles;
+        agg.steady_cycles += s.steady_cycles;
+        agg.drain_cycles += s.drain_cycles;
+        agg.pipeline_cycles += s.pipeline_cycles;
+        agg.bottleneck_cycles += s.bottleneck_cycles;
+        agg.serial_cycles += s.serial_cycles;
+        agg.measured_cycles += s.measured_cycles;
+        carried = Vec::with_capacity(frames);
+        for (f, (out, cycles)) in outs.into_iter().enumerate() {
+            layer_cycles[f].extend(cycles);
+            carried.push(out);
+        }
+    }
+    Ok((carried.into_iter().zip(layer_cycles).collect(), agg))
+}
+
 /// A session slots straight into the serving coordinator: one engine per
 /// worker thread, each owning its own warm system (PJRT executables are
 /// thread-affine, so sessions are built inside the worker's
@@ -878,7 +1292,23 @@ mod tests {
         // FPS estimate is finite and positive.
         assert!(metrics.total_bottleneck_cycles > 0);
         assert!(metrics.total_bottleneck_cycles <= metrics.total_mvu_cycles);
-        assert!(metrics.fps_at(crate::CLOCK_HZ) > 0.0);
+        assert!(metrics.serial_fps_at(crate::CLOCK_HZ) > 0.0);
+        // The serial rate can never beat the steady-state lap bound.
+        assert!(
+            metrics.serial_fps_at(crate::CLOCK_HZ)
+                <= metrics.steady_state_fps_bound_at(crate::CLOCK_HZ)
+        );
+        // Nothing streamed yet: the streamed rate reports 0, and the
+        // deprecated alias still answers with the old (bound) model.
+        assert_eq!(metrics.streamed_images, 0);
+        assert_eq!(metrics.streamed_fps_at(crate::CLOCK_HZ), 0.0);
+        #[allow(deprecated)]
+        {
+            assert_eq!(
+                metrics.fps_at(crate::CLOCK_HZ),
+                metrics.steady_state_fps_bound_at(crate::CLOCK_HZ)
+            );
+        }
     }
 
     #[test]
@@ -1230,6 +1660,200 @@ mod tests {
             Err(SessionError::Artifact(RuntimeError::Missing(_))) => {}
             other => panic!("expected Artifact(Missing), got {:?}", other.err()),
         }
+    }
+
+    /// The tentpole property at unit scale: a streamed batch (frames in
+    /// flight across the MVU stages, double-buffered regions) is
+    /// bit-identical to serial `run` per frame — outputs *and* per-layer
+    /// cycle accounting — under both execution backends, while the batch
+    /// wall model beats serial execution.
+    #[test]
+    fn streamed_batch_matches_serial_bit_for_bit() {
+        let m = tiny_resnet9();
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut serial = SessionBuilder::new(m.clone()).exec_mode(exec).build().unwrap();
+            let mut streamed = SessionBuilder::new(m.clone()).exec_mode(exec).build().unwrap();
+            let inputs: Vec<Tensor3> = (0..4).map(|s| random_input(&m, 100 + s)).collect();
+            let batch = streamed.run_stream(&inputs).unwrap();
+            assert_eq!(batch.outputs.len(), 4);
+            for (i, input) in inputs.iter().enumerate() {
+                let want = serial.run(input).unwrap();
+                let got = &batch.outputs[i];
+                assert_eq!(got.output, want.output, "{exec:?}: frame {i} output");
+                assert_eq!(got.mvu_cycles, want.mvu_cycles, "{exec:?}: frame {i} cycles");
+                assert_eq!(got.image_index, i as u64, "{exec:?}");
+            }
+            let s = &batch.stream;
+            assert_eq!(s.frames, 4);
+            assert_eq!(s.stages, m.layers.len());
+            assert_eq!(s.pipeline_cycles, s.fill_cycles + s.steady_cycles + s.drain_cycles);
+            assert!(s.bottleneck_cycles * 4 <= s.serial_cycles);
+            assert!(s.speedup() > 1.5, "{exec:?}: speedup {}", s.speedup());
+            assert!(s.occupancy() > 0.0 && s.occupancy() <= 1.0, "{exec:?}");
+            match exec {
+                // Turbo laps advance the clock by exactly the modelled
+                // pipeline; the stepper adds short crossbar-drain tails.
+                ExecMode::Turbo => assert_eq!(s.measured_cycles, s.pipeline_cycles),
+                ExecMode::CycleAccurate => assert!(s.measured_cycles >= s.pipeline_cycles),
+            }
+            let metrics = streamed.metrics();
+            assert_eq!(metrics.images, 4);
+            assert_eq!(metrics.streamed_images, 4);
+            assert_eq!(metrics.total_pipeline_cycles, s.pipeline_cycles);
+            // streamed sits strictly between achieved-serial and the
+            // steady-state bound.
+            let hz = crate::CLOCK_HZ;
+            assert!(metrics.streamed_fps_at(hz) > metrics.serial_fps_at(hz), "{exec:?}");
+            assert!(
+                metrics.streamed_fps_at(hz) <= metrics.steady_state_fps_bound_at(hz),
+                "{exec:?}"
+            );
+        }
+    }
+
+    /// Streaming a deep model: frames stream within each pass, outputs and
+    /// per-layer cycles stay bit-identical to serial multi-pass runs.
+    #[test]
+    fn streamed_multi_pass_matches_serial() {
+        let m = tiny_deep_model(10);
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut serial = SessionBuilder::new(m.clone())
+                .mode(ExecutionMode::MultiPass)
+                .exec_mode(exec)
+                .build()
+                .unwrap();
+            let mut streamed = SessionBuilder::new(m.clone())
+                .mode(ExecutionMode::MultiPass)
+                .exec_mode(exec)
+                .build()
+                .unwrap();
+            let inputs: Vec<Tensor3> = (0..3).map(|s| random_input(&m, 40 + s)).collect();
+            let batch = streamed.run_stream(&inputs).unwrap();
+            for (i, input) in inputs.iter().enumerate() {
+                let want = serial.run(input).unwrap();
+                let got = &batch.outputs[i];
+                assert_eq!(got.output, want.output, "{exec:?}: frame {i}");
+                assert_eq!(got.mvu_cycles, want.mvu_cycles, "{exec:?}: frame {i}");
+                assert_eq!(got.mvu_cycles.len(), m.layers.len(), "{exec:?}: per *layer*");
+            }
+            let s = &batch.stream;
+            assert_eq!(s.frames, 3);
+            assert_eq!(s.stages, crate::NUM_MVUS, "widest pass");
+            // Two passes: the per-frame steady-state cost sums both
+            // pass bottlenecks — the streamed version of the lap model.
+            let per_layer = crate::codegen::layer_cycles(&m.layers[0], EdgePolicy::PadInRam);
+            assert_eq!(s.bottleneck_cycles, 2 * per_layer, "uniform layers: one per pass");
+            assert!(s.speedup() > 1.0, "{exec:?}: {}", s.speedup());
+        }
+    }
+
+    /// Streamed fuel is a batch budget (`fuel × frames`), honoured across
+    /// laps and passes with the usual typed error.
+    #[test]
+    fn streamed_fuel_exhausts_typed() {
+        let m = tiny_resnet9();
+        let inputs: Vec<Tensor3> = (0..3).map(|s| random_input(&m, s as u64)).collect();
+        let mut starved = SessionBuilder::new(m.clone()).fuel(500).build().unwrap();
+        assert_eq!(
+            starved.run_stream(&inputs).unwrap_err(),
+            SessionError::FuelExhausted { fuel: 500 }
+        );
+        // A budget that covers the whole batch succeeds.
+        let per_image: u64 = m
+            .layers
+            .iter()
+            .map(|l| crate::codegen::layer_cycles(l, EdgePolicy::PadInRam))
+            .sum();
+        let mut fed = SessionBuilder::new(m).fuel(per_image + 1).build().unwrap();
+        assert_eq!(fed.run_stream(&inputs).unwrap().outputs.len(), 3);
+    }
+
+    /// Streaming needs double the activation footprint: a geometry where
+    /// the model runs serially but cannot double-buffer yields a typed
+    /// capacity error from `run_stream`, and serial `run` keeps working.
+    #[test]
+    fn streamed_capacity_checked_lazily() {
+        let m = tiny_resnet9();
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        let need = |plans: &[LayerPlan]| -> usize {
+            plans
+                .iter()
+                .map(|p| {
+                    let a = p.in_layout.base + p.in_layout.size_words();
+                    let b = p.out_layout.base + p.out_layout.size_words();
+                    a.max(b) as usize
+                })
+                .max()
+                .unwrap()
+        };
+        let serial_need = need(&c.plans);
+        let stream_need = need(&c.stream_plans);
+        assert!(stream_need > serial_need, "double buffering must cost more");
+        let cfg = crate::mvu::MvuConfig { act_depth: stream_need - 1, ..Default::default() };
+        let mut session = SessionBuilder::new(m.clone()).mvu_config(cfg).build().unwrap();
+        let input = random_input(&m, 1);
+        session.run(&input).unwrap();
+        match session.run_stream(std::slice::from_ref(&input)) {
+            Err(SessionError::Compile(CompileError::CapacityExceeded {
+                resource: "activation",
+                ..
+            })) => {}
+            other => panic!(
+                "expected activation CapacityExceeded, got {:?}",
+                other.err().map(|e| e.to_string())
+            ),
+        }
+        // The session survives the rejected stream.
+        session.run(&input).unwrap();
+    }
+
+    /// Degenerate batches: empty input is a no-op; a single frame streams
+    /// with pipeline == serial-shaped fill/drain accounting but identical
+    /// output; distributed sessions fall back to the serial loop.
+    #[test]
+    fn streamed_edge_cases() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m.clone()).build().unwrap();
+        let empty = session.run_stream(&[]).unwrap();
+        assert!(empty.outputs.is_empty());
+        assert_eq!(empty.stream, StreamMetrics::default());
+        assert_eq!(session.metrics().images, 0);
+
+        let input = random_input(&m, 9);
+        let one = session.run_stream(std::slice::from_ref(&input)).unwrap();
+        assert_eq!(one.outputs.len(), 1);
+        assert_eq!(one.stream.pipeline_cycles, one.stream.serial_cycles);
+        let mut serial = SessionBuilder::new(m.clone()).build().unwrap();
+        assert_eq!(one.outputs[0].output, serial.run(&input).unwrap().output);
+        // Indices continue across run() and run_stream() interleavings.
+        let next = session.run(&input).unwrap();
+        assert_eq!(next.image_index, 1);
+
+        // Distributed: serial fallback, honest degenerate accounting.
+        let full = resnet9_cifar10(2, 2);
+        let mut layer = full.layers[5].clone();
+        layer.in_h = 8;
+        layer.in_w = 8;
+        let single = Model {
+            name: "one-layer".into(),
+            layers: vec![layer.clone()],
+            host_prologue: None,
+            host_epilogue: None,
+        };
+        let mut dist = SessionBuilder::new(single)
+            .mode(ExecutionMode::Distributed)
+            .build()
+            .unwrap();
+        let mut rng = Rng(11);
+        let din = Tensor3::from_fn(layer.ci, layer.in_h, layer.in_w, |_, _, _| {
+            rng.range_i32(0, 3)
+        });
+        let batch = dist.run_stream(&[din.clone(), din.clone()]).unwrap();
+        assert_eq!(batch.outputs.len(), 2);
+        assert_eq!(batch.stream.stages, 1);
+        assert_eq!(batch.stream.pipeline_cycles, batch.stream.serial_cycles);
+        assert!((batch.stream.speedup() - 1.0).abs() < 1e-12);
+        assert_eq!(dist.metrics().streamed_images, 0, "fallback books no streamed frames");
     }
 
     /// Every variant is constructible and displays a readable message.

@@ -101,7 +101,7 @@ fn deep_session_reuse_stays_bit_exact() {
     let metrics = session.metrics();
     assert_eq!(metrics.images, 3);
     assert!(metrics.total_bottleneck_cycles <= metrics.total_mvu_cycles);
-    assert!(metrics.fps_at(barvinn::CLOCK_HZ) > 0.0);
+    assert!(metrics.serial_fps_at(barvinn::CLOCK_HZ) > 0.0);
 }
 
 /// Executed multi-pass cycles reproduce the analytic `cycle_model`

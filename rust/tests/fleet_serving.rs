@@ -164,6 +164,77 @@ fn affinity_routing_saves_reloads_with_bit_identical_logits() {
     );
 }
 
+/// The PR-5 tentpole acceptance at fleet scale: a single-tenant pipelined
+/// batch executes through the streamed pipeline (frames in flight across
+/// the MVU stages) — ≥2× simulated throughput over the serial path under
+/// **both** execution backends, with logits bit-identical to a serial
+/// session run image by image (asserted here, not just benched).
+#[test]
+fn streamed_batches_double_throughput_with_identical_logits() {
+    for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+        let reloads = Arc::new(Mutex::new(HashMap::new()));
+        let mut fleet = Fleet::new(
+            tiny_factory(exec, Arc::clone(&reloads)),
+            FleetConfig {
+                workers: 1,
+                cache_per_worker: 1,
+                // One 6-frame key group = the 6-stage pipeline fully
+                // occupied; the long wait keeps the batch whole.
+                batch: BatcherConfig { max_batch: 6, max_wait: Duration::from_millis(500) },
+                policy: RoutingPolicy::Affinity,
+            },
+        );
+        let key = ModelKey::new("tiny9", 2, 2, ExecutionMode::Auto);
+        let imgs: Vec<Vec<f32>> = (0..6u64)
+            .map(|i| {
+                let mut rng = Rng(0xBEEF + i);
+                (0..64 * 16 * 16).map(|_| rng.range_i32(0, 3) as f32).collect()
+            })
+            .collect();
+        // Submit the whole batch before waiting so the batcher can form
+        // one full key group.
+        let rxs: Vec<_> =
+            imgs.iter().map(|img| fleet.submit(key.clone(), img.clone())).collect();
+        fleet.flush();
+        let mut logits = Vec::new();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+            assert_eq!(resp.error, None, "{exec:?}: request {i}");
+            logits.push(resp.logits);
+        }
+        let snap = fleet.metrics().snapshot();
+        fleet.shutdown();
+
+        assert_eq!(snap.streamed_frames, 6, "{exec:?}");
+        let occ = snap.pipeline_occupancy();
+        assert!(occ > 0.0 && occ <= 1.0, "{exec:?}: occupancy {occ}");
+        let hz = barvinn::CLOCK_HZ;
+        assert!(
+            snap.sim_streamed_fps(hz) >= 2.0 * snap.sim_serial_fps(hz),
+            "{exec:?}: streamed {:.0} FPS must be ≥2× serial {:.0} FPS",
+            snap.sim_streamed_fps(hz),
+            snap.sim_serial_fps(hz)
+        );
+
+        // Bit-identical to a serial session, frame by frame.
+        let model = tiny_resnet9(2, 2);
+        let mut serial = SessionBuilder::new(model.clone()).exec_mode(exec).build().unwrap();
+        let l0 = &model.layers[0];
+        let (ci, h, w) = (l0.ci, l0.in_h, l0.in_w);
+        for (i, (img, got)) in imgs.iter().zip(&logits).enumerate() {
+            let input = barvinn::sim::Tensor3 {
+                c: ci,
+                h,
+                w,
+                data: img.iter().map(|&v| v as i32).collect(),
+            };
+            let want: Vec<f32> =
+                serial.run(&input).unwrap().output.data.iter().map(|&v| v as f32).collect();
+            assert_eq!(got, &want, "{exec:?}: frame {i} logits differ from serial");
+        }
+    }
+}
+
 /// The two tenants really are different programs: same image, different
 /// precision → different logits (guards against the workload degenerating
 /// into one tenant twice, which would void the affinity comparison).
@@ -197,7 +268,39 @@ fn bench_serve_pipeline_emits_valid_report() {
     assert_eq!(report.failed, 0);
     assert!(report.throughput_img_s > 0.0);
     assert!(report.p99_ms.is_finite());
+    assert_eq!(report.streamed_frames, 6, "all frames execute via the streamed path");
+    assert!(report.pipeline_occupancy > 0.0 && report.pipeline_occupancy <= 1.0);
     let json = report.to_json();
     assert!(json.contains("\"schema\": \"barvinn.bench_serve/v1\""));
+    assert!(json.contains("\"pipeline_occupancy\""));
     assert!(!json.contains("null"), "no non-finite metrics in a healthy run");
+}
+
+/// The acceptance criterion on the real zoo: `bench-serve` with a
+/// single-tenant pipelined mix at a fixed seed shows ≥2× simulated
+/// throughput over the PR-4 serial path. Release-only (full 32×32
+/// ResNet-9 batches); CI additionally gates the binary's report via jq.
+#[test]
+#[cfg(not(debug_assertions))]
+fn bench_serve_single_tenant_pipelined_mix_doubles_throughput() {
+    use barvinn::perf::serve_bench::{parse_mix, run_bench, BenchConfig};
+    let cfg = BenchConfig {
+        seed: 42,
+        images: 16,
+        workers: 1,
+        cache_per_worker: 1,
+        mix: parse_mix("resnet9:2:2=1").unwrap(),
+        batch: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(500) },
+        ..Default::default()
+    };
+    let report = run_bench(&cfg).expect("bench runs");
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.streamed_frames, 16);
+    assert!(
+        report.sim_streamed_fps >= 2.0 * report.sim_serial_fps,
+        "streamed {:.0} FPS must be ≥2× serial {:.0} FPS (occupancy {:.2})",
+        report.sim_streamed_fps,
+        report.sim_serial_fps,
+        report.pipeline_occupancy
+    );
 }

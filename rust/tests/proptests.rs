@@ -447,6 +447,58 @@ fn turbo_and_cycle_accurate_backends_agree() {
     }
 }
 
+/// Random linear 64-channel conv chain at constant spatial size `h` (3×3,
+/// stride 1, pad 1): per-layer random 1–8-bit precisions chaining through
+/// `oprec → next aprec`, random ReLU, and a quant window wide enough that
+/// accumulators never saturate surprisingly. Shared by the multi-pass and
+/// the streamed-execution property tests.
+fn random_chain_model(rng: &mut Rng, case: u64, depth: usize, h: usize) -> barvinn::model::Model {
+    let mut a_bits = 1 + (rng.next_u64() % 8) as u8;
+    let mut layers = Vec::with_capacity(depth);
+    for i in 0..depth {
+        let w_bits = 1 + (rng.next_u64() % 8) as u8;
+        let o_bits = 1 + (rng.next_u64() % 8) as u8;
+        let aprec = Precision::u(a_bits);
+        let wprec = Precision::s(w_bits);
+        let max_acc = (64 * 9) as i64
+            * aprec.max_value() as i64
+            * wprec.min_value().unsigned_abs() as i64;
+        let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
+        layers.push(ConvLayer {
+            name: format!("c{case}l{i}"),
+            ci: 64,
+            co: 64,
+            fh: 3,
+            fw: 3,
+            stride: 1,
+            pad: 1,
+            in_h: h,
+            in_w: h,
+            aprec,
+            wprec,
+            oprec: Precision::u(o_bits),
+            relu: rng.next_u64() % 2 == 0,
+            weights: (0..64 * 64 * 9)
+                .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+                .collect(),
+            quant: QuantSpec {
+                scale: (0..64).map(|_| rng.range_i32(1, 4) as u16).collect(),
+                bias: (0..64).map(|_| rng.range_i32(-64, 64)).collect(),
+                quant_msb: msb,
+            },
+        });
+        a_bits = o_bits;
+    }
+    let model = barvinn::model::Model {
+        name: format!("prop-depth-{depth}"),
+        layers,
+        host_prologue: None,
+        host_epilogue: None,
+    };
+    model.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+    model
+}
+
 /// The multi-pass acceptance property: random-depth models (1–20 layers,
 /// random 1–8-bit precisions per layer) served through the session's
 /// depth-resolving `Auto` mode agree bit-for-bit with `sim::golden` and
@@ -457,58 +509,13 @@ fn turbo_and_cycle_accurate_backends_agree() {
 #[test]
 fn random_depth_models_agree_with_golden_across_backends() {
     use barvinn::exec::ExecMode;
-    use barvinn::model::Model;
     use barvinn::session::{ExecutionMode, SessionBuilder};
 
     let mut rng = Rng(0xDEE9);
     let (cases, h) = if cfg!(debug_assertions) { (2, 4usize) } else { (6, 6usize) };
     for case in 0..cases {
         let depth = 1 + (rng.next_u64() % 20) as usize;
-        // Linear 64-channel chain at constant spatial size (3×3, stride 1,
-        // pad 1); per-layer precisions chain through oprec → next aprec.
-        let mut a_bits = 1 + (rng.next_u64() % 8) as u8;
-        let mut layers = Vec::with_capacity(depth);
-        for i in 0..depth {
-            let w_bits = 1 + (rng.next_u64() % 8) as u8;
-            let o_bits = 1 + (rng.next_u64() % 8) as u8;
-            let aprec = Precision::u(a_bits);
-            let wprec = Precision::s(w_bits);
-            let max_acc = (64 * 9) as i64
-                * aprec.max_value() as i64
-                * wprec.min_value().unsigned_abs() as i64;
-            let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
-            layers.push(ConvLayer {
-                name: format!("c{case}l{i}"),
-                ci: 64,
-                co: 64,
-                fh: 3,
-                fw: 3,
-                stride: 1,
-                pad: 1,
-                in_h: h,
-                in_w: h,
-                aprec,
-                wprec,
-                oprec: Precision::u(o_bits),
-                relu: rng.next_u64() % 2 == 0,
-                weights: (0..64 * 64 * 9)
-                    .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
-                    .collect(),
-                quant: QuantSpec {
-                    scale: (0..64).map(|_| rng.range_i32(1, 4) as u16).collect(),
-                    bias: (0..64).map(|_| rng.range_i32(-64, 64)).collect(),
-                    quant_msb: msb,
-                },
-            });
-            a_bits = o_bits;
-        }
-        let model = Model {
-            name: format!("prop-depth-{depth}"),
-            layers,
-            host_prologue: None,
-            host_epilogue: None,
-        };
-        model.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let model = random_chain_model(&mut rng, case, depth, h);
 
         let l0 = &model.layers[0];
         let input = Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
@@ -550,6 +557,89 @@ fn random_depth_models_agree_with_golden_across_backends() {
         // Backends agree bit-for-bit, per-entry cycles included.
         assert_eq!(runs[0].output, runs[1].output, "case {case}");
         assert_eq!(runs[0].mvu_cycles, runs[1].mvu_cycles, "case {case}");
+    }
+}
+
+/// The streamed-execution acceptance property: a batch run with up to 8
+/// frames in flight across the MVU stages (`run_stream`, double-buffered
+/// activation regions) is **bit-identical** to serial `run` — per-frame
+/// outputs *and* per-layer (Table-3/Table-5-style) cycle counts — across
+/// random 1–8-bit per-layer precisions, depths 2–8 and both execution
+/// backends; and the batch's modelled pipeline wall never exceeds the
+/// serial cost.
+#[test]
+fn streamed_and_serial_execution_agree_across_precisions_and_depths() {
+    use barvinn::exec::ExecMode;
+    use barvinn::session::SessionBuilder;
+
+    let mut rng = Rng(0x57AE);
+    let (cases, h, frames) =
+        if cfg!(debug_assertions) { (3u64, 4usize, 3usize) } else { (10, 6, 4) };
+    for case in 0..cases {
+        let depth = 2 + (rng.next_u64() % 7) as usize; // 2..=8: one pipelined pass
+        let model = random_chain_model(&mut rng, 1000 + case, depth, h);
+        let l0 = &model.layers[0];
+        let inputs: Vec<Tensor3> = (0..frames)
+            .map(|_| {
+                Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+                    rng.range_i32(0, l0.aprec.max_value())
+                })
+            })
+            .collect();
+        let per_layer: Vec<u64> = model
+            .layers
+            .iter()
+            .map(|l| layer_cycles(l, EdgePolicy::PadInRam))
+            .collect();
+
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut serial = SessionBuilder::new(model.clone())
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(exec)
+                .build()
+                .unwrap_or_else(|e| panic!("case {case} ({exec:?}): {e}"));
+            let mut streamed = SessionBuilder::new(model.clone())
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(exec)
+                .build()
+                .unwrap();
+            let batch = streamed
+                .run_stream(&inputs)
+                .unwrap_or_else(|e| panic!("case {case} depth {depth} ({exec:?}): {e}"));
+            assert_eq!(batch.outputs.len(), frames, "case {case} ({exec:?})");
+            for (f, input) in inputs.iter().enumerate() {
+                let want = serial.run(input).unwrap();
+                let got = &batch.outputs[f];
+                assert_eq!(
+                    got.output, want.output,
+                    "case {case} depth {depth} frame {f} ({exec:?}): streamed != serial"
+                );
+                assert_eq!(
+                    got.mvu_cycles, want.mvu_cycles,
+                    "case {case} frame {f} ({exec:?}): per-layer cycles"
+                );
+                // Per-layer counts are the analytic Table-3-style formula.
+                for (k, &c) in per_layer.iter().enumerate() {
+                    assert_eq!(
+                        got.mvu_cycles[k], c,
+                        "case {case} frame {f} layer {k} ({exec:?})"
+                    );
+                }
+                // Third reference: the plain-integer golden model.
+                assert_eq!(got.output, model.golden_forward(input), "case {case} frame {f}");
+            }
+            let s = &batch.stream;
+            assert_eq!(s.stages, depth, "case {case}");
+            assert_eq!(s.serial_cycles, per_layer.iter().sum::<u64>() * frames as u64);
+            assert!(
+                s.pipeline_cycles <= s.serial_cycles,
+                "case {case} ({exec:?}): streaming must never cost more than serial"
+            );
+            assert!(
+                s.pipeline_cycles >= s.bottleneck_cycles * frames as u64,
+                "case {case} ({exec:?}): cannot beat one frame per bottleneck lap"
+            );
+        }
     }
 }
 

@@ -1,0 +1,39 @@
+#!/usr/bin/env sh
+# Fail on dangling *relative* markdown links in README.md and docs/*.md.
+# Deliberately dependency-free (POSIX sh + grep/sed) so CI needs nothing
+# beyond a checkout; run from the repo root.
+#
+# Checked: inline links/images `[text](target)` whose target is not an
+# absolute URL or a pure fragment. Optional markdown titles
+# (`[x](path "Title")`) and fragments (`docs/FOO.md#sec`) are stripped
+# before the existence check. Targets are read line-wise, so paths with
+# spaces are handled.
+set -u
+
+tmp=$(mktemp)
+trap 'rm -f "$tmp"' EXIT
+
+for f in README.md docs/*.md; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//' |
+        while IFS= read -r link; do
+            case "$link" in
+            http://* | https://* | mailto:*) continue ;;
+            '#'*) continue ;;
+            esac
+            target=${link%% \"*}
+            target=${target%%#*}
+            [ -n "$target" ] || continue
+            if [ ! -e "$dir/$target" ]; then
+                echo "dangling link in $f: $link" >&2
+                echo fail >>"$tmp"
+            fi
+        done
+done
+
+if [ -s "$tmp" ]; then
+    echo "docs-links: FAILED (fix the targets above or update the link)" >&2
+    exit 1
+fi
+echo "docs-links: OK"
