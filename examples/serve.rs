@@ -74,6 +74,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let resident_words = session.resident_words();
             Ok(KeyedEngine { engine: Box::new(session) as Box<dyn Engine>, resident_words })
         });
+    // Per-tenant latency SLO for the attainment report: requests answered
+    // within this budget count as attained (`--slo-p99-ms N` to adjust).
+    let slo_ms: u64 = args
+        .iter()
+        .position(|a| a == "--slo-p99-ms")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
     let mut fleet = Fleet::new(
         factory,
         FleetConfig {
@@ -81,8 +89,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             cache_per_worker: 2,
             batch: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
             policy: RoutingPolicy::Affinity,
+            // Bounded admission: a burst beyond this depth sheds with a
+            // typed overload error instead of queueing without limit.
+            queue_depth: 1024,
         },
     );
+    fleet.metrics().set_slo_target_us(slo_ms * 1000);
 
     println!(
         "serving {n} requests for tenant {key} over {workers} workers \
@@ -139,11 +151,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     for pk in &snap.per_key {
         println!(
-            "  {}: {} ok, mean {:.1} ms, max {:.1} ms",
+            "  {}: {} ok, {} shed, mean {:.1} ms, p99 {:.1} ms, max {:.1} ms \
+             — SLO ≤{slo_ms} ms attained {:.0}%",
             pk.key,
             pk.completed,
+            pk.shed,
             pk.mean_us / 1e3,
-            pk.max_us as f64 / 1e3
+            pk.p99_us as f64 / 1e3,
+            pk.max_us as f64 / 1e3,
+            pk.slo_attainment() * 100.0
         );
     }
     println!(

@@ -45,7 +45,8 @@ use crate::session::ExecutionMode;
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::Router;
-use super::server::{Engine, InferenceRequest, InferenceResponse};
+use super::server::{Engine, InferenceRequest, InferenceResponse, ResponseError};
+use super::slo::{SloController, SloPolicy, SwitchKind, TenantSlo};
 
 /// Identity of one serving tenant: which compiled command stream + RAM
 /// images serve its requests. Two requests share a warm engine iff their
@@ -97,6 +98,9 @@ impl std::str::FromStr for ModelKey {
             return Err(format!(
                 "bad model key '{s}' (want model:wbits:abits[:mode], e.g. resnet9:4:4)"
             ));
+        }
+        if parts[0].is_empty() {
+            return Err(format!("empty model name in model key '{s}'"));
         }
         let bits = |what: &str, v: &str| -> Result<u8, String> {
             v.parse::<u8>().map_err(|_| format!("bad {what} '{v}' in model key '{s}'"))
@@ -258,6 +262,12 @@ pub struct FleetConfig {
     pub cache_per_worker: usize,
     pub batch: BatcherConfig,
     pub policy: RoutingPolicy,
+    /// Bounded per-worker admission queue: a submit that would leave more
+    /// than this many requests in flight on its routed worker is shed with
+    /// a typed [`ResponseError::Overload`] instead of enqueued (shed,
+    /// don't OOM — and the shed doubles as the [`SloController`]'s
+    /// overload signal). 0 disables the bound.
+    pub queue_depth: usize,
 }
 
 impl Default for FleetConfig {
@@ -267,6 +277,7 @@ impl Default for FleetConfig {
             cache_per_worker: 2,
             batch: BatcherConfig::default(),
             policy: RoutingPolicy::Affinity,
+            queue_depth: 1024,
         }
     }
 }
@@ -289,13 +300,38 @@ pub struct Fleet {
     joins: Vec<JoinHandle<()>>,
     next_id: u64,
     policy: RoutingPolicy,
+    queue_depth: usize,
+    /// Present on an adaptive fleet: rewrites keys at admission, observes
+    /// completion latencies from worker threads. Time unit: microseconds
+    /// since `epoch`.
+    slo: Option<Arc<SloController>>,
+    epoch: Instant,
 }
 
 impl Fleet {
     pub fn new(factory: KeyedEngineFactory, cfg: FleetConfig) -> Self {
+        Self::build(factory, cfg, None)
+    }
+
+    /// A precision-adaptive fleet: requests for tenants with a registered
+    /// [`SloPolicy`] are rewritten at admission to the tenant's current
+    /// precision-ladder rung, which the [`SloController`] moves to hold
+    /// each tenant's p99 target (µs). Everything else behaves like
+    /// [`Fleet::new`].
+    pub fn new_adaptive(
+        factory: KeyedEngineFactory,
+        cfg: FleetConfig,
+        policies: Vec<(ModelKey, SloPolicy)>,
+    ) -> Result<Self, String> {
+        let slo = Arc::new(SloController::new(policies)?);
+        Ok(Self::build(factory, cfg, Some(slo)))
+    }
+
+    fn build(factory: KeyedEngineFactory, cfg: FleetConfig, slo: Option<Arc<SloController>>) -> Self {
         assert!(cfg.workers >= 1);
         let router = Arc::new(Router::new(cfg.workers));
         let metrics = Arc::new(Metrics::default());
+        let epoch = Instant::now();
         let mut senders = Vec::new();
         let mut joins = Vec::new();
         for w in 0..cfg.workers {
@@ -303,18 +339,39 @@ impl Fleet {
             let router2 = Arc::clone(&router);
             let metrics2 = Arc::clone(&metrics);
             let factory2 = Arc::clone(&factory);
+            let slo2 = slo.clone();
             let cache_cap = cfg.cache_per_worker;
             let batch_cfg = cfg.batch;
             let join = std::thread::Builder::new()
                 .name(format!("barvinn-fleet-{w}"))
                 .spawn(move || {
-                    worker_loop(w, rx, factory2, cache_cap, batch_cfg, &router2, &metrics2)
+                    worker_loop(
+                        w,
+                        rx,
+                        factory2,
+                        cache_cap,
+                        batch_cfg,
+                        &router2,
+                        &metrics2,
+                        slo2.as_deref(),
+                        epoch,
+                    )
                 })
                 .expect("spawn fleet worker");
             senders.push(tx);
             joins.push(join);
         }
-        Fleet { router, metrics, senders, joins, next_id: 0, policy: cfg.policy }
+        Fleet {
+            router,
+            metrics,
+            senders,
+            joins,
+            next_id: 0,
+            policy: cfg.policy,
+            queue_depth: cfg.queue_depth,
+            slo,
+            epoch,
+        }
     }
 
     pub fn workers(&self) -> usize {
@@ -325,17 +382,54 @@ impl Fleet {
         self.policy
     }
 
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Per-tenant SLO state (None on a non-adaptive fleet).
+    pub fn slo_snapshot(&self) -> Option<Vec<TenantSlo>> {
+        self.slo.as_ref().map(|c| c.snapshot(self.now_us()))
+    }
+
     /// Submit one image for tenant `key`; returns a receiver for the
-    /// response. Routing follows the fleet's [`RoutingPolicy`].
+    /// response. On an adaptive fleet the key's precision is first
+    /// rewritten to the tenant's current ladder rung. Routing follows the
+    /// fleet's [`RoutingPolicy`]; if the routed worker already has
+    /// `queue_depth` requests in flight the request is shed immediately
+    /// with a typed [`ResponseError::Overload`] instead of enqueued.
     pub fn submit(&mut self, key: ModelKey, image: Vec<f32>) -> mpsc::Receiver<InferenceResponse> {
         let id = self.next_id;
         self.next_id += 1;
+        let key = match &self.slo {
+            Some(ctl) => ctl.admit(&key, self.now_us()),
+            None => key,
+        };
         let worker = match self.policy {
             RoutingPolicy::Affinity => self.router.route_affine(&key).0,
             RoutingPolicy::LeastLoaded => self.router.route(),
         };
         self.metrics.on_submit();
         let (tx, rx) = mpsc::channel();
+        if self.queue_depth > 0 && self.router.load(worker) > self.queue_depth as u64 {
+            // Routing already claimed an in-flight slot; give it back —
+            // this request never reaches the worker.
+            self.router.complete(worker);
+            self.metrics.on_shed_keyed(&key);
+            if let Some(ctl) = &self.slo {
+                if let Some(ev) = ctl.on_shed(&key, self.now_us()) {
+                    self.metrics.on_precision_switch(ev.kind == SwitchKind::Degrade);
+                }
+            }
+            let _ = tx.send(InferenceResponse {
+                id,
+                key,
+                logits: Vec::new(),
+                sim_cycles: 0,
+                worker,
+                error: Some(ResponseError::Overload { worker, depth: self.queue_depth }),
+            });
+            return rx;
+        }
         self.senders[worker]
             .send(FleetMsg::Run(InferenceRequest { id, key, image }, tx, Instant::now()))
             .expect("fleet worker alive");
@@ -369,6 +463,7 @@ impl Fleet {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
     rx: mpsc::Receiver<FleetMsg>,
@@ -377,6 +472,8 @@ fn worker_loop(
     batch_cfg: BatcherConfig,
     router: &Router,
     metrics: &Metrics,
+    slo: Option<&SloController>,
+    epoch: Instant,
 ) {
     let mut cache = SessionCache::new(cache_cap);
     let mut batcher = Batcher::new(batch_cfg);
@@ -409,7 +506,18 @@ fn worker_loop(
             // Deadline expired: only due batches flush.
             None => (false, false),
         };
-        run_due(w, force, &mut batcher, &mut cache, &mut replies, &factory, router, metrics);
+        run_due(
+            w,
+            force,
+            &mut batcher,
+            &mut cache,
+            &mut replies,
+            &factory,
+            router,
+            metrics,
+            slo,
+            epoch,
+        );
         if stop {
             break;
         }
@@ -428,6 +536,8 @@ fn run_due(
     factory: &KeyedEngineFactory,
     router: &Router,
     metrics: &Metrics,
+    slo: Option<&SloController>,
+    epoch: Instant,
 ) {
     let batches = if force {
         batcher.drain_all()
@@ -460,7 +570,17 @@ fn run_due(
                     // worker survives to serve other tenants.
                     let msg = format!("engine build failed for {key}: {e}");
                     for req in batch.requests {
-                        answer(replies, router, metrics, w, &key, req.id, Err(msg.clone()));
+                        answer(
+                            replies,
+                            router,
+                            metrics,
+                            slo,
+                            epoch,
+                            w,
+                            &key,
+                            req.id,
+                            Err(msg.clone()),
+                        );
                     }
                     continue;
                 }
@@ -477,17 +597,20 @@ fn run_due(
             metrics.on_stream(&stats);
         }
         for (id, out) in ids.into_iter().zip(outs) {
-            answer(replies, router, metrics, w, &key, id, out);
+            answer(replies, router, metrics, slo, epoch, w, &key, id, out);
         }
     }
 }
 
-/// Answer one request: book metrics, release the router slot, send the
-/// response.
+/// Answer one request: book metrics, feed the SLO controller, release the
+/// router slot, send the response.
+#[allow(clippy::too_many_arguments)]
 fn answer(
     replies: &mut Replies,
     router: &Router,
     metrics: &Metrics,
+    slo: Option<&SloController>,
+    epoch: Instant,
     w: usize,
     key: &ModelKey,
     id: u64,
@@ -501,7 +624,14 @@ fn answer(
     router.complete(w);
     let resp = match out {
         Ok((logits, cycles)) => {
-            metrics.on_complete_keyed(key, t0.elapsed(), cycles);
+            let latency = t0.elapsed();
+            metrics.on_complete_keyed(key, latency, cycles);
+            if let Some(ctl) = slo {
+                let now_us = epoch.elapsed().as_micros() as u64;
+                if let Some(ev) = ctl.observe(key, latency.as_micros() as u64, now_us) {
+                    metrics.on_precision_switch(ev.kind == SwitchKind::Degrade);
+                }
+            }
             InferenceResponse {
                 id,
                 key: key.clone(),
@@ -519,7 +649,7 @@ fn answer(
                 logits: Vec::new(),
                 sim_cycles: 0,
                 worker: w,
-                error: Some(e),
+                error: Some(ResponseError::Engine(e)),
             }
         }
     };
@@ -577,6 +707,7 @@ mod tests {
                 cache_per_worker: 1,
                 batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
                 policy,
+                queue_depth: 0,
             },
         )
     }
@@ -691,13 +822,176 @@ mod tests {
         let good = f.submit(key("a", 1), vec![2.0]);
         f.flush();
         let bad_resp = bad.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(bad_resp.error.as_deref().unwrap().contains("engine build failed"));
+        assert!(matches!(
+            bad_resp.error,
+            Some(ResponseError::Engine(ref m)) if m.contains("engine build failed")
+        ));
         assert!(bad_resp.logits.is_empty());
         let good_resp = good.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(good_resp.error, None);
         let snap = f.metrics().snapshot();
         assert_eq!(snap.failed, 1);
         assert_eq!(snap.completed, 1);
+        f.shutdown();
+    }
+
+    /// Engine that blocks inside `infer_batch` until its gate opens —
+    /// pins the worker so admission-queue depth is deterministic.
+    struct GatedEngine {
+        gate: Arc<(Mutex<bool>, std::sync::Condvar)>,
+    }
+
+    impl Engine for GatedEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            let (lock, cvar) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cvar.wait(open).unwrap();
+            }
+            images.iter().map(|_| Ok((vec![1.0], 1))).collect()
+        }
+    }
+
+    /// Regression (satellite: bounded admission): `submit` beyond the
+    /// per-worker queue depth sheds with a typed overload error instead of
+    /// enqueuing unboundedly; queued requests still complete, and a shed
+    /// is counted as back-pressure, not failure.
+    #[test]
+    fn bounded_admission_sheds_with_typed_overload() {
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let gate2 = Arc::clone(&gate);
+        let factory: KeyedEngineFactory = Arc::new(move |_key: &ModelKey| {
+            Ok(KeyedEngine {
+                engine: Box::new(GatedEngine { gate: Arc::clone(&gate2) }),
+                resident_words: 1,
+            })
+        });
+        let mut f = Fleet::new(
+            factory,
+            FleetConfig {
+                workers: 1,
+                cache_per_worker: 1,
+                batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                policy: RoutingPolicy::Affinity,
+                queue_depth: 2,
+            },
+        );
+        let k = key("a", 1);
+        // Two requests fill the bound (the worker is gated shut, so
+        // nothing completes underneath us).
+        let rx1 = f.submit(k.clone(), vec![1.0]);
+        let rx2 = f.submit(k.clone(), vec![2.0]);
+        // The third exceeds depth 2: shed immediately with a typed error.
+        let rx3 = f.submit(k.clone(), vec![3.0]);
+        let shed = rx3.recv_timeout(Duration::from_secs(5)).unwrap();
+        match &shed.error {
+            Some(ResponseError::Overload { worker, depth }) => {
+                assert_eq!(*worker, 0);
+                assert_eq!(*depth, 2);
+            }
+            other => panic!("expected typed overload, got {other:?}"),
+        }
+        assert!(shed.error.as_ref().unwrap().is_overload());
+        assert!(shed.logits.is_empty());
+        assert_eq!(shed.sim_cycles, 0);
+        // Open the gate: the admitted requests complete normally.
+        {
+            let (lock, cvar) = &*gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+        f.flush();
+        assert_eq!(rx1.recv_timeout(Duration::from_secs(5)).unwrap().error, None);
+        assert_eq!(rx2.recv_timeout(Duration::from_secs(5)).unwrap().error, None);
+        let snap = f.metrics().snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.failed, 0, "a shed is back-pressure, not a failure");
+        assert_eq!(snap.per_key.len(), 1);
+        assert_eq!(snap.per_key[0].shed, 1);
+        f.shutdown();
+    }
+
+    /// Engine whose latency is dominated by a deliberate sleep — drives
+    /// the adaptive fleet's p99 over target deterministically.
+    struct SlowEngine {
+        wbits: u8,
+    }
+
+    impl Engine for SlowEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            std::thread::sleep(Duration::from_millis(2));
+            images
+                .iter()
+                .map(|img| {
+                    let sum: f32 = img.iter().sum();
+                    Ok((vec![sum + 1000.0 * self.wbits as f32], 10 * self.wbits as u64))
+                })
+                .collect()
+        }
+    }
+
+    /// The tentpole loop at mock scale, through the real threaded fleet:
+    /// every completion breaches the (unreachably tight) target, so the
+    /// controller walks the tenant down the ladder at admission time and
+    /// responses carry the effective (degraded) key.
+    #[test]
+    fn adaptive_fleet_degrades_under_latency_breach() {
+        let factory: KeyedEngineFactory = Arc::new(|key: &ModelKey| {
+            Ok(KeyedEngine {
+                engine: Box::new(SlowEngine { wbits: key.wbits }),
+                resident_words: 1,
+            })
+        });
+        let nominal = key("a", 8);
+        let policy = SloPolicy {
+            p99_target: 1000, // 1 ms; the engine alone takes ≥ 2 ms
+            ladder: vec![(8, 8), (4, 4), (2, 2)],
+            min_precision: (2, 2),
+            window: 8,
+            min_samples: 4,
+            dwell: 0,
+            headroom: 0.5,
+        };
+        let mut f = Fleet::new_adaptive(
+            factory,
+            FleetConfig {
+                workers: 1,
+                cache_per_worker: 3,
+                batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                policy: RoutingPolicy::Affinity,
+                queue_depth: 0,
+            },
+            vec![(nominal.clone(), policy)],
+        )
+        .unwrap();
+        // Serialized traffic: each completion is observed before the next
+        // admission, so the degrade trajectory is deterministic.
+        let mut seen_wbits = Vec::new();
+        for i in 0..12u32 {
+            let rx = f.submit(nominal.clone(), vec![i as f32]);
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.error, None);
+            // The response carries the *effective* key and the logits
+            // prove the degraded engine really served it.
+            assert_eq!(resp.logits, vec![i as f32 + 1000.0 * resp.key.wbits as f32]);
+            seen_wbits.push(resp.key.wbits);
+        }
+        assert_eq!(seen_wbits[0], 8, "starts at full precision");
+        assert!(
+            seen_wbits.windows(2).all(|w| w[1] <= w[0]),
+            "under a sustained breach precision only steps down: {seen_wbits:?}"
+        );
+        assert_eq!(*seen_wbits.last().unwrap(), 2, "reaches the floor: {seen_wbits:?}");
+        let snap = f.metrics().snapshot();
+        assert!(snap.precision_degrades >= 2, "got {}", snap.precision_degrades);
+        assert_eq!(snap.precision_restores, 0, "target is unreachable: no restore");
+        let slo = f.slo_snapshot().expect("adaptive fleet");
+        assert_eq!(slo.len(), 1);
+        assert_eq!(slo[0].tenant, nominal);
+        assert_eq!(slo[0].effective, (2, 2));
+        assert_eq!(slo[0].completed, 12);
+        assert_eq!(slo[0].attainment(), 0.0, "every completion breached");
         f.shutdown();
     }
 

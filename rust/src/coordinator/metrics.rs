@@ -64,6 +64,17 @@ pub struct Metrics {
     /// Requests that finished with a per-request engine error (the worker
     /// thread survives; see `coordinator::Engine`).
     failed: AtomicU64,
+    /// Requests shed by the bounded admission queue (typed
+    /// `ResponseError::Overload`) — back-pressure, not failure.
+    shed: AtomicU64,
+    /// SLO-controller degrade events (a tenant stepped down its precision
+    /// ladder).
+    precision_degrades: AtomicU64,
+    /// SLO-controller restore events (a tenant stepped back up).
+    precision_restores: AtomicU64,
+    /// Latency target (µs) that per-key `within_slo` counts against;
+    /// 0 = no target configured (attainment reads 1.0).
+    slo_target_us: AtomicU64,
     batches: AtomicU64,
     /// Total images across all batches (batch-size accounting).
     batch_images: AtomicU64,
@@ -92,13 +103,18 @@ pub struct Metrics {
 }
 
 /// Internal per-key accumulator.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default)]
 struct PerKeyAgg {
     completed: u64,
     failed: u64,
+    shed: u64,
+    /// Completions whose latency met the configured SLO target.
+    within_slo: u64,
     lat_sum_us: u64,
     max_us: u64,
     sim_cycles: u64,
+    /// Bounded latency sample for per-tenant percentiles.
+    latencies_us: Reservoir,
 }
 
 /// Point-in-time per-[`ModelKey`] aggregates.
@@ -107,11 +123,30 @@ pub struct PerKeySnapshot {
     pub key: ModelKey,
     pub completed: u64,
     pub failed: u64,
+    /// Requests for this key shed by the bounded admission queue.
+    pub shed: u64,
+    /// Completions whose latency met the configured SLO target (equals
+    /// `completed` when no target is set).
+    pub within_slo: u64,
     /// Exact mean latency in µs (0 when nothing completed).
     pub mean_us: f64,
     /// Worst observed latency in µs.
     pub max_us: u64,
+    /// Nearest-rank p99 latency in µs from this tenant's reservoir.
+    pub p99_us: u64,
     pub sim_cycles: u64,
+}
+
+impl PerKeySnapshot {
+    /// Fraction of this tenant's completions that met the SLO target
+    /// (1.0 when idle or when no target is configured).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.completed == 0 {
+            1.0
+        } else {
+            self.within_slo as f64 / self.completed as f64
+        }
+    }
 }
 
 /// Point-in-time snapshot.
@@ -120,6 +155,14 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests shed by the bounded admission queue.
+    pub shed: u64,
+    /// SLO-controller precision switches (down / up the ladder).
+    pub precision_degrades: u64,
+    pub precision_restores: u64,
+    /// Latency target (µs) per-key SLO attainment counts against; 0 when
+    /// no target is configured.
+    pub slo_target_us: u64,
     pub batches: u64,
     /// Total images across all batches; `batch_images / batches` is the
     /// mean batch size.
@@ -222,6 +265,28 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request was shed by the bounded admission queue (typed overload
+    /// response): counted per key and globally, separate from `failed`.
+    pub fn on_shed_keyed(&self, key: &ModelKey) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.per_key.lock().unwrap().entry(key.clone()).or_default().shed += 1;
+    }
+
+    /// The SLO controller switched a tenant's precision rung.
+    pub fn on_precision_switch(&self, degrade: bool) {
+        if degrade {
+            self.precision_degrades.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.precision_restores.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Configure the latency target per-key SLO attainment counts against
+    /// (µs; 0 clears it).
+    pub fn set_slo_target_us(&self, us: u64) {
+        self.slo_target_us.store(us, Ordering::Relaxed);
+    }
+
     /// A batch was served by a warm cached engine, avoiding a reload of
     /// `reload_words_saved` RAM words.
     pub fn on_cache_hit(&self, reload_words_saved: u64) {
@@ -248,12 +313,17 @@ impl Metrics {
     pub fn on_complete_keyed(&self, key: &ModelKey, latency: Duration, sim_cycles: u64) {
         self.on_complete(latency, sim_cycles);
         let us = latency.as_micros() as u64;
+        let target = self.slo_target_us.load(Ordering::Relaxed);
         let mut map = self.per_key.lock().unwrap();
         let agg = map.entry(key.clone()).or_default();
         agg.completed += 1;
+        if target == 0 || us <= target {
+            agg.within_slo += 1;
+        }
         agg.lat_sum_us += us;
         agg.max_us = agg.max_us.max(us);
         agg.sim_cycles += sim_cycles;
+        agg.latencies_us.push(us);
     }
 
     /// Keyed failure: global counter plus the tenant's failure count.
@@ -285,17 +355,30 @@ impl Metrics {
             .lock()
             .unwrap()
             .iter()
-            .map(|(k, a)| PerKeySnapshot {
-                key: k.clone(),
-                completed: a.completed,
-                failed: a.failed,
-                mean_us: if a.completed == 0 {
-                    0.0
+            .map(|(k, a)| {
+                let mut klats = a.latencies_us.samples.clone();
+                klats.sort_unstable();
+                let p99_us = if klats.is_empty() {
+                    0
                 } else {
-                    a.lat_sum_us as f64 / a.completed as f64
-                },
-                max_us: a.max_us,
-                sim_cycles: a.sim_cycles,
+                    let rank = ((klats.len() as f64) * 0.99).ceil() as usize;
+                    klats[rank.clamp(1, klats.len()) - 1]
+                };
+                PerKeySnapshot {
+                    key: k.clone(),
+                    completed: a.completed,
+                    failed: a.failed,
+                    shed: a.shed,
+                    within_slo: a.within_slo,
+                    mean_us: if a.completed == 0 {
+                        0.0
+                    } else {
+                        a.lat_sum_us as f64 / a.completed as f64
+                    },
+                    max_us: a.max_us,
+                    p99_us,
+                    sim_cycles: a.sim_cycles,
+                }
             })
             .collect();
         per_key.sort_by_key(|pk| pk.key.to_string());
@@ -303,6 +386,10 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
             failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            precision_degrades: self.precision_degrades.load(Ordering::Relaxed),
+            precision_restores: self.precision_restores.load(Ordering::Relaxed),
+            slo_target_us: self.slo_target_us.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batch_images: self.batch_images.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
@@ -455,6 +542,37 @@ mod tests {
         let empty = Metrics::default().snapshot();
         assert_eq!(empty.pipeline_occupancy(), 0.0);
         assert_eq!(empty.sim_streamed_fps(hz), 0.0);
+    }
+
+    /// Sheds, precision switches and SLO attainment thread through both
+    /// the global counters and the per-tenant aggregates.
+    #[test]
+    fn shed_slo_and_precision_switch_accounting() {
+        use crate::session::ExecutionMode;
+        let m = Metrics::default();
+        let k = ModelKey::new("resnet9", 8, 8, ExecutionMode::Auto);
+        m.set_slo_target_us(20);
+        m.on_complete_keyed(&k, Duration::from_micros(10), 1); // within target
+        m.on_complete_keyed(&k, Duration::from_micros(30), 1); // breach
+        m.on_shed_keyed(&k);
+        m.on_precision_switch(true);
+        m.on_precision_switch(true);
+        m.on_precision_switch(false);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.precision_degrades, 2);
+        assert_eq!(s.precision_restores, 1);
+        assert_eq!(s.slo_target_us, 20);
+        assert_eq!(s.failed, 0, "a shed is back-pressure, not a failure");
+        let pk = &s.per_key[0];
+        assert_eq!(pk.shed, 1);
+        assert_eq!(pk.within_slo, 1);
+        assert!((pk.slo_attainment() - 0.5).abs() < 1e-9);
+        assert_eq!(pk.p99_us, 30, "per-key nearest-rank p99 of 2 samples is the max");
+        // Without a configured target every completion counts as attained.
+        let m2 = Metrics::default();
+        m2.on_complete_keyed(&k, Duration::from_micros(1_000_000), 0);
+        assert!((m2.snapshot().per_key[0].slo_attainment() - 1.0).abs() < 1e-9);
     }
 
     #[test]

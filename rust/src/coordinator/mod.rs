@@ -29,13 +29,22 @@
 //! * [`Fleet`] — the multi-tenant service: each worker holds an
 //!   LRU-bounded [`SessionCache`] of warm engines keyed by [`ModelKey`],
 //!   and requests route with cache affinity (run-time programmability as
-//!   a serving architecture).
+//!   a serving architecture). [`Fleet::new_adaptive`] adds the
+//!   [`SloController`] in front of admission.
+//! * [`SloController`] — precision-adaptive SLO serving: per-tenant
+//!   latency targets plus a precision ladder; under overload the
+//!   controller rewrites effective keys down the ladder (runtime
+//!   precision as a load knob, with hysteresis), and restores on
+//!   recovery. Admission queues are bounded ([`FleetConfig::queue_depth`])
+//!   and a shed ([`ResponseError::Overload`]) is the controller's
+//!   strongest signal.
 
 mod batcher;
 mod fleet;
 mod metrics;
 mod router;
 mod server;
+mod slo;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use fleet::{
@@ -44,5 +53,7 @@ pub use fleet::{
 pub use metrics::{Metrics, MetricsSnapshot, PerKeySnapshot};
 pub use router::Router;
 pub use server::{
-    Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse, StreamStats,
+    Coordinator, Engine, EngineFactory, InferenceRequest, InferenceResponse, ResponseError,
+    StreamStats,
 };
+pub use slo::{SloController, SloPolicy, SwitchEvent, SwitchKind, SwitchTrigger, TenantSlo};

@@ -23,21 +23,55 @@ pub struct InferenceRequest {
     pub image: Vec<f32>,
 }
 
+/// Why a request was answered without logits. Typed so callers can react
+/// programmatically — an [`ResponseError::Overload`] shed is back-pressure
+/// (retry later, or the SLO controller's signal to degrade precision),
+/// while an [`ResponseError::Engine`] failure is a per-request fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResponseError {
+    /// The admission queue for the routed worker was full and the request
+    /// was shed at submit time (bounded queue: shed, don't OOM). `depth`
+    /// is the configured per-worker admission-queue bound.
+    Overload { worker: usize, depth: usize },
+    /// The engine reported a per-request build/run failure. The worker
+    /// thread and every other queued request on it survive.
+    Engine(String),
+}
+
+impl ResponseError {
+    pub fn is_overload(&self) -> bool {
+        matches!(self, ResponseError::Overload { .. })
+    }
+}
+
+impl std::fmt::Display for ResponseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResponseError::Overload { worker, depth } => {
+                write!(f, "overloaded: worker {worker} admission queue full (depth {depth})")
+            }
+            ResponseError::Engine(e) => f.write_str(e),
+        }
+    }
+}
+
 /// Completed inference.
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
-    /// The tenant that served this request (echoed from the submission).
+    /// The tenant that served this request (echoed from the submission —
+    /// under an adaptive fleet this is the *effective* key the SLO
+    /// controller admitted, which may sit lower on the precision ladder
+    /// than the key submitted).
     pub key: ModelKey,
     /// Classifier logits; empty when `error` is set.
     pub logits: Vec<f32>,
     /// Simulated accelerator cycles consumed by this request (0 on error).
     pub sim_cycles: u64,
     pub worker: usize,
-    /// Per-request engine failure (rendered typed error). A failed request
-    /// is answered — the worker thread and every other queued request on
-    /// it survive.
-    pub error: Option<String>,
+    /// Per-request failure. A failed request is answered — the worker
+    /// thread and every other queued request on it survive.
+    pub error: Option<ResponseError>,
 }
 
 /// Streaming telemetry an engine accumulated since it was last asked:
@@ -209,7 +243,7 @@ impl Coordinator {
                                                 logits: Vec::new(),
                                                 sim_cycles: 0,
                                                 worker: w,
-                                                error: Some(e),
+                                                error: Some(ResponseError::Engine(e)),
                                             }
                                         }
                                     };
@@ -390,7 +424,7 @@ mod tests {
         assert_eq!(good.logits, vec![3.0]);
 
         let bad = poisoned.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert_eq!(bad.error.as_deref(), Some("malformed image"));
+        assert_eq!(bad.error, Some(ResponseError::Engine("malformed image".into())));
         assert!(bad.logits.is_empty());
         assert_eq!(bad.sim_cycles, 0);
 

@@ -1,0 +1,676 @@
+//! Precision-adaptive SLO control: runtime precision as a load knob.
+//!
+//! The paper's headline claim is that one accelerator build serves DNNs at
+//! *any* quantization level with runtime programmability — switching
+//! precision means switching command streams and RAM images, not
+//! bitstreams. [`SloController`] closes the serving loop on that claim:
+//! each tenant declares a latency target and a **precision ladder**
+//! (e.g. `8:8 → 4:4 → 2:2`), and the controller rewrites the effective
+//! [`ModelKey`] at admission time — stepping *down* the ladder when the
+//! windowed p99 breaches the target (or requests are shed on overload),
+//! and stepping back *up* with hysteresis once latency recovers, so the
+//! controller doesn't flap.
+//!
+//! The rest of the serving stack already makes a precision switch cheap:
+//! [`super::SessionCache`] keeps warm lower-precision variants resident
+//! (a degrade is a cache hit, not a rebuild), affinity routing keeps
+//! ladder variants co-located, and the key-homogeneous
+//! [`super::Batcher`] means a switch lands exactly at a batch boundary.
+//!
+//! The controller is **unit-agnostic**: `now` and latencies are plain
+//! `u64`s in whatever unit the caller measures (the threaded [`super::Fleet`]
+//! feeds wall-clock microseconds; the deterministic open-loop bench in
+//! `crate::perf::slo_bench` feeds simulated accelerator cycles). Targets,
+//! dwell times and reported percentiles are in that same unit.
+//!
+//! One SLO tenant is identified by `(model, mode)` — the wbits/abits of an
+//! incoming key are *owned* by the controller, which maps them to the
+//! current ladder rung. The accuracy cost of running degraded is measured,
+//! not hidden: see `crate::model::zoo::accuracy_proxy`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::session::ExecutionMode;
+
+use super::fleet::ModelKey;
+
+/// Per-tenant service-level objective and the precision ladder the
+/// controller may walk to hold it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloPolicy {
+    /// Windowed-p99 latency target, in the caller's unit (µs for the
+    /// threaded fleet, simulated cycles for the open-loop bench).
+    pub p99_target: u64,
+    /// `(wbits, abits)` rungs, full precision first. `ladder[0]` is the
+    /// tenant's nominal precision; each later rung is what a degrade step
+    /// switches to.
+    pub ladder: Vec<(u8, u8)>,
+    /// Hard floor: rungs below this (in either component) are never used,
+    /// regardless of load. Quality has a contract too.
+    pub min_precision: (u8, u8),
+    /// Sliding window of recent completion latencies the p99 is computed
+    /// over.
+    pub window: usize,
+    /// Completions that must accumulate at the current rung before the
+    /// windowed p99 is trusted for a switch decision (hysteresis, part 1).
+    pub min_samples: usize,
+    /// Minimum time between switches, in the caller's unit (hysteresis,
+    /// part 2 — bounds the flap rate even under oscillating load).
+    pub dwell: u64,
+    /// Restore only when windowed p99 ≤ `headroom × p99_target`
+    /// (hysteresis, part 3 — restoring at the exact target would flap).
+    pub headroom: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            p99_target: 0,
+            ladder: vec![(8, 8), (4, 4), (2, 2)],
+            min_precision: (1, 1),
+            window: 32,
+            min_samples: 8,
+            dwell: 0,
+            headroom: 0.5,
+        }
+    }
+}
+
+impl SloPolicy {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p99_target == 0 {
+            return Err("slo policy: p99_target must be > 0".into());
+        }
+        if self.ladder.is_empty() {
+            return Err("slo policy: precision ladder is empty".into());
+        }
+        for &(w, a) in &self.ladder {
+            if !(1..=8).contains(&w) || !(1..=8).contains(&a) {
+                return Err(format!("slo policy: ladder rung {w}:{a} outside 1..=8 bits"));
+            }
+        }
+        for pair in self.ladder.windows(2) {
+            let (hi, lo) = (pair[0], pair[1]);
+            if lo.0 > hi.0 || lo.1 > hi.1 || lo == hi {
+                return Err(format!(
+                    "slo policy: ladder must strictly descend (rung {}:{} does not descend \
+                     from {}:{})",
+                    lo.0, lo.1, hi.0, hi.1
+                ));
+            }
+        }
+        if self.window == 0 || self.min_samples == 0 {
+            return Err("slo policy: window and min_samples must be > 0".into());
+        }
+        if self.min_samples > self.window {
+            return Err("slo policy: min_samples cannot exceed window".into());
+        }
+        if !(self.headroom > 0.0 && self.headroom <= 1.0) {
+            return Err("slo policy: headroom must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+
+    /// The ladder truncated at the first rung below `min_precision`; the
+    /// controller never walks past it.
+    fn effective_ladder(&self) -> Vec<(u8, u8)> {
+        let cut = self
+            .ladder
+            .iter()
+            .position(|&(w, a)| w < self.min_precision.0 || a < self.min_precision.1)
+            .unwrap_or(self.ladder.len());
+        self.ladder[..cut.max(1)].to_vec()
+    }
+}
+
+/// Which way a precision switch went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchKind {
+    Degrade,
+    Restore,
+}
+
+/// What drove a precision switch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchTrigger {
+    /// Windowed p99 breached the target.
+    LatencyBreach,
+    /// A request was shed by the bounded admission queue.
+    Overload,
+    /// Windowed p99 recovered below `headroom × target`.
+    Recovered,
+}
+
+impl std::fmt::Display for SwitchKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SwitchKind::Degrade => "degrade",
+            SwitchKind::Restore => "restore",
+        })
+    }
+}
+
+impl std::fmt::Display for SwitchTrigger {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SwitchTrigger::LatencyBreach => "latency-breach",
+            SwitchTrigger::Overload => "overload",
+            SwitchTrigger::Recovered => "recovered",
+        })
+    }
+}
+
+/// One precision switch, for the event log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchEvent {
+    /// The tenant's nominal key (ladder rung 0).
+    pub tenant: ModelKey,
+    /// When the switch happened (caller's unit).
+    pub at: u64,
+    pub from: (u8, u8),
+    pub to: (u8, u8),
+    /// Windowed p99 at decision time (0 when the window was empty, e.g. an
+    /// overload-triggered degrade before any completion).
+    pub windowed_p99: u64,
+    pub kind: SwitchKind,
+    pub trigger: SwitchTrigger,
+}
+
+struct TenantState {
+    nominal: ModelKey,
+    policy: SloPolicy,
+    /// Ladder after the `min_precision` clamp.
+    ladder: Vec<(u8, u8)>,
+    /// Current rung (index into `ladder`); 0 = full precision.
+    level: usize,
+    /// Recent completion latencies at the current rung.
+    window: VecDeque<u64>,
+    samples_at_level: usize,
+    last_switch: Option<u64>,
+    level_entered_at: u64,
+    /// Time spent serving at each rung (updated on switch; the open tail
+    /// at the current rung is folded in by `snapshot`).
+    time_at_level: Vec<u64>,
+    completed: u64,
+    shed: u64,
+    within_target: u64,
+    events: Vec<SwitchEvent>,
+}
+
+impl TenantState {
+    fn new(nominal: ModelKey, policy: SloPolicy) -> Self {
+        let ladder = policy.effective_ladder();
+        let levels = ladder.len();
+        TenantState {
+            nominal,
+            policy,
+            ladder,
+            level: 0,
+            window: VecDeque::new(),
+            samples_at_level: 0,
+            last_switch: None,
+            level_entered_at: 0,
+            time_at_level: vec![0; levels],
+            completed: 0,
+            shed: 0,
+            within_target: 0,
+            events: Vec::new(),
+        }
+    }
+
+    fn windowed_p99(&self) -> u64 {
+        percentile(self.window.iter().copied(), 0.99)
+    }
+
+    fn dwell_elapsed(&self, now: u64) -> bool {
+        match self.last_switch {
+            None => true,
+            Some(t) => now.saturating_sub(t) >= self.policy.dwell,
+        }
+    }
+
+    fn switch_to(&mut self, to_level: usize, now: u64, trigger: SwitchTrigger) -> SwitchEvent {
+        let from = self.ladder[self.level];
+        let to = self.ladder[to_level];
+        let kind =
+            if to_level > self.level { SwitchKind::Degrade } else { SwitchKind::Restore };
+        self.time_at_level[self.level] += now.saturating_sub(self.level_entered_at);
+        let ev = SwitchEvent {
+            tenant: self.nominal.clone(),
+            at: now,
+            from,
+            to,
+            windowed_p99: self.windowed_p99(),
+            kind,
+            trigger,
+        };
+        self.level = to_level;
+        self.level_entered_at = now;
+        self.last_switch = Some(now);
+        // Latencies measured at the old rung must not drive the next
+        // decision — the window restarts at the new rung.
+        self.window.clear();
+        self.samples_at_level = 0;
+        self.events.push(ev.clone());
+        ev
+    }
+}
+
+/// Point-in-time view of one tenant's SLO state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSlo {
+    /// Nominal key (ladder rung 0 precision).
+    pub tenant: ModelKey,
+    pub p99_target: u64,
+    /// Current rung index (0 = full precision).
+    pub level: usize,
+    /// Current effective `(wbits, abits)`.
+    pub effective: (u8, u8),
+    pub completed: u64,
+    pub shed: u64,
+    /// Completions whose latency was ≤ `p99_target`.
+    pub within_target: u64,
+    /// p99 over the current window (0 while empty).
+    pub windowed_p99: u64,
+    pub degrades: u64,
+    pub restores: u64,
+    /// `(wbits, abits, time)` per rung, the open tail at the current rung
+    /// included.
+    pub time_at_level: Vec<(u8, u8, u64)>,
+    pub events: Vec<SwitchEvent>,
+}
+
+impl TenantSlo {
+    /// Fraction of completions that met the target (1.0 when idle — an
+    /// unviolated SLO is an attained SLO).
+    pub fn attainment(&self) -> f64 {
+        if self.completed == 0 {
+            1.0
+        } else {
+            self.within_target as f64 / self.completed as f64
+        }
+    }
+
+    /// Time-weighted mean `(wbits, abits)` actually served — the
+    /// quality/latency trade the controller made, as a number.
+    pub fn time_weighted_bits(&self) -> (f64, f64) {
+        let total: u64 = self.time_at_level.iter().map(|&(_, _, t)| t).sum();
+        if total == 0 {
+            let (w, a) = self.effective;
+            return (w as f64, a as f64);
+        }
+        let mut ws = 0.0;
+        let mut asum = 0.0;
+        for &(w, a, t) in &self.time_at_level {
+            let frac = t as f64 / total as f64;
+            ws += w as f64 * frac;
+            asum += a as f64 * frac;
+        }
+        (ws, asum)
+    }
+}
+
+/// Nearest-rank percentile (same convention as `super::Metrics`); 0 for an
+/// empty set.
+fn percentile(samples: impl Iterator<Item = u64>, p: f64) -> u64 {
+    let mut v: Vec<u64> = samples.collect();
+    if v.is_empty() {
+        return 0;
+    }
+    v.sort_unstable();
+    let rank = ((v.len() as f64) * p).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+type TenantId = (String, ExecutionMode);
+
+/// The precision-adaptive admission controller. Thread-safe; the threaded
+/// fleet shares one behind an `Arc` between `submit` (admission rewrite)
+/// and worker threads (completion observations).
+pub struct SloController {
+    tenants: Mutex<HashMap<TenantId, TenantState>>,
+}
+
+impl SloController {
+    /// Build a controller from `(nominal key, policy)` pairs. The nominal
+    /// key's `(model, mode)` identifies the tenant; its wbits/abits are
+    /// normalized to the policy's ladder rung 0.
+    pub fn new(policies: Vec<(ModelKey, SloPolicy)>) -> Result<Self, String> {
+        let mut tenants = HashMap::new();
+        for (key, policy) in policies {
+            policy.validate().map_err(|e| format!("tenant {key}: {e}"))?;
+            let id = (key.model.clone(), key.mode);
+            let (w0, a0) = policy.ladder[0];
+            let nominal = ModelKey::new(&key.model, w0, a0, key.mode);
+            if tenants.insert(id, TenantState::new(nominal, policy)).is_some() {
+                return Err(format!(
+                    "tenant {key}: duplicate SLO policy for ({}, {})",
+                    key.model, key.mode
+                ));
+            }
+        }
+        Ok(SloController { tenants: Mutex::new(tenants) })
+    }
+
+    fn with_tenant<R>(&self, key: &ModelKey, f: impl FnOnce(&mut TenantState) -> R) -> Option<R> {
+        let mut map = self.tenants.lock().expect("slo lock");
+        map.get_mut(&(key.model.clone(), key.mode)).map(f)
+    }
+
+    /// Rewrite an incoming key to the tenant's current ladder rung.
+    /// Unregistered tenants pass through untouched.
+    pub fn admit(&self, key: &ModelKey, _now: u64) -> ModelKey {
+        self.with_tenant(key, |t| {
+            let (w, a) = t.ladder[t.level];
+            ModelKey::new(&key.model, w, a, key.mode)
+        })
+        .unwrap_or_else(|| key.clone())
+    }
+
+    /// Record one completion latency for the tenant serving `key` (the
+    /// *effective* key — precision is mapped back to the tenant by
+    /// `(model, mode)`), and decide whether to switch rungs.
+    pub fn observe(&self, key: &ModelKey, latency: u64, now: u64) -> Option<SwitchEvent> {
+        self.with_tenant(key, |t| {
+            t.completed += 1;
+            if latency <= t.policy.p99_target {
+                t.within_target += 1;
+            }
+            t.window.push_back(latency);
+            while t.window.len() > t.policy.window {
+                t.window.pop_front();
+            }
+            t.samples_at_level += 1;
+            if t.samples_at_level < t.policy.min_samples || !t.dwell_elapsed(now) {
+                return None;
+            }
+            let p99 = t.windowed_p99();
+            if p99 > t.policy.p99_target && t.level + 1 < t.ladder.len() {
+                return Some(t.switch_to(t.level + 1, now, SwitchTrigger::LatencyBreach));
+            }
+            if t.level > 0 && (p99 as f64) <= t.policy.headroom * t.policy.p99_target as f64 {
+                return Some(t.switch_to(t.level - 1, now, SwitchTrigger::Recovered));
+            }
+            None
+        })
+        .flatten()
+    }
+
+    /// Record an admission-queue shed for the tenant serving `key`. A shed
+    /// is the strongest overload signal there is — degrade immediately
+    /// (dwell permitting), without waiting for `min_samples`.
+    pub fn on_shed(&self, key: &ModelKey, now: u64) -> Option<SwitchEvent> {
+        self.with_tenant(key, |t| {
+            t.shed += 1;
+            if t.dwell_elapsed(now) && t.level + 1 < t.ladder.len() {
+                return Some(t.switch_to(t.level + 1, now, SwitchTrigger::Overload));
+            }
+            None
+        })
+        .flatten()
+    }
+
+    /// Snapshot every tenant's SLO state, sorted by tenant key. `now`
+    /// closes the open time-accounting tail at the current rung.
+    pub fn snapshot(&self, now: u64) -> Vec<TenantSlo> {
+        let map = self.tenants.lock().expect("slo lock");
+        let mut out: Vec<TenantSlo> = map
+            .values()
+            .map(|t| {
+                let mut time_at_level: Vec<(u8, u8, u64)> = t
+                    .ladder
+                    .iter()
+                    .zip(&t.time_at_level)
+                    .map(|(&(w, a), &tt)| (w, a, tt))
+                    .collect();
+                time_at_level[t.level].2 += now.saturating_sub(t.level_entered_at);
+                TenantSlo {
+                    tenant: t.nominal.clone(),
+                    p99_target: t.policy.p99_target,
+                    level: t.level,
+                    effective: t.ladder[t.level],
+                    completed: t.completed,
+                    shed: t.shed,
+                    within_target: t.within_target,
+                    windowed_p99: t.windowed_p99(),
+                    degrades: t
+                        .events
+                        .iter()
+                        .filter(|e| e.kind == SwitchKind::Degrade)
+                        .count() as u64,
+                    restores: t
+                        .events
+                        .iter()
+                        .filter(|e| e.kind == SwitchKind::Restore)
+                        .count() as u64,
+                    time_at_level,
+                    events: t.events.clone(),
+                }
+            })
+            .collect();
+        out.sort_by_key(|t| t.tenant.to_string());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tenant() -> ModelKey {
+        ModelKey::new("resnet9", 8, 8, ExecutionMode::Auto)
+    }
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            p99_target: 1000,
+            ladder: vec![(8, 8), (4, 4), (2, 2)],
+            min_precision: (2, 2),
+            window: 8,
+            min_samples: 4,
+            dwell: 100,
+            headroom: 0.5,
+        }
+    }
+
+    fn controller() -> SloController {
+        SloController::new(vec![(tenant(), policy())]).unwrap()
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_shapes() {
+        let ok = policy();
+        assert!(ok.validate().is_ok());
+        let mut p = policy();
+        p.p99_target = 0;
+        assert!(p.validate().is_err());
+        p = policy();
+        p.ladder.clear();
+        assert!(p.validate().is_err());
+        p = policy();
+        p.ladder = vec![(8, 8), (9, 4)];
+        assert!(p.validate().is_err(), "rung above 8 bits");
+        p = policy();
+        p.ladder = vec![(4, 4), (8, 8)];
+        assert!(p.validate().is_err(), "ladder must descend");
+        p = policy();
+        p.ladder = vec![(4, 4), (4, 4)];
+        assert!(p.validate().is_err(), "duplicate rung");
+        p = policy();
+        p.min_samples = p.window + 1;
+        assert!(p.validate().is_err());
+        p = policy();
+        p.headroom = 0.0;
+        assert!(p.validate().is_err());
+        p = policy();
+        p.headroom = 1.5;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn min_precision_truncates_ladder() {
+        let mut p = policy();
+        p.min_precision = (4, 4);
+        let c = SloController::new(vec![(tenant(), p)]).unwrap();
+        // Breach hard, repeatedly: the controller may reach 4:4 but never
+        // 2:2.
+        let mut now = 0;
+        for _ in 0..64 {
+            now += 50;
+            c.observe(&tenant(), 10_000, now);
+        }
+        let snap = c.snapshot(now);
+        assert_eq!(snap[0].effective, (4, 4));
+        assert_eq!(snap[0].level, 1);
+    }
+
+    #[test]
+    fn degrades_on_breach_then_admits_lower_rung() {
+        let c = controller();
+        let k = tenant();
+        assert_eq!(c.admit(&k, 0), k, "starts at full precision");
+        let mut ev = None;
+        let mut now = 0;
+        for _ in 0..8 {
+            now += 50;
+            if let Some(e) = c.observe(&k, 5000, now) {
+                ev = Some(e);
+                break;
+            }
+        }
+        let ev = ev.expect("breach must degrade");
+        assert_eq!(ev.kind, SwitchKind::Degrade);
+        assert_eq!(ev.trigger, SwitchTrigger::LatencyBreach);
+        assert_eq!((ev.from, ev.to), ((8, 8), (4, 4)));
+        assert!(ev.windowed_p99 > 1000);
+        let eff = c.admit(&k, now);
+        assert_eq!((eff.wbits, eff.abits), (4, 4));
+        assert_eq!(eff.model, k.model);
+    }
+
+    #[test]
+    fn restores_with_hysteresis_not_at_target() {
+        let c = controller();
+        let k = tenant();
+        let mut now = 0;
+        // Drive down one rung.
+        while c.admit(&k, now).wbits == 8 {
+            now += 50;
+            c.observe(&k, 5000, now);
+        }
+        // Latency just below target but above headroom×target: must NOT
+        // restore (that would flap).
+        for _ in 0..16 {
+            now += 50;
+            assert_eq!(c.observe(&k, 900, now), None, "900 > 0.5×1000: hold");
+        }
+        assert_eq!(c.admit(&k, now).wbits, 4);
+        // Comfortably inside headroom: restores.
+        let mut ev = None;
+        for _ in 0..16 {
+            now += 50;
+            if let Some(e) = c.observe(&k, 100, now) {
+                ev = Some(e);
+                break;
+            }
+        }
+        let ev = ev.expect("recovery must restore");
+        assert_eq!(ev.kind, SwitchKind::Restore);
+        assert_eq!(ev.trigger, SwitchTrigger::Recovered);
+        assert_eq!((ev.from, ev.to), ((4, 4), (8, 8)));
+        assert_eq!(c.admit(&k, now).wbits, 8);
+    }
+
+    #[test]
+    fn dwell_bounds_switch_rate() {
+        let c = controller();
+        let k = tenant();
+        let mut now = 0;
+        // First degrade.
+        while c.admit(&k, now).wbits == 8 {
+            now += 50;
+            c.observe(&k, 5000, now);
+        }
+        let degraded_at = now;
+        // Keep breaching within the dwell window: no second switch even
+        // after min_samples fresh samples.
+        let mut switched = false;
+        for _ in 0..6 {
+            now += 10; // stays within dwell=100 of degraded_at
+            switched |= c.observe(&k, 5000, now).is_some();
+        }
+        assert!(!switched, "dwell must suppress switches until {degraded_at}+100");
+        // Once dwell elapses the next breach steps down again.
+        now = degraded_at + 200;
+        let ev = c.observe(&k, 5000, now).expect("dwell elapsed: degrade to floor");
+        assert_eq!(ev.to, (2, 2));
+    }
+
+    #[test]
+    fn shed_degrades_immediately_without_samples() {
+        let c = controller();
+        let k = tenant();
+        let ev = c.on_shed(&k, 7).expect("shed is an immediate overload signal");
+        assert_eq!(ev.kind, SwitchKind::Degrade);
+        assert_eq!(ev.trigger, SwitchTrigger::Overload);
+        assert_eq!(c.admit(&k, 8).wbits, 4);
+        // A second shed inside the dwell window does not cascade.
+        assert_eq!(c.on_shed(&k, 8), None);
+        let snap = c.snapshot(10);
+        assert_eq!(snap[0].shed, 2);
+    }
+
+    #[test]
+    fn unknown_tenant_passes_through() {
+        let c = controller();
+        let other = ModelKey::new("resnet18", 2, 2, ExecutionMode::Auto);
+        assert_eq!(c.admit(&other, 0), other);
+        assert_eq!(c.observe(&other, 99_999, 1), None);
+        assert_eq!(c.on_shed(&other, 2), None);
+        assert_eq!(c.snapshot(3).len(), 1, "only the registered tenant");
+    }
+
+    #[test]
+    fn snapshot_accounts_time_and_attainment() {
+        let c = controller();
+        let k = tenant();
+        let mut now = 0;
+        // 4 good completions (within target), then breach down.
+        for _ in 0..4 {
+            now += 50;
+            c.observe(&k, 500, now);
+        }
+        while c.admit(&k, now).wbits == 8 {
+            now += 50;
+            c.observe(&k, 5000, now);
+        }
+        let switch_at = now;
+        now = switch_at + 400;
+        let snap = c.snapshot(now);
+        let t = &snap[0];
+        assert_eq!(t.tenant, tenant());
+        assert_eq!(t.effective, (4, 4));
+        assert_eq!(t.degrades, 1);
+        assert_eq!(t.restores, 0);
+        assert_eq!(t.events.len(), 1);
+        // Time accounting covers [0, now] exactly.
+        let total: u64 = t.time_at_level.iter().map(|&(_, _, tt)| tt).sum();
+        assert_eq!(total, now);
+        assert_eq!(t.time_at_level[0], (8, 8, switch_at));
+        assert_eq!(t.time_at_level[1], (4, 4, 400));
+        // 4 of the completions met the 1000 target.
+        assert_eq!(t.within_target, 4);
+        assert!(t.attainment() > 0.0 && t.attainment() < 1.0);
+        // Time-weighted bits sit strictly between the rungs used.
+        let (wb, ab) = t.time_weighted_bits();
+        assert!(wb > 4.0 && wb < 8.0, "wb={wb}");
+        assert!(ab > 4.0 && ab < 8.0, "ab={ab}");
+    }
+
+    #[test]
+    fn duplicate_tenant_policy_rejected() {
+        let err = SloController::new(vec![(tenant(), policy()), (tenant(), policy())]);
+        assert!(err.is_err());
+    }
+}

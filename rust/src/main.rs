@@ -31,6 +31,18 @@
 //!                               batch size, cache hit rate, weight-reload
 //!                               words avoided) — the artifact CI's
 //!                               `serve-bench` job uploads and gates on
+//! * `bench-serve --adaptive [--slo-p99 CYCLES --ramp L1xN1,...
+//!                 --ladder 8:8,4:4,2:2 --queue-depth N --max-batch N
+//!                 --static --proxy-images N]`
+//!                             — open-loop ramped-arrival driver for
+//!                               precision-adaptive SLO serving: the
+//!                               `SloController` steps tenants down their
+//!                               precision ladder under overload and back
+//!                               up when load recedes; writes the
+//!                               deterministic `BENCH_slo.json` report
+//!                               (p99 trajectory, degrade/restore events,
+//!                               quality/latency trade) CI's `slo-bench`
+//!                               job gates on
 
 use barvinn::codegen::EdgePolicy;
 use barvinn::exec::ExecMode;
@@ -75,8 +87,15 @@ fn help() {
                     auto mode schedules deep models as multi-pass laps)\n\
          bench-serve flags: --seed N --duration-images N\n\
                     --mix resnet9:4:4=0.7,resnet18:2:2=0.3 --workers N --cache N\n\
-                    --policy affinity|least-loaded --exec cycle|turbo --out PATH\n\
+                    --policy affinity|least-loaded|adaptive --exec cycle|turbo\n\
+                    --out PATH\n\
                     (multi-tenant fleet load generator; writes BENCH_serve.json)\n\
+         bench-serve --adaptive flags: --slo-p99 CYCLES (0 = auto)\n\
+                    --ramp 0.5x16,2.5x48,0.25x32 (load x count phases)\n\
+                    --ladder 8:8,4:4,2:2 --queue-depth N --max-batch N\n\
+                    --static (ramp without the controller, as the baseline)\n\
+                    --proxy-images N (accuracy-proxy table; 0 = skip)\n\
+                    (open-loop SLO driver; writes BENCH_slo.json)\n\
          see README.md for details"
     );
 }
@@ -368,11 +387,155 @@ fn run(args: &[String]) {
     );
 }
 
+/// Grab a string-valued flag, exiting with a usage error when the flag is
+/// present without a value.
+fn parse_str_flag(args: &[String], name: &str, usage: &str) -> Option<String> {
+    match args.iter().position(|a| a == name) {
+        None => None,
+        Some(i) => match args.get(i + 1) {
+            Some(v) => Some(v.clone()),
+            None => {
+                eprintln!("{name} requires a value ({usage})");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+/// `barvinn bench-serve --adaptive` (also reachable as
+/// `--policy adaptive`): open-loop ramped-arrival driver for
+/// precision-adaptive SLO serving → `BENCH_slo.json` (see
+/// `perf::slo_bench` for the schema).
+fn bench_serve_adaptive(args: &[String]) {
+    use barvinn::perf::serve_bench::parse_mix;
+    use barvinn::perf::slo_bench::{
+        parse_ladder, parse_ramp, run_slo_bench, SloBenchConfig,
+    };
+
+    fn die(e: String) -> ! {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+    let defaults = SloBenchConfig::default();
+    let mix_str =
+        parse_str_flag(args, "--mix", "e.g. resnet9:8:8=1").unwrap_or_else(|| "resnet9:8:8=1".into());
+    let mix = parse_mix(&mix_str).unwrap_or_else(|e| die(e));
+    let ramp = match parse_str_flag(args, "--ramp", "e.g. 0.5x16,2.5x48,0.25x32") {
+        Some(s) => parse_ramp(&s).unwrap_or_else(|e| die(e)),
+        None => defaults.ramp.clone(),
+    };
+    let ladder = match parse_str_flag(args, "--ladder", "e.g. 8:8,4:4,2:2") {
+        Some(s) => parse_ladder(&s).unwrap_or_else(|e| die(e)),
+        None => defaults.ladder.clone(),
+    };
+    let cfg = SloBenchConfig {
+        seed: parse_u64_flag_strict(args, "--seed", 42),
+        workers: parse_u64_flag_strict(args, "--workers", defaults.workers as u64) as usize,
+        cache_per_worker: parse_u64_flag_strict(args, "--cache", defaults.cache_per_worker as u64)
+            as usize,
+        queue_depth: parse_u64_flag_strict(args, "--queue-depth", defaults.queue_depth as u64)
+            as usize,
+        max_batch: parse_u64_flag_strict(args, "--max-batch", defaults.max_batch as u64) as usize,
+        mix,
+        exec: parse_exec_flag(args),
+        ramp,
+        // 0 = auto: 3 × the calibrated full-precision per-image cost.
+        p99_target: parse_u64_flag_strict(args, "--slo-p99", 0),
+        ladder,
+        // `--static` runs the same ramp without the controller — the
+        // baseline the adaptive run is compared against.
+        adaptive: !args.iter().any(|a| a == "--static"),
+        proxy_images: parse_u64_flag_strict(args, "--proxy-images", 0) as usize,
+        ..defaults
+    };
+    if cfg.workers < 1 || cfg.cache_per_worker < 1 || cfg.max_batch < 1 {
+        eprintln!("--workers, --cache and --max-batch must be at least 1");
+        std::process::exit(2);
+    }
+    let out_path = parse_str_flag(args, "--out", "a file path")
+        .unwrap_or_else(|| "BENCH_slo.json".to_string());
+    println!(
+        "bench-serve --adaptive: {} arrivals over {} ramp phases, {} workers, \
+         ladder {}, {} backend, seed {}, mix {mix_str}",
+        cfg.ramp.iter().map(|p| p.count).sum::<usize>(),
+        cfg.ramp.len(),
+        cfg.workers,
+        cfg.ladder.iter().map(|&(w, a)| format!("{w}:{a}")).collect::<Vec<_>>().join(","),
+        cfg.exec,
+        cfg.seed,
+    );
+    let report = match run_slo_bench(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-serve --adaptive failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let json = report.to_json();
+    if let Err(e) = std::fs::write(&out_path, &json) {
+        eprintln!("writing {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "base cost {} cycles/image | p99 target {} cycles | {} completed, {} shed, \
+         {} failed | {} degrades, {} restores | sim {:.0} FPS",
+        report.base_cost,
+        report.p99_target,
+        report.completed,
+        report.shed,
+        report.failed,
+        report.degrades,
+        report.restores,
+        report.throughput_fps,
+    );
+    for p in &report.phases {
+        println!(
+            "  phase load {:.2}x ({} arrivals): {} completed, {} shed, tail p99 {} cycles{}",
+            p.load,
+            p.count,
+            p.completed,
+            p.shed,
+            p.tail_p99,
+            if p.tail_p99 > report.p99_target { "  ← breach" } else { "" },
+        );
+    }
+    for t in &report.tenants {
+        let (w, a) = t.final_bits;
+        let (tw, ta) = t.time_weighted_bits;
+        println!(
+            "  {}: attainment {:.2} | final {}:{} | time-weighted {:.2}:{:.2} bits{}",
+            t.tenant,
+            t.attainment,
+            w,
+            a,
+            tw,
+            ta,
+            match t.time_weighted_proxy {
+                Some(p) => format!(" | accuracy proxy {p:.3}"),
+                None => String::new(),
+            },
+        );
+    }
+    println!("wrote {out_path}");
+}
+
 /// `barvinn bench-serve`: seeded multi-tenant fleet load generator →
 /// `BENCH_serve.json` (see `perf::serve_bench` for the schema).
 fn bench_serve(args: &[String]) {
     use barvinn::coordinator::RoutingPolicy;
     use barvinn::perf::serve_bench::{parse_mix, run_bench, BenchConfig};
+
+    // `--adaptive` (or the `--policy adaptive` spelling) switches to the
+    // open-loop precision-adaptive driver; everything below is the
+    // closed-loop throughput bench.
+    let policy_is_adaptive = args
+        .iter()
+        .position(|a| a == "--policy")
+        .and_then(|i| args.get(i + 1))
+        .is_some_and(|v| v == "adaptive");
+    if args.iter().any(|a| a == "--adaptive") || policy_is_adaptive {
+        return bench_serve_adaptive(args);
+    }
 
     let seed = parse_u64_flag_strict(args, "--seed", 42);
     let images = parse_u64_flag_strict(args, "--duration-images", 32) as usize;

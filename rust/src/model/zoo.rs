@@ -204,6 +204,100 @@ pub fn executable_model_names() -> Vec<&'static str> {
     EXECUTABLE_MODELS.iter().map(|(n, _)| *n).collect()
 }
 
+/// Reference quantization point `(wbits, abits)` for the accuracy proxy:
+/// the highest precision the serving ladder starts from.
+pub const PROXY_REFERENCE_BITS: (u8, u8) = (8, 8);
+
+/// Seed for the fixed proxy image set (shared by every model so rungs of
+/// one ladder are scored on the *same* images).
+pub const PROXY_SEED: u64 = 0xACC0_1ADE_0000_0001;
+
+/// Top-1 "class" of a golden forward pass: the argmax over the flattened
+/// final activation tensor (ties break to the lowest index). The zoo's
+/// executable stacks end at the last accelerator-resident conv (the FC
+/// head is a host concern), so this is the accelerator-portion decision —
+/// exactly what changes when the SLO controller degrades precision.
+pub fn golden_top1(model: &Model, input: &crate::sim::Tensor3) -> usize {
+    let out = model.golden_forward(input);
+    let mut best = 0usize;
+    for (i, &v) in out.data.iter().enumerate() {
+        if v > out.data[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Golden top-1 agreement between a reference-precision model and a
+/// candidate over `images` seeded inputs — the zoo's **accuracy proxy**.
+/// True labels don't exist for synthetic weights, so quality is measured
+/// as fidelity to the full-precision decision: 1.0 = the degraded rung
+/// decides identically, lower = it diverges.
+///
+/// Inputs are drawn uniformly in the *reference* activation code space and
+/// requantized (rescaled, floor) into the candidate's — the same image at
+/// each rung, as a serving stack would quantize one source image per
+/// tenant precision.
+pub fn golden_agreement(
+    reference: &Model,
+    candidate: &Model,
+    images: usize,
+    seed: u64,
+) -> Result<f64, String> {
+    let rl = reference.layers.first().ok_or("reference model has no layers")?;
+    let cl = candidate.layers.first().ok_or("candidate model has no layers")?;
+    if (cl.ci, cl.in_h, cl.in_w) != (rl.ci, rl.in_h, rl.in_w) {
+        return Err(format!(
+            "input geometry mismatch: reference {}x{}x{} vs candidate {}x{}x{}",
+            rl.ci, rl.in_h, rl.in_w, cl.ci, cl.in_h, cl.in_w
+        ));
+    }
+    if images == 0 {
+        return Err("need at least one proxy image".into());
+    }
+    let ref_max = rl.aprec.max_value().max(1);
+    let cand_max = cl.aprec.max_value();
+    let mut rng = Rng(seed);
+    let mut agree = 0usize;
+    for _ in 0..images {
+        let ref_img = crate::sim::Tensor3::from_fn(rl.ci, rl.in_h, rl.in_w, |_, _, _| {
+            rng.range_i32(0, ref_max)
+        });
+        let cand_img = crate::sim::Tensor3::from_fn(rl.ci, rl.in_h, rl.in_w, |c, y, x| {
+            (ref_img.get(c, y, x) as i64 * cand_max as i64 / ref_max as i64) as i32
+        });
+        if golden_top1(reference, &ref_img) == golden_top1(candidate, &cand_img) {
+            agree += 1;
+        }
+    }
+    Ok(agree as f64 / images as f64)
+}
+
+/// Accuracy proxy of one zoo model at one quantization point `(wbits,
+/// abits)`, against [`PROXY_REFERENCE_BITS`] on the fixed
+/// [`PROXY_SEED`]-derived image set. `None` for unknown model names.
+/// Deterministic — the same arguments always yield the same value.
+pub fn accuracy_proxy(name: &str, w_bits: u8, a_bits: u8, images: usize) -> Option<f64> {
+    let (rw, ra) = PROXY_REFERENCE_BITS;
+    let reference = model_by_name(name, ra, rw)?;
+    let candidate = model_by_name(name, a_bits, w_bits)?;
+    golden_agreement(&reference, &candidate, images, PROXY_SEED).ok()
+}
+
+/// The per-model, per-precision accuracy-proxy table for a precision
+/// ladder: what each rung the SLO controller may select costs in decision
+/// fidelity. `None` if the model name is unknown.
+pub fn accuracy_proxy_table(
+    name: &str,
+    ladder: &[(u8, u8)],
+    images: usize,
+) -> Option<Vec<((u8, u8), f64)>> {
+    ladder
+        .iter()
+        .map(|&(w, a)| accuracy_proxy(name, w, a, images).map(|p| ((w, a), p)))
+        .collect()
+}
+
 /// A conv layer shape for analytic models: `(ci, co, k, stride, pad, in_h)`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvShape {
@@ -738,5 +832,67 @@ mod tests {
             "model fraction {}",
             s.model_frac_mult64
         );
+    }
+
+    /// A debug-runnable stand-in for the full resnet9 golden pass: first two
+    /// layers only, shrunk to 8×8 inputs. Weight/quant generation is
+    /// per-layer and height-independent, so the truncated model stays valid.
+    fn tiny_proxy_model(a_bits: u8, w_bits: u8) -> Model {
+        let mut m = resnet9_cifar10(a_bits, w_bits);
+        m.layers.truncate(2);
+        for l in &mut m.layers {
+            l.in_h = 8;
+            l.in_w = 8;
+        }
+        m.host_prologue = None;
+        m.host_epilogue = None;
+        m
+    }
+
+    #[test]
+    fn golden_agreement_self_is_exact_and_deterministic() {
+        let reference = tiny_proxy_model(8, 8);
+        let a = golden_agreement(&reference, &reference, 4, PROXY_SEED).unwrap();
+        assert_eq!(a, 1.0, "self-agreement must be exactly 1.0");
+
+        let degraded = tiny_proxy_model(2, 2);
+        let x = golden_agreement(&reference, &degraded, 4, PROXY_SEED).unwrap();
+        let y = golden_agreement(&reference, &degraded, 4, PROXY_SEED).unwrap();
+        assert!((0.0..=1.0).contains(&x), "proxy out of range: {x}");
+        assert_eq!(x, y, "proxy must be deterministic for fixed seed");
+    }
+
+    #[test]
+    fn golden_agreement_rejects_bad_shapes() {
+        let reference = tiny_proxy_model(8, 8);
+        assert!(golden_agreement(&reference, &reference, 0, PROXY_SEED).is_err());
+        let mut other = tiny_proxy_model(8, 8);
+        other.layers[0].in_h = 16;
+        other.layers[0].in_w = 16;
+        assert!(golden_agreement(&reference, &other, 2, PROXY_SEED).is_err());
+    }
+
+    #[test]
+    fn accuracy_proxy_unknown_model_is_none() {
+        assert!(accuracy_proxy("no-such-model", 4, 4, 1).is_none());
+        assert!(accuracy_proxy_table("no-such-model", &[(8, 8)], 1).is_none());
+    }
+
+    /// Full-model ladder table: only meaningful (and only affordable) in
+    /// release builds — one resnet9 golden pass is ~245M MACs per image.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn accuracy_proxy_table_resnet9_ladder() {
+        let ladder = [(8, 8), (4, 4), (2, 2)];
+        let table = accuracy_proxy_table("resnet9", &ladder, 2).unwrap();
+        assert_eq!(table.len(), 3);
+        assert_eq!(table[0].0, PROXY_REFERENCE_BITS);
+        assert_eq!(
+            table[0].1, 1.0,
+            "reference rung must agree with itself exactly"
+        );
+        for &((w, a), p) in &table {
+            assert!((0.0..=1.0).contains(&p), "proxy({w},{a}) out of range: {p}");
+        }
     }
 }

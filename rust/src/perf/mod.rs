@@ -15,6 +15,8 @@
 //!   (criterion is not in the offline vendored crate set).
 //! * [`serve_bench`] — the `bench-serve` fleet load generator and the
 //!   machine-readable `BENCH_serve.json` perf report CI uploads.
+//! * [`slo_bench`] — the `bench-serve --adaptive` open-loop ramped-arrival
+//!   driver for precision-adaptive SLO serving (`BENCH_slo.json`).
 
 pub mod benchkit;
 pub mod bitfusion;
@@ -24,3 +26,4 @@ pub mod finn;
 pub mod model_size;
 pub mod resource_model;
 pub mod serve_bench;
+pub mod slo_bench;

@@ -56,7 +56,11 @@ pub fn parse_mix(s: &str) -> Result<Vec<MixEntry>, String> {
         if weight <= 0.0 || !weight.is_finite() {
             return Err(format!("mix weight must be positive and finite in '{part}'"));
         }
-        out.push(MixEntry { key: key_str.parse()?, weight });
+        let entry = MixEntry { key: key_str.parse()?, weight };
+        if out.iter().any(|e: &MixEntry| e.key == entry.key) {
+            return Err(format!("duplicate mix key '{}'", entry.key));
+        }
+        out.push(entry);
     }
     if out.is_empty() {
         return Err("empty mix (want e.g. resnet9:4:4=0.7,resnet18:2:2=0.3)".into());
@@ -168,14 +172,16 @@ impl crate::coordinator::Engine for SessionEngine {
 /// scheduling mode and the given execution backend, and report its
 /// resident RAM words as the admission cost.
 ///
-/// Sessions are built with a 4096-word weight RAM (a §3.1.2 build
+/// Sessions are built with an 8192-word weight RAM (a §3.1.2 build
 /// parameter; the stock 2048 rejects 4-bit 512-channel layers such as
-/// `resnet9:4:4`'s conv8) so every precision in a mix fits.
+/// `resnet9:4:4`'s conv8, and 4096 rejects the 8-bit rungs the SLO
+/// precision ladder starts from — `resnet9:8:8`'s conv8 needs
+/// 8·9·8·8 = 4608 words) so every precision in a mix or ladder fits.
 pub fn zoo_engine_factory(exec: ExecMode) -> KeyedEngineFactory {
     std::sync::Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
         let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
             .ok_or_else(|| format!("unknown zoo model '{}'", key.model))?;
-        let mvu = crate::mvu::MvuConfig { weight_depth: 4096, ..Default::default() };
+        let mvu = crate::mvu::MvuConfig { weight_depth: 8192, ..Default::default() };
         let session = SessionBuilder::new(model)
             .mode(key.mode)
             .exec_mode(exec)
@@ -237,6 +243,9 @@ pub struct BenchReport {
     pub batches: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests shed by bounded admission (always 0 for the closed-loop
+    /// driver; the open-loop SLO bench reports real values).
+    pub shed: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_hit_rate: f64,
@@ -258,8 +267,8 @@ pub struct BenchReport {
 }
 
 /// Escape a string for a JSON literal (keys are `model:w:a:mode`, so this
-/// is defensive).
-fn json_str(s: &str) -> String {
+/// is defensive). Shared with the SLO bench report.
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for ch in s.chars() {
@@ -276,7 +285,7 @@ fn json_str(s: &str) -> String {
 
 /// Render a float as a JSON number; non-finite values become `null` (the
 /// CI gate rejects them).
-fn json_num(v: f64) -> String {
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -303,13 +312,15 @@ impl BenchReport {
             .iter()
             .map(|pk| {
                 format!(
-                    "{{\"key\": {}, \"completed\": {}, \"failed\": {}, \"mean_ms\": {}, \
-                     \"max_ms\": {}, \"sim_cycles\": {}}}",
+                    "{{\"key\": {}, \"completed\": {}, \"failed\": {}, \"shed\": {}, \
+                     \"mean_ms\": {}, \"max_ms\": {}, \"p99_ms\": {}, \"sim_cycles\": {}}}",
                     json_str(&pk.key.to_string()),
                     pk.completed,
                     pk.failed,
+                    pk.shed,
                     json_num(pk.mean_us / 1e3),
                     json_num(pk.max_us as f64 / 1e3),
+                    json_num(pk.p99_us as f64 / 1e3),
                     pk.sim_cycles
                 )
             })
@@ -319,7 +330,7 @@ impl BenchReport {
              \"cache_per_worker\": {},\n  \"policy\": {},\n  \"exec\": {},\n  \"mix\": [{}],\n  \
              \"wall_s\": {},\n  \"throughput_img_s\": {},\n  \"p50_ms\": {},\n  \"p99_ms\": {},\n  \
              \"mean_ms\": {},\n  \"mean_batch_size\": {},\n  \"batches\": {},\n  \
-             \"completed\": {},\n  \"failed\": {},\n  \"cache_hits\": {},\n  \
+             \"completed\": {},\n  \"failed\": {},\n  \"shed\": {},\n  \"cache_hits\": {},\n  \
              \"cache_misses\": {},\n  \"cache_hit_rate\": {},\n  \"reload_words_loaded\": {},\n  \
              \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"streamed_frames\": {},\n  \
              \"pipeline_occupancy\": {},\n  \"sim_serial_fps\": {},\n  \
@@ -341,6 +352,7 @@ impl BenchReport {
             self.batches,
             self.completed,
             self.failed,
+            self.shed,
             self.cache_hits,
             self.cache_misses,
             json_num(self.cache_hit_rate),
@@ -400,6 +412,10 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
             cache_per_worker: cfg.cache_per_worker,
             batch: cfg.batch,
             policy: cfg.policy,
+            // Closed-loop driving can't overload by construction (bounded
+            // in-flight window), so admission control stays out of the
+            // measurement; the open-loop SLO bench is where shedding runs.
+            queue_depth: 0,
         },
     );
     let timeout = Duration::from_secs(600);
@@ -455,6 +471,7 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
         batches: snap.batches,
         completed: snap.completed,
         failed: snap.failed,
+        shed: snap.shed,
         cache_hits: snap.cache_hits,
         cache_misses: snap.cache_misses,
         cache_hit_rate: snap.cache_hit_rate(),
@@ -494,8 +511,30 @@ mod tests {
         assert!(parse_mix("resnet9:4:4=0").is_err());
         assert!(parse_mix("resnet9:4:4=-1").is_err());
         assert!(parse_mix("resnet9:4:4=NaN").is_err());
+        assert!(parse_mix("resnet9:4:4=inf").is_err());
         assert!(parse_mix("resnet9:four:4=1").is_err());
+        assert!(parse_mix("resnet9:4=1").is_err(), "malformed triple");
         assert!(parse_mix("resnet9=1").is_err());
+        assert!(parse_mix(":4:4=1").is_err(), "empty model name");
+    }
+
+    #[test]
+    fn parse_mix_rejects_duplicate_keys() {
+        assert!(parse_mix("resnet9:4:4=0.5,resnet9:4:4=0.5").is_err());
+        // Same tenant spelled with and without the default mode collides.
+        assert!(parse_mix("resnet9:4:4=0.5,resnet9:4:4:auto=0.5").is_err());
+        // Different precision of the same model is a distinct tenant.
+        assert!(parse_mix("resnet9:4:4=0.5,resnet9:2:2=0.5").is_ok());
+    }
+
+    #[test]
+    fn parse_mix_weights_are_relative_not_normalised() {
+        // Weights need not sum to 1 — they are shares, normalised by the
+        // bench at pick time.
+        let mix = parse_mix("resnet9:4:4=3,resnet18:2:2=1").unwrap();
+        let total: f64 = mix.iter().map(|e| e.weight).sum();
+        assert!((total - 4.0).abs() < 1e-12);
+        assert!((mix[0].weight / total - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -531,6 +570,7 @@ mod tests {
             batches: 2,
             completed: 8,
             failed: 0,
+            shed: 0,
             cache_hits: 1,
             cache_misses: 1,
             cache_hit_rate: 0.5,
@@ -551,6 +591,7 @@ mod tests {
             "\"policy\": \"affinity\"",
             "\"exec\": \"turbo\"",
             "\"mix\": [{\"key\": \"resnet9:2:2:auto\"",
+            "\"shed\": 0",
             "\"streamed_frames\": 8",
             "\"pipeline_occupancy\": 0.75",
             "\"sim_serial_fps\": 1250",

@@ -1,0 +1,1149 @@
+//! `bench-serve --adaptive`: an **open-loop** ramped-arrival load driver
+//! for precision-adaptive SLO serving, and the `BENCH_slo.json` report it
+//! emits (schema `barvinn.bench_slo/v1`, documented in
+//! `docs/BENCH_SCHEMAS.md`).
+//!
+//! The closed-loop driver in [`super::serve_bench`] cannot overload the
+//! fleet by construction — its bounded in-flight window throttles the
+//! generator to the service rate, so a latency SLO can never breach and a
+//! precision ladder would never engage. This driver is open-loop: arrivals
+//! are scheduled on a virtual clock from a **ramp** of load factors
+//! (`--ramp 0.5x32,2.5x64,0.25x48` = load × request-count phases), where
+//! load 1.0 means the aggregate full-precision service rate measured by a
+//! calibration run. Load > 1 genuinely overloads the fleet; queues grow,
+//! windowed p99 breaches the target, and the [`SloController`] earns its
+//! keep by stepping tenants down their precision ladder (and back up when
+//! the ramp recedes).
+//!
+//! Everything runs as a single-threaded discrete-event simulation in
+//! **simulated cycles**, not wall-clock: engines execute functionally at
+//! admission order (outputs are bit-identical to a serial
+//! `InferenceSession` run at the controller-selected precision), and time
+//! advances by the engines' own cycle accounting — pipeline cycles for
+//! streamed batches, per-image MVU cycles otherwise, plus a documented
+//! 1-word/cycle weight-reload penalty on cache misses. Both execution
+//! backends report identical cycles (the repo's bit-identical contract
+//! covers accounting), so the whole report is deterministic and
+//! CI-gateable: same seed, same JSON, either backend.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::serve_bench::{json_num, json_str, zoo_engine_factory, MixEntry};
+use crate::coordinator::{
+    KeyedEngineFactory, ModelKey, SessionCache, SloController, SloPolicy, SwitchEvent, SwitchKind,
+};
+use crate::exec::ExecMode;
+use crate::model::zoo::{self, Rng};
+use crate::CLOCK_HZ;
+
+/// Report schema identifier; bump the suffix on breaking changes.
+pub const SCHEMA: &str = "barvinn.bench_slo/v1";
+
+/// One ramp phase: `load` × the calibrated full-precision service rate,
+/// held for `count` requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RampPhase {
+    pub load: f64,
+    pub count: usize,
+}
+
+/// Parse a `--ramp` string: comma-separated `LOADxCOUNT` phases, e.g.
+/// `0.5x32,2.5x64,0.25x48`.
+pub fn parse_ramp(s: &str) -> Result<Vec<RampPhase>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (l, c) = part
+            .split_once('x')
+            .ok_or_else(|| format!("bad ramp phase '{part}' (want LOADxCOUNT, e.g. 2.5x64)"))?;
+        let load = l.parse::<f64>().map_err(|_| format!("bad ramp load in '{part}'"))?;
+        let count = c.parse::<usize>().map_err(|_| format!("bad ramp count in '{part}'"))?;
+        if !(load.is_finite() && load > 0.0) {
+            return Err(format!("ramp load must be positive and finite in '{part}'"));
+        }
+        if count == 0 {
+            return Err(format!("ramp count must be ≥ 1 in '{part}'"));
+        }
+        out.push(RampPhase { load, count });
+    }
+    if out.is_empty() {
+        return Err("empty ramp (want e.g. 0.5x32,2.5x64,0.25x48)".into());
+    }
+    Ok(out)
+}
+
+/// Parse a `--ladder` string: comma-separated `wbits:abits` rungs, full
+/// precision first, e.g. `8:8,4:4,2:2`.
+pub fn parse_ladder(s: &str) -> Result<Vec<(u8, u8)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (w, a) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad ladder rung '{part}' (want wbits:abits, e.g. 4:4)"))?;
+        let wb = w.parse::<u8>().map_err(|_| format!("bad wbits in ladder rung '{part}'"))?;
+        let ab = a.parse::<u8>().map_err(|_| format!("bad abits in ladder rung '{part}'"))?;
+        out.push((wb, ab));
+    }
+    if out.is_empty() {
+        return Err("empty ladder (want e.g. 8:8,4:4,2:2)".into());
+    }
+    Ok(out)
+}
+
+/// Input geometry of one tenant's model, resolved once per mix entry.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantShape {
+    pub ci: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Input code-space maximum at the tenant's *nominal* precision; the
+    /// engine re-clamps to the effective rung's space on admission, same
+    /// as any quantizing front-end.
+    pub amax: i32,
+}
+
+/// Open-loop bench configuration.
+#[derive(Debug, Clone)]
+pub struct SloBenchConfig {
+    pub seed: u64,
+    pub workers: usize,
+    pub cache_per_worker: usize,
+    /// Bounded per-worker admission queue; 0 disables shedding.
+    pub queue_depth: usize,
+    /// Key-homogeneous batch ceiling (mirrors `BatcherConfig::max_batch`).
+    pub max_batch: usize,
+    /// Tenants and traffic shares; nominal precision = ladder rung 0.
+    pub mix: Vec<MixEntry>,
+    pub exec: ExecMode,
+    pub ramp: Vec<RampPhase>,
+    /// Windowed-p99 target in simulated cycles; 0 = auto (3 × the
+    /// calibrated full-precision per-image cost).
+    pub p99_target: u64,
+    /// `(wbits, abits)` rungs, full precision first — every tenant in the
+    /// mix gets this ladder.
+    pub ladder: Vec<(u8, u8)>,
+    /// `false` = static baseline: same driver, no controller.
+    pub adaptive: bool,
+    pub window: usize,
+    pub min_samples: usize,
+    /// Dwell between switches in cycles; `None` = auto (4 × base cost).
+    pub dwell: Option<u64>,
+    pub headroom: f64,
+    /// Images per accuracy-proxy evaluation (zoo-backed runs only);
+    /// 0 skips the proxy table (it costs full golden passes).
+    pub proxy_images: usize,
+    /// Keep every `(effective key, image, logits)` triple for bit-identical
+    /// replay verification. Test-sized runs only.
+    pub collect_responses: bool,
+}
+
+impl Default for SloBenchConfig {
+    fn default() -> Self {
+        SloBenchConfig {
+            seed: 42,
+            workers: 2,
+            cache_per_worker: 2,
+            queue_depth: 32,
+            max_batch: 4,
+            mix: Vec::new(),
+            exec: ExecMode::Turbo,
+            ramp: vec![
+                RampPhase { load: 0.5, count: 16 },
+                RampPhase { load: 2.5, count: 48 },
+                RampPhase { load: 0.25, count: 32 },
+            ],
+            p99_target: 0,
+            ladder: vec![(8, 8), (4, 4), (2, 2)],
+            adaptive: true,
+            window: 16,
+            min_samples: 4,
+            dwell: None,
+            headroom: 0.5,
+            proxy_images: 0,
+            collect_responses: false,
+        }
+    }
+}
+
+/// Per-ramp-phase outcome. `tail_p99` is the p99 over the last `window`
+/// completions among requests that *arrived* in the phase — the steady
+/// signal a phase settles to, robust to backlog draining into the next
+/// phase (a final low-load phase lets even a static fleet recover, so
+/// adaptive-vs-static comparisons gate on the overload phase's tail).
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub load: f64,
+    pub count: usize,
+    pub interarrival: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub tail_p99: u64,
+}
+
+/// Per-tenant outcome, including the controller's quality/latency trade.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub tenant: ModelKey,
+    pub p99_target: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub within_target: u64,
+    pub attainment: f64,
+    pub final_bits: (u8, u8),
+    pub degrades: u64,
+    pub restores: u64,
+    pub time_weighted_bits: (f64, f64),
+    /// `(wbits, abits, cycles)` actually spent per rung.
+    pub time_at_level: Vec<(u8, u8, u64)>,
+    /// Accuracy proxy per ladder rung (golden top-1 agreement with the
+    /// reference precision); empty when skipped or unresolvable.
+    pub proxy: Vec<((u8, u8), f64)>,
+    /// Time-weighted accuracy proxy over the run — the single number for
+    /// "what did degrading cost in quality".
+    pub time_weighted_proxy: Option<f64>,
+    pub events: Vec<SwitchEvent>,
+}
+
+/// One served request kept for bit-identical replay verification.
+#[derive(Debug, Clone)]
+pub struct CollectedResponse {
+    /// The *effective* (controller-selected) key that served the request.
+    pub key: ModelKey,
+    pub image: Vec<f32>,
+    pub logits: Vec<f32>,
+}
+
+/// The machine-readable result of one open-loop run; [`Self::to_json`]
+/// renders the `BENCH_slo.json` document.
+#[derive(Debug, Clone)]
+pub struct SloBenchReport {
+    pub schema: &'static str,
+    pub seed: u64,
+    pub adaptive: bool,
+    pub workers: usize,
+    pub cache_per_worker: usize,
+    pub queue_depth: usize,
+    pub max_batch: usize,
+    pub exec: ExecMode,
+    pub mix: Vec<MixEntry>,
+    pub ladder: Vec<(u8, u8)>,
+    /// Calibrated full-precision per-image cost (cycles) load factors are
+    /// relative to.
+    pub base_cost: u64,
+    /// Resolved windowed-p99 target (cycles).
+    pub p99_target: u64,
+    /// Resolved dwell (cycles).
+    pub dwell: u64,
+    pub window: usize,
+    pub min_samples: usize,
+    pub headroom: f64,
+    /// Virtual time of the last completion.
+    pub total_cycles: u64,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub failed: u64,
+    pub degrades: u64,
+    pub restores: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub reload_words_loaded: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub p50: u64,
+    pub p99: u64,
+    /// Simulated throughput at 250 MHz over the whole run.
+    pub throughput_fps: f64,
+    pub phases: Vec<PhaseReport>,
+    /// Sampled `(virtual time, windowed p99)` points — the p99 trajectory.
+    pub trajectory: Vec<(u64, u64)>,
+    pub tenants: Vec<TenantReport>,
+    /// Populated only with [`SloBenchConfig::collect_responses`]; never
+    /// serialized.
+    pub responses: Vec<CollectedResponse>,
+}
+
+/// Nearest-rank percentile (the repo-wide convention): `ceil(n·p)`-th of
+/// the sorted values.
+fn percentile(values: &mut [u64], p: f64) -> u64 {
+    if values.is_empty() {
+        return 0;
+    }
+    values.sort_unstable();
+    let rank = (values.len() as f64 * p).ceil() as usize;
+    values[rank.clamp(1, values.len()) - 1]
+}
+
+fn bits_str(b: (u8, u8)) -> String {
+    format!("{}:{}", b.0, b.1)
+}
+
+impl SloBenchReport {
+    /// Serialize as a stable, dependency-free JSON document (everything
+    /// but `responses`).
+    pub fn to_json(&self) -> String {
+        let mix: Vec<String> = self
+            .mix
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"key\": {}, \"weight\": {}}}",
+                    json_str(&e.key.to_string()),
+                    json_num(e.weight)
+                )
+            })
+            .collect();
+        let ladder: Vec<String> = self.ladder.iter().map(|&b| json_str(&bits_str(b))).collect();
+        let phases: Vec<String> = self
+            .phases
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"load\": {}, \"count\": {}, \"interarrival_cycles\": {}, \
+                     \"completed\": {}, \"shed\": {}, \"tail_p99_cycles\": {}}}",
+                    json_num(p.load),
+                    p.count,
+                    p.interarrival,
+                    p.completed,
+                    p.shed,
+                    p.tail_p99
+                )
+            })
+            .collect();
+        let trajectory: Vec<String> = self
+            .trajectory
+            .iter()
+            .map(|&(t, p99)| format!("{{\"t\": {t}, \"p99\": {p99}}}"))
+            .collect();
+        let mut events: Vec<&SwitchEvent> =
+            self.tenants.iter().flat_map(|t| t.events.iter()).collect();
+        events.sort_by_key(|e| e.at);
+        let events: Vec<String> = events
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"at\": {}, \"tenant\": {}, \"kind\": {}, \"trigger\": {}, \
+                     \"from\": {}, \"to\": {}, \"windowed_p99\": {}}}",
+                    e.at,
+                    json_str(&e.tenant.to_string()),
+                    json_str(&e.kind.to_string()),
+                    json_str(&e.trigger.to_string()),
+                    json_str(&bits_str(e.from)),
+                    json_str(&bits_str(e.to)),
+                    e.windowed_p99
+                )
+            })
+            .collect();
+        let tenants: Vec<String> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let proxy: Vec<String> = t
+                    .proxy
+                    .iter()
+                    .map(|&(b, v)| {
+                        format!("{{\"bits\": {}, \"agreement\": {}}}", json_str(&bits_str(b)), json_num(v))
+                    })
+                    .collect();
+                let levels: Vec<String> = t
+                    .time_at_level
+                    .iter()
+                    .map(|&(w, a, c)| {
+                        format!("{{\"bits\": {}, \"cycles\": {c}}}", json_str(&bits_str((w, a))))
+                    })
+                    .collect();
+                format!(
+                    "{{\"tenant\": {}, \"p99_target_cycles\": {}, \"completed\": {}, \
+                     \"shed\": {}, \"within_target\": {}, \"attainment\": {}, \
+                     \"final_bits\": {}, \"degrades\": {}, \"restores\": {}, \
+                     \"time_weighted_wbits\": {}, \"time_weighted_abits\": {}, \
+                     \"time_at_level\": [{}], \"proxy\": [{}], \"time_weighted_proxy\": {}}}",
+                    json_str(&t.tenant.to_string()),
+                    t.p99_target,
+                    t.completed,
+                    t.shed,
+                    t.within_target,
+                    json_num(t.attainment),
+                    json_str(&bits_str(t.final_bits)),
+                    t.degrades,
+                    t.restores,
+                    json_num(t.time_weighted_bits.0),
+                    json_num(t.time_weighted_bits.1),
+                    levels.join(", "),
+                    proxy.join(", "),
+                    t.time_weighted_proxy.map_or("null".into(), json_num),
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"schema\": {},\n  \"seed\": {},\n  \"adaptive\": {},\n  \"exec\": {},\n  \
+             \"workers\": {},\n  \"cache_per_worker\": {},\n  \"queue_depth\": {},\n  \
+             \"max_batch\": {},\n  \"mix\": [{}],\n  \"ladder\": [{}],\n  \
+             \"base_cost_cycles\": {},\n  \"p99_target_cycles\": {},\n  \"dwell_cycles\": {},\n  \
+             \"window\": {},\n  \"min_samples\": {},\n  \"headroom\": {},\n  \
+             \"total_cycles\": {},\n  \"arrivals\": {},\n  \"completed\": {},\n  \"shed\": {},\n  \
+             \"failed\": {},\n  \"degrades\": {},\n  \"restores\": {},\n  \"cache_hits\": {},\n  \
+             \"cache_misses\": {},\n  \"reload_words_loaded\": {},\n  \"batches\": {},\n  \
+             \"mean_batch_size\": {},\n  \"p50_cycles\": {},\n  \"p99_cycles\": {},\n  \
+             \"throughput_fps\": {},\n  \"phases\": [{}],\n  \"trajectory\": [{}],\n  \
+             \"events\": [{}],\n  \"tenants\": [{}]\n}}\n",
+            json_str(self.schema),
+            self.seed,
+            self.adaptive,
+            json_str(&self.exec.to_string()),
+            self.workers,
+            self.cache_per_worker,
+            self.queue_depth,
+            self.max_batch,
+            mix.join(", "),
+            ladder.join(", "),
+            self.base_cost,
+            self.p99_target,
+            self.dwell,
+            self.window,
+            self.min_samples,
+            json_num(self.headroom),
+            self.total_cycles,
+            self.arrivals,
+            self.completed,
+            self.shed,
+            self.failed,
+            self.degrades,
+            self.restores,
+            self.cache_hits,
+            self.cache_misses,
+            self.reload_words_loaded,
+            self.batches,
+            json_num(self.mean_batch_size),
+            self.p50,
+            self.p99,
+            json_num(self.throughput_fps),
+            phases.join(", "),
+            trajectory.join(", "),
+            events.join(", "),
+            tenants.join(", ")
+        )
+    }
+}
+
+/// One in-flight request.
+struct Job {
+    tenant: usize,
+    phase: usize,
+    arrival: u64,
+    effective: ModelKey,
+    img: Vec<f32>,
+}
+
+struct DesWorker {
+    queue: VecDeque<Job>,
+    cache: SessionCache,
+    busy: bool,
+}
+
+struct FinishedJob {
+    job: Job,
+    result: Result<(Vec<f32>, u64), String>,
+}
+
+/// A batch retiring at `done`; ordered for the completion min-heap.
+struct DoneBatch {
+    done: u64,
+    id: u64,
+    worker: usize,
+    jobs: Vec<FinishedJob>,
+}
+
+impl PartialEq for DoneBatch {
+    fn eq(&self, other: &Self) -> bool {
+        (self.done, self.id) == (other.done, other.id)
+    }
+}
+impl Eq for DoneBatch {}
+impl PartialOrd for DoneBatch {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for DoneBatch {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-done first.
+        (other.done, other.id).cmp(&(self.done, self.id))
+    }
+}
+
+/// Mutable run state for one DES execution.
+struct Des<'a> {
+    cfg: &'a SloBenchConfig,
+    factory: &'a KeyedEngineFactory,
+    ctl: Option<SloController>,
+    p99_target: u64,
+    workers: Vec<DesWorker>,
+    heap: BinaryHeap<DoneBatch>,
+    next_batch: u64,
+    // Counters and logs.
+    completed: u64,
+    shed: u64,
+    failed: u64,
+    degrades: u64,
+    restores: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    reload_words: u64,
+    batches: u64,
+    batch_frames: u64,
+    latencies: Vec<u64>,
+    window: VecDeque<u64>,
+    trajectory: Vec<(u64, u64)>,
+    traj_stride: u64,
+    phase_completed: Vec<u64>,
+    phase_shed: Vec<u64>,
+    phase_lat: Vec<Vec<u64>>,
+    tenant_completed: Vec<u64>,
+    tenant_shed: Vec<u64>,
+    tenant_within: Vec<u64>,
+    last_done: u64,
+    responses: Vec<CollectedResponse>,
+}
+
+impl Des<'_> {
+    fn drain_until(&mut self, t: u64) -> Result<(), String> {
+        while self.heap.peek().is_some_and(|b| b.done <= t) {
+            let batch = self.heap.pop().expect("peeked");
+            self.complete(batch)?;
+        }
+        Ok(())
+    }
+
+    fn complete(&mut self, batch: DoneBatch) -> Result<(), String> {
+        let done = batch.done;
+        self.last_done = self.last_done.max(done);
+        for fj in batch.jobs {
+            match fj.result {
+                Ok((logits, _cycles)) => {
+                    let latency = done - fj.job.arrival;
+                    self.completed += 1;
+                    self.phase_completed[fj.job.phase] += 1;
+                    self.phase_lat[fj.job.phase].push(latency);
+                    self.tenant_completed[fj.job.tenant] += 1;
+                    if latency <= self.p99_target {
+                        self.tenant_within[fj.job.tenant] += 1;
+                    }
+                    self.latencies.push(latency);
+                    self.window.push_back(latency);
+                    while self.window.len() > self.cfg.window {
+                        self.window.pop_front();
+                    }
+                    if self.completed % self.traj_stride == 0 {
+                        let mut w: Vec<u64> = self.window.iter().copied().collect();
+                        self.trajectory.push((done, percentile(&mut w, 0.99)));
+                    }
+                    if let Some(ctl) = &self.ctl {
+                        if let Some(ev) = ctl.observe(&fj.job.effective, latency, done) {
+                            self.count_switch(&ev);
+                        }
+                    }
+                    if self.cfg.collect_responses {
+                        self.responses.push(CollectedResponse {
+                            key: fj.job.effective,
+                            image: fj.job.img,
+                            logits,
+                        });
+                    }
+                }
+                Err(_) => self.failed += 1,
+            }
+        }
+        if !self.workers[batch.worker].queue.is_empty() {
+            self.start_batch(batch.worker, done)?;
+        } else {
+            self.workers[batch.worker].busy = false;
+        }
+        Ok(())
+    }
+
+    fn count_switch(&mut self, ev: &SwitchEvent) {
+        match ev.kind {
+            SwitchKind::Degrade => self.degrades += 1,
+            SwitchKind::Restore => self.restores += 1,
+        }
+    }
+
+    fn admit(&mut self, nominal: &ModelKey, tenant: usize, phase: usize, t: u64, img: Vec<f32>) -> Result<(), String> {
+        let effective = match &self.ctl {
+            Some(ctl) => ctl.admit(nominal, t),
+            None => nominal.clone(),
+        };
+        // Affinity routing, mirroring `Router::route_affine`: least-loaded
+        // among workers already holding the key warm, else least-loaded
+        // overall (cache size as tiebreak — prefer admitting to emptier
+        // caches).
+        let load = |w: &DesWorker| w.queue.len() + usize::from(w.busy);
+        let best = (0..self.workers.len())
+            .min_by_key(|&i| {
+                let w = &self.workers[i];
+                (!w.cache.contains(&effective), load(w), w.cache.len(), i)
+            })
+            .expect("at least one worker");
+        if self.cfg.queue_depth > 0 && self.workers[best].queue.len() >= self.cfg.queue_depth {
+            self.shed += 1;
+            self.phase_shed[phase] += 1;
+            self.tenant_shed[tenant] += 1;
+            if let Some(ctl) = &self.ctl {
+                if let Some(ev) = ctl.on_shed(nominal, t) {
+                    self.count_switch(&ev);
+                }
+            }
+            return Ok(());
+        }
+        self.workers[best].queue.push_back(Job { tenant, phase, arrival: t, effective, img });
+        if !self.workers[best].busy {
+            self.start_batch(best, t)?;
+        }
+        Ok(())
+    }
+
+    /// Pull a key-homogeneous batch (the front job's key, up to
+    /// `max_batch`, preserving the order of the rest — `Batcher::take_key`
+    /// semantics) and put the worker into service.
+    fn start_batch(&mut self, widx: usize, now: u64) -> Result<(), String> {
+        let key = self.workers[widx].queue.front().expect("non-empty queue").effective.clone();
+        let mut jobs = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(job) = self.workers[widx].queue.pop_front() {
+            if jobs.len() < self.cfg.max_batch && job.effective == key {
+                jobs.push(job);
+            } else {
+                rest.push_back(job);
+            }
+        }
+        self.workers[widx].queue = rest;
+
+        let mut penalty = 0u64;
+        if !self.workers[widx].cache.contains(&key) {
+            let built = (self.factory)(&key)?;
+            penalty = built.resident_words;
+            self.cache_misses += 1;
+            self.reload_words += penalty;
+            self.workers[widx].cache.insert(key.clone(), built);
+        } else {
+            self.cache_hits += 1;
+        }
+        let images: Vec<Vec<f32>> = jobs.iter().map(|j| j.img.clone()).collect();
+        let engine = self.workers[widx].cache.get_mut(&key).expect("just ensured");
+        let results = engine.infer_batch(&images);
+        // Streamed batches advance the clock by pipeline cycles (frames
+        // overlap across MVU stages); serial execution by the per-image
+        // sum. Weight reloads are modelled at 1 word/cycle on a miss.
+        let exec_cycles = match engine.take_stream_stats() {
+            Some(st) => st.pipeline_cycles,
+            None => results.iter().filter_map(|r| r.as_ref().ok().map(|&(_, c)| c)).sum(),
+        };
+        let done = now + penalty + exec_cycles.max(1);
+        self.batches += 1;
+        self.batch_frames += jobs.len() as u64;
+        self.workers[widx].busy = true;
+        let id = self.next_batch;
+        self.next_batch += 1;
+        self.heap.push(DoneBatch {
+            done,
+            id,
+            worker: widx,
+            jobs: jobs.into_iter().zip(results).map(|(job, result)| FinishedJob { job, result }).collect(),
+        });
+        Ok(())
+    }
+}
+
+/// Calibrate the full-precision per-image cost: one seeded image per mix
+/// tenant through a fresh engine, weighted mean of the reported cycles.
+fn calibrate(
+    cfg: &SloBenchConfig,
+    factory: &KeyedEngineFactory,
+    shapes: &[TenantShape],
+) -> Result<u64, String> {
+    let mut rng = Rng(cfg.seed ^ 0xCA11_B8A7_0000_0001);
+    let mut acc = 0.0f64;
+    let mut total_w = 0.0f64;
+    for (e, shape) in cfg.mix.iter().zip(shapes) {
+        let mut built = (factory)(&e.key)?;
+        let img: Vec<f32> = (0..shape.ci * shape.h * shape.w)
+            .map(|_| rng.range_i32(0, shape.amax) as f32)
+            .collect();
+        let mut results = built.engine.infer_batch(&[img]);
+        let (_, cycles) = results
+            .pop()
+            .ok_or("calibration run returned nothing")?
+            .map_err(|err| format!("calibration run failed for '{}': {err}", e.key))?;
+        acc += e.weight * cycles as f64;
+        total_w += e.weight;
+    }
+    Ok(((acc / total_w).round() as u64).max(1))
+}
+
+/// Run the open-loop bench against an arbitrary engine factory and shape
+/// resolver — the test seam ([`run_slo_bench`] binds both to the zoo).
+/// Accuracy-proxy tables are left empty; zoo-backed callers fill them.
+pub fn run_slo_bench_with(
+    cfg: &SloBenchConfig,
+    factory: &KeyedEngineFactory,
+    resolve_shape: &dyn Fn(&ModelKey) -> Result<TenantShape, String>,
+) -> Result<SloBenchReport, String> {
+    if cfg.mix.is_empty() {
+        return Err("bench mix is empty".into());
+    }
+    if cfg.workers == 0 {
+        return Err("need at least one worker".into());
+    }
+    let shapes: Vec<TenantShape> =
+        cfg.mix.iter().map(|e| resolve_shape(&e.key)).collect::<Result<_, _>>()?;
+    let base_cost = calibrate(cfg, factory, &shapes)?;
+    let p99_target = if cfg.p99_target > 0 { cfg.p99_target } else { 3 * base_cost };
+    let dwell = cfg.dwell.unwrap_or(4 * base_cost);
+
+    let ctl = if cfg.adaptive {
+        let policies: Vec<(ModelKey, SloPolicy)> = cfg
+            .mix
+            .iter()
+            .map(|e| {
+                (
+                    e.key.clone(),
+                    SloPolicy {
+                        p99_target,
+                        ladder: cfg.ladder.clone(),
+                        window: cfg.window,
+                        min_samples: cfg.min_samples,
+                        dwell,
+                        headroom: cfg.headroom,
+                        ..SloPolicy::default()
+                    },
+                )
+            })
+            .collect();
+        Some(SloController::new(policies)?)
+    } else {
+        None
+    };
+
+    let total_arrivals: usize = cfg.ramp.iter().map(|p| p.count).sum();
+    let total_weight: f64 = cfg.mix.iter().map(|e| e.weight).sum();
+    let mut des = Des {
+        cfg,
+        factory,
+        ctl,
+        p99_target,
+        workers: (0..cfg.workers)
+            .map(|_| DesWorker {
+                queue: VecDeque::new(),
+                cache: SessionCache::new(cfg.cache_per_worker),
+                busy: false,
+            })
+            .collect(),
+        heap: BinaryHeap::new(),
+        next_batch: 0,
+        completed: 0,
+        shed: 0,
+        failed: 0,
+        degrades: 0,
+        restores: 0,
+        cache_hits: 0,
+        cache_misses: 0,
+        reload_words: 0,
+        batches: 0,
+        batch_frames: 0,
+        latencies: Vec::with_capacity(total_arrivals),
+        window: VecDeque::new(),
+        trajectory: Vec::new(),
+        traj_stride: (total_arrivals as u64 / 192).max(1),
+        phase_completed: vec![0; cfg.ramp.len()],
+        phase_shed: vec![0; cfg.ramp.len()],
+        phase_lat: vec![Vec::new(); cfg.ramp.len()],
+        tenant_completed: vec![0; cfg.mix.len()],
+        tenant_shed: vec![0; cfg.mix.len()],
+        tenant_within: vec![0; cfg.mix.len()],
+        last_done: 0,
+        responses: Vec::new(),
+    };
+
+    // Open-loop arrivals on the virtual clock: interarrival =
+    // base_cost / (workers × load), accumulated in f64 so fractional
+    // spacings don't drift.
+    let mut rng = Rng(cfg.seed ^ 0x510B_E4C4_0000_0001);
+    let mut clock = 0.0f64;
+    for (pidx, phase) in cfg.ramp.iter().enumerate() {
+        let interarrival = base_cost as f64 / (cfg.workers as f64 * phase.load);
+        for _ in 0..phase.count {
+            clock += interarrival;
+            let t = clock as u64;
+            des.drain_until(t)?;
+            let x = ((rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64) * total_weight;
+            let mut tenant = cfg.mix.len() - 1;
+            let mut acc = 0.0;
+            for (i, e) in cfg.mix.iter().enumerate() {
+                acc += e.weight;
+                if x < acc {
+                    tenant = i;
+                    break;
+                }
+            }
+            let shape = &shapes[tenant];
+            let img: Vec<f32> = (0..shape.ci * shape.h * shape.w)
+                .map(|_| rng.range_i32(0, shape.amax) as f32)
+                .collect();
+            let nominal = cfg.mix[tenant].key.clone();
+            des.admit(&nominal, tenant, pidx, t, img)?;
+        }
+    }
+    // Ramp over: drain every outstanding batch.
+    while let Some(batch) = des.heap.pop() {
+        des.complete(batch)?;
+    }
+
+    let total_cycles = des.last_done;
+    let p50 = percentile(&mut des.latencies.clone(), 0.50);
+    let p99 = percentile(&mut des.latencies.clone(), 0.99);
+    let phases: Vec<PhaseReport> = cfg
+        .ramp
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let lat = &des.phase_lat[i];
+            let tail_from = lat.len().saturating_sub(cfg.window);
+            let mut tail: Vec<u64> = lat[tail_from..].to_vec();
+            PhaseReport {
+                load: p.load,
+                count: p.count,
+                interarrival: (base_cost as f64 / (cfg.workers as f64 * p.load)).round() as u64,
+                completed: des.phase_completed[i],
+                shed: des.phase_shed[i],
+                tail_p99: percentile(&mut tail, 0.99),
+            }
+        })
+        .collect();
+
+    // Per-tenant reports: controller snapshot when adaptive (it owns the
+    // switch history), harness counters otherwise.
+    let tenants: Vec<TenantReport> = match &des.ctl {
+        Some(ctl) => {
+            let mut snaps = ctl.snapshot(total_cycles);
+            snaps.sort_by_key(|s| {
+                cfg.mix.iter().position(|e| {
+                    e.key.model == s.tenant.model && e.key.mode == s.tenant.mode
+                })
+            });
+            snaps
+                .into_iter()
+                .map(|s| TenantReport {
+                    attainment: s.attainment(),
+                    time_weighted_bits: s.time_weighted_bits(),
+                    tenant: s.tenant,
+                    p99_target: s.p99_target,
+                    completed: s.completed,
+                    shed: s.shed,
+                    within_target: s.within_target,
+                    final_bits: s.effective,
+                    degrades: s.degrades,
+                    restores: s.restores,
+                    time_at_level: s.time_at_level,
+                    proxy: Vec::new(),
+                    time_weighted_proxy: None,
+                    events: s.events,
+                })
+                .collect()
+        }
+        None => cfg
+            .mix
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let completed = des.tenant_completed[i];
+                let within = des.tenant_within[i];
+                let bits = (e.key.wbits, e.key.abits);
+                TenantReport {
+                    tenant: e.key.clone(),
+                    p99_target,
+                    completed,
+                    shed: des.tenant_shed[i],
+                    within_target: within,
+                    attainment: if completed == 0 { 1.0 } else { within as f64 / completed as f64 },
+                    final_bits: bits,
+                    degrades: 0,
+                    restores: 0,
+                    time_weighted_bits: (bits.0 as f64, bits.1 as f64),
+                    time_at_level: vec![(bits.0, bits.1, total_cycles)],
+                    proxy: Vec::new(),
+                    time_weighted_proxy: None,
+                    events: Vec::new(),
+                }
+            })
+            .collect(),
+    };
+
+    Ok(SloBenchReport {
+        schema: SCHEMA,
+        seed: cfg.seed,
+        adaptive: cfg.adaptive,
+        workers: cfg.workers,
+        cache_per_worker: cfg.cache_per_worker,
+        queue_depth: cfg.queue_depth,
+        max_batch: cfg.max_batch,
+        exec: cfg.exec,
+        mix: cfg.mix.clone(),
+        ladder: cfg.ladder.clone(),
+        base_cost,
+        p99_target,
+        dwell,
+        window: cfg.window,
+        min_samples: cfg.min_samples,
+        headroom: cfg.headroom,
+        total_cycles,
+        arrivals: total_arrivals as u64,
+        completed: des.completed,
+        shed: des.shed,
+        failed: des.failed,
+        degrades: des.degrades,
+        restores: des.restores,
+        cache_hits: des.cache_hits,
+        cache_misses: des.cache_misses,
+        reload_words_loaded: des.reload_words,
+        batches: des.batches,
+        mean_batch_size: if des.batches > 0 {
+            des.batch_frames as f64 / des.batches as f64
+        } else {
+            0.0
+        },
+        p50,
+        p99,
+        throughput_fps: if total_cycles > 0 {
+            des.completed as f64 / total_cycles as f64 * CLOCK_HZ as f64
+        } else {
+            0.0
+        },
+        phases,
+        trajectory: des.trajectory,
+        tenants,
+        responses: des.responses,
+    })
+}
+
+/// Zoo-backed open-loop run (the `bench-serve --adaptive` entry point):
+/// engines come from [`zoo_engine_factory`], input shapes from the zoo
+/// models, and each tenant's accuracy-proxy table from
+/// [`zoo::accuracy_proxy_table`] when `proxy_images > 0`.
+pub fn run_slo_bench(cfg: &SloBenchConfig) -> Result<SloBenchReport, String> {
+    let factory = zoo_engine_factory(cfg.exec);
+    let resolve = |key: &ModelKey| -> Result<TenantShape, String> {
+        let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
+            .ok_or_else(|| format!("unknown zoo model '{}' in mix", key.model))?;
+        let l0 = &model.layers[0];
+        Ok(TenantShape { ci: l0.ci, h: l0.in_h, w: l0.in_w, amax: l0.aprec.max_value() })
+    };
+    let mut report = run_slo_bench_with(cfg, &factory, &resolve)?;
+    if cfg.proxy_images > 0 {
+        for t in &mut report.tenants {
+            let ladder = if cfg.adaptive { cfg.ladder.clone() } else { vec![t.final_bits] };
+            if let Some(table) = zoo::accuracy_proxy_table(&t.tenant.model, &ladder, cfg.proxy_images)
+            {
+                let total: u64 = t.time_at_level.iter().map(|&(_, _, c)| c).sum();
+                if total > 0 {
+                    let weighted: f64 = t
+                        .time_at_level
+                        .iter()
+                        .filter_map(|&(w, a, c)| {
+                            table
+                                .iter()
+                                .find(|&&(b, _)| b == (w, a))
+                                .map(|&(_, p)| p * c as f64)
+                        })
+                        .sum();
+                    t.time_weighted_proxy = Some(weighted / total as f64);
+                }
+                t.proxy = table;
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, KeyedEngine};
+    use std::sync::Arc;
+
+    #[test]
+    fn parse_ramp_accepts_phases_and_rejects_garbage() {
+        let ramp = parse_ramp("0.5x32,2.5x64,0.25x48").unwrap();
+        assert_eq!(ramp.len(), 3);
+        assert_eq!(ramp[1], RampPhase { load: 2.5, count: 64 });
+        assert!(parse_ramp("").is_err());
+        assert!(parse_ramp("2.5").is_err());
+        assert!(parse_ramp("0x10").is_err());
+        assert!(parse_ramp("-1x10").is_err());
+        assert!(parse_ramp("NaNx10").is_err());
+        assert!(parse_ramp("1.0x0").is_err());
+    }
+
+    #[test]
+    fn parse_ladder_accepts_rungs_and_rejects_garbage() {
+        assert_eq!(parse_ladder("8:8,4:4,2:2").unwrap(), vec![(8, 8), (4, 4), (2, 2)]);
+        assert_eq!(parse_ladder("8:2").unwrap(), vec![(8, 2)]);
+        assert!(parse_ladder("").is_err());
+        assert!(parse_ladder("8").is_err());
+        assert!(parse_ladder("w:a").is_err());
+    }
+
+    /// A cycle-cost-only engine: logits encode the serving precision (so
+    /// tests can prove which rung answered), cycles scale with
+    /// wbits × abits like the bit-serial MVU's runtime does.
+    struct FakeEngine {
+        wbits: u8,
+        abits: u8,
+    }
+
+    impl Engine for FakeEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            images
+                .iter()
+                .map(|img| {
+                    let sum: f32 = img.iter().sum();
+                    let cost = 100 * self.wbits as u64 * self.abits as u64;
+                    Ok((vec![sum + 1000.0 * self.wbits as f32], cost))
+                })
+                .collect()
+        }
+    }
+
+    fn fake_factory() -> KeyedEngineFactory {
+        Arc::new(|key: &ModelKey| -> Result<KeyedEngine, String> {
+            Ok(KeyedEngine {
+                engine: Box::new(FakeEngine { wbits: key.wbits, abits: key.abits }),
+                resident_words: 64 * key.wbits as u64,
+            })
+        })
+    }
+
+    fn fake_shape(_: &ModelKey) -> Result<TenantShape, String> {
+        Ok(TenantShape { ci: 1, h: 2, w: 2, amax: 3 })
+    }
+
+    fn overload_cfg() -> SloBenchConfig {
+        SloBenchConfig {
+            workers: 1,
+            cache_per_worker: 3,
+            queue_depth: 0,
+            max_batch: 2,
+            mix: vec![MixEntry { key: "m:8:8".parse().unwrap(), weight: 1.0 }],
+            ramp: vec![
+                RampPhase { load: 0.5, count: 12 },
+                RampPhase { load: 3.0, count: 40 },
+                RampPhase { load: 0.2, count: 30 },
+            ],
+            window: 8,
+            min_samples: 4,
+            ..SloBenchConfig::default()
+        }
+    }
+
+    #[test]
+    fn adaptive_run_degrades_restores_and_reports() {
+        let cfg = overload_cfg();
+        let factory = fake_factory();
+        let report = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        assert_eq!(report.base_cost, 6400, "calibrated at the 8:8 rung");
+        assert_eq!(report.p99_target, 3 * 6400, "auto target");
+        assert_eq!(report.arrivals, 82);
+        assert_eq!(report.completed, 82, "queue_depth 0 sheds nothing");
+        assert_eq!(report.failed, 0);
+        assert!(report.degrades >= 1, "overload phase must degrade");
+        assert!(report.restores >= 1, "recede phase must restore");
+        assert_eq!(report.tenants.len(), 1);
+        assert_eq!(report.tenants[0].final_bits, (8, 8), "restored to full precision");
+        let last = report.phases.last().unwrap();
+        assert!(
+            last.tail_p99 <= report.p99_target,
+            "settled tail p99 {} must meet target {}",
+            last.tail_p99,
+            report.p99_target
+        );
+        assert!(!report.trajectory.is_empty());
+        assert!(report.tenants[0].events.len() as u64 >= report.degrades);
+
+        let json = report.to_json();
+        for needle in [
+            "\"schema\": \"barvinn.bench_slo/v1\"",
+            "\"adaptive\": true",
+            "\"base_cost_cycles\": 6400",
+            "\"kind\": \"degrade\"",
+            "\"kind\": \"restore\"",
+            "\"final_bits\": \"8:8\"",
+            "\"phases\": [{\"load\": 0.5",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        let count = |c: char| json.chars().filter(|&x| x == c).count();
+        assert_eq!(count('{'), count('}'));
+        assert_eq!(count('['), count(']'));
+    }
+
+    #[test]
+    fn adaptive_holds_overload_tail_where_static_breaches() {
+        let cfg = overload_cfg();
+        let factory = fake_factory();
+        let adaptive = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        let static_cfg = SloBenchConfig { adaptive: false, ..overload_cfg() };
+        let stat = run_slo_bench_with(&static_cfg, &factory, &fake_shape).unwrap();
+        assert_eq!(stat.degrades, 0);
+        assert_eq!(stat.base_cost, adaptive.base_cost, "same calibration");
+        // The overload phase (index 1): static queues without relief and
+        // its settled tail breaches; adaptive holds it within target.
+        assert!(
+            stat.phases[1].tail_p99 > stat.p99_target,
+            "static overload tail {} should breach target {}",
+            stat.phases[1].tail_p99,
+            stat.p99_target
+        );
+        assert!(
+            adaptive.phases[1].tail_p99 <= adaptive.p99_target,
+            "adaptive overload tail {} should hold target {}",
+            adaptive.phases[1].tail_p99,
+            adaptive.p99_target
+        );
+        assert!(adaptive.total_cycles <= stat.total_cycles, "adaptive finishes no later");
+    }
+
+    #[test]
+    fn run_is_deterministic() {
+        let cfg = overload_cfg();
+        let factory = fake_factory();
+        let a = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        let b = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn bounded_queue_sheds_and_controller_reacts() {
+        let cfg = SloBenchConfig { queue_depth: 2, ..overload_cfg() };
+        let factory = fake_factory();
+        let report = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        assert!(report.shed > 0, "depth-2 queue under 3x load must shed");
+        assert_eq!(report.completed + report.shed, report.arrivals);
+        assert!(report.degrades >= 1);
+        assert_eq!(report.tenants[0].shed, report.shed);
+    }
+
+    #[test]
+    fn collected_responses_echo_effective_keys() {
+        let cfg = SloBenchConfig { collect_responses: true, ..overload_cfg() };
+        let factory = fake_factory();
+        let report = run_slo_bench_with(&cfg, &factory, &fake_shape).unwrap();
+        assert_eq!(report.responses.len(), report.completed as usize);
+        // Under overload some responses must have been served degraded,
+        // and the logits encode the rung that served them.
+        let degraded = report.responses.iter().filter(|r| r.key.wbits < 8).count();
+        assert!(degraded > 0, "no degraded responses under 3x overload");
+        for r in &report.responses {
+            let sum: f32 = r.image.iter().sum();
+            assert_eq!(r.logits[0], sum + 1000.0 * r.key.wbits as f32);
+        }
+    }
+}

@@ -504,19 +504,6 @@ impl SessionMetrics {
         clock_hz as f64 / (self.total_bottleneck_cycles as f64 / self.images as f64)
     }
 
-    /// The pre-streaming "FPS estimate". Deprecated as ambiguous: it
-    /// reported the steady-state *bound* while execution was serial — the
-    /// number bench-serve could never measure. Pick the explicit one:
-    /// [`Self::serial_fps_at`] (what `run()` achieves),
-    /// [`Self::streamed_fps_at`] (what batches achieve) or
-    /// [`Self::steady_state_fps_bound_at`] (the lap-model bound).
-    #[deprecated(
-        since = "0.1.0",
-        note = "ambiguous: use serial_fps_at, streamed_fps_at or steady_state_fps_bound_at"
-    )]
-    pub fn fps_at(&self, clock_hz: u64) -> f64 {
-        self.steady_state_fps_bound_at(clock_hz)
-    }
 }
 
 /// Cycle accounting of one streamed batch: the fill + steady-state + drain
@@ -1298,17 +1285,9 @@ mod tests {
             metrics.serial_fps_at(crate::CLOCK_HZ)
                 <= metrics.steady_state_fps_bound_at(crate::CLOCK_HZ)
         );
-        // Nothing streamed yet: the streamed rate reports 0, and the
-        // deprecated alias still answers with the old (bound) model.
+        // Nothing streamed yet: the streamed rate reports 0.
         assert_eq!(metrics.streamed_images, 0);
         assert_eq!(metrics.streamed_fps_at(crate::CLOCK_HZ), 0.0);
-        #[allow(deprecated)]
-        {
-            assert_eq!(
-                metrics.fps_at(crate::CLOCK_HZ),
-                metrics.steady_state_fps_bound_at(crate::CLOCK_HZ)
-            );
-        }
     }
 
     #[test]

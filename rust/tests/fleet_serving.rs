@@ -88,6 +88,7 @@ fn run_workload(
             cache_per_worker: 1,
             batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
             policy,
+            queue_depth: 0,
         },
     );
     let a = ModelKey::new("tiny9", 2, 2, ExecutionMode::Auto);
@@ -182,6 +183,7 @@ fn streamed_batches_double_throughput_with_identical_logits() {
                 // occupied; the long wait keeps the batch whole.
                 batch: BatcherConfig { max_batch: 6, max_wait: Duration::from_millis(500) },
                 policy: RoutingPolicy::Affinity,
+                queue_depth: 0,
             },
         );
         let key = ModelKey::new("tiny9", 2, 2, ExecutionMode::Auto);
@@ -248,6 +250,192 @@ fn tenants_differ_numerically() {
         engine.infer_batch(std::slice::from_ref(&img)).remove(0).unwrap().0
     };
     assert_ne!(run(2), run(4));
+}
+
+/// First three ResNet9 layers at 8×8: the smallest model that still
+/// pipelines, so the open-loop DES below can serve ~300 requests per
+/// backend inside debug-mode `cargo test -q`.
+fn micro9(a_bits: u8, w_bits: u8) -> Model {
+    let mut m = resnet9_cifar10(a_bits, w_bits);
+    m.layers.truncate(3);
+    let mut h = 8;
+    for l in &mut m.layers {
+        l.in_h = h;
+        l.in_w = h;
+        if l.stride == 2 {
+            h /= 2;
+        }
+    }
+    m.validate().unwrap();
+    m
+}
+
+/// Engine factory over the micro model family for the SLO bench: the
+/// effective key's precisions select the quantization point, exactly as
+/// the controller expects (degrade = same model, fewer weight bits).
+fn micro_factory(exec: ExecMode) -> KeyedEngineFactory {
+    Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
+        if key.model != "micro9" {
+            return Err(format!("unknown tenant {key}"));
+        }
+        let session = SessionBuilder::new(micro9(key.abits, key.wbits))
+            .mode(key.mode)
+            .exec_mode(exec)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let resident_words = session.resident_words();
+        Ok(KeyedEngine { engine: Box::new(SessionEngine::new(session)), resident_words })
+    })
+}
+
+fn micro_shape(key: &ModelKey) -> Result<barvinn::perf::slo_bench::TenantShape, String> {
+    let m = micro9(key.abits, key.wbits);
+    let l0 = &m.layers[0];
+    Ok(barvinn::perf::slo_bench::TenantShape {
+        ci: l0.ci,
+        h: l0.in_h,
+        w: l0.in_w,
+        amax: l0.aprec.max_value(),
+    })
+}
+
+/// The PR-6 tentpole acceptance: under a ramped overload mix, the adaptive
+/// policy holds windowed p99 ≤ target where the static policy breaches it,
+/// throughput is ≥ the static policy's, and every response is bit-identical
+/// to a serial `InferenceSession` run at whatever precision the controller
+/// selected (no silent numeric drift); precision demonstrably restores to
+/// full when load recedes — under both exec backends.
+///
+/// The ladder keeps activations at 2 bits on every rung so the input code
+/// space is constant and degrading is purely a weight-precision (service
+/// cost) knob — the paper's runtime precision programmability as a load
+/// shedder that never drops a request. A long explicit dwell (12× the
+/// calibrated cost) pins the trajectory: exactly one degrade inside the
+/// overload phase, exactly one restore once load recedes.
+#[test]
+fn adaptive_precision_holds_slo_and_stays_bit_identical() {
+    use barvinn::perf::serve_bench::MixEntry;
+    use barvinn::perf::slo_bench::{run_slo_bench_with, RampPhase, SloBenchConfig};
+
+    let nominal = ModelKey::new("micro9", 8, 2, ExecutionMode::Auto);
+    let base_cfg = SloBenchConfig {
+        seed: 11,
+        workers: 1,
+        cache_per_worker: 3,
+        queue_depth: 0,
+        max_batch: 2,
+        mix: vec![MixEntry { key: nominal.clone(), weight: 1.0 }],
+        ramp: vec![
+            // Warm-up, 3× overload, then recede far below capacity.
+            RampPhase { load: 0.4, count: 6 },
+            RampPhase { load: 3.0, count: 24 },
+            RampPhase { load: 0.15, count: 18 },
+        ],
+        ladder: vec![(8, 2), (2, 2)],
+        window: 6,
+        min_samples: 3,
+        collect_responses: true,
+        ..SloBenchConfig::default()
+    };
+    let n: u64 = base_cfg.ramp.iter().map(|p| p.count as u64).sum();
+
+    let mut adaptive_json_by_backend = Vec::new();
+    let mut adaptive_logits_by_backend = Vec::new();
+    for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+        let factory = micro_factory(exec);
+
+        // Static baseline first: same driver, no controller — and the
+        // calibrated per-image cost the adaptive dwell is pinned to.
+        let stat_cfg = SloBenchConfig { adaptive: false, ..base_cfg.clone() };
+        let stat = run_slo_bench_with(&stat_cfg, &factory, &micro_shape).unwrap();
+        assert!(stat.base_cost > 0, "{exec:?}: calibration must cost cycles");
+        assert_eq!(stat.degrades, 0, "{exec:?}: static run must never switch");
+        assert_eq!((stat.completed, stat.failed, stat.shed), (n, 0, 0), "{exec:?}");
+
+        let adaptive_cfg =
+            SloBenchConfig { dwell: Some(12 * stat.base_cost), ..base_cfg.clone() };
+        let run = run_slo_bench_with(&adaptive_cfg, &factory, &micro_shape).unwrap();
+        assert_eq!((run.completed, run.failed, run.shed), (n, 0, 0), "{exec:?}");
+
+        // Degrade under overload, restore to full precision when load
+        // recedes — and the overload phase's tail p99 holds the target
+        // where the static fleet breaches it.
+        assert!(run.degrades >= 1, "{exec:?}: overload must trigger a degrade");
+        assert!(run.restores >= 1, "{exec:?}: receding load must trigger a restore");
+        assert_eq!(
+            run.tenants[0].final_bits,
+            (8, 2),
+            "{exec:?}: precision must end restored to full"
+        );
+        assert!(
+            stat.phases[1].tail_p99 > stat.p99_target,
+            "{exec:?}: static must breach under 3× load (tail p99 {} ≤ target {})",
+            stat.phases[1].tail_p99,
+            stat.p99_target
+        );
+        assert!(
+            run.phases[1].tail_p99 <= run.p99_target,
+            "{exec:?}: adaptive must hold the target under 3× load (tail p99 {} > {})",
+            run.phases[1].tail_p99,
+            run.p99_target
+        );
+        // Throughput ≥ static: same completed count in no more virtual time.
+        assert!(
+            run.completed >= stat.completed && run.total_cycles <= stat.total_cycles,
+            "{exec:?}: adaptive ({} in {} cy) must not trail static ({} in {} cy)",
+            run.completed,
+            run.total_cycles,
+            stat.completed,
+            stat.total_cycles
+        );
+
+        // Every response bit-identical to a serial session at the
+        // controller-selected precision: no silent numeric drift.
+        assert_eq!(run.responses.len() as u64, run.completed, "{exec:?}");
+        let mut serials: HashMap<ModelKey, _> = HashMap::new();
+        let mut degraded_seen = false;
+        for (i, r) in run.responses.iter().enumerate() {
+            degraded_seen |= r.key.wbits < nominal.wbits;
+            let serial = serials.entry(r.key.clone()).or_insert_with(|| {
+                SessionBuilder::new(micro9(r.key.abits, r.key.wbits))
+                    .mode(r.key.mode)
+                    .exec_mode(exec)
+                    .build()
+                    .unwrap()
+            });
+            let amax = micro_shape(&r.key).unwrap().amax;
+            let input = barvinn::sim::Tensor3 {
+                c: 64,
+                h: 8,
+                w: 8,
+                // The engine's own quantizing front-end clamp.
+                data: r.image.iter().map(|&v| (v as i32).clamp(0, amax)).collect(),
+            };
+            let want: Vec<f32> =
+                serial.run(&input).unwrap().output.data.iter().map(|&v| v as f32).collect();
+            assert_eq!(
+                &r.logits, &want,
+                "{exec:?}: response {i} ({}) drifts from the serial session",
+                r.key
+            );
+        }
+        assert!(degraded_seen, "{exec:?}: some responses must have served degraded");
+
+        adaptive_json_by_backend.push(run.to_json());
+        adaptive_logits_by_backend
+            .push(run.responses.iter().map(|r| r.logits.clone()).collect::<Vec<_>>());
+    }
+    // The DES is driven by engine-reported cycles, which are contractually
+    // backend-invariant: the whole report — trajectory, events, tails —
+    // must be identical across turbo and cycle-accurate, logits included.
+    assert_eq!(
+        adaptive_json_by_backend[0], adaptive_json_by_backend[1],
+        "turbo and cycle-accurate adaptive runs must produce identical reports"
+    );
+    assert_eq!(
+        adaptive_logits_by_backend[0], adaptive_logits_by_backend[1],
+        "turbo and cycle-accurate adaptive runs must serve identical logits"
+    );
 }
 
 /// Release-only smoke of the full `bench-serve` pipeline over the real

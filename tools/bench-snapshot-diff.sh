@@ -1,0 +1,57 @@
+#!/bin/sh
+# Compare the deterministic fields of a fresh bench report against a
+# committed snapshot (bench/*.json).
+#
+# Subset semantics: only keys present in the snapshot are compared — the
+# snapshots deliberately omit every wall-clock- or thread-timing-dependent
+# field (wall_s, p99_ms, cache_hits, sim_cycles, ...), keeping exactly the
+# fields a fixed seed pins (see bench/README.md). Arrays of objects that
+# carry a "key" field (per_key) are matched by key, not position: the
+# metrics snapshot does not guarantee per-key ordering.
+#
+# Usage: sh tools/bench-snapshot-diff.sh <committed-snapshot.json> <fresh-report.json>
+set -eu
+
+if [ "$#" -ne 2 ]; then
+    echo "usage: $0 <committed-snapshot.json> <fresh-report.json>" >&2
+    exit 2
+fi
+snap=$1
+fresh=$2
+
+SUBSET='
+def subset($a; $b):
+  ($a | type) as $t
+  | if $t == "object" then
+      ($b | type) == "object"
+      and (($a | keys_unsorted)
+           | all(. as $k | ($b | has($k)) and subset($a[$k]; $b[$k])))
+    elif $t == "array" then
+      ($b | type) == "array"
+      and (if ($a | length) == 0 then true
+           elif ($a[0] | type) == "object" and ($a[0] | has("key")) then
+             $a | all(. as $e
+               | ($b | map(select(.key == $e.key))) as $m
+               | ($m | length) == 1 and subset($e; $m[0]))
+           else
+             ($a | length) == ($b | length)
+             and ([range($a | length)] | all(. as $i | subset($a[$i]; $b[$i])))
+           end)
+    else
+      $a == $b
+    end;
+'
+
+if jq -e -n --slurpfile want "$snap" --slurpfile got "$fresh" \
+    "$SUBSET subset(\$want[0]; \$got[0])" >/dev/null; then
+    echo "OK: $fresh matches every deterministic field of $snap"
+else
+    echo "MISMATCH: $fresh diverges from the committed snapshot $snap" >&2
+    echo "--- committed deterministic fields ($snap):" >&2
+    cat "$snap" >&2
+    echo "--- fresh report ($fresh):" >&2
+    cat "$fresh" >&2
+    echo "A legitimate behaviour change must update the snapshot in the same PR" >&2
+    echo "(see bench/README.md for what belongs in it)." >&2
+    exit 1
+fi
