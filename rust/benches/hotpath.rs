@@ -1,19 +1,43 @@
 //! §Perf hot-path microbenchmarks: the MVU inner loop, the full pipelined
 //! system (Pito + 8 MVUs) as a cold per-image rebuild vs a warm
 //! weight-resident `InferenceSession`, the turbo vs cycle-accurate backend
-//! split, the crossbar, the assembler and the JSON model load — the
-//! profile targets of EXPERIMENTS.md §Perf.
+//! split, the lap-worker `--threads 1..N` sweep over a streamed batch, the
+//! crossbar, the assembler and the JSON model load — the profile targets
+//! of EXPERIMENTS.md §Perf.
+//!
+//! Writes the machine-readable `BENCH_hotpath.json` report (schema
+//! `barvinn.bench_hotpath/v1`, see docs/BENCH_SCHEMAS.md) that CI's
+//! `perf-gate` job gates on; `--threads N` sets the sweep ceiling.
 
 use barvinn::accel::{System, SystemConfig, SystemExit};
 use barvinn::codegen::{compile_pipelined, EdgePolicy};
 use barvinn::exec::ExecMode;
 use barvinn::model::zoo::{resnet9_cifar10, Rng};
-use barvinn::mvu::{Mvu, MvuConfig, XbarWrite};
+use barvinn::mvu::{kernel_variant, Mvu, MvuConfig, XbarWrite};
 use barvinn::perf::benchkit::bench;
 use barvinn::session::SessionBuilder;
 use barvinn::sim::Tensor3;
 
+/// Render a float as a JSON number; non-finite becomes `null` (the
+/// library's `json_num` is crate-private, so the bench carries its own).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `--threads N`: sweep the streamed lap-worker knob over 1..=N.
+    let max_threads: usize = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1);
     // --- MVU inner loop: one dense 512-input-channel conv row job ------------
     let m = resnet9_cifar10(2, 2);
     let l = &m.layers[7]; // conv8: 512→512
@@ -65,8 +89,9 @@ fn main() {
     // The cold path is what every consumer hand-wired before the session
     // API existed: build the whole system and reload every weight RAM for
     // each image. The warm path compiles + loads once, then resets only
-    // activation state per image.
-    {
+    // activation state per image. The block's tail carries the headline
+    // numbers out for the BENCH_hotpath.json report below.
+    let (cycle_ms_per_image, turbo_ms_per_image, speedup, cycles_per_frame, frame_mvu_cycles) = {
         let compiled = compile_pipelined(&m, EdgePolicy::PadInRam).expect("compile");
         let mut rng = Rng(2);
         let input = Tensor3::from_fn(64, 32, 32, |_, _, _| rng.range_i32(0, 3));
@@ -139,7 +164,100 @@ fn main() {
             speedup >= 5.0,
             "turbo speedup regressed below the 5x acceptance bar: {speedup:.2}x"
         );
+        (
+            warm.per_iter_ms(),
+            turbo.per_iter_ms(),
+            speedup,
+            sys_cycles,
+            cycle_out.total_mvu_cycles,
+        )
+    };
+
+    // --- lap-parallel streamed turbo: --threads 1..N sweep --------------------
+    // Same streamed batch at every thread count; outputs, per-frame MVU
+    // cycles and the pipeline books must be bit-identical to the
+    // single-threaded run — only wall-clock is allowed to move.
+    let mut rng = Rng(7);
+    let l0 = &m.layers[0];
+    let amax = l0.aprec.max_value();
+    let stream_inputs: Vec<Tensor3> = (0..8)
+        .map(|_| Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| rng.range_i32(0, amax)))
+        .collect();
+    let mut baseline: Option<barvinn::session::StreamOutput> = None;
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for t in 1..=max_threads {
+        let mut s = SessionBuilder::new(m.clone())
+            .edge_policy(EdgePolicy::PadInRam)
+            .exec_mode(ExecMode::Turbo)
+            .threads(t)
+            .build()
+            .expect("streamed turbo session");
+        let out = s.run_stream(&stream_inputs).expect("streamed batch");
+        match &baseline {
+            None => baseline = Some(out),
+            Some(b) => {
+                assert_eq!(
+                    b.stream.pipeline_cycles, out.stream.pipeline_cycles,
+                    "threads={t}: pipeline cycle books diverged from threads=1"
+                );
+                for (x, y) in b.outputs.iter().zip(&out.outputs) {
+                    assert_eq!(x.output, y.output, "threads={t}: outputs diverged");
+                    assert_eq!(
+                        x.total_mvu_cycles, y.total_mvu_cycles,
+                        "threads={t}: per-frame MVU cycles diverged"
+                    );
+                }
+            }
+        }
+        let r = bench(&format!("session: streamed turbo x8 ({t} thread(s))"), 2000, || {
+            let out = s.run_stream(&stream_inputs).expect("streamed batch");
+            std::hint::black_box(out.stream.pipeline_cycles);
+        });
+        sweep.push((t, r.per_iter_ms() / stream_inputs.len() as f64));
     }
+    if let Some((_, ms1)) = sweep.first() {
+        let (tn, msn) = sweep.last().unwrap();
+        println!(
+            "  → {tn} thread(s) is {:.2}x the 1-thread streamed path \
+             ({:.3} ms vs {:.3} ms per image, bit-identical)",
+            ms1 / msn,
+            msn,
+            ms1
+        );
+    }
+
+    // --- machine-readable report: BENCH_hotpath.json ---------------------------
+    // bit-MACs/s: each busy MVU cycle retires 64 lanes × 64-bit words of
+    // `acc ± popcnt(act & weight)` = 4096 bit-MACs.
+    let bit_macs_per_s = frame_mvu_cycles as f64 * 4096.0 / (turbo_ms_per_image / 1e3);
+    let sweep_json: Vec<String> = sweep
+        .iter()
+        .map(|(t, ms)| {
+            format!(
+                "{{\"threads\": {t}, \"ms_per_image\": {}, \"img_per_s\": {}}}",
+                jnum(*ms),
+                jnum(1e3 / ms)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"schema\": \"barvinn.bench_hotpath/v1\",\n  \"model\": \"resnet9\",\n  \
+         \"wbits\": 2,\n  \"abits\": 2,\n  \"images\": {},\n  \"cycles_per_frame\": {},\n  \
+         \"kernel\": \"{}\",\n  \"threads_swept\": {},\n  \"cycle_ms_per_image\": {},\n  \
+         \"turbo_ms_per_image\": {},\n  \"speedup\": {},\n  \"bit_macs_per_s\": {},\n  \
+         \"sweep\": [{}]\n}}\n",
+        stream_inputs.len(),
+        cycles_per_frame,
+        kernel_variant(),
+        max_threads,
+        jnum(cycle_ms_per_image),
+        jnum(turbo_ms_per_image),
+        jnum(speedup),
+        jnum(bit_macs_per_s),
+        sweep_json.join(", ")
+    );
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json ({} kernel)", kernel_variant());
 
     // --- crossbar under full contention ---------------------------------------
     {

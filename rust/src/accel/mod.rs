@@ -7,4 +7,4 @@ mod system;
 pub use csr_map::{
     mvu_csr_by_name, mvu_csr_name, MvuCsrFile, MVU_CSR_COUNT,
 };
-pub use system::{System, SystemConfig, SystemExit};
+pub use system::{LapStream, System, SystemConfig, SystemExit};

@@ -9,9 +9,9 @@
 //!    crossbar FIFOs;
 //! 4. MVU completion interrupts are visible to the harts on the next cycle.
 
-use crate::exec::{run_job_turbo, ExecMode};
+use crate::exec::{run_job_turbo, run_job_turbo_traced, ExecMode, JobTrace, TurboError};
 use crate::interconnect::Crossbar;
-use crate::mvu::{JobConfig, Mvu, MvuConfig, MvuState};
+use crate::mvu::{JobConfig, Mvu, MvuConfig, MvuState, XbarWrite};
 use crate::pito::{Barrel, BarrelConfig, CsrBridge, Trap, MVU_CSR_BASE, NUM_HARTS};
 use crate::NUM_MVUS;
 
@@ -25,6 +25,14 @@ pub struct SystemConfig {
     /// Execution backend for the MVU datapath (see [`crate::exec`]).
     /// Defaults to [`ExecMode::CycleAccurate`], the timing ground truth.
     pub exec: ExecMode,
+    /// Host threads for turbo [`System::run_lap`] streams: `0` and `1` both
+    /// mean single-threaded (the `Default`); `n > 1` runs a lap's
+    /// independent MVU streams on up to `n` `std::thread::scope` workers.
+    /// Results are bit-identical at any value — crossbar traffic is
+    /// gathered per job and applied in deterministic work order after the
+    /// streams join. Ignored by the cycle-accurate backend, whose clockwise
+    /// interleave is inherently serial.
+    pub threads: usize,
 }
 
 /// Why a system run stopped.
@@ -132,6 +140,7 @@ pub struct System {
     cycles: u64,
     max_cycles: u64,
     exec: ExecMode,
+    threads: usize,
     /// Bit `m` set while MVU `m` has an active job — maintained by the CSR
     /// bridge and the datapath sweep so the run loop's exit checks are O(1)
     /// instead of scanning every MVU each modelled cycle.
@@ -153,6 +162,7 @@ impl System {
             cycles: 0,
             max_cycles: cfg.barrel.max_cycles,
             exec: cfg.exec,
+            threads: cfg.threads.max(1),
             running_mask: 0,
             irq_mask: 0,
         }
@@ -161,6 +171,18 @@ impl System {
     /// The execution backend advancing the MVU datapath.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec
+    }
+
+    /// Host worker threads for turbo lap execution (≥ 1; see
+    /// [`SystemConfig::threads`]).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Re-arm the lap worker count (benches sweep this knob). Safe at any
+    /// point between laps; results never depend on the value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Switch execution backends. Only supported while no job is mid-flight
@@ -396,11 +418,28 @@ impl System {
     /// stepper walks the job one modelled clock at a time; turbo computes
     /// the whole job functionally and books the same cycle count from the
     /// job formula.
-    pub fn run_job(&mut self, mvu: usize, job: JobConfig) -> Result<u64, String> {
+    pub fn run_job(&mut self, mvu: usize, job: JobConfig) -> Result<u64, TurboError> {
+        self.run_job_traced(mvu, &job, None)
+    }
+
+    /// [`Self::run_job`] with an optional memoized [`JobTrace`]: the fast
+    /// path compiled plans take (`LayerPlan::traces` captures once per
+    /// plan, sessions replay it for every frame and batch item). With
+    /// `None`, turbo captures a throwaway trace; the cycle-accurate backend
+    /// ignores the trace entirely — its walk *is* the state machine.
+    pub fn run_job_traced(
+        &mut self,
+        mvu: usize,
+        job: &JobConfig,
+        trace: Option<&JobTrace>,
+    ) -> Result<u64, TurboError> {
         match self.exec {
-            ExecMode::CycleAccurate => self.run_job_cycle_accurate(mvu, job),
+            ExecMode::CycleAccurate => self.run_job_cycle_accurate(mvu, job.clone()),
             ExecMode::Turbo => {
-                let (writes, cycles) = run_job_turbo(&mut self.mvus[mvu], &job)?;
+                let (writes, cycles) = match trace {
+                    Some(t) => run_job_turbo_traced(&mut self.mvus[mvu], job, t)?,
+                    None => run_job_turbo(&mut self.mvus[mvu], job)?,
+                };
                 if !writes.is_empty() {
                     self.xbar.push(mvu, writes);
                     self.drain_xbar();
@@ -416,9 +455,16 @@ impl System {
     /// the other seven are architecturally idle, and stepping them cost 8×
     /// in the original implementation. The crossbar is only stepped while
     /// it holds traffic.
-    fn run_job_cycle_accurate(&mut self, mvu: usize, job: JobConfig) -> Result<u64, String> {
+    fn run_job_cycle_accurate(&mut self, mvu: usize, job: JobConfig) -> Result<u64, TurboError> {
         let before = self.mvus[mvu].busy_cycles();
-        self.mvus[mvu].launch(job)?;
+        // Same pre-checks `Mvu::launch` performs, surfaced as the shared
+        // typed error so both backends report one contract.
+        if self.mvus[mvu].state() != MvuState::Idle {
+            return Err(TurboError::Busy { mvu: self.mvus[mvu].id });
+        }
+        job.validate()
+            .map_err(|reason| TurboError::BadConfig { mvu: self.mvus[mvu].id, reason })?;
+        self.mvus[mvu].launch(job).expect("pre-checked launch cannot fail");
         while self.mvus[mvu].state() == MvuState::Running || self.xbar.busy() {
             if self.xbar.busy() {
                 self.deliver_round();
@@ -449,71 +495,202 @@ impl System {
     /// MVU's next job launches the cycle its predecessor retires, so busy
     /// time is contiguous and the lap's wall time is the slowest stream
     /// plus any trailing crossbar delivery. Under [`ExecMode::Turbo`] each
-    /// stream runs functionally and the clock advances by the slowest
-    /// stream's booked cycles. Both end the lap with the crossbar drained
-    /// and all IRQs cleared, so the next lap starts clean; launch errors
-    /// surface typed, as everywhere else.
-    pub fn run_lap(&mut self, work: &[(usize, &[JobConfig])]) -> Result<u64, String> {
+    /// stream runs functionally — on `std::thread::scope` workers when the
+    /// system's thread knob exceeds one — and the clock advances by the
+    /// slowest stream's booked cycles. Both end the lap with the crossbar
+    /// drained and all IRQs cleared, so the next lap starts clean; launch
+    /// errors surface typed, as everywhere else.
+    pub fn run_lap(&mut self, work: &[(usize, &[JobConfig])]) -> Result<u64, TurboError> {
+        let streams: Vec<LapStream> = work
+            .iter()
+            .map(|&(mvu, jobs)| LapStream { mvu, jobs, traces: None })
+            .collect();
+        self.run_lap_traced(&streams)
+    }
+
+    /// [`Self::run_lap`] with per-stream memoized traces: the streamed
+    /// session path, where every lap replays jobs whose traces the compiled
+    /// plan captured once.
+    pub fn run_lap_traced(&mut self, work: &[LapStream]) -> Result<u64, TurboError> {
         #[cfg(debug_assertions)]
         {
             let mut seen = 0u8;
-            for &(m, _) in work {
-                assert_eq!(seen & (1u8 << m), 0, "lap schedules MVU {m} twice");
-                seen |= 1u8 << m;
+            for s in work {
+                assert_eq!(seen & (1u8 << s.mvu), 0, "lap schedules MVU {} twice", s.mvu);
+                seen |= 1u8 << s.mvu;
+                if let Some(traces) = s.traces {
+                    assert_eq!(traces.len(), s.jobs.len(), "one trace per job");
+                }
             }
         }
         match self.exec {
-            ExecMode::Turbo => {
-                let mut wall = 0u64;
-                for &(m, jobs) in work {
-                    let before = self.mvus[m].busy_cycles();
-                    for job in jobs {
-                        let (writes, _) = run_job_turbo(&mut self.mvus[m], job)?;
-                        if !writes.is_empty() {
-                            self.xbar.push(m, writes);
-                            self.drain_xbar();
-                        }
-                        self.mvus[m].clear_irq();
-                    }
-                    wall = wall.max(self.mvus[m].busy_cycles() - before);
-                }
-                self.cycles += wall;
-                Ok(wall)
+            ExecMode::Turbo => self.run_lap_turbo(work),
+            ExecMode::CycleAccurate => self.run_lap_cycle_accurate(work),
+        }
+    }
+
+    /// Turbo lap execution: every stream owns a distinct MVU, so streams
+    /// are data-independent for the duration of the lap (crossbar traffic
+    /// is *gathered*, not applied, while streams run). Streams execute
+    /// inline single-threaded or round-robin across scoped workers; either
+    /// way the gathered per-job crossbar batches are applied afterwards in
+    /// work order — exactly the order the sequential loop interleaved its
+    /// push/drain pairs — so RAM effects, delivery counts and the booked
+    /// wall are bit-identical at any thread count. On a launch error the
+    /// first failure in work order is returned and the lap books no wall
+    /// cycles (malformed jobs cannot come from compiled plans; this path
+    /// guards direct drivers).
+    fn run_lap_turbo(&mut self, work: &[LapStream]) -> Result<u64, TurboError> {
+        let threads = self.threads.min(work.len()).max(1);
+        let mut outcomes: Vec<Option<StreamOutcome>> = (0..work.len()).map(|_| None).collect();
+        {
+            // Split the MVU vector into per-stream exclusive borrows so
+            // streams can run concurrently without locking.
+            let mut slots: Vec<Option<&mut Mvu>> = self.mvus.iter_mut().map(Some).collect();
+            let mut streams: Vec<(usize, &LapStream, &mut Mvu)> = Vec::with_capacity(work.len());
+            for (i, s) in work.iter().enumerate() {
+                let mvu = slots[s.mvu].take().expect("lap schedules each MVU at most once");
+                streams.push((i, s, mvu));
             }
-            ExecMode::CycleAccurate => {
-                let start = self.cycles;
-                let mut next = vec![0usize; work.len()];
-                loop {
-                    let mut progressed = false;
-                    if self.xbar.busy() {
-                        self.deliver_round();
-                        progressed = true;
-                    }
-                    for (i, &(m, jobs)) in work.iter().enumerate() {
-                        if self.mvus[m].state() == MvuState::Idle {
-                            self.mvus[m].clear_irq();
-                            if next[i] < jobs.len() {
-                                self.mvus[m].launch(jobs[next[i]].clone())?;
-                                next[i] += 1;
-                            }
-                        }
-                        if self.mvus[m].state() == MvuState::Running {
-                            let writes = self.mvus[m].step();
-                            if !writes.is_empty() {
-                                self.xbar.push(m, writes);
-                            }
-                            progressed = true;
-                        }
-                    }
-                    if !progressed {
-                        break;
-                    }
-                    self.cycles += 1;
+            if threads <= 1 {
+                for (i, s, mvu) in streams {
+                    outcomes[i] = Some(exec_lap_stream(mvu, s));
                 }
-                Ok(self.cycles - start)
+            } else {
+                let mut groups: Vec<Vec<(usize, &LapStream, &mut Mvu)>> =
+                    (0..threads).map(|_| Vec::new()).collect();
+                for (n, item) in streams.into_iter().enumerate() {
+                    groups[n % threads].push(item);
+                }
+                let results = std::thread::scope(|scope| {
+                    let handles: Vec<_> = groups
+                        .into_iter()
+                        .map(|group| {
+                            scope.spawn(move || {
+                                group
+                                    .into_iter()
+                                    .map(|(i, s, mvu)| (i, exec_lap_stream(mvu, s)))
+                                    .collect::<Vec<_>>()
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .flat_map(|h| h.join().expect("lap worker panicked"))
+                        .collect::<Vec<_>>()
+                });
+                for (i, outcome) in results {
+                    outcomes[i] = Some(outcome);
+                }
+            }
+        }
+        // Deterministic application phase: work order, job by job.
+        let mut wall = 0u64;
+        let mut first_err: Option<TurboError> = None;
+        for outcome in outcomes.into_iter().flatten() {
+            let src = outcome.mvu;
+            for writes in outcome.per_job_writes {
+                if !writes.is_empty() {
+                    self.xbar.push(src, writes);
+                    self.drain_xbar();
+                }
+            }
+            wall = wall.max(outcome.busy_delta);
+            if first_err.is_none() {
+                first_err = outcome.err;
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        self.cycles += wall;
+        Ok(wall)
+    }
+
+    fn run_lap_cycle_accurate(&mut self, work: &[LapStream]) -> Result<u64, TurboError> {
+        let start = self.cycles;
+        let mut next = vec![0usize; work.len()];
+        loop {
+            let mut progressed = false;
+            if self.xbar.busy() {
+                self.deliver_round();
+                progressed = true;
+            }
+            for (i, s) in work.iter().enumerate() {
+                let m = s.mvu;
+                if self.mvus[m].state() == MvuState::Idle {
+                    self.mvus[m].clear_irq();
+                    if next[i] < s.jobs.len() {
+                        let job = &s.jobs[next[i]];
+                        job.validate().map_err(|reason| TurboError::BadConfig {
+                            mvu: self.mvus[m].id,
+                            reason,
+                        })?;
+                        self.mvus[m].launch(job.clone()).expect("pre-checked launch cannot fail");
+                        next[i] += 1;
+                    }
+                }
+                if self.mvus[m].state() == MvuState::Running {
+                    let writes = self.mvus[m].step();
+                    if !writes.is_empty() {
+                        self.xbar.push(m, writes);
+                    }
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+            self.cycles += 1;
+        }
+        Ok(self.cycles - start)
+    }
+}
+
+/// One stream of a streamed-pipeline lap: the jobs one MVU executes this
+/// lap, optionally with their memoized [`JobTrace`]s (same length as
+/// `jobs` when present).
+pub struct LapStream<'a> {
+    pub mvu: usize,
+    pub jobs: &'a [JobConfig],
+    pub traces: Option<&'a [JobTrace]>,
+}
+
+/// What one lap stream produced: gathered (not yet applied) crossbar
+/// batches in the stream's own job order, the stream's busy-cycle delta,
+/// and the first launch error if any job was refused (execution stops at
+/// the first failure, matching the sequential `?` path).
+struct StreamOutcome {
+    mvu: usize,
+    per_job_writes: Vec<Vec<XbarWrite>>,
+    busy_delta: u64,
+    err: Option<TurboError>,
+}
+
+/// Execute one turbo lap stream on its exclusively-borrowed MVU. Runs on
+/// a lap worker thread (or inline): touches only this MVU's state, so
+/// streams never race; the caller applies the gathered crossbar traffic.
+fn exec_lap_stream(mvu: &mut Mvu, s: &LapStream) -> StreamOutcome {
+    let before = mvu.busy_cycles();
+    let mut per_job_writes = Vec::with_capacity(s.jobs.len());
+    let mut err = None;
+    for (j, job) in s.jobs.iter().enumerate() {
+        let result = match s.traces {
+            Some(traces) => run_job_turbo_traced(mvu, job, &traces[j]),
+            None => run_job_turbo(mvu, job),
+        };
+        match result {
+            Ok((writes, _)) => {
+                mvu.clear_irq();
+                per_job_writes.push(writes);
+            }
+            Err(e) => {
+                err = Some(e);
+                break;
             }
         }
     }
+    StreamOutcome { mvu: s.mvu, per_job_writes, busy_delta: mvu.busy_cycles() - before, err }
 }
 
 #[cfg(test)]
@@ -813,6 +990,73 @@ mod tests {
         }
     }
 
+    /// Turbo lap execution is thread-count-invariant: the same lap run
+    /// with 1 and N workers — with and without memoized traces — produces
+    /// identical RAM contents, cycle books and crossbar delivery counts
+    /// (gathered per-job batches are applied in deterministic work order
+    /// after the streams join, regardless of worker interleaving).
+    #[test]
+    fn run_lap_threaded_is_deterministic() {
+        let x: [i32; 64] = std::array::from_fn(|i| ((i * 5 + 3) % 16) as i32);
+        // Four streams of two jobs each: even MVUs write self-RAM, odd MVUs
+        // forward through the crossbar to their neighbour.
+        let jobs: Vec<Vec<JobConfig>> = (0..4usize)
+            .map(|m| {
+                let dest = if m % 2 == 0 {
+                    OutputDest::SelfRam
+                } else {
+                    OutputDest::Xbar { dest_mask: 1 << ((m + 1) % 4) }
+                };
+                let mut a = simple_job(dest);
+                a.o_agu = AguCfg::from_strides(100 + 50 * m as u32, &[]);
+                let mut b = a.clone();
+                b.o_agu = AguCfg::from_strides(400 + 50 * m as u32, &[]);
+                vec![a, b]
+            })
+            .collect();
+        let traces: Vec<Vec<crate::exec::JobTrace>> = jobs
+            .iter()
+            .map(|js| js.iter().map(crate::exec::JobTrace::capture).collect())
+            .collect();
+
+        let run = |threads: usize, with_traces: bool| {
+            let mut sys = System::new(SystemConfig {
+                exec: ExecMode::Turbo,
+                threads,
+                ..Default::default()
+            });
+            for m in 0..4 {
+                sys.mvus[m].act.load(0, &pack_block(&x, Precision::u(4)));
+                sys.mvus[m].weights.load(0, &identity_weights());
+            }
+            let work: Vec<LapStream> = (0..4)
+                .map(|m| LapStream {
+                    mvu: m,
+                    jobs: &jobs[m],
+                    traces: with_traces.then(|| traces[m].as_slice()),
+                })
+                .collect();
+            let wall = sys.run_lap_traced(&work).unwrap();
+            let ram: Vec<u64> = (0..4)
+                .flat_map(|m| (0..700u32).map(move |a| (m, a)))
+                .map(|(m, a)| sys.mvus[m].act.read(a))
+                .collect();
+            let busy: Vec<u64> = (0..4).map(|m| sys.mvus[m].busy_cycles()).collect();
+            (wall, sys.cycles(), sys.xbar.delivered(), busy, ram)
+        };
+
+        let baseline = run(1, false);
+        for threads in [2, 4, 8] {
+            for with_traces in [false, true] {
+                let got = run(threads, with_traces);
+                assert_eq!(
+                    got, baseline,
+                    "threads={threads} traces={with_traces} diverged from single-threaded"
+                );
+            }
+        }
+    }
+
     /// A lap whose streams forward through the crossbar still lands every
     /// write before the lap returns (the inter-lap dataflow barrier).
     #[test]
@@ -841,7 +1085,11 @@ mod tests {
             let mut bad = simple_job(OutputDest::SelfRam);
             bad.outputs = 0;
             let err = sys.run_job(0, bad).unwrap_err();
-            assert!(err.contains("bad job config"), "{exec:?}: {err}");
+            assert!(
+                matches!(err, TurboError::BadConfig { mvu: 0, .. }),
+                "{exec:?}: {err:?}"
+            );
+            assert!(err.to_string().contains("bad job config"), "{exec:?}: {err}");
             // The system stays serviceable: a good job still runs.
             sys.mvus[0].act.load(0, &pack_block(&[1; 64], Precision::u(4)));
             sys.mvus[0].weights.load(0, &identity_weights());

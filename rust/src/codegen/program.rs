@@ -19,6 +19,7 @@
 //! multiplier is folded into constants at code-generation time.
 
 use crate::accel::{MvuCsrFile, System};
+use crate::exec::JobTrace;
 use crate::model::{ConvLayer, Model};
 use crate::mvu::JobConfig;
 use crate::pito::assemble;
@@ -122,6 +123,20 @@ pub struct LayerPlan {
     pub jobs: Vec<JobConfig>,
     pub mvu: usize,
     pub analytic_cycles: u64,
+    /// Memoized turbo replay traces, one per entry of `jobs` — captured on
+    /// first use ([`Self::traces`]) and reused for every frame and batch
+    /// item, since the walk is frame-invariant (only RAM data changes).
+    traces: std::sync::OnceLock<Vec<JobTrace>>,
+}
+
+impl LayerPlan {
+    /// The memoized [`JobTrace`]s for this layer's job stream, captured
+    /// once per compiled plan. The turbo backend replays these instead of
+    /// re-deriving the identical AGU walk per frame; the cycle-accurate
+    /// backend never asks for them.
+    pub fn traces(&self) -> &[JobTrace] {
+        self.traces.get_or_init(|| self.jobs.iter().map(JobTrace::capture).collect())
+    }
 }
 
 /// A fully compiled pipelined model.
@@ -356,6 +371,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
             jobs: stream_jobs,
             mvu: h,
             analytic_cycles: layer_cycles(layer, policy),
+            traces: std::sync::OnceLock::new(),
         });
         plans.push(LayerPlan {
             in_layout: in_l,
@@ -364,6 +380,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
             jobs,
             mvu: h,
             analytic_cycles: layer_cycles(layer, policy),
+            traces: std::sync::OnceLock::new(),
         });
     }
 

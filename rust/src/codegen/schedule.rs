@@ -19,6 +19,7 @@
 //!   reconfiguration (the FINN-R contrast of Table 6).
 
 use crate::accel::{MvuCsrFile, System};
+use crate::exec::JobTrace;
 use crate::model::{ConvLayer, Model};
 use crate::mvu::JobConfig;
 use crate::pito::assemble;
@@ -39,9 +40,19 @@ pub struct DistributedPlan {
     pub asm: String,
     pub program: Vec<u32>,
     pub policy: EdgePolicy,
+    /// Memoized turbo replay traces mirroring `jobs` — captured on first
+    /// use ([`Self::traces`]) and reused across frames, like
+    /// [`super::program::LayerPlan::traces`].
+    traces: std::sync::OnceLock<Vec<Vec<JobTrace>>>,
 }
 
 impl DistributedPlan {
+    /// The memoized [`JobTrace`]s per MVU chunk, captured once per plan.
+    pub fn traces(&self) -> &[Vec<JobTrace>] {
+        self.traces.get_or_init(|| {
+            self.jobs.iter().map(|js| js.iter().map(JobTrace::capture).collect()).collect()
+        })
+    }
     /// Latency in MVP cycles = the slowest MVU's chunk (all run in
     /// parallel).
     pub fn latency_cycles(&self) -> u64 {
@@ -205,7 +216,16 @@ pub fn compile_distributed(
 
     let asm = emit_asm(layer, &jobs);
     let program = assemble(&asm).map_err(|e| CompileError::Assemble(e.to_string()))?;
-    Ok(DistributedPlan { in_layout: in_l, out_layout: out_l, w_layout: w_l, jobs, asm, program, policy })
+    Ok(DistributedPlan {
+        in_layout: in_l,
+        out_layout: out_l,
+        w_layout: w_l,
+        jobs,
+        asm,
+        program,
+        policy,
+        traces: std::sync::OnceLock::new(),
+    })
 }
 
 /// A deep model scheduled as ⌈N/8⌉ pipelined passes of ≤ 8 layers each.

@@ -8,9 +8,12 @@
 //!   This is the verifiable ground truth: it observes arbitration,
 //!   polling, IRQ latency and every other timing artefact.
 //! * [`ExecMode::Turbo`] — a job-level functional executor
-//!   ([`run_job_turbo`]): an entire MVU job's outputs are computed in one
-//!   call by replaying the same [`crate::mvu::JobWalk`] address sequence
-//!   over the packed bit-plane RAMs and running the shared
+//!   ([`run_job_turbo`] / [`run_job_turbo_traced`]): an entire MVU job's
+//!   outputs are computed in one call by replaying a memoized [`JobTrace`]
+//!   of the [`crate::mvu::JobWalk`] address sequence over the packed
+//!   bit-plane RAMs — sign/shift hoisted per run, popcounts funnelled
+//!   through the word-parallel [`crate::mvu::popcount_block`] kernel —
+//!   and running the shared
 //!   [`crate::mvu::OutputStage`] once per output vector. Cycles are
 //!   *reported* from the hardware's own per-job formula
 //!   `outputs · b_a · b_w · tiles` ([`crate::mvu::JobConfig::cycles`]) —
@@ -44,15 +47,19 @@
 //! batch as fill + steady-state bottleneck laps + drain;
 //! [`crate::accel::System::run_lap`] executes one lap concurrently under
 //! either backend (the cycle-accurate stepper interleaves the active MVUs
-//! clock by clock; turbo runs each stage's jobs functionally and advances
+//! clock by clock; turbo runs each stage's jobs functionally — on
+//! `std::thread::scope` workers when `SystemConfig::threads` > 1, since
+//! lap streams touch distinct MVUs and disjoint frames — and advances
 //! the clock by the slowest stage). Outputs stay bit-identical to serial
-//! `run` because concurrent stages touch disjoint frames and buffers.
+//! `run` because concurrent stages touch disjoint frames and buffers, and
+//! crossbar traffic is gathered per job and applied in work order after
+//! the streams join, so delivery order is thread-count-invariant.
 
 mod stream;
 mod turbo;
 
 pub use stream::{StreamCycles, StreamSchedule};
-pub use turbo::run_job_turbo;
+pub use turbo::{run_job_turbo, run_job_turbo_traced, JobTrace, TurboError};
 
 /// Which execution backend advances the MVU datapath.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

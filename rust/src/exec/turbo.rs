@@ -1,68 +1,227 @@
 //! The job-level turbo executor: compute a whole MVU job functionally.
 //!
 //! The numerics of a job are fully determined by its RAM contents and its
-//! AGU/sequencer walk, so instead of modelling one clock per MAC we drain
-//! the shared [`JobWalk`] in a tight loop — read activation word, read
-//! 4096-bit weight word, 64 AND+POPCNT accumulates — and run the shared
-//! [`OutputStage`] once per output vector. The inner arithmetic is the
-//! *same* packed-bit-plane popcount kernel the cycle-accurate stepper
-//! executes (`vvp::bitserial_dot` semantics over `u64` planes); what turbo
-//! removes is everything around it: the RISC-V interpreter, the idle-MVU
-//! sweep, the per-cycle crossbar arbitration and the per-step `Vec`
-//! plumbing.
+//! AGU/sequencer walk, so instead of modelling one clock per MAC we replay
+//! a memoized [`JobTrace`] — the flattened address/sign/shift sequence the
+//! [`JobWalk`] state machine would produce, captured once per job config
+//! and reused across frames and batch items (the walk is frame-invariant;
+//! only RAM data changes). The inner arithmetic funnels through the same
+//! packed-bit-plane popcount kernel the cycle-accurate stepper executes
+//! ([`crate::mvu::popcount_block`] ≡ `MacStep::apply` semantics over `u64`
+//! planes); what turbo removes is everything around it: the RISC-V
+//! interpreter, the idle-MVU sweep, the per-cycle crossbar arbitration,
+//! the per-MAC walk state machine and its branch-per-step sign/shift
+//! resolution.
 //!
 //! Cycle accounting uses the per-job closed form the hardware obeys,
 //! [`JobConfig::cycles`] = `outputs · b_a · b_w · tiles`, which equals the
-//! number of `JobWalk::step` calls made here and the number of busy cycles
-//! the stepper would have burned — asserted in debug builds and enforced
-//! by the proptest matrix.
+//! number of `JobWalk::step` calls the trace captured and the number of
+//! busy cycles the stepper would have burned — asserted in debug builds
+//! and enforced by the proptest matrix.
 
-use crate::mvu::{JobConfig, JobWalk, Mvu, MvuState, OutputStage, XbarWrite};
+use crate::mvu::{popcount_block, JobConfig, JobWalk, Mvu, MvuState, OutputStage, XbarWrite};
 use crate::quant::BLOCK;
 
-/// Execute one whole job on `mvu`: all RAM effects are applied exactly as
-/// the cycle-accurate stepper would, the completion IRQ is raised and the
-/// busy-cycle counter advances by the job formula. Returns the crossbar
-/// writes the job produced (in emission order) and the cycles booked.
+/// Why a turbo job launch was refused. Mirrors [`Mvu::launch`]'s contract
+/// — the MVU must be idle and the configuration valid — as a typed error,
+/// never a panic: a malformed job is reachable from CSR-launched serving
+/// traffic and must not abort a coordinator worker thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TurboError {
+    /// The MVU already has an active job.
+    Busy { mvu: u8 },
+    /// The job configuration failed [`JobConfig::validate`].
+    BadConfig { mvu: u8, reason: String },
+}
+
+impl std::fmt::Display for TurboError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TurboError::Busy { mvu } => write!(f, "MVU{mvu} launch while busy"),
+            TurboError::BadConfig { mvu, reason } => {
+                write!(f, "MVU{mvu} bad job config: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TurboError {}
+
+/// A maximal span of consecutive MACs within one output that share a sign
+/// and contain no accumulator shift except possibly at their first step.
+/// Grouping is exact: within a run `acc ± x₁ ± x₂ ± …` equals
+/// `acc ± (x₁ + x₂ + …)` because every term carries the same sign and the
+/// partial sums are plain integer adds — so the replay may accumulate the
+/// run's popcounts in an unsigned side accumulator and fold once.
+#[derive(Debug, Clone, Copy)]
+struct TraceRun {
+    /// Shift the 64-lane accumulator left by one before this run.
+    shift: bool,
+    /// All MACs in this run subtract (exactly one plane is a sign plane).
+    negative: bool,
+    /// Number of MACs in the run.
+    len: u32,
+}
+
+/// The memoized walk of one job: every activation/weight address the job
+/// touches (flattened across all outputs) plus the per-output run
+/// structure, captured by draining a fresh [`JobWalk`] once. Because the
+/// bit-combination sequence replays identically for every output while
+/// the AGUs keep advancing, the run list is stored once (first output)
+/// and shared, while the address arrays cover the full job.
 ///
-/// Fails under the same contract as [`Mvu::launch`] — the MVU must be idle
-/// and the configuration valid — as a typed error, never a panic: a
-/// malformed job is reachable from CSR-launched serving traffic and must
-/// not abort a coordinator worker thread.
-pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> Result<(Vec<XbarWrite>, u64), String> {
+/// Replaying a trace is bit-identical to draining the walk — same
+/// addresses, same sign/shift schedule, same integer sums — which is what
+/// lets compiled plans capture traces once and reuse them for every
+/// frame and batch item (`LayerPlan::traces` / `DistributedPlan`).
+#[derive(Debug, Clone)]
+pub struct JobTrace {
+    /// MACs per output vector (`b_a · b_w · tiles`).
+    macs_per_output: u32,
+    /// Output vectors in the job; `runs` replays once per output.
+    outputs: u32,
+    /// Run structure of one output (identical for all outputs).
+    runs: Vec<TraceRun>,
+    /// Activation word address per MAC, all outputs flattened.
+    a_addrs: Vec<u32>,
+    /// Weight word address per MAC, all outputs flattened.
+    w_addrs: Vec<u32>,
+    /// Total cycles the job books: `outputs · macs_per_output`.
+    cycles: u64,
+}
+
+impl JobTrace {
+    /// Drain a fresh [`JobWalk`] over the whole job and record it. The
+    /// config must be valid (compiled plans always are); capturing a
+    /// malformed config is a caller bug, caught in debug builds.
+    pub fn capture(cfg: &JobConfig) -> JobTrace {
+        debug_assert!(cfg.validate().is_ok(), "capturing a trace of an invalid job");
+        let mut walk = JobWalk::new(cfg);
+        let macs_per_output = walk.cycles_per_output();
+        let total = cfg.cycles();
+        let mut a_addrs = Vec::with_capacity(total as usize);
+        let mut w_addrs = Vec::with_capacity(total as usize);
+        let mut runs: Vec<TraceRun> = Vec::new();
+        for i in 0..total {
+            let mac = walk.step();
+            a_addrs.push(mac.a_addr);
+            w_addrs.push(mac.w_addr);
+            if i < macs_per_output {
+                let negative = mac.sign < 0;
+                match runs.last_mut() {
+                    // Extend the current run only when no shift interrupts
+                    // it and the sign is unchanged — the two events that
+                    // force a fold boundary.
+                    Some(run) if !mac.shift && run.negative == negative => run.len += 1,
+                    _ => runs.push(TraceRun { shift: mac.shift, negative, len: 1 }),
+                }
+            }
+        }
+        JobTrace {
+            macs_per_output: macs_per_output as u32,
+            outputs: cfg.outputs,
+            runs,
+            a_addrs,
+            w_addrs,
+            cycles: total,
+        }
+    }
+
+    /// Cycles the traced job books (`outputs · b_a · b_w · tiles`).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Cheap shape check that this trace belongs to `cfg` (exact identity
+    /// would require re-capturing; shape mismatches catch stale caches).
+    pub fn matches(&self, cfg: &JobConfig) -> bool {
+        self.outputs == cfg.outputs && self.cycles == cfg.cycles()
+    }
+
+    /// Approximate resident size, for cache accounting and docs.
+    pub fn resident_bytes(&self) -> usize {
+        self.a_addrs.len() * 8 + self.runs.len() * std::mem::size_of::<TraceRun>()
+    }
+}
+
+/// Execute one whole job on `mvu` by capturing its trace on the spot and
+/// replaying it: all RAM effects are applied exactly as the cycle-accurate
+/// stepper would, the completion IRQ is raised and the busy-cycle counter
+/// advances by the job formula. Returns the crossbar writes the job
+/// produced (in emission order) and the cycles booked.
+///
+/// Hot paths that run the same config repeatedly (every compiled model)
+/// should capture a [`JobTrace`] once and call [`run_job_turbo_traced`].
+pub fn run_job_turbo(mvu: &mut Mvu, cfg: &JobConfig) -> Result<(Vec<XbarWrite>, u64), TurboError> {
+    // Check before capturing: `JobTrace::capture` requires a valid config.
     if mvu.state() != MvuState::Idle {
-        return Err(format!("MVU{} turbo launch while busy", mvu.id));
+        return Err(TurboError::Busy { mvu: mvu.id });
     }
     cfg.validate()
-        .map_err(|e| format!("MVU{} bad job config: {e}", mvu.id))?;
+        .map_err(|reason| TurboError::BadConfig { mvu: mvu.id, reason })?;
+    let trace = JobTrace::capture(cfg);
+    run_job_turbo_traced(mvu, cfg, &trace)
+}
 
-    let mut walk = JobWalk::new(cfg);
+/// Replay a memoized [`JobTrace`] on `mvu`: the data-only fast path. Per
+/// output, per run: shift the accumulator if the run demands it, stream
+/// the run's activation/weight words through the word-parallel
+/// [`popcount_block`] kernel into an unsigned side accumulator, then fold
+/// once with the run's sign — bit-identical to the per-MAC walk because
+/// runs are uniform-sign and shift-free by construction.
+pub fn run_job_turbo_traced(
+    mvu: &mut Mvu,
+    cfg: &JobConfig,
+    trace: &JobTrace,
+) -> Result<(Vec<XbarWrite>, u64), TurboError> {
+    if mvu.state() != MvuState::Idle {
+        return Err(TurboError::Busy { mvu: mvu.id });
+    }
+    cfg.validate()
+        .map_err(|reason| TurboError::BadConfig { mvu: mvu.id, reason })?;
+    debug_assert!(trace.matches(cfg), "trace shape does not match job config");
+
     let mut out = OutputStage::new(cfg);
     let mut writes = Vec::new();
-    let mut acc = [0i64; BLOCK];
-    let macs_per_output = walk.cycles_per_output();
+    let mut idx = 0usize;
 
-    for _ in 0..cfg.outputs {
-        // --- MVP: one output vector's worth of MACs ------------------------
-        // The arithmetic lives in `MacStep::apply` — the identical kernel
-        // `Mvu::step` executes, shared by construction.
-        for _ in 0..macs_per_output {
-            let mac = walk.step();
-            let act_word = mvu.act.read(mac.a_addr);
-            let weight_word = mvu.weights.read(mac.w_addr);
-            mac.apply(&mut acc, act_word, weight_word);
+    for _ in 0..trace.outputs {
+        // --- MVP: one output vector's worth of MACs, run by run ----------
+        let mut acc = [0i64; BLOCK];
+        for run in &trace.runs {
+            if run.shift {
+                for a in acc.iter_mut() {
+                    *a <<= 1;
+                }
+            }
+            let mut run_acc = [0u64; BLOCK];
+            for k in idx..idx + run.len as usize {
+                let act_word = mvu.act.read(trace.a_addrs[k]);
+                let weight_word = mvu.weights.read(trace.w_addrs[k]);
+                popcount_block(&mut run_acc, act_word, weight_word);
+            }
+            idx += run.len as usize;
+            if run.negative {
+                for (a, r) in acc.iter_mut().zip(run_acc) {
+                    *a -= r as i64;
+                }
+            } else {
+                for (a, r) in acc.iter_mut().zip(run_acc) {
+                    *a += r as i64;
+                }
+            }
         }
 
-        // --- post-MVP pipeline, once per output vector ----------------------
+        // --- post-MVP pipeline, once per output vector --------------------
         // `OutputStage::push_to` owns the dest-dispatch loop — identical to
         // the stepper's, shared by construction.
         let mvp_out: [i32; BLOCK] = std::array::from_fn(|l| acc[l] as i32);
-        acc = [0; BLOCK];
         out.push_to(&mvp_out, cfg.dest, &mut mvu.act, &mvu.scalers, &mvu.biases, &mut writes);
     }
 
-    let cycles = cfg.cycles();
-    debug_assert_eq!(cycles, macs_per_output * cfg.outputs as u64);
+    let cycles = trace.cycles;
+    debug_assert_eq!(cycles, cfg.cycles());
+    debug_assert_eq!(idx, trace.a_addrs.len(), "trace replay must consume every MAC");
     mvu.finish_job_accounting(cycles);
     Ok((writes, cycles))
 }
@@ -149,6 +308,34 @@ mod tests {
         assert_eq!(turbo_writes.len(), 16, "one write per output plane");
     }
 
+    /// A captured trace replays bit-identically on a *different* frame's
+    /// data (the memoization contract: walk is frame-invariant, data is
+    /// not) — and reuses fine after the MVU ran other work in between.
+    #[test]
+    fn trace_reuse_across_frames_is_bit_identical() {
+        let cfg = job(OutputDest::SelfRam);
+        let trace = JobTrace::capture(&cfg);
+        assert_eq!(trace.cycles(), cfg.cycles());
+
+        for frame in 0..3u64 {
+            let mut fresh = loaded_mvu(4);
+            let alt: [i32; 64] = std::array::from_fn(|i| ((i as u64 * 13 + frame * 7) % 4) as i32);
+            fresh.act.load(0, &pack_block(&alt, Precision::u(2)));
+
+            let mut replayed = loaded_mvu(4);
+            replayed.act.load(0, &pack_block(&alt, Precision::u(2)));
+
+            let (fresh_writes, fresh_cycles) = run_job_turbo(&mut fresh, &cfg).unwrap();
+            let (trace_writes, trace_cycles) =
+                run_job_turbo_traced(&mut replayed, &cfg, &trace).unwrap();
+            assert_eq!(trace_cycles, fresh_cycles);
+            assert_eq!(trace_writes, fresh_writes);
+            for p in 0..16 {
+                assert_eq!(replayed.act.read(1000 + p), fresh.act.read(1000 + p), "plane {p}");
+            }
+        }
+    }
+
     /// Regression: a malformed job config is a typed error, not an abort.
     #[test]
     fn turbo_rejects_invalid_config() {
@@ -156,8 +343,20 @@ mod tests {
         cfg.tiles = 0;
         let mut mvu = Mvu::new(2, MvuConfig::default());
         let err = run_job_turbo(&mut mvu, &cfg).unwrap_err();
-        assert!(err.contains("bad job config"), "{err}");
+        assert!(matches!(err, TurboError::BadConfig { mvu: 2, .. }), "{err}");
+        assert!(err.to_string().contains("bad job config"), "{err}");
         assert_eq!(mvu.busy_cycles(), 0, "rejected job must book nothing");
         assert!(!mvu.irq_pending());
+    }
+
+    /// Busy MVUs refuse a second launch with the typed busy error.
+    #[test]
+    fn turbo_rejects_busy_mvu() {
+        let cfg = job(OutputDest::SelfRam);
+        let mut mvu = loaded_mvu(3);
+        mvu.launch(cfg.clone()).unwrap();
+        let err = run_job_turbo(&mut mvu, &cfg).unwrap_err();
+        assert_eq!(err, TurboError::Busy { mvu: 3 });
+        assert!(err.to_string().contains("launch while busy"), "{err}");
     }
 }

@@ -82,13 +82,15 @@ fn help() {
                     --exec cycle|turbo --mode pipelined|distributed|multipass|auto\n\
                     --stream (run the images as one streamed batch: up to 8\n\
                     frames in flight across the MVU stages)\n\
+                    --threads N (host lap-worker threads for streamed turbo\n\
+                    laps; bit-identical at any value, default 1)\n\
                     (warm InferenceSession; turbo = job-level functional\n\
                     backend, cycle = cycle-accurate Pito-driven stepper;\n\
                     auto mode schedules deep models as multi-pass laps)\n\
          bench-serve flags: --seed N --duration-images N\n\
                     --mix resnet9:4:4=0.7,resnet18:2:2=0.3 --workers N --cache N\n\
                     --policy affinity|least-loaded|adaptive --exec cycle|turbo\n\
-                    --out PATH\n\
+                    --threads N --out PATH\n\
                     (multi-tenant fleet load generator; writes BENCH_serve.json)\n\
          bench-serve --adaptive flags: --slo-p99 CYCLES (0 = auto)\n\
                     --ramp 0.5x16,2.5x48,0.25x32 (load x count phases)\n\
@@ -273,6 +275,7 @@ fn run(args: &[String]) {
     let wb = parse_flag(args, "--wbits", 2) as u8;
     let ab = parse_flag(args, "--abits", 2) as u8;
     let exec = parse_exec_flag(args);
+    let threads = parse_flag(args, "--threads", 1).max(1) as usize;
     let mode = parse_mode_arg(args, ExecutionMode::Auto).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
@@ -308,6 +311,7 @@ fn run(args: &[String]) {
         .edge_policy(EdgePolicy::PadInRam)
         .exec_mode(exec)
         .mode(mode)
+        .threads(threads)
         .build()
     {
         Ok(s) => s,
@@ -360,6 +364,17 @@ fn run(args: &[String]) {
             s.occupancy() * 100.0,
             s.streamed_fps_at(CLOCK_HZ),
             s.serial_fps_at(CLOCK_HZ),
+        );
+        // The FPS figures above are what the modeled hardware would do at
+        // 250 MHz; this line is what the simulator itself sustained.
+        let dt = t0.elapsed();
+        println!(
+            "host wall-clock: {} frames in {:.2}s → {:.1} img/s \
+             ({threads} thread(s), sim at {:.5}x of accelerator real-time)",
+            s.frames,
+            dt.as_secs_f64(),
+            s.frames as f64 / dt.as_secs_f64(),
+            (s.pipeline_cycles as f64 / CLOCK_HZ as f64) / dt.as_secs_f64()
         );
         return;
     }
@@ -541,6 +556,7 @@ fn bench_serve(args: &[String]) {
     let images = parse_u64_flag_strict(args, "--duration-images", 32) as usize;
     let workers = parse_u64_flag_strict(args, "--workers", 2) as usize;
     let cache = parse_u64_flag_strict(args, "--cache", 2) as usize;
+    let threads = (parse_u64_flag_strict(args, "--threads", 1) as usize).max(1);
     if workers < 1 || cache < 1 {
         eprintln!("--workers and --cache must be at least 1");
         std::process::exit(2);
@@ -587,6 +603,7 @@ fn bench_serve(args: &[String]) {
         mix,
         exec,
         policy,
+        threads,
         // Benches want deterministic batch formation: the serving default
         // of 2 ms can fragment key groups on a loaded CI runner before
         // they fill, which would understate batching and streaming. The
@@ -623,6 +640,14 @@ fn bench_serve(args: &[String]) {
         report.cache_hit_rate * 100.0,
         report.reload_words_saved,
         report.reload_words_loaded
+    );
+    println!(
+        "host wall {:.2}s → {:.1} img/s ({} lap thread(s)/engine) | \
+         sim at {:.5}x of accelerator real-time",
+        report.wall_s,
+        report.throughput_img_s,
+        report.threads,
+        report.sim_realtime_factor
     );
     println!(
         "streamed {} frames | pipeline occupancy {:.0}% | sim {:.0} FPS streamed \

@@ -43,4 +43,4 @@ pub use ram::{ActRam, BiasRam, ScalerRam, WeightRam, WEIGHT_WORD_LANES};
 pub use scaler::ScalerStage;
 pub use transposer::Transposer;
 pub use vvp::Vvp;
-pub use walk::{JobWalk, MacStep, OutputStage};
+pub use walk::{kernel_variant, popcount_block, JobWalk, MacStep, OutputStage};

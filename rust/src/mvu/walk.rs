@@ -46,7 +46,11 @@ impl MacStep {
     /// bit-for-bit backend-equivalence contract a structural property.
     ///
     /// §Perf: branch on the plane sign outside the lane loop so the body
-    /// is a pure AND+POPCNT+ADD chain the compiler can vectorize.
+    /// is a pure AND+POPCNT+ADD chain the compiler can vectorize. The
+    /// turbo trace replay ([`crate::exec::JobTrace`]) hoists the sign and
+    /// shift even further — once per *run* of uniform MACs — and funnels
+    /// the popcounts through [`popcount_block`]; both paths compute the
+    /// exact same integer sums.
     #[inline]
     pub fn apply(&self, acc: &mut [i64; BLOCK], act_word: u64, weight_word: &[u64; BLOCK]) {
         if self.shift {
@@ -64,6 +68,69 @@ impl MacStep {
             }
         }
     }
+}
+
+/// The word-parallel popcount kernel: accumulate
+/// `popcnt(act_word & rows[lane])` into `run_acc[lane]` for all 64 lanes —
+/// one activation word ANDed against a full 4096-bit weight word per call.
+/// Sign and shift are *not* applied here; the turbo trace replay resolves
+/// them once per run of uniform MACs, which is what makes this body a
+/// branch-free unsigned ADD chain the compiler can vectorize.
+///
+/// Dispatches once per call (the CPU-feature probe is cached by `std`) to
+/// an explicit wide variant where the host allows, falling back to the
+/// blocked portable loop. Both variants compute identical integer sums —
+/// popcount has one right answer — so kernel choice can never perturb the
+/// bit-for-bit backend-equivalence contract.
+#[inline]
+pub fn popcount_block(run_acc: &mut [u64; BLOCK], act_word: u64, rows: &[u64; BLOCK]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            // SAFETY: both features were just probed at runtime.
+            unsafe { popcount_block_x86(run_acc, act_word, rows) };
+            return;
+        }
+    }
+    popcount_block_portable(run_acc, act_word, rows)
+}
+
+/// Which [`popcount_block`] variant this host resolves to (reported in
+/// `BENCH_hotpath.json` so perf snapshots record the kernel they measured).
+pub fn kernel_variant() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            return "x86_64-avx2-popcnt";
+        }
+    }
+    "portable-blocked"
+}
+
+/// Portable kernel: 8-lane blocks via `chunks_exact` so the backend sees a
+/// fixed-trip-count inner loop it can unroll and autovectorize (`BLOCK` is
+/// 64, so the remainder is empty by construction).
+#[inline]
+fn popcount_block_portable(run_acc: &mut [u64; BLOCK], act_word: u64, rows: &[u64; BLOCK]) {
+    for (accs, rws) in run_acc.chunks_exact_mut(8).zip(rows.chunks_exact(8)) {
+        for (a, r) in accs.iter_mut().zip(rws) {
+            *a += (act_word & r).count_ones() as u64;
+        }
+    }
+}
+
+/// The explicit `std::arch`-gated variant: the same portable body compiled
+/// with AVX2 + POPCNT enabled, so LLVM lowers `count_ones` to hardware
+/// `popcnt` / vectorized byte-shuffle popcounts instead of the baseline
+/// SWAR sequence. Numerically identical to the portable kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn popcount_block_x86(run_acc: &mut [u64; BLOCK], act_word: u64, rows: &[u64; BLOCK]) {
+    popcount_block_portable(run_acc, act_word, rows)
 }
 
 /// MVP-side walk state for one job: the combo sequencer, the two operand

@@ -177,7 +177,7 @@ impl crate::coordinator::Engine for SessionEngine {
 /// `resnet9:4:4`'s conv8, and 4096 rejects the 8-bit rungs the SLO
 /// precision ladder starts from — `resnet9:8:8`'s conv8 needs
 /// 8·9·8·8 = 4608 words) so every precision in a mix or ladder fits.
-pub fn zoo_engine_factory(exec: ExecMode) -> KeyedEngineFactory {
+pub fn zoo_engine_factory(exec: ExecMode, threads: usize) -> KeyedEngineFactory {
     std::sync::Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
         let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
             .ok_or_else(|| format!("unknown zoo model '{}'", key.model))?;
@@ -186,6 +186,7 @@ pub fn zoo_engine_factory(exec: ExecMode) -> KeyedEngineFactory {
             .mode(key.mode)
             .exec_mode(exec)
             .mvu_config(mvu)
+            .threads(threads)
             .build()
             .map_err(|e| e.to_string())?;
         let resident_words = session.resident_words();
@@ -205,6 +206,10 @@ pub struct BenchConfig {
     pub exec: ExecMode,
     pub policy: RoutingPolicy,
     pub batch: BatcherConfig,
+    /// Host lap-worker threads per engine (`--threads`; see
+    /// [`crate::accel::SystemConfig::threads`]). Bit-identical results at
+    /// any value — only wall-clock moves.
+    pub threads: usize,
 }
 
 impl Default for BenchConfig {
@@ -218,6 +223,7 @@ impl Default for BenchConfig {
             exec: ExecMode::Turbo,
             policy: RoutingPolicy::Affinity,
             batch: BatcherConfig::default(),
+            threads: 1,
         }
     }
 }
@@ -263,6 +269,13 @@ pub struct BenchReport {
     /// Simulated FPS of the streamed pipeline on the same frames — the CI
     /// gate requires ≥2× `sim_serial_fps` on a pipelined mix.
     pub sim_streamed_fps: f64,
+    /// Host lap-worker threads each engine ran with (deterministic knob).
+    pub threads: usize,
+    /// How close the simulator runs to the modelled accelerator:
+    /// `(sim_cycles / 250 MHz) / wall_s`. 1.0 would be real-time; the gap
+    /// to 1.0 is the host-side cost this bench's turbo/thread knobs
+    /// shrink. Timing-dependent — excluded from committed snapshots.
+    pub sim_realtime_factor: f64,
     pub per_key: Vec<PerKeySnapshot>,
 }
 
@@ -334,7 +347,8 @@ impl BenchReport {
              \"cache_misses\": {},\n  \"cache_hit_rate\": {},\n  \"reload_words_loaded\": {},\n  \
              \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"streamed_frames\": {},\n  \
              \"pipeline_occupancy\": {},\n  \"sim_serial_fps\": {},\n  \
-             \"sim_streamed_fps\": {},\n  \"per_key\": [{}]\n}}\n",
+             \"sim_streamed_fps\": {},\n  \"threads\": {},\n  \
+             \"sim_realtime_factor\": {},\n  \"per_key\": [{}]\n}}\n",
             json_str(self.schema),
             self.seed,
             self.images,
@@ -363,6 +377,8 @@ impl BenchReport {
             json_num(self.pipeline_occupancy),
             json_num(self.sim_serial_fps),
             json_num(self.sim_streamed_fps),
+            self.threads,
+            json_num(self.sim_realtime_factor),
             per_key.join(", ")
         )
     }
@@ -406,7 +422,7 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
     }
 
     let mut fleet = Fleet::new(
-        zoo_engine_factory(cfg.exec),
+        zoo_engine_factory(cfg.exec, cfg.threads),
         FleetConfig {
             workers: cfg.workers,
             cache_per_worker: cfg.cache_per_worker,
@@ -482,6 +498,12 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
         pipeline_occupancy: snap.pipeline_occupancy(),
         sim_serial_fps: snap.sim_serial_fps(CLOCK_HZ),
         sim_streamed_fps: snap.sim_streamed_fps(CLOCK_HZ),
+        threads: cfg.threads,
+        sim_realtime_factor: if wall_s > 0.0 {
+            (snap.sim_cycles as f64 / CLOCK_HZ as f64) / wall_s
+        } else {
+            0.0
+        },
         per_key: snap.per_key,
     })
 }
@@ -581,6 +603,8 @@ mod tests {
             pipeline_occupancy: 0.75,
             sim_serial_fps: 1250.0,
             sim_streamed_fps: 6000.0,
+            threads: 4,
+            sim_realtime_factor: 0.0001,
             per_key: vec![],
         };
         let json = report.to_json();
@@ -596,6 +620,8 @@ mod tests {
             "\"pipeline_occupancy\": 0.75",
             "\"sim_serial_fps\": 1250",
             "\"sim_streamed_fps\": 6000",
+            "\"threads\": 4",
+            "\"sim_realtime_factor\": 0.0001",
             "\"per_key\": []",
         ] {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");

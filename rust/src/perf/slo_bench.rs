@@ -930,7 +930,9 @@ pub fn run_slo_bench_with(
 /// models, and each tenant's accuracy-proxy table from
 /// [`zoo::accuracy_proxy_table`] when `proxy_images > 0`.
 pub fn run_slo_bench(cfg: &SloBenchConfig) -> Result<SloBenchReport, String> {
-    let factory = zoo_engine_factory(cfg.exec);
+    // The SLO DES reports virtual time, not wall-clock, so lap workers
+    // cannot change its results — pin 1 to keep the host footprint flat.
+    let factory = zoo_engine_factory(cfg.exec, 1);
     let resolve = |key: &ModelKey| -> Result<TenantShape, String> {
         let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
             .ok_or_else(|| format!("unknown zoo model '{}' in mix", key.model))?;

@@ -90,7 +90,7 @@
 //! All failure paths surface as the typed [`SessionError`] — no stringly
 //! errors, no panicking asserts on [`SystemExit`].
 
-use crate::accel::{System, SystemConfig, SystemExit};
+use crate::accel::{LapStream, System, SystemConfig, SystemExit};
 use crate::exec::{ExecMode, StreamSchedule};
 use crate::codegen::program::{CompiledModel, LayerPlan};
 use crate::codegen::schedule::{DistributedPlan, MultiPassPlan};
@@ -99,7 +99,7 @@ use crate::codegen::{
 };
 use crate::coordinator::Engine;
 use crate::model::Model;
-use crate::mvu::{JobConfig, MvuConfig};
+use crate::mvu::MvuConfig;
 use crate::pito::Trap;
 use crate::runtime::{ArtifactStore, HostModule, Runtime, RuntimeError};
 use crate::sim::Tensor3;
@@ -223,6 +223,7 @@ pub struct SessionBuilder {
     exec: ExecMode,
     fuel: u64,
     mvu: MvuConfig,
+    threads: usize,
     artifacts: Option<ArtifactStore>,
     host_input_shape: Vec<i64>,
 }
@@ -239,6 +240,7 @@ impl SessionBuilder {
             exec: ExecMode::Turbo,
             fuel: crate::pito::BarrelConfig::default().max_cycles,
             mvu: MvuConfig::default(),
+            threads: 1,
             artifacts: None,
             host_input_shape: vec![1, 3, 32, 32],
         }
@@ -277,6 +279,15 @@ impl SessionBuilder {
     /// Override the MVU memory geometry.
     pub fn mvu_config(mut self, cfg: MvuConfig) -> Self {
         self.mvu = cfg;
+        self
+    }
+
+    /// Host worker threads for turbo streamed-lap execution (see
+    /// [`crate::accel::SystemConfig::threads`]). Defaults to 1; results
+    /// are bit-identical at any value — the knob trades host cores for
+    /// wall-clock on batched/streamed runs.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -339,6 +350,7 @@ impl SessionBuilder {
             mvu: self.mvu,
             barrel: crate::pito::BarrelConfig { max_cycles: self.fuel, ..Default::default() },
             exec: self.exec,
+            threads: self.threads,
         };
         let mut sys = System::new(cfg);
         match &program {
@@ -762,7 +774,7 @@ impl InferenceSession {
                     drive_pipelined_turbo(&mut self.sys, &c.plans, self.fuel)?
                 }
                 Program::Distributed(p) => {
-                    drive_distributed_turbo(&mut self.sys, &p.jobs, self.fuel)?
+                    drive_distributed_turbo(&mut self.sys, p, self.fuel)?
                 }
                 Program::MultiPass(_) => unreachable!("multi-pass handled by exec_multi_pass"),
             },
@@ -1034,9 +1046,11 @@ fn drive_pipelined_turbo(
     let cap = sys.max_cycles();
     for plan in plans {
         let before = sys.mvus[plan.mvu].busy_cycles();
-        for job in &plan.jobs {
-            sys.run_job(plan.mvu, job.clone())
-                .map_err(|e| SessionError::Launch(vec![e]))?;
+        // Replay the plan's memoized traces: the walk is captured once per
+        // compiled plan and shared by every frame and batch item.
+        for (job, trace) in plan.jobs.iter().zip(plan.traces()) {
+            sys.run_job_traced(plan.mvu, job, Some(trace))
+                .map_err(|e| SessionError::Launch(vec![e.to_string()]))?;
             if sys.cycles() >= cap {
                 return Err(SessionError::FuelExhausted { fuel: fuel_report });
             }
@@ -1058,14 +1072,14 @@ fn drive_pipelined_turbo(
 /// [`drive_pipelined_turbo`].
 fn drive_distributed_turbo(
     sys: &mut System,
-    jobs: &[Vec<JobConfig>],
+    plan: &DistributedPlan,
     fuel_report: u64,
 ) -> Result<(), SessionError> {
     let cap = sys.max_cycles();
-    for (m, chunk) in jobs.iter().enumerate() {
-        for job in chunk {
-            sys.run_job(m, job.clone())
-                .map_err(|e| SessionError::Launch(vec![e]))?;
+    for (m, (chunk, traces)) in plan.jobs.iter().zip(plan.traces()).enumerate() {
+        for (job, trace) in chunk.iter().zip(traces) {
+            sys.run_job_traced(m, job, Some(trace))
+                .map_err(|e| SessionError::Launch(vec![e.to_string()]))?;
             if sys.cycles() >= cap {
                 return Err(SessionError::FuelExhausted { fuel: fuel_report });
             }
@@ -1105,14 +1119,22 @@ fn stream_compiled(
             c.load_input_parity(sys, &inputs[lap], lap % 2);
         }
         let active = sched.active(lap);
-        let mut work: Vec<(usize, &[JobConfig])> = Vec::with_capacity(active.len());
+        let turbo = sys.exec_mode() == ExecMode::Turbo;
+        let mut work: Vec<LapStream> = Vec::with_capacity(active.len());
         let mut track: Vec<(usize, usize, usize, u64)> = Vec::with_capacity(active.len());
         for &(k, f) in &active {
             let plan = c.stage_plan(k, f % 2);
             track.push((k, f, plan.mvu, sys.mvus[plan.mvu].busy_cycles()));
-            work.push((plan.mvu, plan.jobs.as_slice()));
+            work.push(LapStream {
+                mvu: plan.mvu,
+                jobs: plan.jobs.as_slice(),
+                // Memoized traces feed the turbo replay only; capturing
+                // them under the cycle-accurate backend would be pure waste.
+                traces: turbo.then(|| plan.traces()),
+            });
         }
-        measured += sys.run_lap(&work).map_err(|e| SessionError::Launch(vec![e]))?;
+        measured +=
+            sys.run_lap_traced(&work).map_err(|e| SessionError::Launch(vec![e.to_string()]))?;
         if sys.cycles() >= cap {
             return Err(SessionError::FuelExhausted { fuel: fuel_report });
         }

@@ -152,6 +152,10 @@ fn deep_session_errors_surface_typed() {
         let mut bad = plan.passes[0].plans[0].jobs[0].clone();
         bad.tiles = 0;
         let err = sys.run_job(0, bad).unwrap_err();
-        assert!(err.contains("bad job config"), "{exec:?}: {err}");
+        assert!(
+            matches!(err, barvinn::exec::TurboError::BadConfig { mvu: 0, .. }),
+            "{exec:?}: {err}"
+        );
+        assert!(err.to_string().contains("bad job config"), "{exec:?}: {err}");
     }
 }

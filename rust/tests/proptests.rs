@@ -447,6 +447,143 @@ fn turbo_and_cycle_accurate_backends_agree() {
     }
 }
 
+/// The trace-memoization acceptance property: a [`JobTrace`] captured
+/// once from a job config and replayed over fresh frame data
+/// (`run_job_turbo_traced`) is bit-identical to a fresh capture-and-run
+/// (`run_job_turbo`) — crossbar writes, output RAM words, busy counters
+/// and the reported cycles — across random 1–8-bit precisions
+/// (signed/unsigned), tile counts, pooling windows and destinations, with
+/// the same trace reused across several reloaded frames.
+#[test]
+fn memoized_trace_replay_is_bit_identical() {
+    use barvinn::exec::{run_job_turbo, run_job_turbo_traced, JobTrace};
+    use barvinn::mvu::{AguCfg, JobConfig, Mvu, MvuConfig, OutputDest};
+    use barvinn::quant::pack_block;
+
+    const OUT_BASE: u32 = 8000;
+    let mut rng = Rng(0x7ACE);
+    let cases = if cfg!(debug_assertions) { 24 } else { 80 };
+    for case in 0..cases {
+        // --- random job geometry (same family as the backend matrix) ------
+        let ab = 1 + (rng.next_u64() % 8) as u8;
+        let wb = 1 + (rng.next_u64() % 8) as u8;
+        let aprec = Precision { bits: ab, signed: ab >= 2 && rng.next_u64() % 2 == 0 };
+        let wprec = Precision { bits: wb, signed: wb >= 2 && rng.next_u64() % 2 == 0 };
+        let tiles = 1 + (rng.next_u64() % 4) as u32;
+        let pool_count = [1u32, 2][(rng.next_u64() % 2) as usize];
+        let outputs = pool_count * (1 + (rng.next_u64() % 3) as u32);
+        let combos = ab as u32 * wb as u32;
+        let out_bits = 1 + (rng.next_u64() % 16) as u8;
+        let quant = QuantSerCfg {
+            msb_index: (out_bits - 1) + (rng.next_u64() % 8) as u8,
+            out_bits,
+            saturate: rng.next_u64() % 2 == 0,
+        };
+        let dest = if rng.next_u64() % 2 == 0 {
+            OutputDest::SelfRam
+        } else {
+            OutputDest::Xbar { dest_mask: 1u8 << (1 + (rng.next_u64() % 7) as u8) }
+        };
+        let cfg = JobConfig {
+            aprec,
+            wprec,
+            tiles,
+            outputs,
+            a_agu: AguCfg::from_strides(
+                0,
+                &[
+                    (tiles - 1, ab as i64),
+                    (combos - 1, 0),
+                    (outputs - 1, (tiles * ab as u32) as i64),
+                ],
+            ),
+            w_agu: AguCfg::from_strides(0, &[(tiles - 1, wb as i64), (combos - 1, 0)]),
+            s_agu: AguCfg::from_strides(0, &[(outputs - 1, 1)]),
+            b_agu: AguCfg::from_strides(0, &[(outputs - 1, 1)]),
+            o_agu: AguCfg::from_strides(
+                OUT_BASE,
+                &[(outputs / pool_count - 1, out_bits as i64)],
+            ),
+            scaler_en: rng.next_u64() % 2 == 0,
+            bias_en: rng.next_u64() % 2 == 0,
+            relu_en: rng.next_u64() % 2 == 0,
+            pool_count,
+            quant,
+            dest,
+        };
+
+        // Capture once; the trace must book exactly the job formula.
+        let trace = JobTrace::capture(&cfg);
+        assert_eq!(trace.cycles(), cfg.cycles(), "case {case}: trace cycles != formula");
+
+        // Reuse the one trace across 3 frames of fresh random data.
+        for frame in 0..3 {
+            let a_vals: Vec<[i32; 64]> = (0..(outputs * tiles) as usize)
+                .map(|_| {
+                    std::array::from_fn(|_| rng.range_i32(aprec.min_value(), aprec.max_value()))
+                })
+                .collect();
+            let w_vals: Vec<[[i32; 64]; 64]> = (0..tiles as usize)
+                .map(|_| {
+                    std::array::from_fn(|_| {
+                        std::array::from_fn(|_| {
+                            rng.range_i32(wprec.min_value(), wprec.max_value())
+                        })
+                    })
+                })
+                .collect();
+            let scales: Vec<[u16; 64]> = (0..outputs as usize)
+                .map(|_| std::array::from_fn(|_| rng.range_i32(1, 6) as u16))
+                .collect();
+            let biases: Vec<[i32; 64]> = (0..outputs as usize)
+                .map(|_| std::array::from_fn(|_| rng.range_i32(-500, 500)))
+                .collect();
+            let load = |mvu: &mut Mvu| {
+                for (b, vals) in a_vals.iter().enumerate() {
+                    mvu.act.load((b * ab as usize) as u32, &pack_block(vals, aprec));
+                }
+                for (t, tile) in w_vals.iter().enumerate() {
+                    let rows: Vec<Vec<u64>> = tile.iter().map(|r| pack_block(r, wprec)).collect();
+                    let words: Vec<[u64; 64]> = (0..wb as usize)
+                        .map(|p| std::array::from_fn(|r| rows[r][p]))
+                        .collect();
+                    mvu.weights.load((t * wb as usize) as u32, &words);
+                }
+                for (o, s) in scales.iter().enumerate() {
+                    mvu.scalers.write(o as u32, *s);
+                }
+                for (o, b) in biases.iter().enumerate() {
+                    mvu.biases.write(o as u32, *b);
+                }
+            };
+
+            let mut fresh = Mvu::new(0, MvuConfig::default());
+            load(&mut fresh);
+            let mut replayed = Mvu::new(0, MvuConfig::default());
+            load(&mut replayed);
+
+            let (fresh_writes, fresh_cycles) = run_job_turbo(&mut fresh, &cfg).unwrap();
+            let (trace_writes, trace_cycles) =
+                run_job_turbo_traced(&mut replayed, &cfg, &trace).unwrap();
+            assert_eq!(trace_cycles, fresh_cycles, "case {case} frame {frame}: cycles");
+            assert_eq!(trace_writes, fresh_writes, "case {case} frame {frame}: xbar writes");
+            assert_eq!(
+                replayed.busy_cycles(),
+                fresh.busy_cycles(),
+                "case {case} frame {frame}: busy counters"
+            );
+            let out_words = (outputs / pool_count) * out_bits as u32;
+            for addr in OUT_BASE..OUT_BASE + out_words {
+                assert_eq!(
+                    replayed.act.read(addr),
+                    fresh.act.read(addr),
+                    "case {case} frame {frame}: word {addr} differs"
+                );
+            }
+        }
+    }
+}
+
 /// Random linear 64-channel conv chain at constant spatial size `h` (3×3,
 /// stride 1, pad 1): per-layer random 1–8-bit precisions chaining through
 /// `oprec → next aprec`, random ReLU, and a quant window wide enough that
@@ -639,6 +776,62 @@ fn streamed_and_serial_execution_agree_across_precisions_and_depths() {
                 s.pipeline_cycles >= s.bottleneck_cycles * frames as u64,
                 "case {case} ({exec:?}): cannot beat one frame per bottleneck lap"
             );
+        }
+    }
+}
+
+/// The lap-parallelism acceptance property: a streamed turbo batch run
+/// with N lap-worker threads is bit-identical to the single-threaded run —
+/// per-frame outputs, per-layer cycle counts and the whole pipeline book —
+/// across random per-layer precisions and depths. Threads are a wall-clock
+/// knob only; the gather-then-apply crossbar ordering keeps results
+/// independent of worker interleaving.
+#[test]
+fn threaded_streamed_turbo_is_bit_identical_to_single_threaded() {
+    use barvinn::exec::ExecMode;
+    use barvinn::session::SessionBuilder;
+
+    let mut rng = Rng(0x7B9D);
+    let (cases, h, frames) = if cfg!(debug_assertions) { (2u64, 4usize, 3usize) } else { (5, 6, 4) };
+    for case in 0..cases {
+        let depth = 2 + (rng.next_u64() % 7) as usize;
+        let model = random_chain_model(&mut rng, 2000 + case, depth, h);
+        let l0 = &model.layers[0];
+        let inputs: Vec<Tensor3> = (0..frames)
+            .map(|_| {
+                Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+                    rng.range_i32(0, l0.aprec.max_value())
+                })
+            })
+            .collect();
+
+        let mut run_at = |threads: usize| {
+            let mut s = SessionBuilder::new(model.clone())
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(ExecMode::Turbo)
+                .threads(threads)
+                .build()
+                .unwrap_or_else(|e| panic!("case {case} threads {threads}: {e}"));
+            s.run_stream(&inputs)
+                .unwrap_or_else(|e| panic!("case {case} threads {threads}: {e}"))
+        };
+        let base = run_at(1);
+        for threads in [2, 4, 8] {
+            let got = run_at(threads);
+            assert_eq!(
+                got.stream.pipeline_cycles, base.stream.pipeline_cycles,
+                "case {case} threads {threads}: pipeline books diverged"
+            );
+            for (f, (x, y)) in base.outputs.iter().zip(&got.outputs).enumerate() {
+                assert_eq!(
+                    y.output, x.output,
+                    "case {case} threads {threads} frame {f}: outputs diverged"
+                );
+                assert_eq!(
+                    y.mvu_cycles, x.mvu_cycles,
+                    "case {case} threads {threads} frame {f}: per-layer cycles diverged"
+                );
+            }
         }
     }
 }
