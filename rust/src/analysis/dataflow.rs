@@ -1,0 +1,339 @@
+//! Address safety and def-before-use: interval dataflow over per-layer
+//! activation regions.
+//!
+//! Address safety bounds every job's symbolic [`JobFootprint`] against the
+//! RAM geometry. Def-before-use then walks the layer chain in execution
+//! order, tracking which activation words of each MVU are *defined* — the
+//! host-loaded input region, then each producer's declared output region as
+//! it completes (a region's materialized padding words are defined too:
+//! activation RAM resets to zero and the layout stores padding explicitly).
+//! Every activation read must be covered, every write must stay inside its
+//! layer's declared output region, and weight/scaler/bias reads must stay
+//! inside the words the preload images actually populate.
+
+use crate::codegen::program::LayerPlan;
+use crate::codegen::DistributedPlan;
+use crate::mvu::{JobConfig, MvuConfig, OutputDest};
+use crate::NUM_MVUS;
+
+use super::footprint::{job_footprint, Interval, JobFootprint};
+use super::{DiagCode, Diagnostic, VerifyLevel, VerifyReport};
+
+/// A set of inclusive word intervals, kept sorted and disjoint.
+#[derive(Debug, Default, Clone)]
+pub(crate) struct RegionSet {
+    spans: Vec<(i64, i64)>,
+}
+
+impl RegionSet {
+    pub(crate) fn add(&mut self, lo: i64, hi: i64) {
+        if hi < lo {
+            return;
+        }
+        self.spans.push((lo, hi));
+        self.spans.sort_unstable();
+        let mut merged: Vec<(i64, i64)> = Vec::with_capacity(self.spans.len());
+        for &(lo, hi) in &self.spans {
+            match merged.last_mut() {
+                Some((_, phi)) if lo <= *phi + 1 => *phi = (*phi).max(hi),
+                _ => merged.push((lo, hi)),
+            }
+        }
+        self.spans = merged;
+    }
+
+    /// Whether `[lo, hi]` lies entirely inside the set.
+    pub(crate) fn covers(&self, lo: i64, hi: i64) -> bool {
+        // Disjoint + merged: a covered interval sits inside a single span.
+        self.spans.iter().any(|&(slo, shi)| slo <= lo && hi <= shi)
+    }
+}
+
+/// Inclusive extent of an activation layout's declared region.
+fn act_region(l: &crate::codegen::ActLayout) -> (i64, i64) {
+    let lo = i64::from(l.base);
+    (lo, lo + i64::from(l.size_words()) - 1)
+}
+
+/// Context threaded through per-job checks so diagnostics stay attributable.
+struct JobCtx<'a> {
+    mvu: usize,
+    layer: usize,
+    label: &'a str,
+    job: usize,
+}
+
+impl JobCtx<'_> {
+    fn diag(&self, code: DiagCode, message: String) -> Diagnostic {
+        Diagnostic {
+            code,
+            mvu: Some(self.mvu),
+            layer: Some(self.layer),
+            message: format!("{} job {}: {message}", self.label, self.job),
+        }
+    }
+}
+
+/// Address-safety bounds for one job. Returns `false` if any bound failed
+/// (callers then skip exact trace refinement — a walk with out-of-range
+/// addresses must not be captured).
+fn check_bounds(
+    fp: &JobFootprint,
+    cfg: &MvuConfig,
+    ctx: &JobCtx,
+    report: &mut VerifyReport,
+) -> bool {
+    let mut ok = true;
+    let mut check = |iv: Interval, depth: usize, ram: &str, report: &mut VerifyReport| {
+        if !iv.within(0, depth as i64 - 1) {
+            ok = false;
+            report.diagnostics.push(ctx.diag(
+                DiagCode::AddrOob,
+                format!("{ram} addresses {iv} escape RAM bounds [0, {}]", depth - 1),
+            ));
+        }
+    };
+    check(fp.act_reads, cfg.act_depth, "activation read", report);
+    check(fp.w_reads, cfg.weight_depth, "weight read", report);
+    if let Some(s) = fp.s_reads {
+        check(s, cfg.scaler_depth, "scaler read", report);
+    }
+    if let Some(b) = fp.b_reads {
+        check(b, cfg.bias_depth, "bias read", report);
+    }
+    check(fp.act_writes, cfg.act_depth, "activation write", report);
+    ok
+}
+
+/// Weight/scaler/bias reads must stay inside the words the preload images
+/// populate — reads beyond them would observe stale or never-loaded data.
+fn check_static_regions(
+    fp: &JobFootprint,
+    w_region: (i64, i64),
+    sb_words: (u32, u32),
+    ctx: &JobCtx,
+    report: &mut VerifyReport,
+) {
+    if !fp.w_reads.within(w_region.0, w_region.1) {
+        report.diagnostics.push(ctx.diag(
+            DiagCode::DefUse,
+            format!(
+                "weight reads {} escape the loaded weight image [{}, {}]",
+                fp.w_reads, w_region.0, w_region.1
+            ),
+        ));
+    }
+    if let Some(s) = fp.s_reads {
+        if !s.within(0, i64::from(sb_words.0) - 1) {
+            report.diagnostics.push(ctx.diag(
+                DiagCode::DefUse,
+                format!("scaler reads {s} escape the {} loaded scaler words", sb_words.0),
+            ));
+        }
+    }
+    if let Some(b) = fp.b_reads {
+        if !b.within(0, i64::from(sb_words.1) - 1) {
+            report.diagnostics.push(ctx.diag(
+                DiagCode::DefUse,
+                format!("bias reads {b} escape the {} loaded bias words", sb_words.1),
+            ));
+        }
+    }
+}
+
+/// At [`VerifyLevel::Full`], cross-check the symbolic bounds against the
+/// captured [`crate::exec::JobTrace`] walk: every address the frame-invariant
+/// trace machinery will actually replay must sit inside the interval the
+/// verifier reasoned over. Disagreement means one of the two models of the
+/// AGU semantics is wrong — a verifier-soundness alarm, not a plan bug.
+fn check_trace_agreement(
+    trace: &crate::exec::JobTrace,
+    fp: &JobFootprint,
+    ctx: &JobCtx,
+    report: &mut VerifyReport,
+) {
+    let pairs = [
+        (trace.act_addr_bounds(), fp.act_reads, "activation"),
+        (trace.weight_addr_bounds(), fp.w_reads, "weight"),
+    ];
+    for (bounds, symbolic, ram) in pairs {
+        if let Some((lo, hi)) = bounds {
+            let iv = Interval { lo: i64::from(lo), hi: i64::from(hi) };
+            if !iv.within(symbolic.lo, symbolic.hi) {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::AddrOob,
+                    format!(
+                        "captured {ram} walk spans {iv}, outside the symbolic bound {symbolic}"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Verify one pipelined layer chain (one buffer parity): address safety per
+/// job plus def-before-use interval dataflow across the chain.
+pub(crate) fn check_chain(
+    plans: &[LayerPlan],
+    sb_words: &[(u32, u32)],
+    cfg: &MvuConfig,
+    level: VerifyLevel,
+    label: &str,
+    report: &mut VerifyReport,
+) {
+    let mut defined: Vec<RegionSet> = vec![RegionSet::default(); NUM_MVUS];
+    if let Some(first) = plans.first() {
+        let (lo, hi) = act_region(&first.in_layout);
+        defined[first.mvu].add(lo, hi);
+    }
+    for (h, plan) in plans.iter().enumerate() {
+        let w_lo = i64::from(plan.w_layout.base);
+        let w_region = (w_lo, w_lo + i64::from(plan.w_layout.size_words()) - 1);
+        let out_region = act_region(&plan.out_layout);
+        let mut dest_mvus: Vec<usize> = Vec::new();
+        for (j, job) in plan.jobs.iter().enumerate() {
+            report.jobs_checked += 1;
+            let ctx = JobCtx { mvu: plan.mvu, layer: h, label, job: j };
+            let fp = job_footprint(job);
+            let in_bounds = check_bounds(&fp, cfg, &ctx, report);
+            check_static_regions(&fp, w_region, sb_words[plan.mvu], &ctx, report);
+            if !defined[plan.mvu].covers(fp.act_reads.lo, fp.act_reads.hi) {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::DefUse,
+                    format!(
+                        "activation reads {} touch words no producer wrote and no host \
+                         load defined",
+                        fp.act_reads
+                    ),
+                ));
+            }
+            if !fp.act_writes.within(out_region.0, out_region.1) {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::DefUse,
+                    format!(
+                        "activation writes {} escape the declared output region [{}, {}]",
+                        fp.act_writes, out_region.0, out_region.1
+                    ),
+                ));
+            }
+            for m in fp.write_mvus(plan.mvu) {
+                if !dest_mvus.contains(&m) {
+                    dest_mvus.push(m);
+                }
+            }
+            if level == VerifyLevel::Full && in_bounds && job.validate().is_ok() {
+                check_trace_agreement(&plan.traces()[j], &fp, &ctx, report);
+            }
+        }
+        // The layer completed: its whole declared output region is defined
+        // on every destination MVU (raw cells written, padding cells are
+        // reset-zero by layout construction).
+        for m in dest_mvus {
+            defined[m].add(out_region.0, out_region.1);
+        }
+    }
+}
+
+/// Verify a distributed single-layer plan: every MVU chunk reads its own
+/// copy of the host-loaded input and writes its own rows to its own RAM —
+/// crossbar-crossing writes would race, as distributed mode has no
+/// inter-MVU synchronization.
+pub(crate) fn check_distributed(
+    p: &DistributedPlan,
+    cfg: &MvuConfig,
+    level: VerifyLevel,
+    report: &mut VerifyReport,
+) {
+    let in_region = act_region(&p.in_layout);
+    let out_region = act_region(&p.out_layout);
+    let w_lo = i64::from(p.w_layout.base);
+    let w_region = (w_lo, w_lo + i64::from(p.w_layout.size_words()) - 1);
+    // `load_scaler_bias` packs one word per 64 output channels.
+    let sb = p.out_layout.cb as u32;
+    for (m, jobs) in p.jobs.iter().enumerate() {
+        for (j, job) in jobs.iter().enumerate() {
+            report.jobs_checked += 1;
+            let ctx = JobCtx { mvu: m, layer: 0, label: "distributed", job: j };
+            let fp = job_footprint(job);
+            let in_bounds = check_bounds(&fp, cfg, &ctx, report);
+            check_static_regions(&fp, w_region, (sb, sb), &ctx, report);
+            if !fp.act_reads.within(in_region.0, in_region.1) {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::DefUse,
+                    format!(
+                        "activation reads {} escape the host-loaded input region [{}, {}]",
+                        fp.act_reads, in_region.0, in_region.1
+                    ),
+                ));
+            }
+            if !fp.act_writes.within(out_region.0, out_region.1) {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::DefUse,
+                    format!(
+                        "activation writes {} escape the declared output region [{}, {}]",
+                        fp.act_writes, out_region.0, out_region.1
+                    ),
+                ));
+            }
+            if job.dest != OutputDest::SelfRam {
+                report.diagnostics.push(ctx.diag(
+                    DiagCode::StreamRace,
+                    "distributed chunk writes cross the crossbar, but distributed mode \
+                     has no inter-MVU synchronization"
+                        .to_string(),
+                ));
+            }
+            if level == VerifyLevel::Full && in_bounds && job.validate().is_ok() {
+                check_trace_agreement(&p.traces()[m][j], &fp, &ctx, report);
+            }
+        }
+    }
+}
+
+/// Aggregate activation read/write footprints of a whole layer plan, for
+/// the stream interference check.
+pub(crate) fn layer_act_footprint(plan: &LayerPlan) -> Option<(Interval, Interval, Vec<usize>)> {
+    let mut reads: Option<Interval> = None;
+    let mut writes: Option<Interval> = None;
+    let mut dests: Vec<usize> = Vec::new();
+    for job in &plan.jobs {
+        let fp = job_footprint(job);
+        reads = Some(match reads {
+            None => fp.act_reads,
+            Some(r) => Interval { lo: r.lo.min(fp.act_reads.lo), hi: r.hi.max(fp.act_reads.hi) },
+        });
+        writes = Some(match writes {
+            None => fp.act_writes,
+            Some(w) => {
+                Interval { lo: w.lo.min(fp.act_writes.lo), hi: w.hi.max(fp.act_writes.hi) }
+            }
+        });
+        for m in fp.write_mvus(plan.mvu) {
+            if !dests.contains(&m) {
+                dests.push(m);
+            }
+        }
+    }
+    Some((reads?, writes?, dests))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_set_merges_and_covers() {
+        let mut r = RegionSet::default();
+        r.add(10, 20);
+        r.add(21, 30); // adjacent: merges
+        r.add(50, 60);
+        assert!(r.covers(10, 30));
+        assert!(r.covers(15, 25));
+        assert!(!r.covers(10, 31));
+        assert!(!r.covers(31, 49));
+        assert!(r.covers(50, 60));
+        assert!(!r.covers(30, 50), "gap between spans is not covered");
+        r.add(31, 49);
+        assert!(r.covers(10, 60), "filling the gap joins the spans");
+    }
+}

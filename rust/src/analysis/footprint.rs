@@ -1,0 +1,149 @@
+//! Symbolic address footprints: exact interval bounds of the address sets
+//! MVU jobs touch, derived from the affine loop structure of their AGUs —
+//! no walk execution required.
+
+use crate::mvu::{AguCfg, JobConfig, OutputDest};
+
+/// Inclusive word-address interval `[lo, hi]`. Signed so that corrupt AGU
+/// configurations whose walks would step below address zero stay
+/// representable (and diagnosable) instead of wrapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    /// Widen the high edge by `bits - 1` words: the sequencer reads bit
+    /// planes `base .. base + bits` MSB-first from each AGU tile base, and
+    /// the quantizer writes planes `base .. base + out_bits`.
+    pub fn plane_span(self, bits: u8) -> Interval {
+        Interval { lo: self.lo, hi: self.hi + i64::from(bits) - 1 }
+    }
+
+    pub fn overlaps(self, other: Interval) -> bool {
+        self.lo <= other.hi && other.lo <= self.hi
+    }
+
+    /// Entirely inside `[lo, hi]` (inclusive).
+    pub fn within(self, lo: i64, hi: i64) -> bool {
+        self.lo >= lo && self.hi <= hi
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// Exact inclusive bounds of the address set one AGU pass emits.
+///
+/// The AGU's emitted address is affine in the loop counters: advancing loop
+/// `k` applies `jump_k`, and the inner loops' counters reset *without*
+/// rewinding their accumulated jumps, so each counter `i_k ∈ [0, count_k]`
+/// contributes `i_k · stride_k` with `stride_k = jump_k + P_{k-1}`, where
+/// `P_{k-1}` is the jump sum of one full inner pass (the same recurrence
+/// [`AguCfg::from_strides`] inverts). Min/max over the counter box are
+/// attained at corners, every corner is enumerated during a pass, and
+/// replayed passes wrap back to `base` — so the bounds are tight, not
+/// merely conservative.
+pub fn agu_bounds(cfg: &AguCfg) -> Interval {
+    let base = i64::from(cfg.base);
+    let (mut lo, mut hi) = (base, base);
+    let mut inner_pass: i64 = 0; // P_{k-1}
+    for l in &cfg.loops {
+        let count = i64::from(l.count);
+        let jump = i64::from(l.jump);
+        let extent = count * (jump + inner_pass);
+        if extent < 0 {
+            lo += extent;
+        } else {
+            hi += extent;
+        }
+        inner_pass = (count + 1) * inner_pass + count * jump;
+    }
+    Interval { lo, hi }
+}
+
+/// The complete memory footprint of one job, as inclusive word intervals
+/// per RAM, mirroring the sequencer semantics of
+/// [`crate::mvu::JobWalk`]/[`crate::mvu::OutputStage`]: activation and
+/// weight tile bases fan out over their bit planes, scaler/bias AGUs emit
+/// one word per output vector, and the quantizer writes `out_bits`
+/// consecutive planes from each output base.
+#[derive(Debug, Clone, Copy)]
+pub struct JobFootprint {
+    /// Activation-RAM words read (tile bases × activation bit planes).
+    pub act_reads: Interval,
+    /// Weight-RAM words read (tile bases × weight bit planes).
+    pub w_reads: Interval,
+    /// Scaler-RAM words read, when the scaler stage is enabled.
+    pub s_reads: Option<Interval>,
+    /// Bias-RAM words read, when the bias stage is enabled.
+    pub b_reads: Option<Interval>,
+    /// Activation-RAM words written (output bases × quantized planes).
+    pub act_writes: Interval,
+    /// Which activation RAM(s) the writes land in.
+    pub dest: OutputDest,
+}
+
+impl JobFootprint {
+    /// The MVU indices whose activation RAM receives this job's writes,
+    /// given the MVU the job runs on.
+    pub fn write_mvus(&self, own: usize) -> Vec<usize> {
+        match self.dest {
+            OutputDest::SelfRam => vec![own],
+            OutputDest::Xbar { dest_mask } => {
+                (0..crate::NUM_MVUS).filter(|m| dest_mask & (1 << m) != 0).collect()
+            }
+        }
+    }
+}
+
+/// Derive the symbolic footprint of `job`.
+pub fn job_footprint(job: &JobConfig) -> JobFootprint {
+    JobFootprint {
+        act_reads: agu_bounds(&job.a_agu).plane_span(job.aprec.bits),
+        w_reads: agu_bounds(&job.w_agu).plane_span(job.wprec.bits),
+        s_reads: job.scaler_en.then(|| agu_bounds(&job.s_agu)),
+        b_reads: job.bias_en.then(|| agu_bounds(&job.b_agu)),
+        act_writes: agu_bounds(&job.o_agu).plane_span(job.quant.out_bits),
+        dest: job.dest,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Symbolic bounds equal the min/max of the enumerated pass for a
+    /// conv-shaped three-level AGU, including a negative-stride level.
+    #[test]
+    fn bounds_match_enumeration() {
+        let cases = [
+            AguCfg::from_strides(100, &[(3, 1), (2, 10), (4, 100)]),
+            AguCfg::from_strides(500, &[(3, 1), (2, -10), (4, 100)]),
+            AguCfg::from_strides(0, &[]),
+            AguCfg::from_strides(7, &[(63, 1)]),
+            AguCfg::from_strides(4000, &[(1, -7), (5, 3), (2, -100), (3, 29)]),
+        ];
+        for cfg in cases {
+            let b = agu_bounds(&cfg);
+            let addrs = cfg.addresses();
+            let lo = addrs.iter().copied().min().unwrap() as i64;
+            let hi = addrs.iter().copied().max().unwrap() as i64;
+            assert_eq!((b.lo, b.hi), (lo, hi), "cfg {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn plane_span_widens_high_edge_only() {
+        let iv = Interval { lo: 10, hi: 20 }.plane_span(4);
+        assert_eq!(iv, Interval { lo: 10, hi: 23 });
+        assert!(iv.within(10, 23));
+        assert!(!iv.within(11, 23));
+        assert!(iv.overlaps(Interval { lo: 23, hi: 30 }));
+        assert!(!iv.overlaps(Interval { lo: 24, hi: 30 }));
+    }
+}

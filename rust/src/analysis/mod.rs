@@ -1,0 +1,411 @@
+//! Static program verifier: prove a compiled command stream safe before a
+//! single simulated cycle.
+//!
+//! The code generator (§3.3) emits three artifacts per model — per-layer MVU
+//! job streams, RAM layouts/images and a Pito RISC-V control program — and
+//! until now a bad artifact was only discovered at *runtime*, as a typed
+//! `Fault`/`Deadlock`/`StreamOverlap` after cycles were burned (or a panic
+//! inside a threaded lap). This module is the eBPF-verifier-style answer:
+//! abstract-interpret the compiled plan and prove, without executing,
+//!
+//! 1. **address safety** (`footprint`) — every AGU-generated activation,
+//!    weight, scaler and bias address stays in RAM bounds, derived
+//!    symbolically from the affine loop structure of each [`JobConfig`]'s
+//!    AGUs (and cross-checked against the frame-invariant
+//!    [`crate::exec::JobTrace`] walk at [`VerifyLevel::Full`]);
+//! 2. **def-before-use** (`dataflow`) — interval dataflow over per-layer
+//!    activation regions: every word a layer reads was written by its
+//!    producer or lies in the host-loaded input region (catching
+//!    uninitialized reads the simulator would silently serve as zeros);
+//! 3. **stream-race freedom** (`stream`) — concurrent `(stage, frame)`
+//!    jobs in every [`crate::exec::StreamSchedule`] lap touch disjoint
+//!    activation/crossbar regions and obey the odd/even double-buffer
+//!    parity discipline, making the `thread::scope` lap parallelism a
+//!    *proven*-race-free execution rather than a tested one;
+//! 4. **sync liveness** (`sync`) — the Pito program's flag-wait structure
+//!    forms a live schedule: a constant-propagating walk of each hart's
+//!    instruction stream extracts its flag stores and spin-loop waits, and
+//!    a monotone event simulation proves every wait is eventually
+//!    satisfied (static deadlock detection);
+//! 5. **cycle-budget consistency** — the per-job formula cycles sum to each
+//!    plan's `analytic_cycles` and match the closed-form
+//!    [`crate::codegen::layer_cycles`], promoting the runtime
+//!    `debug_assert` cross-checks into checked diagnostics.
+//!
+//! Every violation is a typed [`Diagnostic`] with a stable [`DiagCode`];
+//! [`VerifyReport::to_json`] renders the machine-readable report the
+//! `barvinn check` subcommand and the CI verify matrix gate on. The
+//! [`crate::session::SessionBuilder`] runs the verifier as an on-by-default
+//! admission gate.
+
+use crate::codegen::{layer_cycles, CompiledModel, DistributedPlan, MultiPassPlan};
+use crate::model::{ConvLayer, Model};
+use crate::mvu::{JobConfig, MvuConfig};
+
+mod dataflow;
+mod footprint;
+mod stream;
+mod sync;
+
+pub use footprint::{agu_bounds, job_footprint, Interval, JobFootprint};
+
+/// How much static verification a session admission runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyLevel {
+    /// Skip verification entirely.
+    Off,
+    /// All five checks with symbolic (interval) address reasoning —
+    /// O(jobs + program) work, cheap enough to gate every build.
+    #[default]
+    Quick,
+    /// [`Self::Quick`] plus an exact cross-check of the symbolic address
+    /// bounds against the captured [`crate::exec::JobTrace`] walk of every
+    /// job (the traces are memoized on the plan, so the turbo backend
+    /// reuses the capture).
+    Full,
+}
+
+impl VerifyLevel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            VerifyLevel::Off => "off",
+            VerifyLevel::Quick => "quick",
+            VerifyLevel::Full => "full",
+        }
+    }
+}
+
+/// Stable diagnostic codes — the machine-readable contract `barvinn check`
+/// consumers and the CI gate match on. Documented in
+/// `docs/ARCHITECTURE.md` ("Static verification").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagCode {
+    /// An AGU-generated address (plus its bit-plane span) escapes the RAM
+    /// it addresses.
+    AddrOob,
+    /// A read of words no producer wrote and no host load defined, or a
+    /// write escaping the declared output region.
+    DefUse,
+    /// The odd-parity stream twin of a stage is not the even plan shifted
+    /// by exactly one buffer.
+    StreamParity,
+    /// Two concurrently-active `(stage, frame)` jobs of a stream lap touch
+    /// overlapping words with at least one writer.
+    StreamRace,
+    /// A flag wait that can never be satisfied (dropped sync, circular
+    /// wait, or a static walk that could not be bounded).
+    SyncLiveness,
+    /// Summed per-job formula cycles disagree with the plan's
+    /// `analytic_cycles` or the closed-form layer budget.
+    CycleBudget,
+    /// A job config fails its own structural validation.
+    JobInvalid,
+    /// The Pito program contains an undecodable word or statically
+    /// un-followable control flow.
+    ProgDecode,
+}
+
+impl DiagCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiagCode::AddrOob => "ADDR-OOB",
+            DiagCode::DefUse => "DEF-USE",
+            DiagCode::StreamParity => "STREAM-PARITY",
+            DiagCode::StreamRace => "STREAM-RACE",
+            DiagCode::SyncLiveness => "SYNC-LIVENESS",
+            DiagCode::CycleBudget => "CYCLE-BUDGET",
+            DiagCode::JobInvalid => "JOB-INVALID",
+            DiagCode::ProgDecode => "PROG-DECODE",
+        }
+    }
+}
+
+impl std::fmt::Display for DiagCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One statically proven violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: DiagCode,
+    /// MVU whose RAM / job stream the finding concerns, when attributable.
+    pub mvu: Option<usize>,
+    /// Model layer index, when attributable.
+    pub layer: Option<usize>,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.code)?;
+        if let Some(m) = self.mvu {
+            write!(f, " mvu {m}")?;
+        }
+        if let Some(l) = self.layer {
+            write!(f, " layer {l}")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The result of one verification run: diagnostics plus coverage counters
+/// (what the proof actually quantified over).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyReport {
+    pub level: VerifyLevel,
+    pub diagnostics: Vec<Diagnostic>,
+    /// Jobs whose address footprints were bounded.
+    pub jobs_checked: usize,
+    /// Stream-schedule laps whose active sets were interference-checked.
+    pub laps_checked: usize,
+    /// Harts whose instruction streams were walked for sync liveness.
+    pub harts_checked: usize,
+}
+
+impl VerifyReport {
+    fn new(level: VerifyLevel) -> Self {
+        VerifyReport {
+            level,
+            diagnostics: Vec::new(),
+            jobs_checked: 0,
+            laps_checked: 0,
+            harts_checked: 0,
+        }
+    }
+
+    /// No violations found.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// True if any diagnostic carries `code`.
+    pub fn has(&self, code: DiagCode) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    /// Fold another report into this one — `barvinn check` verifies a
+    /// matrix of plans (e.g. one distributed plan per layer) into a single
+    /// report.
+    pub fn merge(&mut self, other: VerifyReport) {
+        self.diagnostics.extend(other.diagnostics);
+        self.jobs_checked += other.jobs_checked;
+        self.laps_checked += other.laps_checked;
+        self.harts_checked += other.harts_checked;
+    }
+
+    /// Dependency-free JSON rendering (schema `barvinn.verify/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push_str("{\"schema\":\"barvinn.verify/v1\"");
+        s.push_str(&format!(",\"level\":\"{}\"", self.level.as_str()));
+        s.push_str(&format!(",\"jobs_checked\":{}", self.jobs_checked));
+        s.push_str(&format!(",\"laps_checked\":{}", self.laps_checked));
+        s.push_str(&format!(",\"harts_checked\":{}", self.harts_checked));
+        s.push_str(&format!(",\"clean\":{}", self.is_clean()));
+        s.push_str(",\"diagnostics\":[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{{\"code\":\"{}\"", d.code));
+            match d.mvu {
+                Some(m) => s.push_str(&format!(",\"mvu\":{m}")),
+                None => s.push_str(",\"mvu\":null"),
+            }
+            match d.layer {
+                Some(l) => s.push_str(&format!(",\"layer\":{l}")),
+                None => s.push_str(",\"layer\":null"),
+            }
+            s.push_str(&format!(",\"message\":\"{}\"}}", json_escape(&d.message)));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Verify a pipelined [`CompiledModel`] against the source model and a
+/// memory geometry: all five checks over both buffer parities.
+pub fn verify_pipelined(
+    c: &CompiledModel,
+    model: &Model,
+    cfg: &MvuConfig,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = VerifyReport::new(level);
+    if level == VerifyLevel::Off {
+        return report;
+    }
+    check_job_validity(c.plans.iter().flat_map(|p| &p.jobs), &mut report);
+    check_job_validity(c.stream_plans.iter().flat_map(|p| &p.jobs), &mut report);
+
+    let sb = sb_words_of(c);
+    dataflow::check_chain(&c.plans, &sb, cfg, level, "parity 0", &mut report);
+    dataflow::check_chain(&c.stream_plans, &sb, cfg, level, "parity 1", &mut report);
+
+    stream::check_parity(c, &mut report);
+    stream::check_lap_races(c, &mut report);
+
+    sync::check_program(&c.program, &mut report);
+
+    check_cycles_pipelined(c, model, 0, &mut report);
+    report
+}
+
+/// Verify a distributed-mode [`DistributedPlan`] for its single layer.
+pub fn verify_distributed(
+    p: &DistributedPlan,
+    layer: &ConvLayer,
+    cfg: &MvuConfig,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = VerifyReport::new(level);
+    if level == VerifyLevel::Off {
+        return report;
+    }
+    check_job_validity(p.jobs.iter().flatten(), &mut report);
+    dataflow::check_distributed(p, cfg, level, &mut report);
+    sync::check_program(&p.program, &mut report);
+
+    let booked: u64 = p.jobs.iter().flatten().map(JobConfig::cycles).sum();
+    let budget = layer_cycles(layer, p.policy);
+    if booked != budget {
+        report.diagnostics.push(Diagnostic {
+            code: DiagCode::CycleBudget,
+            mvu: None,
+            layer: Some(0),
+            message: format!(
+                "distributed chunks book {booked} cycles, closed-form layer budget is {budget}"
+            ),
+        });
+    }
+    report
+}
+
+/// Verify a [`MultiPassPlan`]: every pass is verified as a pipelined model
+/// over its layer range (the host copy between passes re-establishes the
+/// input-region definedness each pass starts from).
+pub fn verify_multi_pass(
+    p: &MultiPassPlan,
+    model: &Model,
+    cfg: &MvuConfig,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = VerifyReport::new(level);
+    if level == VerifyLevel::Off {
+        return report;
+    }
+    for (i, (pass, &(lo, hi))) in p.passes.iter().zip(&p.ranges).enumerate() {
+        check_job_validity(pass.plans.iter().flat_map(|pl| &pl.jobs), &mut report);
+        check_job_validity(pass.stream_plans.iter().flat_map(|pl| &pl.jobs), &mut report);
+        let sb = sb_words_of(pass);
+        let even = format!("pass {i} parity 0");
+        let odd = format!("pass {i} parity 1");
+        dataflow::check_chain(&pass.plans, &sb, cfg, level, &even, &mut report);
+        dataflow::check_chain(&pass.stream_plans, &sb, cfg, level, &odd, &mut report);
+        stream::check_parity(pass, &mut report);
+        stream::check_lap_races(pass, &mut report);
+        sync::check_program(&pass.program, &mut report);
+        debug_assert_eq!(hi - lo, pass.plans.len());
+        check_cycles_pipelined(pass, model, lo, &mut report);
+    }
+    report
+}
+
+/// Loaded scaler/bias RAM words per MVU, from the plan's preload images.
+fn sb_words_of(c: &CompiledModel) -> Vec<(u32, u32)> {
+    c.images
+        .iter()
+        .map(|img| {
+            (img.scale.len().div_ceil(64) as u32, img.bias.len().div_ceil(64) as u32)
+        })
+        .collect()
+}
+
+fn check_job_validity<'a>(
+    jobs: impl Iterator<Item = &'a JobConfig>,
+    report: &mut VerifyReport,
+) {
+    for (i, job) in jobs.enumerate() {
+        if let Err(reason) = job.validate() {
+            report.diagnostics.push(Diagnostic {
+                code: DiagCode::JobInvalid,
+                mvu: None,
+                layer: None,
+                message: format!("job {i} fails structural validation: {reason}"),
+            });
+        }
+    }
+}
+
+/// Cycle-budget consistency for a pipelined image: per layer, the summed
+/// per-job formula cycles must equal the plan's `analytic_cycles`, which in
+/// turn must equal the closed-form Table-3 budget of the source layer. The
+/// odd-parity twins must book identically (same jobs, shifted addresses).
+fn check_cycles_pipelined(
+    c: &CompiledModel,
+    model: &Model,
+    layer0: usize,
+    report: &mut VerifyReport,
+) {
+    for (h, plan) in c.plans.iter().enumerate() {
+        let layer = layer0 + h;
+        let booked: u64 = plan.jobs.iter().map(JobConfig::cycles).sum();
+        if booked != plan.analytic_cycles {
+            report.diagnostics.push(Diagnostic {
+                code: DiagCode::CycleBudget,
+                mvu: Some(plan.mvu),
+                layer: Some(layer),
+                message: format!(
+                    "jobs book {booked} cycles, plan claims analytic_cycles = {}",
+                    plan.analytic_cycles
+                ),
+            });
+        }
+        if let Some(src) = model.layers.get(layer) {
+            let budget = layer_cycles(src, c.policy);
+            if plan.analytic_cycles != budget {
+                report.diagnostics.push(Diagnostic {
+                    code: DiagCode::CycleBudget,
+                    mvu: Some(plan.mvu),
+                    layer: Some(layer),
+                    message: format!(
+                        "analytic_cycles = {} disagrees with closed-form layer budget {budget}",
+                        plan.analytic_cycles
+                    ),
+                });
+            }
+        }
+        if let Some(twin) = c.stream_plans.get(h) {
+            let twin_booked: u64 = twin.jobs.iter().map(JobConfig::cycles).sum();
+            if twin_booked != booked {
+                report.diagnostics.push(Diagnostic {
+                    code: DiagCode::CycleBudget,
+                    mvu: Some(plan.mvu),
+                    layer: Some(layer),
+                    message: format!(
+                        "odd-parity twin books {twin_booked} cycles, even parity books {booked}"
+                    ),
+                });
+            }
+        }
+    }
+}

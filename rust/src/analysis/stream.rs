@@ -1,0 +1,161 @@
+//! Stream-race freedom: the double-buffer parity discipline, and static
+//! interference of every `(stage, frame)` pair a stream lap runs
+//! concurrently.
+//!
+//! The streamed driver runs one lap's active jobs under `thread::scope`, so
+//! race freedom must hold for *every* lap shape. Laps repeat with period 2
+//! once the pipeline is full (frame `f` uses buffer parity `f % 2`), so a
+//! schedule of `stages + 2` frames covers the fill laps, both steady-state
+//! parity alignments, and the drain laps — checking it checks them all.
+
+use crate::codegen::CompiledModel;
+use crate::exec::StreamSchedule;
+
+use super::dataflow::layer_act_footprint;
+use super::footprint::Interval;
+use super::{DiagCode, Diagnostic, VerifyReport};
+
+/// The odd-parity twin of each stage must be the even plan shifted by
+/// exactly one buffer: same MVU, same job count, same weight image, and
+/// activation layouts offset by the even layout's own size.
+pub(crate) fn check_parity(c: &CompiledModel, report: &mut VerifyReport) {
+    if c.plans.len() != c.stream_plans.len() {
+        report.diagnostics.push(Diagnostic {
+            code: DiagCode::StreamParity,
+            mvu: None,
+            layer: None,
+            message: format!(
+                "{} even-parity stages but {} odd-parity twins",
+                c.plans.len(),
+                c.stream_plans.len()
+            ),
+        });
+        return;
+    }
+    for (h, (even, odd)) in c.plans.iter().zip(&c.stream_plans).enumerate() {
+        let mut fail = |what: &str, report: &mut VerifyReport| {
+            report.diagnostics.push(Diagnostic {
+                code: DiagCode::StreamParity,
+                mvu: Some(even.mvu),
+                layer: Some(h),
+                message: format!(
+                    "odd-parity twin violates the double-buffer discipline: {what}"
+                ),
+            });
+        };
+        if odd.mvu != even.mvu {
+            fail(&format!("runs on mvu {} instead of {}", odd.mvu, even.mvu), report);
+        }
+        if odd.jobs.len() != even.jobs.len() {
+            fail(
+                &format!("{} jobs instead of {}", odd.jobs.len(), even.jobs.len()),
+                report,
+            );
+        }
+        if odd.w_layout != even.w_layout {
+            fail("weight layout differs (parities must share the weight image)", report);
+        }
+        let want_in = even.in_layout.offset(even.in_layout.size_words());
+        if odd.in_layout != want_in {
+            fail(
+                &format!(
+                    "input region starts at word {} instead of {} (one buffer past even)",
+                    odd.in_layout.base, want_in.base
+                ),
+                report,
+            );
+        }
+        let want_out = even.out_layout.offset(even.out_layout.size_words());
+        if odd.out_layout != want_out {
+            fail(
+                &format!(
+                    "output region starts at word {} instead of {} (one buffer past even)",
+                    odd.out_layout.base, want_out.base
+                ),
+                report,
+            );
+        }
+    }
+}
+
+/// One stage's aggregate activation traffic during a lap: where it reads
+/// (its own RAM) and where its writes land.
+struct LapAccess {
+    stage: usize,
+    frame: usize,
+    /// (mvu, interval) the stage reads.
+    reads: (usize, Interval),
+    /// (mvu, interval) pairs the stage writes.
+    writes: Vec<(usize, Interval)>,
+}
+
+/// Prove every lap's concurrently-active jobs touch disjoint activation
+/// words whenever at least one of them writes.
+pub(crate) fn check_lap_races(c: &CompiledModel, report: &mut VerifyReport) {
+    if c.plans.is_empty() || c.stream_plans.len() != c.plans.len() {
+        return; // parity check already diagnosed the shape mismatch
+    }
+    let stages = c.plans.len();
+    let sched = StreamSchedule::new(c.stage_cycles(), stages + 2);
+    for lap in 0..sched.laps() {
+        report.laps_checked += 1;
+        let accesses: Vec<LapAccess> = sched
+            .active(lap)
+            .into_iter()
+            .filter_map(|(k, f)| {
+                let plan = c.stage_plan(k, f % 2);
+                let (reads, writes, dests) = layer_act_footprint(plan)?;
+                Some(LapAccess {
+                    stage: k,
+                    frame: f,
+                    reads: (plan.mvu, reads),
+                    writes: dests.into_iter().map(|d| (d, writes)).collect(),
+                })
+            })
+            .collect();
+        for (i, a) in accesses.iter().enumerate() {
+            for b in &accesses[i + 1..] {
+                if let Some(what) = interferes(a, b) {
+                    report.diagnostics.push(Diagnostic {
+                        code: DiagCode::StreamRace,
+                        mvu: None,
+                        layer: Some(a.stage),
+                        message: format!(
+                            "lap {lap}: stage {} (frame {}) and stage {} (frame {}) race: {what}",
+                            a.stage, a.frame, b.stage, b.frame
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Write/read or write/write overlap between two concurrent stages'
+/// activation traffic, if any.
+fn interferes(a: &LapAccess, b: &LapAccess) -> Option<String> {
+    for &(wm, wi) in &a.writes {
+        if wm == b.reads.0 && wi.overlaps(b.reads.1) {
+            return Some(format!(
+                "write {wi} overlaps read {} on mvu {wm}'s activation RAM",
+                b.reads.1
+            ));
+        }
+        for &(om, oi) in &b.writes {
+            if wm == om && wi.overlaps(oi) {
+                return Some(format!(
+                    "write {wi} overlaps write {oi} on mvu {wm}'s activation RAM"
+                ));
+            }
+        }
+    }
+    for &(wm, wi) in &b.writes {
+        if wm == a.reads.0 && wi.overlaps(a.reads.1) {
+            return Some(format!(
+                "write {wi} overlaps read {} on mvu {wm}'s activation RAM",
+                a.reads.1
+            ));
+        }
+    }
+    None
+}

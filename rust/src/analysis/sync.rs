@@ -1,0 +1,452 @@
+//! Sync liveness: prove the Pito program's flag-wait structure can always
+//! make progress — static deadlock detection.
+//!
+//! Two phases. First a **constant-propagating walk** of each hart's
+//! instruction stream (the barrel runs the same image on every hart,
+//! dispatched on `mhartid`): registers hold known 32-bit constants or ⊤,
+//! decidable branches are followed concretely (row/output-block counters
+//! are compile-time constants, so the real loops unroll), and every data
+//! memory store or flag spin-wait is recorded as an event. A spin on a
+//! *CSR* read (the MVU status poll) has no memory event — job completion
+//! is the MVU's liveness, proven separately by the cycle-budget check — so
+//! the walk assumes it exits. A spin on a *loaded* word becomes an
+//! [`Ev::Wait`] with the predicate its exit branch requires.
+//!
+//! Then a **monotone event simulation**: flags start at zero (DRAM resets
+//! to zero), harts advance round-robin, a store publishes its value, a
+//! wait advances only once some published value satisfies its predicate.
+//! Generated programs keep each flag single-writer with monotonically
+//! increasing values, so greedy simulation is exact: if it sticks, every
+//! serialization sticks, and the stuck waits are reported as
+//! [`DiagCode::SyncLiveness`] diagnostics naming the flag word, the
+//! predicate needed and the value the flag plateaus at.
+
+use std::collections::HashMap;
+
+use crate::pito::{decode, AluOp, BranchOp, Instr, NUM_HARTS};
+
+use super::{DiagCode, Diagnostic, VerifyLevel, VerifyReport};
+
+/// RISC-V mhartid CSR number.
+const CSR_MHARTID: u16 = 0xF14;
+
+/// Per-hart walk fuel. Generated programs concretely execute their
+/// row × output-block loops — thousands of steps per hart; a walk that
+/// exhausts this could not be statically bounded, which is itself a
+/// liveness finding.
+const STEP_LIMIT: usize = 500_000;
+
+/// Exit predicate of a spin-wait loop on a flag word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Pred {
+    Ge(i32),
+    Le(i32),
+    Eq(i32),
+    Ne(i32),
+    /// Exit condition not statically expressible — assume satisfiable.
+    Always,
+}
+
+impl Pred {
+    fn satisfied_by(self, v: i32) -> bool {
+        match self {
+            Pred::Ge(k) => v >= k,
+            Pred::Le(k) => v <= k,
+            Pred::Eq(k) => v == k,
+            Pred::Ne(k) => v != k,
+            Pred::Always => true,
+        }
+    }
+}
+
+impl std::fmt::Display for Pred {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Pred::Ge(k) => write!(f, ">= {k}"),
+            Pred::Le(k) => write!(f, "<= {k}"),
+            Pred::Eq(k) => write!(f, "== {k}"),
+            Pred::Ne(k) => write!(f, "!= {k}"),
+            Pred::Always => write!(f, "(any value)"),
+        }
+    }
+}
+
+/// A synchronization-relevant event in one hart's program order.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Store of a known value to a known data word.
+    Store { addr: u32, val: i32 },
+    /// Store whose address or value the walk could not resolve — after it,
+    /// any wait of any hart may be satisfied (conservative for liveness).
+    Havoc,
+    /// Spin-wait: the hart blocks until the word at `addr` satisfies the
+    /// predicate.
+    Wait { addr: u32, pred: Pred, pc: usize },
+}
+
+/// One hart's extracted event stream.
+struct HartEvents {
+    events: Vec<Ev>,
+    /// The walk aborted early (decode error / unbounded) — its missing
+    /// stores may starve other harts, which the abort diagnostic explains.
+    aborted: bool,
+}
+
+/// Statically prove the program's cross-hart flag protocol is live.
+pub(crate) fn check_program(program: &[u32], report: &mut VerifyReport) {
+    if program.is_empty() {
+        return;
+    }
+    let per_hart: Vec<HartEvents> =
+        (0..NUM_HARTS).map(|h| walk_hart(program, h, report)).collect();
+    report.harts_checked += NUM_HARTS;
+    simulate(&per_hart, report);
+}
+
+/// Constant-propagating walk of hart `hart`'s trajectory through `program`.
+fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEvents {
+    let mut regs: [Option<i32>; 32] = [None; 32];
+    regs[0] = Some(0);
+    // The hart's own stores, visible to its own later loads.
+    let mut own: HashMap<u32, i32> = HashMap::new();
+    let mut events: Vec<Ev> = Vec::new();
+    // Most recent unknown-valued load: (pc index, word address, rd).
+    let mut last_load: Option<(usize, u32, u8)> = None;
+    let mut pc: usize = 0;
+
+    let abort = |pc: usize, what: String, report: &mut VerifyReport| {
+        report.diagnostics.push(Diagnostic {
+            code: DiagCode::ProgDecode,
+            mvu: Some(hart),
+            layer: None,
+            message: format!("hart {hart} pc {:#x}: {what}", pc * 4),
+        });
+    };
+
+    for _ in 0..STEP_LIMIT {
+        let Some(&word) = program.get(pc) else {
+            abort(pc, "control flow escapes the program image".to_string(), report);
+            return HartEvents { events, aborted: true };
+        };
+        let instr = match decode(word) {
+            Ok(i) => i,
+            Err(e) => {
+                abort(pc, format!("undecodable word: {e}"), report);
+                return HartEvents { events, aborted: true };
+            }
+        };
+        let mut next = pc + 1;
+        match instr {
+            Instr::Lui { rd, imm } => set(&mut regs, rd, Some(imm)),
+            Instr::Auipc { rd, imm } => {
+                set(&mut regs, rd, Some((pc as i32 * 4).wrapping_add(imm)))
+            }
+            Instr::Jal { rd, imm } => {
+                set(&mut regs, rd, Some((pc as i32 + 1) * 4));
+                next = jump_target(pc, imm);
+            }
+            Instr::Jalr { rd, rs1, imm } => match regs[rs1 as usize] {
+                Some(base) => {
+                    set(&mut regs, rd, Some((pc as i32 + 1) * 4));
+                    let target = (base.wrapping_add(imm) & !1) as u32;
+                    next = (target / 4) as usize;
+                }
+                None => {
+                    abort(pc, "indirect jump with statically unknown target".into(), report);
+                    return HartEvents { events, aborted: true };
+                }
+            },
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let (a, b) = (regs[rs1 as usize], regs[rs2 as usize]);
+                match (a, b) {
+                    (Some(a), Some(b)) => {
+                        if branch_taken(op, a, b) {
+                            next = jump_target(pc, imm);
+                        }
+                    }
+                    _ => {
+                        // Unknown condition. A backward branch is a spin
+                        // loop; if its body reloads the watched word,
+                        // record the wait. Either way, assume the loop
+                        // exits and fall through — the event simulation
+                        // decides whether that assumption is justified.
+                        let target = jump_target(pc, imm);
+                        if target <= pc {
+                            let wait =
+                                wait_pred(op, (rs1, a), (rs2, b), last_load, target, pc);
+                            if let Some((addr, pred)) = wait {
+                                events.push(Ev::Wait { addr, pred, pc });
+                            }
+                        }
+                    }
+                }
+            }
+            Instr::Load { op: _, rd, rs1, imm } => match regs[rs1 as usize] {
+                Some(base) => {
+                    let addr = base.wrapping_add(imm) as u32;
+                    match own.get(&addr) {
+                        Some(&v) => set(&mut regs, rd, Some(v)),
+                        None => {
+                            set(&mut regs, rd, None);
+                            last_load = Some((pc, addr, rd));
+                        }
+                    }
+                }
+                None => {
+                    set(&mut regs, rd, None);
+                    last_load = None;
+                }
+            },
+            Instr::Store { op: _, rs2, rs1, imm } => match regs[rs1 as usize] {
+                Some(base) => {
+                    let addr = base.wrapping_add(imm) as u32;
+                    match regs[rs2 as usize] {
+                        Some(val) => {
+                            own.insert(addr, val);
+                            events.push(Ev::Store { addr, val });
+                        }
+                        None => {
+                            own.remove(&addr);
+                            events.push(Ev::Havoc);
+                        }
+                    }
+                }
+                None => events.push(Ev::Havoc),
+            },
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let v = regs[rs1 as usize].map(|a| alu(op, a, imm));
+                set(&mut regs, rd, v);
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let v = match (regs[rs1 as usize], regs[rs2 as usize]) {
+                    (Some(a), Some(b)) => Some(alu(op, a, b)),
+                    _ => None,
+                };
+                set(&mut regs, rd, v);
+            }
+            Instr::Csr { op: _, rd, csr, src: _ } => {
+                // CSR writes go to the MVU bridge, not data memory; reads
+                // are unknown except the hart's own id.
+                let v = (csr == CSR_MHARTID).then_some(hart as i32);
+                set(&mut regs, rd, v);
+            }
+            Instr::Fence | Instr::Mret | Instr::Wfi => {}
+            Instr::Ecall | Instr::Ebreak => {
+                return HartEvents { events, aborted: false };
+            }
+        }
+        pc = next;
+    }
+    report.diagnostics.push(Diagnostic {
+        code: DiagCode::SyncLiveness,
+        mvu: Some(hart),
+        layer: None,
+        message: format!(
+            "hart {hart}: walk exceeded {STEP_LIMIT} steps — termination could not be \
+             established statically"
+        ),
+    });
+    HartEvents { events, aborted: true }
+}
+
+fn set(regs: &mut [Option<i32>; 32], rd: u8, v: Option<i32>) {
+    if rd != 0 {
+        regs[rd as usize] = v;
+    }
+}
+
+fn jump_target(pc: usize, imm: i32) -> usize {
+    ((pc as i64) + (imm as i64) / 4) as usize
+}
+
+fn branch_taken(op: BranchOp, a: i32, b: i32) -> bool {
+    match op {
+        BranchOp::Beq => a == b,
+        BranchOp::Bne => a != b,
+        BranchOp::Blt => a < b,
+        BranchOp::Bge => a >= b,
+        BranchOp::Bltu => (a as u32) < (b as u32),
+        BranchOp::Bgeu => (a as u32) >= (b as u32),
+    }
+}
+
+fn alu(op: AluOp, a: i32, b: i32) -> i32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => ((a as u32) << (b & 0x1f)) as i32,
+        AluOp::Slt => (a < b) as i32,
+        AluOp::Sltu => ((a as u32) < (b as u32)) as i32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => ((a as u32) >> (b & 0x1f)) as i32,
+        AluOp::Sra => a >> (b & 0x1f),
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+/// Derive the exit predicate of an unknown-condition backward branch, when
+/// the unknown operand is the destination of a load inside the loop body
+/// (`[target, pc]`). Returns the watched word and the value it must reach
+/// for the loop to exit. Flag values are small and non-negative, so the
+/// unsigned compares share the signed mapping.
+fn wait_pred(
+    op: BranchOp,
+    (rs1, a): (u8, Option<i32>),
+    (rs2, b): (u8, Option<i32>),
+    last_load: Option<(usize, u32, u8)>,
+    target: usize,
+    pc: usize,
+) -> Option<(u32, Pred)> {
+    let (load_pc, addr, rd) = last_load?;
+    if load_pc < target || load_pc > pc {
+        return None; // the watched value is loop-invariant: not a flag wait
+    }
+    // The unknown operand must be the loaded word, or the spin is on
+    // something else entirely.
+    let watches = |reg: u8, v: Option<i32>| v.is_none() && reg == rd;
+    if !watches(rs1, a) && !watches(rs2, b) {
+        return None;
+    }
+    let pred = match (op, a, b) {
+        // Loop continues while TAKEN; exit predicate is the negation.
+        (BranchOp::Blt | BranchOp::Bltu, None, Some(k)) => Pred::Ge(k),
+        (BranchOp::Blt | BranchOp::Bltu, Some(k), None) => Pred::Le(k),
+        (BranchOp::Bge | BranchOp::Bgeu, None, Some(k)) => Pred::Le(k.saturating_sub(1)),
+        (BranchOp::Bge | BranchOp::Bgeu, Some(k), None) => Pred::Ge(k.saturating_add(1)),
+        (BranchOp::Beq, None, Some(k)) | (BranchOp::Beq, Some(k), None) => Pred::Ne(k),
+        (BranchOp::Bne, None, Some(k)) | (BranchOp::Bne, Some(k), None) => Pred::Eq(k),
+        _ => Pred::Always,
+    };
+    Some((addr, pred))
+}
+
+/// Greedy round-robin simulation of the extracted event streams. Flags
+/// start at zero; a stuck fixpoint with unfinished harts is a proven
+/// deadlock (for single-writer monotone flags, which generated programs
+/// maintain).
+fn simulate(harts: &[HartEvents], report: &mut VerifyReport) {
+    let mut mem: HashMap<u32, i32> = HashMap::new();
+    let mut global_havoc = false;
+    let mut idx: Vec<usize> = vec![0; harts.len()];
+    loop {
+        let mut progressed = false;
+        for (h, he) in harts.iter().enumerate() {
+            while let Some(ev) = he.events.get(idx[h]) {
+                match *ev {
+                    Ev::Store { addr, val } => {
+                        mem.insert(addr, val);
+                    }
+                    Ev::Havoc => {
+                        global_havoc = true;
+                    }
+                    Ev::Wait { addr, pred, .. } => {
+                        let cur = mem.get(&addr).copied().unwrap_or(0);
+                        if !(global_havoc || pred.satisfied_by(cur)) {
+                            break;
+                        }
+                    }
+                }
+                idx[h] += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    let aborted_elsewhere = harts.iter().any(|h| h.aborted);
+    for (h, he) in harts.iter().enumerate() {
+        if let Some(&Ev::Wait { addr, pred, pc }) = he.events.get(idx[h]) {
+            let cur = mem.get(&addr).copied().unwrap_or(0);
+            let hint = if aborted_elsewhere {
+                " (another hart's walk aborted; its stores are not modelled)"
+            } else {
+                ""
+            };
+            report.diagnostics.push(Diagnostic {
+                code: DiagCode::SyncLiveness,
+                mvu: Some(h),
+                layer: None,
+                message: format!(
+                    "hart {h} pc {:#x} waits forever on data word {addr:#x}: needs a value \
+                     {pred}, but no hart ever stores one (flag plateaus at {cur}){hint}",
+                    pc * 4
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pito::assemble;
+
+    fn verify_asm(src: &str) -> VerifyReport {
+        let program = assemble(src).expect("test program assembles");
+        let mut report = VerifyReport::new(VerifyLevel::Quick);
+        check_program(&program, &mut report);
+        report
+    }
+
+    /// Hart 0 bumps a flag, every other hart waits for it: live.
+    #[test]
+    fn producer_consumer_flags_are_live() {
+        let r = verify_asm(
+            "    csrr  t0, mhartid
+                 beqz  t0, prod
+                 li    t3, 0x100
+             wait:
+                 lw    t4, 0(t3)
+                 blt   t4, t0, wait
+                 ecall
+             prod:
+                 li    t3, 0x100
+                 li    t2, 8
+                 sw    t2, 0(t3)
+                 ecall",
+        );
+        assert!(r.is_clean(), "diagnostics: {:?}", r.diagnostics);
+        assert_eq!(r.harts_checked, NUM_HARTS);
+    }
+
+    /// Nobody stores the flag: every waiting hart deadlocks, statically.
+    #[test]
+    fn dropped_store_is_a_liveness_violation() {
+        let r = verify_asm(
+            "    csrr  t0, mhartid
+                 beqz  t0, done
+                 li    t3, 0x100
+             wait:
+                 lw    t4, 0(t3)
+                 blt   t4, t0, wait
+             done:
+                 ecall",
+        );
+        assert!(r.has(DiagCode::SyncLiveness));
+        // Harts 1..8 all wait on hart 0's never-written flag.
+        assert_eq!(r.diagnostics.len(), NUM_HARTS - 1);
+    }
+
+    /// An unconditional self-loop exhausts the walk fuel and is reported,
+    /// not spun on forever.
+    #[test]
+    fn unbounded_loop_is_reported() {
+        let r = verify_asm("spin:\n    jal   x0, spin");
+        assert!(r.has(DiagCode::SyncLiveness));
+    }
+
+    /// A CSR status poll has no memory wait: assumed to exit, no finding.
+    #[test]
+    fn csr_poll_is_not_a_deadlock() {
+        let r = verify_asm(
+            "poll:
+                 csrr  t2, mvu_status
+                 andi  t2, t2, 2
+                 beqz  t2, poll
+                 ecall",
+        );
+        assert!(r.is_clean(), "diagnostics: {:?}", r.diagnostics);
+    }
+}

@@ -252,6 +252,19 @@ impl SessionCache {
         });
         evicted
     }
+
+    /// Drop `key`'s engine (if cached), returning whether it was resident.
+    /// Used to quarantine an engine whose inference panicked — a poisoned
+    /// engine must not be handed out warm to the next batch.
+    pub fn remove(&mut self, key: &ModelKey) -> bool {
+        match self.entries.iter().position(|e| e.key == *key) {
+            Some(idx) => {
+                self.entries.swap_remove(idx);
+                true
+            }
+            None => false,
+        }
+    }
 }
 
 /// Fleet shape and policy.
@@ -589,16 +602,52 @@ fn run_due(
         let engine = cache.get_mut(&key).expect("engine admitted above");
         let (ids, images): (Vec<u64>, Vec<Vec<f32>>) =
             batch.requests.into_iter().map(|r| (r.id, r.image)).unzip();
-        let outs = engine.infer_batch(&images);
-        // Key-homogeneous batches execute through the session's streamed
-        // pipeline; fold the batch's fill/steady/drain accounting into the
-        // fleet metrics (pipeline occupancy, streamed vs serial sim FPS).
-        if let Some(stats) = engine.take_stream_stats() {
-            metrics.on_stream(&stats);
+        // A panicking engine must cost exactly its own batch, not the
+        // worker thread (and with it every tenant routed here). Catch the
+        // unwind, quarantine the engine — its internal state is suspect
+        // mid-panic — and answer the batch with a typed failure. The
+        // shared Metrics/Router state stays coherent because their
+        // mutexes recover from poisoning (see `recover_lock`).
+        let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let outs = engine.infer_batch(&images);
+            // Key-homogeneous batches execute through the session's
+            // streamed pipeline; fold the batch's fill/steady/drain
+            // accounting into the fleet metrics (pipeline occupancy,
+            // streamed vs serial sim FPS).
+            let stats = engine.take_stream_stats();
+            (outs, stats)
+        }));
+        match outs {
+            Ok((outs, stats)) => {
+                if let Some(stats) = stats {
+                    metrics.on_stream(&stats);
+                }
+                for (id, out) in ids.into_iter().zip(outs) {
+                    answer(replies, router, metrics, slo, epoch, w, &key, id, out);
+                }
+            }
+            Err(panic) => {
+                cache.remove(&key);
+                router.note_evicted(w, &key);
+                let what = panic_message(&panic);
+                let msg = format!("engine for {key} panicked during inference: {what}");
+                for id in ids {
+                    answer(replies, router, metrics, slo, epoch, w, &key, id, Err(msg.clone()));
+                }
+            }
         }
-        for (id, out) in ids.into_iter().zip(outs) {
-            answer(replies, router, metrics, slo, epoch, w, &key, id, out);
-        }
+    }
+}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string or
+/// format args; anything else reports opaquely).
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -831,6 +880,75 @@ mod tests {
         assert_eq!(good_resp.error, None);
         let snap = f.metrics().snapshot();
         assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        f.shutdown();
+    }
+
+    /// Engine that panics on every inference — the misbehaving tenant in
+    /// the panic-isolation regression below.
+    struct PanickyEngine;
+
+    impl Engine for PanickyEngine {
+        fn infer_batch(&mut self, _images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            panic!("activation RAM index out of range");
+        }
+    }
+
+    /// Regression (satellite: poison robustness): one tenant's engine
+    /// panicking mid-inference must cost exactly its own batch. The
+    /// request is answered with a typed engine error, the poisoned engine
+    /// is quarantined out of the cache (the next request pays a rebuild,
+    /// not a rerun of corrupt state), the worker thread survives to serve
+    /// the other tenant, and `Metrics::snapshot` still works.
+    #[test]
+    fn engine_panic_is_isolated_to_its_batch() {
+        let panicking = Arc::new(Mutex::new(HashMap::new()));
+        let builds = Arc::clone(&panicking);
+        let factory: KeyedEngineFactory = Arc::new(move |key: &ModelKey| {
+            *builds.lock().unwrap().entry(key.clone()).or_insert(0u64) += 1;
+            if key.model == "boom" {
+                Ok(KeyedEngine { engine: Box::new(PanickyEngine), resident_words: 1 })
+            } else {
+                Ok(KeyedEngine {
+                    engine: Box::new(MockEngine { wbits: key.wbits }),
+                    resident_words: 1,
+                })
+            }
+        });
+        let mut f = Fleet::new(
+            factory,
+            FleetConfig {
+                workers: 1,
+                cache_per_worker: 2,
+                batch: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                policy: RoutingPolicy::Affinity,
+                queue_depth: 0,
+            },
+        );
+        let boom = f.submit(key("boom", 1), vec![1.0]);
+        let resp = boom.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(
+                resp.error,
+                Some(ResponseError::Engine(ref m))
+                    if m.contains("panicked during inference")
+                        && m.contains("activation RAM index out of range")
+            ),
+            "got {:?}",
+            resp.error
+        );
+        // The same worker still serves the well-behaved tenant afterwards.
+        let good = f.submit(key("a", 1), vec![2.0]);
+        let good_resp = good.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(good_resp.error, None);
+        // The panicked engine was evicted: a retry builds it again.
+        let boom2 = f.submit(key("boom", 1), vec![3.0]);
+        let resp2 = boom2.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp2.error.is_some());
+        assert_eq!(panicking.lock().unwrap()[&key("boom", 1)], 2, "rebuilt after quarantine");
+        // Metrics survived the panicking tenant: counters are coherent.
+        let snap = f.metrics().snapshot();
+        assert_eq!(snap.failed, 2);
         assert_eq!(snap.completed, 1);
         f.shutdown();
     }

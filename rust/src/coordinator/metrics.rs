@@ -19,6 +19,7 @@ use std::time::Duration;
 use crate::model::zoo::Rng;
 
 use super::fleet::ModelKey;
+use super::recover_lock;
 use super::server::StreamStats;
 
 /// Fixed reservoir capacity: enough for stable tail percentiles, small
@@ -258,7 +259,7 @@ impl Metrics {
         self.sim_cycles.fetch_add(sim_cycles, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
         self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(us);
+        recover_lock(&self.latencies_us).push(us);
     }
 
     pub fn on_failure(&self) {
@@ -269,7 +270,7 @@ impl Metrics {
     /// response): counted per key and globally, separate from `failed`.
     pub fn on_shed_keyed(&self, key: &ModelKey) {
         self.shed.fetch_add(1, Ordering::Relaxed);
-        self.per_key.lock().unwrap().entry(key.clone()).or_default().shed += 1;
+        recover_lock(&self.per_key).entry(key.clone()).or_default().shed += 1;
     }
 
     /// The SLO controller switched a tenant's precision rung.
@@ -314,7 +315,7 @@ impl Metrics {
         self.on_complete(latency, sim_cycles);
         let us = latency.as_micros() as u64;
         let target = self.slo_target_us.load(Ordering::Relaxed);
-        let mut map = self.per_key.lock().unwrap();
+        let mut map = recover_lock(&self.per_key);
         let agg = map.entry(key.clone()).or_default();
         agg.completed += 1;
         if target == 0 || us <= target {
@@ -329,12 +330,12 @@ impl Metrics {
     /// Keyed failure: global counter plus the tenant's failure count.
     pub fn on_failure_keyed(&self, key: &ModelKey) {
         self.on_failure();
-        self.per_key.lock().unwrap().entry(key.clone()).or_default().failed += 1;
+        recover_lock(&self.per_key).entry(key.clone()).or_default().failed += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         // Bounded: at most RESERVOIR_CAP elements regardless of uptime.
-        let mut lats = self.latencies_us.lock().unwrap().samples.clone();
+        let mut lats = recover_lock(&self.latencies_us).samples.clone();
         lats.sort_unstable();
         // Nearest-rank (ceiling) percentile: rank = ⌈p·n⌉, 1-based.
         let pct = |p: f64| -> u64 {
@@ -350,10 +351,7 @@ impl Metrics {
         } else {
             self.lat_sum_us.load(Ordering::Relaxed) as f64 / completed as f64
         };
-        let mut per_key: Vec<PerKeySnapshot> = self
-            .per_key
-            .lock()
-            .unwrap()
+        let mut per_key: Vec<PerKeySnapshot> = recover_lock(&self.per_key)
             .iter()
             .map(|(k, a)| {
                 let mut klats = a.latencies_us.samples.clone();
@@ -476,6 +474,31 @@ mod tests {
         // Percentiles from the sample stay in a sane band.
         assert!(s.p50_us >= 350 && s.p50_us <= 650, "p50 {}", s.p50_us);
         assert!(s.p99_us >= 900, "p99 {}", s.p99_us);
+    }
+
+    /// Regression (satellite: poison robustness): a thread panicking while
+    /// holding a metrics mutex must not take fleet telemetry down with it —
+    /// recording and `snapshot()` keep working on the recovered guard.
+    #[test]
+    fn poisoned_locks_recover() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        m.on_complete(Duration::from_micros(10), 5);
+        let m2 = Arc::clone(&m);
+        std::thread::spawn(move || {
+            let _lats = m2.latencies_us.lock().unwrap();
+            let _keys = m2.per_key.lock().unwrap();
+            panic!("engine thread died mid-record");
+        })
+        .join()
+        .unwrap_err();
+        assert!(m.latencies_us.lock().is_err(), "lock must actually be poisoned");
+        // Both record and report paths still function.
+        m.on_complete(Duration::from_micros(30), 5);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.p99_us, 30);
+        assert_eq!(s.sim_cycles, 10);
     }
 
     /// Keyed completions feed both the global aggregates and the tenant's

@@ -57,3 +57,17 @@ pub use server::{
     StreamStats,
 };
 pub use slo::{SloController, SloPolicy, SwitchEvent, SwitchKind, SwitchTrigger, TenantSlo};
+
+/// Lock a coordinator mutex, recovering the guard when a peer thread
+/// panicked mid-hold.
+///
+/// Serving state behind these mutexes (metric counters, cache-residency
+/// sets, tenant SLO rungs) is always written atomically from the guard's
+/// perspective — every critical section either appends or overwrites whole
+/// entries — so a poisoned lock means "a sibling died", not "the data is
+/// torn". Shedding the whole fleet's telemetry because one engine thread
+/// panicked would turn a single-tenant fault into a service-wide outage;
+/// recover the inner guard instead.
+pub(crate) fn recover_lock<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

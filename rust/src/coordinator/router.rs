@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::fleet::ModelKey;
+use super::recover_lock;
 
 /// Tracks per-worker in-flight counts (and, for keyed routing, which model
 /// keys each worker's cache holds) and picks targets.
@@ -65,7 +66,7 @@ impl Router {
     /// exists elsewhere. Returns `(worker, affinity_hit)` and increments
     /// the worker's in-flight count.
     pub fn route_affine(&self, key: &ModelKey) -> (usize, bool) {
-        let cached = self.cached.lock().unwrap();
+        let cached = recover_lock(&self.cached);
         let n = self.inflight.len();
         let holders: Vec<usize> = (0..n).filter(|&i| cached[i].contains(key)).collect();
         let hit = !holders.is_empty();
@@ -91,17 +92,17 @@ impl Router {
 
     /// A fleet worker admitted `key` into its session cache.
     pub fn note_cached(&self, worker: usize, key: &ModelKey) {
-        self.cached.lock().unwrap()[worker].insert(key.clone());
+        recover_lock(&self.cached)[worker].insert(key.clone());
     }
 
     /// A fleet worker evicted `key` from its session cache.
     pub fn note_evicted(&self, worker: usize, key: &ModelKey) {
-        self.cached.lock().unwrap()[worker].remove(key);
+        recover_lock(&self.cached)[worker].remove(key);
     }
 
     /// Whether the affinity map believes `worker` holds `key`.
     pub fn holds(&self, worker: usize, key: &ModelKey) -> bool {
-        self.cached.lock().unwrap()[worker].contains(key)
+        recover_lock(&self.cached)[worker].contains(key)
     }
 
     /// A worker finished one request. Saturating: an (erroneous) double

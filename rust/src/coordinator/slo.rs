@@ -34,6 +34,7 @@ use std::sync::Mutex;
 use crate::session::ExecutionMode;
 
 use super::fleet::ModelKey;
+use super::recover_lock;
 
 /// Per-tenant service-level objective and the precision ladder the
 /// controller may walk to hold it.
@@ -354,7 +355,7 @@ impl SloController {
     }
 
     fn with_tenant<R>(&self, key: &ModelKey, f: impl FnOnce(&mut TenantState) -> R) -> Option<R> {
-        let mut map = self.tenants.lock().expect("slo lock");
+        let mut map = recover_lock(&self.tenants);
         map.get_mut(&(key.model.clone(), key.mode)).map(f)
     }
 
@@ -414,7 +415,7 @@ impl SloController {
     /// Snapshot every tenant's SLO state, sorted by tenant key. `now`
     /// closes the open time-accounting tail at the current rung.
     pub fn snapshot(&self, now: u64) -> Vec<TenantSlo> {
-        let map = self.tenants.lock().expect("slo lock");
+        let map = recover_lock(&self.tenants);
         let mut out: Vec<TenantSlo> = map
             .values()
             .map(|t| {

@@ -142,6 +142,25 @@ impl JobTrace {
     pub fn resident_bytes(&self) -> usize {
         self.a_addrs.len() * 8 + self.runs.len() * std::mem::size_of::<TraceRun>()
     }
+
+    /// Inclusive `(min, max)` activation word addresses the captured walk
+    /// reads, or `None` for a zero-MAC job. The static verifier's
+    /// [`VerifyLevel::Full`](crate::analysis::VerifyLevel) pass cross-checks
+    /// these exact bounds against its symbolic intervals.
+    pub fn act_addr_bounds(&self) -> Option<(u32, u32)> {
+        addr_bounds(&self.a_addrs)
+    }
+
+    /// Inclusive `(min, max)` weight word addresses the captured walk reads.
+    pub fn weight_addr_bounds(&self) -> Option<(u32, u32)> {
+        addr_bounds(&self.w_addrs)
+    }
+}
+
+fn addr_bounds(addrs: &[u32]) -> Option<(u32, u32)> {
+    let lo = addrs.iter().copied().min()?;
+    let hi = addrs.iter().copied().max()?;
+    Some((lo, hi))
 }
 
 /// Execute one whole job on `mvu` by capturing its trace on the spot and

@@ -21,6 +21,10 @@
 //!   arbitration (§3.1.5).
 //! * [`accel`] — the whole accelerator: Pito + 8 MVUs + crossbar, with the
 //!   MVU CSR file bridged into the CPU (Fig. 1).
+//! * [`analysis`] — the static program verifier: abstract interpretation of
+//!   a compiled plan (symbolic AGU bounds, def-before-use dataflow, stream
+//!   race/parity checks, sync-liveness over the Pito flag protocol, cycle
+//!   budgets) producing typed diagnostics before a single simulated cycle.
 //! * [`exec`] — pluggable execution backends: the cycle-accurate stepper
 //!   (timing ground truth) and the job-level turbo executor (functional,
 //!   formula-reported cycles) behind one `ExecMode` switch, plus the
@@ -52,6 +56,7 @@
 //! HLO text once (`make artifacts`). Python never runs at inference time.
 
 pub mod accel;
+pub mod analysis;
 pub mod codegen;
 pub mod coordinator;
 pub mod exec;

@@ -21,6 +21,16 @@
 //!                               the images as one streamed batch with up
 //!                               to 8 frames in flight and prints the
 //!                               fill/steady/drain pipeline accounting)
+//! * `check [--model resnet9|resnet18 --wbits N --abits N
+//!          --mode pipelined|distributed|multipass|auto --level quick|full
+//!          --weight-depth N --json]`
+//!                             — static program verifier: abstract-interpret
+//!                               the compiled plan and prove address bounds,
+//!                               def-before-use, stream-race freedom, sync
+//!                               liveness and cycle-budget consistency
+//!                               without simulating a cycle; `--json` emits
+//!                               the `barvinn.verify/v1` report CI's
+//!                               `verify-matrix` job gates on
 //! * `bench-serve [--seed N --duration-images N --mix k=w,... --workers N
 //!                 --cache N --policy affinity|least-loaded
 //!                 --exec cycle|turbo --out PATH]`
@@ -44,9 +54,13 @@
 //!                               quality/latency trade) CI's `slo-bench`
 //!                               job gates on
 
-use barvinn::codegen::EdgePolicy;
+use barvinn::analysis::{self, VerifyLevel};
+use barvinn::codegen::{
+    compile_distributed, compile_multi_pass, compile_pipelined, EdgePolicy,
+};
 use barvinn::exec::ExecMode;
 use barvinn::model::zoo;
+use barvinn::mvu::MvuConfig;
 use barvinn::perf::benchkit::report_table;
 use barvinn::perf::{cycle_model, finn, resource_model};
 use barvinn::session::{parse_mode_arg, ExecutionMode, SessionBuilder};
@@ -64,6 +78,7 @@ fn main() {
         "asm" => asm(&args[1..]),
         "disasm" => disasm(&args[1..]),
         "run" => run(&args[1..]),
+        "check" => check(&args[1..]),
         "bench-serve" => bench_serve(&args[1..]),
         "help" | "--help" | "-h" => help(),
         other => {
@@ -77,7 +92,16 @@ fn main() {
 fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
-         usage: barvinn <info|cycles|census|estimate|asm|disasm|run|bench-serve> [args]\n\
+         usage: barvinn <info|cycles|census|estimate|asm|disasm|run|check|bench-serve> [args]\n\
+         check flags: --model resnet9|resnet18 --wbits N --abits N\n\
+                    --mode pipelined|distributed|multipass|auto --level quick|full\n\
+                    --weight-depth N (default 8192 words, the serving geometry)\n\
+                    --json (machine-readable barvinn.verify/v1 report)\n\
+                    (static verifier: prove the compiled command stream safe —\n\
+                    address bounds, def-before-use, stream races, sync liveness,\n\
+                    cycle budgets — without simulating a cycle; exit 1 on any\n\
+                    diagnostic; --mode distributed checks a distributed mapping\n\
+                    of every layer independently)\n\
          run flags: --model resnet9|resnet18 --wbits N --abits N --images N\n\
                     --exec cycle|turbo --mode pipelined|distributed|multipass|auto\n\
                     --stream (run the images as one streamed batch: up to 8\n\
@@ -400,6 +424,132 @@ fn run(args: &[String]) {
         metrics.total_mvu_cycles as f64 / dt.as_secs_f64() / 1e6,
         metrics.serial_fps_at(CLOCK_HZ)
     );
+}
+
+/// `barvinn check` — run the static program verifier over a compiled plan
+/// without simulating a cycle.
+///
+/// Mirrors [`run`]'s model/precision/mode flags, resolves `--mode auto`
+/// exactly as `SessionBuilder::build` does, and prints either a human
+/// summary or the machine-readable `barvinn.verify/v1` JSON report
+/// (`--json`). Exit status: 0 clean, 1 diagnostics found, 2 usage or
+/// compile error. The default `--weight-depth 8192` matches the serving
+/// geometry (`bench-serve`); the base Table 4 configuration (2048 words)
+/// only holds zoo weights up to 2-bit.
+fn check(args: &[String]) {
+    let wb = parse_flag(args, "--wbits", 2) as u8;
+    let ab = parse_flag(args, "--abits", 2) as u8;
+    let weight_depth = parse_flag(args, "--weight-depth", 8192);
+    let mode = parse_mode_arg(args, ExecutionMode::Auto).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let level = match parse_str_flag(args, "--level", "quick|full").as_deref() {
+        None | Some("quick") => VerifyLevel::Quick,
+        Some("full") => VerifyLevel::Full,
+        Some(other) => {
+            eprintln!("unknown --level '{other}' (quick|full)");
+            std::process::exit(2);
+        }
+    };
+    let json = args.iter().any(|a| a == "--json");
+    let model_name =
+        parse_str_flag(args, "--model", "resnet9|resnet18").unwrap_or_else(|| "resnet9".into());
+    let m = match zoo::model_by_name(&model_name, ab, wb) {
+        Some(m) => m,
+        None => {
+            eprintln!(
+                "unknown model '{model_name}' ({})",
+                zoo::executable_model_names().join("|")
+            );
+            std::process::exit(2);
+        }
+    };
+    let policy = EdgePolicy::PadInRam;
+    let cfg = MvuConfig { weight_depth, ..Default::default() };
+    let n = m.layers.len();
+    // Resolve Auto exactly like SessionBuilder::build: a single layer maps
+    // distributed, up to 8 layers pipeline across the array, deeper models
+    // run as multi-pass laps.
+    let mode = match mode {
+        ExecutionMode::Auto => {
+            if n == 1 {
+                ExecutionMode::Distributed
+            } else if n <= barvinn::NUM_MVUS {
+                ExecutionMode::Pipelined
+            } else {
+                ExecutionMode::MultiPass
+            }
+        }
+        m => m,
+    };
+    let fail_compile = |what: &str, e: &dyn std::fmt::Display| -> ! {
+        eprintln!("{what} failed to compile: {e}");
+        std::process::exit(2);
+    };
+    let (report, mode_str) = match mode {
+        ExecutionMode::Pipelined => {
+            let c = compile_pipelined(&m, policy)
+                .unwrap_or_else(|e| fail_compile("pipelined plan", &e));
+            c.check_fits(&cfg)
+                .and_then(|()| c.check_fits_streamed(&cfg))
+                .unwrap_or_else(|e| fail_compile("pipelined plan", &e));
+            (analysis::verify_pipelined(&c, &m, &cfg, level), "pipelined")
+        }
+        ExecutionMode::MultiPass => {
+            let p = compile_multi_pass(&m, policy)
+                .unwrap_or_else(|e| fail_compile("multi-pass plan", &e));
+            p.check_fits(&cfg)
+                .and_then(|()| p.check_fits_streamed(&cfg))
+                .unwrap_or_else(|e| fail_compile("multi-pass plan", &e));
+            (analysis::verify_multi_pass(&p, &m, &cfg, level), "multipass")
+        }
+        ExecutionMode::Distributed => {
+            // The session restricts distributed mode to single-layer models;
+            // `check` verifies a distributed mapping of EVERY layer
+            // independently, folding the per-layer reports into one.
+            let mut folded = None::<barvinn::analysis::VerifyReport>;
+            for (h, layer) in m.layers.iter().enumerate() {
+                let p = compile_distributed(layer, policy)
+                    .unwrap_or_else(|e| fail_compile(&format!("layer {h} distributed plan"), &e));
+                p.check_fits(&cfg)
+                    .unwrap_or_else(|e| fail_compile(&format!("layer {h} distributed plan"), &e));
+                let mut r = analysis::verify_distributed(&p, layer, &cfg, level);
+                for d in &mut r.diagnostics {
+                    d.layer = Some(h);
+                }
+                match &mut folded {
+                    None => folded = Some(r),
+                    Some(f) => f.merge(r),
+                }
+            }
+            (folded.expect("zoo models have at least one layer"), "distributed")
+        }
+        ExecutionMode::Auto => unreachable!("Auto resolved to a concrete mode above"),
+    };
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        println!(
+            "{model_name} {wb}b weights / {ab}b activations, {mode_str} mode, \
+             {} verification: {} job(s), {} lap(s), {} hart walk(s) checked",
+            level.as_str(),
+            report.jobs_checked,
+            report.laps_checked,
+            report.harts_checked
+        );
+        if report.is_clean() {
+            println!("clean: no diagnostics");
+        } else {
+            println!("{} diagnostic(s):", report.diagnostics.len());
+            for d in &report.diagnostics {
+                println!("  {d}");
+            }
+        }
+    }
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
 }
 
 /// Grab a string-valued flag, exiting with a usage error when the flag is

@@ -91,6 +91,7 @@
 //! errors, no panicking asserts on [`SystemExit`].
 
 use crate::accel::{LapStream, System, SystemConfig, SystemExit};
+use crate::analysis::{Diagnostic, VerifyLevel};
 use crate::exec::{ExecMode, StreamSchedule};
 use crate::codegen::program::{CompiledModel, LayerPlan};
 use crate::codegen::schedule::{DistributedPlan, MultiPassPlan};
@@ -180,6 +181,9 @@ pub enum SessionError {
     Launch(Vec<String>),
     /// Host-side artifact / PJRT failure.
     Artifact(RuntimeError),
+    /// The static verifier rejected the compiled plan at admission
+    /// ([`SessionBuilder::verify`]).
+    Verify(Vec<Diagnostic>),
 }
 
 impl std::fmt::Display for SessionError {
@@ -197,6 +201,13 @@ impl std::fmt::Display for SessionError {
                 write!(f, "{} job launch error(s): {}", errs.len(), errs.join("; "))
             }
             SessionError::Artifact(e) => write!(f, "artifact error: {e}"),
+            SessionError::Verify(diags) => {
+                write!(f, "static verification rejected the plan ({} finding(s)):", diags.len())?;
+                for d in diags {
+                    write!(f, "\n  {d}")?;
+                }
+                Ok(())
+            }
         }
     }
 }
@@ -226,6 +237,7 @@ pub struct SessionBuilder {
     threads: usize,
     artifacts: Option<ArtifactStore>,
     host_input_shape: Vec<i64>,
+    verify: VerifyLevel,
 }
 
 impl SessionBuilder {
@@ -243,6 +255,7 @@ impl SessionBuilder {
             threads: 1,
             artifacts: None,
             host_input_shape: vec![1, 3, 32, 32],
+            verify: VerifyLevel::default(),
         }
     }
 
@@ -306,6 +319,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Static-verification admission level (defaults to
+    /// [`VerifyLevel::Quick`]): the compiled plan is abstract-interpreted
+    /// before any cycle is simulated, and a non-clean
+    /// [`crate::analysis::VerifyReport`] fails the build with
+    /// [`SessionError::Verify`]. [`VerifyLevel::Off`] skips the gate;
+    /// [`VerifyLevel::Full`] additionally cross-checks the symbolic bounds
+    /// against captured job traces.
+    pub fn verify(mut self, level: VerifyLevel) -> Self {
+        self.verify = level;
+        self
+    }
+
     /// Compile the model, build the system and make all image-invariant
     /// state resident: weights, scalers, biases, the assembled program and
     /// (optionally) the compiled host modules. Multi-pass programs stage
@@ -365,6 +390,28 @@ impl SessionBuilder {
             // Weights rotate per pass inside run(): nothing to pre-load,
             // but every pass must fit the geometry before we accept it.
             Program::MultiPass(p) => p.check_fits(&self.mvu)?,
+        }
+
+        // Admission gate: the capacity checks above bound totals; the
+        // verifier proves address safety, def-before-use, stream-race
+        // freedom, sync liveness and cycle-budget consistency of the
+        // command stream itself.
+        let report = match &program {
+            Program::Pipelined(c) => {
+                crate::analysis::verify_pipelined(c, &self.model, &self.mvu, self.verify)
+            }
+            Program::Distributed(p) => crate::analysis::verify_distributed(
+                p,
+                &self.model.layers[0],
+                &self.mvu,
+                self.verify,
+            ),
+            Program::MultiPass(p) => {
+                crate::analysis::verify_multi_pass(p, &self.model, &self.mvu, self.verify)
+            }
+        };
+        if !report.is_clean() {
+            return Err(SessionError::Verify(report.diagnostics));
         }
 
         let host = match self.artifacts {

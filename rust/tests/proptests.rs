@@ -836,6 +836,85 @@ fn threaded_streamed_turbo_is_bit_identical_to_single_threaded() {
     }
 }
 
+/// The checker-vs-runtime agreement property: every random chain model the
+/// static verifier admits (at Full level, symbolic bounds cross-checked
+/// against captured traces) runs clean end-to-end against the golden
+/// reference — and seeded mutations of the same compiled plans are
+/// rejected statically with the matching stable code. The verifier is only
+/// trustworthy as an admission gate if it neither under- nor over-rejects
+/// on plans the compiler actually emits.
+#[test]
+fn verifier_agrees_with_runtime_on_random_chains() {
+    use barvinn::analysis::{verify_pipelined, DiagCode, VerifyLevel};
+    use barvinn::codegen::compile_pipelined;
+    use barvinn::exec::ExecMode;
+    use barvinn::mvu::MvuConfig;
+    use barvinn::session::SessionBuilder;
+
+    let mut rng = Rng(0x5EED);
+    let (cases, h) = if cfg!(debug_assertions) { (2u64, 4usize) } else { (6, 6) };
+    let cfg = MvuConfig::default();
+    for case in 0..cases {
+        let depth = 2 + (rng.next_u64() % 7) as usize; // 2..=8: pipelined
+        let model = random_chain_model(&mut rng, 3000 + case, depth, h);
+
+        // Admitted statically…
+        let c = compile_pipelined(&model, EdgePolicy::PadInRam).unwrap();
+        let report = verify_pipelined(&c, &model, &cfg, VerifyLevel::Full);
+        assert!(
+            report.is_clean(),
+            "case {case} depth {depth}: verifier over-rejects a sound plan: {:?}",
+            report.diagnostics
+        );
+
+        // …runs clean on both backends, through the default-on session gate.
+        let l0 = &model.layers[0];
+        let input = Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+            rng.range_i32(0, l0.aprec.max_value())
+        });
+        let want = model.golden_forward(&input);
+        for exec in [ExecMode::Turbo, ExecMode::CycleAccurate] {
+            let mut session = SessionBuilder::new(model.clone())
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(exec)
+                .build()
+                .unwrap_or_else(|e| panic!("case {case} ({exec:?}): gate rejected: {e}"));
+            let out = session.run(&input).unwrap();
+            assert_eq!(out.output, want, "case {case} depth {depth} ({exec:?})");
+        }
+
+        // Seeded mutations of the admitted plan are each caught with the
+        // right code (fresh compile per mutation — plans are not Clone).
+        let mutations: [(&str, DiagCode, fn(&mut barvinn::codegen::CompiledModel)); 4] = [
+            ("oob address", DiagCode::AddrOob, |c| {
+                c.plans[0].jobs[0].a_agu.base = 1 << 20;
+            }),
+            ("buffer-shifted read", DiagCode::DefUse, |c| {
+                let shift = c.plans[0].in_layout.size_words();
+                for j in &mut c.plans[0].jobs {
+                    j.a_agu.base += shift;
+                }
+            }),
+            ("parity flip", DiagCode::StreamParity, |c| {
+                c.stream_plans[0] = c.plans[0].clone();
+            }),
+            ("tile inflation", DiagCode::CycleBudget, |c| {
+                c.plans[0].jobs[0].tiles += 1;
+            }),
+        ];
+        for (what, code, mutate) in mutations {
+            let mut bad = compile_pipelined(&model, EdgePolicy::PadInRam).unwrap();
+            mutate(&mut bad);
+            let r = verify_pipelined(&bad, &model, &cfg, VerifyLevel::Quick);
+            assert!(
+                r.has(code),
+                "case {case} depth {depth}: {what} must be rejected as {code}, got {:?}",
+                r.diagnostics
+            );
+        }
+    }
+}
+
 /// Assembler fuzz: random valid programs assemble, disassemble and
 /// re-assemble to identical words.
 #[test]
@@ -854,5 +933,34 @@ fn assembler_fuzz_roundtrip() {
                 "via '{text}'"
             );
         }
+    }
+}
+
+/// Whole-program round-trip idempotence: for random valid instruction
+/// *sequences* `p`, `assemble(disasm(assemble_canonical(p)))` is the
+/// identity — the textual form is a fixpoint, so the disassembler is a
+/// faithful inverse at program granularity (label-free addressing,
+/// sign-extended immediates, CSR names) and not just per word.
+#[test]
+fn program_disassembly_roundtrip_is_idempotent() {
+    use barvinn::pito::{assemble, decode, disassemble, encode};
+    let mut rng = Rng(0x90B1);
+    for case in 0..200 {
+        // Random valid sequence: sample raw words, keep the decodable ones.
+        let len = 1 + (rng.next_u64() % 64) as usize;
+        let mut canonical = Vec::with_capacity(len);
+        while canonical.len() < len {
+            if let Ok(instr) = decode(rng.next_u64() as u32) {
+                canonical.push(encode(instr));
+            }
+        }
+        let text: String =
+            canonical.iter().map(|&w| disassemble(w)).collect::<Vec<_>>().join("\n");
+        let once = assemble(&text).unwrap_or_else(|e| panic!("case {case}: '{text}': {e}"));
+        assert_eq!(once, canonical, "case {case}: reassembly must reproduce the words");
+        let text2: String =
+            once.iter().map(|&w| disassemble(w)).collect::<Vec<_>>().join("\n");
+        let twice = assemble(&text2).unwrap_or_else(|e| panic!("case {case}: '{text2}': {e}"));
+        assert_eq!(twice, once, "case {case}: the round trip must be a fixpoint");
     }
 }
