@@ -135,6 +135,17 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                 return HartEvents { events, aborted: true };
             }
         };
+        // Any write to the watched register severs the load→branch
+        // association: the branch then tests a derived value, not the raw
+        // flag word, and modelling it against the raw word would be
+        // unsound in both directions (missed or spurious deadlocks). The
+        // spin is treated like a CSR poll — assumed to exit. A fresh load
+        // re-establishes the association below.
+        if let Some((_, _, lrd)) = last_load {
+            if instr_dest(&instr) == Some(lrd) {
+                last_load = None;
+            }
+        }
         let mut next = pc + 1;
         match instr {
             Instr::Lui { rd, imm } => set(&mut regs, rd, Some(imm)),
@@ -143,12 +154,24 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
             }
             Instr::Jal { rd, imm } => {
                 set(&mut regs, rd, Some((pc as i32 + 1) * 4));
-                next = jump_target(pc, imm);
+                let Some(t) = jump_target(pc, imm) else {
+                    abort(pc, format!("jump offset {imm} is not word-aligned"), report);
+                    return HartEvents { events, aborted: true };
+                };
+                next = t;
             }
             Instr::Jalr { rd, rs1, imm } => match regs[rs1 as usize] {
                 Some(base) => {
                     set(&mut regs, rd, Some((pc as i32 + 1) * 4));
                     let target = (base.wrapping_add(imm) & !1) as u32;
+                    if target % 4 != 0 {
+                        abort(
+                            pc,
+                            format!("indirect jump target {target:#x} is not word-aligned"),
+                            report,
+                        );
+                        return HartEvents { events, aborted: true };
+                    }
                     next = (target / 4) as usize;
                 }
                 None => {
@@ -157,11 +180,15 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                 }
             },
             Instr::Branch { op, rs1, rs2, imm } => {
+                let Some(target) = jump_target(pc, imm) else {
+                    abort(pc, format!("branch offset {imm} is not word-aligned"), report);
+                    return HartEvents { events, aborted: true };
+                };
                 let (a, b) = (regs[rs1 as usize], regs[rs2 as usize]);
                 match (a, b) {
                     (Some(a), Some(b)) => {
                         if branch_taken(op, a, b) {
-                            next = jump_target(pc, imm);
+                            next = target;
                         }
                     }
                     _ => {
@@ -170,7 +197,6 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                         // record the wait. Either way, assume the loop
                         // exits and fall through — the event simulation
                         // decides whether that assumption is justified.
-                        let target = jump_target(pc, imm);
                         if target <= pc {
                             let wait =
                                 wait_pred(op, (rs1, a), (rs2, b), last_load, target, pc);
@@ -255,8 +281,33 @@ fn set(regs: &mut [Option<i32>; 32], rd: u8, v: Option<i32>) {
     }
 }
 
-fn jump_target(pc: usize, imm: i32) -> usize {
-    ((pc as i64) + (imm as i64) / 4) as usize
+/// Destination register of `instr`, if it writes one.
+fn instr_dest(instr: &Instr) -> Option<u8> {
+    match *instr {
+        Instr::Lui { rd, .. }
+        | Instr::Auipc { rd, .. }
+        | Instr::Jal { rd, .. }
+        | Instr::Jalr { rd, .. }
+        | Instr::Load { rd, .. }
+        | Instr::OpImm { rd, .. }
+        | Instr::Op { rd, .. }
+        | Instr::Csr { rd, .. } => Some(rd),
+        Instr::Branch { .. }
+        | Instr::Store { .. }
+        | Instr::Fence
+        | Instr::Mret
+        | Instr::Wfi
+        | Instr::Ecall
+        | Instr::Ebreak => None,
+    }
+}
+
+/// Instruction index of a branch/JAL target, or `None` if the byte offset
+/// is not word-aligned. RV32I encodes 2-byte-aligned offsets, but the
+/// barrel fetches 4-byte words — a half-word target cannot name an
+/// instruction and truncating it would silently walk the wrong one.
+fn jump_target(pc: usize, imm: i32) -> Option<usize> {
+    (imm % 4 == 0).then(|| ((pc as i64) + (imm as i64) / 4) as usize)
 }
 
 fn branch_taken(op: BranchOp, a: i32, b: i32) -> bool {
@@ -435,6 +486,36 @@ mod tests {
     fn unbounded_loop_is_reported() {
         let r = verify_asm("spin:\n    jal   x0, spin");
         assert!(r.has(DiagCode::SyncLiveness));
+    }
+
+    /// An ALU transform between the load and the branch severs the
+    /// load→branch association: the branch tests a derived value (here the
+    /// masked bit), not the raw flag word, so the spin is assumed to exit
+    /// like a CSR poll instead of being modelled — unsoundly — against the
+    /// raw word (which would report a spurious deadlock here).
+    #[test]
+    fn transformed_flag_spin_is_assumed_to_exit() {
+        let r = verify_asm(
+            "    li    t3, 0x100
+             wait:
+                 lw    t4, 0(t3)
+                 andi  t4, t4, 2
+                 beqz  t4, wait
+                 ecall",
+        );
+        assert!(r.is_clean(), "diagnostics: {:?}", r.diagnostics);
+    }
+
+    /// A branch whose byte offset is not word-aligned (legal in RV32I's
+    /// 2-byte-aligned encoding, unrepresentable on the 4-byte-word barrel)
+    /// is diagnosed, not silently truncated to the wrong instruction.
+    #[test]
+    fn misaligned_branch_offset_is_a_decode_finding() {
+        // beq x0, x0, +2 — B-type imm[4:1] bit 1 set, all else zero.
+        let program = vec![0x0000_0163];
+        let mut report = VerifyReport::new(VerifyLevel::Quick);
+        check_program(&program, &mut report);
+        assert!(report.has(DiagCode::ProgDecode), "{:?}", report.diagnostics);
     }
 
     /// A CSR status poll has no memory wait: assumed to exit, no finding.

@@ -217,15 +217,16 @@ fn json_report_follows_the_verify_v1_schema() {
     let cfg = MvuConfig::default();
 
     let c = compile_pipelined(&m, POLICY).unwrap();
+    // `to_json` emits compact JSON (no whitespace after separators).
     let clean = verify_pipelined(&c, &m, &cfg, VerifyLevel::Full).to_json();
-    assert!(clean.contains("\"schema\": \"barvinn.verify/v1\""), "{clean}");
-    assert!(clean.contains("\"clean\": true"), "{clean}");
-    assert!(clean.contains("\"level\": \"full\""), "{clean}");
+    assert!(clean.contains("\"schema\":\"barvinn.verify/v1\""), "{clean}");
+    assert!(clean.contains("\"clean\":true"), "{clean}");
+    assert!(clean.contains("\"level\":\"full\""), "{clean}");
 
     let mut c = compile_pipelined(&m, POLICY).unwrap();
     c.plans[0].jobs[0].a_agu.base = 100_000;
     let dirty = verify_pipelined(&c, &m, &cfg, VerifyLevel::Quick).to_json();
-    assert!(dirty.contains("\"clean\": false"), "{dirty}");
-    assert!(dirty.contains("\"code\": \"ADDR-OOB\""), "{dirty}");
-    assert!(dirty.contains("\"diagnostics\": ["), "{dirty}");
+    assert!(dirty.contains("\"clean\":false"), "{dirty}");
+    assert!(dirty.contains("\"code\":\"ADDR-OOB\""), "{dirty}");
+    assert!(dirty.contains("\"diagnostics\":["), "{dirty}");
 }
