@@ -386,29 +386,49 @@ impl System {
     /// than re-scanning O(harts + MVUs) state each cycle as the original
     /// implementation did.
     pub fn run(&mut self) -> SystemExit {
-        self.cpu.resync_sleep_state();
-        self.resync_datapath_masks();
+        self.begin_run();
         loop {
-            if self.cycles >= self.max_cycles {
-                return SystemExit::MaxCycles;
-            }
-            let datapath_busy = self.datapath_busy();
-            if self.cpu.halted() && !datapath_busy {
-                return SystemExit::Done;
-            }
-            if self.cpu.all_exited() && !datapath_busy {
-                return SystemExit::AllExited;
-            }
-            if self.cpu.all_asleep() && !datapath_busy && self.irq_mask == 0 {
-                return SystemExit::Deadlock;
-            }
-            if let Some((hart, trap)) = self.step_tracked() {
-                if matches!(trap, Trap::MachineHalt) {
-                    continue;
-                }
-                return SystemExit::Fault { hart, trap };
+            if let Some(exit) = self.poll_step() {
+                return exit;
             }
         }
+    }
+
+    /// Re-sync the incremental hart-sleep and datapath masks before a
+    /// [`Self::poll_step`] loop. [`Self::run`] is exactly
+    /// `begin_run` + `poll_step` until exit; host drivers that interleave
+    /// DMA with execution (the streamed-program flag protocol) call these
+    /// directly so they can touch RAM between modelled cycles.
+    pub fn begin_run(&mut self) {
+        self.cpu.resync_sleep_state();
+        self.resync_datapath_masks();
+    }
+
+    /// Advance the system one modelled cycle; `Some(exit)` once the run is
+    /// over. Host-side DRAM/activation writes between calls are safe — the
+    /// exit checks read only incrementally tracked CPU/datapath state, and
+    /// [`Self::begin_run`] established the masks.
+    pub fn poll_step(&mut self) -> Option<SystemExit> {
+        if self.cycles >= self.max_cycles {
+            return Some(SystemExit::MaxCycles);
+        }
+        let datapath_busy = self.datapath_busy();
+        if self.cpu.halted() && !datapath_busy {
+            return Some(SystemExit::Done);
+        }
+        if self.cpu.all_exited() && !datapath_busy {
+            return Some(SystemExit::AllExited);
+        }
+        if self.cpu.all_asleep() && !datapath_busy && self.irq_mask == 0 {
+            return Some(SystemExit::Deadlock);
+        }
+        if let Some((hart, trap)) = self.step_tracked() {
+            if matches!(trap, Trap::MachineHalt) {
+                return None;
+            }
+            return Some(SystemExit::Fault { hart, trap });
+        }
+        None
     }
 
     /// Direct-drive API (no CPU): launch a job on one MVU and run the

@@ -32,6 +32,13 @@
 //!    [`crate::codegen::layer_cycles`], promoting the runtime
 //!    `debug_assert` cross-checks into checked diagnostics.
 //!
+//! For streamed execution, [`verify_streamed`] extends checks 3 and 4 to
+//! the generated *multi-frame* program (`docs/PITO_PROGRAMS.md`): the
+//! cross-frame flag protocol is proven live with the host-owned flags
+//! seeded at their end-of-batch values, and the program's launch sequence
+//! — every `START` write's snapshotted base CSRs — is proven to follow the
+//! odd/even double-buffer parity discipline frame by frame.
+//!
 //! Every violation is a typed [`Diagnostic`] with a stable [`DiagCode`];
 //! [`VerifyReport::to_json`] renders the machine-readable report the
 //! `barvinn check` subcommand and the CI verify matrix gate on. The
@@ -268,6 +275,98 @@ pub fn verify_pipelined(
 
     check_cycles_pipelined(c, model, 0, &mut report);
     report
+}
+
+/// [`verify_pipelined`] plus verification of the generated *streamed*
+/// multi-frame program for `frames` frames in flight: the program's
+/// cross-frame flag protocol is proven live (`SYNC-LIVENESS`) and its
+/// launch sequence is proven to follow the odd/even double-buffer parity
+/// discipline (`STREAM-PARITY`) — both read off the instruction stream
+/// itself, not the plans. This is what `barvinn check --stream` runs.
+pub fn verify_streamed(
+    c: &CompiledModel,
+    model: &Model,
+    cfg: &MvuConfig,
+    frames: usize,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = verify_pipelined(c, model, cfg, level);
+    if level != VerifyLevel::Off {
+        check_streamed_program(c, frames, &mut report);
+    }
+    report
+}
+
+/// [`verify_multi_pass`] plus per-pass verification of each pass's
+/// generated streamed program (each pass streams its frames independently;
+/// the host copy between passes is outside the program).
+pub fn verify_multi_pass_streamed(
+    p: &MultiPassPlan,
+    model: &Model,
+    cfg: &MvuConfig,
+    frames: usize,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = verify_multi_pass(p, model, cfg, level);
+    if level != VerifyLevel::Off {
+        for pass in &p.passes {
+            check_streamed_program(pass, frames, &mut report);
+        }
+    }
+    report
+}
+
+/// Verify a *supplied* streamed program image against a compiled model —
+/// the same liveness + launch-parity proof [`verify_streamed`] runs on the
+/// generated image, exposed so tests (and tooling) can check mutated or
+/// externally-produced programs. Fault-injection tests patch one
+/// instruction of the generated assembly and assert the verifier names the
+/// exact broken invariant.
+pub fn verify_stream_program(
+    c: &CompiledModel,
+    program: &[u32],
+    frames: usize,
+    level: VerifyLevel,
+) -> VerifyReport {
+    let mut report = VerifyReport::new(level);
+    if level == VerifyLevel::Off {
+        return report;
+    }
+    check_stream_image(c, program, frames, &mut report);
+    report
+}
+
+/// Shared core: generate (or accept) a streamed program image and prove it.
+fn check_streamed_program(c: &CompiledModel, frames: usize, report: &mut VerifyReport) {
+    match c.stream_program(frames) {
+        Ok(sp) => check_stream_image(c, &sp.program, frames, report),
+        Err(e) => report.diagnostics.push(Diagnostic {
+            code: DiagCode::ProgDecode,
+            mvu: None,
+            layer: None,
+            message: format!("streamed program generation failed: {e}"),
+        }),
+    }
+}
+
+/// Liveness + launch-parity proof of one streamed program image. The walk
+/// seeds the two host-owned flags at their end-of-batch values (`frames`),
+/// which is sound for the monotone `>=` predicates generated programs use:
+/// the host flags only gate frame entry, never the values harts publish,
+/// so any schedule live under the seeded flags is live under every
+/// prefix-monotone host schedule.
+fn check_stream_image(
+    c: &CompiledModel,
+    program: &[u32],
+    frames: usize,
+    report: &mut VerifyReport,
+) {
+    let env = [
+        (crate::codegen::HOST_IN_FLAG, frames as i32),
+        (crate::codegen::HOST_OUT_FLAG, frames as i32),
+    ];
+    let launches = sync::check_program_env(program, &env, report);
+    stream::check_stream_program_launches(c, frames, &launches, report);
 }
 
 /// Verify a distributed-mode [`DistributedPlan`] for its single layer.

@@ -13,6 +13,7 @@ use crate::exec::StreamSchedule;
 
 use super::dataflow::layer_act_footprint;
 use super::footprint::Interval;
+use super::sync::LaunchBases;
 use super::{DiagCode, Diagnostic, VerifyReport};
 
 /// The odd-parity twin of each stage must be the even plan shifted by
@@ -74,6 +75,83 @@ pub(crate) fn check_parity(c: &CompiledModel, report: &mut VerifyReport) {
                 ),
                 report,
             );
+        }
+    }
+}
+
+/// Check the launch sequence the sync walker extracted from a *streamed*
+/// program against the compiled plans: hart `h` must launch exactly the
+/// jobs of `stage_plan(h, f % 2)` for `f` in `0..frames`, in order, with
+/// all five base CSRs matching the plan's AGU bases.
+///
+/// This proves the double-buffer parity discipline *from the instruction
+/// stream itself* — a program that reuses one parity's bases on every
+/// frame assembles and runs, but it silently reads stale activations; here
+/// it is a [`DiagCode::StreamParity`] finding before a single simulated
+/// cycle. One diagnostic per offending hart (the first divergence), so a
+/// systematic flip does not flood the report.
+pub(crate) fn check_stream_program_launches(
+    c: &CompiledModel,
+    frames: usize,
+    launches: &[Vec<LaunchBases>],
+    report: &mut VerifyReport,
+) {
+    const FIELD: [&str; 5] = ["abase", "wbase", "sbase", "bbase", "obase"];
+    for (h, got) in launches.iter().take(c.plans.len()).enumerate() {
+        let jobs_per_frame = c.plans[h].jobs.len();
+        let want: Vec<(usize, [i32; 5])> = (0..frames)
+            .flat_map(|f| {
+                c.stage_plan(h, f % 2).jobs.iter().map(move |job| {
+                    (
+                        f,
+                        [
+                            job.a_agu.base as i32,
+                            job.w_agu.base as i32,
+                            job.s_agu.base as i32,
+                            job.b_agu.base as i32,
+                            job.o_agu.base as i32,
+                        ],
+                    )
+                })
+            })
+            .collect();
+        if got.len() != want.len() {
+            report.diagnostics.push(Diagnostic {
+                code: DiagCode::StreamParity,
+                mvu: Some(c.plans[h].mvu),
+                layer: Some(h),
+                message: format!(
+                    "streamed program launches {} jobs on hart {h}, plan needs {} \
+                     ({} per frame x {frames} frames)",
+                    got.len(),
+                    want.len(),
+                    jobs_per_frame,
+                ),
+            });
+            continue;
+        }
+        'hart: for (i, (bases, (frame, want_bases))) in got.iter().zip(&want).enumerate() {
+            for field in 0..5 {
+                if bases[field] != Some(want_bases[field]) {
+                    let got_str = match bases[field] {
+                        Some(v) => v.to_string(),
+                        None => "unknown".to_string(),
+                    };
+                    report.diagnostics.push(Diagnostic {
+                        code: DiagCode::StreamParity,
+                        mvu: Some(c.plans[h].mvu),
+                        layer: Some(h),
+                        message: format!(
+                            "streamed program launch {i} on hart {h} (frame {frame}, \
+                             parity {}) sets {} = {got_str}, plan wants {}",
+                            frame % 2,
+                            FIELD[field],
+                            want_bases[field],
+                        ),
+                    });
+                    break 'hart;
+                }
+            }
         }
     }
 }

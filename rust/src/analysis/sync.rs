@@ -23,12 +23,30 @@
 
 use std::collections::HashMap;
 
-use crate::pito::{decode, AluOp, BranchOp, Instr, NUM_HARTS};
+use crate::pito::{decode, AluOp, BranchOp, CsrOp, Instr, NUM_HARTS};
 
 use super::{DiagCode, Diagnostic, VerifyLevel, VerifyReport};
 
 /// RISC-V mhartid CSR number.
 const CSR_MHARTID: u16 = 0xF14;
+
+/// The five MVU job-base CSRs and the command register, as the walker sees
+/// them (the [`crate::accel::csr_map`] numbers). The walk shadows the base
+/// writes so each `START` can snapshot the exact job the program launches —
+/// the launch sequence the stream-parity check compares against the
+/// compiled plans.
+const CSR_MVU_WBASE: u16 = 0x7C9;
+const CSR_MVU_ABASE: u16 = 0x7CA;
+const CSR_MVU_SBASE: u16 = 0x7CB;
+const CSR_MVU_BBASE: u16 = 0x7CC;
+const CSR_MVU_OBASE: u16 = 0x7CD;
+const CSR_MVU_COMMAND: u16 = 0xBC0;
+const CMD_START: i32 = 1;
+
+/// One snapshotted job launch: the five base CSRs at the `START` write, in
+/// `[abase, wbase, sbase, bbase, obase]` order (`None` = not statically
+/// known).
+pub(crate) type LaunchBases = [Option<i32>; 5];
 
 /// Per-hart walk fuel. Generated programs concretely execute their
 /// row × output-block loops — thousands of steps per hart; a walk that
@@ -87,6 +105,8 @@ enum Ev {
 /// One hart's extracted event stream.
 struct HartEvents {
     events: Vec<Ev>,
+    /// Every MVU job launch the hart performs, in program order.
+    launches: Vec<LaunchBases>,
     /// The walk aborted early (decode error / unbounded) — its missing
     /// stores may starve other harts, which the abort diagnostic explains.
     aborted: bool,
@@ -94,13 +114,36 @@ struct HartEvents {
 
 /// Statically prove the program's cross-hart flag protocol is live.
 pub(crate) fn check_program(program: &[u32], report: &mut VerifyReport) {
+    let _ = check_program_env(program, &[], report);
+}
+
+/// [`check_program`] with a seeded environment and launch extraction.
+///
+/// `env` pre-seeds data words the *host* owns at runtime — for streamed
+/// programs, `HOST_IN`/`HOST_OUT` at their final values (the host stages
+/// all `frames` inputs and reads all `frames` outputs). Sound for the
+/// monotone `>=` predicates generated programs spin on: seeding the final
+/// value can only satisfy a host-owned wait *earlier* than the real
+/// protocol would, and host flags never gate the values other stores
+/// publish — so liveness of the hart-to-hart protocol is still proven
+/// exactly. (The host side of the handshake is the driver's loop in
+/// `session::stream_program_exec`, which services flags every cycle.)
+///
+/// Returns each hart's launch sequence: the five job-base CSRs snapshotted
+/// at every `mvu_command = START` write, in program order.
+pub(crate) fn check_program_env(
+    program: &[u32],
+    env: &[(u32, i32)],
+    report: &mut VerifyReport,
+) -> Vec<Vec<LaunchBases>> {
     if program.is_empty() {
-        return;
+        return Vec::new();
     }
     let per_hart: Vec<HartEvents> =
         (0..NUM_HARTS).map(|h| walk_hart(program, h, report)).collect();
     report.harts_checked += NUM_HARTS;
-    simulate(&per_hart, report);
+    simulate(&per_hart, env, report);
+    per_hart.into_iter().map(|h| h.launches).collect()
 }
 
 /// Constant-propagating walk of hart `hart`'s trajectory through `program`.
@@ -110,6 +153,9 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
     // The hart's own stores, visible to its own later loads.
     let mut own: HashMap<u32, i32> = HashMap::new();
     let mut events: Vec<Ev> = Vec::new();
+    // Shadow of the five MVU job-base CSRs, snapshotted per START write.
+    let mut bases: LaunchBases = [None; 5];
+    let mut launches: Vec<LaunchBases> = Vec::new();
     // Most recent unknown-valued load: (pc index, word address, rd).
     let mut last_load: Option<(usize, u32, u8)> = None;
     let mut pc: usize = 0;
@@ -126,13 +172,13 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
     for _ in 0..STEP_LIMIT {
         let Some(&word) = program.get(pc) else {
             abort(pc, "control flow escapes the program image".to_string(), report);
-            return HartEvents { events, aborted: true };
+            return HartEvents { events, launches, aborted: true };
         };
         let instr = match decode(word) {
             Ok(i) => i,
             Err(e) => {
                 abort(pc, format!("undecodable word: {e}"), report);
-                return HartEvents { events, aborted: true };
+                return HartEvents { events, launches, aborted: true };
             }
         };
         // Any write to the watched register severs the load→branch
@@ -156,7 +202,7 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                 set(&mut regs, rd, Some((pc as i32 + 1) * 4));
                 let Some(t) = jump_target(pc, imm) else {
                     abort(pc, format!("jump offset {imm} is not word-aligned"), report);
-                    return HartEvents { events, aborted: true };
+                    return HartEvents { events, launches, aborted: true };
                 };
                 next = t;
             }
@@ -170,19 +216,19 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                             format!("indirect jump target {target:#x} is not word-aligned"),
                             report,
                         );
-                        return HartEvents { events, aborted: true };
+                        return HartEvents { events, launches, aborted: true };
                     }
                     next = (target / 4) as usize;
                 }
                 None => {
                     abort(pc, "indirect jump with statically unknown target".into(), report);
-                    return HartEvents { events, aborted: true };
+                    return HartEvents { events, launches, aborted: true };
                 }
             },
             Instr::Branch { op, rs1, rs2, imm } => {
                 let Some(target) = jump_target(pc, imm) else {
                     abort(pc, format!("branch offset {imm} is not word-aligned"), report);
-                    return HartEvents { events, aborted: true };
+                    return HartEvents { events, launches, aborted: true };
                 };
                 let (a, b) = (regs[rs1 as usize], regs[rs2 as usize]);
                 match (a, b) {
@@ -250,15 +296,41 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
                 };
                 set(&mut regs, rd, v);
             }
-            Instr::Csr { op: _, rd, csr, src: _ } => {
+            Instr::Csr { op, rd, csr, src } => {
+                // The value written, before rd clobbers anything: register
+                // ops read rs1 (old value), immediate ops carry the zimm.
+                // Set/clear with a zero source leave the CSR unchanged;
+                // with a non-zero/unknown source they modify it
+                // unpredictably (Some(None) — written, value unknown).
+                let written: Option<Option<i32>> = match op {
+                    CsrOp::Rw => Some(regs[src as usize]),
+                    CsrOp::Rwi => Some(Some(src as i32)),
+                    CsrOp::Rs | CsrOp::Rc => match regs[src as usize] {
+                        Some(0) => None,
+                        _ if src == 0 => None,
+                        _ => Some(None),
+                    },
+                    CsrOp::Rsi | CsrOp::Rci => (src != 0).then_some(None),
+                };
                 // CSR writes go to the MVU bridge, not data memory; reads
                 // are unknown except the hart's own id.
                 let v = (csr == CSR_MHARTID).then_some(hart as i32);
                 set(&mut regs, rd, v);
+                if let Some(wv) = written {
+                    match csr {
+                        CSR_MVU_ABASE => bases[0] = wv,
+                        CSR_MVU_WBASE => bases[1] = wv,
+                        CSR_MVU_SBASE => bases[2] = wv,
+                        CSR_MVU_BBASE => bases[3] = wv,
+                        CSR_MVU_OBASE => bases[4] = wv,
+                        CSR_MVU_COMMAND if wv == Some(CMD_START) => launches.push(bases),
+                        _ => {}
+                    }
+                }
             }
             Instr::Fence | Instr::Mret | Instr::Wfi => {}
             Instr::Ecall | Instr::Ebreak => {
-                return HartEvents { events, aborted: false };
+                return HartEvents { events, launches, aborted: false };
             }
         }
         pc = next;
@@ -272,7 +344,7 @@ fn walk_hart(program: &[u32], hart: usize, report: &mut VerifyReport) -> HartEve
              established statically"
         ),
     });
-    HartEvents { events, aborted: true }
+    HartEvents { events, launches, aborted: true }
 }
 
 fn set(regs: &mut [Option<i32>; 32], rd: u8, v: Option<i32>) {
@@ -373,11 +445,12 @@ fn wait_pred(
 }
 
 /// Greedy round-robin simulation of the extracted event streams. Flags
-/// start at zero; a stuck fixpoint with unfinished harts is a proven
-/// deadlock (for single-writer monotone flags, which generated programs
-/// maintain).
-fn simulate(harts: &[HartEvents], report: &mut VerifyReport) {
-    let mut mem: HashMap<u32, i32> = HashMap::new();
+/// start at zero except the seeded `env` words (host-owned flags at their
+/// final values — see [`check_program_env`]); a stuck fixpoint with
+/// unfinished harts is a proven deadlock (for single-writer monotone
+/// flags, which generated programs maintain).
+fn simulate(harts: &[HartEvents], env: &[(u32, i32)], report: &mut VerifyReport) {
+    let mut mem: HashMap<u32, i32> = env.iter().copied().collect();
     let mut global_havoc = false;
     let mut idx: Vec<usize> = vec![0; harts.len()];
     loop {
@@ -529,5 +602,66 @@ mod tests {
                  ecall",
         );
         assert!(r.is_clean(), "diagnostics: {:?}", r.diagnostics);
+    }
+
+    /// The walk snapshots the five job-base CSRs at every START write —
+    /// including bases updated by `addi` between launches — and ignores
+    /// non-START command writes (CLEAR_IRQ).
+    #[test]
+    fn launches_snapshot_the_base_csrs() {
+        let program = assemble(
+            "    li    s0, 100
+                 li    s5, 7
+                 li    s6, 0
+                 li    s7, 4000
+                 csrw  mvu_abase, s0
+                 csrw  mvu_wbase, s5
+                 csrw  mvu_sbase, s6
+                 csrw  mvu_bbase, s6
+                 csrw  mvu_obase, s7
+                 li    t1, 1
+                 csrw  mvu_command, t1
+                 li    t1, 2
+                 csrw  mvu_command, t1
+                 addi  s0, s0, 50
+                 csrw  mvu_abase, s0
+                 li    t1, 1
+                 csrw  mvu_command, t1
+                 ecall",
+        )
+        .unwrap();
+        let mut report = VerifyReport::new(VerifyLevel::Quick);
+        let launches = check_program_env(&program, &[], &mut report);
+        assert!(report.is_clean(), "{:?}", report.diagnostics);
+        assert_eq!(launches.len(), NUM_HARTS);
+        for hart in &launches {
+            assert_eq!(
+                hart.as_slice(),
+                &[
+                    [Some(100), Some(7), Some(0), Some(0), Some(4000)],
+                    [Some(150), Some(7), Some(0), Some(0), Some(4000)],
+                ],
+            );
+        }
+    }
+
+    /// A wait only the host can satisfy deadlocks with an empty env and is
+    /// proven live once the host flag is seeded — the streamed-program
+    /// entry wait in miniature.
+    #[test]
+    fn env_seeding_models_the_host_side_of_the_handshake() {
+        let src = "    li    t3, 0x40
+                       li    t0, 3
+                   hwait:
+                       lw    t4, 0(t3)
+                       blt   t4, t0, hwait
+                       ecall";
+        let program = assemble(src).unwrap();
+        let mut dead = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_env(&program, &[], &mut dead);
+        assert!(dead.has(DiagCode::SyncLiveness), "{:?}", dead.diagnostics);
+        let mut live = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_env(&program, &[(0x40, 8)], &mut live);
+        assert!(live.is_clean(), "{:?}", live.diagnostics);
     }
 }

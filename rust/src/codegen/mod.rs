@@ -19,5 +19,8 @@ pub mod schedule;
 
 pub use conv2d::{conv_jobs, layer_cycles, EdgePolicy};
 pub use layout::{ActLayout, WeightLayout};
-pub use program::{compile_pipelined, CompileError, CompiledModel, MvuImage};
+pub use program::{
+    compile_pipelined, flag_addr, frame_flag_addr, CompileError, CompiledModel, MvuImage,
+    StreamProgram, HOST_IN_FLAG, HOST_OUT_FLAG,
+};
 pub use schedule::{compile_distributed, compile_multi_pass, DistributedPlan, MultiPassPlan};

@@ -18,6 +18,9 @@
 //! jump-based walk matters: all address arithmetic that *could* need a
 //! multiplier is folded into constants at code-generation time.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
 use crate::accel::{MvuCsrFile, System};
 use crate::exec::JobTrace;
 use crate::model::{ConvLayer, Model};
@@ -98,10 +101,32 @@ impl std::fmt::Display for CompileError {
 
 impl std::error::Error for CompileError {}
 
-/// DRAM address of hart `h`'s rows-done flag.
+/// DRAM address of hart `h`'s rows-done flag. Serial programs store the
+/// per-frame row index; streamed programs store *cumulative* rows across
+/// all frames (monotone, so a consumer's affine `needed(frame, row)` wait
+/// is a single signed compare either way).
 pub fn flag_addr(h: usize) -> u32 {
     0x100 + 4 * h as u32
 }
+
+/// DRAM address of hart `h`'s frames-retired flag (streamed programs
+/// only): hart `h` stores `f + 1` after finishing frame `f`, which both
+/// its upstream neighbour (buffer anti-dependence) and the host DMA loop
+/// spin on.
+pub fn frame_flag_addr(h: usize) -> u32 {
+    0x80 + 4 * h as u32
+}
+
+/// DRAM flag the host bumps to `f + 1` once frame `f`'s input image is
+/// staged in activation parity buffer `f % 2`; hart 0 spins on it before
+/// entering frame `f` (streamed programs only).
+pub const HOST_IN_FLAG: u32 = 0x40;
+
+/// DRAM flag the host bumps to `f + 1` once it has read frame `f`'s
+/// output back; the final hart spins on `HOST_OUT >= f - 1` before
+/// entering frame `f`, since frame `f` reuses the output parity buffer
+/// frame `f - 2` retired into (streamed programs only).
+pub const HOST_OUT_FLAG: u32 = 0x44;
 
 /// Activation-RAM base of the final output region (last MVU's own RAM).
 pub const OUT_BASE: u32 = 16_384;
@@ -139,6 +164,35 @@ impl LayerPlan {
     }
 }
 
+/// Frame-invariant per-stage constants the streamed emitter needs beyond
+/// the plans themselves — captured at compile time because the source
+/// [`Model`] is not retained on the compiled artifact.
+#[derive(Debug, Clone)]
+struct StageInfo {
+    name: String,
+    rows: i64,
+    cos: i64,
+    row_in_stride: i32,
+    row_out_stride: i32,
+    cos_w_stride: i32,
+    cos_o_stride: i32,
+    /// `(need0, inc, max)` against the producer stage (`None` for stage 0).
+    need: Option<(i64, i64, i64)>,
+    /// Rows the producer publishes per frame (`rows_computed(prev)`) — the
+    /// per-frame offset added to the cumulative row flag it spins on.
+    prev_rows: i64,
+}
+
+/// A generated multi-frame streamed program ([`CompiledModel::stream_program`]):
+/// the annotated assembly, its assembled image, and the frame count it was
+/// specialised for.
+#[derive(Debug, Clone)]
+pub struct StreamProgram {
+    pub asm: String,
+    pub program: Vec<u32>,
+    pub frames: usize,
+}
+
 /// A fully compiled pipelined model.
 pub struct CompiledModel {
     pub asm: String,
@@ -154,6 +208,11 @@ pub struct CompiledModel {
     pub policy: EdgePolicy,
     /// MVU index and layout where the final activations appear.
     pub out_mvu: usize,
+    /// Per-stage constants for streamed program emission, in stage order.
+    stages: Vec<StageInfo>,
+    /// Memoized streamed programs keyed by frame count — emitted and
+    /// assembled once per batch size, reused across batches and passes.
+    stream_programs: Mutex<HashMap<usize, Arc<StreamProgram>>>,
 }
 
 impl CompiledModel {
@@ -211,6 +270,30 @@ impl CompiledModel {
     /// [`crate::exec::StreamSchedule`].
     pub fn stage_cycles(&self) -> Vec<u64> {
         self.plans.iter().map(|p| p.analytic_cycles).collect()
+    }
+
+    /// The multi-frame *streamed* Pito program for a batch of `frames`
+    /// inputs: each hart runs its stage over all frames back-to-back, with
+    /// the double-buffer parity discipline and every fill/drain/steady-state
+    /// dependence encoded as DRAM flag waits in the instruction stream (see
+    /// `docs/PITO_PROGRAMS.md`). The host's only runtime role is the DMA
+    /// handshake on [`HOST_IN_FLAG`]/[`HOST_OUT_FLAG`].
+    ///
+    /// Emission and assembly are memoized per frame count.
+    pub fn stream_program(&self, frames: usize) -> Result<Arc<StreamProgram>, CompileError> {
+        assert!(frames > 0, "a streamed program runs at least one frame");
+        let mut cache = self.stream_programs.lock().unwrap();
+        if let Some(p) = cache.get(&frames) {
+            return Ok(p.clone());
+        }
+        let asm = emit_stream_asm(self, frames);
+        let program = assemble(&asm).map_err(|e| CompileError::Assemble(e.to_string()))?;
+        if program.len() * 4 > crate::pito::IRAM_BYTES {
+            return Err(CompileError::ProgramTooLarge { words: program.len() });
+        }
+        let p = Arc::new(StreamProgram { asm, program, frames });
+        cache.insert(frames, p.clone());
+        Ok(p)
     }
 
     /// Load the image-invariant state: weight/scaler/bias RAM images for
@@ -317,6 +400,7 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
 
     let mut plans = Vec::with_capacity(n);
     let mut stream_plans = Vec::with_capacity(n);
+    let mut stages = Vec::with_capacity(n);
     let mut images = vec![MvuImage::default(); NUM_MVUS];
     for (h, layer) in model.layers.iter().enumerate() {
         let in_l = in_layout(layer, 0, policy);
@@ -373,6 +457,17 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
             analytic_cycles: layer_cycles(layer, policy),
             traces: std::sync::OnceLock::new(),
         });
+        stages.push(StageInfo {
+            name: layer.name.clone(),
+            rows: rows_computed(layer, policy) as i64,
+            cos: layer.co_sets() as i64,
+            row_in_stride: layer.stride as i32 * in_l.row_words() as i32,
+            row_out_stride: out_l.row_words() as i32,
+            cos_w_stride: w_l.cos_words() as i32,
+            cos_o_stride: layer.oprec.bits as i32,
+            need: (h > 0).then(|| producer_need(layer, &model.layers[h - 1], policy)),
+            prev_rows: if h > 0 { rows_computed(&model.layers[h - 1], policy) as i64 } else { 0 },
+        });
         plans.push(LayerPlan {
             in_layout: in_l,
             out_layout: out_l,
@@ -389,7 +484,17 @@ pub fn compile_pipelined(model: &Model, policy: EdgePolicy) -> Result<CompiledMo
     if program.len() * 4 > crate::pito::IRAM_BYTES {
         return Err(CompileError::ProgramTooLarge { words: program.len() });
     }
-    Ok(CompiledModel { asm, program, images, plans, stream_plans, policy, out_mvu: n - 1 })
+    Ok(CompiledModel {
+        asm,
+        program,
+        images,
+        plans,
+        stream_plans,
+        policy,
+        out_mvu: n - 1,
+        stages,
+        stream_programs: Mutex::new(HashMap::new()),
+    })
 }
 
 /// How many producer rows consumer row `r` of `layer` needs, as affine
@@ -515,6 +620,199 @@ fn emit_asm(model: &Model, plans: &[LayerPlan], policy: EdgePolicy) -> String {
         }
         writeln!(w, "    li    t2, {rows}").unwrap();
         writeln!(w, "    blt   s2, t2, row{h}").unwrap();
+        writeln!(w, "    ecall").unwrap();
+    }
+    s
+}
+
+/// Emit the multi-frame streamed program (§3.1.6 overlap, encoded in the
+/// instruction stream). Per hart, on top of the serial loop registers:
+///
+/// ```text
+/// s9  frame index f            s10 cumulative producer rows before frame f
+/// s11 cumulative rows published by this hart (never reset across frames)
+/// ```
+///
+/// Frame entry waits (all trivially satisfied for f <= 1, since DRAM
+/// starts zeroed and the compares are signed):
+///
+/// * hart 0:      `HOST_IN >= f+1`      — input f staged in parity f % 2
+/// * hart h<n-1:  `FRAMES[h+1] >= f-1`  — frame f reuses the output parity
+///   buffer the consumer read during its frame f-2 (anti-dependence)
+/// * hart n-1:    `HOST_OUT >= f-1`     — ditto, against the host readback
+///
+/// Within a frame the per-row producer wait is the serial one, shifted by
+/// the cumulative-row bookkeeping: rows flags count across frames, so
+/// `needed(f, r) = f·prev_rows + min(need0 + r·inc, max)`.
+///
+/// NOTE: the verifier fault-injection tests patch this program by textual
+/// replacement — keep the `sw    s9, 0(t3)` / `sw    s11, 0(t3)` /
+/// `andi  t1, s9, 1` spellings stable.
+fn emit_stream_asm(c: &CompiledModel, frames: usize) -> String {
+    use std::fmt::Write;
+    let n = c.plans.len();
+    let mut s = String::new();
+    let w = &mut s;
+    writeln!(w, "# streamed program: {frames} frame(s) in flight, {:?} (generated)", c.policy)
+        .unwrap();
+    writeln!(
+        w,
+        "# flag map: ROWS[h]=0x{:x}+4h (cumulative), FRAMES[h]=0x{:x}+4h,",
+        flag_addr(0),
+        frame_flag_addr(0)
+    )
+    .unwrap();
+    writeln!(
+        w,
+        "#           HOST_IN=0x{HOST_IN_FLAG:x} (inputs staged), HOST_OUT=0x{HOST_OUT_FLAG:x} (outputs read)"
+    )
+    .unwrap();
+    writeln!(w, "    csrr  t0, mhartid").unwrap();
+    for h in 0..n {
+        writeln!(w, "    li    t1, {h}").unwrap();
+        writeln!(w, "    beq   t0, t1, stage{h}").unwrap();
+    }
+    writeln!(w, "    ecall                      # spare harts").unwrap();
+
+    for h in 0..n {
+        let info = &c.stages[h];
+        let job0 = &c.plans[h].jobs[0];
+        let twin0 = &c.stream_plans[h].jobs[0];
+        debug_assert_eq!(job0.w_agu.base, twin0.w_agu.base, "weights are parity-shared");
+        let file = MvuCsrFile::from_job_config(job0);
+        let (a0, o0) = (job0.a_agu.base as i32, job0.o_agu.base as i32);
+        let (a1, o1) = (twin0.a_agu.base as i32, twin0.o_agu.base as i32);
+        let StageInfo {
+            rows,
+            cos,
+            row_in_stride,
+            row_out_stride,
+            cos_w_stride,
+            cos_o_stride,
+            ..
+        } = *info;
+
+        writeln!(w, "\nstage{h}:                      # {}", info.name).unwrap();
+        // Static configuration (everything except the five bases) — shared
+        // by both parities, whose jobs differ only in activation bases.
+        for (csr, val) in file.write_sequence() {
+            let name = crate::accel::mvu_csr_name(csr).unwrap();
+            if matches!(name, "mvu_abase" | "mvu_wbase" | "mvu_sbase" | "mvu_bbase" | "mvu_obase")
+            {
+                continue;
+            }
+            writeln!(w, "    li    t1, {}", val as i32).unwrap();
+            writeln!(w, "    csrw  {name}, t1").unwrap();
+        }
+        writeln!(w, "    li    s9, 0               # frame index").unwrap();
+        writeln!(w, "    li    s11, 0              # cumulative rows published").unwrap();
+        if info.need.is_some() {
+            writeln!(w, "    li    s10, 0              # producer rows before this frame")
+                .unwrap();
+        }
+        writeln!(w, "frame{h}:").unwrap();
+        if h == 0 {
+            writeln!(w, "    # wait for the host to stage frame f's input (HOST_IN >= f+1)")
+                .unwrap();
+            writeln!(w, "    li    t3, {HOST_IN_FLAG}").unwrap();
+            writeln!(w, "    addi  t2, s9, 1").unwrap();
+            writeln!(w, "hwait{h}:").unwrap();
+            writeln!(w, "    lw    t4, 0(t3)").unwrap();
+            writeln!(w, "    blt   t4, t2, hwait{h}").unwrap();
+        }
+        if h + 1 < n {
+            writeln!(w, "    # frame f reuses the output buffer stage {} read in its frame f-2;", h + 1)
+                .unwrap();
+            writeln!(w, "    # wait until it has retired that frame (FRAMES[{}] >= f-1)", h + 1)
+                .unwrap();
+            writeln!(w, "    li    t3, {}", frame_flag_addr(h + 1)).unwrap();
+            writeln!(w, "    addi  t2, s9, -1").unwrap();
+            writeln!(w, "bwait{h}:").unwrap();
+            writeln!(w, "    lw    t4, 0(t3)").unwrap();
+            writeln!(w, "    blt   t4, t2, bwait{h}").unwrap();
+        } else {
+            writeln!(w, "    # frame f reuses the output buffer the host read after frame f-2;")
+                .unwrap();
+            writeln!(w, "    # wait until it has been drained (HOST_OUT >= f-1)").unwrap();
+            writeln!(w, "    li    t3, {HOST_OUT_FLAG}").unwrap();
+            writeln!(w, "    addi  t2, s9, -1").unwrap();
+            writeln!(w, "owait{h}:").unwrap();
+            writeln!(w, "    lw    t4, 0(t3)").unwrap();
+            writeln!(w, "    blt   t4, t2, owait{h}").unwrap();
+        }
+        writeln!(w, "    # double-buffer parity: odd frames run the shifted twin regions")
+            .unwrap();
+        writeln!(w, "    andi  t1, s9, 1").unwrap();
+        writeln!(w, "    beqz  t1, feven{h}").unwrap();
+        writeln!(w, "    li    s0, {a1}").unwrap();
+        writeln!(w, "    li    s1, {o1}").unwrap();
+        writeln!(w, "    j     fgo{h}").unwrap();
+        writeln!(w, "feven{h}:").unwrap();
+        writeln!(w, "    li    s0, {a0}").unwrap();
+        writeln!(w, "    li    s1, {o0}").unwrap();
+        writeln!(w, "fgo{h}:").unwrap();
+        writeln!(w, "    li    s2, 0").unwrap();
+        if let Some((need0, _inc, _max)) = info.need {
+            writeln!(w, "    li    s3, {need0}").unwrap();
+            writeln!(w, "    add   s3, s3, s10").unwrap();
+        }
+        writeln!(w, "row{h}:").unwrap();
+        if let Some((_n0, _inc, max)) = info.need {
+            writeln!(w, "    li    t2, {max}").unwrap();
+            writeln!(w, "    add   t2, t2, s10").unwrap();
+            writeln!(w, "    blt   s3, t2, rwait{h}").unwrap();
+            writeln!(w, "    mv    s3, t2").unwrap();
+            writeln!(w, "rwait{h}:").unwrap();
+            writeln!(w, "    li    t3, {}", flag_addr(h - 1)).unwrap();
+            writeln!(w, "wait{h}:").unwrap();
+            writeln!(w, "    lw    t4, 0(t3)").unwrap();
+            writeln!(w, "    blt   t4, s3, wait{h}").unwrap();
+        }
+        writeln!(w, "    li    s4, 0").unwrap();
+        writeln!(w, "    li    s5, {}", job0.w_agu.base as i32).unwrap();
+        writeln!(w, "    li    s6, 0").unwrap();
+        writeln!(w, "    mv    s7, s1").unwrap();
+        writeln!(w, "cos{h}:").unwrap();
+        writeln!(w, "    csrw  mvu_abase, s0").unwrap();
+        writeln!(w, "    csrw  mvu_wbase, s5").unwrap();
+        writeln!(w, "    csrw  mvu_sbase, s6").unwrap();
+        writeln!(w, "    csrw  mvu_bbase, s6").unwrap();
+        writeln!(w, "    csrw  mvu_obase, s7").unwrap();
+        writeln!(w, "    li    t1, 1").unwrap();
+        writeln!(w, "    csrw  mvu_command, t1   # START").unwrap();
+        writeln!(w, "poll{h}:").unwrap();
+        writeln!(w, "    csrr  t2, mvu_status").unwrap();
+        writeln!(w, "    andi  t2, t2, 2").unwrap();
+        writeln!(w, "    beqz  t2, poll{h}").unwrap();
+        writeln!(w, "    li    t1, 2").unwrap();
+        writeln!(w, "    csrw  mvu_command, t1   # CLEAR_IRQ").unwrap();
+        writeln!(w, "    addi  s4, s4, 1").unwrap();
+        writeln!(w, "    addi  s5, s5, {cos_w_stride}").unwrap();
+        writeln!(w, "    addi  s6, s6, 1").unwrap();
+        writeln!(w, "    addi  s7, s7, {cos_o_stride}").unwrap();
+        writeln!(w, "    li    t2, {cos}").unwrap();
+        writeln!(w, "    blt   s4, t2, cos{h}").unwrap();
+        // Row complete: publish the cumulative count and advance.
+        writeln!(w, "    addi  s2, s2, 1").unwrap();
+        writeln!(w, "    addi  s11, s11, 1").unwrap();
+        writeln!(w, "    li    t3, {}", flag_addr(h)).unwrap();
+        writeln!(w, "    sw    s11, 0(t3)").unwrap();
+        writeln!(w, "    addi  s0, s0, {row_in_stride}").unwrap();
+        writeln!(w, "    addi  s1, s1, {row_out_stride}").unwrap();
+        if let Some((_n0, inc, _max)) = info.need {
+            writeln!(w, "    addi  s3, s3, {inc}").unwrap();
+        }
+        writeln!(w, "    li    t2, {rows}").unwrap();
+        writeln!(w, "    blt   s2, t2, row{h}").unwrap();
+        // Frame complete: publish retirement and advance the parity world.
+        writeln!(w, "    addi  s9, s9, 1").unwrap();
+        writeln!(w, "    li    t3, {}", frame_flag_addr(h)).unwrap();
+        writeln!(w, "    sw    s9, 0(t3)           # frame retired").unwrap();
+        if info.need.is_some() {
+            writeln!(w, "    addi  s10, s10, {}", info.prev_rows).unwrap();
+        }
+        writeln!(w, "    li    t2, {frames}").unwrap();
+        writeln!(w, "    blt   s9, t2, frame{h}").unwrap();
         writeln!(w, "    ecall").unwrap();
     }
     s
@@ -707,6 +1005,95 @@ mod tests {
             }
             other => panic!("expected StreamOverlap, got {:?}", other.err()),
         }
+    }
+
+    /// The streamed multi-frame program fits IRAM for the full resnet9 at
+    /// the paper's deepest batch (8 frames in flight), is memoized per
+    /// frame count, and carries the frame-loop structure for every stage.
+    #[test]
+    fn stream_program_fits_iram_and_memoizes() {
+        let m = resnet9_cifar10(2, 2);
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        let sp = c.stream_program(8).unwrap();
+        assert_eq!(sp.frames, 8);
+        assert!(sp.program.len() * 4 <= crate::pito::IRAM_BYTES, "{} words", sp.program.len());
+        assert!(sp.program.len() > c.program.len(), "streamed adds flag protocol");
+        // Memoized: same Arc for the same frame count, distinct otherwise.
+        let again = c.stream_program(8).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&sp, &again));
+        let other = c.stream_program(3).unwrap();
+        assert!(!std::sync::Arc::ptr_eq(&sp, &other));
+        for h in 0..m.layers.len() {
+            assert!(sp.asm.contains(&format!("frame{h}:")), "stage {h} frame loop");
+        }
+        // Host handshakes appear exactly at the chain's two ends.
+        assert_eq!(sp.asm.matches("hwait").count(), 2, "hart 0 input wait (label + branch)");
+        assert_eq!(sp.asm.matches("owait").count(), 2, "last hart output wait");
+    }
+
+    /// The streamed program executed by the barrel CPU produces bit-exact
+    /// golden outputs for every frame of a batch — the double-buffer parity
+    /// and all fill/drain synchronisation are in the instruction stream,
+    /// with the host only staging inputs/reading outputs at the flag
+    /// protocol's pace.
+    #[test]
+    fn streamed_pito_run_matches_golden() {
+        let m = tiny_resnet9();
+        let c = compile_pipelined(&m, EdgePolicy::PadInRam).unwrap();
+        let frames = 3;
+        let sp = c.stream_program(frames).unwrap();
+        let inputs: Vec<Tensor3> = (0..frames as u64).map(|i| random_input(&m, 40 + i)).collect();
+
+        let mut sys = System::new(SystemConfig::default());
+        c.load_weights(&mut sys);
+        sys.load_program(&sp.program);
+        sys.set_max_cycles(50_000_000);
+        // Host DMA loop: stage both parities up front, then service the
+        // flag protocol until the program exits.
+        let mut next_in = 0;
+        while next_in < frames.min(2) {
+            c.load_input_parity(&mut sys, &inputs[next_in], next_in % 2);
+            next_in += 1;
+        }
+        sys.cpu.write_dram(HOST_IN_FLAG, &(next_in as i32).to_le_bytes());
+        let co = m.layers.last().unwrap().co;
+        let mut outs: Vec<Tensor3> = Vec::new();
+        sys.begin_run();
+        let exit = loop {
+            if next_in < frames
+                && sys.cpu.read_dram_word(frame_flag_addr(0)) as i32 >= next_in as i32 - 1
+            {
+                c.load_input_parity(&mut sys, &inputs[next_in], next_in % 2);
+                next_in += 1;
+                sys.cpu.write_dram(HOST_IN_FLAG, &(next_in as i32).to_le_bytes());
+            }
+            let last = c.plans.len() - 1;
+            if outs.len() < frames
+                && sys.cpu.read_dram_word(frame_flag_addr(last)) as i32 >= outs.len() as i32 + 1
+            {
+                let f = outs.len();
+                outs.push(c.read_output_parity(&sys, co, f % 2));
+                sys.cpu.write_dram(HOST_OUT_FLAG, &(outs.len() as i32).to_le_bytes());
+            }
+            if let Some(exit) = sys.poll_step() {
+                break exit;
+            }
+        };
+        assert_eq!(
+            exit,
+            crate::accel::SystemExit::AllExited,
+            "launch errors: {:?}",
+            sys.launch_errors()
+        );
+        while outs.len() < frames {
+            let f = outs.len();
+            outs.push(c.read_output_parity(&sys, co, f % 2));
+        }
+        for (f, (got, input)) in outs.iter().zip(&inputs).enumerate() {
+            assert_eq!(got, &golden_forward(&m, input), "frame {f}");
+        }
+        // Every MVU ran its stage exactly `frames` times.
+        assert_eq!(sys.total_mvu_busy_cycles(), c.total_analytic_cycles() * frames as u64);
     }
 
     #[test]

@@ -514,6 +514,47 @@ mod tests {
         assert_eq!(plan.passes[0].program, single.program);
     }
 
+    /// Every pass of a deep model generates its own streamed multi-frame
+    /// program (each pass streams its frames independently), and the
+    /// passes' programs are distinct images over distinct stage chains.
+    #[test]
+    fn multi_pass_passes_generate_stream_programs() {
+        let mut m = resnet9_cifar10(2, 2);
+        // 10 uniform-ish layers: duplicate the two 4×4 tail layers.
+        let tail = m.layers[m.layers.len() - 1].clone();
+        for i in 0..2 {
+            let mut l = tail.clone();
+            l.name = format!("extra{i}");
+            l.ci = tail.co;
+            l.aprec = tail.oprec;
+            m.layers.push(l);
+        }
+        let mut h = 8;
+        for l in &mut m.layers {
+            l.in_h = h;
+            l.in_w = h;
+            if l.stride == 2 {
+                h /= 2;
+            }
+        }
+        m.validate().unwrap();
+        let plan = compile_multi_pass(&m, EdgePolicy::PadInRam).unwrap();
+        assert_eq!(plan.n_passes(), 2);
+        let sp: Vec<_> = plan
+            .passes
+            .iter()
+            .map(|p| p.stream_program(4).expect("pass streams"))
+            .collect();
+        assert_ne!(sp[0].program, sp[1].program, "per-pass stage chains differ");
+        for (i, s) in sp.iter().enumerate() {
+            assert_eq!(s.frames, 4);
+            assert!(
+                s.program.len() * 4 <= crate::pito::IRAM_BYTES,
+                "pass {i} streamed program must fit IRAM"
+            );
+        }
+    }
+
     #[test]
     fn multi_pass_rejects_empty_and_invalid() {
         let empty = Model {

@@ -7,8 +7,11 @@
 //!
 //! **Orientation:** `docs/ARCHITECTURE.md` (repo root) maps every paper
 //! section to its module, explains the three execution modes and diagrams
-//! the streamed dataflow; `docs/BENCH_SCHEMAS.md` documents the
-//! machine-readable perf reports. The modules:
+//! the streamed dataflow; `docs/PITO_PROGRAMS.md` is the Pito program
+//! contract — the ISA subset, CSR map and DRAM flag-sync protocol the code
+//! generator emits, with annotated serial and streamed listings;
+//! `docs/BENCH_SCHEMAS.md` documents the machine-readable perf reports.
+//! The modules:
 //!
 //! * [`quant`] — fixed-point numerics, bit-plane packing and the paper's
 //!   bit-transposed memory format (Fig. 3).

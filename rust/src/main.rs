@@ -8,7 +8,13 @@
 //! * `census`                  — Fig. 2 channel census
 //! * `estimate <cnv|resnet50>` — Table 5/6 throughput estimates
 //! * `asm <file.s>`            — assemble a Pito program, print words
-//! * `disasm <hex words...>`   — disassemble
+//! * `disasm <hex words...>`   — disassemble raw words; or
+//!   `disasm --model resnet9 [--wbits N --abits N --stream --frames N]`
+//!                             — print the annotated generated Pito
+//!                               program for a zoo model (serial, or the
+//!                               streamed multi-frame program with
+//!                               `--stream`) — the source of the committed
+//!                               `docs/listings/*.s`
 //! * `run [--model resnet9|resnet18 --wbits N --abits N --images N
 //!        --exec cycle|turbo --mode pipelined|distributed|multipass|auto
 //!        --stream]`
@@ -23,7 +29,7 @@
 //!                               fill/steady/drain pipeline accounting)
 //! * `check [--model resnet9|resnet18 --wbits N --abits N
 //!          --mode pipelined|distributed|multipass|auto --level quick|full
-//!          --weight-depth N --json]`
+//!          --weight-depth N --stream --frames N --json]`
 //!                             — static program verifier: abstract-interpret
 //!                               the compiled plan and prove address bounds,
 //!                               def-before-use, stream-race freedom, sync
@@ -93,9 +99,16 @@ fn help() {
     println!(
         "barvinn — arbitrary-precision DNN accelerator (BARVINN reproduction)\n\
          usage: barvinn <info|cycles|census|estimate|asm|disasm|run|check|bench-serve> [args]\n\
+         disasm flags: <hex words...> to disassemble raw words, or\n\
+                    --model resnet9 --wbits N --abits N [--stream --frames N]\n\
+                    (print the annotated generated Pito program; --stream\n\
+                    prints the multi-frame streamed program)\n\
          check flags: --model resnet9|resnet18 --wbits N --abits N\n\
                     --mode pipelined|distributed|multipass|auto --level quick|full\n\
                     --weight-depth N (default 8192 words, the serving geometry)\n\
+                    --stream --frames N (also verify the generated streamed\n\
+                    multi-frame program: flag-protocol liveness and launch\n\
+                    parity proven from the instruction stream)\n\
                     --json (machine-readable barvinn.verify/v1 report)\n\
                     (static verifier: prove the compiled command stream safe —\n\
                     address bounds, def-before-use, stream races, sync liveness,\n\
@@ -288,9 +301,54 @@ fn asm(args: &[String]) {
 }
 
 fn disasm(args: &[String]) {
+    if args.iter().any(|a| a == "--model") {
+        disasm_model(args);
+        return;
+    }
     for a in args {
         let w = u32::from_str_radix(a.trim_start_matches("0x"), 16).expect("hex word");
         println!("{:08x}  {}", w, barvinn::pito::disassemble(w));
+    }
+}
+
+/// `disasm --model`: print the annotated generated Pito program for a zoo
+/// model — the serial per-image program, or with `--stream` the streamed
+/// multi-frame program for `--frames` frames in flight. This is the exact
+/// text committed under `docs/listings/` and freshness-gated by
+/// `tools/check-listings.sh` in CI.
+fn disasm_model(args: &[String]) {
+    let wb = parse_flag(args, "--wbits", 2) as u8;
+    let ab = parse_flag(args, "--abits", 2) as u8;
+    let model_name =
+        parse_str_flag(args, "--model", "resnet9|resnet18").unwrap_or_else(|| "resnet9".into());
+    let m = match zoo::model_by_name(&model_name, ab, wb) {
+        Some(m) => m,
+        None => {
+            eprintln!(
+                "unknown model '{model_name}' ({})",
+                zoo::executable_model_names().join("|")
+            );
+            std::process::exit(2);
+        }
+    };
+    let c = match compile_pipelined(&m, EdgePolicy::PadInRam) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{model_name} failed to compile as a pipelined plan: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.iter().any(|a| a == "--stream") {
+        let frames = parse_flag(args, "--frames", 8) as usize;
+        match c.stream_program(frames) {
+            Ok(sp) => print!("{}", sp.asm),
+            Err(e) => {
+                eprintln!("streamed program generation failed: {e}");
+                std::process::exit(2);
+            }
+        }
+    } else {
+        print!("{}", c.asm);
     }
 }
 
@@ -453,6 +511,8 @@ fn check(args: &[String]) {
         }
     };
     let json = args.iter().any(|a| a == "--json");
+    let stream = args.iter().any(|a| a == "--stream");
+    let frames = parse_flag(args, "--frames", 8) as usize;
     let model_name =
         parse_str_flag(args, "--model", "resnet9|resnet18").unwrap_or_else(|| "resnet9".into());
     let m = match zoo::model_by_name(&model_name, ab, wb) {
@@ -494,7 +554,12 @@ fn check(args: &[String]) {
             c.check_fits(&cfg)
                 .and_then(|()| c.check_fits_streamed(&cfg))
                 .unwrap_or_else(|e| fail_compile("pipelined plan", &e));
-            (analysis::verify_pipelined(&c, &m, &cfg, level), "pipelined")
+            let r = if stream {
+                analysis::verify_streamed(&c, &m, &cfg, frames, level)
+            } else {
+                analysis::verify_pipelined(&c, &m, &cfg, level)
+            };
+            (r, "pipelined")
         }
         ExecutionMode::MultiPass => {
             let p = compile_multi_pass(&m, policy)
@@ -502,9 +567,18 @@ fn check(args: &[String]) {
             p.check_fits(&cfg)
                 .and_then(|()| p.check_fits_streamed(&cfg))
                 .unwrap_or_else(|e| fail_compile("multi-pass plan", &e));
-            (analysis::verify_multi_pass(&p, &m, &cfg, level), "multipass")
+            let r = if stream {
+                analysis::verify_multi_pass_streamed(&p, &m, &cfg, frames, level)
+            } else {
+                analysis::verify_multi_pass(&p, &m, &cfg, level)
+            };
+            (r, "multipass")
         }
         ExecutionMode::Distributed => {
+            if stream {
+                eprintln!("--stream applies to pipelined/multipass plans only");
+                std::process::exit(2);
+            }
             // The session restricts distributed mode to single-layer models;
             // `check` verifies a distributed mapping of EVERY layer
             // independently, folding the per-layer reports into one.
@@ -530,8 +604,9 @@ fn check(args: &[String]) {
     if json {
         println!("{}", report.to_json());
     } else {
+        let streamed = if stream { format!(" streamed x{frames} frames") } else { String::new() };
         println!(
-            "{model_name} {wb}b weights / {ab}b activations, {mode_str} mode, \
+            "{model_name} {wb}b weights / {ab}b activations, {mode_str} mode{streamed}, \
              {} verification: {} job(s), {} lap(s), {} hart walk(s) checked",
             level.as_str(),
             report.jobs_checked,

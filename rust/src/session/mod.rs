@@ -226,6 +226,22 @@ impl From<RuntimeError> for SessionError {
     }
 }
 
+/// Which engine drives a streamed pipelined batch
+/// ([`InferenceSession::run_stream`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamDriver {
+    /// Resolve by backend: the generated multi-frame Pito program under
+    /// the cycle-accurate backend (the modelled CPU executes the whole
+    /// overlap), host-driven lap replay under turbo (the serving fast
+    /// path). Outputs and cycle books are bit-identical either way.
+    #[default]
+    Auto,
+    /// Always execute the generated streamed program on the modelled CPU.
+    Program,
+    /// Always replay the [`StreamSchedule`] laps from the host.
+    HostLaps,
+}
+
 /// Builder for an [`InferenceSession`].
 pub struct SessionBuilder {
     model: Model,
@@ -238,6 +254,7 @@ pub struct SessionBuilder {
     artifacts: Option<ArtifactStore>,
     host_input_shape: Vec<i64>,
     verify: VerifyLevel,
+    stream_driver: StreamDriver,
 }
 
 impl SessionBuilder {
@@ -256,6 +273,7 @@ impl SessionBuilder {
             artifacts: None,
             host_input_shape: vec![1, 3, 32, 32],
             verify: VerifyLevel::default(),
+            stream_driver: StreamDriver::default(),
         }
     }
 
@@ -328,6 +346,18 @@ impl SessionBuilder {
     /// against captured job traces.
     pub fn verify(mut self, level: VerifyLevel) -> Self {
         self.verify = level;
+        self
+    }
+
+    /// Which engine drives streamed batches (defaults to
+    /// [`StreamDriver::Auto`]): the generated multi-frame Pito program on
+    /// the cycle-accurate backend, host-driven lap replay on turbo.
+    /// Override to pin one engine — e.g. [`StreamDriver::Program`] under
+    /// turbo to exercise the program path fast, or
+    /// [`StreamDriver::HostLaps`] under the stepper to reproduce the PR 5
+    /// lap-replay timing.
+    pub fn stream_driver(mut self, driver: StreamDriver) -> Self {
+        self.stream_driver = driver;
         self
     }
 
@@ -448,6 +478,8 @@ impl SessionBuilder {
             total_bottleneck_cycles: 0,
             streamed_images: 0,
             total_pipeline_cycles: 0,
+            stream_driver: self.stream_driver,
+            stream_program_resident: false,
         })
     }
 }
@@ -593,8 +625,11 @@ pub struct StreamMetrics {
     /// totals, summed.
     pub serial_cycles: u64,
     /// Wall cycles the system clock actually advanced executing the batch.
-    /// Equals `pipeline_cycles` under turbo laps; the cycle-accurate
-    /// backend adds short crossbar-drain tails between laps.
+    /// Equals `pipeline_cycles` under turbo laps; host-driven
+    /// cycle-accurate laps add short crossbar-drain tails between laps,
+    /// and the program-driven engine ([`StreamDriver::Program`])
+    /// additionally books the modelled CPU's flag-spin and launch
+    /// overhead. Every other field is engine-invariant.
     pub measured_cycles: u64,
 }
 
@@ -671,6 +706,10 @@ pub struct InferenceSession {
     total_bottleneck_cycles: u64,
     streamed_images: u64,
     total_pipeline_cycles: u64,
+    stream_driver: StreamDriver,
+    /// A program-driven streamed batch left its multi-frame program in
+    /// IRAM; the next serial `run()` must re-load the serial program.
+    stream_program_resident: bool,
 }
 
 impl InferenceSession {
@@ -808,6 +847,12 @@ impl InferenceSession {
         // Re-arm the per-image budget: a preceding streamed batch ran the
         // system under the whole-batch cap (`fuel × frames`).
         self.sys.set_max_cycles(self.fuel);
+        if self.stream_program_resident {
+            if let Program::Pipelined(c) = &self.program {
+                self.sys.load_program(&c.program);
+            }
+            self.stream_program_resident = false;
+        }
         match &self.program {
             Program::Pipelined(c) => c.load_input(&mut self.sys, input),
             Program::Distributed(p) => p.load_input(&mut self.sys, input),
@@ -900,6 +945,18 @@ impl InferenceSession {
     /// processes frame `i`, stage `k−1` already processes frame `i+1`,
     /// over double-buffered activation regions (even frames in buffer 0,
     /// odd in buffer 1) so in-flight frames never clobber each other.
+    ///
+    /// Two engines can drive that overlap ([`SessionBuilder::stream_driver`]):
+    /// under the cycle-accurate backend the session executes the
+    /// **generated multi-frame Pito program**
+    /// ([`CompiledModel::stream_program`]) — the parity discipline and all
+    /// fill/drain synchronisation live in the instruction stream, the host
+    /// only staging inputs and reading outputs at the DRAM flag protocol's
+    /// pace, exactly the paper's control model; under turbo the host
+    /// replays the [`StreamSchedule`] laps directly (the serving fast
+    /// path). Outputs and per-frame cycle books are bit-identical across
+    /// drivers; only [`StreamMetrics::measured_cycles`] is path-dependent
+    /// (the program-driven wall includes the CPU's launch overhead).
     /// Multi-pass sessions stream the whole batch *within* each pass — a
     /// further win: each pass's weights are reloaded once per batch
     /// instead of once per image. Distributed sessions have nothing to
@@ -930,13 +987,21 @@ impl InferenceSession {
         }
         let exec = self.sys.exec_mode();
         let fuel = self.fuel;
+        // Which engine executes the overlap: the generated multi-frame
+        // Pito program on the modelled CPU, or host-driven lap replay.
+        let program_driven = match self.stream_driver {
+            StreamDriver::Auto => exec == ExecMode::CycleAccurate,
+            StreamDriver::Program => true,
+            StreamDriver::HostLaps => false,
+        };
         let (raw, stream) = match &self.program {
             Program::Pipelined(c) => {
                 c.check_fits_streamed(&self.mvu_cfg)?;
                 self.sys.reset_run_state();
                 self.sys.set_max_cycles(fuel.saturating_mul(inputs.len() as u64));
                 let co = self.model.layers.last().unwrap().co;
-                let (mut raw, stream) = stream_compiled(&mut self.sys, c, inputs, co, fuel)?;
+                let (mut raw, stream) =
+                    stream_compiled(&mut self.sys, c, inputs, co, fuel, program_driven)?;
                 // Serial pipelined runs report one entry per MVU (trailing
                 // zeros for unused stages); match that shape bit-for-bit.
                 for (_, cycles) in &mut raw {
@@ -946,10 +1011,16 @@ impl InferenceSession {
             }
             Program::MultiPass(p) => {
                 p.check_fits_streamed(&self.mvu_cfg)?;
-                stream_multi_pass(&mut self.sys, p, &self.model, inputs, fuel)?
+                stream_multi_pass(&mut self.sys, p, &self.model, inputs, fuel, program_driven)?
             }
             Program::Distributed(_) => unreachable!("serial fallback handled above"),
         };
+        // The streamed program (not the serial one) is now resident in
+        // IRAM; the next serial run reloads. Multi-pass serial runs reload
+        // per pass anyway, but the flag is cheap and uniform.
+        if program_driven {
+            self.stream_program_resident = true;
+        }
         let mut outputs = Vec::with_capacity(raw.len());
         for (output, mvu_cycles) in raw {
             let total_mvu_cycles: u64 = mvu_cycles.iter().sum();
@@ -1153,7 +1224,11 @@ fn stream_compiled(
     inputs: &[Tensor3],
     out_co: usize,
     fuel_report: u64,
+    program_driven: bool,
 ) -> Result<(FrameResults, StreamMetrics), SessionError> {
+    if program_driven {
+        return stream_program_exec(sys, c, inputs, out_co, fuel_report);
+    }
     let stages = c.plans.len();
     let frames = inputs.len();
     let sched = StreamSchedule::new(c.stage_cycles(), frames);
@@ -1214,6 +1289,136 @@ fn stream_compiled(
     Ok((raw, stream))
 }
 
+/// Execute a streamed batch by running the **generated multi-frame Pito
+/// program** on the modelled CPU ([`CompiledModel::stream_program`]): the
+/// frames-in-flight overlap falls out of the per-row DRAM flag protocol in
+/// the instruction stream, not host scheduling. The host's only runtime
+/// role is the DMA the paper gives it — stage inputs into the free parity
+/// buffer (bumping `HOST_IN_FLAG`), read retired outputs (bumping
+/// `HOST_OUT_FLAG`) — serviced once per modelled cycle between
+/// [`System::poll_step`]s.
+///
+/// Accounting stays bit-identical to the host-lap driver: each frame's
+/// per-stage cycles book the analytic per-layer model, which is exactly
+/// what the MVUs execute (`debug_assert`ed against the busy counters —
+/// `frames × analytic` per stage). The [`StreamSchedule`] lap model is
+/// demoted to a cross-check: the executed wall can never beat the
+/// bottleneck bound. `measured_cycles` is the one path-dependent field —
+/// the program-driven wall includes the CPU's launch overhead.
+fn stream_program_exec(
+    sys: &mut System,
+    c: &CompiledModel,
+    inputs: &[Tensor3],
+    out_co: usize,
+    fuel_report: u64,
+) -> Result<(FrameResults, StreamMetrics), SessionError> {
+    use crate::codegen::{frame_flag_addr, HOST_IN_FLAG, HOST_OUT_FLAG};
+    let stages = c.plans.len();
+    let frames = inputs.len();
+    let sp = c.stream_program(frames).map_err(SessionError::Compile)?;
+    sys.load_program(&sp.program);
+    let cycles0 = sys.cycles();
+    #[cfg(debug_assertions)]
+    let busy0: Vec<u64> = sys.mvus.iter().map(|m| m.busy_cycles()).collect();
+
+    // Stage up to both parity buffers before releasing the CPU.
+    let mut next_in = 0;
+    while next_in < frames.min(2) {
+        c.load_input_parity(sys, &inputs[next_in], next_in % 2);
+        next_in += 1;
+    }
+    sys.cpu.write_dram(HOST_IN_FLAG, &(next_in as i32).to_le_bytes());
+
+    let stage_book = c.stage_cycles();
+    let mut raw: FrameResults = Vec::with_capacity(frames);
+    sys.begin_run();
+    let exit = loop {
+        // Input parity `next_in % 2` is free once stage 0 has retired
+        // frame `next_in − 2` (FRAMES[0] >= next_in − 1).
+        if next_in < frames
+            && sys.cpu.read_dram_word(frame_flag_addr(0)) as i32 >= next_in as i32 - 1
+        {
+            c.load_input_parity(sys, &inputs[next_in], next_in % 2);
+            next_in += 1;
+            sys.cpu.write_dram(HOST_IN_FLAG, &(next_in as i32).to_le_bytes());
+        }
+        // A frame is readable once the last stage retires it, and must be
+        // read before that stage starts frame f + 2 (which reuses the
+        // buffer) — the program waits on HOST_OUT for exactly that.
+        if raw.len() < frames
+            && sys.cpu.read_dram_word(frame_flag_addr(stages - 1)) as i32
+                >= raw.len() as i32 + 1
+        {
+            let f = raw.len();
+            let out = c.read_output_parity(sys, out_co, f % 2);
+            raw.push((out, stage_book.clone()));
+            sys.cpu.write_dram(HOST_OUT_FLAG, &(raw.len() as i32).to_le_bytes());
+        }
+        if let Some(exit) = sys.poll_step() {
+            break exit;
+        }
+    };
+    match exit {
+        SystemExit::Done | SystemExit::AllExited => {}
+        SystemExit::MaxCycles => return Err(SessionError::FuelExhausted { fuel: fuel_report }),
+        SystemExit::Deadlock => {
+            if !sys.launch_errors().is_empty() {
+                return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+            }
+            return Err(SessionError::Deadlock);
+        }
+        SystemExit::Fault { hart, trap } => {
+            if !sys.launch_errors().is_empty() {
+                return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+            }
+            return Err(SessionError::Fault { hart, trap });
+        }
+    }
+    if !sys.launch_errors().is_empty() {
+        return Err(SessionError::Launch(sys.launch_errors().to_vec()));
+    }
+    // Frames that retired after the last pre-exit service pass.
+    while raw.len() < frames {
+        let f = raw.len();
+        let out = c.read_output_parity(sys, out_co, f % 2);
+        raw.push((out, stage_book.clone()));
+    }
+    // The program drove exactly the plans' job streams, `frames` times
+    // each — same busy totals as `frames` serial runs or the lap replay.
+    #[cfg(debug_assertions)]
+    for plan in &c.plans {
+        debug_assert_eq!(
+            sys.mvus[plan.mvu].busy_cycles() - busy0[plan.mvu],
+            plan.analytic_cycles * frames as u64,
+            "program-driven stream booked wrong cycles on MVU {}",
+            plan.mvu
+        );
+    }
+    let measured = sys.cycles() - cycles0;
+    let sched = StreamSchedule::new(c.stage_cycles(), frames);
+    // Lap-model cross-check: one frame per bottleneck lap is the floor
+    // (only under the stepper — turbo completes jobs in zero wall cycles).
+    if sys.exec_mode() == ExecMode::CycleAccurate {
+        debug_assert!(
+            measured >= sched.bottleneck_cycles().saturating_mul(frames as u64),
+            "program-driven wall {measured} beats the lap-model bottleneck bound"
+        );
+    }
+    let cyc = sched.cycles();
+    let stream = StreamMetrics {
+        frames: frames as u64,
+        stages,
+        fill_cycles: cyc.fill,
+        steady_cycles: cyc.steady,
+        drain_cycles: cyc.drain,
+        pipeline_cycles: cyc.total(),
+        bottleneck_cycles: sched.bottleneck_cycles(),
+        serial_cycles: sched.serial_cycles_per_frame() * frames as u64,
+        measured_cycles: measured,
+    };
+    Ok((raw, stream))
+}
+
 /// Stream a batch through a multi-pass program: per pass, reset run state,
 /// re-arm the *remaining* batch fuel, reload that pass's weights and
 /// program **once for the whole batch** (serial multi-pass pays the reload
@@ -1228,6 +1433,7 @@ fn stream_multi_pass(
     model: &Model,
     inputs: &[Tensor3],
     fuel_report: u64,
+    program_driven: bool,
 ) -> Result<(FrameResults, StreamMetrics), SessionError> {
     let frames = inputs.len();
     let cap = fuel_report.saturating_mul(frames as u64);
@@ -1244,7 +1450,7 @@ fn stream_multi_pass(
         pass.load_weights(sys);
         let (_, end) = plan.ranges[p];
         let co = model.layers[end - 1].co;
-        let (outs, s) = stream_compiled(sys, pass, &carried, co, fuel_report)?;
+        let (outs, s) = stream_compiled(sys, pass, &carried, co, fuel_report, program_driven)?;
         spent += sys.cycles();
         agg.stages = agg.stages.max(s.stages);
         agg.fill_cycles += s.fill_cycles;
@@ -1793,6 +1999,82 @@ mod tests {
             assert_eq!(s.bottleneck_cycles, 2 * per_layer, "uniform layers: one per pass");
             assert!(s.speedup() > 1.0, "{exec:?}: {}", s.speedup());
         }
+    }
+
+    /// The two streamed engines are interchangeable: the generated
+    /// multi-frame program executed on the modelled CPU
+    /// (`StreamDriver::Program`, the cycle-accurate default) produces the
+    /// same outputs, per-frame cycle books, stream accounting and final
+    /// activation-RAM contents as the host-driven lap replay
+    /// (`StreamDriver::HostLaps` forced onto the same backend). Only
+    /// `measured_cycles` may differ — the program-driven wall includes the
+    /// CPU's flag-spin and launch overhead.
+    #[test]
+    fn stream_driver_program_matches_host_laps() {
+        let m = tiny_resnet9();
+        let mut prog = SessionBuilder::new(m.clone())
+            .exec_mode(ExecMode::CycleAccurate)
+            .stream_driver(StreamDriver::Program)
+            .build()
+            .unwrap();
+        let mut host = SessionBuilder::new(m.clone())
+            .exec_mode(ExecMode::CycleAccurate)
+            .stream_driver(StreamDriver::HostLaps)
+            .build()
+            .unwrap();
+        let inputs: Vec<Tensor3> = (0..3).map(|s| random_input(&m, 70 + s)).collect();
+        let a = prog.run_stream(&inputs).unwrap();
+        let b = host.run_stream(&inputs).unwrap();
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for (i, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+            assert_eq!(x.output, y.output, "frame {i} output");
+            assert_eq!(x.mvu_cycles, y.mvu_cycles, "frame {i} cycle book");
+            assert_eq!(x.output, golden_forward(&m, &inputs[i]), "frame {i} golden");
+        }
+        let (s, t) = (&a.stream, &b.stream);
+        assert_eq!(s.frames, t.frames);
+        assert_eq!(s.stages, t.stages);
+        assert_eq!(s.fill_cycles, t.fill_cycles);
+        assert_eq!(s.steady_cycles, t.steady_cycles);
+        assert_eq!(s.drain_cycles, t.drain_cycles);
+        assert_eq!(s.pipeline_cycles, t.pipeline_cycles);
+        assert_eq!(s.bottleneck_cycles, t.bottleneck_cycles);
+        assert_eq!(s.serial_cycles, t.serial_cycles);
+        assert!(s.measured_cycles >= s.pipeline_cycles, "wall below the lap model");
+        // The engines leave every activation RAM word-for-word identical —
+        // same double-buffer parity discipline, down to the last frame's
+        // residue.
+        for (h, (pm, hm)) in prog.sys.mvus.iter().zip(&host.sys.mvus).enumerate() {
+            assert_eq!(pm.act.depth(), hm.act.depth());
+            for addr in 0..pm.act.depth() as u32 {
+                assert_eq!(pm.act.read(addr), hm.act.read(addr), "mvu {h} act word {addr}");
+            }
+        }
+    }
+
+    /// A program-driven streamed batch leaves the multi-frame program
+    /// resident in IRAM; interleaved serial `run()`s must transparently
+    /// restore the serial program (and vice versa).
+    #[test]
+    fn serial_runs_interleave_with_program_driven_streams() {
+        let m = tiny_resnet9();
+        let mut session = SessionBuilder::new(m.clone())
+            .exec_mode(ExecMode::CycleAccurate)
+            .stream_driver(StreamDriver::Program)
+            .build()
+            .unwrap();
+        let inputs: Vec<Tensor3> = (0..2).map(|s| random_input(&m, 80 + s)).collect();
+        let batch = session.run_stream(&inputs).unwrap();
+        assert_eq!(batch.outputs[1].output, golden_forward(&m, &inputs[1]));
+        let input = random_input(&m, 90);
+        let serial = session.run(&input).unwrap();
+        assert_eq!(serial.output, golden_forward(&m, &input), "serial after stream");
+        let batch2 = session.run_stream(&inputs).unwrap();
+        assert_eq!(
+            batch2.outputs[0].output,
+            golden_forward(&m, &inputs[0]),
+            "stream after serial"
+        );
     }
 
     /// Streamed fuel is a batch budget (`fuel × frames`), honoured across

@@ -206,3 +206,44 @@ fn mixed_precision_pipeline() {
     let c22 = compile_pipelined(&m22, EdgePolicy::PadInRam).unwrap();
     assert_eq!(out.total_mvu_cycles * 2, c22.total_analytic_cycles());
 }
+
+/// The streamed-program acceptance test at ResNet-9 scale: the generated
+/// multi-frame Pito program, executed natively on the cycle-accurate
+/// backend (`StreamDriver::Program` — the cycle-accurate default), agrees
+/// bit-for-bit with the host-driven lap replay and the golden reference on
+/// every frame, per-layer cycle books included.
+#[test]
+fn resnet9_streamed_program_bit_exact() {
+    use barvinn::session::StreamDriver;
+    let m = model_under_test();
+    let inputs: Vec<Tensor3> = (0..3).map(|s| random_input(&m, 500 + s)).collect();
+    let mut run_with = |driver: StreamDriver| {
+        let mut s = SessionBuilder::new(m.clone())
+            .edge_policy(EdgePolicy::PadInRam)
+            .exec_mode(ExecMode::CycleAccurate)
+            .stream_driver(driver)
+            .build()
+            .unwrap();
+        s.run_stream(&inputs).unwrap()
+    };
+    let prog = run_with(StreamDriver::Program);
+    let host = run_with(StreamDriver::HostLaps);
+    for (f, input) in inputs.iter().enumerate() {
+        assert_eq!(
+            prog.outputs[f].output,
+            golden_forward(&m, input),
+            "frame {f}: program-driven != golden"
+        );
+        assert_eq!(
+            prog.outputs[f].output, host.outputs[f].output,
+            "frame {f}: engines disagree"
+        );
+        assert_eq!(
+            prog.outputs[f].mvu_cycles, host.outputs[f].mvu_cycles,
+            "frame {f}: cycle books disagree"
+        );
+    }
+    assert_eq!(prog.stream.frames, 3);
+    assert_eq!(prog.stream.pipeline_cycles, host.stream.pipeline_cycles);
+    assert_eq!(prog.stream.serial_cycles, host.stream.serial_cycles);
+}

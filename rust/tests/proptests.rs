@@ -836,6 +836,78 @@ fn threaded_streamed_turbo_is_bit_identical_to_single_threaded() {
     }
 }
 
+/// The streamed-engine equivalence property: the generated multi-frame
+/// Pito program executed on the modelled CPU (`StreamDriver::Program` —
+/// per-row flag-wait/flag-bump sync and odd/even parity selection encoded
+/// in the instruction stream) is bit-identical to the host-driven
+/// `StreamSchedule` lap replay (`StreamDriver::HostLaps`) on the same
+/// cycle-accurate backend, across random 2–8-deep chains of random
+/// 1–8-bit per-layer precisions: per-frame outputs, per-layer cycle books
+/// and every stream-accounting field except the measured wall (the
+/// program-driven wall additionally books the CPU's flag-spin and launch
+/// overhead).
+#[test]
+fn streamed_program_and_host_lap_replay_are_bit_identical() {
+    use barvinn::exec::ExecMode;
+    use barvinn::session::{SessionBuilder, StreamDriver};
+
+    let mut rng = Rng(0x9B0C);
+    let (cases, h, frames) =
+        if cfg!(debug_assertions) { (2u64, 4usize, 3usize) } else { (6, 6, 4) };
+    for case in 0..cases {
+        let depth = 2 + (rng.next_u64() % 7) as usize; // 2..=8: one pipelined pass
+        let model = random_chain_model(&mut rng, 4000 + case, depth, h);
+        let l0 = &model.layers[0];
+        let inputs: Vec<Tensor3> = (0..frames)
+            .map(|_| {
+                Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+                    rng.range_i32(0, l0.aprec.max_value())
+                })
+            })
+            .collect();
+
+        let mut run_with = |driver: StreamDriver| {
+            let mut s = SessionBuilder::new(model.clone())
+                .edge_policy(EdgePolicy::PadInRam)
+                .exec_mode(ExecMode::CycleAccurate)
+                .stream_driver(driver)
+                .build()
+                .unwrap_or_else(|e| panic!("case {case} depth {depth} ({driver:?}): {e}"));
+            s.run_stream(&inputs)
+                .unwrap_or_else(|e| panic!("case {case} depth {depth} ({driver:?}): {e}"))
+        };
+        let a = run_with(StreamDriver::Program);
+        let b = run_with(StreamDriver::HostLaps);
+
+        assert_eq!(a.outputs.len(), b.outputs.len(), "case {case}");
+        for (f, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+            assert_eq!(x.output, y.output, "case {case} frame {f}: outputs diverged");
+            assert_eq!(
+                x.mvu_cycles, y.mvu_cycles,
+                "case {case} frame {f}: per-layer cycle books diverged"
+            );
+            assert_eq!(
+                x.output,
+                model.golden_forward(&inputs[f]),
+                "case {case} frame {f}: != golden"
+            );
+        }
+        let (s, t) = (a.stream, b.stream);
+        assert_eq!(s.frames, t.frames, "case {case}");
+        assert_eq!(s.stages, t.stages, "case {case}");
+        assert_eq!(s.fill_cycles, t.fill_cycles, "case {case}");
+        assert_eq!(s.steady_cycles, t.steady_cycles, "case {case}");
+        assert_eq!(s.drain_cycles, t.drain_cycles, "case {case}");
+        assert_eq!(s.pipeline_cycles, t.pipeline_cycles, "case {case}");
+        assert_eq!(s.bottleneck_cycles, t.bottleneck_cycles, "case {case}");
+        assert_eq!(s.serial_cycles, t.serial_cycles, "case {case}");
+        assert!(
+            s.measured_cycles >= s.bottleneck_cycles * frames as u64,
+            "case {case}: program-driven wall beat one frame per bottleneck lap"
+        );
+    }
+}
+
 /// The checker-vs-runtime agreement property: every random chain model the
 /// static verifier admits (at Full level, symbolic bounds cross-checked
 /// against captured traces) runs clean end-to-end against the golden

@@ -230,3 +230,76 @@ fn json_report_follows_the_verify_v1_schema() {
     assert!(dirty.contains("\"code\":\"ADDR-OOB\""), "{dirty}");
     assert!(dirty.contains("\"diagnostics\":["), "{dirty}");
 }
+
+/// The *streamed* multi-frame programs of the zoo verify clean: the
+/// cross-frame flag protocol is proven live (with the host flags seeded at
+/// their end-of-batch values) and every `START`'s snapshotted bases follow
+/// the odd/even parity discipline, frame by frame, read off the
+/// instruction stream itself.
+#[test]
+fn streamed_zoo_programs_verify_clean() {
+    use barvinn::analysis::{verify_multi_pass_streamed, verify_streamed};
+    let cfg = MvuConfig::default();
+    for (wb, ab) in [(2u8, 2u8), (4, 4)] {
+        let m9 = zoo::model_by_name("resnet9", ab, wb).unwrap();
+        let c = compile_pipelined(&m9, POLICY).unwrap();
+        let r = verify_streamed(&c, &m9, &cfg, 8, VerifyLevel::Quick);
+        assert!(r.is_clean(), "resnet9 {wb}w/{ab}a streamed: {:?}", r.diagnostics);
+        // The serial program and the multi-frame program are each walked.
+        assert_eq!(r.harts_checked, 2 * barvinn::NUM_MVUS);
+    }
+    let m18 = zoo::model_by_name("resnet18", 2, 2).unwrap();
+    let p = compile_multi_pass(&m18, POLICY).unwrap();
+    let r = verify_multi_pass_streamed(&p, &m18, &cfg, 4, VerifyLevel::Quick);
+    assert!(r.is_clean(), "resnet18 multipass streamed: {:?}", r.diagnostics);
+    assert_eq!(r.harts_checked, 4 * barvinn::NUM_MVUS, "two passes, two walks each");
+}
+
+/// Fault injection on the streamed program *text*: each mutation patches
+/// exactly one instruction of the generated assembly, reassembles, and
+/// the verifier rejects the image with the stable code naming the broken
+/// invariant — a dropped cross-frame bump is a liveness hole, a flattened
+/// parity dispatch is a double-buffer violation.
+#[test]
+fn streamed_program_faults_are_typed() {
+    use barvinn::analysis::verify_stream_program;
+    use barvinn::pito::assemble;
+
+    let m = tiny_model(); // two stages: hart 0 feeds hart 1
+    let c = compile_pipelined(&m, POLICY).unwrap();
+    let frames = 3; // >= 3 so the f-1 anti-dependence waits are non-trivial
+    let sp = c.stream_program(frames).unwrap();
+
+    // The unmutated image round-trips clean through the public seam.
+    let r = verify_stream_program(&c, &sp.program, frames, VerifyLevel::Quick);
+    assert!(r.is_clean(), "{:?}", r.diagnostics);
+
+    // Patch the first (hart 0) or last (hart 1) occurrence of a marker.
+    let mutate = |last: bool, from: &str, to: &str| -> Vec<u32> {
+        let pos = if last { sp.asm.rfind(from) } else { sp.asm.find(from) }
+            .unwrap_or_else(|| panic!("marker `{from}` not in the streamed program"));
+        let mut patched = sp.asm.clone();
+        patched.replace_range(pos..pos + from.len(), to);
+        assert_ne!(patched, sp.asm);
+        assemble(&patched).expect("mutated program still assembles")
+    };
+
+    // Nop hart 1's frame-retire bump: hart 0's anti-dependence wait on
+    // FRAMES[1] >= f-1 can never be satisfied past the double buffer.
+    let dropped_frame = mutate(true, "sw    s9, 0(t3)", "nop");
+    let r = verify_stream_program(&c, &dropped_frame, frames, VerifyLevel::Quick);
+    assert!(r.has(DiagCode::SyncLiveness), "expected SYNC-LIVENESS, got {:?}", r.diagnostics);
+
+    // Nop hart 0's cumulative row bump: hart 1's first row wait spins on a
+    // flag that plateaus at zero.
+    let dropped_row = mutate(false, "sw    s11, 0(t3)", "nop");
+    let r = verify_stream_program(&c, &dropped_row, frames, VerifyLevel::Quick);
+    assert!(r.has(DiagCode::SyncLiveness), "expected SYNC-LIVENESS, got {:?}", r.diagnostics);
+
+    // Flatten hart 0's parity dispatch: every frame launches the
+    // even-parity bases — perfectly live, but frame 1's launches diverge
+    // from the odd-parity plan.
+    let flat_parity = mutate(false, "andi  t1, s9, 1", "li    t1, 0");
+    let r = verify_stream_program(&c, &flat_parity, frames, VerifyLevel::Quick);
+    assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
+}

@@ -1,0 +1,76 @@
+#!/usr/bin/env sh
+# Freshness gate for the committed Pito program listings in docs/listings/.
+#
+# Each listing is the verbatim stdout of a `barvinn disasm --model ...`
+# invocation; the generators are deterministic, so a byte-for-byte diff
+# is exact. Modes:
+#
+#   tools/check-listings.sh            compare committed vs regenerated;
+#                                      fail on drift (stale listing)
+#   tools/check-listings.sh --update   regenerate the listings in place
+#                                      (run after changing the emitters,
+#                                      then commit the result)
+#
+# A listing that has never been committed is *seeded* in place and
+# reported — commit the generated file to arm the gate for it. Set
+# BARVINN_BIN to skip the cargo build (CI reuses the release binary).
+# Run from the repo root. POSIX sh + cmp only.
+set -u
+
+update=0
+[ "${1:-}" = "--update" ] && update=1
+
+bin=${BARVINN_BIN:-}
+if [ -z "$bin" ]; then
+    cargo build --release --quiet || exit 1
+    bin=target/release/barvinn
+fi
+if [ ! -x "$bin" ]; then
+    echo "check-listings: barvinn binary not found at $bin" >&2
+    exit 1
+fi
+
+mkdir -p docs/listings
+tmp=$(mktemp)
+fail=0
+seeded=0
+trap 'rm -f "$tmp"' EXIT
+
+# listing file | disasm arguments
+set -- \
+    "resnet9_serial.s|--model resnet9 --wbits 2 --abits 2" \
+    "resnet9_stream.s|--model resnet9 --wbits 2 --abits 2 --stream --frames 8"
+
+for spec in "$@"; do
+    file=docs/listings/${spec%%|*}
+    args=${spec#*|}
+    # shellcheck disable=SC2086 # word-splitting the argument list is intended
+    if ! "$bin" disasm $args >"$tmp"; then
+        echo "check-listings: \`barvinn disasm $args\` failed" >&2
+        fail=1
+        continue
+    fi
+    if [ "$update" = 1 ] || [ ! -f "$file" ]; then
+        cp "$tmp" "$file"
+        if [ "$update" = 1 ]; then
+            echo "check-listings: regenerated $file"
+        else
+            echo "check-listings: seeded $file — commit it to arm the freshness gate" >&2
+            seeded=1
+        fi
+        continue
+    fi
+    if ! cmp -s "$file" "$tmp"; then
+        echo "check-listings: $file is stale (emitters changed?)" >&2
+        diff "$file" "$tmp" | head -20 >&2
+        echo "check-listings: run \`tools/check-listings.sh --update\` and commit" >&2
+        fail=1
+    fi
+done
+
+[ "$fail" = 1 ] && exit 1
+if [ "$seeded" = 1 ]; then
+    echo "listings: SEEDED (new files written; commit them)"
+    exit 0
+fi
+echo "listings: OK"
