@@ -35,9 +35,14 @@
 //! For streamed execution, [`verify_streamed`] extends checks 3 and 4 to
 //! the generated *multi-frame* program (`docs/PITO_PROGRAMS.md`): the
 //! cross-frame flag protocol is proven live with the host-owned flags
-//! seeded at their end-of-batch values, and the program's launch sequence
-//! — every `START` write's snapshotted base CSRs — is proven to follow the
-//! odd/even double-buffer parity discipline frame by frame.
+//! modelled as **monotone incremental posting** (bumped lazily from zero
+//! to the frame count — the weakest schedule continuous admission can
+//! follow, so closed batches and online admission are both covered), and
+//! the program's launch sequence — every `START` write's snapshotted base
+//! CSRs — is proven to follow the odd/even double-buffer parity
+//! discipline frame by frame. [`verify_host_posting`] additionally
+//! validates a concrete host admission schedule against the two-frame
+//! buffer contract before any simulated cycle.
 //!
 //! Every violation is a typed [`Diagnostic`] with a stable [`DiagCode`];
 //! [`VerifyReport::to_json`] renders the machine-readable report the
@@ -349,24 +354,102 @@ fn check_streamed_program(c: &CompiledModel, frames: usize, report: &mut VerifyR
     }
 }
 
-/// Liveness + launch-parity proof of one streamed program image. The walk
-/// seeds the two host-owned flags at their end-of-batch values (`frames`),
-/// which is sound for the monotone `>=` predicates generated programs use:
-/// the host flags only gate frame entry, never the values harts publish,
-/// so any schedule live under the seeded flags is live under every
-/// prefix-monotone host schedule.
+/// Liveness + launch-parity proof of one streamed program image. The two
+/// host-owned flags are modelled as monotone counters the host bumps
+/// incrementally from zero to `frames` — the simulation posts each bump
+/// lazily, only when the hart-to-hart protocol is otherwise stuck, so a
+/// clean proof covers *every* monotone posting schedule: the closed batch
+/// that pre-posts everything and continuous admission that releases one
+/// frame per `poll_step` service pass alike.
 fn check_stream_image(
     c: &CompiledModel,
     program: &[u32],
     frames: usize,
     report: &mut VerifyReport,
 ) {
-    let env = [
+    let host = [
         (crate::codegen::HOST_IN_FLAG, frames as i32),
         (crate::codegen::HOST_OUT_FLAG, frames as i32),
     ];
-    let launches = sync::check_program_env(program, &env, report);
+    let launches = sync::check_program_host(program, &host, report);
     stream::check_stream_program_launches(c, frames, &launches, report);
+}
+
+/// Statically validate a concrete host **admission schedule** for a
+/// streamed run of `frames` frames: `posting` is the successive values the
+/// host intends to write to `HOST_IN_FLAG`, one entry per write, in time
+/// order. The generated program's hart 0 treats the flag as a monotone
+/// admitted-frame count and the double buffer holds at most two staged
+/// frames, so a safe schedule must
+///
+/// 1. be monotone non-decreasing (a lower repost would un-admit a frame
+///    hart 0 may already be fetching) — violation: `SYNC-LIVENESS`;
+/// 2. start at most 2 ahead and grow by at most 1 per write, and never
+///    claim more frames than the feed holds (each bump past that stages a
+///    frame into a parity buffer whose previous occupant the host cannot
+///    yet have observed retiring) — violation: `STREAM-PARITY`;
+/// 3. end at `frames` (anything less starves hart 0's entry wait forever)
+///    — violation: `SYNC-LIVENESS`.
+///
+/// `session::run_continuous` checks its own posting through this before
+/// releasing the CPU; fault-injection tests feed it broken schedules.
+pub fn verify_host_posting(frames: usize, posting: &[i32], level: VerifyLevel) -> VerifyReport {
+    let mut report = VerifyReport::new(level);
+    if level == VerifyLevel::Off {
+        return report;
+    }
+    let mut diag = |code: DiagCode, message: String| {
+        report.diagnostics.push(Diagnostic { code, mvu: None, layer: None, message });
+    };
+    let cap = frames.min(2) as i32;
+    let mut prev = 0i32;
+    for (i, &v) in posting.iter().enumerate() {
+        if v < prev {
+            diag(
+                DiagCode::SyncLiveness,
+                format!(
+                    "HOST_IN posted out of order: write {i} posts {v} after {prev} — \
+                     hart 0's admitted-frame count must be monotone"
+                ),
+            );
+        } else if i == 0 && v > cap {
+            diag(
+                DiagCode::StreamParity,
+                format!(
+                    "over-admission past the two-frame buffer: first post claims {v} \
+                     staged frames, but only {cap} parity buffers can hold them"
+                ),
+            );
+        } else if i > 0 && v > prev + 1 {
+            diag(
+                DiagCode::StreamParity,
+                format!(
+                    "over-admission past the two-frame buffer: write {i} jumps {prev} → {v}, \
+                     staging a frame whose parity buffer's previous occupant the host has \
+                     not observed retiring"
+                ),
+            );
+        } else if v > frames as i32 {
+            diag(
+                DiagCode::StreamParity,
+                format!(
+                    "over-admission past the feed: write {i} admits frame {v} of a \
+                     {frames}-frame feed"
+                ),
+            );
+        }
+        prev = prev.max(v);
+    }
+    if frames > 0 && prev < frames as i32 {
+        diag(
+            DiagCode::SyncLiveness,
+            format!(
+                "under-admission: posting plateaus at {prev} of {frames} frames — hart 0's \
+                 entry wait for frame {prev} is never satisfied"
+            ),
+        );
+    }
+    report
 }
 
 /// Verify a distributed-mode [`DistributedPlan`] for its single layer.

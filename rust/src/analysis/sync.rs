@@ -20,6 +20,17 @@
 //! serialization sticks, and the stuck waits are reported as
 //! [`DiagCode::SyncLiveness`] diagnostics naming the flag word, the
 //! predicate needed and the value the flag plateaus at.
+//!
+//! **Host-owned flags** (`HOST_IN`/`HOST_OUT` of streamed programs) are
+//! modelled as *monotone incremental posting*, not pre-seeded finals: each
+//! starts at zero and the simulation bumps it — by the smallest amount
+//! that unsticks some wait, never past its cap — only when the
+//! hart-to-hart protocol is otherwise stuck. This is the **laziest**
+//! monotone host schedule: a program proven live under it is live under
+//! every monotone posting schedule that eventually reaches the cap
+//! (upward-closed `>=` waits can only be satisfied earlier by a more
+//! eager host), and continuous admission — frames posted online, one
+//! `HOST_IN` bump at a time — is exactly such a schedule.
 
 use std::collections::HashMap;
 
@@ -119,15 +130,9 @@ pub(crate) fn check_program(program: &[u32], report: &mut VerifyReport) {
 
 /// [`check_program`] with a seeded environment and launch extraction.
 ///
-/// `env` pre-seeds data words the *host* owns at runtime — for streamed
-/// programs, `HOST_IN`/`HOST_OUT` at their final values (the host stages
-/// all `frames` inputs and reads all `frames` outputs). Sound for the
-/// monotone `>=` predicates generated programs spin on: seeding the final
-/// value can only satisfy a host-owned wait *earlier* than the real
-/// protocol would, and host flags never gate the values other stores
-/// publish — so liveness of the hart-to-hart protocol is still proven
-/// exactly. (The host side of the handshake is the driver's loop in
-/// `session::stream_program_exec`, which services flags every cycle.)
+/// `env` pre-seeds data words at fixed values before the simulation
+/// starts — the model for externally-initialized memory. Host flags that
+/// rise *during* the run belong in [`check_program_host`] instead.
 ///
 /// Returns each hart's launch sequence: the five job-base CSRs snapshotted
 /// at every `mvu_command = START` write, in program order.
@@ -136,13 +141,40 @@ pub(crate) fn check_program_env(
     env: &[(u32, i32)],
     report: &mut VerifyReport,
 ) -> Vec<Vec<LaunchBases>> {
+    check_program_inner(program, env, &[], report)
+}
+
+/// [`check_program`] with **monotone incremental host posting**: each
+/// `(addr, cap)` in `host` is a word the runtime host bumps upward from
+/// zero to at most `cap` — for streamed programs, `HOST_IN`/`HOST_OUT`
+/// capped at the frame count. The simulation posts lazily (smallest bump,
+/// only when otherwise stuck), so a clean report proves the program live
+/// under *every* monotone posting schedule that reaches the cap — closed
+/// batches that pre-post everything and continuous admission that bumps
+/// one frame at a time alike. (The runtime host sides are
+/// `session::stream_program_exec` / `run_continuous`, which service flags
+/// every cycle.)
+pub(crate) fn check_program_host(
+    program: &[u32],
+    host: &[(u32, i32)],
+    report: &mut VerifyReport,
+) -> Vec<Vec<LaunchBases>> {
+    check_program_inner(program, &[], host, report)
+}
+
+fn check_program_inner(
+    program: &[u32],
+    env: &[(u32, i32)],
+    host: &[(u32, i32)],
+    report: &mut VerifyReport,
+) -> Vec<Vec<LaunchBases>> {
     if program.is_empty() {
         return Vec::new();
     }
     let per_hart: Vec<HartEvents> =
         (0..NUM_HARTS).map(|h| walk_hart(program, h, report)).collect();
     report.harts_checked += NUM_HARTS;
-    simulate(&per_hart, env, report);
+    simulate(&per_hart, env, host, report);
     per_hart.into_iter().map(|h| h.launches).collect()
 }
 
@@ -444,13 +476,39 @@ fn wait_pred(
     Some((addr, pred))
 }
 
+/// Smallest value `> cur` and `<= cap` satisfying `pred`, if a monotone
+/// host bump can satisfy it at all. `Le` waits can never be rescued by a
+/// rising counter; `Always` is already satisfiable without one.
+fn lazy_bump(pred: Pred, cur: i32, cap: i32) -> Option<i32> {
+    let v = match pred {
+        Pred::Ge(k) => k.max(cur + 1),
+        Pred::Eq(k) if k > cur => k,
+        Pred::Ne(k) => {
+            let v = cur + 1;
+            if v == k {
+                v + 1
+            } else {
+                v
+            }
+        }
+        _ => return None,
+    };
+    (v <= cap).then_some(v)
+}
+
 /// Greedy round-robin simulation of the extracted event streams. Flags
-/// start at zero except the seeded `env` words (host-owned flags at their
-/// final values — see [`check_program_env`]); a stuck fixpoint with
-/// unfinished harts is a proven deadlock (for single-writer monotone
-/// flags, which generated programs maintain).
-fn simulate(harts: &[HartEvents], env: &[(u32, i32)], report: &mut VerifyReport) {
+/// start at zero except the seeded `env` words; `host` words are bumped
+/// lazily and monotonically up to their caps (see [`check_program_host`]).
+/// A stuck fixpoint no host bump can unstick is a proven deadlock (for
+/// single-writer monotone flags, which generated programs maintain).
+fn simulate(
+    harts: &[HartEvents],
+    env: &[(u32, i32)],
+    host: &[(u32, i32)],
+    report: &mut VerifyReport,
+) {
     let mut mem: HashMap<u32, i32> = env.iter().copied().collect();
+    let host: HashMap<u32, i32> = host.iter().copied().collect();
     let mut global_havoc = false;
     let mut idx: Vec<usize> = vec![0; harts.len()];
     loop {
@@ -475,8 +533,31 @@ fn simulate(harts: &[HartEvents], env: &[(u32, i32)], report: &mut VerifyReport)
                 progressed = true;
             }
         }
-        if !progressed {
-            break;
+        if progressed {
+            continue;
+        }
+        // Hart-to-hart fixpoint reached. Model the laziest monotone host:
+        // across all stuck waits on host-owned words, post the single
+        // smallest bump that unsticks one, then resume. If no bump within
+        // a cap helps, the stall is a real deadlock.
+        let mut best: Option<(u32, i32)> = None;
+        for (h, he) in harts.iter().enumerate() {
+            if let Some(&Ev::Wait { addr, pred, .. }) = he.events.get(idx[h]) {
+                if let Some(&cap) = host.get(&addr) {
+                    let cur = mem.get(&addr).copied().unwrap_or(0);
+                    if let Some(v) = lazy_bump(pred, cur, cap) {
+                        if best.map(|(_, bv)| v < bv).unwrap_or(true) {
+                            best = Some((addr, v));
+                        }
+                    }
+                }
+            }
+        }
+        match best {
+            Some((addr, v)) => {
+                mem.insert(addr, v);
+            }
+            None => break,
         }
     }
     let aborted_elsewhere = harts.iter().any(|h| h.aborted);
@@ -488,15 +569,25 @@ fn simulate(harts: &[HartEvents], env: &[(u32, i32)], report: &mut VerifyReport)
             } else {
                 ""
             };
+            let message = if let Some(&cap) = host.get(&addr) {
+                format!(
+                    "hart {h} pc {:#x} waits forever on host flag {addr:#x}: needs a value \
+                     {pred}, but the host posts monotonically at most {cap} (flag plateaus \
+                     at {cur}){hint}",
+                    pc * 4
+                )
+            } else {
+                format!(
+                    "hart {h} pc {:#x} waits forever on data word {addr:#x}: needs a value \
+                     {pred}, but no hart ever stores one (flag plateaus at {cur}){hint}",
+                    pc * 4
+                )
+            };
             report.diagnostics.push(Diagnostic {
                 code: DiagCode::SyncLiveness,
                 mvu: Some(h),
                 layer: None,
-                message: format!(
-                    "hart {h} pc {:#x} waits forever on data word {addr:#x}: needs a value \
-                     {pred}, but no hart ever stores one (flag plateaus at {cur}){hint}",
-                    pc * 4
-                ),
+                message,
             });
         }
     }
@@ -663,5 +754,61 @@ mod tests {
         let mut live = VerifyReport::new(VerifyLevel::Quick);
         let _ = check_program_env(&program, &[(0x40, 8)], &mut live);
         assert!(live.is_clean(), "{:?}", live.diagnostics);
+    }
+
+    /// The incremental-posting model proves the same handshake live as the
+    /// pre-seeded one — and, because bumps are lazy and minimal, it also
+    /// handles waits the seeded-final model cannot: a spin that exits on
+    /// an *exact* intermediate value deadlocks when the flag is pre-seeded
+    /// past it, but is live when the host posts through it monotonically.
+    #[test]
+    fn lazy_host_posting_is_monotone_and_minimal() {
+        let ge = "    li    t3, 0x40
+                      li    t0, 3
+                  hwait:
+                      lw    t4, 0(t3)
+                      blt   t4, t0, hwait
+                      ecall";
+        let program = assemble(ge).unwrap();
+        let mut live = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_host(&program, &[(0x40, 8)], &mut live);
+        assert!(live.is_clean(), "{:?}", live.diagnostics);
+
+        let eq = "    li    t3, 0x40
+                      li    t0, 1
+                  hwait:
+                      lw    t4, 0(t3)
+                      bne   t4, t0, hwait
+                      ecall";
+        let program = assemble(eq).unwrap();
+        // Pre-seeded at the final value 3: the == 1 exit is already past.
+        let mut seeded = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_env(&program, &[(0x40, 3)], &mut seeded);
+        assert!(seeded.has(DiagCode::SyncLiveness), "{:?}", seeded.diagnostics);
+        // Incremental posting passes through 1 on the way to the cap.
+        let mut inc = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_host(&program, &[(0x40, 3)], &mut inc);
+        assert!(inc.is_clean(), "{:?}", inc.diagnostics);
+    }
+
+    /// A wait needing more than the host will ever post is a deadlock, and
+    /// the diagnostic names the posting cap.
+    #[test]
+    fn host_posting_cap_bounds_admission() {
+        let src = "    li    t3, 0x40
+                       li    t0, 5
+                   hwait:
+                       lw    t4, 0(t3)
+                       blt   t4, t0, hwait
+                       ecall";
+        let program = assemble(src).unwrap();
+        let mut r = VerifyReport::new(VerifyLevel::Quick);
+        let _ = check_program_host(&program, &[(0x40, 3)], &mut r);
+        assert!(r.has(DiagCode::SyncLiveness), "{:?}", r.diagnostics);
+        assert!(
+            r.diagnostics[0].message.contains("at most 3"),
+            "diagnostic should name the cap: {}",
+            r.diagnostics[0].message
+        );
     }
 }

@@ -1030,6 +1030,136 @@ mod tests {
         f.shutdown();
     }
 
+    /// Engine that records every image it serves, reports per-batch
+    /// stream accounting, and gates each batch — the test holds the gate
+    /// shut to pin the worker mid-batch (its pipeline in steady state)
+    /// while more traffic queues behind it.
+    struct RecordingGatedEngine {
+        tag: f32,
+        gate: Arc<(Mutex<bool>, std::sync::Condvar)>,
+        served: Arc<Mutex<Vec<f32>>>,
+        pending_frames: u64,
+    }
+
+    impl Engine for RecordingGatedEngine {
+        fn infer_batch(&mut self, images: &[Vec<f32>]) -> Vec<Result<(Vec<f32>, u64), String>> {
+            let (lock, cvar) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cvar.wait(open).unwrap();
+            }
+            drop(open);
+            self.pending_frames += images.len() as u64;
+            let mut served = self.served.lock().unwrap();
+            images
+                .iter()
+                .map(|img| {
+                    served.push(img[0]);
+                    Ok((vec![img[0] + self.tag], 1))
+                })
+                .collect()
+        }
+
+        /// A balanced open pipeline in steady state: every booked cycle
+        /// is a steady cycle, fill was paid before this window, the drain
+        /// stays unbooked — occupancy 1.0 by construction.
+        fn take_stream_stats(&mut self) -> Option<crate::coordinator::StreamStats> {
+            let frames = std::mem::take(&mut self.pending_frames);
+            if frames == 0 {
+                return None;
+            }
+            Some(crate::coordinator::StreamStats {
+                frames,
+                pipeline_cycles: 10 * frames,
+                serial_cycles: 20 * frames,
+                stage_cycle_slots: 20 * frames,
+                fill_cycles: 0,
+                steady_cycles: 10 * frames,
+                drain_cycles: 0,
+            })
+        }
+    }
+
+    /// Regression (satellite: continuous-admission re-arm): with one
+    /// worker pinned mid-batch — its engine held in steady state by the
+    /// gate — two keys' traffic queues behind it and every `max_wait`
+    /// deadline fires long before the worker frees. Each queued frame
+    /// must then be admitted through the re-armed timeout path as the
+    /// worker drains its mailbox (not parked until some group fills
+    /// `max_batch`, which never happens here), and the contention must
+    /// lose or duplicate nothing: every submitted frame is served exactly
+    /// once, answered by its own key's engine.
+    #[test]
+    fn timeout_rearm_admits_mid_stream_without_loss_across_contending_keys() {
+        let gate = Arc::new((Mutex::new(false), std::sync::Condvar::new()));
+        let served = Arc::new(Mutex::new(Vec::new()));
+        let (gate2, served2) = (Arc::clone(&gate), Arc::clone(&served));
+        let factory: KeyedEngineFactory = Arc::new(move |key: &ModelKey| {
+            Ok(KeyedEngine {
+                engine: Box::new(RecordingGatedEngine {
+                    tag: 1000.0 * key.wbits as f32,
+                    gate: Arc::clone(&gate2),
+                    served: Arc::clone(&served2),
+                    pending_frames: 0,
+                }),
+                resident_words: 1,
+            })
+        });
+        let mut f = Fleet::new(
+            factory,
+            FleetConfig {
+                workers: 1,
+                cache_per_worker: 2,
+                batch: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) },
+                policy: RoutingPolicy::Affinity,
+                queue_depth: 0,
+            },
+        );
+        let (a, b) = (key("a", 1), key("b", 2));
+        // The first frame occupies the worker: its 1 ms deadline fires,
+        // the batch flushes, and the engine blocks inside `infer_batch`.
+        let first = f.submit(a.clone(), vec![0.0]);
+        std::thread::sleep(Duration::from_millis(20));
+        // Steady-state arrivals: two keys contend for the pinned worker.
+        let mut pending = Vec::new();
+        for i in 1..=6u32 {
+            let k = if i % 2 == 0 { b.clone() } else { a.clone() };
+            pending.push((k.clone(), i as f32, f.submit(k, vec![i as f32])));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        {
+            let (lock, cvar) = &*gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+        let resp = first.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.logits, vec![1000.0]);
+        for (k, v, rx) in pending {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("frame admitted, not parked");
+            assert_eq!(resp.error, None, "frame {v} failed");
+            assert_eq!(resp.key, k);
+            assert_eq!(
+                resp.logits,
+                vec![v + 1000.0 * k.wbits as f32],
+                "frame {v} answered by the wrong key's engine"
+            );
+        }
+        // Ground truth from inside the engines: each frame exactly once.
+        let mut seen = served.lock().unwrap().clone();
+        seen.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(seen, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0], "frames dropped or duplicated");
+        let snap = f.metrics().snapshot();
+        assert_eq!(snap.completed, 7);
+        assert_eq!(snap.failed + snap.shed, 0);
+        // The per-batch stream books flowed through the fleet seam: all
+        // steady cycles, no re-paid fill — occupancy 1.0 end to end.
+        assert_eq!(snap.streamed_frames, 7);
+        assert!((snap.steady_occupancy() - 1.0).abs() < 1e-12);
+        assert!((snap.pipeline_occupancy() - 1.0).abs() < 1e-12);
+        f.shutdown();
+    }
+
     /// Engine whose latency is dominated by a deliberate sleep — drives
     /// the adaptive fleet's p99 over target deterministically.
     struct SlowEngine {

@@ -99,6 +99,14 @@ pub struct Metrics {
     streamed_serial_cycles: AtomicU64,
     /// Stage-cycle slots offered by streamed batches (occupancy denominator).
     stage_cycle_slots: AtomicU64,
+    /// Pipeline-fill share of `pipeline_cycles`. Continuous admission pays
+    /// fill once per open stream; closed batches re-pay it every flush.
+    stream_fill_cycles: AtomicU64,
+    /// Steady-state share of `pipeline_cycles` (all stages busy or feed
+    /// still admitting).
+    stream_steady_cycles: AtomicU64,
+    /// Drain share of `pipeline_cycles` (after the final admission).
+    stream_drain_cycles: AtomicU64,
     /// Per-tenant aggregates (the `per-key latency` serving signal).
     per_key: Mutex<HashMap<ModelKey, PerKeyAgg>>,
 }
@@ -186,6 +194,12 @@ pub struct MetricsSnapshot {
     pub streamed_serial_cycles: u64,
     /// Stage-cycle slots offered by streamed batches.
     pub stage_cycle_slots: u64,
+    /// Pipeline-fill share of `pipeline_cycles` across streamed batches.
+    pub stream_fill_cycles: u64,
+    /// Steady-state share of `pipeline_cycles` across streamed batches.
+    pub stream_steady_cycles: u64,
+    /// Drain share of `pipeline_cycles` across streamed batches.
+    pub stream_drain_cycles: u64,
     /// Per-tenant aggregates, sorted by rendered key for determinism.
     pub per_key: Vec<PerKeySnapshot>,
 }
@@ -229,6 +243,18 @@ impl MetricsSnapshot {
             0.0
         } else {
             clock_hz as f64 * self.streamed_frames as f64 / self.pipeline_cycles as f64
+        }
+    }
+
+    /// Share of the modelled streamed wall spent in steady state (0 when
+    /// nothing streamed). Closed per-flush batches re-pay fill + drain on
+    /// every flush and sit well below 1.0; a continuously admitted
+    /// pipeline pays fill once and approaches 1.0 under sustained load.
+    pub fn steady_occupancy(&self) -> f64 {
+        if self.pipeline_cycles == 0 {
+            0.0
+        } else {
+            self.stream_steady_cycles as f64 / self.pipeline_cycles as f64
         }
     }
 
@@ -308,6 +334,9 @@ impl Metrics {
         self.pipeline_cycles.fetch_add(stats.pipeline_cycles, Ordering::Relaxed);
         self.streamed_serial_cycles.fetch_add(stats.serial_cycles, Ordering::Relaxed);
         self.stage_cycle_slots.fetch_add(stats.stage_cycle_slots, Ordering::Relaxed);
+        self.stream_fill_cycles.fetch_add(stats.fill_cycles, Ordering::Relaxed);
+        self.stream_steady_cycles.fetch_add(stats.steady_cycles, Ordering::Relaxed);
+        self.stream_drain_cycles.fetch_add(stats.drain_cycles, Ordering::Relaxed);
     }
 
     /// Keyed completion: global counters plus the tenant's aggregates.
@@ -402,6 +431,9 @@ impl Metrics {
             pipeline_cycles: self.pipeline_cycles.load(Ordering::Relaxed),
             streamed_serial_cycles: self.streamed_serial_cycles.load(Ordering::Relaxed),
             stage_cycle_slots: self.stage_cycle_slots.load(Ordering::Relaxed),
+            stream_fill_cycles: self.stream_fill_cycles.load(Ordering::Relaxed),
+            stream_steady_cycles: self.stream_steady_cycles.load(Ordering::Relaxed),
+            stream_drain_cycles: self.stream_drain_cycles.load(Ordering::Relaxed),
             per_key,
         }
     }
@@ -549,6 +581,9 @@ mod tests {
                 pipeline_cycles: 250,
                 serial_cycles: 800,
                 stage_cycle_slots: 250 * 8,
+                fill_cycles: 50,
+                steady_cycles: 150,
+                drain_cycles: 50,
             });
         }
         let s = m.snapshot();
@@ -557,6 +592,10 @@ mod tests {
         assert_eq!(s.streamed_serial_cycles, 1600);
         assert_eq!(s.stage_cycle_slots, 4000);
         assert!((s.pipeline_occupancy() - 0.4).abs() < 1e-12);
+        assert_eq!(s.stream_fill_cycles, 100);
+        assert_eq!(s.stream_steady_cycles, 300);
+        assert_eq!(s.stream_drain_cycles, 100);
+        assert!((s.steady_occupancy() - 0.6).abs() < 1e-12);
         let hz = 1000;
         assert!((s.sim_streamed_fps(hz) - 32.0).abs() < 1e-9);
         assert!((s.sim_serial_fps(hz) - 10.0).abs() < 1e-9);
@@ -564,6 +603,7 @@ mod tests {
         // Empty stats stay well-defined.
         let empty = Metrics::default().snapshot();
         assert_eq!(empty.pipeline_occupancy(), 0.0);
+        assert_eq!(empty.steady_occupancy(), 0.0);
         assert_eq!(empty.sim_streamed_fps(hz), 0.0);
     }
 

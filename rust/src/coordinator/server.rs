@@ -89,6 +89,16 @@ pub struct StreamStats {
     /// Stage-cycle slots offered (`pipeline_cycles × stages` per batch,
     /// summed) — the denominator of [`Self::occupancy`].
     pub stage_cycle_slots: u64,
+    /// Pipeline-filling share of `pipeline_cycles`. Under continuous
+    /// admission (`InferenceSession::open_pipeline`) fill is paid once per
+    /// stream instead of once per flush — the steady-occupancy win this
+    /// field makes visible.
+    pub fill_cycles: u64,
+    /// Steady-state share of `pipeline_cycles` (feed still admitting).
+    pub steady_cycles: u64,
+    /// Drain share of `pipeline_cycles` (after the final admission; an
+    /// open pipeline books it only when closed).
+    pub drain_cycles: u64,
 }
 
 /// One streamed batch's accounting, folded down from the session layer
@@ -100,6 +110,9 @@ impl From<&crate::session::StreamMetrics> for StreamStats {
             pipeline_cycles: s.pipeline_cycles,
             serial_cycles: s.serial_cycles,
             stage_cycle_slots: s.pipeline_cycles.saturating_mul(s.stages as u64),
+            fill_cycles: s.fill_cycles,
+            steady_cycles: s.steady_cycles,
+            drain_cycles: s.drain_cycles,
         }
     }
 }
@@ -110,6 +123,9 @@ impl StreamStats {
         self.pipeline_cycles += other.pipeline_cycles;
         self.serial_cycles += other.serial_cycles;
         self.stage_cycle_slots += other.stage_cycle_slots;
+        self.fill_cycles += other.fill_cycles;
+        self.steady_cycles += other.steady_cycles;
+        self.drain_cycles += other.drain_cycles;
     }
 
     /// Fraction of offered stage-cycle slots that did useful work.
@@ -118,6 +134,18 @@ impl StreamStats {
             0.0
         } else {
             self.serial_cycles as f64 / self.stage_cycle_slots as f64
+        }
+    }
+
+    /// Share of the modelled wall spent in steady state — 1.0 means the
+    /// pipeline never paid a fill or drain bubble while these frames
+    /// flowed (the continuous-admission target; closed per-flush batches
+    /// re-pay fill + drain on every flush and sit well below it).
+    pub fn steady_occupancy(&self) -> f64 {
+        if self.pipeline_cycles == 0 {
+            0.0
+        } else {
+            self.steady_cycles as f64 / self.pipeline_cycles as f64
         }
     }
 }

@@ -22,6 +22,19 @@
 //! versus `N · Σ stage_cycles` for the serial one-frame-at-a-time path.
 //! The schedule is pure accounting + ordering; execution lives in
 //! [`crate::accel::System::run_lap`] and the session's streaming driver.
+//!
+//! **Continuous admission.** A closed batch fixes `N` up front: frame `f`
+//! enters at lap `f`. An *open* schedule ([`StreamSchedule::open`]) starts
+//! with no frames and grows by [`StreamSchedule::admit`] while laps
+//! execute: frame `f` is assigned the entry lap
+//! `max(arrival_lap, entry(f−1) + 1)` — it joins the running pipeline at
+//! the fill boundary, one new frame per lap at most, and the pipeline
+//! drains only when the feed is empty. A lap inside the open window where
+//! *no* stage is active (the feed gapped for longer than the pipeline
+//! depth) is a **bubble**: the pipeline beats while starved, so the lap is
+//! charged at the bottleneck (steady) rate. Closed schedules have no
+//! bubbles, so their accounting is unchanged — `new(costs, n)` is exactly
+//! `open(costs)` plus `n` admissions at arrival lap 0.
 
 /// Cycle breakdown of one streamed batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -41,19 +54,47 @@ impl StreamCycles {
     }
 }
 
-/// The lap schedule of `frames` frames over a pipeline of per-stage cycle
+/// The lap schedule of admitted frames over a pipeline of per-stage cycle
 /// costs (`stage_cycles[k]` = MVP cycles stage `k` spends per frame —
 /// constant across frames, since every frame replays the same job stream).
+///
+/// Closed batches ([`StreamSchedule::new`]) admit frame `f` at lap `f`;
+/// open schedules ([`StreamSchedule::open`]) assign entry laps as frames
+/// [`admit`](StreamSchedule::admit)ted online, which may leave bubbles.
 #[derive(Debug, Clone)]
 pub struct StreamSchedule {
     stage_cycles: Vec<u64>,
-    frames: usize,
+    /// Entry lap of each admitted frame, strictly increasing: frame `f`
+    /// occupies stage `k` at lap `entry_laps[f] + k`.
+    entry_laps: Vec<usize>,
 }
 
 impl StreamSchedule {
+    /// A closed batch of `frames` back-to-back frames: frame `f` enters at
+    /// lap `f`, exactly the classic dense software pipeline.
     pub fn new(stage_cycles: Vec<u64>, frames: usize) -> Self {
         assert!(!stage_cycles.is_empty(), "a pipeline needs at least one stage");
-        StreamSchedule { stage_cycles, frames }
+        StreamSchedule { stage_cycles, entry_laps: (0..frames).collect() }
+    }
+
+    /// An open schedule with no frames yet: grow it with
+    /// [`admit`](StreamSchedule::admit) while laps execute.
+    pub fn open(stage_cycles: Vec<u64>) -> Self {
+        assert!(!stage_cycles.is_empty(), "a pipeline needs at least one stage");
+        StreamSchedule { stage_cycles, entry_laps: Vec::new() }
+    }
+
+    /// Admit the next frame into the running pipeline: it enters at the
+    /// fill boundary `max(arrival_lap, previous entry + 1)` — never before
+    /// it arrives, never two frames into stage 0 on the same lap. Returns
+    /// the frame index the schedule assigned.
+    pub fn admit(&mut self, arrival_lap: usize) -> usize {
+        let entry = match self.entry_laps.last() {
+            Some(&prev) => arrival_lap.max(prev + 1),
+            None => arrival_lap,
+        };
+        self.entry_laps.push(entry);
+        self.entry_laps.len() - 1
     }
 
     pub fn stages(&self) -> usize {
@@ -61,37 +102,47 @@ impl StreamSchedule {
     }
 
     pub fn frames(&self) -> usize {
-        self.frames
+        self.entry_laps.len()
     }
 
-    /// Total laps: every frame traverses every stage, overlapped.
+    /// The lap at which frame `f` enters stage 0.
+    pub fn entry_lap(&self, frame: usize) -> usize {
+        self.entry_laps[frame]
+    }
+
+    /// Total laps: the last frame's entry plus a full traversal. Bubbles
+    /// before that entry are part of the open window and count as laps.
     pub fn laps(&self) -> usize {
-        if self.frames == 0 {
-            0
-        } else {
-            self.frames + self.stages() - 1
+        match self.entry_laps.last() {
+            Some(&last) => last + self.stages(),
+            None => 0,
         }
     }
 
-    /// The (stage, frame) pairs active at lap `t`: stage `k` processes
-    /// frame `t − k`. All active pairs touch *different* frames, which is
-    /// why they can run concurrently on their MVUs.
+    /// The (stage, frame) pairs active at lap `t`: stage `k` processes the
+    /// frame whose entry lap is `t − k`, if any. All active pairs touch
+    /// *different* frames, which is why they can run concurrently on their
+    /// MVUs.
     pub fn active(&self, lap: usize) -> Vec<(usize, usize)> {
         (0..self.stages())
             .filter_map(|k| {
-                let f = lap.checked_sub(k)?;
-                (f < self.frames).then_some((k, f))
+                let entry = lap.checked_sub(k)?;
+                self.entry_laps.binary_search(&entry).ok().map(|f| (k, f))
             })
             .collect()
     }
 
     /// Cost of lap `t`: the slowest active stage (stages run concurrently).
+    /// An idle lap *inside the open window* — the feed gapped for longer
+    /// than the pipeline depth — is a bubble: the pipeline beats while
+    /// starved, charged at the bottleneck (steady) rate.
     pub fn lap_cycles(&self, lap: usize) -> u64 {
-        self.active(lap)
-            .iter()
-            .map(|&(k, _)| self.stage_cycles[k])
-            .max()
-            .unwrap_or(0)
+        let busiest = self.active(lap).iter().map(|&(k, _)| self.stage_cycles[k]).max();
+        match busiest {
+            Some(c) => c,
+            None if lap < self.laps() => self.bottleneck_cycles(),
+            None => 0,
+        }
     }
 
     /// Steady-state per-frame cost: the bottleneck stage. This is exactly
@@ -105,20 +156,34 @@ impl StreamSchedule {
         self.stage_cycles.iter().sum()
     }
 
-    /// Fill + steady + drain accounting over the whole batch.
-    pub fn cycles(&self) -> StreamCycles {
+    /// Fill + steady + drain accounting over a half-open lap range — the
+    /// incremental form the serving stack books when an open pipeline
+    /// advances chunk by chunk. A lap is *fill* while some leading stage
+    /// has never been reachable (`lap + 1 < stages`), *steady* while the
+    /// feed is still admitting (`lap ≤ last entry`), and *drain* after the
+    /// final admission.
+    pub fn cycles_between(&self, laps: core::ops::Range<usize>) -> StreamCycles {
         let mut c = StreamCycles::default();
-        for lap in 0..self.laps() {
+        let last_entry = match self.entry_laps.last() {
+            Some(&e) => e,
+            None => return c,
+        };
+        for lap in laps.start..laps.end.min(self.laps()) {
             let cost = self.lap_cycles(lap);
             if lap + 1 < self.stages() {
                 c.fill += cost;
-            } else if lap < self.frames {
+            } else if lap <= last_entry {
                 c.steady += cost;
             } else {
                 c.drain += cost;
             }
         }
         c
+    }
+
+    /// Fill + steady + drain accounting over the whole batch.
+    pub fn cycles(&self) -> StreamCycles {
+        self.cycles_between(0..self.laps())
     }
 }
 
@@ -177,6 +242,90 @@ mod tests {
         let c = s.cycles();
         assert_eq!(c.steady, 0);
         assert_eq!(c.total(), 5);
+    }
+
+    /// A closed schedule is exactly an open schedule with every frame
+    /// admitted at arrival lap 0: same entries, laps, actives, and cycles.
+    #[test]
+    fn dense_admission_matches_closed_batch() {
+        let closed = StreamSchedule::new(vec![2, 5, 3], 4);
+        let mut open = StreamSchedule::open(vec![2, 5, 3]);
+        for f in 0..4 {
+            assert_eq!(open.admit(0), f);
+            assert_eq!(open.entry_lap(f), f);
+        }
+        assert_eq!(open.frames(), closed.frames());
+        assert_eq!(open.laps(), closed.laps());
+        for lap in 0..closed.laps() + 2 {
+            assert_eq!(open.active(lap), closed.active(lap));
+            assert_eq!(open.lap_cycles(lap), closed.lap_cycles(lap));
+        }
+        assert_eq!(open.cycles(), closed.cycles());
+    }
+
+    /// Frames joining a running pipeline at the fill boundary: entries
+    /// respect both arrival order and the one-frame-per-lap stage-0 limit.
+    #[test]
+    fn admission_clamps_to_fill_boundary() {
+        let mut s = StreamSchedule::open(vec![4, 6]);
+        assert_eq!(s.admit(0), 0); // enters at lap 0
+        assert_eq!(s.admit(0), 1); // arrived early: waits for stage 0, lap 1
+        assert_eq!(s.admit(5), 2); // arrived late: enters at its arrival lap
+        assert_eq!(s.entry_lap(0), 0);
+        assert_eq!(s.entry_lap(1), 1);
+        assert_eq!(s.entry_lap(2), 5);
+        assert_eq!(s.laps(), 7);
+        // Lap 2: frame 1 drains through stage 1; frame 2 not here yet.
+        assert_eq!(s.active(2), vec![(1, 1)]);
+        // Laps 3–4: open-window bubbles, charged at the bottleneck.
+        assert_eq!(s.active(3), vec![]);
+        assert_eq!(s.lap_cycles(3), 6);
+        assert_eq!(s.lap_cycles(4), 6);
+        // Frame 2 runs alone: stage 0 at lap 5, stage 1 at lap 6.
+        assert_eq!(s.active(5), vec![(0, 2)]);
+        assert_eq!(s.active(6), vec![(1, 2)]);
+        // Past the open window, laps cost nothing.
+        assert_eq!(s.lap_cycles(7), 0);
+        let c = s.cycles();
+        assert_eq!(c.fill, 4); // lap 0
+        // Laps 1..=5 are pre-final-admission: 6 + 6 + 6 + 6 + 4.
+        assert_eq!(c.steady, 28);
+        assert_eq!(c.drain, 6); // lap 6
+    }
+
+    /// `cycles_between` partitions the same totals chunk by chunk — the
+    /// incremental booking the serving stack uses between admissions.
+    #[test]
+    fn incremental_booking_partitions_the_total() {
+        let mut s = StreamSchedule::open(vec![2, 5, 3]);
+        for _ in 0..3 {
+            s.admit(0);
+        }
+        s.admit(7);
+        let whole = s.cycles();
+        let a = s.cycles_between(0..4);
+        let b = s.cycles_between(4..8);
+        let c = s.cycles_between(8..usize::MAX); // clamped to laps()
+        assert_eq!(whole.fill, a.fill + b.fill + c.fill);
+        assert_eq!(whole.steady, a.steady + b.steady + c.steady);
+        assert_eq!(whole.drain, a.drain + b.drain + c.drain);
+        assert_eq!(whole.total(), a.total() + b.total() + c.total());
+    }
+
+    /// Admitting as frames arrive never costs more wall than holding them
+    /// for one closed batch launched at the last arrival: work overlaps
+    /// the wait, so open-schedule occupancy dominates.
+    #[test]
+    fn early_admission_dominates_deferred_closed_batch() {
+        let arrivals = [0usize, 2, 3, 9];
+        let costs = vec![3u64, 8, 2];
+        let mut open = StreamSchedule::open(costs.clone());
+        let mut deferred = StreamSchedule::open(costs);
+        for &a in &arrivals {
+            open.admit(a);
+            deferred.admit(*arrivals.last().unwrap());
+        }
+        assert!(open.cycles().total() <= deferred.cycles().total());
     }
 
     /// In steady state one frame retires per bottleneck lap — the rate

@@ -39,7 +39,7 @@
 //!                               `verify-matrix` job gates on
 //! * `bench-serve [--seed N --duration-images N --mix k=w,... --workers N
 //!                 --cache N --policy affinity|least-loaded
-//!                 --exec cycle|turbo --out PATH]`
+//!                 --exec cycle|turbo --continuous --out PATH]`
 //!                             — drive a seeded multi-tenant request mix
 //!                               through the serving `Fleet` and write the
 //!                               machine-readable `BENCH_serve.json` perf
@@ -127,7 +127,7 @@ fn help() {
          bench-serve flags: --seed N --duration-images N\n\
                     --mix resnet9:4:4=0.7,resnet18:2:2=0.3 --workers N --cache N\n\
                     --policy affinity|least-loaded|adaptive --exec cycle|turbo\n\
-                    --threads N --out PATH\n\
+                    --threads N --continuous (open-pipeline admission) --out PATH\n\
                     (multi-tenant fleet load generator; writes BENCH_serve.json)\n\
          bench-serve --adaptive flags: --slo-p99 CYCLES (0 = auto)\n\
                     --ramp 0.5x16,2.5x48,0.25x32 (load x count phases)\n\
@@ -820,6 +820,7 @@ fn bench_serve(args: &[String]) {
         .and_then(|i| args.get(i + 1))
         .cloned()
         .unwrap_or_else(|| "BENCH_serve.json".to_string());
+    let continuous = args.iter().any(|a| a == "--continuous");
     let cfg = BenchConfig {
         seed,
         images,
@@ -829,6 +830,7 @@ fn bench_serve(args: &[String]) {
         exec,
         policy,
         threads,
+        continuous,
         // Benches want deterministic batch formation: the serving default
         // of 2 ms can fragment key groups on a loaded CI runner before
         // they fill, which would understate batching and streaming. The
@@ -841,7 +843,8 @@ fn bench_serve(args: &[String]) {
     };
     println!(
         "bench-serve: {images} images over {workers} workers × {cache} cache slots, \
-         {policy} routing, {exec} backend, seed {seed}, mix {mix_str}"
+         {policy} routing, {exec} backend, seed {seed}, mix {mix_str}{}",
+        if continuous { ", continuous admission" } else { "" }
     );
     let report = match run_bench(&cfg) {
         Ok(r) => r,
@@ -875,10 +878,12 @@ fn bench_serve(args: &[String]) {
         report.sim_realtime_factor
     );
     println!(
-        "streamed {} frames | pipeline occupancy {:.0}% | sim {:.0} FPS streamed \
-         vs {:.0} serial ({:.2}x)",
+        "streamed {} frames | pipeline occupancy {:.0}% (steady {:.0}%{}) | \
+         sim {:.0} FPS streamed vs {:.0} serial ({:.2}x)",
         report.streamed_frames,
         report.pipeline_occupancy * 100.0,
+        report.steady_occupancy * 100.0,
+        if report.continuous { ", continuous" } else { ", per-batch fill" },
         report.sim_streamed_fps,
         report.sim_serial_fps,
         if report.sim_serial_fps > 0.0 {

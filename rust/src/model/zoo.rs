@@ -183,12 +183,65 @@ pub fn resnet18_cifar(a_bits: u8, w_bits: u8) -> Model {
     }
 }
 
+/// A deliberately *balanced* 8-layer chain: every layer is the same
+/// 64→64 3×3 stride-1 conv on 32×32, so all eight MVU stages cost the
+/// same cycles and the pipeline's steady-state occupancy is ~1.0 by
+/// construction. ResNet9's stride-2 layers cost half their neighbours
+/// (steady occupancy ≈ 0.81), which makes it useless for isolating
+/// fill/drain overhead from stage imbalance — this model is the
+/// continuous-admission benchmark workload: any occupancy it loses is
+/// pure fill/drain bubble, exactly what `InferenceSession::open_pipeline`
+/// eliminates.
+pub fn pipe8_uniform(a_bits: u8, w_bits: u8) -> Model {
+    let mut rng = Rng(0xBA5E_BA11_0000_0003);
+    let aprec = Precision::u(a_bits);
+    let wprec = Precision::s(w_bits);
+    let layers = (1..=8)
+        .map(|i| {
+            let (ci, co) = (64usize, 64usize);
+            let weights: Vec<i32> = (0..co * ci * 9)
+                .map(|_| rng.range_i32(wprec.min_value(), wprec.max_value()))
+                .collect();
+            // Same requantization-window construction as resnet9_cifar10.
+            let max_acc = (ci * 9) as i64
+                * aprec.max_value() as i64
+                * wprec.min_value().unsigned_abs() as i64;
+            let scale: Vec<u16> = (0..co).map(|_| rng.range_i32(1, 4) as u16).collect();
+            let bias: Vec<i32> = (0..co).map(|_| rng.range_i32(-64, 64)).collect();
+            let msb = 63 - ((max_acc * 4) as u64).leading_zeros() as u8;
+            ConvLayer {
+                name: format!("conv{i}"),
+                ci,
+                co,
+                fh: 3,
+                fw: 3,
+                stride: 1,
+                pad: 1,
+                in_h: 32,
+                in_w: 32,
+                aprec,
+                wprec,
+                oprec: aprec,
+                relu: true,
+                weights,
+                quant: QuantSpec { scale, bias, quant_msb: msb },
+            }
+        })
+        .collect();
+    Model {
+        name: format!("pipe8-uniform-w{w_bits}a{a_bits}"),
+        layers,
+        host_prologue: None,
+        host_epilogue: None,
+    }
+}
+
 /// The executable zoo, as one `(serving/CLI name, constructor)` table —
 /// the serving key space ([`crate::coordinator::ModelKey::model`]) and the
 /// `--model` vocabulary. [`model_by_name`] resolves through this table and
 /// error messages list it, so the two cannot drift.
-pub const EXECUTABLE_MODELS: [(&str, fn(u8, u8) -> Model); 2] =
-    [("resnet9", resnet9_cifar10), ("resnet18", resnet18_cifar)];
+pub const EXECUTABLE_MODELS: [(&str, fn(u8, u8) -> Model); 3] =
+    [("resnet9", resnet9_cifar10), ("resnet18", resnet18_cifar), ("pipe8", pipe8_uniform)];
 
 /// Look up an **executable** zoo model by its serving/CLI name at the given
 /// quantization point: the single resolver behind `barvinn run --model`,
@@ -784,6 +837,21 @@ mod tests {
             let words = l.co_sets() * l.fh * l.fw * l.ci_blocks() * l.wprec.bits as usize;
             assert!(words <= 2048, "{}: {words} weight words", l.name);
         }
+    }
+
+    #[test]
+    fn pipe8_is_balanced_valid_and_resolvable() {
+        let a = pipe8_uniform(2, 2);
+        assert_eq!(a, pipe8_uniform(2, 2));
+        assert!(a.validate().is_ok(), "{:?}", a.validate());
+        assert_eq!(a.layers.len(), 8, "one layer per MVU, single pass");
+        // The whole point of this model: identical geometry at every stage,
+        // so pipeline stage costs are uniform and occupancy ≈ 1.0.
+        for l in &a.layers {
+            assert_eq!((l.ci, l.co, l.stride, l.in_h, l.out_h()), (64, 64, 1, 32, 32), "{}", l.name);
+        }
+        assert!(model_by_name("pipe8", 2, 2).is_some());
+        assert!(executable_model_names().contains(&"pipe8"));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!
 //! The report schema (`barvinn.bench_serve/v1`, including the streamed
 //! pipeline fields `streamed_frames` / `pipeline_occupancy` /
-//! `sim_serial_fps` / `sim_streamed_fps`) is documented field by field in
+//! `sim_serial_fps` / `sim_streamed_fps` and the continuous-admission
+//! fields `continuous` / `steady_occupancy` plus the fill/steady/drain
+//! cycle decomposition) is documented field by field in
 //! `docs/BENCH_SCHEMAS.md` — the contract `ci.yml`'s `serve-bench` job
 //! gates on. Non-finite floats serialize as `null` (CI treats that as a
 //! failure); future PRs may append fields but must keep existing ones
@@ -98,6 +100,15 @@ impl SessionEngine {
         let (ci, h, w, amax) = (l0.ci, l0.in_h, l0.in_w, l0.aprec.max_value());
         SessionEngine { session, ci, h, w, amax, stats: StreamStats::default() }
     }
+
+    /// Continuous-admission variant: opens the session's pipeline so every
+    /// subsequent `infer_batch` flush *admits* into one running dataflow
+    /// instead of paying fill + drain per batch (no-op on tenants whose
+    /// scheduling mode cannot pipeline — they keep closed-batch behaviour).
+    pub fn continuous(mut session: InferenceSession) -> Self {
+        session.open_pipeline();
+        Self::new(session)
+    }
 }
 
 impl crate::coordinator::Engine for SessionEngine {
@@ -178,6 +189,18 @@ impl crate::coordinator::Engine for SessionEngine {
 /// precision ladder starts from — `resnet9:8:8`'s conv8 needs
 /// 8·9·8·8 = 4608 words) so every precision in a mix or ladder fits.
 pub fn zoo_engine_factory(exec: ExecMode, threads: usize) -> KeyedEngineFactory {
+    zoo_engine_factory_continuous(exec, threads, false)
+}
+
+/// [`zoo_engine_factory`] with the admission policy explicit: when
+/// `continuous` is true, every built engine opens its session's pipeline
+/// ([`SessionEngine::continuous`]) so flush boundaries become admission
+/// points into one running dataflow.
+pub fn zoo_engine_factory_continuous(
+    exec: ExecMode,
+    threads: usize,
+    continuous: bool,
+) -> KeyedEngineFactory {
     std::sync::Arc::new(move |key: &ModelKey| -> Result<KeyedEngine, String> {
         let model = zoo::model_by_name(&key.model, key.abits, key.wbits)
             .ok_or_else(|| format!("unknown zoo model '{}'", key.model))?;
@@ -190,7 +213,12 @@ pub fn zoo_engine_factory(exec: ExecMode, threads: usize) -> KeyedEngineFactory 
             .build()
             .map_err(|e| e.to_string())?;
         let resident_words = session.resident_words();
-        Ok(KeyedEngine { engine: Box::new(SessionEngine::new(session)), resident_words })
+        let engine: Box<dyn crate::coordinator::Engine> = if continuous {
+            Box::new(SessionEngine::continuous(session))
+        } else {
+            Box::new(SessionEngine::new(session))
+        };
+        Ok(KeyedEngine { engine, resident_words })
     })
 }
 
@@ -210,6 +238,11 @@ pub struct BenchConfig {
     /// [`crate::accel::SystemConfig::threads`]). Bit-identical results at
     /// any value — only wall-clock moves.
     pub threads: usize,
+    /// Continuous admission (`--continuous`): engines open their pipeline
+    /// once and every flush admits into the running dataflow, so fill is
+    /// paid once per stream instead of once per batch. Outputs stay
+    /// bit-identical; only the occupancy accounting moves.
+    pub continuous: bool,
 }
 
 impl Default for BenchConfig {
@@ -224,6 +257,7 @@ impl Default for BenchConfig {
             policy: RoutingPolicy::Affinity,
             batch: BatcherConfig::default(),
             threads: 1,
+            continuous: false,
         }
     }
 }
@@ -271,6 +305,17 @@ pub struct BenchReport {
     pub sim_streamed_fps: f64,
     /// Host lap-worker threads each engine ran with (deterministic knob).
     pub threads: usize,
+    /// Whether engines ran with continuous admission (open pipeline).
+    pub continuous: bool,
+    /// Share of the modelled streamed wall spent in steady state: closed
+    /// batches re-pay fill + drain per flush; a continuously admitted
+    /// pipeline pays fill once and approaches 1.0 under sustained load.
+    pub steady_occupancy: f64,
+    /// Fill / steady / drain decomposition of the streamed pipeline
+    /// cycles behind `steady_occupancy` (sums across batches).
+    pub stream_fill_cycles: u64,
+    pub stream_steady_cycles: u64,
+    pub stream_drain_cycles: u64,
     /// How close the simulator runs to the modelled accelerator:
     /// `(sim_cycles / 250 MHz) / wall_s`. 1.0 would be real-time; the gap
     /// to 1.0 is the host-side cost this bench's turbo/thread knobs
@@ -348,6 +393,9 @@ impl BenchReport {
              \"reload_words_saved\": {},\n  \"sim_cycles\": {},\n  \"streamed_frames\": {},\n  \
              \"pipeline_occupancy\": {},\n  \"sim_serial_fps\": {},\n  \
              \"sim_streamed_fps\": {},\n  \"threads\": {},\n  \
+             \"continuous\": {},\n  \"steady_occupancy\": {},\n  \
+             \"stream_fill_cycles\": {},\n  \"stream_steady_cycles\": {},\n  \
+             \"stream_drain_cycles\": {},\n  \
              \"sim_realtime_factor\": {},\n  \"per_key\": [{}]\n}}\n",
             json_str(self.schema),
             self.seed,
@@ -378,6 +426,11 @@ impl BenchReport {
             json_num(self.sim_serial_fps),
             json_num(self.sim_streamed_fps),
             self.threads,
+            self.continuous,
+            json_num(self.steady_occupancy),
+            self.stream_fill_cycles,
+            self.stream_steady_cycles,
+            self.stream_drain_cycles,
             json_num(self.sim_realtime_factor),
             per_key.join(", ")
         )
@@ -422,7 +475,7 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
     }
 
     let mut fleet = Fleet::new(
-        zoo_engine_factory(cfg.exec, cfg.threads),
+        zoo_engine_factory_continuous(cfg.exec, cfg.threads, cfg.continuous),
         FleetConfig {
             workers: cfg.workers,
             cache_per_worker: cfg.cache_per_worker,
@@ -499,6 +552,11 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<BenchReport, String> {
         sim_serial_fps: snap.sim_serial_fps(CLOCK_HZ),
         sim_streamed_fps: snap.sim_streamed_fps(CLOCK_HZ),
         threads: cfg.threads,
+        continuous: cfg.continuous,
+        steady_occupancy: snap.steady_occupancy(),
+        stream_fill_cycles: snap.stream_fill_cycles,
+        stream_steady_cycles: snap.stream_steady_cycles,
+        stream_drain_cycles: snap.stream_drain_cycles,
         sim_realtime_factor: if wall_s > 0.0 {
             (snap.sim_cycles as f64 / CLOCK_HZ as f64) / wall_s
         } else {
@@ -604,6 +662,11 @@ mod tests {
             sim_serial_fps: 1250.0,
             sim_streamed_fps: 6000.0,
             threads: 4,
+            continuous: true,
+            steady_occupancy: 0.93,
+            stream_fill_cycles: 100,
+            stream_steady_cycles: 1800,
+            stream_drain_cycles: 0,
             sim_realtime_factor: 0.0001,
             per_key: vec![],
         };
@@ -621,6 +684,11 @@ mod tests {
             "\"sim_serial_fps\": 1250",
             "\"sim_streamed_fps\": 6000",
             "\"threads\": 4",
+            "\"continuous\": true",
+            "\"steady_occupancy\": 0.93",
+            "\"stream_fill_cycles\": 100",
+            "\"stream_steady_cycles\": 1800",
+            "\"stream_drain_cycles\": 0",
             "\"sim_realtime_factor\": 0.0001",
             "\"per_key\": []",
         ] {

@@ -480,6 +480,7 @@ impl SessionBuilder {
             total_pipeline_cycles: 0,
             stream_driver: self.stream_driver,
             stream_program_resident: false,
+            open_stream: None,
         })
     }
 }
@@ -684,6 +685,73 @@ pub struct StreamOutput {
 /// order — the raw currency of the streaming drivers below.
 type FrameResults = Vec<(Tensor3, Vec<u64>)>;
 
+/// An online frame feed for [`InferenceSession::run_continuous`]: frames
+/// tagged with the lap at which they become available. A frame joins the
+/// *running* pipeline at the fill boundary `max(arrival, previous entry +
+/// 1)` — it never waits for the current batch to drain. [`Self::push`]
+/// models a frame that is already waiting (a closed batch is all frames
+/// pushed at arrival 0); [`Self::push_at`] models a frame arriving
+/// mid-stream, which may leave pipeline bubbles the accounting charges at
+/// the bottleneck rate.
+#[derive(Debug, Clone, Default)]
+pub struct StreamFeed {
+    /// `(input, arrival lap)` in admission order; arrival laps are
+    /// clamped monotone on push.
+    frames: Vec<(Tensor3, usize)>,
+}
+
+impl StreamFeed {
+    pub fn new() -> Self {
+        StreamFeed::default()
+    }
+
+    /// Feed a frame that is ready now (arrival lap 0 — or, mid-feed, the
+    /// previous frame's arrival: admission order is the feed order).
+    pub fn push(&mut self, input: Tensor3) {
+        let at = self.frames.last().map(|&(_, a)| a).unwrap_or(0);
+        self.push_at(input, at);
+    }
+
+    /// Feed a frame that arrives at `arrival_lap`. Arrivals are a trace in
+    /// time: a lap earlier than the previous frame's arrival is clamped up
+    /// to it (frames cannot arrive out of order within one feed).
+    pub fn push_at(&mut self, input: Tensor3, arrival_lap: usize) {
+        let at = match self.frames.last() {
+            Some(&(_, prev)) => arrival_lap.max(prev),
+            None => arrival_lap,
+        };
+        self.frames.push((input, at));
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// The arrival lap of each frame, in feed order.
+    pub fn arrivals(&self) -> Vec<usize> {
+        self.frames.iter().map(|&(_, a)| a).collect()
+    }
+
+    /// Borrow the frames in feed order (the inputs of the batch).
+    pub fn inputs(&self) -> Vec<Tensor3> {
+        self.frames.iter().map(|(t, _)| t.clone()).collect()
+    }
+}
+
+/// Persistent open-pipeline accounting for the serving path (see
+/// [`InferenceSession::open_pipeline`]): the schedule grows across
+/// `run_batch` calls, so only the first admission pays fill and the drain
+/// is deferred until [`InferenceSession::close_pipeline`].
+struct OpenPipeline {
+    sched: StreamSchedule,
+    /// Laps already booked into the session counters / returned metrics.
+    booked_laps: usize,
+}
+
 /// A warm, weight-resident inference session over the simulated
 /// accelerator. See the [module docs](self) for the lifecycle.
 pub struct InferenceSession {
@@ -710,6 +778,10 @@ pub struct InferenceSession {
     /// A program-driven streamed batch left its multi-frame program in
     /// IRAM; the next serial `run()` must re-load the serial program.
     stream_program_resident: bool,
+    /// `Some` once [`Self::open_pipeline`] armed continuous-admission
+    /// accounting: `run_batch` chunks admit into this one growing schedule
+    /// instead of booking closed fill+drain per flush.
+    open_stream: Option<OpenPipeline>,
 }
 
 impl InferenceSession {
@@ -788,6 +860,26 @@ impl InferenceSession {
             Program::MultiPass(p) => p.reload_words(),
             _ => 0,
         }
+    }
+
+    /// Per-MVU digest of the current activation-RAM contents (FNV-1a over
+    /// every word, address order). Execution strategies that promise
+    /// bit-identical *machine state* — serial vs streamed vs continuous
+    /// admission, either backend — must leave identical digests; the
+    /// admission property test pins exactly that without exposing the RAMs.
+    pub fn activation_ram_digest(&self) -> Vec<u64> {
+        self.sys
+            .mvus
+            .iter()
+            .map(|m| {
+                let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                for addr in 0..m.act.depth() as u32 {
+                    h ^= m.act.read(addr);
+                    h = h.wrapping_mul(0x1000_0000_01b3);
+                }
+                h
+            })
+            .collect()
     }
 
     /// Cumulative counters across all completed runs.
@@ -979,6 +1071,40 @@ impl InferenceSession {
     /// typed [`CompileError::StreamOverlap`] / `CapacityExceeded` before
     /// touching the array.
     pub fn run_stream(&mut self, inputs: &[Tensor3]) -> Result<StreamOutput, SessionError> {
+        self.run_stream_with(inputs, None)
+    }
+
+    /// Continuous admission: stream an online [`StreamFeed`] whose frames
+    /// join the *running* pipeline at the fill boundary instead of waiting
+    /// for a batch to close. Outputs and per-frame cycle books are
+    /// **bit-identical** to serial [`Self::run`] and to closed
+    /// [`Self::run_batch`] of the same frames under both backends and both
+    /// stream drivers — admission timing shapes only the lap schedule (and
+    /// so the fill/steady/drain accounting, which charges feed gaps longer
+    /// than the pipeline depth as bottleneck-rate bubbles). Under the
+    /// program driver the host admits by bumping `HOST_IN` between
+    /// `poll_step`s — one frame per service pass, a posting schedule
+    /// statically validated against the two-frame buffer contract
+    /// ([`crate::analysis::verify_host_posting`]) before the CPU runs.
+    /// Multi-pass sessions admit online into pass 0; later passes stream
+    /// the carried outputs as a dense batch (all frames are on hand).
+    pub fn run_continuous(&mut self, feed: &StreamFeed) -> Result<StreamOutput, SessionError> {
+        if feed.is_empty() {
+            return Ok(StreamOutput { outputs: Vec::new(), stream: StreamMetrics::default() });
+        }
+        let inputs = feed.inputs();
+        let arrivals = feed.arrivals();
+        self.run_stream_with(&inputs, Some(&arrivals))
+    }
+
+    /// Shared streaming core: `arrivals` of `None` is the closed batch
+    /// (every frame admitted at lap 0); `Some` is continuous admission at
+    /// the given arrival laps.
+    fn run_stream_with(
+        &mut self,
+        inputs: &[Tensor3],
+        arrivals: Option<&[usize]>,
+    ) -> Result<StreamOutput, SessionError> {
         if inputs.is_empty() {
             return Ok(StreamOutput { outputs: Vec::new(), stream: StreamMetrics::default() });
         }
@@ -1001,7 +1127,7 @@ impl InferenceSession {
                 self.sys.set_max_cycles(fuel.saturating_mul(inputs.len() as u64));
                 let co = self.model.layers.last().unwrap().co;
                 let (mut raw, stream) =
-                    stream_compiled(&mut self.sys, c, inputs, co, fuel, program_driven)?;
+                    stream_compiled(&mut self.sys, c, inputs, co, fuel, program_driven, arrivals)?;
                 // Serial pipelined runs report one entry per MVU (trailing
                 // zeros for unused stages); match that shape bit-for-bit.
                 for (_, cycles) in &mut raw {
@@ -1011,7 +1137,15 @@ impl InferenceSession {
             }
             Program::MultiPass(p) => {
                 p.check_fits_streamed(&self.mvu_cfg)?;
-                stream_multi_pass(&mut self.sys, p, &self.model, inputs, fuel, program_driven)?
+                stream_multi_pass(
+                    &mut self.sys,
+                    p,
+                    &self.model,
+                    inputs,
+                    fuel,
+                    program_driven,
+                    arrivals,
+                )?
             }
             Program::Distributed(_) => unreachable!("serial fallback handled above"),
         };
@@ -1042,11 +1176,79 @@ impl InferenceSession {
         Ok(StreamOutput { outputs, stream })
     }
 
-    /// Serving-facing alias of [`Self::run_stream`]: the coordinator's
-    /// key-homogeneous batches execute through this path (see
-    /// `perf::serve_bench::SessionEngine`).
+    /// Serving-facing entry: the coordinator's key-homogeneous batches
+    /// execute through this path (see `perf::serve_bench::SessionEngine`).
+    /// Without [`Self::open_pipeline`] it is [`Self::run_stream`]; with it,
+    /// each flush *admits into one open pipeline* — execution (and thus
+    /// every output bit) is unchanged, but the accounting books this flush
+    /// as dense admissions continuing the running schedule: fill is paid
+    /// once at the first flush, flush boundaries become admission points
+    /// booking steady laps, and the drain tail is deferred to
+    /// [`Self::close_pipeline`].
     pub fn run_batch(&mut self, inputs: &[Tensor3]) -> Result<StreamOutput, SessionError> {
-        self.run_stream(inputs)
+        if self.open_stream.is_none() || inputs.is_empty() {
+            return self.run_stream(inputs);
+        }
+        let mut out = self.run_stream(inputs)?;
+        let open = self.open_stream.as_mut().unwrap();
+        for _ in 0..inputs.len() {
+            open.sched.admit(0); // dense continuation: next fill boundary
+        }
+        let end = open.sched.entry_lap(open.sched.frames() - 1) + 1;
+        let cyc = open.sched.cycles_between(open.booked_laps..end);
+        open.booked_laps = end;
+        // Swap the flush's closed fill+steady+drain for the open window.
+        self.total_pipeline_cycles =
+            self.total_pipeline_cycles - out.stream.pipeline_cycles + cyc.total();
+        out.stream.fill_cycles = cyc.fill;
+        out.stream.steady_cycles = cyc.steady;
+        out.stream.drain_cycles = cyc.drain;
+        out.stream.pipeline_cycles = cyc.total();
+        Ok(out)
+    }
+
+    /// Arm continuous-admission accounting for the serving path: `true`
+    /// once subsequent [`Self::run_batch`] flushes feed one open pipeline.
+    /// Only pipelined programs have a single persistent pipeline to hold
+    /// open; distributed and multi-pass sessions return `false` and keep
+    /// closed-batch accounting.
+    pub fn open_pipeline(&mut self) -> bool {
+        match &self.program {
+            Program::Pipelined(c) => {
+                self.open_stream =
+                    Some(OpenPipeline { sched: StreamSchedule::open(c.stage_cycles()), booked_laps: 0 });
+                true
+            }
+            _ => {
+                self.open_stream = None;
+                false
+            }
+        }
+    }
+
+    /// Drain the open pipeline: book the deferred tail laps and return
+    /// their accounting (zero frames — the frames were already reported by
+    /// their admitting flushes). The pipeline re-opens empty, so the next
+    /// flush starts a fresh stream (and pays fill again).
+    pub fn close_pipeline(&mut self) -> StreamMetrics {
+        let Some(open) = self.open_stream.as_mut() else {
+            return StreamMetrics::default();
+        };
+        let cyc = open.sched.cycles_between(open.booked_laps..usize::MAX);
+        let stream = StreamMetrics {
+            frames: 0,
+            stages: open.sched.stages(),
+            fill_cycles: cyc.fill,
+            steady_cycles: cyc.steady,
+            drain_cycles: cyc.drain,
+            pipeline_cycles: cyc.total(),
+            bottleneck_cycles: open.sched.bottleneck_cycles(),
+            serial_cycles: 0,
+            measured_cycles: 0,
+        };
+        self.total_pipeline_cycles += cyc.total();
+        self.open_pipeline();
+        stream
     }
 
     /// Distributed-mode fallback: no pipeline to stream (a single frame
@@ -1206,18 +1408,37 @@ fn drive_distributed_turbo(
     Ok(())
 }
 
+/// Build the lap schedule of one pipelined pass: closed when `arrivals`
+/// is `None`, continuous admission at the given arrival laps otherwise.
+fn schedule_for(c: &CompiledModel, frames: usize, arrivals: Option<&[usize]>) -> StreamSchedule {
+    match arrivals {
+        None => StreamSchedule::new(c.stage_cycles(), frames),
+        Some(laps) => {
+            debug_assert_eq!(laps.len(), frames);
+            let mut sched = StreamSchedule::open(c.stage_cycles());
+            for &a in laps {
+                sched.admit(a);
+            }
+            sched
+        }
+    }
+}
+
 /// Stream one pipelined pass over `inputs` with one frame per stage in
 /// flight. The caller has reset run state, made weights resident and armed
 /// `sys.max_cycles()` with the batch's remaining fuel.
 ///
-/// Per lap `t` of the [`StreamSchedule`]: the entering frame (if any) is
-/// DMA'd into MVU 0's buffer `t % 2`, every active stage `k` replays its
-/// job stream for frame `t − k` out of that frame's buffer parity via
+/// Per lap `t` of the [`StreamSchedule`]: the entering frame (if any — its
+/// entry lap is `t`) is DMA'd into MVU 0's buffer of the frame's parity,
+/// every active stage `k` replays its job stream for the frame that
+/// entered at lap `t − k` out of that frame's buffer parity via
 /// [`System::run_lap`] (concurrent under both backends), and the retiring
 /// frame — the one that just left the last stage — is read back from its
-/// output buffer before that buffer's next reuse two laps later. Returns
-/// per-frame `(output, per-stage cycles)` in frame order plus the batch
-/// accounting.
+/// output buffer before that buffer's next reuse two frames later. Open
+/// schedules interleave idle bubble laps (no work, no cost executed) when
+/// the feed gaps; entries strictly increase, so buffer reuse keeps the
+/// same two-frame distance as the closed batch. Returns per-frame
+/// `(output, per-stage cycles)` in frame order plus the batch accounting.
 fn stream_compiled(
     sys: &mut System,
     c: &CompiledModel,
@@ -1225,20 +1446,23 @@ fn stream_compiled(
     out_co: usize,
     fuel_report: u64,
     program_driven: bool,
+    arrivals: Option<&[usize]>,
 ) -> Result<(FrameResults, StreamMetrics), SessionError> {
     if program_driven {
-        return stream_program_exec(sys, c, inputs, out_co, fuel_report);
+        return stream_program_exec(sys, c, inputs, out_co, fuel_report, arrivals);
     }
     let stages = c.plans.len();
     let frames = inputs.len();
-    let sched = StreamSchedule::new(c.stage_cycles(), frames);
+    let sched = schedule_for(c, frames, arrivals);
     let cap = sys.max_cycles();
     let mut per_frame: Vec<Vec<u64>> = vec![vec![0; stages]; frames];
     let mut raw: FrameResults = Vec::with_capacity(frames);
+    let mut next_in = 0usize;
     let mut measured = 0u64;
     for lap in 0..sched.laps() {
-        if lap < frames {
-            c.load_input_parity(sys, &inputs[lap], lap % 2);
+        while next_in < frames && sched.entry_lap(next_in) == lap {
+            c.load_input_parity(sys, &inputs[next_in], next_in % 2);
+            next_in += 1;
         }
         let active = sched.active(lap);
         let turbo = sys.exec_mode() == ExecMode::Turbo;
@@ -1268,8 +1492,8 @@ fn stream_compiled(
             debug_assert_eq!(booked, c.plans[k].analytic_cycles, "stage {k} frame {f}");
             per_frame[f][k] = booked;
         }
-        if lap + 1 >= stages {
-            let f = lap + 1 - stages;
+        while raw.len() < frames && sched.entry_lap(raw.len()) + stages == lap + 1 {
+            let f = raw.len();
             let out = c.read_output_parity(sys, out_co, f % 2);
             raw.push((out, std::mem::take(&mut per_frame[f])));
         }
@@ -1305,16 +1529,35 @@ fn stream_compiled(
 /// demoted to a cross-check: the executed wall can never beat the
 /// bottleneck bound. `measured_cycles` is the one path-dependent field —
 /// the program-driven wall includes the CPU's launch overhead.
+///
+/// Continuous admission (`arrivals` present) needs **no new program
+/// shape**: hart 0 already gates each frame's entry on `HOST_IN`, so the
+/// host simply bumps the flag between `poll_step`s — monotone incremental
+/// posting, one frame per service pass, never more than the two parity
+/// buffers hold. The posting schedule is validated statically
+/// ([`crate::analysis::verify_host_posting`]) before the CPU runs a
+/// cycle; outputs are invariant to posting timing (the flag protocol
+/// self-paces), so the arrival laps shape only the [`StreamSchedule`]
+/// accounting.
 fn stream_program_exec(
     sys: &mut System,
     c: &CompiledModel,
     inputs: &[Tensor3],
     out_co: usize,
     fuel_report: u64,
+    arrivals: Option<&[usize]>,
 ) -> Result<(FrameResults, StreamMetrics), SessionError> {
     use crate::codegen::{frame_flag_addr, HOST_IN_FLAG, HOST_OUT_FLAG};
     let stages = c.plans.len();
     let frames = inputs.len();
+    // The admission schedule the service loop follows: both parity
+    // buffers staged up front, then one bump per observed retirement.
+    // Proven against the two-frame buffer contract before any cycle.
+    let posting: Vec<i32> = (frames.min(2) as i32..=frames as i32).collect();
+    let report = crate::analysis::verify_host_posting(frames, &posting, VerifyLevel::Quick);
+    if !report.is_clean() {
+        return Err(SessionError::Verify(report.diagnostics));
+    }
     let sp = c.stream_program(frames).map_err(SessionError::Compile)?;
     sys.load_program(&sp.program);
     let cycles0 = sys.cycles();
@@ -1395,7 +1638,7 @@ fn stream_program_exec(
         );
     }
     let measured = sys.cycles() - cycles0;
-    let sched = StreamSchedule::new(c.stage_cycles(), frames);
+    let sched = schedule_for(c, frames, arrivals);
     // Lap-model cross-check: one frame per bottleneck lap is the floor
     // (only under the stepper — turbo completes jobs in zero wall cycles).
     if sys.exec_mode() == ExecMode::CycleAccurate {
@@ -1426,7 +1669,9 @@ fn stream_program_exec(
 /// then stream every frame through the pass's ≤8 stages, carrying each
 /// frame's output tensor to the next pass. Accounting sums the per-pass
 /// fill/steady/drain model; per-frame layer cycles concatenate across
-/// passes in model order.
+/// passes in model order. Continuous admission applies to pass 0 only —
+/// by the time a later pass starts, every carried frame is on hand, so
+/// the remaining passes stream dense closed batches.
 fn stream_multi_pass(
     sys: &mut System,
     plan: &MultiPassPlan,
@@ -1434,6 +1679,7 @@ fn stream_multi_pass(
     inputs: &[Tensor3],
     fuel_report: u64,
     program_driven: bool,
+    arrivals: Option<&[usize]>,
 ) -> Result<(FrameResults, StreamMetrics), SessionError> {
     let frames = inputs.len();
     let cap = fuel_report.saturating_mul(frames as u64);
@@ -1450,7 +1696,9 @@ fn stream_multi_pass(
         pass.load_weights(sys);
         let (_, end) = plan.ranges[p];
         let co = model.layers[end - 1].co;
-        let (outs, s) = stream_compiled(sys, pass, &carried, co, fuel_report, program_driven)?;
+        let pass_arrivals = if p == 0 { arrivals } else { None };
+        let (outs, s) =
+            stream_compiled(sys, pass, &carried, co, fuel_report, program_driven, pass_arrivals)?;
         spent += sys.cycles();
         agg.stages = agg.stages.max(s.stages);
         agg.fill_cycles += s.fill_cycles;

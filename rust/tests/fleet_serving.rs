@@ -492,3 +492,52 @@ fn bench_serve_single_tenant_pipelined_mix_doubles_throughput() {
         report.pipeline_occupancy
     );
 }
+
+/// The PR-10 acceptance criterion on the real zoo: continuous admission
+/// (`--continuous`: engines serve one open pipeline per (worker, key),
+/// flush boundaries become admission points) on the balanced `pipe8`
+/// model approaches full occupancy and strictly beats the closed-batch
+/// baseline at the same seed and mix — fill is paid once per stream,
+/// the drain books only at close, and the steady share dominates.
+/// Release-only; CI additionally gates the binary's reports via jq in
+/// the serve-bench job.
+#[test]
+#[cfg(not(debug_assertions))]
+fn bench_serve_continuous_admission_approaches_full_occupancy() {
+    use barvinn::perf::serve_bench::{parse_mix, run_bench, BenchConfig};
+    let base = BenchConfig {
+        seed: 42,
+        images: 16,
+        workers: 1,
+        cache_per_worker: 2,
+        mix: parse_mix("pipe8:2:2=0.6,pipe8:4:4=0.4").unwrap(),
+        batch: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(500) },
+        ..Default::default()
+    };
+    let closed = run_bench(&base).expect("closed baseline runs");
+    let cont =
+        run_bench(&BenchConfig { continuous: true, ..base.clone() }).expect("continuous runs");
+    for r in [&closed, &cont] {
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.streamed_frames, 16, "every frame executes via the streamed path");
+    }
+    assert!(!closed.continuous && cont.continuous, "reports echo the admission mode");
+    assert!(
+        cont.pipeline_occupancy >= 0.9,
+        "open-pipeline occupancy {:.3} must approach 1.0 on a balanced model",
+        cont.pipeline_occupancy
+    );
+    assert!(
+        cont.pipeline_occupancy > closed.pipeline_occupancy,
+        "continuous occupancy {:.3} must beat the closed baseline's {:.3}",
+        cont.pipeline_occupancy,
+        closed.pipeline_occupancy
+    );
+    assert!(cont.p99_ms.is_finite(), "bounded tail under sustained admission");
+    assert!(
+        cont.steady_occupancy > closed.steady_occupancy,
+        "fill paid once per stream: steady share {:.3} must beat per-flush {:.3}",
+        cont.steady_occupancy,
+        closed.steady_occupancy
+    );
+}

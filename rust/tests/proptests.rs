@@ -5,6 +5,17 @@
 //! simulation → golden integer reference.
 
 use barvinn::accel::{System, SystemConfig};
+
+/// Case-count override for the nightly profiling job: when
+/// `BARVINN_PROPTEST_CASES` is set (and parses), it replaces the built-in
+/// per-profile default so the same properties sweep a much larger random
+/// space than PR CI affords.
+fn proptest_cases(default: u64) -> u64 {
+    std::env::var("BARVINN_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 use barvinn::codegen::layout::{load_scaler_bias, ActLayout, WeightLayout};
 use barvinn::codegen::{conv_jobs, layer_cycles, EdgePolicy};
 use barvinn::model::zoo::Rng;
@@ -852,8 +863,9 @@ fn streamed_program_and_host_lap_replay_are_bit_identical() {
     use barvinn::session::{SessionBuilder, StreamDriver};
 
     let mut rng = Rng(0x9B0C);
-    let (cases, h, frames) =
+    let (default_cases, h, frames) =
         if cfg!(debug_assertions) { (2u64, 4usize, 3usize) } else { (6, 6, 4) };
+    let cases = proptest_cases(default_cases);
     for case in 0..cases {
         let depth = 2 + (rng.next_u64() % 7) as usize; // 2..=8: one pipelined pass
         let model = random_chain_model(&mut rng, 4000 + case, depth, h);
@@ -905,6 +917,195 @@ fn streamed_program_and_host_lap_replay_are_bit_identical() {
             s.measured_cycles >= s.bottleneck_cycles * frames as u64,
             "case {case}: program-driven wall beat one frame per bottleneck lap"
         );
+    }
+}
+
+/// The continuous-admission acceptance property: frames joining a
+/// *running* pipeline at random arrival laps (`run_continuous` over a
+/// [`StreamFeed`], and the serving-path `open_pipeline`/`run_batch`
+/// chunked admission) are **bit-identical** to fresh serial `run` and to
+/// closed `run_batch` — per-frame outputs, per-layer cycle books and
+/// (continuous vs closed) the final activation-RAM state — across random
+/// 2–8-deep chains of random 1–8-bit per-layer precisions, random arrival
+/// interleavings, both execution backends and both stream drivers.
+/// Admission timing moves only the lap accounting, which must match the
+/// open [`StreamSchedule`] for the trace exactly, and its occupancy must
+/// dominate deferring the same frames to a closed batch at the last
+/// arrival.
+#[test]
+fn continuous_admission_is_bit_identical_to_closed_batches() {
+    use barvinn::exec::{ExecMode, StreamSchedule};
+    use barvinn::session::{SessionBuilder, StreamDriver, StreamFeed};
+
+    let mut rng = Rng(0xAD317);
+    let (default_cases, h, frames) =
+        if cfg!(debug_assertions) { (2u64, 4usize, 4usize) } else { (6, 6, 6) };
+    let cases = proptest_cases(default_cases);
+    for case in 0..cases {
+        let depth = 2 + (rng.next_u64() % 7) as usize; // 2..=8: one pipelined pass
+        let model = random_chain_model(&mut rng, 5000 + case, depth, h);
+        let l0 = &model.layers[0];
+        let inputs: Vec<Tensor3> = (0..frames)
+            .map(|_| {
+                Tensor3::from_fn(l0.ci, l0.in_h, l0.in_w, |_, _, _| {
+                    rng.range_i32(0, l0.aprec.max_value())
+                })
+            })
+            .collect();
+        // Random arrival interleaving: a monotone lap trace with 0..=3
+        // idle laps between consecutive frames (gaps beyond the pipeline
+        // depth become modelled bubbles).
+        let mut arrivals = Vec::with_capacity(frames);
+        let mut lap = 0usize;
+        for _ in 0..frames {
+            lap += (rng.next_u64() % 4) as usize;
+            arrivals.push(lap);
+        }
+        let stage_cycles: Vec<u64> =
+            model.layers.iter().map(|l| layer_cycles(l, EdgePolicy::PadInRam)).collect();
+        // The open schedule this trace induces, and the deferred
+        // alternative (wait for every frame, then run a closed batch).
+        let mut open = StreamSchedule::open(stage_cycles.clone());
+        for &a in &arrivals {
+            open.admit(a);
+        }
+        let open_cycles = open.cycles();
+        let mut deferred = StreamSchedule::open(stage_cycles.clone());
+        for _ in 0..frames {
+            deferred.admit(*arrivals.last().unwrap());
+        }
+        let closed_total = StreamSchedule::new(stage_cycles.clone(), frames).cycles().total();
+
+        // Program runs only on the cycle-accurate backend; host-lap replay
+        // runs on both.
+        let combos = [
+            (ExecMode::Turbo, StreamDriver::HostLaps),
+            (ExecMode::CycleAccurate, StreamDriver::HostLaps),
+            (ExecMode::CycleAccurate, StreamDriver::Program),
+        ];
+        for (exec, driver) in combos {
+            let build = || {
+                SessionBuilder::new(model.clone())
+                    .edge_policy(EdgePolicy::PadInRam)
+                    .exec_mode(exec)
+                    .stream_driver(driver)
+                    .build()
+                    .unwrap_or_else(|e| panic!("case {case} ({exec:?}/{driver:?}): {e}"))
+            };
+            let tag = format!("case {case} depth {depth} ({exec:?}/{driver:?})");
+
+            // Reference 1: fresh serial replay, one frame at a time.
+            let mut serial = build();
+            let want: Vec<_> = inputs
+                .iter()
+                .map(|i| serial.run(i).unwrap_or_else(|e| panic!("{tag}: serial: {e}")))
+                .collect();
+
+            // Reference 2: the closed batch (all frames waiting at lap 0).
+            let mut closed = build();
+            let closed_out =
+                closed.run_batch(&inputs).unwrap_or_else(|e| panic!("{tag}: closed: {e}"));
+            let closed_digest = closed.activation_ram_digest();
+            assert_eq!(closed_out.stream.pipeline_cycles, closed_total, "{tag}: closed wall");
+
+            // Continuous admission of the same frames at their arrivals.
+            let mut feed = StreamFeed::new();
+            for (input, &a) in inputs.iter().zip(&arrivals) {
+                feed.push_at(input.clone(), a);
+            }
+            let mut cont = build();
+            let cont_out =
+                cont.run_continuous(&feed).unwrap_or_else(|e| panic!("{tag}: continuous: {e}"));
+            assert_eq!(cont_out.outputs.len(), frames, "{tag}");
+
+            for f in 0..frames {
+                let golden = model.golden_forward(&inputs[f]);
+                assert_eq!(cont_out.outputs[f].output, want[f].output, "{tag} frame {f}");
+                assert_eq!(
+                    cont_out.outputs[f].mvu_cycles, want[f].mvu_cycles,
+                    "{tag} frame {f}: per-layer cycle books"
+                );
+                assert_eq!(closed_out.outputs[f].output, want[f].output, "{tag} frame {f}");
+                assert_eq!(
+                    closed_out.outputs[f].mvu_cycles, want[f].mvu_cycles,
+                    "{tag} frame {f}: closed cycle books"
+                );
+                assert_eq!(cont_out.outputs[f].output, golden, "{tag} frame {f}: != golden");
+            }
+            // Admission timing must not leak into the machine: the RAMs end
+            // bit-identical to the closed batch of the same frames.
+            assert_eq!(
+                cont.activation_ram_digest(),
+                closed_digest,
+                "{tag}: continuous left different activation-RAM state than closed"
+            );
+
+            // The lap accounting is exactly the open schedule of the trace.
+            let s = &cont_out.stream;
+            assert_eq!(s.fill_cycles, open_cycles.fill, "{tag}: fill");
+            assert_eq!(s.steady_cycles, open_cycles.steady, "{tag}: steady");
+            assert_eq!(s.drain_cycles, open_cycles.drain, "{tag}: drain");
+            assert_eq!(s.pipeline_cycles, open_cycles.total(), "{tag}: wall");
+            assert_eq!(
+                s.serial_cycles,
+                stage_cycles.iter().sum::<u64>() * frames as u64,
+                "{tag}: serial book"
+            );
+            // Occupancy dominance: admitting at arrival never loses to
+            // deferring the whole trace into one closed batch.
+            assert!(
+                s.pipeline_cycles <= deferred.cycles().total(),
+                "{tag}: open wall {} must not exceed deferred-closed wall {}",
+                s.pipeline_cycles,
+                deferred.cycles().total()
+            );
+            assert!(
+                s.occupancy() + 1e-12
+                    >= s.serial_cycles as f64
+                        / (deferred.cycles().total() * depth as u64) as f64,
+                "{tag}: occupancy must dominate the deferred closed batch"
+            );
+
+            // Serving-path chunked admission: random flushes into one open
+            // pipeline partition the dense schedule — outputs identical,
+            // fill paid once, drain deferred to close.
+            let mut chunked = build();
+            assert!(chunked.open_pipeline(), "{tag}: pipelined sessions must open");
+            let mut got = Vec::new();
+            let mut booked = 0u64;
+            let mut per_chunk_closed = 0u64;
+            let mut i = 0usize;
+            while i < frames {
+                let n = (1 + (rng.next_u64() % 3) as usize).min(frames - i);
+                let out = chunked
+                    .run_batch(&inputs[i..i + n])
+                    .unwrap_or_else(|e| panic!("{tag}: chunk at {i}: {e}"));
+                booked += out.stream.pipeline_cycles;
+                per_chunk_closed += StreamSchedule::new(stage_cycles.clone(), n).cycles().total();
+                got.extend(out.outputs);
+                i += n;
+            }
+            let tail = chunked.close_pipeline();
+            assert_eq!(tail.frames, 0, "{tag}: the tail reports no frames");
+            booked += tail.pipeline_cycles;
+            assert_eq!(
+                booked, closed_total,
+                "{tag}: chunk windows + drain tail must partition the dense schedule"
+            );
+            assert!(
+                booked <= per_chunk_closed,
+                "{tag}: open admission ({booked}) must never book more than \
+                 per-flush closed batches ({per_chunk_closed})"
+            );
+            assert_eq!(got.len(), frames, "{tag}");
+            for (f, out) in got.iter().enumerate() {
+                assert_eq!(out.output, want[f].output, "{tag} chunked frame {f}");
+                assert_eq!(
+                    out.mvu_cycles, want[f].mvu_cycles,
+                    "{tag} chunked frame {f}: cycle books"
+                );
+            }
+        }
     }
 }
 

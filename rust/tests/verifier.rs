@@ -303,3 +303,68 @@ fn streamed_program_faults_are_typed() {
     let r = verify_stream_program(&c, &flat_parity, frames, VerifyLevel::Quick);
     assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
 }
+
+/// Fault injection on *continuous admission*: a frame admitted into the
+/// wrong parity buffer, a `HOST_IN` bump posted out of order, and
+/// over-admission past the two-frame double buffer are each rejected
+/// statically — no `System` is ever constructed, so not one cycle is
+/// simulated — with the stable code naming the broken invariant.
+#[test]
+fn continuous_admission_faults_are_typed() {
+    use barvinn::analysis::{verify_host_posting, verify_stream_program};
+    use barvinn::pito::assemble;
+
+    let m = tiny_model();
+    let c = compile_pipelined(&m, POLICY).unwrap();
+    let frames = 3;
+    let sp = c.stream_program(frames).unwrap();
+
+    // (a) Frame admitted with mismatched parity: pin hart 0's parity
+    // dispatch to the *odd* twin, so the very first admitted frame lands
+    // in buffers whose plan says frame 0 is even. Liveness is untouched;
+    // the launch walk still catches the buffer swap.
+    let pos = sp.asm.find("andi  t1, s9, 1").expect("parity dispatch marker");
+    let mut patched = sp.asm.clone();
+    patched.replace_range(pos..pos + "andi  t1, s9, 1".len(), "li    t1, 1");
+    let odd_first = assemble(&patched).expect("mutated program still assembles");
+    let r = verify_stream_program(&c, &odd_first, frames, VerifyLevel::Quick);
+    assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
+    assert_eq!(DiagCode::StreamParity.as_str(), "STREAM-PARITY", "code is stable");
+
+    // The canonical schedule — start the double buffer full, then one
+    // admission per retirement — is clean for any feed length.
+    for frames in [1usize, 2, 3, 8] {
+        let posting: Vec<i32> = (frames.min(2) as i32..=frames as i32).collect();
+        let r = verify_host_posting(frames, &posting, VerifyLevel::Full);
+        assert!(r.is_clean(), "canonical posting for {frames} frames: {:?}", r.diagnostics);
+    }
+
+    // (b) HOST_IN bump posted out of order: the repost of 1 after 2 would
+    // un-admit a frame hart 0 may already be fetching.
+    let r = verify_host_posting(3, &[2, 1, 3], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::SyncLiveness), "expected SYNC-LIVENESS, got {:?}", r.diagnostics);
+    assert_eq!(DiagCode::SyncLiveness.as_str(), "SYNC-LIVENESS", "code is stable");
+
+    // (c) Over-admission past the two-frame buffer: a first post claiming
+    // three staged frames, and a mid-stream jump of two, both stage a
+    // frame into a parity buffer whose occupant cannot have retired.
+    let r = verify_host_posting(4, &[3, 4], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
+    let r = verify_host_posting(4, &[2, 4], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
+
+    // Admitting past the end of the feed is the same class of fault.
+    let r = verify_host_posting(2, &[2, 3], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::StreamParity), "expected STREAM-PARITY, got {:?}", r.diagnostics);
+
+    // Under-admission starves hart 0's entry wait forever — a liveness
+    // hole, whether the posting plateaus early or never happens at all.
+    let r = verify_host_posting(4, &[2, 3], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::SyncLiveness), "expected SYNC-LIVENESS, got {:?}", r.diagnostics);
+    let r = verify_host_posting(4, &[], VerifyLevel::Quick);
+    assert!(r.has(DiagCode::SyncLiveness), "expected SYNC-LIVENESS, got {:?}", r.diagnostics);
+
+    // `Off` is a no-op gate here exactly as it is for the plan walks.
+    let off = verify_host_posting(3, &[2, 1, 3], VerifyLevel::Off);
+    assert!(off.is_clean() && off.diagnostics.is_empty());
+}

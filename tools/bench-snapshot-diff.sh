@@ -7,7 +7,10 @@
 # field (wall_s, p99_ms, cache_hits, sim_cycles, ...), keeping exactly the
 # fields a fixed seed pins (see bench/README.md). Arrays of objects that
 # carry a "key" field (per_key) are matched by key, not position: the
-# metrics snapshot does not guarantee per-key ordering.
+# metrics snapshot does not guarantee per-key ordering. Arrays of objects
+# that carry a "pr" field (bench_trajectory/v1 entries) are matched by pr
+# the same way — the fresh file may *append* entries (the current run's
+# measurement) but never rewrite or drop a committed one.
 #
 # Usage: sh tools/bench-snapshot-diff.sh <committed-snapshot.json> <fresh-report.json>
 set -eu
@@ -32,6 +35,10 @@ def subset($a; $b):
            elif ($a[0] | type) == "object" and ($a[0] | has("key")) then
              $a | all(. as $e
                | ($b | map(select(.key == $e.key))) as $m
+               | ($m | length) == 1 and subset($e; $m[0]))
+           elif ($a[0] | type) == "object" and ($a[0] | has("pr")) then
+             $a | all(. as $e
+               | ($b | map(select(.pr == $e.pr))) as $m
                | ($m | length) == 1 and subset($e; $m[0]))
            else
              ($a | length) == ($b | length)
